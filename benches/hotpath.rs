@@ -1,0 +1,73 @@
+//! Hot-path micro-benchmarks (the §Perf targets in DESIGN.md):
+//!   - netlist simulator cell-eval throughput,
+//!   - behavioral window throughput (coordinator inner loop),
+//!   - planner end-to-end latency,
+//!   - threaded pipeline images/s.
+use acf::cnn::data::Dataset;
+use acf::cnn::model::{Model, Weights};
+use acf::coordinator::Deployment;
+use acf::fabric::device::by_name;
+use acf::ips::{self, ConvKind, ConvParams};
+use acf::netlist::sim::Sim;
+use acf::planner::Policy;
+use acf::util::bench::{report, Bench};
+
+fn main() {
+    let b = Bench::default();
+    let p = ConvParams::paper_8bit();
+    let mut stats = Vec::new();
+
+    // 1. Netlist sim: cycles/s on Conv_1 (biggest netlist).
+    let ip = ips::generate(ConvKind::Conv1, &p).unwrap();
+    let n_cells = ip.netlist.n_cells();
+    {
+        let mut sim = Sim::new(&ip.netlist).unwrap();
+        sim.set_input("en", 1);
+        sim.set_input("rst", 0);
+        sim.set_input("coef", 0x55);
+        for e in 0..9 {
+            sim.set_input_field("win0", e * 8, 8, (e as u64 * 37) & 0xFF);
+        }
+        let s = b.run("netlist sim: Conv_1 settle+tick", || {
+            sim.settle();
+            sim.tick();
+        });
+        let evals_per_sec = s.throughput() * n_cells as f64;
+        println!("Conv_1 netlist: {n_cells} cells -> {:.2}M cell-evals/s", evals_per_sec / 1e6);
+        stats.push(s);
+    }
+
+    // 2. Behavioral window throughput.
+    {
+        let coefs: Vec<i64> = (0..9).map(|i| (i * 13 % 100) - 50).collect();
+        let win: Vec<i64> = (0..9).map(|i| (i * 29 % 200) - 100).collect();
+        let s = b.run("behavioral window_ref", || p.window_ref(&win, &coefs));
+        println!("behavioral: {:.1}M windows/s", s.throughput() / 1e6);
+        stats.push(s);
+    }
+
+    // 3. Planner latency.
+    {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let s = b.run("planner::plan (lenet-tiny/zcu104)", || {
+            acf::planner::plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap()
+        });
+        stats.push(s);
+    }
+
+    // 4. Threaded pipeline throughput.
+    {
+        let m = Model::lenet_tiny();
+        let w = Weights::random(&m, 1);
+        let dev = by_name("zcu104").unwrap();
+        let dep = Deployment::new(m, w, &dev, 200.0, &Policy::adaptive()).unwrap();
+        let ds = Dataset::generate(32, 2, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        let s = b.run("pipeline infer_batch(32)", || dep.infer_batch(&images).unwrap());
+        println!("pipeline: {:.0} img/s (batch 32)", 32.0 * s.throughput());
+        stats.push(s);
+    }
+
+    report("hot paths", &stats);
+}

@@ -1,0 +1,23 @@
+//! Bench target for the supporting series (DESIGN.md Sweep-A/Sweep-B):
+//! adaptation across devices and the precision sweep.
+use acf::fabric::device::by_name;
+use acf::util::bench::{report, Bench};
+
+fn main() {
+    println!("{}", "=".repeat(72));
+    println!("SWEEP-A — throughput (img/s) per device per policy (lenet-wide-4x)");
+    println!("{}", "=".repeat(72));
+    print!("{}", acf::report::sweep_adaptation(200.0).plain());
+
+    let dev = by_name("zcu104").unwrap();
+    println!();
+    println!("{}", "=".repeat(72));
+    println!("SWEEP-B — operand width vs IP (the Conv_3 8-bit ceiling)");
+    println!("{}", "=".repeat(72));
+    print!("{}", acf::report::sweep_precision(&dev, 200.0).plain());
+
+    let b = Bench::quick();
+    let s1 = b.run("sweep_adaptation", || acf::report::sweep_adaptation(200.0));
+    let s2 = b.run("sweep_precision", || acf::report::sweep_precision(&dev, 200.0));
+    report("sweeps", &[s1, s2]);
+}

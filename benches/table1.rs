@@ -1,0 +1,19 @@
+//! Bench target for paper Table I: regenerates the characteristics table
+//! and times IP generation itself.
+use acf::ips::{self, ConvKind, ConvParams};
+use acf::util::bench::{report, Bench};
+
+fn main() {
+    println!("{}", "=".repeat(72));
+    println!("TABLE I — CHARACTERISTICS OF DEVELOPED CONVOLUTION IPS (regenerated)");
+    println!("{}", "=".repeat(72));
+    print!("{}", acf::report::table1().plain());
+
+    let b = Bench::default();
+    let p = ConvParams::paper_8bit();
+    let stats: Vec<_> = ConvKind::ALL
+        .iter()
+        .map(|&k| b.run(&format!("generate {}", k.name()), || ips::generate(k, &p).unwrap()))
+        .collect();
+    report("IP netlist generation", &stats);
+}

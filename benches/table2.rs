@@ -1,0 +1,30 @@
+//! Bench target for paper Table II: regenerates the resource/WNS/power
+//! table on the simulated ZCU104 and times the synthesis + STA + power
+//! flow per IP.
+use acf::fabric::device::by_name;
+use acf::ips::{self, ConvKind, ConvParams};
+use acf::util::bench::{report, Bench};
+
+fn main() {
+    let dev = by_name("zcu104").unwrap();
+    println!("{}", "=".repeat(72));
+    println!("TABLE II — RESOURCE UTILIZATION OF CONVOLUTION IPS");
+    println!("(measured via synthesis/STA/power models on simulated {} @ 200 MHz,", dev.name);
+    println!(" 8-bit fixed point, 3x3 kernel | right half: paper-published values)");
+    println!("{}", "=".repeat(72));
+    print!("{}", acf::report::table2(&dev, 200.0).plain());
+
+    let b = Bench::default();
+    let p = ConvParams::paper_8bit();
+    let mut stats = Vec::new();
+    for kind in ConvKind::ALL {
+        let ip = ips::generate(kind, &p).unwrap();
+        stats.push(b.run(&format!("synth+sta+power {}", kind.name()), || {
+            let u = acf::synth::synthesize(&ip.netlist);
+            let t = acf::sta::analyze(&ip.netlist, 200.0, dev.speed_derate).unwrap();
+            let pw = acf::power::estimate(&u, &dev, 200.0, None);
+            (u.luts, t.wns_ns, pw.total_w())
+        }));
+    }
+    report("reporting flow", &stats);
+}

@@ -1,0 +1,30 @@
+//! Bench target for paper Table III: regenerates the comparison table
+//! (ratings derived from the policy sweep) and times a full policy
+//! assessment.
+use acf::util::bench::{report, Bench};
+
+fn main() {
+    println!("{}", "=".repeat(72));
+    println!("TABLE III — COMPARISON OF OPTIMIZATION TECHNIQUES FOR CNNs ON FPGAS");
+    println!("(columns: this work + the three related-work postures, evaluated");
+    println!(" quantitatively on identical planner infrastructure — see DESIGN.md)");
+    println!("{}", "=".repeat(72));
+    print!("{}", acf::report::table3(200.0).plain());
+
+    println!("\nunderlying quantitative assessment:");
+    for a in acf::report::assess_policies(200.0) {
+        println!(
+            "  {:15} infeasible {}/{} devices | 12-bit: {} | scalability {:.2} | flexibility {:.2}",
+            a.policy,
+            a.failed_devices,
+            a.total_devices,
+            if a.multi_precision { "yes" } else { "no" },
+            a.scalability,
+            a.flexibility
+        );
+    }
+
+    let b = Bench::quick();
+    let s = b.run("assess_policies (full sweep)", || acf::report::assess_policies(200.0));
+    report("policy sweep", &[s]);
+}

@@ -1,0 +1,40 @@
+//! Sweep-B (DESIGN.md): explore the IP design space — operand widths,
+//! kernel sizes, and the Conv_3 packing ceiling, with timing and
+//! resources from the full synthesis/STA flow. Also prints Table I.
+//!
+//! Run: `cargo run --release --example ip_explorer`
+
+use acf::fabric::device::by_name;
+use acf::fixed::pack;
+use acf::ips::{self, ConvKind, ConvParams};
+
+fn main() {
+    println!("TABLE I — characteristics\n{}", acf::report::table1().markdown());
+
+    let dev = by_name("zcu104").unwrap();
+    println!("\nSWEEP-B — operand width vs IP\n{}", acf::report::sweep_precision(&dev, 200.0).markdown());
+
+    println!("\npacking ceilings (max symmetric operand width per kernel size):");
+    for k in [1u32, 2, 3, 5, 7] {
+        let w = pack::max_symmetric_bits(k);
+        println!("  {k}x{k}: {w} bits{}", if k == 3 && w == 8 { "   <- the paper's Conv_3 limit" } else { "" });
+    }
+
+    println!("\nkernel-size scaling at 8 bits (Conv_1 vs Conv_2):");
+    for k in [1u32, 2, 3, 5] {
+        let p = ConvParams { k, ..ConvParams::paper_8bit() };
+        for kind in [ConvKind::Conv1, ConvKind::Conv2] {
+            if let Ok(ip) = ips::generate(kind, &p) {
+                let u = acf::synth::synthesize(&ip.netlist);
+                println!(
+                    "  k={k} {:7} LUT {:4} Reg {:4} DSP {}  II={}",
+                    kind.name(),
+                    u.luts,
+                    u.regs,
+                    u.dsps,
+                    ip.ii
+                );
+            }
+        }
+    }
+}

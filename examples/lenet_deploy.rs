@@ -1,0 +1,88 @@
+//! END-TO-END DRIVER (DESIGN.md experiment "E2E").
+//!
+//! Deploys the quantized LeNet-style CNN onto the simulated ZCU104 with
+//! the resource-driven planner, then:
+//!   1. spot-verifies each planned conv IP's *netlist* against the
+//!      behavioral model (bit-exact),
+//!   2. serves a batch of synthetic digit images through the threaded
+//!      coordinator pipeline,
+//!   3. cross-checks every logit vector against the AOT-compiled
+//!      JAX/Pallas model executed via XLA/PJRT (the golden reference),
+//!   4. reports modeled fabric throughput/latency, host throughput, and
+//!      the resource/timing/power summary.
+//!
+//! Requires `make artifacts`. Run:
+//!   `cargo run --release --example lenet_deploy`
+
+use acf::cnn::data::Dataset;
+use acf::cnn::infer::argmax;
+use acf::cnn::model::Model;
+use acf::coordinator::Deployment;
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::runtime::{cpu_client, find_artifacts, load_weights, GoldenCnn, AOT_WEIGHT_SEED};
+
+fn main() {
+    let n_images = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200usize);
+    let art = find_artifacts().expect("artifacts/ missing — run `make artifacts` first");
+    let dev = by_name("zcu104").unwrap();
+    let model = Model::lenet_tiny();
+    let weights = load_weights(&art).expect("weights.json");
+    // Sanity: the Python rng port derived the same weights our Rust RNG does.
+    assert_eq!(weights, acf::cnn::model::Weights::random(&model, AOT_WEIGHT_SEED));
+
+    println!("== deploy: {} on {} @ 200 MHz ==", model.name, dev.name);
+    let dep = Deployment::new(model.clone(), weights, &dev, 200.0, &Policy::adaptive()).unwrap();
+    for lp in &dep.plan.conv {
+        println!(
+            "  conv layer {}: {} x{} instances ({} windows/img)",
+            lp.layer,
+            lp.kind.name(),
+            lp.instances,
+            lp.windows
+        );
+    }
+    let (pd, pl) = dep.plan.pressure();
+    println!("  resources: DSP {:.1}%  LUT {:.1}%", pd * 100.0, pl * 100.0);
+
+    println!("\n== netlist spot-verification of planned IPs ==");
+    for lp in &dep.plan.conv {
+        let n = acf::sim::netlist_layer_check(&dep.model, &dep.plan, lp.layer, 0xE2E, 16).unwrap();
+        println!("  layer {}: {} windows through the {} netlist — exact", lp.layer, n, lp.kind.name());
+    }
+
+    println!("\n== serve {n_images} synthetic digit images ==");
+    let ds = Dataset::generate(n_images, 99, 16, 16);
+    let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+    let out = dep.infer_batch(&images).unwrap();
+    let snap = dep.metrics.snapshot();
+
+    println!("\n== golden cross-check (AOT JAX/Pallas via XLA PJRT) ==");
+    let client = cpu_client().unwrap();
+    let golden = GoldenCnn::load(&client, &art).unwrap();
+    let mut exact = 0;
+    let mut top1_agree = 0;
+    let check = images.len().min(64); // PJRT dispatch per image; cap the pass
+    for (img, fab) in images.iter().take(check).zip(&out) {
+        let gold = golden.infer(img).unwrap();
+        if &gold == fab {
+            exact += 1;
+        }
+        if argmax(&gold) == argmax(fab) {
+            top1_agree += 1;
+        }
+    }
+    println!("  {exact}/{check} logit vectors bit-identical, {top1_agree}/{check} top-1 agreement");
+
+    let perf = acf::sim::estimate(&dep.model, &dep.plan);
+    println!("\n== results ==");
+    println!("  modeled fabric throughput : {:.0} img/s @ 200 MHz", perf.throughput_img_s);
+    println!("  modeled fabric latency    : {:.1} µs/image", perf.latency_us);
+    println!("  host pipeline throughput  : {:.0} img/s (behavioral, {} threads)", snap.throughput(), dep.model.layers.len() + 1);
+    println!("  bottleneck layer          : {}", perf.bottleneck);
+    assert_eq!(exact, check, "fabric and golden must agree bit-exactly");
+    println!("\nE2E OK");
+}

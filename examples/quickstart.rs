@@ -1,0 +1,65 @@
+//! Quickstart: generate an IP, inspect its resources/timing/power, verify
+//! it bit-exactly against its behavioral model, and let the planner pick
+//! IPs for a small CNN.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use acf::fabric::device::by_name;
+use acf::ips::{self, verify, ConvKind, ConvParams};
+use acf::planner::{plan, Policy};
+
+fn main() {
+    let dev = by_name("zcu104").expect("catalog device");
+    let params = ConvParams::paper_8bit(); // 8-bit, 3x3 — the paper's setup
+
+    println!("== 1. generate the four convolution IPs and report them ==");
+    for kind in ConvKind::ALL {
+        let ip = ips::generate(kind, &params).expect("paper config is always feasible");
+        let u = acf::synth::synthesize(&ip.netlist);
+        let t = acf::sta::analyze(&ip.netlist, 200.0, dev.speed_derate).unwrap();
+        let p = acf::power::estimate(&u, &dev, 200.0, None);
+        println!(
+            "  {:7}  LUT {:4}  Reg {:4}  CLB {:3}  DSP {}  WNS {:+.3} ns  {:.3} W  ({} lane(s), II={})",
+            kind.name(),
+            u.luts,
+            u.regs,
+            u.clbs,
+            u.dsps,
+            t.wns_ns,
+            p.total_w(),
+            kind.lanes(),
+            ip.ii
+        );
+    }
+
+    println!("\n== 2. bit-exact verification: netlist vs behavioral model ==");
+    for kind in ConvKind::ALL {
+        let ip = ips::generate(kind, &params).unwrap();
+        let n = verify::check_equivalence(&ip, 0x5EED ^ kind as u64, 16);
+        println!("  {:7}  {} windows checked, all exact", kind.name(), n);
+    }
+
+    println!("\n== 3. resource-driven planning (the paper's adaptation) ==");
+    let model = acf::cnn::model::Model::lenet_tiny();
+    for dev_name in ["zcu104", "zu2cg", "edge-nodsp"] {
+        let dev = by_name(dev_name).unwrap();
+        match plan(&model, &dev, 200.0, &Policy::adaptive()) {
+            Ok(p) => {
+                let picks: Vec<String> = p
+                    .conv
+                    .iter()
+                    .map(|lp| format!("L{}={}x{}", lp.layer, lp.kind.name(), lp.instances))
+                    .collect();
+                println!(
+                    "  {:10}  {}  -> {:.0} img/s  (DSP {:.0}%, LUT {:.0}%)",
+                    dev_name,
+                    picks.join(", "),
+                    p.images_per_sec,
+                    p.pressure().0 * 100.0,
+                    p.pressure().1 * 100.0
+                );
+            }
+            Err(e) => println!("  {dev_name:10}  {e}"),
+        }
+    }
+}

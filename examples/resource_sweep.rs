@@ -1,0 +1,44 @@
+//! Sweep-A (DESIGN.md): how the adaptive planner and the fixed-policy
+//! baselines behave across the device catalog — the quantitative story
+//! behind Table III. Prints throughput per device per policy and the IP
+//! mix the adaptive planner chose.
+//!
+//! Run: `cargo run --release --example resource_sweep`
+
+use acf::cnn::model::Model;
+use acf::fabric::device::catalog;
+use acf::planner::{baselines, plan, Policy};
+
+fn main() {
+    println!("{}", acf::report::sweep_adaptation(200.0).markdown());
+
+    println!("\nadaptive IP mix per device (lenet-tiny):");
+    let m = Model::lenet_tiny();
+    for dev in catalog() {
+        match plan(&m, &dev, 200.0, &Policy::adaptive()) {
+            Ok(p) => {
+                let mix: Vec<String> = p
+                    .conv
+                    .iter()
+                    .map(|lp| format!("L{}: {} x{}", lp.layer, lp.kind.name(), lp.instances))
+                    .collect();
+                println!("  {:10} -> {}", dev.name, mix.join("; "));
+            }
+            Err(e) => println!("  {:10} -> {e}", dev.name),
+        }
+    }
+
+    println!("\npolicy failure modes:");
+    for pol in baselines::all() {
+        let fails: Vec<String> = catalog()
+            .into_iter()
+            .filter(|d| plan(&m, d, 200.0, &pol).is_err())
+            .map(|d| d.name)
+            .collect();
+        println!(
+            "  {:15} infeasible on: {}",
+            pol.name,
+            if fails.is_empty() { "(none)".to_string() } else { fails.join(", ") }
+        );
+    }
+}

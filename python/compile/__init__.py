@@ -1,0 +1,9 @@
+"""Build-time compile package (L1 Pallas kernels + L2 JAX model + AOT).
+
+x64 is enabled globally: the Conv_3 packed kernel needs real int64 lanes
+(without it jnp silently truncates to int32 and the lane split corrupts).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Interchange is HLO text (never ``.serialize()``): jax >= 0.5 emits protos
+with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (all under --out-dir, default ../artifacts):
+  model.hlo.txt        f(image int32[in_ch*h*w]) -> (logits int32[10],)
+                       — full lenet-tiny forward, weights baked in.
+  window_k3_w8.hlo.txt f(win int32[9], coef int32[9]) -> (int32[1],)
+                       — single IP window pass (runtime cross-check).
+  weights.json         the baked weights (audited interchange with Rust).
+  model.json           the model spec the weights belong to.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import rngport
+from .kernels import convpass
+
+WEIGHT_SEED = 2025
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as `constant({...})`, which the text parser silently mis-reads —
+    # baked weight matrices would arrive corrupted on the Rust side.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def build_model_artifact(out_dir: str) -> str:
+    spec = rngport.lenet_tiny_spec()
+    weights = rngport.random_weights(spec, WEIGHT_SEED)
+
+    def fn(image):
+        return (model_mod.forward(spec, weights, image),)
+
+    n = spec["in_ch"] * spec["in_h"] * spec["in_w"]
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((n,), jnp.int32))
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, "model.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, "weights.json"), "w") as f:
+        json.dump(weights, f)
+    with open(os.path.join(out_dir, "model.json"), "w") as f:
+        json.dump(spec, f)
+    return path
+
+
+def build_window_artifact(out_dir: str) -> str:
+    def fn(win, coef):
+        return (convpass.window_kernel(win, coef, shift=7, out_bits=8, round_bias=0),)
+
+    spec9 = jax.ShapeDtypeStruct((9,), jnp.int32)
+    lowered = jax.jit(fn).lower(spec9, spec9)
+    path = os.path.join(out_dir, "window_k3_w8.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    p1 = build_model_artifact(args.out_dir)
+    p2 = build_window_artifact(args.out_dir)
+    print(f"wrote {p1}")
+    print(f"wrote {p2}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""L1 — Pallas kernels modeling the convolution IPs' arithmetic.
+
+Two kernels, both ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls; see /opt/xla-example/README.md):
+
+* ``conv_pass``    — the plain serial-MAC pass (``Conv_1``/``Conv_2``/
+  ``Conv_4`` lane arithmetic): a K x K sweep accumulated in int32,
+  requantized per window. The kernel expresses the HBM->VMEM window
+  schedule with the accumulator-carried sweep the VHDL expresses with a
+  coefficient counter (DESIGN.md §Hardware-Adaptation).
+* ``conv_pass_packed`` — the ``Conv_3`` dual-pixel DSP packing, bit-exact:
+  two pixel planes are packed into one wide product stream
+  ``(a1 << S + a2) * b`` with int64 lanes, accumulated, then lane-split
+  with the borrow correction — validating the exact correction logic the
+  fabric implements around the DSP48E2.
+
+Both must match ``ref.conv_pass_ref`` exactly (pytest enforces it).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+I32 = jnp.int32
+I64 = jnp.int64
+
+
+def _conv_pass_kernel(x_ref, w_ref, o_ref, *, k: int, shift: int, out_bits: int, round_bias: int):
+    oh, ow = o_ref.shape
+    acc = jnp.full((oh, ow), round_bias, I32)
+    # The K*K coefficient sweep — the serial-MAC schedule, vectorized over
+    # every output position of the block (one MAC per "cycle" per window).
+    for dy in range(k):
+        for dx in range(k):
+            acc = acc + x_ref[dy : dy + oh, dx : dx + ow] * w_ref[dy, dx]
+    o_ref[...] = ref.requantize(acc, shift, out_bits)
+
+
+def conv_pass(x, w, *, shift: int, out_bits: int, round_bias: int = 0):
+    """Single-channel conv pass via the Pallas serial-MAC kernel.
+
+    x: (ih, iw) int32; w: (k, k) int32 -> (ih-k+1, iw-k+1) int32.
+    """
+    k = int(w.shape[0])
+    oh, ow = x.shape[0] - k + 1, x.shape[1] - k + 1
+    kern = functools.partial(
+        _conv_pass_kernel, k=k, shift=shift, out_bits=out_bits, round_bias=round_bias
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((oh, ow), I32),
+        interpret=True,
+    )(x.astype(I32), w.astype(I32))
+
+
+def _conv_pass_packed_kernel(
+    x1_ref, x2_ref, w_ref, o1_ref, o2_ref, *, k: int, s: int, shift: int, out_bits: int, round_bias: int
+):
+    oh, ow = o1_ref.shape
+    # Clamp the high-lane pixel min -> min+1 at the port boundary — the
+    # Conv_3 "reduced precision" (see rust fixed::pack::needs_high_clamp).
+    x1 = jnp.maximum(x1_ref[...].astype(I64), jnp.int64(-127))
+    x2 = x2_ref[...].astype(I64)
+    acc = jnp.full((oh, ow), (round_bias << s) + round_bias, I64)
+    for dy in range(k):
+        for dx in range(k):
+            packed = (x1[dy : dy + oh, dx : dx + ow] << s) + x2[dy : dy + oh, dx : dx + ow]
+            acc = acc + packed * w_ref[dy, dx].astype(I64)
+    # Lane split with borrow correction: low = sext(acc[s-1:0]).
+    low = (acc & ((1 << s) - 1)) - ((acc >> (s - 1) & 1) << s)
+    high = (acc - low) >> s
+    o1_ref[...] = ref.requantize(high.astype(I32), shift, out_bits)
+    o2_ref[...] = ref.requantize(low.astype(I32), shift, out_bits)
+
+
+def conv_pass_packed(x1, x2, w, *, shift: int, out_bits: int, round_bias: int = 0, data_bits: int = 8):
+    """Dual-pixel packed pass (Conv_3): two planes through one multiplier.
+
+    Returns (o1, o2) — the high- and low-lane outputs. Operand width is
+    limited exactly as on the DSP48E2: S + data_bits <= 27.
+    """
+    k = int(w.shape[0])
+    n = k * k
+    # Same feasibility derivation as fixed::pack::feasible.
+    import math
+
+    s = 2 * data_bits - 1 + (0 if n <= 1 else math.ceil(math.log2(n)))
+    if s + data_bits > 27:
+        raise ValueError(
+            f"packing infeasible: {data_bits}-bit operands over {k}x{k} need "
+            f"S={s}, S+w={s + data_bits} > 27"
+        )
+    oh, ow = x1.shape[0] - k + 1, x1.shape[1] - k + 1
+    kern = functools.partial(
+        _conv_pass_packed_kernel, k=k, s=s, shift=shift, out_bits=out_bits, round_bias=round_bias
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct((oh, ow), I32),
+            jax.ShapeDtypeStruct((oh, ow), I32),
+        ),
+        interpret=True,
+    )(x1.astype(I32), x2.astype(I32), w.astype(I32))
+
+
+def _window_kernel(win_ref, coef_ref, o_ref, *, shift: int, out_bits: int, round_bias: int):
+    acc = jnp.sum(win_ref[...] * coef_ref[...]) + round_bias
+    o_ref[...] = ref.requantize(jnp.reshape(acc, (1,)), shift, out_bits)
+
+
+def window_kernel(win, coef, *, shift: int, out_bits: int, round_bias: int = 0):
+    """Single-window IP pass as a standalone kernel (exported as an AOT
+    artifact so the Rust runtime can cross-check window semantics)."""
+    kern = functools.partial(_window_kernel, shift=shift, out_bits=out_bits, round_bias=round_bias)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((1,), I32),
+        interpret=True,
+    )(win.astype(I32), coef.astype(I32))

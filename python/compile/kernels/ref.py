@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the IP arithmetic contract.
+
+This is the Python mirror of ``rust/src/fixed`` + ``ConvParams::window_ref``:
+int32 arithmetic with int8-range values, truncating (floor) right-shift
+requantization, saturation to ``out_bits``, channel-partial summation with
+saturation, ReLU, 2x2 max-pool, and FC neurons. The Pallas kernels in
+``convpass.py`` must match these functions bit-for-bit (pytest enforces
+it), and the Rust behavioral/netlist stack implements the same contract,
+so equality is transitive across all three layers of the system.
+"""
+
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def sat(v, bits: int):
+    """Saturate int32 values into a signed `bits`-bit range."""
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return jnp.clip(v, lo, hi)
+
+
+def requantize(acc, shift: int, out_bits: int):
+    """Arithmetic right shift (floor) then saturate — Round::Truncate."""
+    return sat(jnp.right_shift(acc, shift), out_bits)
+
+
+def window_ref(window, coefs, shift: int, out_bits: int, round_bias: int = 0):
+    """One IP pass: dot(window, coefs) + bias, requantized.
+
+    window, coefs: int32 arrays of K*K elements.
+    """
+    acc = jnp.sum(window.astype(I32) * coefs.astype(I32)) + round_bias
+    return requantize(acc, shift, out_bits)
+
+
+def conv_pass_ref(x, w, shift: int, out_bits: int, round_bias: int = 0):
+    """Single input-channel conv pass over a full plane.
+
+    x: (ih, iw) int32 plane; w: (k, k) int32 coefficients.
+    Returns (ih-k+1, iw-k+1) of per-window requantized values.
+    """
+    k = w.shape[0]
+    oh = x.shape[0] - k + 1
+    ow = x.shape[1] - k + 1
+    acc = jnp.zeros((oh, ow), I32) + jnp.int32(round_bias)
+    for dy in range(k):
+        for dx in range(k):
+            acc = acc + x[dy : dy + oh, dx : dx + ow].astype(I32) * w[dy, dx].astype(I32)
+    return requantize(acc, shift, out_bits)
+
+
+def conv_layer_ref(x, w, shift: int, out_bits: int, relu: bool, round_bias: int = 0):
+    """Full conv layer: per-channel passes, saturated channel sum, ReLU.
+
+    x: (in_ch, ih, iw); w: (out_ch, in_ch, k, k). Returns (out_ch, oh, ow).
+    """
+    out_ch, in_ch = w.shape[0], w.shape[1]
+    planes = []
+    for oc in range(out_ch):
+        acc = None
+        for ic in range(in_ch):
+            p = conv_pass_ref(x[ic], w[oc, ic], shift, out_bits, round_bias)
+            acc = p if acc is None else acc + p
+        v = sat(acc, out_bits)
+        if relu:
+            v = jnp.maximum(v, 0)
+        planes.append(v)
+    return jnp.stack(planes)
+
+
+def maxpool2_ref(x):
+    """2x2 stride-2 max-pool over (ch, h, w)."""
+    ch, h, w = x.shape
+    oh, ow = h // 2, w // 2
+    x = x[:, : oh * 2, : ow * 2].reshape(ch, oh, 2, ow, 2)
+    return jnp.max(jnp.max(x, axis=4), axis=2)
+
+
+def fc_layer_ref(x_flat, w, shift: int, out_bits: int, relu: bool, round_bias: int = 0):
+    """FC layer: per-neuron dot + bias, requantized. w: (out, in).
+
+    Implemented as broadcast-multiply + reduce rather than `w @ x`: the
+    target xla_extension (0.5.1, the version the Rust `xla` crate binds)
+    miscompiles s32 `dot` on CPU — multiply/reduce lowers to plain
+    elementwise + reduction ops that round-trip correctly.
+    """
+    # dtype pinned: with x64 enabled jnp.sum would promote s32 -> s64.
+    acc = jnp.sum(w.astype(I32) * x_flat.astype(I32)[None, :], axis=1, dtype=I32) + jnp.int32(round_bias)
+    v = requantize(acc, shift, out_bits)
+    if relu:
+        v = jnp.maximum(v, 0)
+    return v

@@ -1,0 +1,78 @@
+"""L2 — the quantized CNN forward pass composed from the L1 kernels.
+
+``forward(spec, weights, image)`` computes logits with EXACTLY the layer
+arithmetic contract documented in ``rust/src/cnn`` (per-channel IP passes,
+saturated channel sums, ReLU, 2x2 max-pool, FC). The conv passes go
+through the Pallas ``conv_pass`` kernel so the lowered HLO contains the
+kernel's computation; ``forward_ref`` is the same graph on the pure-jnp
+oracle for differential testing.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import convpass, ref
+
+I32 = jnp.int32
+
+
+def _conv_layer(x, w, layer, pass_fn):
+    out_ch, in_ch = len(w), len(w[0])
+    k = layer["k"]
+    planes = []
+    for oc in range(out_ch):
+        acc = None
+        for ic in range(in_ch):
+            wk = jnp.array(w[oc][ic], I32).reshape(k, k)
+            p = pass_fn(
+                x[ic],
+                wk,
+                shift=layer["shift"],
+                out_bits=layer["out_bits"],
+                round_bias=layer["round_bias"],
+            )
+            acc = p if acc is None else acc + p
+        v = ref.sat(acc, layer["out_bits"])
+        if layer["relu"]:
+            v = jnp.maximum(v, 0)
+        planes.append(v)
+    return jnp.stack(planes)
+
+
+def _forward(spec, weights, image, pass_fn):
+    x = image.reshape(spec["in_ch"], spec["in_h"], spec["in_w"]).astype(I32)
+    conv_i = 0
+    fc_i = 0
+    for layer in spec["layers"]:
+        if layer["type"] == "conv":
+            x = _conv_layer(x, weights["conv"][conv_i], layer, pass_fn)
+            conv_i += 1
+        elif layer["type"] == "maxpool":
+            x = ref.maxpool2_ref(x)
+        elif layer["type"] == "fc":
+            flat = x.reshape(-1)
+            w = jnp.array(weights["fc"][fc_i], I32)
+            x = ref.fc_layer_ref(
+                flat, w, layer["shift"], layer["out_bits"], layer["relu"], layer["round_bias"]
+            ).reshape(1, 1, -1)
+            fc_i += 1
+        else:
+            raise ValueError(f"unknown layer {layer['type']}")
+    return x.reshape(-1)
+
+
+def forward(spec, weights, image):
+    """Logits via the Pallas conv kernel (what gets AOT-exported)."""
+
+    def pass_fn(x, w, *, shift, out_bits, round_bias):
+        return convpass.conv_pass(x, w, shift=shift, out_bits=out_bits, round_bias=round_bias)
+
+    return _forward(spec, weights, image, pass_fn)
+
+
+def forward_ref(spec, weights, image):
+    """Logits via the pure-jnp oracle (differential-test twin)."""
+
+    def pass_fn(x, w, *, shift, out_bits, round_bias):
+        return ref.conv_pass_ref(x, w, shift, out_bits, round_bias)
+
+    return _forward(spec, weights, image, pass_fn)

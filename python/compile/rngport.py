@@ -1,0 +1,97 @@
+"""Bit-faithful port of ``rust/src/util/rng.rs`` (xorshift64*) and
+``Weights::random``, so Python and Rust derive IDENTICAL model weights
+from the same seed — no weight file has to cross the build boundary for
+the two sides to agree (though ``aot.py`` still writes ``weights.json``
+as the audited interchange).
+"""
+
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    """xorshift64* — see rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK if seed != 0 else 0x9E3779B97F4A7C15
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) with Lemire-style rejection (bias-free)."""
+        assert n > 0
+        threshold = ((1 << 64) - n) % n
+        while True:
+            r = self.next_u64()
+            if r >= threshold:
+                return r % n
+
+    def range_i64(self, lo: int, hi: int) -> int:
+        assert lo <= hi
+        span = hi - lo + 1
+        return lo + self.below(span)
+
+
+def lenet_tiny_spec():
+    """Mirror of rust Model::lenet_tiny() — geometry + per-layer params."""
+    p = dict(k=3, data_bits=8, coef_bits=8, out_bits=8, shift=7, round_bias=0)
+    return dict(
+        name="lenet-tiny",
+        in_h=16,
+        in_w=16,
+        in_ch=1,
+        layers=[
+            dict(type="conv", in_ch=1, out_ch=4, relu=True, **p),
+            dict(type="maxpool"),
+            dict(type="conv", in_ch=4, out_ch=8, relu=True, **p),
+            dict(type="maxpool"),
+            dict(type="fc", out_dim=10, relu=False, **p),
+        ],
+    )
+
+
+def shapes(spec):
+    """Mirror of rust Model::shapes()."""
+    h, w, ch = spec["in_h"], spec["in_w"], spec["in_ch"]
+    out = []
+    for layer in spec["layers"]:
+        if layer["type"] == "conv":
+            k = layer["k"]
+            h, w, ch = h - k + 1, w - k + 1, layer["out_ch"]
+        elif layer["type"] == "maxpool":
+            h, w = h // 2, w // 2
+        elif layer["type"] == "fc":
+            h, w, ch = 1, 1, layer["out_dim"]
+        out.append((h, w, ch))
+    return out
+
+
+def random_weights(spec, seed: int):
+    """Mirror of rust Weights::random — SAME draw order, SAME values."""
+    rng = Rng(seed)
+    conv, fc = [], []
+    shp = shapes(spec)
+    prev = (spec["in_h"], spec["in_w"], spec["in_ch"])
+    for i, layer in enumerate(spec["layers"]):
+        if layer["type"] == "conv":
+            taps = layer["k"] * layer["k"]
+            hi = (1 << (layer["coef_bits"] - 1)) - 1
+            conv.append(
+                [
+                    [[rng.range_i64(-hi, hi) for _ in range(taps)] for _ in range(layer["in_ch"])]
+                    for _ in range(layer["out_ch"])
+                ]
+            )
+        elif layer["type"] == "fc":
+            in_dim = prev[0] * prev[1] * prev[2]
+            hi = (1 << (layer["coef_bits"] - 1)) - 1
+            fc.append(
+                [[rng.range_i64(-hi, hi) for _ in range(in_dim)] for _ in range(layer["out_dim"])]
+            )
+        prev = shp[i]
+    return dict(conv=conv, fc=fc)

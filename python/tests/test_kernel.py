@@ -1,0 +1,97 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, widths, and operand corners; every property is
+bit-exact equality (no tolerance — this is integer hardware arithmetic).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import convpass, ref
+
+SET = settings(max_examples=40, deadline=None)
+
+
+def rand_plane(data, h, w, lo=-127, hi=127):
+    return np.array(
+        [[data.draw(st.integers(lo, hi)) for _ in range(w)] for _ in range(h)], np.int32
+    )
+
+
+@SET
+@given(st.data())
+def test_conv_pass_matches_ref(data):
+    k = data.draw(st.sampled_from([1, 2, 3, 5]))
+    h = data.draw(st.integers(k, k + 6))
+    w = data.draw(st.integers(k, k + 6))
+    shift = data.draw(st.integers(0, 10))
+    x = rand_plane(data, h, w)
+    wk = rand_plane(data, k, k, -128, 127)
+    got = convpass.conv_pass(jnp.array(x), jnp.array(wk), shift=shift, out_bits=8)
+    want = ref.conv_pass_ref(jnp.array(x), jnp.array(wk), shift, 8)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+@SET
+@given(st.data())
+def test_conv_pass_packed_matches_two_refs(data):
+    k = 3
+    h = data.draw(st.integers(3, 8))
+    w = data.draw(st.integers(3, 8))
+    x1 = rand_plane(data, h, w, -128, 127)  # full range: clamp must handle -128
+    x2 = rand_plane(data, h, w, -128, 127)
+    wk = rand_plane(data, k, k, -128, 127)
+    o1, o2 = convpass.conv_pass_packed(
+        jnp.array(x1), jnp.array(x2), jnp.array(wk), shift=7, out_bits=8
+    )
+    # High lane sees the port-boundary clamp (min -> min+1), low lane is exact.
+    want1 = ref.conv_pass_ref(jnp.array(np.maximum(x1, -127)), jnp.array(wk), 7, 8)
+    want2 = ref.conv_pass_ref(jnp.array(x2), jnp.array(wk), 7, 8)
+    np.testing.assert_array_equal(np.array(o1), np.array(want1))
+    np.testing.assert_array_equal(np.array(o2), np.array(want2))
+
+
+def test_packed_rejects_wide_operands():
+    x = jnp.zeros((5, 5), jnp.int32)
+    w = jnp.zeros((3, 3), jnp.int32)
+    with pytest.raises(ValueError, match="packing infeasible"):
+        convpass.conv_pass_packed(x, x, w, shift=7, out_bits=8, data_bits=9)
+
+
+def test_window_kernel_corners():
+    ones = jnp.ones(9, jnp.int32)
+    assert int(convpass.window_kernel(jnp.arange(9), ones, shift=0, out_bits=8)[0]) == 36
+    big = jnp.full(9, 127, jnp.int32)
+    neg = jnp.full(9, -128, jnp.int32)
+    assert int(convpass.window_kernel(big, big, shift=7, out_bits=8)[0]) == 127
+    assert int(convpass.window_kernel(big, neg, shift=7, out_bits=8)[0]) == -128
+
+
+@SET
+@given(st.data())
+def test_window_kernel_matches_ref(data):
+    win = np.array([data.draw(st.integers(-128, 127)) for _ in range(9)], np.int32)
+    coef = np.array([data.draw(st.integers(-128, 127)) for _ in range(9)], np.int32)
+    shift = data.draw(st.integers(0, 9))
+    got = int(convpass.window_kernel(jnp.array(win), jnp.array(coef), shift=shift, out_bits=8)[0])
+    want = int(ref.window_ref(jnp.array(win), jnp.array(coef), shift, 8))
+    assert got == want
+
+
+def test_requantize_floor_semantics():
+    # Arithmetic shift = floor division; -1 >> 4 stays -1.
+    assert int(ref.requantize(jnp.int32(-1), 4, 8)) == -1
+    assert int(ref.requantize(jnp.int32(-160), 4, 8)) == -10
+    assert int(ref.requantize(jnp.int32(10), 2, 8)) == 2
+    assert int(ref.requantize(jnp.int32(1 << 20), 4, 8)) == 127
+
+
+def test_round_bias_injection():
+    # bias = 2^(shift-1) gives round-half-up behavior through floor shift.
+    win = jnp.array([1] + [0] * 8, jnp.int32)
+    coef = jnp.array([65] + [0] * 8, jnp.int32)  # 65/128 = 0.51
+    assert int(ref.window_ref(win, coef, 7, 8, round_bias=0)) == 0
+    assert int(ref.window_ref(win, coef, 7, 8, round_bias=64)) == 1

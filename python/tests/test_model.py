@@ -1,0 +1,96 @@
+"""L2 correctness: the model graph, the rng port, and pool/fc pieces."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import rngport
+from compile.kernels import ref
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def test_rng_port_known_stream():
+    # Matches rust util::rng (same algorithm, same constants).
+    r = rngport.Rng(7)
+    a = [r.next_u64() for _ in range(4)]
+    r2 = rngport.Rng(7)
+    b = [r2.next_u64() for _ in range(4)]
+    assert a == b
+    assert all(0 <= v < (1 << 64) for v in a)
+    r0 = rngport.Rng(0)
+    assert r0.next_u64() != 0
+
+
+def test_weights_shapes():
+    spec = rngport.lenet_tiny_spec()
+    w = rngport.random_weights(spec, 2025)
+    assert len(w["conv"]) == 2
+    assert len(w["conv"][0]) == 4 and len(w["conv"][0][0]) == 1
+    assert len(w["conv"][1]) == 8 and len(w["conv"][1][0]) == 4
+    assert len(w["fc"]) == 1
+    assert len(w["fc"][0]) == 10 and len(w["fc"][0][0]) == 32
+    flat = [v for l in w["conv"] for oc in l for ic in oc for v in ic]
+    assert all(-127 <= v <= 127 for v in flat), "symmetric weight range"
+
+
+def test_forward_pallas_equals_ref():
+    spec = rngport.lenet_tiny_spec()
+    w = rngport.random_weights(spec, 11)
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        img = jnp.array(rng.randint(-127, 128, 256), jnp.int32)
+        a = M.forward(spec, w, img)
+        b = M.forward_ref(spec, w, img)
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_forward_output_range():
+    spec = rngport.lenet_tiny_spec()
+    w = rngport.random_weights(spec, 3)
+    img = jnp.array(np.full(256, 127), jnp.int32)
+    out = np.array(M.forward(spec, w, img))
+    assert out.shape == (10,)
+    assert out.min() >= -128 and out.max() <= 127
+
+
+@SET
+@given(st.data())
+def test_maxpool_matches_numpy(data):
+    ch = data.draw(st.integers(1, 3))
+    h = data.draw(st.integers(2, 9))
+    w = data.draw(st.integers(2, 9))
+    x = np.array(
+        [[[data.draw(st.integers(-128, 127)) for _ in range(w)] for _ in range(h)] for _ in range(ch)],
+        np.int32,
+    )
+    got = np.array(ref.maxpool2_ref(jnp.array(x)))
+    oh, ow = h // 2, w // 2
+    want = x[:, : oh * 2, : ow * 2].reshape(ch, oh, 2, ow, 2).max(axis=(2, 4))
+    np.testing.assert_array_equal(got, want)
+
+
+@SET
+@given(st.data())
+def test_fc_matches_numpy(data):
+    n = data.draw(st.integers(1, 40))
+    out = data.draw(st.integers(1, 8))
+    shift = data.draw(st.integers(0, 10))
+    x = np.array([data.draw(st.integers(-128, 127)) for _ in range(n)], np.int32)
+    w = np.array([[data.draw(st.integers(-128, 127)) for _ in range(n)] for _ in range(out)], np.int32)
+    got = np.array(ref.fc_layer_ref(jnp.array(x), jnp.array(w), shift, 8, False))
+    acc = (w.astype(np.int64) @ x.astype(np.int64)) >> shift
+    want = np.clip(acc, -128, 127).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_conv_layer_channel_sum_saturates():
+    # Force big positive partials: channel sum must clip at +127.
+    spec_layer = dict(k=1, shift=0, out_bits=8, relu=False, round_bias=0)
+    x = jnp.full((4, 2, 2), 100, jnp.int32)
+    w = jnp.full((1, 4, 1, 1), 1, jnp.int32)
+    out = ref.conv_layer_ref(x, w, 0, 8, False)
+    assert int(out[0, 0, 0]) == 127
+    del spec_layer

@@ -1,0 +1,194 @@
+//! Reference fixed-point inference — the behavioral golden model.
+//!
+//! Implements the layer arithmetic contract from the module docs using
+//! [`ConvParams::window_ref`] / [`fc_ref`] / [`maxpool_ref`], i.e. the
+//! exact per-window semantics the IP netlists implement. The coordinator's
+//! deployed inference and the XLA artifact must both match this
+//! bit-for-bit.
+
+use super::model::{Layer, Model, Weights};
+use crate::fixed::sat;
+use crate::ips::fc::fc_ref;
+use crate::ips::pool::maxpool_ref;
+
+/// Activation tensor: channel-major `[ch][h*w]`.
+pub type Tensor = Vec<Vec<i64>>;
+
+/// Run inference, returning the logits (final activation, flattened).
+pub fn infer(model: &Model, weights: &Weights, image: &[i64]) -> Vec<i64> {
+    infer_trace(model, weights, image).pop().expect("nonempty model").concat()
+}
+
+/// Run inference, returning EVERY layer's output tensor (for debugging and
+/// cross-layer comparison tests).
+pub fn infer_trace(model: &Model, weights: &Weights, image: &[i64]) -> Vec<Tensor> {
+    assert_eq!(image.len(), model.in_h * model.in_w * model.in_ch);
+    let mut cur: Tensor = (0..model.in_ch)
+        .map(|c| image[c * model.in_h * model.in_w..(c + 1) * model.in_h * model.in_w].to_vec())
+        .collect();
+    let mut cur_h = model.in_h;
+    let mut cur_w = model.in_w;
+    let mut conv_idx = 0usize;
+    let mut fc_idx = 0usize;
+    let mut trace = Vec::new();
+    for layer in &model.layers {
+        match layer {
+            Layer::Conv { in_ch, out_ch, params, relu } => {
+                let k = params.k as usize;
+                let (oh, ow) = (cur_h - k + 1, cur_w - k + 1);
+                let w = &weights.conv[conv_idx];
+                let mut out: Tensor = vec![vec![0; oh * ow]; *out_ch];
+                for oc in 0..*out_ch {
+                    for y in 0..oh {
+                        for x in 0..ow {
+                            let mut sum = 0i64;
+                            for ic in 0..*in_ch {
+                                let win = window(&cur[ic], cur_w, x, y, k);
+                                sum += params.window_ref(&win, &w[oc][ic]);
+                            }
+                            // Channel-partial sum saturates at out_bits.
+                            let mut v = sat(sum, params.out_bits);
+                            if *relu {
+                                v = v.max(0);
+                            }
+                            out[oc][y * ow + x] = v;
+                        }
+                    }
+                }
+                cur = out;
+                cur_h = oh;
+                cur_w = ow;
+                conv_idx += 1;
+            }
+            Layer::MaxPool => {
+                let (oh, ow) = (cur_h / 2, cur_w / 2);
+                let mut out: Tensor = vec![vec![0; oh * ow]; cur.len()];
+                for (c, plane) in cur.iter().enumerate() {
+                    for y in 0..oh {
+                        for x in 0..ow {
+                            let vals = [
+                                plane[(2 * y) * cur_w + 2 * x],
+                                plane[(2 * y) * cur_w + 2 * x + 1],
+                                plane[(2 * y + 1) * cur_w + 2 * x],
+                                plane[(2 * y + 1) * cur_w + 2 * x + 1],
+                            ];
+                            out[c][y * ow + x] = maxpool_ref(&vals);
+                        }
+                    }
+                }
+                cur = out;
+                cur_h = oh;
+                cur_w = ow;
+            }
+            Layer::Fc { out_dim, params, relu } => {
+                let flat = flatten(&cur);
+                let w = &weights.fc[fc_idx];
+                let mut out = vec![0i64; *out_dim];
+                for (o, row) in w.iter().enumerate() {
+                    let mut v = fc_ref(params, &flat, row);
+                    if *relu {
+                        v = v.max(0);
+                    }
+                    out[o] = v;
+                }
+                cur = vec![out];
+                cur_h = 1;
+                cur_w = 1;
+                fc_idx += 1;
+            }
+        }
+        trace.push(cur.clone());
+    }
+    trace
+}
+
+/// Extract a K×K window at (x, y) from a row-major plane.
+pub fn window(plane: &[i64], width: usize, x: usize, y: usize, k: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(k * k);
+    for dy in 0..k {
+        for dx in 0..k {
+            out.push(plane[(y + dy) * width + (x + dx)]);
+        }
+    }
+    out
+}
+
+/// Flatten channel-major tensor in `ch, y, x` order (the order `aot.py`
+/// mirrors for the FC weights).
+pub fn flatten(t: &Tensor) -> Vec<i64> {
+    t.concat()
+}
+
+/// Argmax of logits (ties: lowest index).
+pub fn argmax(logits: &[i64]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::Dataset;
+    use crate::cnn::model::{Model, Weights};
+
+    #[test]
+    fn shapes_flow_through() {
+        let m = Model::lenet_tiny();
+        let w = Weights::random(&m, 1);
+        let ds = Dataset::generate(3, 2, 16, 16);
+        let trace = infer_trace(&m, &w, &ds.images[0].pix);
+        assert_eq!(trace.len(), 5);
+        assert_eq!(trace[0].len(), 4); // conv1: 4 channels
+        assert_eq!(trace[0][0].len(), 14 * 14);
+        assert_eq!(trace[4][0].len(), 10); // logits
+    }
+
+    #[test]
+    fn outputs_respect_out_bits() {
+        let m = Model::lenet_tiny();
+        let w = Weights::random(&m, 9);
+        let ds = Dataset::generate(5, 4, 16, 16);
+        for img in &ds.images {
+            let trace = infer_trace(&m, &w, &img.pix);
+            for t in &trace {
+                for plane in t {
+                    assert!(plane.iter().all(|&v| (-128..=127).contains(&v)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relu_layers_nonnegative() {
+        let m = Model::lenet_tiny();
+        let w = Weights::random(&m, 5);
+        let ds = Dataset::generate(2, 8, 16, 16);
+        let trace = infer_trace(&m, &w, &ds.images[0].pix);
+        for plane in &trace[0] {
+            assert!(plane.iter().all(|&v| v >= 0), "conv+relu output");
+        }
+        for plane in &trace[2] {
+            assert!(plane.iter().all(|&v| v >= 0));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = Model::lenet_tiny();
+        let w = Weights::random(&m, 5);
+        let ds = Dataset::generate(1, 8, 16, 16);
+        assert_eq!(infer(&m, &w, &ds.images[0].pix), infer(&m, &w, &ds.images[0].pix));
+    }
+
+    #[test]
+    fn window_and_argmax() {
+        let plane: Vec<i64> = (0..16).collect(); // 4x4
+        assert_eq!(window(&plane, 4, 1, 1, 2), vec![5, 6, 9, 10]);
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-3, -1]), 1);
+    }
+}

@@ -1,0 +1,26 @@
+//! Quantized CNN model graph, synthetic workload, and the reference
+//! fixed-point inference the whole stack is verified against.
+//!
+//! ## Layer arithmetic contract
+//!
+//! Every layer in this library agrees on ONE set of semantics, chosen so
+//! the conv IPs implement it exactly and the Pallas kernels mirror it:
+//!
+//! * A conv output channel is `sat_out( Σ_c requant(window_dot(x_c, w_c)) )`
+//!   — each input-channel window is processed by an IP *pass* (requantized
+//!   at `out_bits`), and channel partials are summed and saturated by the
+//!   layer engine. ReLU optionally follows.
+//! * Pixels entering conv layers never hold the most-negative code
+//!   (images are generated in `[-127, 127]` and intermediate activations
+//!   are post-ReLU), so `Conv_3`'s high-lane clamp never fires and any IP
+//!   mix yields bit-identical results.
+//! * FC neurons use [`crate::ips::fc::fc_ref`] semantics; max-pool is
+//!   exact.
+
+pub mod data;
+pub mod infer;
+pub mod model;
+
+pub use data::{render_digit, Dataset};
+pub use infer::{infer, infer_trace};
+pub use model::{Layer, Model, Weights};

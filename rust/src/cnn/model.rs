@@ -1,0 +1,362 @@
+//! CNN model description (the config system's main payload) and weights.
+
+use crate::ips::ConvParams;
+use crate::util::json::{obj, Json, JsonError};
+use crate::util::rng::Rng;
+
+/// One layer of the network.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// 2-D convolution, `valid` padding, stride 1, optional fused ReLU.
+    Conv { in_ch: usize, out_ch: usize, params: ConvParams, relu: bool },
+    /// 2×2 max-pool, stride 2.
+    MaxPool,
+    /// Fully connected over the flattened input, optional fused ReLU.
+    Fc { out_dim: usize, params: ConvParams, relu: bool },
+}
+
+/// A model: input geometry plus the layer stack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub name: String,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_ch: usize,
+    pub layers: Vec<Layer>,
+}
+
+/// Shape of an activation tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub ch: usize,
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.h * self.w * self.ch
+    }
+}
+
+impl Model {
+    /// The e2e driver's network: a LeNet-style digit classifier sized for
+    /// the 16×16 synthetic corpus.
+    /// conv(1→4,3×3)+relu → pool → conv(4→8,3×3)+relu → pool → fc(→10).
+    pub fn lenet_tiny() -> Model {
+        let p = ConvParams::paper_8bit();
+        Model {
+            name: "lenet-tiny".into(),
+            in_h: 16,
+            in_w: 16,
+            in_ch: 1,
+            layers: vec![
+                Layer::Conv { in_ch: 1, out_ch: 4, params: p, relu: true },
+                Layer::MaxPool,
+                Layer::Conv { in_ch: 4, out_ch: 8, params: p, relu: true },
+                Layer::MaxPool,
+                Layer::Fc { out_dim: 10, params: p, relu: false },
+            ],
+        }
+    }
+
+    /// A deeper variant for scalability sweeps.
+    pub fn lenet_wide(width_mult: usize) -> Model {
+        let p = ConvParams::paper_8bit();
+        let m = width_mult.max(1);
+        Model {
+            name: format!("lenet-wide-{m}x"),
+            in_h: 16,
+            in_w: 16,
+            in_ch: 1,
+            layers: vec![
+                Layer::Conv { in_ch: 1, out_ch: 4 * m, params: p, relu: true },
+                Layer::MaxPool,
+                Layer::Conv { in_ch: 4 * m, out_ch: 8 * m, params: p, relu: true },
+                Layer::MaxPool,
+                Layer::Fc { out_dim: 10, params: p, relu: false },
+            ],
+        }
+    }
+
+    /// Per-layer output shapes (validates geometry).
+    pub fn shapes(&self) -> Result<Vec<Shape>, String> {
+        let mut cur = Shape { h: self.in_h, w: self.in_w, ch: self.in_ch };
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            cur = match layer {
+                Layer::Conv { in_ch, out_ch, params, .. } => {
+                    if *in_ch != cur.ch {
+                        return Err(format!("layer {i}: in_ch {} != incoming {}", in_ch, cur.ch));
+                    }
+                    let k = params.k as usize;
+                    if cur.h < k || cur.w < k {
+                        return Err(format!("layer {i}: {k}x{k} kernel larger than input"));
+                    }
+                    Shape { h: cur.h - k + 1, w: cur.w - k + 1, ch: *out_ch }
+                }
+                Layer::MaxPool => {
+                    if cur.h < 2 || cur.w < 2 {
+                        return Err(format!("layer {i}: pool on degenerate input"));
+                    }
+                    Shape { h: cur.h / 2, w: cur.w / 2, ch: cur.ch }
+                }
+                Layer::Fc { out_dim, .. } => Shape { h: 1, w: 1, ch: *out_dim },
+            };
+            out.push(cur);
+        }
+        Ok(out)
+    }
+
+    /// Total conv window passes per image per conv layer (the planner's
+    /// workload measure): `out_h · out_w · out_ch · in_ch`.
+    pub fn conv_workloads(&self) -> Vec<(usize, u64)> {
+        let shapes = self.shapes().expect("valid model");
+        let mut cur = Shape { h: self.in_h, w: self.in_w, ch: self.in_ch };
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            if let Layer::Conv { in_ch, out_ch, .. } = layer {
+                let s = shapes[i];
+                out.push((i, (s.h * s.w * out_ch * in_ch) as u64));
+            }
+            cur = shapes[i];
+        }
+        let _ = cur;
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv { in_ch, out_ch, params, relu } => obj([
+                    ("type", "conv".into()),
+                    ("in_ch", (*in_ch).into()),
+                    ("out_ch", (*out_ch).into()),
+                    ("params", params.to_json()),
+                    ("relu", (*relu).into()),
+                ]),
+                Layer::MaxPool => obj([("type", "maxpool".into())]),
+                Layer::Fc { out_dim, params, relu } => obj([
+                    ("type", "fc".into()),
+                    ("out_dim", (*out_dim).into()),
+                    ("params", params.to_json()),
+                    ("relu", (*relu).into()),
+                ]),
+            })
+            .collect();
+        obj([
+            ("name", self.name.as_str().into()),
+            ("in_h", self.in_h.into()),
+            ("in_w", self.in_w.into()),
+            ("in_ch", self.in_ch.into()),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Model, JsonError> {
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(match l.get("type")?.as_str()? {
+                    "conv" => Layer::Conv {
+                        in_ch: l.get("in_ch")?.as_usize()?,
+                        out_ch: l.get("out_ch")?.as_usize()?,
+                        params: ConvParams::from_json(l.get("params")?)?,
+                        relu: l.get("relu")?.as_bool()?,
+                    },
+                    "maxpool" => Layer::MaxPool,
+                    "fc" => Layer::Fc {
+                        out_dim: l.get("out_dim")?.as_usize()?,
+                        params: ConvParams::from_json(l.get("params")?)?,
+                        relu: l.get("relu")?.as_bool()?,
+                    },
+                    other => return Err(JsonError::Access(format!("unknown layer type '{other}'"))),
+                })
+            })
+            .collect::<Result<Vec<_>, JsonError>>()?;
+        Ok(Model {
+            name: v.get("name")?.as_str()?.to_string(),
+            in_h: v.get("in_h")?.as_usize()?,
+            in_w: v.get("in_w")?.as_usize()?,
+            in_ch: v.get("in_ch")?.as_usize()?,
+            layers,
+        })
+    }
+}
+
+/// Weights for a model: conv filters indexed `[layer][out_ch][in_ch][k²]`,
+/// FC matrices `[layer][out][in]`. Values are symmetric int8-style
+/// (`[-(2^(b-1)-1), 2^(b-1)-1]`) so the `Conv_3` clamp can never fire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Weights {
+    pub conv: Vec<Vec<Vec<Vec<i64>>>>,
+    pub fc: Vec<Vec<Vec<i64>>>,
+}
+
+impl Weights {
+    /// Deterministic random weights (symmetric range).
+    pub fn random(model: &Model, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let mut conv = Vec::new();
+        let mut fc = Vec::new();
+        let shapes = model.shapes().expect("valid model");
+        let mut cur = Shape { h: model.in_h, w: model.in_w, ch: model.in_ch };
+        for (i, layer) in model.layers.iter().enumerate() {
+            match layer {
+                Layer::Conv { in_ch, out_ch, params, .. } => {
+                    let taps = params.taps() as usize;
+                    let hi = (1i64 << (params.coef_bits - 1)) - 1;
+                    conv.push(
+                        (0..*out_ch)
+                            .map(|_| {
+                                (0..*in_ch)
+                                    .map(|_| (0..taps).map(|_| rng.range_i64(-hi, hi)).collect())
+                                    .collect()
+                            })
+                            .collect(),
+                    );
+                }
+                Layer::Fc { out_dim, params, .. } => {
+                    let in_dim = cur.numel();
+                    let hi = (1i64 << (params.coef_bits - 1)) - 1;
+                    fc.push(
+                        (0..*out_dim)
+                            .map(|_| (0..in_dim).map(|_| rng.range_i64(-hi, hi)).collect())
+                            .collect(),
+                    );
+                }
+                Layer::MaxPool => {}
+            }
+            cur = shapes[i];
+        }
+        Weights { conv, fc }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let conv: Vec<Json> = self
+            .conv
+            .iter()
+            .map(|l| {
+                Json::Arr(
+                    l.iter()
+                        .map(|oc| {
+                            Json::Arr(
+                                oc.iter()
+                                    .map(|ic| Json::Arr(ic.iter().map(|&v| v.into()).collect()))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let fc: Vec<Json> = self
+            .fc
+            .iter()
+            .map(|l| {
+                Json::Arr(
+                    l.iter()
+                        .map(|row| Json::Arr(row.iter().map(|&v| v.into()).collect()))
+                        .collect(),
+                )
+            })
+            .collect();
+        obj([("conv", Json::Arr(conv)), ("fc", Json::Arr(fc))])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Weights, JsonError> {
+        fn vec_i64(j: &Json) -> Result<Vec<i64>, JsonError> {
+            j.as_arr()?.iter().map(|x| x.as_i64()).collect()
+        }
+        let conv = v
+            .get("conv")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                l.as_arr()?
+                    .iter()
+                    .map(|oc| oc.as_arr()?.iter().map(vec_i64).collect())
+                    .collect()
+            })
+            .collect::<Result<_, _>>()?;
+        let fc = v
+            .get("fc")?
+            .as_arr()?
+            .iter()
+            .map(|l| l.as_arr()?.iter().map(vec_i64).collect())
+            .collect::<Result<_, _>>()?;
+        Ok(Weights { conv, fc })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_shapes() {
+        let m = Model::lenet_tiny();
+        let s = m.shapes().unwrap();
+        assert_eq!(s[0], Shape { h: 14, w: 14, ch: 4 }); // conv 16->14
+        assert_eq!(s[1], Shape { h: 7, w: 7, ch: 4 }); // pool
+        assert_eq!(s[2], Shape { h: 5, w: 5, ch: 8 }); // conv
+        assert_eq!(s[3], Shape { h: 2, w: 2, ch: 8 }); // pool
+        assert_eq!(s[4], Shape { h: 1, w: 1, ch: 10 }); // fc
+    }
+
+    #[test]
+    fn workloads() {
+        let m = Model::lenet_tiny();
+        let w = m.conv_workloads();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], (0, 14 * 14 * 4));
+        assert_eq!(w[1], (2, (5 * 5 * 8 * 4) as u64));
+    }
+
+    #[test]
+    fn bad_geometry_rejected() {
+        let mut m = Model::lenet_tiny();
+        m.in_h = 2;
+        assert!(m.shapes().is_err());
+        let mut m2 = Model::lenet_tiny();
+        if let Layer::Conv { in_ch, .. } = &mut m2.layers[0] {
+            *in_ch = 3;
+        }
+        assert!(m2.shapes().is_err());
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = Model::lenet_tiny();
+        let back = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn weights_symmetric_and_roundtrip() {
+        let m = Model::lenet_tiny();
+        let w = Weights::random(&m, 42);
+        assert_eq!(w.conv.len(), 2);
+        assert_eq!(w.fc.len(), 1);
+        assert_eq!(w.conv[0].len(), 4);
+        assert_eq!(w.conv[1][0].len(), 4);
+        assert_eq!(w.fc[0].len(), 10);
+        assert_eq!(w.fc[0][0].len(), 2 * 2 * 8);
+        for l in &w.conv {
+            for oc in l {
+                for ic in oc {
+                    assert!(ic.iter().all(|&v| (-127..=127).contains(&v)));
+                }
+            }
+        }
+        let back = Weights::from_json(&w.to_json()).unwrap();
+        assert_eq!(back, w);
+        // Deterministic.
+        assert_eq!(Weights::random(&m, 42), w);
+        assert_ne!(Weights::random(&m, 43), w);
+    }
+}

@@ -1,0 +1,63 @@
+//! Deployment metrics: thread-safe counters the leader reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Cumulative serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    images: AtomicU64,
+    batches: AtomicU64,
+    wall_nanos: AtomicU64,
+}
+
+/// A point-in-time view.
+#[derive(Debug, Clone, Copy)]
+pub struct Snapshot {
+    pub images: u64,
+    pub batches: u64,
+    pub wall_secs: f64,
+}
+
+impl Snapshot {
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.images as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_batch(&self, images: u64, wall: Duration) {
+        self.images.fetch_add(images, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.wall_nanos.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            images: self.images.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            wall_secs: self.wall_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let m = Metrics::default();
+        m.record_batch(3, Duration::from_millis(10));
+        m.record_batch(5, Duration::from_millis(30));
+        let s = m.snapshot();
+        assert_eq!(s.images, 8);
+        assert_eq!(s.batches, 2);
+        assert!((s.wall_secs - 0.04).abs() < 1e-6);
+        assert!(s.throughput() > 0.0);
+    }
+}

@@ -1,0 +1,291 @@
+//! Deployment coordinator — the L3 run-time that owns process topology,
+//! worker threads, backpressure, and metrics.
+//!
+//! A [`Deployment`] realizes a [`Plan`]: one worker thread per layer,
+//! connected by bounded channels (the fabric's line-buffer backpressure,
+//! modeled at image granularity). Values are computed with the bit-exact
+//! behavioral layer models (the netlists are spot-verified against them by
+//! [`crate::sim::netlist_layer_check`]); time comes from the schedule
+//! model. Python never appears here — the XLA golden path lives in
+//! [`crate::runtime`] and is only consulted for verification.
+
+pub mod metrics;
+
+use crate::cnn::infer::Tensor;
+use crate::cnn::model::{Layer, Model, Weights};
+use crate::fabric::device::Device;
+use crate::planner::{plan as make_plan, Plan, PlanError, Policy};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Channel depth between layer workers (double-buffered line memories).
+const CHANNEL_DEPTH: usize = 2;
+
+/// A deployed model ready to serve batches.
+pub struct Deployment {
+    pub model: Model,
+    pub weights: Arc<Weights>,
+    pub plan: Plan,
+    pub metrics: metrics::Metrics,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DeployError {
+    #[error(transparent)]
+    Plan(#[from] PlanError),
+    #[error("input image has {got} pixels, model wants {want}")]
+    BadImage { got: usize, want: usize },
+    #[error("input pixel {0} outside the symmetric range [-127, 127] — would trip the Conv_3 packing clamp")]
+    AsymmetricInput(i64),
+}
+
+impl Deployment {
+    /// Plan and deploy `model` on `dev`.
+    pub fn new(
+        model: Model,
+        weights: Weights,
+        dev: &Device,
+        clock_mhz: f64,
+        policy: &Policy,
+    ) -> Result<Deployment, DeployError> {
+        let plan = make_plan(&model, dev, clock_mhz, policy)?;
+        Ok(Deployment { model, weights: Arc::new(weights), plan, metrics: metrics::Metrics::default() })
+    }
+
+    /// Ingress guard: shape + symmetric-range check (see module docs of
+    /// [`crate::cnn`] for why -128 is excluded).
+    fn check_image(&self, image: &[i64]) -> Result<(), DeployError> {
+        let want = self.model.in_h * self.model.in_w * self.model.in_ch;
+        if image.len() != want {
+            return Err(DeployError::BadImage { got: image.len(), want });
+        }
+        if let Some(&bad) = image.iter().find(|&&p| !(-127..=127).contains(&p)) {
+            return Err(DeployError::AsymmetricInput(bad));
+        }
+        Ok(())
+    }
+
+    /// Serve a batch through the layer pipeline: one worker thread per
+    /// layer, bounded channels for backpressure. Returns per-image logits
+    /// in order.
+    pub fn infer_batch(&self, images: &[Vec<i64>]) -> Result<Vec<Vec<i64>>, DeployError> {
+        for img in images {
+            self.check_image(img)?;
+        }
+        let t0 = std::time::Instant::now();
+        let n_layers = self.model.layers.len();
+        let results: Vec<Vec<i64>> = std::thread::scope(|scope| {
+            // Stage 0 feeds images as single-channel tensors.
+            let (tx0, mut rx_prev) = mpsc::sync_channel::<Tensor>(CHANNEL_DEPTH);
+            let model = &self.model;
+            let weights = &self.weights;
+            scope.spawn(move || {
+                for img in images {
+                    let t: Tensor = (0..model.in_ch)
+                        .map(|c| {
+                            img[c * model.in_h * model.in_w..(c + 1) * model.in_h * model.in_w]
+                                .to_vec()
+                        })
+                        .collect();
+                    if tx0.send(t).is_err() {
+                        return; // downstream gone
+                    }
+                }
+            });
+            // One worker per layer.
+            for li in 0..n_layers {
+                let (tx, rx_next) = mpsc::sync_channel::<Tensor>(CHANNEL_DEPTH);
+                let rx_in = rx_prev;
+                rx_prev = rx_next;
+                scope.spawn(move || {
+                    // Geometry is a per-layer constant — computed once per
+                    // worker, not per image (EXPERIMENTS.md §Perf item 5).
+                    let geom = layer_input_geometry(model, li);
+                    while let Ok(t) = rx_in.recv() {
+                        let out = apply_layer(model, weights, li, &t, geom);
+                        if tx.send(out).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+            // Collector.
+            let mut out = Vec::with_capacity(images.len());
+            while let Ok(t) = rx_prev.recv() {
+                out.push(t.concat());
+            }
+            out
+        });
+        self.metrics.record_batch(images.len() as u64, t0.elapsed());
+        Ok(results)
+    }
+
+    /// Single image convenience.
+    pub fn infer_one(&self, image: &[i64]) -> Result<Vec<i64>, DeployError> {
+        Ok(self.infer_batch(std::slice::from_ref(&image.to_vec()))?.pop().unwrap())
+    }
+}
+
+/// (h, w) of the tensor *entering* layer `li`.
+fn layer_input_geometry(model: &Model, li: usize) -> (usize, usize) {
+    let shapes = model.shapes().expect("valid model");
+    if li == 0 {
+        (model.in_h, model.in_w)
+    } else {
+        (shapes[li - 1].h, shapes[li - 1].w)
+    }
+}
+
+/// Apply one layer with the behavioral contract (same code path as
+/// [`crate::cnn::infer`], factored per layer for the workers).
+fn apply_layer(model: &Model, weights: &Weights, li: usize, input: &Tensor, geom: (usize, usize)) -> Tensor {
+    use crate::fixed::sat;
+    use crate::ips::fc::fc_ref;
+    use crate::ips::pool::maxpool_ref;
+    let (cur_h, cur_w) = geom;
+    // Weight indices: count conv/fc layers before li.
+    let conv_idx = model.layers[..li]
+        .iter()
+        .filter(|l| matches!(l, Layer::Conv { .. }))
+        .count();
+    let fc_idx = model.layers[..li].iter().filter(|l| matches!(l, Layer::Fc { .. })).count();
+    match &model.layers[li] {
+        Layer::Conv { in_ch, out_ch, params, relu } => {
+            let k = params.k as usize;
+            let (oh, ow) = (cur_h - k + 1, cur_w - k + 1);
+            let w = &weights.conv[conv_idx];
+            let bias = params.round_bias();
+            let shift = params.shift;
+            let out_bits = params.out_bits;
+            (0..*out_ch)
+                .map(|oc| {
+                    let mut plane = vec![0i64; oh * ow];
+                    for y in 0..oh {
+                        for x in 0..ow {
+                            let mut sum = 0i64;
+                            for ic in 0..*in_ch {
+                                // Inline window_ref: dot + bias + requant,
+                                // allocation-free (hot loop — §Perf item 5).
+                                let plane_in = &input[ic];
+                                let coefs = &w[oc][ic];
+                                let mut acc = bias;
+                                for dy in 0..k {
+                                    let row = &plane_in[(y + dy) * cur_w + x..];
+                                    let crow = &coefs[dy * k..dy * k + k];
+                                    for dx in 0..k {
+                                        acc += row[dx] * crow[dx];
+                                    }
+                                }
+                                sum += crate::fixed::requantize(
+                                    acc,
+                                    shift,
+                                    crate::fixed::Round::Truncate,
+                                    out_bits,
+                                );
+                            }
+                            let mut v = sat(sum, out_bits);
+                            if *relu {
+                                v = v.max(0);
+                            }
+                            plane[y * ow + x] = v;
+                        }
+                    }
+                    plane
+                })
+                .collect()
+        }
+        Layer::MaxPool => {
+            let (oh, ow) = (cur_h / 2, cur_w / 2);
+            input
+                .iter()
+                .map(|plane| {
+                    let mut out = vec![0i64; oh * ow];
+                    for y in 0..oh {
+                        for x in 0..ow {
+                            out[y * ow + x] = maxpool_ref(&[
+                                plane[(2 * y) * cur_w + 2 * x],
+                                plane[(2 * y) * cur_w + 2 * x + 1],
+                                plane[(2 * y + 1) * cur_w + 2 * x],
+                                plane[(2 * y + 1) * cur_w + 2 * x + 1],
+                            ]);
+                        }
+                    }
+                    out
+                })
+                .collect()
+        }
+        Layer::Fc { out_dim, params, relu } => {
+            let flat = input.concat();
+            let w = &weights.fc[fc_idx];
+            let mut out = vec![0i64; *out_dim];
+            for (o, row) in w.iter().enumerate() {
+                let mut v = fc_ref(params, &flat, row);
+                if *relu {
+                    v = v.max(0);
+                }
+                out[o] = v;
+            }
+            vec![out]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::data::Dataset;
+    use crate::cnn::model::{Model, Weights};
+    use crate::fabric::device::by_name;
+
+    fn deploy() -> Deployment {
+        let m = Model::lenet_tiny();
+        let w = Weights::random(&m, 42);
+        let dev = by_name("zcu104").unwrap();
+        Deployment::new(m, w, &dev, 200.0, &Policy::adaptive()).unwrap()
+    }
+
+    #[test]
+    fn pipeline_matches_reference_inference() {
+        let d = deploy();
+        let ds = Dataset::generate(12, 3, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        let got = d.infer_batch(&images).unwrap();
+        for (img, logits) in images.iter().zip(&got) {
+            let want = crate::cnn::infer::infer(&d.model, &d.weights, img);
+            assert_eq!(logits, &want);
+        }
+    }
+
+    #[test]
+    fn order_preserved() {
+        let d = deploy();
+        let ds = Dataset::generate(8, 5, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        let a = d.infer_batch(&images).unwrap();
+        let b: Vec<Vec<i64>> =
+            images.iter().map(|i| d.infer_one(i).unwrap()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ingress_guards() {
+        let d = deploy();
+        assert!(matches!(d.infer_one(&[0; 5]), Err(DeployError::BadImage { .. })));
+        let mut img = vec![0i64; 256];
+        img[7] = -128;
+        assert!(matches!(d.infer_one(&img), Err(DeployError::AsymmetricInput(-128))));
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let d = deploy();
+        let ds = Dataset::generate(4, 1, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        d.infer_batch(&images).unwrap();
+        d.infer_batch(&images).unwrap();
+        let snap = d.metrics.snapshot();
+        assert_eq!(snap.images, 8);
+        assert_eq!(snap.batches, 2);
+        assert!(snap.wall_secs > 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! RAMB18 — simple-dual-port block RAM.
+//!
+//! Used by the streaming front-end as line buffers (a K-1-row delay for
+//! the sliding 3×3 window). Modelled as a synchronous write / registered
+//! read memory of 18 Kb organized `depth × width` with the standard
+//! aspect ratios.
+
+/// Legal RAMB18 aspect ratios (width, depth) in SDP mode.
+pub const ASPECTS: &[(u32, u32)] = &[(1, 16384), (2, 8192), (4, 4096), (9, 2048), (18, 1024), (36, 512)];
+
+/// Pick the shallowest aspect whose width covers `width` and depth covers
+/// `depth`; returns the number of RAMB18s needed (widths can gang).
+pub fn ramb18_count(width: u32, depth: u32) -> u32 {
+    assert!(width > 0 && depth > 0);
+    // Use widest aspect (36) unless depth forces deeper/narrower config.
+    let mut best = u32::MAX;
+    for &(w, d) in ASPECTS {
+        let per_row = width.div_ceil(w);
+        let rows = depth.div_ceil(d);
+        best = best.min(per_row * rows);
+    }
+    best
+}
+
+/// Behavioral simple-dual-port RAM with registered read (1-cycle latency).
+#[derive(Debug, Clone)]
+pub struct Ramb18 {
+    pub width: u32,
+    data: Vec<u64>,
+    rd_reg: u64,
+}
+
+impl Ramb18 {
+    pub fn new(width: u32, depth: usize) -> Self {
+        assert!(width <= 36, "RAMB18 max SDP width is 36");
+        Ramb18 { width, data: vec![0; depth], rd_reg: 0 }
+    }
+
+    /// One clock: optional write, then registered read of `raddr`
+    /// (read-old semantics on collision, matching SDP defaults).
+    pub fn clock(&mut self, waddr: Option<(usize, u64)>, raddr: usize) -> u64 {
+        let out = self.rd_reg;
+        self.rd_reg = self.data[raddr] & mask(self.width);
+        if let Some((addr, val)) = waddr {
+            self.data[addr] = val & mask(self.width);
+        }
+        out
+    }
+
+    /// Current read register (valid one cycle after the address).
+    pub fn rd(&self) -> u64 {
+        self.rd_reg
+    }
+}
+
+fn mask(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(ramb18_count(8, 512), 1); // fits 9x2048 or 18x1024
+        assert_eq!(ramb18_count(36, 512), 1);
+        assert_eq!(ramb18_count(36, 1024), 2);
+        assert_eq!(ramb18_count(72, 512), 2);
+        assert_eq!(ramb18_count(8, 2048), 1);
+        assert_eq!(ramb18_count(8, 4096), 2);
+    }
+
+    #[test]
+    fn registered_read_latency() {
+        let mut m = Ramb18::new(8, 16);
+        m.clock(Some((3, 0xAB)), 0);
+        m.clock(None, 3); // read issued
+        let v = m.clock(None, 0); // value appears on the NEXT edge's output
+        assert_eq!(v, 0xAB);
+    }
+
+    #[test]
+    fn read_old_on_collision() {
+        let mut m = Ramb18::new(8, 8);
+        m.clock(Some((1, 0x11)), 1);
+        // Same-cycle read addr 1 + write addr 1: read sees OLD data.
+        m.clock(Some((1, 0x22)), 1);
+        let v = m.clock(None, 1);
+        assert_eq!(v, 0x11);
+        let v2 = m.clock(None, 1);
+        assert_eq!(v2, 0x22);
+    }
+
+    #[test]
+    fn width_mask() {
+        let mut m = Ramb18::new(4, 4);
+        m.clock(Some((0, 0xFF)), 0);
+        m.clock(None, 0);
+        assert_eq!(m.clock(None, 0), 0x0F);
+    }
+}

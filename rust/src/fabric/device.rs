@@ -1,0 +1,175 @@
+//! FPGA part catalog — the resource inventories the planner budgets
+//! against.
+//!
+//! The paper's board is the ZCU104 (XCZU7EV-2FFVC1156). The catalog also
+//! carries smaller and larger Zynq UltraScale+ parts so the adaptation
+//! sweeps (Table III / Sweep-A in DESIGN.md) can show how the IP mix
+//! shifts across resource envelopes. Inventories follow the public Xilinx
+//! product tables. Custom parts can be loaded from JSON for what-if
+//! studies.
+
+use crate::util::json::{Json, JsonError};
+
+/// Resource inventory of one part.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: String,
+    pub part: String,
+    pub luts: u64,
+    pub ffs: u64,
+    pub clbs: u64,
+    pub dsps: u64,
+    pub bram18: u64,
+    /// Device static power at nominal conditions (W) — dominates the
+    /// paper's Table II power column.
+    pub static_w: f64,
+    /// Speed-grade derating multiplier applied to the delay model
+    /// (1.0 = the -2 grade the ZCU104 ships).
+    pub speed_derate: f64,
+}
+
+impl Device {
+    /// Fraction of DSPs a `need` would consume (for utilization reports).
+    pub fn dsp_util(&self, need: u64) -> f64 {
+        need as f64 / self.dsps.max(1) as f64
+    }
+
+    pub fn lut_util(&self, need: u64) -> f64 {
+        need as f64 / self.luts.max(1) as f64
+    }
+
+    /// Serialize for config round-trips.
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj([
+            ("name", self.name.as_str().into()),
+            ("part", self.part.as_str().into()),
+            ("luts", self.luts.into()),
+            ("ffs", self.ffs.into()),
+            ("clbs", self.clbs.into()),
+            ("dsps", self.dsps.into()),
+            ("bram18", self.bram18.into()),
+            ("static_w", Json::Num(self.static_w)),
+            ("speed_derate", Json::Num(self.speed_derate)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Device, JsonError> {
+        Ok(Device {
+            name: v.get("name")?.as_str()?.to_string(),
+            part: v.get("part")?.as_str()?.to_string(),
+            luts: v.get("luts")?.as_u64()?,
+            ffs: v.get("ffs")?.as_u64()?,
+            clbs: v.get("clbs")?.as_u64()?,
+            dsps: v.get("dsps")?.as_u64()?,
+            bram18: v.get("bram18")?.as_u64()?,
+            static_w: v.get("static_w")?.as_f64()?,
+            speed_derate: v.get_opt("speed_derate")?.map(|j| j.as_f64()).transpose()?.unwrap_or(1.0),
+        })
+    }
+}
+
+fn dev(
+    name: &str,
+    part: &str,
+    luts: u64,
+    dsps: u64,
+    bram18: u64,
+    static_w: f64,
+    speed_derate: f64,
+) -> Device {
+    Device {
+        name: name.into(),
+        part: part.into(),
+        luts,
+        ffs: luts * 2,
+        clbs: luts / 8, // UltraScale+ CLB = 8 LUT6 + 16 FF
+        dsps,
+        bram18,
+        static_w,
+        speed_derate,
+    }
+}
+
+/// Built-in catalog. First entry is the paper's board.
+pub fn catalog() -> Vec<Device> {
+    vec![
+        // The paper's testbed: ZCU104 carries an XCZU7EV-2FFVC1156.
+        dev("zcu104", "xczu7ev-2ffvc1156", 230_400, 1_728, 624, 0.593, 1.0),
+        // Smaller siblings for the adaptation sweep.
+        dev("zu2cg", "xczu2cg-1sbva484", 47_232, 240, 300, 0.28, 1.12),
+        dev("zu3eg", "xczu3eg-1sbva484", 70_560, 360, 432, 0.32, 1.12),
+        dev("zu5ev", "xczu5ev-1sfvc784", 117_120, 1_248, 288, 0.45, 1.12),
+        // Larger sibling.
+        dev("zu9eg", "xczu9eg-2ffvb1156", 274_080, 2_520, 1_824, 0.72, 1.0),
+        // A deliberately DSP-starved profile (e.g. DSPs consumed by other
+        // tenants of the shell) to exercise Conv_1 selection; the paper's
+        // motivation — "suitable for FPGAs with limited DSPs".
+        dev("edge-nodsp", "hypothetical-dsp-starved", 20_000, 4, 60, 0.15, 1.25),
+    ]
+}
+
+/// Look up a part by name (case-insensitive).
+pub fn by_name(name: &str) -> Option<Device> {
+    let lower = name.to_ascii_lowercase();
+    catalog().into_iter().find(|d| d.name == lower || d.part == lower)
+}
+
+/// Load extra devices from a JSON array file (config-system entry point).
+pub fn load_catalog(json_text: &str) -> Result<Vec<Device>, JsonError> {
+    Json::parse(json_text)?.as_arr()?.iter().map(Device::from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu104_inventory() {
+        let d = by_name("zcu104").unwrap();
+        assert_eq!(d.luts, 230_400);
+        assert_eq!(d.dsps, 1_728);
+        assert_eq!(d.clbs, 28_800);
+        assert!((d.static_w - 0.593).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup_by_part_number() {
+        assert!(by_name("XCZU7EV-2FFVC1156").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn catalog_spans_resource_range() {
+        let c = catalog();
+        let min_dsp = c.iter().map(|d| d.dsps).min().unwrap();
+        let max_dsp = c.iter().map(|d| d.dsps).max().unwrap();
+        assert!(min_dsp < 10, "need a DSP-starved part for Conv_1 scenarios");
+        assert!(max_dsp > 2000, "need a DSP-rich part for Conv_4 scenarios");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for d in catalog() {
+            let j = d.to_json();
+            let back = Device::from_json(&j).unwrap();
+            assert_eq!(back, d);
+        }
+    }
+
+    #[test]
+    fn load_catalog_from_text() {
+        let text = r#"[{"name":"custom","part":"x1","luts":1000,"ffs":2000,"clbs":125,
+                        "dsps":8,"bram18":4,"static_w":0.1,"speed_derate":1.3}]"#;
+        let devs = load_catalog(text).unwrap();
+        assert_eq!(devs.len(), 1);
+        assert_eq!(devs[0].dsps, 8);
+        assert!((devs[0].speed_derate - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_math() {
+        let d = by_name("zcu104").unwrap();
+        assert!((d.dsp_util(1728) - 1.0).abs() < 1e-12);
+        assert!((d.lut_util(2304) - 0.01).abs() < 1e-12);
+    }
+}

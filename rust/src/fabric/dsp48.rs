@@ -1,0 +1,362 @@
+//! DSP48E2 slice model (UltraScale+).
+//!
+//! Models the subset the convolution IPs configure: the 27-bit pre-adder
+//! (`AD = D + A`), the 27×18 signed multiplier, the 48-bit ALU with the
+//! `Z` multiplexer (0 / P / C) for accumulate-or-load, and the pipeline
+//! registers (`AREG/BREG/DREG`, `ADREG`, `MREG`, `PREG`). All datapaths
+//! wrap in two's complement at their port widths — saturation, when the
+//! IPs need it, is fabric logic *around* the slice, as on real hardware.
+//!
+//! `Conv_2` uses one slice in MACC mode (`Z=P`); `Conv_3` feeds packed
+//! dual-pixel operands through the same mode (see [`crate::fixed::pack`]);
+//! `Conv_4` instantiates two slices side by side.
+
+use crate::fixed::pack::sign_extend;
+
+/// Z-multiplexer selection — what the ALU adds the product to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ZMux {
+    /// `P' = M` — start a fresh accumulation.
+    Zero,
+    /// `P' = P + M` — multiply-accumulate.
+    P,
+    /// `P' = C + M` — load C (bias/rounding constant injection).
+    C,
+}
+
+/// Static configuration (pipeline depth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Config {
+    /// Input registers on A/B/D.
+    pub input_reg: bool,
+    /// Pre-adder output register.
+    pub adreg: bool,
+    /// Multiplier output register.
+    pub mreg: bool,
+    /// Accumulator/output register (always true in our IPs).
+    pub preg: bool,
+    /// Use the D-port pre-adder (`AD = D + A`); otherwise `AD = A`.
+    pub use_dport: bool,
+}
+
+impl Config {
+    /// Fully pipelined MACC configuration — what the IP generators use for
+    /// 200 MHz closure (matches Vivado guidance: all pipeline stages on).
+    pub fn full_macc(use_dport: bool) -> Config {
+        Config { input_reg: true, adreg: use_dport, mreg: true, preg: true, use_dport }
+    }
+
+    /// Cycles from operand presentation to P reflecting them.
+    pub fn latency(&self) -> u32 {
+        self.input_reg as u32 + self.adreg as u32 + self.mreg as u32 + self.preg as u32
+    }
+}
+
+/// Per-cycle inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct Inputs {
+    pub a: i64,
+    pub b: i64,
+    pub c: i64,
+    pub d: i64,
+    pub zmux: ZMux,
+    /// Clock-enable for the whole slice (stalls hold state).
+    pub ce: bool,
+}
+
+impl Inputs {
+    pub fn mac(a: i64, b: i64, first: bool) -> Inputs {
+        Inputs { a, b, c: 0, d: 0, zmux: if first { ZMux::Zero } else { ZMux::P }, ce: true }
+    }
+}
+
+/// Dynamic state: pipeline registers.
+#[derive(Debug, Clone)]
+pub struct Dsp48e2 {
+    pub cfg: Config,
+    a_r: i64,
+    b_r: i64,
+    d_r: i64,
+    z_r: ZMux,
+    ad_r: i64,
+    b2_r: i64,
+    z2_r: ZMux,
+    c_r: i64,
+    m_r: i64,
+    zm_r: ZMux,
+    cm_r: i64,
+    p: i64,
+}
+
+/// Port widths.
+pub const A_BITS: u32 = 27;
+pub const B_BITS: u32 = 18;
+pub const C_BITS: u32 = 48;
+pub const D_BITS: u32 = 27;
+pub const P_BITS: u32 = 48;
+
+fn wrap_to(v: i64, bits: u32) -> i64 {
+    sign_extend(v & mask(bits), bits)
+}
+
+fn mask(bits: u32) -> i64 {
+    if bits >= 64 {
+        -1
+    } else {
+        (1i64 << bits) - 1
+    }
+}
+
+impl Dsp48e2 {
+    pub fn new(cfg: Config) -> Self {
+        Dsp48e2 {
+            cfg,
+            a_r: 0,
+            b_r: 0,
+            d_r: 0,
+            z_r: ZMux::Zero,
+            ad_r: 0,
+            b2_r: 0,
+            z2_r: ZMux::Zero,
+            c_r: 0,
+            m_r: 0,
+            zm_r: ZMux::Zero,
+            cm_r: 0,
+            p: 0,
+        }
+    }
+
+    /// Current registered output.
+    pub fn p(&self) -> i64 {
+        self.p
+    }
+
+    /// Advance one clock. Returns the post-edge P value.
+    pub fn clock(&mut self, inp: Inputs) -> i64 {
+        if !inp.ce {
+            return self.p;
+        }
+        // Wrap inputs at port widths (hardware truncation).
+        let a_in = wrap_to(inp.a, A_BITS);
+        let b_in = wrap_to(inp.b, B_BITS);
+        let c_in = wrap_to(inp.c, C_BITS);
+        let d_in = wrap_to(inp.d, D_BITS);
+
+        // Stage values *feeding* each register this cycle (pre-edge).
+        let (a_s, b_s, d_s, z_s) = if self.cfg.input_reg {
+            (self.a_r, self.b_r, self.d_r, self.z_r)
+        } else {
+            (a_in, b_in, d_in, inp.zmux)
+        };
+        let ad_comb = if self.cfg.use_dport { wrap_to(d_s + a_s, D_BITS) } else { a_s };
+        let (ad_s, b2_s, z2_s) =
+            if self.cfg.adreg { (self.ad_r, self.b2_r, self.z2_r) } else { (ad_comb, b_s, z_s) };
+        let m_comb = ad_s * b2_s; // 27x18 -> 45 bits, fits i64
+        let (m_s, zm_s, cm_s) =
+            if self.cfg.mreg { (self.m_r, self.zm_r, self.cm_r) } else { (m_comb, z2_s, self.c_pipe(c_in)) };
+        let z_val = match zm_s {
+            ZMux::Zero => 0,
+            ZMux::P => self.p,
+            ZMux::C => cm_s,
+        };
+        let p_next = wrap_to(z_val + m_s, P_BITS);
+
+        // Commit the edge (reverse order irrelevant now that stage inputs
+        // are snapshotted above).
+        if self.cfg.preg {
+            self.p = p_next;
+        } else {
+            self.p = p_next; // modelled identically; PREG=0 unused by IPs
+        }
+        if self.cfg.mreg {
+            self.m_r = m_comb;
+            self.zm_r = z2_s;
+            self.cm_r = self.c_pipe(c_in);
+        }
+        if self.cfg.adreg {
+            self.ad_r = ad_comb;
+            self.b2_r = b_s;
+            self.z2_r = z_s;
+        }
+        if self.cfg.input_reg {
+            self.a_r = a_in;
+            self.b_r = b_in;
+            self.d_r = d_in;
+            self.z_r = inp.zmux;
+            self.c_r = c_in;
+        }
+        self.p
+    }
+
+    fn c_pipe(&self, c_in: i64) -> i64 {
+        if self.cfg.input_reg {
+            self.c_r
+        } else {
+            c_in
+        }
+    }
+
+    /// Reset all registers (RSTP/RSTM/... asserted together).
+    pub fn reset(&mut self) {
+        let cfg = self.cfg;
+        *self = Dsp48e2::new(cfg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Drive a MACC over `pairs`, flushing the pipeline, and return the
+    /// final accumulator.
+    fn run_macc(dsp: &mut Dsp48e2, pairs: &[(i64, i64)]) -> i64 {
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            dsp.clock(Inputs::mac(a, b, i == 0));
+        }
+        // Flush: hold ZMux::P with zero operands for `latency` cycles.
+        for _ in 0..dsp.cfg.latency() {
+            dsp.clock(Inputs { a: 0, b: 0, c: 0, d: 0, zmux: ZMux::P, ce: true });
+        }
+        dsp.p()
+    }
+
+    #[test]
+    fn single_multiply_zero_mode() {
+        let mut d = Dsp48e2::new(Config::full_macc(false));
+        let p = run_macc(&mut d, &[(123, -45)]);
+        assert_eq!(p, 123 * -45);
+    }
+
+    #[test]
+    fn macc_accumulates_window() {
+        let mut d = Dsp48e2::new(Config::full_macc(false));
+        let pairs: Vec<(i64, i64)> = (1..=9).map(|i| (i, 10 - i)).collect();
+        let want: i64 = pairs.iter().map(|&(a, b)| a * b).sum();
+        assert_eq!(run_macc(&mut d, &pairs), want);
+    }
+
+    #[test]
+    fn latency_matches_config() {
+        assert_eq!(Config::full_macc(false).latency(), 3);
+        assert_eq!(Config::full_macc(true).latency(), 4);
+        let comb = Config { input_reg: false, adreg: false, mreg: false, preg: true, use_dport: false };
+        assert_eq!(comb.latency(), 1);
+    }
+
+    #[test]
+    fn preadder_sums_d_and_a() {
+        let cfg = Config::full_macc(true);
+        let mut d = Dsp48e2::new(cfg);
+        // (D + A) * B = (100 + 23) * 7
+        for i in 0..1 + cfg.latency() {
+            d.clock(Inputs {
+                a: 23,
+                b: 7,
+                c: 0,
+                d: 100,
+                zmux: if i == 0 { ZMux::Zero } else { ZMux::P },
+                ce: true,
+            });
+        }
+        // After first op retires, further flushes add 123*7 again unless
+        // operands are zeroed — so check directly at retirement:
+        let mut d2 = Dsp48e2::new(cfg);
+        d2.clock(Inputs { a: 23, b: 7, c: 0, d: 100, zmux: ZMux::Zero, ce: true });
+        for _ in 0..cfg.latency() {
+            d2.clock(Inputs { a: 0, b: 0, c: 0, d: 0, zmux: ZMux::P, ce: true });
+        }
+        assert_eq!(d2.p(), 123 * 7);
+    }
+
+    #[test]
+    fn c_load_mode() {
+        // P = C + M with C used as a rounding/bias constant.
+        let cfg = Config::full_macc(false);
+        let mut d = Dsp48e2::new(cfg);
+        d.clock(Inputs { a: 5, b: 6, c: 1000, d: 0, zmux: ZMux::C, ce: true });
+        // Flush in accumulate mode with zero operands so the retired C+M
+        // result is preserved (flushing in C mode would reload C).
+        for _ in 0..cfg.latency() {
+            d.clock(Inputs { a: 0, b: 0, c: 0, d: 0, zmux: ZMux::P, ce: true });
+        }
+        assert_eq!(d.p(), 1030);
+    }
+
+    #[test]
+    fn ce_stalls_hold_state() {
+        let cfg = Config::full_macc(false);
+        let mut d = Dsp48e2::new(cfg);
+        d.clock(Inputs::mac(7, 8, true));
+        let snap = d.clone();
+        for _ in 0..5 {
+            d.clock(Inputs { a: 99, b: 99, c: 0, d: 0, zmux: ZMux::P, ce: false });
+        }
+        assert_eq!(d.p(), snap.p());
+        // Resume: pipeline continues as if no stall occurred.
+        for _ in 0..cfg.latency() {
+            d.clock(Inputs { a: 0, b: 0, c: 0, d: 0, zmux: ZMux::P, ce: true });
+        }
+        assert_eq!(d.p(), 56);
+    }
+
+    #[test]
+    fn port_wrap_at_18_bits() {
+        // B port wraps two's-complement at 18 bits: 2^17 -> -2^17.
+        let mut d = Dsp48e2::new(Config::full_macc(false));
+        let p = run_macc(&mut d, &[(1, 1 << 17)]);
+        assert_eq!(p, -(1 << 17));
+    }
+
+    #[test]
+    fn accumulator_wraps_at_48_bits() {
+        let cfg = Config { input_reg: false, adreg: false, mreg: false, preg: true, use_dport: false };
+        let mut d = Dsp48e2::new(cfg);
+        // Repeatedly add the max product until wrap.
+        let big = (1i64 << 26) - 1;
+        let bigb = (1i64 << 17) - 1;
+        let step = big * bigb;
+        let mut model = 0i64;
+        let mut first = true;
+        for _ in 0..3000 {
+            d.clock(Inputs { a: big, b: bigb, c: 0, d: 0, zmux: if first { ZMux::Zero } else { ZMux::P }, ce: true });
+            model = if first { step } else { super::wrap_to(model + step, 48) };
+            first = false;
+        }
+        assert_eq!(d.p(), model);
+        assert!(model.abs() < (1i64 << 47));
+    }
+
+    #[test]
+    fn random_macc_vs_integer_model() {
+        let mut rng = Rng::new(42);
+        for trial in 0..200 {
+            let n = 1 + rng.index(12);
+            let pairs: Vec<(i64, i64)> =
+                (0..n).map(|_| (rng.signed_bits(27.min(20)), rng.signed_bits(18))).collect();
+            let want: i64 = pairs.iter().map(|&(a, b)| a * b).sum();
+            let mut d = Dsp48e2::new(Config::full_macc(false));
+            assert_eq!(run_macc(&mut d, &pairs), want, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn conv3_packed_macc_through_dsp() {
+        // End-to-end: the fixed::pack math flowing through the slice model.
+        use crate::fixed::pack;
+        let packing = pack::feasible(8, 8, 9).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let a1: Vec<i64> = (0..9).map(|_| packing.clamp_high(rng.signed_bits(8))).collect();
+            let a2: Vec<i64> = (0..9).map(|_| rng.signed_bits(8)).collect();
+            let b: Vec<i64> = (0..9).map(|_| rng.signed_bits(8)).collect();
+            let mut d = Dsp48e2::new(Config::full_macc(false));
+            let pairs: Vec<(i64, i64)> =
+                (0..9).map(|i| (packing.pack(a1[i], a2[i]), b[i])).collect();
+            let acc = run_macc(&mut d, &pairs);
+            let (h, l) = packing.split(acc);
+            assert_eq!(h, (0..9).map(|i| a1[i] * b[i]).sum::<i64>());
+            assert_eq!(l, (0..9).map(|i| a2[i] * b[i]).sum::<i64>());
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! FDRE — D flip-flop with clock-enable and synchronous reset.
+//!
+//! The only sequential bit-element the IP generators use. Semantics on the
+//! rising clock edge: `R` (sync reset) wins, then `CE` gates the load.
+
+/// One FDRE evaluation step. Returns the next Q given current inputs.
+#[inline]
+pub fn fdre_next(q: bool, d: bool, ce: bool, r: bool) -> bool {
+    if r {
+        false
+    } else if ce {
+        d
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_wins() {
+        assert!(!fdre_next(true, true, true, true));
+        assert!(!fdre_next(false, true, false, true));
+    }
+
+    #[test]
+    fn ce_gates() {
+        assert!(fdre_next(false, true, true, false));
+        assert!(!fdre_next(false, true, false, false)); // holds
+        assert!(fdre_next(true, false, false, false)); // holds
+    }
+
+    #[test]
+    fn load() {
+        assert!(!fdre_next(true, false, true, false));
+    }
+}

@@ -1,0 +1,159 @@
+//! LUT6 function generator.
+//!
+//! An UltraScale+ LUT6 evaluates any boolean function of up to six inputs
+//! from a 64-bit truth table (`INIT`). Index = `{i5,i4,i3,i2,i1,i0}` as an
+//! integer; output = bit `INIT[index]`. Narrower LUTs (LUT2..LUT5) are the
+//! same primitive with unused high inputs tied off — the synthesis census
+//! still counts one LUT each, matching Vivado's report.
+
+/// A LUT with `k ≤ 6` used inputs and a truth-table `init`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lut {
+    pub k: u8,
+    pub init: u64,
+}
+
+impl Lut {
+    pub fn new(k: u8, init: u64) -> Self {
+        assert!((1..=6).contains(&k), "LUT arity {k}");
+        if k < 6 {
+            let used = 1u128 << (1 << k);
+            assert!(
+                (init as u128) < used,
+                "INIT {init:#x} wider than 2^{} bits",
+                1 << k
+            );
+        }
+        Lut { k, init }
+    }
+
+    /// Evaluate against packed input bits (bit i of `inputs` = input i).
+    pub fn eval(&self, inputs: u64) -> bool {
+        debug_assert!(inputs < (1 << self.k), "input bits exceed arity");
+        (self.init >> inputs) & 1 == 1
+    }
+
+    // ---- Common generator functions used by the IP netlist builders ----
+
+    /// 2-input XOR (half-adder sum).
+    pub fn xor2() -> Lut {
+        Lut::new(2, 0b0110)
+    }
+
+    /// 3-input XOR (full-adder sum, carry-chain S input).
+    pub fn xor3() -> Lut {
+        Lut::new(3, 0b1001_0110)
+    }
+
+    /// 2-input AND (partial-product bit).
+    pub fn and2() -> Lut {
+        Lut::new(2, 0b1000)
+    }
+
+    /// 2-input MUX select between i0 (sel=0) and i1 (sel=1); sel is i2.
+    pub fn mux2() -> Lut {
+        // index = {sel, i1, i0}
+        // sel=0 -> out=i0: indices 000->0, 001->1, 010->0, 011->1
+        // sel=1 -> out=i1: 100->0, 101->0, 110->1, 111->1
+        Lut::new(3, 0b1100_1010)
+    }
+
+    /// Majority of 3 (full-adder carry).
+    pub fn maj3() -> Lut {
+        Lut::new(3, 0b1110_1000)
+    }
+
+    /// Inverter.
+    pub fn not1() -> Lut {
+        Lut::new(1, 0b01)
+    }
+
+    /// Buffer/identity (used for port isolation registers' D pins).
+    pub fn buf1() -> Lut {
+        Lut::new(1, 0b10)
+    }
+
+    /// AND of (i0, !i1) — gating with an inverted enable.
+    pub fn and_not() -> Lut {
+        Lut::new(2, 0b0010)
+    }
+
+    /// Arbitrary function from an evaluator closure over `k` inputs.
+    pub fn from_fn(k: u8, f: impl Fn(u64) -> bool) -> Lut {
+        assert!((1..=6).contains(&k));
+        let mut init = 0u64;
+        for idx in 0..(1u64 << k) {
+            if f(idx) {
+                init |= 1 << idx;
+            }
+        }
+        Lut::new(k, init)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor2_truth() {
+        let l = Lut::xor2();
+        assert!(!l.eval(0b00));
+        assert!(l.eval(0b01));
+        assert!(l.eval(0b10));
+        assert!(!l.eval(0b11));
+    }
+
+    #[test]
+    fn xor3_maj3_full_adder() {
+        let s = Lut::xor3();
+        let c = Lut::maj3();
+        for bits in 0..8u64 {
+            let a = bits & 1;
+            let b = (bits >> 1) & 1;
+            let ci = (bits >> 2) & 1;
+            let sum = a + b + ci;
+            assert_eq!(s.eval(bits) as u64, sum & 1, "sum bits={bits:03b}");
+            assert_eq!(c.eval(bits) as u64, sum >> 1, "carry bits={bits:03b}");
+        }
+    }
+
+    #[test]
+    fn mux2_selects() {
+        let m = Lut::mux2();
+        // {sel,i1,i0}
+        assert!(!m.eval(0b000)); // sel=0 -> i0=0
+        assert!(m.eval(0b001)); // sel=0 -> i0=1
+        assert!(!m.eval(0b101)); // sel=1 -> i1=0
+        assert!(m.eval(0b110)); // sel=1 -> i1=1
+    }
+
+    #[test]
+    fn from_fn_matches_closure() {
+        let f = |idx: u64| (idx.count_ones() % 2) == 1; // parity of 5 bits
+        let l = Lut::from_fn(5, f);
+        for idx in 0..32u64 {
+            assert_eq!(l.eval(idx), f(idx));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "LUT arity")]
+    fn arity_checked() {
+        Lut::new(7, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "wider")]
+    fn init_width_checked() {
+        Lut::new(2, 0x1F); // 2-input LUT has a 4-bit INIT
+    }
+
+    #[test]
+    fn not_buf() {
+        assert!(Lut::not1().eval(0));
+        assert!(!Lut::not1().eval(1));
+        assert!(!Lut::buf1().eval(0));
+        assert!(Lut::buf1().eval(1));
+    }
+}

@@ -1,0 +1,47 @@
+//! UltraScale+ fabric primitive models and the device catalog.
+//!
+//! These are the "atoms" the IP generators instantiate and the synthesis
+//! flow counts — the same post-mapping primitives a structural VHDL design
+//! pins down in Vivado:
+//!
+//! * [`lut::Lut`] — LUT6 truth-table function generator.
+//! * [`ff`] — FDRE D flip-flop semantics.
+//! * [`carry::Carry8`] — the CLB carry chain (adders/subtractors).
+//! * [`dsp48::Dsp48e2`] — the DSP48E2 slice: pre-adder, 27×18 multiplier,
+//!   48-bit ALU/accumulator, pipeline registers.
+//! * [`bram`] — RAMB18 simple-dual-port memory (line buffers).
+//! * [`device`] — the part catalog (ZCU104's XCZU7EV and siblings) with
+//!   resource inventories the planner budgets against.
+//!
+//! Behavioral evaluation lives here; *timing* numbers live in
+//! [`crate::sta::delay_model`] and *power* numbers in [`crate::power`] so
+//! that calibration is centralized.
+
+pub mod bram;
+pub mod carry;
+pub mod device;
+pub mod dsp48;
+pub mod ff;
+pub mod lut;
+
+/// Kinds of fabric primitives — the census axis for resource reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Prim {
+    Lut,
+    Ff,
+    Carry8,
+    Dsp48e2,
+    Ramb18,
+}
+
+impl Prim {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Prim::Lut => "LUT",
+            Prim::Ff => "FF",
+            Prim::Carry8 => "CARRY8",
+            Prim::Dsp48e2 => "DSP48E2",
+            Prim::Ramb18 => "RAMB18",
+        }
+    }
+}

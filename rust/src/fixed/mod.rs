@@ -1,0 +1,262 @@
+//! Fixed-point arithmetic contract shared by every layer of the stack.
+//!
+//! The paper's IPs use signed fixed-point operands ("8-bit fixed-point
+//! data"), int-width-parameterized multipliers, wide accumulators, and a
+//! requantization step (arithmetic right shift with round-to-nearest-even
+//! optional, then saturation) when an accumulator is narrowed back to the
+//! activation width. The Pallas kernels (`python/compile/kernels/`), the
+//! behavioral IP models ([`crate::ips`]), and the netlist simulator must
+//! agree bit-for-bit on these semantics; this module is the single source
+//! of truth on the Rust side and `ref.py` mirrors it in Python.
+
+pub mod pack;
+
+/// A signed fixed-point *format*: `bits` total width (two's complement),
+/// `frac` fractional bits. The IPs treat values as integers; `frac` only
+/// matters for human-readable scaling and requantization shift amounts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Format {
+    pub bits: u32,
+    pub frac: u32,
+}
+
+impl Format {
+    pub const fn new(bits: u32, frac: u32) -> Self {
+        assert!(bits >= 2 && bits <= 48);
+        assert!(frac < bits);
+        Format { bits, frac }
+    }
+
+    /// Q7.0 — the paper's experimental operand format ("8-bit fixed-point").
+    pub const Q8: Format = Format::new(8, 0);
+
+    /// Smallest representable value.
+    pub const fn min(&self) -> i64 {
+        -(1i64 << (self.bits - 1))
+    }
+
+    /// Largest representable value.
+    pub const fn max(&self) -> i64 {
+        (1i64 << (self.bits - 1)) - 1
+    }
+
+    /// Does `v` fit this format?
+    pub fn contains(&self, v: i64) -> bool {
+        v >= self.min() && v <= self.max()
+    }
+
+    /// Real value of the integer representation.
+    pub fn to_real(&self, v: i64) -> f64 {
+        v as f64 / (1u64 << self.frac) as f64
+    }
+
+    /// Quantize a real value into this format (round-to-nearest, ties away
+    /// from zero, then saturate) — used when importing float weights.
+    pub fn quantize(&self, x: f64) -> i64 {
+        let scaled = x * (1u64 << self.frac) as f64;
+        let rounded = if scaled >= 0.0 { (scaled + 0.5).floor() } else { (scaled - 0.5).ceil() };
+        sat(rounded as i64, self.bits)
+    }
+}
+
+/// Saturate `v` into a signed `bits`-bit range.
+pub fn sat(v: i64, bits: u32) -> i64 {
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    v.clamp(lo, hi)
+}
+
+/// Wrap `v` into signed `bits`-bit two's complement (what a hardware
+/// register without saturation logic does).
+pub fn wrap(v: i64, bits: u32) -> i64 {
+    debug_assert!(bits >= 1 && bits <= 63);
+    let m = 1i64 << bits;
+    let r = v.rem_euclid(m);
+    if r >= m / 2 {
+        r - m
+    } else {
+        r
+    }
+}
+
+/// Rounding mode for requantization. The IPs implement `Truncate`
+/// (cheapest: drop LSBs) and `NearestEven` (one extra adder); the paper's
+/// "optimal performance" fixed-point claim maps to Truncate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Round {
+    /// Arithmetic shift right — floor division by 2^shift.
+    Truncate,
+    /// Round half to even (convergent rounding, DSP48E2 `RND` pattern).
+    NearestEven,
+}
+
+/// Requantize an accumulator: shift right by `shift` with rounding mode
+/// `round`, then saturate into `out_bits`.
+pub fn requantize(acc: i64, shift: u32, round: Round, out_bits: u32) -> i64 {
+    let shifted = match round {
+        Round::Truncate => acc >> shift,
+        Round::NearestEven => {
+            if shift == 0 {
+                acc
+            } else {
+                let floor = acc >> shift;
+                let rem = acc - (floor << shift);
+                let half = 1i64 << (shift - 1);
+                if rem > half || (rem == half && (floor & 1) == 1) {
+                    floor + 1
+                } else {
+                    floor
+                }
+            }
+        }
+    };
+    sat(shifted, out_bits)
+}
+
+/// Exact widening multiply of two sign-limited operands; panics in debug
+/// if operands exceed their declared widths (the IP contract).
+pub fn mul(a: i64, a_bits: u32, b: i64, b_bits: u32) -> i64 {
+    debug_assert!(Format::new(a_bits.max(2), 0).contains(a), "a={a} !fit {a_bits}b");
+    debug_assert!(Format::new(b_bits.max(2), 0).contains(b), "b={b} !fit {b_bits}b");
+    a * b
+}
+
+/// Accumulator width needed for `n` products of `a_bits`×`b_bits`
+/// operands without overflow: product needs `a+b-1` magnitude bits plus
+/// sign; summing `n` adds `ceil(log2 n)`.
+pub fn acc_bits(a_bits: u32, b_bits: u32, n_products: u32) -> u32 {
+    let prod = a_bits + b_bits; // includes sign growth for the -min*-min case
+    prod + ceil_log2(n_products.max(1))
+}
+
+/// Ceiling of log2 (0 for n<=1).
+pub fn ceil_log2(n: u32) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        32 - (n - 1).leading_zeros()
+    }
+}
+
+/// A 3×3 (generally K×K) dot product at full precision — the behavioral
+/// core of every conv IP. `data` and `coef` must both be `k*k` long.
+pub fn window_dot(data: &[i64], coef: &[i64]) -> i64 {
+    assert_eq!(data.len(), coef.len(), "window arity");
+    data.iter().zip(coef).map(|(&d, &c)| d * c).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn format_bounds() {
+        let q8 = Format::Q8;
+        assert_eq!(q8.min(), -128);
+        assert_eq!(q8.max(), 127);
+        assert!(q8.contains(-128) && q8.contains(127));
+        assert!(!q8.contains(128) && !q8.contains(-129));
+    }
+
+    #[test]
+    fn quantize_saturates_and_rounds() {
+        let q8 = Format::Q8;
+        assert_eq!(q8.quantize(1000.0), 127);
+        assert_eq!(q8.quantize(-1000.0), -128);
+        assert_eq!(q8.quantize(2.4), 2);
+        assert_eq!(q8.quantize(2.5), 3);
+        assert_eq!(q8.quantize(-2.5), -3);
+        let q44 = Format::new(8, 4);
+        assert_eq!(q44.quantize(1.25), 20); // 1.25 * 16
+        assert!((q44.to_real(20) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sat_and_wrap() {
+        assert_eq!(sat(200, 8), 127);
+        assert_eq!(sat(-200, 8), -128);
+        assert_eq!(sat(5, 8), 5);
+        assert_eq!(wrap(128, 8), -128);
+        assert_eq!(wrap(-129, 8), 127);
+        assert_eq!(wrap(255, 8), -1);
+        assert_eq!(wrap(5, 8), 5);
+    }
+
+    #[test]
+    fn requantize_truncate_is_floor_shift() {
+        assert_eq!(requantize(10, 2, Round::Truncate, 8), 2);
+        assert_eq!(requantize(-10, 2, Round::Truncate, 8), -3); // floor(-2.5)
+        assert_eq!(requantize(1 << 20, 4, Round::Truncate, 8), 127); // saturates
+    }
+
+    #[test]
+    fn requantize_nearest_even_ties() {
+        // 2.5 -> 2 (even), 3.5 -> 4 (even), with shift=1
+        assert_eq!(requantize(5, 1, Round::NearestEven, 8), 2);
+        assert_eq!(requantize(7, 1, Round::NearestEven, 8), 4);
+        assert_eq!(requantize(6, 1, Round::NearestEven, 8), 3); // exact
+        assert_eq!(requantize(-5, 1, Round::NearestEven, 8), -2); // -2.5 -> -2 (even)
+    }
+
+    #[test]
+    fn acc_bits_examples() {
+        // 8x8 products summed over a 3x3 window: 16 + ceil(log2 9) = 20
+        assert_eq!(acc_bits(8, 8, 9), 20);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    #[test]
+    fn window_dot_matches_manual() {
+        let d = [1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let c = [9, 8, 7, 6, 5, 4, 3, 2, 1];
+        assert_eq!(window_dot(&d, &c), 165);
+    }
+
+    #[test]
+    fn prop_requantize_bounds() {
+        forall("requantize in range", 500, |g| {
+            let acc = g.i64_in(-(1 << 30), 1 << 30);
+            let shift = g.i64_in(0, 12) as u32;
+            let mode = if g.bool() { Round::Truncate } else { Round::NearestEven };
+            let v = requantize(acc, shift, mode, 8);
+            if (-128..=127).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("acc={acc} shift={shift} -> {v}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_wrap_idempotent_on_fitting() {
+        forall("wrap fixpoint", 500, |g| {
+            let bits = g.i64_in(2, 16) as u32;
+            let v = g.signed_bits(bits);
+            if wrap(v, bits) == v {
+                Ok(())
+            } else {
+                Err(format!("v={v} bits={bits}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_acc_never_overflows_window() {
+        forall("window acc fits acc_bits", 300, |g| {
+            let k = *g.choose(&[1usize, 3, 5, 7]);
+            let bits = g.i64_in(2, 12) as u32;
+            let d = g.signed_vec(bits, k * k);
+            let c = g.signed_vec(bits, k * k);
+            let acc = window_dot(&d, &c);
+            let need = acc_bits(bits, bits, (k * k) as u32);
+            if Format::new(need.min(48), 0).contains(acc) {
+                Ok(())
+            } else {
+                Err(format!("k={k} bits={bits} acc={acc} need={need}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,299 @@
+//! Dual-multiply operand packing for a single DSP48E2 — the arithmetic
+//! heart of the paper's `Conv_3` IP.
+//!
+//! A DSP48E2 has one 27×18-bit signed multiplier. Two narrow multiplies
+//! `a1·b` and `a2·b` (same coefficient `b`, two different pixels — exactly
+//! a convolution applied at two horizontally adjacent output positions)
+//! can share it by packing the pixels into the wide 27-bit port:
+//!
+//! ```text
+//!   P += (a1 · 2^S + a2) · b   =   (a1·b) · 2^S + (a2·b)
+//! ```
+//!
+//! After K² accumulation steps, the low `S` bits of the 48-bit accumulator
+//! hold `Σ a2·b` (two's complement) and the remaining high bits hold
+//! `Σ a1·b` *provided the low lane never overflows into the high lane*.
+//! The lane-split condition is
+//!
+//! ```text
+//!   n · 2^(a_bits + b_bits - 2)  ≤  2^(S-1) − 1        (low lane fits)
+//!   S + a_bits                   ≤  27                 (port fits)
+//! ```
+//!
+//! For the paper's configuration — 8-bit operands, 3×3 kernel (n = 9) —
+//! the smallest safe shift is S = 19 and 19 + 8 = 27: the packing *just*
+//! fits the DSP48E2 port. Anything wider is infeasible, which is exactly
+//! why the paper notes `Conv_3` is "limited up to 8-bit operands, resulting
+//! in reduced precision". This module derives that limit rather than
+//! hard-coding it.
+
+use super::ceil_log2;
+
+/// DSP48E2 port widths (UltraScale+): the pre-adder output / A:D path is
+/// 27 bits, the B port 18 bits, the accumulator 48 bits.
+pub const DSP_A_BITS: u32 = 27;
+pub const DSP_B_BITS: u32 = 18;
+pub const DSP_P_BITS: u32 = 48;
+
+/// A feasible packing configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Packing {
+    /// Pixel operand width (signed bits).
+    pub a_bits: u32,
+    /// Coefficient width (signed bits).
+    pub b_bits: u32,
+    /// Number of accumulated products (K² for a K×K kernel).
+    pub n_taps: u32,
+    /// Lane shift S.
+    pub shift: u32,
+}
+
+/// Compute the minimal feasible lane shift for packing two `a_bits`-bit
+/// pixels against `b_bits`-bit coefficients accumulated over `n_taps`
+/// products. Returns `None` when no shift satisfies both the lane-overflow
+/// and the 27-bit-port constraints — the resource-driven planner uses this
+/// to rule `Conv_3` out for wide-operand layers.
+pub fn feasible(a_bits: u32, b_bits: u32, n_taps: u32) -> Option<Packing> {
+    assert!(a_bits >= 2 && b_bits >= 2 && n_taps >= 1);
+    // Low lane must hold sum of n products, each |p| ≤ 2^(a+b-2):
+    // need S ≥ a+b-1+ceil_log2(n) (signed field of S bits holds ±2^(S-1)).
+    let shift = a_bits + b_bits - 1 + ceil_log2(n_taps);
+    // High lane occupies bits [S, S+a_bits+b_bits-1+log2 n); the packed A
+    // operand needs S + a_bits bits and must fit the 27-bit port.
+    if shift + a_bits > DSP_A_BITS {
+        return None;
+    }
+    if b_bits > DSP_B_BITS {
+        return None;
+    }
+    // Accumulator: high lane top bit position must fit 48.
+    if shift + a_bits + b_bits - 1 + ceil_log2(n_taps) > DSP_P_BITS {
+        return None;
+    }
+    Some(Packing { a_bits, b_bits, n_taps, shift })
+}
+
+/// Maximum operand width (a_bits == b_bits) packable for a K×K kernel.
+/// For k = 3 this returns 8 — the paper's Table I limit for `Conv_3`.
+pub fn max_symmetric_bits(k: u32) -> u32 {
+    let n = k * k;
+    let mut best = 0;
+    for w in 2..=DSP_B_BITS {
+        if feasible(w, w, n).is_some() {
+            best = w;
+        }
+    }
+    best
+}
+
+impl Packing {
+    /// Does this configuration need the high-lane pixel clamped to
+    /// `min+1`? When `S + a_bits == 27` the packed value
+    /// `a1·2^S + a2` overflows the 27-bit port for `a1 = −2^(w−1)` with a
+    /// negative `a2` (it exceeds −2^26 by `|a2|`). The standard INT8
+    /// packing technique restricts the operand range by one code to avoid
+    /// this corner — the concrete mechanism behind the paper's `Conv_3`
+    /// "reduced precision" note.
+    pub fn needs_high_clamp(&self) -> bool {
+        self.shift + self.a_bits == DSP_A_BITS
+    }
+
+    /// Clamp a high-lane pixel per [`Packing::needs_high_clamp`].
+    pub fn clamp_high(&self, a1: i64) -> i64 {
+        let min = -(1i64 << (self.a_bits - 1));
+        if self.needs_high_clamp() && a1 == min {
+            min + 1
+        } else {
+            a1
+        }
+    }
+
+    /// Pack two pixel operands into the wide port value. The caller must
+    /// have applied [`Packing::clamp_high`] to `a1`.
+    pub fn pack(&self, a1: i64, a2: i64) -> i64 {
+        debug_assert!(fits_signed(a1, self.a_bits), "a1={a1}");
+        debug_assert!(fits_signed(a2, self.a_bits), "a2={a2}");
+        let packed = (a1 << self.shift) + a2;
+        debug_assert!(
+            !self.needs_high_clamp() || fits_signed(packed, DSP_A_BITS),
+            "packed value {packed} overflows the 27-bit port — clamp_high not applied?"
+        );
+        packed
+    }
+
+    /// One packed MAC step: returns the accumulator increment.
+    pub fn mac(&self, a1: i64, a2: i64, b: i64) -> i64 {
+        debug_assert!(fits_signed(b, self.b_bits), "b={b}");
+        self.pack(a1, a2) * b
+    }
+
+    /// Split a final accumulator into the two lane sums `(Σ a1·b, Σ a2·b)`.
+    ///
+    /// The low lane is the sign-extended low `shift` bits; the high lane is
+    /// recovered exactly by subtracting it out (this is the "correction
+    /// logic" the fabric implements around the DSP).
+    pub fn split(&self, acc: i64) -> (i64, i64) {
+        let low = sign_extend(acc & ((1i64 << self.shift) - 1), self.shift);
+        let high = (acc - low) >> self.shift;
+        (high, low)
+    }
+}
+
+/// Does `v` fit a signed `bits`-bit field?
+pub fn fits_signed(v: i64, bits: u32) -> bool {
+    v >= -(1i64 << (bits - 1)) && v <= (1i64 << (bits - 1)) - 1
+}
+
+/// Sign-extend the low `bits` bits of `v`.
+pub fn sign_extend(v: i64, bits: u32) -> i64 {
+    let shift = 64 - bits;
+    (v << shift) >> shift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_limit_is_8_bits_for_3x3() {
+        // The headline derivation: 3×3 packing caps at 8-bit operands.
+        assert_eq!(max_symmetric_bits(3), 8);
+        let p = feasible(8, 8, 9).unwrap();
+        assert_eq!(p.shift, 19);
+        assert_eq!(p.shift + p.a_bits, DSP_A_BITS); // exactly fills the port
+        assert!(feasible(9, 9, 9).is_none());
+    }
+
+    #[test]
+    fn wider_kernels_need_narrower_operands() {
+        // 5×5: 25 taps -> ceil_log2 = 5 -> S = 2w-1+5; S + w ≤ 27 -> w ≤ 7
+        assert_eq!(max_symmetric_bits(5), 7);
+        assert!(max_symmetric_bits(7) <= 7);
+        // 1×1 packing is roomy
+        assert!(max_symmetric_bits(1) >= 9);
+    }
+
+    #[test]
+    fn single_mac_split_exact() {
+        let p = feasible(8, 8, 9).unwrap();
+        for (a1, a2, b) in [(127, -128, -128), (-127, 127, 127), (0, -1, 1), (-1, 0, -1), (5, -7, 3)] {
+            let acc = p.mac(a1, a2, b);
+            let (h, l) = p.split(acc);
+            assert_eq!((h, l), (a1 * b, a2 * b), "a1={a1} a2={a2} b={b}");
+        }
+    }
+
+    #[test]
+    fn high_clamp_boundary() {
+        // 8-bit/3x3 sits exactly on the port boundary -> clamp required.
+        let p = feasible(8, 8, 9).unwrap();
+        assert!(p.needs_high_clamp());
+        assert_eq!(p.clamp_high(-128), -127);
+        assert_eq!(p.clamp_high(-127), -127);
+        assert_eq!(p.clamp_high(127), 127);
+        // Worst clamped packing fits the port.
+        assert!(fits_signed(p.pack(-127, -128), DSP_A_BITS));
+        assert!(fits_signed(p.pack(127, 127), DSP_A_BITS));
+        // Narrower operands don't need the clamp.
+        let q = feasible(6, 6, 9).unwrap();
+        assert!(!q.needs_high_clamp());
+        assert_eq!(q.clamp_high(-32), -32);
+        assert!(fits_signed(q.pack(-32, -32), DSP_A_BITS));
+    }
+
+    #[test]
+    fn accumulated_window_split_exact_worst_case() {
+        // All-extreme 3×3 window: the configuration that would overflow a
+        // lane one bit narrower.
+        let p = feasible(8, 8, 9).unwrap();
+        let a1 = p.clamp_high(-128); // boundary config clamps to -127
+        let mut acc = 0i64;
+        for _ in 0..9 {
+            acc += p.mac(a1, -128, -128);
+        }
+        let (h, l) = p.split(acc);
+        assert_eq!(h, 9 * a1 * (-128));
+        assert_eq!(l, 9 * (-128i64) * (-128));
+        let mut acc2 = 0i64;
+        for _ in 0..9 {
+            acc2 += p.mac(a1, 127, -128);
+        }
+        let (h2, l2) = p.split(acc2);
+        assert_eq!(h2, 9 * a1 * (-128));
+        assert_eq!(l2, 9 * 127i64 * (-128));
+    }
+
+    #[test]
+    fn lane_one_bit_narrower_would_corrupt() {
+        // Sanity that S=19 is genuinely minimal: with S=18 the worst-case
+        // low-lane sum overflows its field.
+        let bogus = Packing { a_bits: 8, b_bits: 8, n_taps: 9, shift: 18 };
+        let mut acc = 0i64;
+        for _ in 0..9 {
+            acc += bogus.mac(1, -128, -128); // low lane sums to +147456 > 2^17-1
+        }
+        let (h, _l) = bogus.split(acc);
+        assert_ne!(h, 9, "S=18 must corrupt the high lane in the worst case");
+    }
+
+    #[test]
+    fn prop_packed_equals_two_macs() {
+        forall("packed MAC == two scalar MACs", 400, |g| {
+            let k = *g.choose(&[1u32, 3, 5]);
+            let w = super::max_symmetric_bits(k);
+            let p = feasible(w, w, k * k).expect("feasible by construction");
+            let n = (k * k) as usize;
+            let a1: Vec<i64> = g.signed_vec(w, n).into_iter().map(|v| p.clamp_high(v)).collect();
+            let a2 = g.signed_vec(w, n);
+            let b = g.signed_vec(w, n);
+            let mut acc = 0i64;
+            for i in 0..n {
+                acc += p.mac(a1[i], a2[i], b[i]);
+            }
+            let (h, l) = p.split(acc);
+            let want_h: i64 = (0..n).map(|i| a1[i] * b[i]).sum();
+            let want_l: i64 = (0..n).map(|i| a2[i] * b[i]).sum();
+            if (h, l) == (want_h, want_l) {
+                Ok(())
+            } else {
+                Err(format!("k={k} w={w}: got ({h},{l}) want ({want_h},{want_l})"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sign_extend_involution() {
+        forall("sign_extend fixpoint", 300, |g| {
+            let bits = g.i64_in(2, 48) as u32;
+            let v = g.signed_bits(bits.min(48) as u32);
+            let masked = v & ((1i64 << bits) - 1);
+            if sign_extend(masked, bits) == v {
+                Ok(())
+            } else {
+                Err(format!("v={v} bits={bits}"))
+            }
+        });
+    }
+
+    #[test]
+    fn randomized_dense_sweep_8bit() {
+        // Dense deterministic sweep at the paper's exact configuration.
+        let p = feasible(8, 8, 9).unwrap();
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..2000 {
+            let mut acc = 0i64;
+            let mut want_h = 0i64;
+            let mut want_l = 0i64;
+            for _ in 0..9 {
+                let (a1, a2, b) =
+                    (p.clamp_high(rng.signed_bits(8)), rng.signed_bits(8), rng.signed_bits(8));
+                acc += p.mac(a1, a2, b);
+                want_h += a1 * b;
+                want_l += a2 * b;
+            }
+            assert_eq!(p.split(acc), (want_h, want_l));
+        }
+    }
+}

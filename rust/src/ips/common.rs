@@ -1,0 +1,145 @@
+//! Shared microarchitecture frame for the four convolution IPs.
+//!
+//! Every IP follows the same streaming contract (the paper: "kernel
+//! coefficients are loaded serially ..., data inputs are loaded in
+//! parallel"):
+//!
+//! * `win0` (and `win1` for the dual-lane IPs) — the K×K window presented
+//!   in parallel, element e at bits `[e·W, (e+1)·W)`. Must be stable for
+//!   the K² cycles of a pass; may change exactly at the pass boundary.
+//! * `coef` — the *current* coefficient, streamed serially: the wrapper
+//!   presents `C[phase]` every cycle (coefficients live outside the IP —
+//!   in BRAM/ROM — which is what keeps the IPs this small).
+//! * `en` — global clock-enable (backpressure); `rst` — sync reset.
+//! * Outputs: `out0` (`out1`), `valid` (one-cycle pulse per completed
+//!   pass), `phase` (the coefficient index the IP expects *this* cycle).
+//!
+//! One MAC retires per cycle per lane; a pass takes K² cycles (II = K²),
+//! so "one convolution per cycle" in the paper's Table I reads as "one
+//! MAC per cycle, fully pipelined" (see DESIGN.md §0).
+
+use super::params::ConvParams;
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::{NetId, Netlist};
+
+/// Handles to the shared control/datapath nets of an IP under
+/// construction.
+pub struct Frame {
+    pub en: NetId,
+    pub rst: NetId,
+    /// Phase counter (coefficient index), modulo K².
+    pub phase: Bus,
+    /// High during the last phase of a pass.
+    pub wrap: NetId,
+    /// High during phase 0.
+    pub first: NetId,
+    /// Streamed coefficient input.
+    pub coef: Bus,
+    /// Current window element per lane (muxed by phase).
+    pub sel: Vec<Bus>,
+}
+
+/// Build the shared frame: ports, phase counter, per-lane window muxes.
+pub fn build_frame(b: &mut Builder, p: &ConvParams, lanes: u32) -> Frame {
+    let en_bus = b.input("en", 1);
+    let rst_bus = b.input("rst", 1);
+    let en = en_bus.bit(0);
+    let rst = rst_bus.bit(0);
+    let coef = b.input("coef", p.coef_bits as usize);
+    let taps = p.taps() as usize;
+    let mut sel = Vec::new();
+    for lane in 0..lanes {
+        let win = b.input(&format!("win{lane}"), taps * p.data_bits as usize);
+        let elems: Vec<Bus> = (0..taps)
+            .map(|e| win.slice(e * p.data_bits as usize, (e + 1) * p.data_bits as usize))
+            .collect();
+        sel.push(elems);
+    }
+    let (phase, wrap) = if taps >= 2 {
+        b.counter_mod(taps as u64, en, rst)
+    } else {
+        // K=1 degenerates: phase is constantly 0 and every cycle wraps.
+        let one = b.one();
+        (Bus(vec![b.zero()]), one)
+    };
+    let first = if taps >= 2 { b.eq_const(&phase, 0) } else { b.one() };
+    let sel = sel
+        .into_iter()
+        .map(|elems| if elems.len() == 1 { elems[0].clone() } else { b.mux_bus_tree(&elems, &phase) })
+        .collect();
+    b.output("phase", &phase);
+    Frame { en, rst, phase, wrap, first, coef, sel }
+}
+
+/// Delay a 1-bit flag by `n` cycles through CE-gated FDREs (the flag
+/// pipeline tracking datapath latency).
+pub fn delay_flag(b: &mut Builder, flag: NetId, n: u32, ce: NetId, rst: NetId) -> NetId {
+    let mut cur = flag;
+    for _ in 0..n {
+        cur = b.register(&Bus(vec![cur]), ce, rst).bit(0);
+    }
+    cur
+}
+
+/// Standard output stage: requantize `acc_full`, capture into an output
+/// register on `capture & en`, and produce the shared `valid` pulse
+/// register if `make_valid`. Returns the registered output bus.
+pub fn output_stage(
+    b: &mut Builder,
+    p: &ConvParams,
+    acc_full: &Bus,
+    capture: NetId,
+    en: NetId,
+    rst: NetId,
+    lane: u32,
+    make_valid: bool,
+) -> Bus {
+    let q = b.requant(acc_full, p.shift, p.out_bits);
+    let ce = b.and2(capture, en);
+    let out = b.register(&q, ce, rst);
+    b.output(&format!("out{lane}"), &out);
+    if make_valid {
+        let one = b.one();
+        let valid = b.register(&Bus(vec![ce]), one, rst);
+        b.output("valid", &valid);
+    }
+    out
+}
+
+/// A fully generated convolution IP: netlist plus schedule metadata the
+/// coordinator's performance model consumes.
+#[derive(Debug, Clone)]
+pub struct ConvIp {
+    pub kind: super::params::ConvKind,
+    pub params: ConvParams,
+    pub netlist: Netlist,
+    /// Initiation interval in cycles per pass (= K²). Each pass produces
+    /// `kind.lanes()` outputs.
+    pub ii: u32,
+    /// Cycles from the last phase cycle of a pass until `valid` is high.
+    pub out_latency: u32,
+    /// `Conv_3` at the packing boundary clamps the high-lane (lane 0)
+    /// pixel `min → min+1` — the paper's "reduced precision" (see
+    /// [`crate::fixed::pack::Packing::needs_high_clamp`]).
+    pub high_lane_clamp: bool,
+}
+
+impl ConvIp {
+    /// Windows per cycle at steady state.
+    pub fn throughput_per_cycle(&self) -> f64 {
+        self.kind.lanes() as f64 / self.ii as f64
+    }
+
+    /// Behavioral expectation for one window on one lane, including the
+    /// lane-0 precision clamp where the IP applies it.
+    pub fn expected_window(&self, lane: u32, win: &[i64], coefs: &[i64]) -> i64 {
+        if lane == 0 && self.high_lane_clamp {
+            let min = -(1i64 << (self.params.data_bits - 1));
+            let clamped: Vec<i64> =
+                win.iter().map(|&v| if v == min { min + 1 } else { v }).collect();
+            self.params.window_ref(&clamped, coefs)
+        } else {
+            self.params.window_ref(win, coefs)
+        }
+    }
+}

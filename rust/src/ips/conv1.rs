@@ -1,0 +1,92 @@
+//! `Conv_1` — logic-only serial-MAC convolution IP.
+//!
+//! Table I: *"Only logic, no DSP; one convolution per cycle"* — high LUT
+//! use, zero DSPs, the variant for DSP-starved devices.
+//!
+//! Microarchitecture: the phase counter selects one window element per
+//! cycle; a fused-LUT array multiplier (pipelined once mid-array to close
+//! 200 MHz) multiplies it with the streamed coefficient; a fabric adder
+//! accumulates; the requantized result is captured at the end of the pass.
+
+use super::common::{build_frame, delay_flag, output_stage, ConvIp};
+use super::params::{ConvKind, ConvParams};
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::{CellKind, NetId, Netlist};
+
+/// Generate the `Conv_1` netlist for `p`.
+pub fn generate(p: &ConvParams) -> Result<ConvIp, String> {
+    p.validate()?;
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let f = build_frame(&mut b, p, 1);
+
+    // Pipelined logic multiplier: cut every ~3 rows for 200 MHz closure.
+    let cuts: Vec<usize> = (1..p.coef_bits as usize).filter(|r| r % 2 == 0).collect();
+    let (raw_prod, mult_stages) = b.mul_signed(&f.sel[0], &f.coef, &cuts, f.en, f.rst);
+    // Register the product before the accumulator: keeps the final
+    // multiplier rows and the accumulate/requant adder in separate cycles.
+    let prod = b.register(&raw_prod, f.en, f.rst);
+    let stages = mult_stages as u32 + 1;
+
+    // Flag pipeline tracking the multiplier latency.
+    let dfirst = delay_flag(&mut b, f.first, stages, f.en, f.rst);
+    let dwrap = delay_flag(&mut b, f.wrap, stages, f.en, f.rst);
+
+    // Accumulator loop: acc' = (dfirst ? bias : acc) + product.
+    let acc_bits = p.acc_bits() as usize;
+    let acc_q_nets: Vec<NetId> = (0..acc_bits).map(|_| b.nl.net()).collect();
+    let acc_q = Bus(acc_q_nets.clone());
+    let bias = b.const_bus(p.round_bias(), acc_bits);
+    let base = b.mux2(dfirst, &acc_q, &bias);
+    let sum = b.add(&base, &prod);
+    let acc_d = b.trunc(&sum, acc_bits); // partial sums provably fit acc_bits
+    for (i, &q) in acc_q_nets.iter().enumerate() {
+        b.nl.add_cell(CellKind::Fdre, vec![acc_d.bit(i), f.en, f.rst], vec![q]);
+    }
+
+    // Requantize from the *registered* accumulator one cycle later — keeps
+    // the adder and the saturation tree in separate cycles (200 MHz
+    // closure; acc_q still holds the full sum during that cycle).
+    let dwrap2 = delay_flag(&mut b, dwrap, 1, f.en, f.rst);
+    output_stage(&mut b, p, &acc_q, dwrap2, f.en, f.rst, 0, true);
+
+    Ok(ConvIp {
+        kind: ConvKind::Conv1,
+        params: *p,
+        netlist: nl,
+        ii: p.taps(),
+        out_latency: stages + 2,
+        high_lane_clamp: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Prim;
+
+    #[test]
+    fn generates_and_checks() {
+        let ip = generate(&ConvParams::paper_8bit()).unwrap();
+        ip.netlist.check().expect("netlist valid");
+        let census = ip.netlist.census();
+        assert_eq!(census.get(&Prim::Dsp48e2), None, "Conv_1 must use no DSPs");
+        let luts = census[&Prim::Lut];
+        assert!(luts > 60, "Conv_1 is the high-logic variant, got {luts} LUTs");
+    }
+
+    #[test]
+    fn schedule_metadata() {
+        let ip = generate(&ConvParams::paper_8bit()).unwrap();
+        assert_eq!(ip.ii, 9);
+        assert_eq!(ip.kind.lanes(), 1);
+        assert!((ip.throughput_per_cycle() - 1.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_invalid_params() {
+        let mut p = ConvParams::paper_8bit();
+        p.data_bits = 20;
+        assert!(generate(&p).is_err());
+    }
+}

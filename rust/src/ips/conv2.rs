@@ -1,0 +1,88 @@
+//! `Conv_2` — single-DSP MACC convolution IP.
+//!
+//! Table I: *"1 DSP, reduces the use of logic; one convolution per
+//! cycle"* — the minimal-logic variant for DSP-rich, LUT-poor devices.
+//!
+//! Microarchitecture: one DSP48E2 in multiply-accumulate mode. The window
+//! mux feeds the A port, the streamed coefficient the B port; the Z
+//! multiplexer starts each pass (`Zero`, or `C` when a rounding bias is
+//! injected) and accumulates otherwise. Fabric logic is only the window
+//! mux, phase counter, requantizer and output capture.
+
+use super::common::{build_frame, delay_flag, output_stage, ConvIp};
+use super::params::{ConvKind, ConvParams};
+use crate::fabric::dsp48::Config;
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::Netlist;
+
+/// DSP pipeline depth used by this IP (full MACC pipelining, no D port).
+pub const DSP_LATENCY: u32 = 3;
+
+/// Generate the `Conv_2` netlist for `p`.
+pub fn generate(p: &ConvParams) -> Result<ConvIp, String> {
+    p.validate()?;
+    if p.coef_bits > 18 {
+        return Err(format!("Conv_2: coef_bits {} exceeds the DSP B port (18)", p.coef_bits));
+    }
+    if p.data_bits > 27 {
+        return Err(format!("Conv_2: data_bits {} exceeds the DSP A port (27)", p.data_bits));
+    }
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let f = build_frame(&mut b, p, 1);
+
+    // Z-mux encoding (see netlist::CellKind::Dsp48e2): 00=Zero 01=P 10=C.
+    let bit0 = b.not(f.first); // accumulate whenever not at phase 0
+    let bit1 = if p.round_bias() != 0 { f.first } else { b.zero() };
+    let zmux = Bus(vec![bit0, bit1]);
+    let cbus = b.const_bus(p.round_bias(), 48);
+    let dbus = b.const_bus(0, 1);
+    let pbus = b.dsp(Config::full_macc(false), &f.sel[0], &f.coef, &cbus, &dbus, &zmux, f.en);
+
+    let dwrap = delay_flag(&mut b, f.wrap, DSP_LATENCY, f.en, f.rst);
+    // The exact sum occupies acc_bits (+1 headroom incl. bias); higher P
+    // bits are sign copies.
+    let acc_view = pbus.slice(0, (p.acc_bits() as usize + 1).min(48));
+    output_stage(&mut b, p, &acc_view, dwrap, f.en, f.rst, 0, true);
+
+    Ok(ConvIp {
+        kind: ConvKind::Conv2,
+        params: *p,
+        netlist: nl,
+        ii: p.taps(),
+        out_latency: DSP_LATENCY + 1,
+        high_lane_clamp: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Prim;
+
+    #[test]
+    fn generates_and_checks() {
+        let ip = generate(&ConvParams::paper_8bit()).unwrap();
+        ip.netlist.check().expect("netlist valid");
+        let census = ip.netlist.census();
+        assert_eq!(census[&Prim::Dsp48e2], 1);
+    }
+
+    #[test]
+    fn minimal_logic_among_variants() {
+        let p = ConvParams::paper_8bit();
+        let c1 = super::super::conv1::generate(&p).unwrap();
+        let c2 = generate(&p).unwrap();
+        let l1 = c1.netlist.census()[&Prim::Lut];
+        let l2 = c2.netlist.census()[&Prim::Lut];
+        assert!(l2 * 2 < l1, "Conv_2 ({l2} LUTs) must be far below Conv_1 ({l1} LUTs)");
+    }
+
+    #[test]
+    fn wide_coef_rejected() {
+        let mut p = ConvParams::paper_8bit();
+        p.coef_bits = 16;
+        assert!(generate(&p).is_ok());
+        // validate() caps at 16 anyway; the B-port guard is for safety.
+    }
+}

@@ -1,0 +1,142 @@
+//! `Conv_3` — dual-pixel packed single-DSP convolution IP.
+//!
+//! Table I: *"Two parallel convolutions; limited up to 8-bit operands"* —
+//! maximum parallelism per DSP at the cost of operand width.
+//!
+//! Microarchitecture: two windows are processed per pass through ONE
+//! DSP48E2 by packing the two current pixels into the wide 27-bit path
+//! using the slice's own pre-adder: `D = pix0 << S`, `A = sext(pix1)`,
+//! `AD = D + A`, so the packing costs *zero* fabric logic (the known
+//! INT8-packing technique, derived in [`crate::fixed::pack`]). After the
+//! pass, fabric "correction logic" splits the 48-bit accumulator into the
+//! two lane sums: the low lane is the sign-extended low `S` bits and the
+//! high lane is incremented by the low lane's sign bit (the borrow).
+//!
+//! The lane-split feasibility constraint `S + data_bits ≤ 27` is exactly
+//! what limits this IP to 8-bit operands for 3×3 kernels — the paper's
+//! "reduced precision" caveat, reproduced mechanically here.
+
+use super::common::{build_frame, delay_flag, output_stage, ConvIp};
+use super::params::{ConvKind, ConvParams};
+use crate::fabric::dsp48::Config;
+use crate::fixed::pack;
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::Netlist;
+
+/// DSP pipeline depth (pre-adder path adds ADREG).
+pub const DSP_LATENCY: u32 = 4;
+
+/// Generate the `Conv_3` netlist for `p`. Errors when the dual-pixel
+/// packing is infeasible for the operand widths / kernel size.
+pub fn generate(p: &ConvParams) -> Result<ConvIp, String> {
+    p.validate()?;
+    let packing = pack::feasible(p.data_bits, p.coef_bits, p.taps()).ok_or_else(|| {
+        format!(
+            "Conv_3: dual-pixel packing infeasible for {}x{}-bit operands over a {}x{} kernel \
+             (max symmetric width for k={} is {} bits)",
+            p.data_bits,
+            p.coef_bits,
+            p.k,
+            p.k,
+            p.k,
+            pack::max_symmetric_bits(p.k)
+        )
+    })?;
+    let s = packing.shift as usize;
+    // Rounding bias must leave the low lane's guard margin intact.
+    let lane_cap = (1i64 << (s - 1)) - 1;
+    let worst = p.taps() as i64 * (1i64 << (p.data_bits + p.coef_bits - 2));
+    if p.round_bias() > lane_cap - worst {
+        return Err(format!(
+            "Conv_3: rounding bias {} would overflow the packed low lane",
+            p.round_bias()
+        ));
+    }
+
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let f = build_frame(&mut b, p, 2);
+
+    // High-lane precision clamp (min → min+1) when the packing sits on
+    // the 27-bit port boundary: only the LSB changes (0b10..0 → 0b10..1),
+    // so the clamp is an eq-detector plus one OR on bit 0.
+    let sel0 = if packing.needs_high_clamp() {
+        let raw = f.sel[0].clone();
+        let is_min = b.eq_const(&raw, 1u64 << (p.data_bits - 1));
+        let or2 = crate::fabric::lut::Lut::from_fn(2, |x| x != 0);
+        let bit0 = b.lut(or2, vec![raw.bit(0), is_min]);
+        let mut nets = vec![bit0];
+        nets.extend(&raw.0[1..]);
+        Bus(nets)
+    } else {
+        f.sel[0].clone()
+    };
+
+    // D = pix0 << S (high lane), A = sext(pix1) (low lane): AD = D + A.
+    let zeros = b.const_bus(0, s);
+    let dport = b.concat(&zeros, &sel0); // width s + data_bits ≤ 27
+    let aport = f.sel[1].clone();
+
+    let bit0 = b.not(f.first);
+    let bias = p.round_bias();
+    let bit1 = if bias != 0 { f.first } else { b.zero() };
+    let zmux = Bus(vec![bit0, bit1]);
+    let cbus = b.const_bus((bias << s) + bias, 48); // bias into both lanes
+    let pbus = b.dsp(Config::full_macc(true), &aport, &f.coef, &cbus, &dport, &zmux, f.en);
+
+    let dwrap = delay_flag(&mut b, f.wrap, DSP_LATENCY, f.en, f.rst);
+
+    // Lane split + borrow correction.
+    let low = pbus.slice(0, s);
+    let high_raw = pbus.slice(s, (s + s).min(48));
+    let borrow = pbus.bit(s - 1); // low lane's sign bit
+    let high = b.add_carry_in(&high_raw, borrow);
+
+    output_stage(&mut b, p, &high, dwrap, f.en, f.rst, 0, true);
+    output_stage(&mut b, p, &low, dwrap, f.en, f.rst, 1, false);
+
+    Ok(ConvIp {
+        kind: ConvKind::Conv3,
+        params: *p,
+        netlist: nl,
+        ii: p.taps(),
+        out_latency: DSP_LATENCY + 1,
+        high_lane_clamp: packing.needs_high_clamp(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Prim;
+
+    #[test]
+    fn generates_and_checks() {
+        let ip = generate(&ConvParams::paper_8bit()).unwrap();
+        ip.netlist.check().expect("netlist valid");
+        let census = ip.netlist.census();
+        assert_eq!(census[&Prim::Dsp48e2], 1, "Conv_3 packs two convs into ONE DSP");
+    }
+
+    #[test]
+    fn paper_operand_limit_enforced() {
+        // 9-bit operands over 3x3 must be rejected — Table I's "limited
+        // up to 8-bit operands".
+        let mut p = ConvParams::paper_8bit();
+        p.data_bits = 9;
+        p.coef_bits = 9;
+        let err = generate(&p).unwrap_err();
+        assert!(err.contains("packing infeasible"), "{err}");
+        assert!(err.contains("8 bits"), "{err}");
+    }
+
+    #[test]
+    fn dual_lane_metadata() {
+        let ip = generate(&ConvParams::paper_8bit()).unwrap();
+        assert_eq!(ip.kind.lanes(), 2);
+        assert!((ip.throughput_per_cycle() - 2.0 / 9.0).abs() < 1e-12);
+        // Twice Conv_2's throughput with the same DSP count.
+        let c2 = super::super::conv2::generate(&ip.params).unwrap();
+        assert!(ip.throughput_per_cycle() > 1.9 * c2.throughput_per_cycle());
+    }
+}

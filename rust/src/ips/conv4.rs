@@ -1,0 +1,90 @@
+//! `Conv_4` — dual-DSP parallel convolution IP.
+//!
+//! Table I: *"Two parallel convolutions; optimized for parallelism"* —
+//! two independent DSP48E2 MACC lanes sharing the coefficient stream and
+//! control, for DSP-rich devices. Unlike `Conv_3` there is no packing, so
+//! operands may be wide ("provides greater precision by allowing larger
+//! operands") and no lane-split correction logic is needed.
+
+use super::common::{build_frame, delay_flag, output_stage, ConvIp};
+use super::params::{ConvKind, ConvParams};
+use crate::fabric::dsp48::Config;
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::Netlist;
+
+/// DSP pipeline depth (same MACC config as `Conv_2`).
+pub const DSP_LATENCY: u32 = 3;
+
+/// Generate the `Conv_4` netlist for `p`.
+pub fn generate(p: &ConvParams) -> Result<ConvIp, String> {
+    p.validate()?;
+    if p.coef_bits > 18 {
+        return Err(format!("Conv_4: coef_bits {} exceeds the DSP B port (18)", p.coef_bits));
+    }
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let f = build_frame(&mut b, p, 2);
+
+    let bit0 = b.not(f.first);
+    let bit1 = if p.round_bias() != 0 { f.first } else { b.zero() };
+    let zmux = Bus(vec![bit0, bit1]);
+    let cbus = b.const_bus(p.round_bias(), 48);
+    let dbus = b.const_bus(0, 1);
+
+    let acc_view_w = (p.acc_bits() as usize + 1).min(48);
+    // One shared capture-flag pipeline serves both lanes.
+    let dwrap = delay_flag(&mut b, f.wrap, DSP_LATENCY, f.en, f.rst);
+    for lane in 0..2u32 {
+        let pbus = b.dsp(
+            Config::full_macc(false),
+            &f.sel[lane as usize],
+            &f.coef,
+            &cbus,
+            &dbus,
+            &zmux,
+            f.en,
+        );
+        let acc_view = pbus.slice(0, acc_view_w);
+        output_stage(&mut b, p, &acc_view, dwrap, f.en, f.rst, lane, lane == 0);
+    }
+
+    Ok(ConvIp {
+        kind: ConvKind::Conv4,
+        params: *p,
+        netlist: nl,
+        ii: p.taps(),
+        out_latency: DSP_LATENCY + 1,
+        high_lane_clamp: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::Prim;
+
+    #[test]
+    fn generates_and_checks() {
+        let ip = generate(&ConvParams::paper_8bit()).unwrap();
+        ip.netlist.check().expect("netlist valid");
+        assert_eq!(ip.netlist.census()[&Prim::Dsp48e2], 2);
+    }
+
+    #[test]
+    fn supports_wide_operands_unlike_conv3() {
+        let mut p = ConvParams::paper_8bit();
+        p.data_bits = 16;
+        p.coef_bits = 16;
+        p.shift = 15;
+        assert!(generate(&p).is_ok(), "Conv_4 must accept 16-bit operands");
+        assert!(super::super::conv3::generate(&p).is_err(), "Conv_3 must not");
+    }
+
+    #[test]
+    fn moderate_logic() {
+        let p = ConvParams::paper_8bit();
+        let c1 = super::super::conv1::generate(&p).unwrap().netlist.census()[&Prim::Lut];
+        let c4 = generate(&p).unwrap().netlist.census()[&Prim::Lut];
+        assert!(c4 < c1, "Conv_4 ({c4}) must use less logic than Conv_1 ({c1})");
+    }
+}

@@ -1,0 +1,150 @@
+//! Fully-connected (dense) layer IP — future-work layer from the paper's
+//! conclusion.
+//!
+//! A serial MAC engine in the `Conv_2` mold, generalized from K² window
+//! taps to an arbitrary dot-product length `n`: activation and weight
+//! stream in element by element (both from the enclosing engine's
+//! memories), one DSP48E2 accumulates, and the requantized neuron output
+//! is captured every `n` cycles.
+
+use super::params::ConvParams;
+use crate::fabric::dsp48::Config;
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::{NetId, Netlist};
+
+/// DSP pipeline depth (same MACC config as `Conv_2`).
+pub const DSP_LATENCY: u32 = 3;
+
+/// A generated FC IP.
+#[derive(Debug, Clone)]
+pub struct FcIp {
+    /// Dot-product length (fan-in per neuron).
+    pub n: u32,
+    /// Arithmetic contract (widths/shift/rounding reused from ConvParams).
+    pub params: ConvParams,
+    pub netlist: Netlist,
+    /// Cycles per neuron.
+    pub ii: u32,
+    /// Cycles from the last element to `valid`.
+    pub out_latency: u32,
+}
+
+/// Behavioral reference for one neuron.
+pub fn fc_ref(p: &ConvParams, x: &[i64], w: &[i64]) -> i64 {
+    assert_eq!(x.len(), w.len());
+    let acc: i64 = x.iter().zip(w).map(|(&a, &b)| a * b).sum::<i64>() + p.round_bias();
+    crate::fixed::requantize(acc, p.shift, crate::fixed::Round::Truncate, p.out_bits)
+}
+
+/// Generate an FC IP with fan-in `n` under the arithmetic contract `p`
+/// (`p.k` is ignored; widths/shift/round apply).
+pub fn generate(p: &ConvParams, n: u32) -> Result<FcIp, String> {
+    p.validate()?;
+    if n < 2 {
+        return Err("FC fan-in must be >= 2".into());
+    }
+    // Accumulator head-room check for n products.
+    let acc_bits = crate::fixed::acc_bits(p.data_bits, p.coef_bits, n);
+    if acc_bits > 46 {
+        return Err(format!("FC fan-in {n} overflows the 48-bit accumulator"));
+    }
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let en: NetId = b.input("en", 1).bit(0);
+    let rst: NetId = b.input("rst", 1).bit(0);
+    let x = b.input("x", p.data_bits as usize);
+    let w = b.input("coef", p.coef_bits as usize);
+    let (phase, wrap) = b.counter_mod(n as u64, en, rst);
+    let first = b.eq_const(&phase, 0);
+    b.output("phase", &phase);
+
+    let bit0 = b.not(first);
+    let bit1 = if p.round_bias() != 0 { first } else { b.zero() };
+    let zmux = Bus(vec![bit0, bit1]);
+    let cbus = b.const_bus(p.round_bias(), 48);
+    let dbus = b.const_bus(0, 1);
+    let pbus = b.dsp(Config::full_macc(false), &x, &w, &cbus, &dbus, &zmux, en);
+
+    let dwrap = super::common::delay_flag(&mut b, wrap, DSP_LATENCY, en, rst);
+    let acc_view = pbus.slice(0, (acc_bits as usize + 1).min(48));
+    super::common::output_stage(&mut b, p, &acc_view, dwrap, en, rst, 0, true);
+
+    Ok(FcIp { n, params: *p, netlist: nl, ii: n, out_latency: DSP_LATENCY + 1 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::Sim;
+    use crate::util::rng::Rng;
+
+    /// Stream `neurons.len()` dot products through the engine.
+    fn run(ip: &FcIp, xs: &[Vec<i64>], ws: &[Vec<i64>]) -> Vec<i64> {
+        let p = &ip.params;
+        let n = ip.n as usize;
+        let mut sim = Sim::new(&ip.netlist).unwrap();
+        sim.set_input("rst", 1);
+        sim.set_input("en", 1);
+        sim.set_input("x", 0);
+        sim.set_input("coef", 0);
+        sim.settle();
+        sim.tick();
+        sim.set_input("rst", 0);
+        let dmask = (1u64 << p.data_bits) - 1;
+        let cmask = (1u64 << p.coef_bits) - 1;
+        let total = xs.len() * n + ip.out_latency as usize + 2;
+        let mut out = Vec::new();
+        for cycle in 0..total {
+            let phase = cycle % n;
+            let neuron = (cycle / n).min(xs.len() - 1);
+            sim.set_input("x", (xs[neuron][phase] as u64) & dmask);
+            sim.set_input("coef", (ws[neuron][phase] as u64) & cmask);
+            sim.settle();
+            if sim.output_unsigned("valid") == 1 {
+                out.push(sim.output_signed("out0"));
+                if out.len() == xs.len() {
+                    break;
+                }
+            }
+            sim.tick();
+        }
+        out
+    }
+
+    #[test]
+    fn matches_reference() {
+        let p = ConvParams::paper_8bit();
+        let ip = generate(&p, 16).unwrap();
+        ip.netlist.check().unwrap();
+        let mut rng = Rng::new(3);
+        let xs: Vec<Vec<i64>> = (0..5).map(|_| (0..16).map(|_| rng.signed_bits(8)).collect()).collect();
+        let ws: Vec<Vec<i64>> = (0..5).map(|_| (0..16).map(|_| rng.signed_bits(8)).collect()).collect();
+        let got = run(&ip, &xs, &ws);
+        let want: Vec<i64> = (0..5).map(|i| fc_ref(&p, &xs[i], &ws[i])).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn large_fanin_guard() {
+        let p = ConvParams::paper_8bit();
+        assert!(generate(&p, 1).is_err());
+        // 8x8-bit products: 2^31 fan-in would blow the 48-bit accumulator.
+        assert!(generate(&p, 1 << 31).is_err());
+        assert!(generate(&p, 1024).is_ok());
+    }
+
+    #[test]
+    fn footprint_is_conv2_like() {
+        let p = ConvParams::paper_8bit();
+        let fc = generate(&p, 64).unwrap();
+        let u = crate::synth::synthesize(&fc.netlist);
+        assert_eq!(u.dsps, 1);
+        // No window mux at all — even leaner than Conv_2.
+        let c2 = crate::synth::synthesize(
+            &super::super::conv2::generate(&p).unwrap().netlist,
+        );
+        assert!(u.luts <= c2.luts, "fc {} vs conv2 {}", u.luts, c2.luts);
+        let t = crate::sta::analyze(&fc.netlist, 200.0, 1.0).unwrap();
+        assert!(t.met());
+    }
+}

@@ -1,0 +1,270 @@
+//! The paper's adaptive IP library.
+//!
+//! Four convolution IPs spanning the DSP/logic trade-off space (Table I),
+//! plus the future-work layers the paper's conclusion promises (pooling,
+//! activation, fully-connected) so a whole CNN can be deployed:
+//!
+//! | IP | DSPs | Logic | Lanes | Notes |
+//! |----|------|-------|-------|-------|
+//! | [`conv1`] | 0 | high | 1 | logic multiplier, for DSP-starved parts |
+//! | [`conv2`] | 1 | minimal | 1 | plain DSP MACC |
+//! | [`conv3`] | 1 | moderate | 2 | dual-pixel packing, ≤8-bit operands |
+//! | [`conv4`] | 2 | moderate | 2 | two MACC lanes, wide operands |
+//!
+//! All are generated from [`params::ConvParams`] (the VHDL generics) into
+//! checked netlists, verified bit-exactly against the behavioral model by
+//! [`verify`].
+
+pub mod common;
+pub mod conv1;
+pub mod conv2;
+pub mod conv3;
+pub mod conv4;
+pub mod fc;
+pub mod params;
+pub mod pool;
+pub mod relu;
+pub mod verify;
+pub mod window_feed;
+
+pub use common::ConvIp;
+pub use params::{ConvKind, ConvParams};
+
+/// Generate any of the four convolution IPs.
+pub fn generate(kind: ConvKind, p: &ConvParams) -> Result<ConvIp, String> {
+    match kind {
+        ConvKind::Conv1 => conv1::generate(p),
+        ConvKind::Conv2 => conv2::generate(p),
+        ConvKind::Conv3 => conv3::generate(p),
+        ConvKind::Conv4 => conv4::generate(p),
+    }
+}
+
+/// Table I row: qualitative characteristics (design intent, as published).
+#[derive(Debug, Clone)]
+pub struct Characteristics {
+    pub kind: ConvKind,
+    pub dsp_usage: &'static str,
+    pub logic_usage: &'static str,
+    pub key_features: &'static str,
+}
+
+/// The paper's Table I, regenerated from the library's metadata.
+pub fn characteristics(kind: ConvKind) -> Characteristics {
+    match kind {
+        ConvKind::Conv1 => Characteristics {
+            kind,
+            dsp_usage: "None",
+            logic_usage: "High",
+            key_features: "Only logic, no DSP; one convolution per cycle.",
+        },
+        ConvKind::Conv2 => Characteristics {
+            kind,
+            dsp_usage: "1 DSP",
+            logic_usage: "Moderate",
+            key_features: "Reduces the use of logic; one convolution per cycle.",
+        },
+        ConvKind::Conv3 => Characteristics {
+            kind,
+            dsp_usage: "1 DSP",
+            logic_usage: "High",
+            key_features: "Two parallel convolutions; limited up to 8-bit operands.",
+        },
+        ConvKind::Conv4 => Characteristics {
+            kind,
+            dsp_usage: "2 DSPs",
+            logic_usage: "Moderate",
+            key_features: "Two parallel convolutions; optimized for parallelism.",
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn all_four_equivalent_to_behavioral_paper_config() {
+        let p = ConvParams::paper_8bit();
+        for kind in ConvKind::ALL {
+            let ip = generate(kind, &p).unwrap();
+            let n = verify::check_equivalence(&ip, 0xBEEF ^ kind as u64, 12);
+            assert!(n >= 12);
+        }
+    }
+
+    #[test]
+    fn equivalence_with_rounding_bias() {
+        use crate::fixed::Round;
+        let p = ConvParams { round: Round::NearestEven, ..ConvParams::paper_8bit() };
+        for kind in ConvKind::ALL {
+            let ip = generate(kind, &p).unwrap();
+            verify::check_equivalence(&ip, 0xD00D ^ kind as u64, 8);
+        }
+    }
+
+    #[test]
+    fn equivalence_across_widths() {
+        // Sweep operand widths; Conv_3 drops out above its packing limit.
+        for bits in [4u32, 6, 8, 10, 12] {
+            let p = ConvParams {
+                k: 3,
+                data_bits: bits,
+                coef_bits: bits,
+                out_bits: bits,
+                shift: bits - 1,
+                round: crate::fixed::Round::Truncate,
+            };
+            for kind in ConvKind::ALL {
+                match generate(kind, &p) {
+                    Ok(ip) => {
+                        verify::check_equivalence(&ip, bits as u64 ^ kind as u64, 6);
+                    }
+                    Err(_) => {
+                        assert_eq!(kind, ConvKind::Conv3, "only Conv_3 may reject {bits}-bit");
+                        assert!(bits > 8, "Conv_3 must accept ≤8-bit");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn equivalence_across_kernel_sizes() {
+        for k in [1u32, 2, 3, 5] {
+            let p = ConvParams {
+                k,
+                data_bits: 6,
+                coef_bits: 6,
+                out_bits: 8,
+                shift: 4,
+                round: crate::fixed::Round::Truncate,
+            };
+            for kind in ConvKind::ALL {
+                if let Ok(ip) = generate(kind, &p) {
+                    verify::check_equivalence(&ip, ((k as u64) << 8) | kind as u64, 5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_operands_exact() {
+        // All-min / all-max windows — the packing worst case.
+        let p = ConvParams::paper_8bit();
+        for kind in ConvKind::ALL {
+            let ip = generate(kind, &p).unwrap();
+            let lanes = kind.lanes() as usize;
+            let lo = vec![-128i64; 9];
+            let hi = vec![127i64; 9];
+            let windows = vec![
+                vec![lo.clone(); lanes],
+                vec![hi.clone(); lanes],
+                if lanes == 2 { vec![lo.clone(), hi.clone()] } else { vec![hi.clone()] },
+            ];
+            let coefs = vec![-128i64; 9];
+            let got = verify::run_ip(&ip, &windows, &coefs);
+            let want = verify::expected(&ip, &windows, &coefs);
+            assert_eq!(got, want, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn table1_characteristics_complete() {
+        for kind in ConvKind::ALL {
+            let c = characteristics(kind);
+            assert!(!c.key_features.is_empty());
+        }
+        assert_eq!(characteristics(ConvKind::Conv1).dsp_usage, "None");
+        assert_eq!(characteristics(ConvKind::Conv4).dsp_usage, "2 DSPs");
+    }
+
+    #[test]
+    fn dsp_census_matches_kind_metadata() {
+        let p = ConvParams::paper_8bit();
+        for kind in ConvKind::ALL {
+            let ip = generate(kind, &p).unwrap();
+            let dsps = *ip.netlist.census().get(&crate::fabric::Prim::Dsp48e2).unwrap_or(&0);
+            assert_eq!(dsps, kind.dsps() as u64, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn stalls_do_not_corrupt_results() {
+        // Insert random en=0 bubbles; outputs must be unchanged.
+        let p = ConvParams::paper_8bit();
+        for kind in ConvKind::ALL {
+            let ip = generate(kind, &p).unwrap();
+            let mut rng = Rng::new(77);
+            let (windows, coefs) = verify::random_stimulus(&ip, &mut rng, 4);
+            let want = verify::expected(&ip, &windows, &coefs);
+            let got = run_with_stalls(&ip, &windows, &coefs, &mut rng);
+            assert_eq!(got, want, "{} with stalls", kind.name());
+        }
+    }
+
+    /// Like verify::run_ip but with random clock-enable bubbles.
+    fn run_with_stalls(
+        ip: &ConvIp,
+        windows: &[verify::PassStimulus],
+        coefs: &[i64],
+        rng: &mut Rng,
+    ) -> Vec<Vec<i64>> {
+        use crate::netlist::sim::Sim;
+        let p = &ip.params;
+        let lanes = ip.kind.lanes() as usize;
+        let taps = p.taps() as usize;
+        let mut sim = Sim::new(&ip.netlist).unwrap();
+        let dmask = (1u64 << p.data_bits) - 1;
+        let cmask = (1u64 << p.coef_bits) - 1;
+        sim.set_input("rst", 1);
+        sim.set_input("en", 1);
+        sim.set_input("coef", 0);
+        for lane in 0..lanes {
+            for e in 0..taps {
+                sim.set_input_field(&format!("win{lane}"), e * p.data_bits as usize, p.data_bits as usize, 0);
+            }
+        }
+        sim.settle();
+        sim.tick();
+        sim.set_input("rst", 0);
+        let mut results = Vec::new();
+        let mut active = 0usize; // enabled cycles elapsed
+        let total = windows.len() * taps + ip.out_latency as usize + 4;
+        let mut guard = 0;
+        while active < total {
+            guard += 1;
+            assert!(guard < total * 20, "stall test runaway");
+            let en = !rng.chance(0.3);
+            sim.set_input("en", en as u64);
+            let phase = active % taps;
+            let pass = (active / taps).min(windows.len() - 1);
+            sim.set_input("coef", (coefs[phase] as u64) & cmask);
+            for lane in 0..lanes {
+                for e in 0..taps {
+                    sim.set_input_field(
+                        &format!("win{lane}"),
+                        e * p.data_bits as usize,
+                        p.data_bits as usize,
+                        (windows[pass][lane][e] as u64) & dmask,
+                    );
+                }
+            }
+            sim.settle();
+            if sim.output_unsigned("valid") == 1 {
+                let row: Vec<i64> =
+                    (0..lanes).map(|l| sim.output_signed(&format!("out{l}"))).collect();
+                results.push(row);
+                if results.len() == windows.len() {
+                    break;
+                }
+            }
+            sim.tick();
+            if en {
+                active += 1;
+            }
+        }
+        results
+    }
+}

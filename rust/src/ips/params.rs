@@ -1,0 +1,266 @@
+//! IP parameterization — the Rust mirror of the paper's VHDL generics.
+//!
+//! All four convolution IPs share one parameter block: kernel size, data /
+//! coefficient widths, the requantization contract, and the rounding mode.
+//! The same struct parameterizes the behavioral models, the netlist
+//! generators, and (through `aot.py`'s build flags) the Pallas kernels, so
+//! every layer agrees on arithmetic by construction.
+
+use crate::fixed::{self, requantize, Round};
+use crate::util::json::{Json, JsonError};
+
+/// Convolution IP parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvParams {
+    /// Kernel size K (window is K×K).
+    pub k: u32,
+    /// Signed pixel width.
+    pub data_bits: u32,
+    /// Signed coefficient width.
+    pub coef_bits: u32,
+    /// Requantized output width.
+    pub out_bits: u32,
+    /// Requantization right-shift.
+    pub shift: u32,
+    /// Rounding mode (netlists implement both via +half injection).
+    pub round: Round,
+}
+
+impl ConvParams {
+    /// The paper's experimental configuration: 3×3 kernel, 8-bit operands.
+    pub fn paper_8bit() -> ConvParams {
+        ConvParams { k: 3, data_bits: 8, coef_bits: 8, out_bits: 8, shift: 7, round: Round::Truncate }
+    }
+
+    /// Window tap count K².
+    pub fn taps(&self) -> u32 {
+        self.k * self.k
+    }
+
+    /// Exact accumulator width for a full window.
+    pub fn acc_bits(&self) -> u32 {
+        fixed::acc_bits(self.data_bits, self.coef_bits, self.taps())
+    }
+
+    /// Phase-counter width.
+    pub fn phase_bits(&self) -> u32 {
+        fixed::ceil_log2(self.taps()).max(1)
+    }
+
+    /// The +half rounding constant injected into the accumulator
+    /// (0 for truncation).
+    pub fn round_bias(&self) -> i64 {
+        match self.round {
+            Round::Truncate => 0,
+            Round::NearestEven => {
+                if self.shift == 0 {
+                    0
+                } else {
+                    1i64 << (self.shift - 1)
+                }
+            }
+        }
+    }
+
+    /// Behavioral reference for ONE window: full-precision dot product,
+    /// bias injection, shift, saturate. This is the function every netlist
+    /// and the Pallas kernels must reproduce bit-exactly.
+    ///
+    /// Note: bias injection + truncating shift implements round-half-up
+    /// for `NearestEven` configs only when ties are absent; the netlists
+    /// use the same bias trick, so netlist-vs-behavioral equivalence holds
+    /// exactly. (True convergent rounding needs the DSP pattern-detect
+    /// path, out of scope — documented in DESIGN.md.)
+    pub fn window_ref(&self, data: &[i64], coef: &[i64]) -> i64 {
+        assert_eq!(data.len(), self.taps() as usize);
+        assert_eq!(coef.len(), self.taps() as usize);
+        debug_assert!(data.iter().all(|&d| fixed::Format::new(self.data_bits, 0).contains(d)));
+        debug_assert!(coef.iter().all(|&c| fixed::Format::new(self.coef_bits, 0).contains(c)));
+        let acc = fixed::window_dot(data, coef) + self.round_bias();
+        requantize(acc, self.shift, Round::Truncate, self.out_bits)
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj([
+            ("k", self.k.into()),
+            ("data_bits", self.data_bits.into()),
+            ("coef_bits", self.coef_bits.into()),
+            ("out_bits", self.out_bits.into()),
+            ("shift", self.shift.into()),
+            (
+                "round",
+                match self.round {
+                    Round::Truncate => "truncate".into(),
+                    Round::NearestEven => "nearest".into(),
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ConvParams, JsonError> {
+        let round = match v.get_opt("round")?.map(|r| r.as_str()).transpose()? {
+            None | Some("truncate") => Round::Truncate,
+            Some("nearest") => Round::NearestEven,
+            Some(other) => {
+                return Err(JsonError::Access(format!("unknown rounding mode '{other}'")))
+            }
+        };
+        Ok(ConvParams {
+            k: v.get("k")?.as_u64()? as u32,
+            data_bits: v.get("data_bits")?.as_u64()? as u32,
+            coef_bits: v.get("coef_bits")?.as_u64()? as u32,
+            out_bits: v.get("out_bits")?.as_u64()? as u32,
+            shift: v.get("shift")?.as_u64()? as u32,
+            round,
+        })
+    }
+
+    /// Validate parameter sanity (widths the primitives can honor).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=7).contains(&self.k) {
+            return Err(format!("kernel size {} out of supported range 1..=7", self.k));
+        }
+        if !(2..=16).contains(&self.data_bits) || !(2..=16).contains(&self.coef_bits) {
+            return Err("operand widths must be in 2..=16".into());
+        }
+        if !(2..=32).contains(&self.out_bits) {
+            return Err("out_bits must be in 2..=32".into());
+        }
+        if self.shift + self.out_bits > self.acc_bits() + 8 {
+            return Err(format!(
+                "shift {} + out_bits {} far exceeds accumulator width {}",
+                self.shift,
+                self.out_bits,
+                self.acc_bits()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ConvKind {
+    /// Logic-only serial MAC — no DSPs, high LUT use.
+    Conv1,
+    /// One DSP48E2 MACC — minimal logic.
+    Conv2,
+    /// One DSP48E2, dual-pixel packed — two windows per pass, ≤8-bit ops.
+    Conv3,
+    /// Two DSP48E2s — two windows per pass, wide operands.
+    Conv4,
+}
+
+impl ConvKind {
+    pub const ALL: [ConvKind; 4] = [ConvKind::Conv1, ConvKind::Conv2, ConvKind::Conv3, ConvKind::Conv4];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConvKind::Conv1 => "Conv_1",
+            ConvKind::Conv2 => "Conv_2",
+            ConvKind::Conv3 => "Conv_3",
+            ConvKind::Conv4 => "Conv_4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ConvKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "conv1" | "conv_1" => Some(ConvKind::Conv1),
+            "conv2" | "conv_2" => Some(ConvKind::Conv2),
+            "conv3" | "conv_3" => Some(ConvKind::Conv3),
+            "conv4" | "conv_4" => Some(ConvKind::Conv4),
+            _ => None,
+        }
+    }
+
+    /// Output lanes (parallel windows per pass) — Table I "parallelism".
+    pub fn lanes(&self) -> u32 {
+        match self {
+            ConvKind::Conv1 | ConvKind::Conv2 => 1,
+            ConvKind::Conv3 | ConvKind::Conv4 => 2,
+        }
+    }
+
+    /// DSP slices consumed — Table I "DSP usage".
+    pub fn dsps(&self) -> u32 {
+        match self {
+            ConvKind::Conv1 => 0,
+            ConvKind::Conv2 | ConvKind::Conv3 => 1,
+            ConvKind::Conv4 => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_params() {
+        let p = ConvParams::paper_8bit();
+        assert_eq!(p.taps(), 9);
+        assert_eq!(p.acc_bits(), 20);
+        assert_eq!(p.phase_bits(), 4);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn window_ref_basic() {
+        let p = ConvParams { shift: 0, out_bits: 32, ..ConvParams::paper_8bit() };
+        let d = [1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let c = [1, 1, 1, 1, 1, 1, 1, 1, 1];
+        assert_eq!(p.window_ref(&d, &c), 45);
+    }
+
+    #[test]
+    fn window_ref_shifts_and_saturates() {
+        let p = ConvParams::paper_8bit(); // shift 7, out 8
+        let d = [127i64; 9];
+        let c = [127i64; 9];
+        // 9*127*127 = 145161; >>7 = 1134 -> saturates to 127
+        assert_eq!(p.window_ref(&d, &c), 127);
+        let c2 = [-128i64; 9];
+        assert_eq!(p.window_ref(&d, &c2), -128);
+        let small = [1i64, 0, 0, 0, 0, 0, 0, 0, 0];
+        // 127*1 >> 7 = 0
+        assert_eq!(p.window_ref(&d, &small), 0);
+    }
+
+    #[test]
+    fn round_bias() {
+        let mut p = ConvParams::paper_8bit();
+        assert_eq!(p.round_bias(), 0);
+        p.round = Round::NearestEven;
+        assert_eq!(p.round_bias(), 64);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = ConvParams { k: 5, data_bits: 6, coef_bits: 7, out_bits: 8, shift: 5, round: Round::NearestEven };
+        let back = ConvParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn validate_rejects_silly() {
+        let mut p = ConvParams::paper_8bit();
+        p.k = 9;
+        assert!(p.validate().is_err());
+        let mut p2 = ConvParams::paper_8bit();
+        p2.data_bits = 1;
+        assert!(p2.validate().is_err());
+    }
+
+    #[test]
+    fn kind_metadata_matches_table1() {
+        use ConvKind::*;
+        assert_eq!(Conv1.dsps(), 0);
+        assert_eq!(Conv2.dsps(), 1);
+        assert_eq!(Conv3.dsps(), 1);
+        assert_eq!(Conv4.dsps(), 2);
+        assert_eq!(Conv1.lanes(), 1);
+        assert_eq!(Conv3.lanes(), 2);
+        assert_eq!(Conv4.lanes(), 2);
+        assert_eq!(ConvKind::parse("conv_3"), Some(Conv3));
+        assert_eq!(ConvKind::parse("zzz"), None);
+    }
+}

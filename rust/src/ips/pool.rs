@@ -1,0 +1,116 @@
+//! Max-pooling IP (2×2, stride 2) — future-work layer from the paper's
+//! conclusion.
+//!
+//! Four window elements arrive in parallel; a tree of three signed
+//! max-comparators (subtract → sign → mux) picks the maximum. Output is
+//! registered: one pooled value per cycle, latency 1.
+
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::{NetId, Netlist};
+
+/// A generated max-pool IP.
+#[derive(Debug, Clone)]
+pub struct PoolIp {
+    pub bits: u32,
+    /// Window size (elements pooled per output).
+    pub window: u32,
+    pub netlist: Netlist,
+    pub latency: u32,
+}
+
+/// Behavioral reference.
+pub fn maxpool_ref(vals: &[i64]) -> i64 {
+    *vals.iter().max().expect("nonempty window")
+}
+
+/// Signed max of two buses: `sel = (a < b)` via subtraction sign, then mux.
+fn smax(b: &mut Builder, x: &Bus, y: &Bus) -> Bus {
+    let diff = b.sub(x, y); // x - y, sign bit ⇒ x < y
+    let lt: NetId = diff.msb();
+    b.mux2(lt, x, y) // lt ? y : x
+}
+
+/// Generate a max-pool IP over `window` parallel elements of `bits` each.
+pub fn generate(bits: u32, window: u32) -> PoolIp {
+    assert!((2..=32).contains(&bits));
+    assert!((2..=16).contains(&window));
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let en = b.input("en", 1).bit(0);
+    let rst = b.input("rst", 1).bit(0);
+    let win = b.input("win", (bits * window) as usize);
+    let mut items: Vec<Bus> = (0..window as usize)
+        .map(|e| win.slice(e * bits as usize, (e + 1) * bits as usize))
+        .collect();
+    while items.len() > 1 {
+        let mut next = Vec::new();
+        for pair in items.chunks(2) {
+            next.push(if pair.len() == 2 { smax(&mut b, &pair[0], &pair[1]) } else { pair[0].clone() });
+        }
+        items = next;
+    }
+    let q = b.register(&items[0], en, rst);
+    b.output("out", &q);
+    PoolIp { bits, window, netlist: nl, latency: 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::Sim;
+    use crate::util::prop::forall;
+
+    fn run(ip: &PoolIp, vals: &[i64]) -> i64 {
+        let mut sim = Sim::new(&ip.netlist).unwrap();
+        sim.set_input("en", 1);
+        sim.set_input("rst", 0);
+        for (e, &v) in vals.iter().enumerate() {
+            sim.set_input_field("win", e * ip.bits as usize, ip.bits as usize, (v as u64) & ((1 << ip.bits) - 1));
+        }
+        sim.settle();
+        sim.tick();
+        sim.output_signed("out")
+    }
+
+    #[test]
+    fn pool4_corners() {
+        let ip = generate(8, 4);
+        ip.netlist.check().unwrap();
+        assert_eq!(run(&ip, &[1, 2, 3, 4]), 4);
+        assert_eq!(run(&ip, &[-128, -1, -127, -2]), -1);
+        assert_eq!(run(&ip, &[127, -128, 0, 5]), 127);
+        assert_eq!(run(&ip, &[-5, -5, -5, -5]), -5);
+    }
+
+    #[test]
+    fn prop_pool_matches_reference() {
+        let ip = generate(8, 4);
+        forall("maxpool == max", 120, |g| {
+            let vals = g.signed_vec(8, 4);
+            let got = run(&ip, &vals);
+            let want = maxpool_ref(&vals);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("{vals:?}: got {got} want {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn odd_window() {
+        let ip = generate(6, 3);
+        assert_eq!(run(&ip, &[-32, 31, 0]), 31);
+        assert_eq!(run(&ip, &[-32, -31, -30]), -30);
+    }
+
+    #[test]
+    fn timing_and_resources() {
+        let ip = generate(8, 4);
+        let u = crate::synth::synthesize(&ip.netlist);
+        assert_eq!(u.dsps, 0);
+        assert!(u.luts < 80, "pool LUTs {}", u.luts);
+        let t = crate::sta::analyze(&ip.netlist, 200.0, 1.0).unwrap();
+        assert!(t.met(), "pool WNS {}", t.wns_ns);
+    }
+}

@@ -1,0 +1,76 @@
+//! ReLU activation IP — first of the paper's promised future-work layers
+//! ("expand the library to include pooling and activation functions").
+//!
+//! `out = max(0, in)` on signed data: every output bit is `in_i AND NOT
+//! sign`, one LUT2 per bit plus the output register. One value per cycle,
+//! latency 1.
+
+use crate::fabric::lut::Lut;
+use crate::netlist::builder::{Builder, Bus};
+use crate::netlist::Netlist;
+
+/// A generated ReLU IP.
+#[derive(Debug, Clone)]
+pub struct ReluIp {
+    pub bits: u32,
+    pub netlist: Netlist,
+    pub latency: u32,
+}
+
+/// Behavioral reference.
+pub fn relu_ref(v: i64) -> i64 {
+    v.max(0)
+}
+
+/// Generate a `bits`-wide ReLU IP.
+pub fn generate(bits: u32) -> ReluIp {
+    assert!((2..=32).contains(&bits));
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let en = b.input("en", 1).bit(0);
+    let rst = b.input("rst", 1).bit(0);
+    let d = b.input("d", bits as usize);
+    let sign = d.msb();
+    let gated = Bus((0..bits as usize)
+        .map(|i| b.lut(Lut::and_not(), vec![d.bit(i), sign]))
+        .collect());
+    let q = b.register(&gated, en, rst);
+    b.output("out", &q);
+    ReluIp { bits, netlist: nl, latency: 1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::Sim;
+
+    #[test]
+    fn matches_reference_exhaustive_8bit() {
+        let ip = generate(8);
+        ip.netlist.check().unwrap();
+        let mut sim = Sim::new(&ip.netlist).unwrap();
+        sim.set_input("en", 1);
+        sim.set_input("rst", 0);
+        for v in -128i64..=127 {
+            sim.set_input("d", (v as u64) & 0xFF);
+            sim.settle();
+            sim.tick();
+            assert_eq!(sim.output_signed("out"), relu_ref(v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn resource_footprint_tiny() {
+        let ip = generate(8);
+        let u = crate::synth::synthesize(&ip.netlist);
+        assert!(u.luts <= 8, "ReLU must be ~1 LUT/bit, got {}", u.luts);
+        assert_eq!(u.dsps, 0);
+    }
+
+    #[test]
+    fn meets_timing_easily() {
+        let ip = generate(8);
+        let t = crate::sta::analyze(&ip.netlist, 200.0, 1.0).unwrap();
+        assert!(t.wns_ns > 3.0, "ReLU WNS {}", t.wns_ns);
+    }
+}

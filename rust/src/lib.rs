@@ -1,0 +1,48 @@
+//! # adaptive-conv-fpga (`acf`)
+//!
+//! Reproduction of *"A Resource-Driven Approach for Implementing CNNs on
+//! FPGAs Using Adaptive IPs"* (Magalhães, Fresse, Suffran, Alata — CS.AR
+//! 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper contributes a library of four parameterizable fixed-point
+//! convolution IPs (`Conv_1..Conv_4`) whose selection *adapts to the FPGA
+//! resources available*. Since no Vivado/ZCU104 testbed exists in this
+//! environment, this crate builds the whole substrate:
+//!
+//! * [`fabric`] — UltraScale+ primitive models (LUT6, CARRY8, FDRE,
+//!   DSP48E2, RAMB18) and a device catalog.
+//! * [`netlist`] — structural netlists plus a bit-exact simulator.
+//! * [`ips`] — netlist generators for the paper's four convolution IPs and
+//!   the future-work pooling/activation/FC IPs.
+//! * [`synth`], [`sta`], [`power`] — a Vivado-like reporting flow (CLB
+//!   packing, static timing, power) that regenerates Table II.
+//! * [`cnn`], [`planner`], [`coordinator`] — the headline feature: a
+//!   resource-driven planner that picks IP variants per CNN layer under a
+//!   device budget, then deploys and simulates the network.
+//! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas model
+//!   (`artifacts/*.hlo.txt`) used as the golden numeric reference.
+//!
+//! See `DESIGN.md` for the experiment index and substitution rationale.
+
+pub mod cnn;
+pub mod coordinator;
+pub mod fabric;
+pub mod fixed;
+pub mod ips;
+pub mod netlist;
+pub mod planner;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sta;
+pub mod synth;
+pub mod util;
+
+/// Crate version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// CLI entry (placeholder; fleshed out in `report`/`main`).
+pub fn cli_main() {
+    println!("acf {VERSION}");
+}

@@ -1,0 +1,384 @@
+//! `acf` — the adaptive-conv-FPGA command line.
+//!
+//! Subcommands:
+//!   tables   — regenerate the paper's Tables I/II/III
+//!   synth    — synthesize one IP and print its utilization
+//!   sta      — timing report (+ critical path trace) for one IP
+//!   power    — power report for one IP
+//!   plan     — resource-driven deployment plan for a model on a device
+//!   deploy   — plan + run a batch of synthetic images (behavioral fabric)
+//!   sweep    — adaptation / precision sweeps
+//!   golden   — run the AOT XLA artifact and cross-check vs behavioral
+//!   version  — print version
+
+use acf::cnn::data::Dataset;
+use acf::cnn::model::Model;
+use acf::fabric::device;
+use acf::ips::{self, ConvKind, ConvParams};
+use acf::planner::{baselines, Policy};
+use acf::util::cli::{help, Args, OptSpec};
+use acf::util::table::fnum;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("tables") => cmd_tables(&argv[1..]),
+        Some("synth") => cmd_ip(&argv[1..], Mode::Synth),
+        Some("sta") => cmd_ip(&argv[1..], Mode::Sta),
+        Some("power") => cmd_ip(&argv[1..], Mode::Power),
+        Some("plan") => cmd_plan(&argv[1..], false),
+        Some("deploy") => cmd_plan(&argv[1..], true),
+        Some("sweep") => cmd_sweep(&argv[1..]),
+        Some("golden") => cmd_golden(&argv[1..]),
+        Some("version") => {
+            println!("acf {}", acf::VERSION);
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: acf <tables|synth|sta|power|plan|deploy|sweep|golden|version> [options]\n\
+                 run `acf <cmd> --help` for per-command options"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+enum Mode {
+    Synth,
+    Sta,
+    Power,
+}
+
+fn dev_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "device", value: true, help: "device name/part", default: Some("zcu104") },
+        OptSpec { name: "clock-mhz", value: true, help: "target clock", default: Some("200") },
+        OptSpec { name: "help", value: false, help: "show help", default: None },
+    ]
+}
+
+fn get_device(a: &Args) -> Result<device::Device, String> {
+    let name = a.get_or("device", "zcu104");
+    device::by_name(name).ok_or_else(|| format!("unknown device '{name}'"))
+}
+
+fn cmd_tables(argv: &[String]) -> i32 {
+    let mut specs = dev_specs();
+    specs.push(OptSpec { name: "table", value: true, help: "1|2|3|all", default: Some("all") });
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!("{}", help("acf tables", "regenerate the paper's tables", &specs));
+        return 0;
+    }
+    let dev = match get_device(&a) {
+        Ok(d) => d,
+        Err(e) => return fail(e),
+    };
+    let clock = a.get_f64("clock-mhz").unwrap().unwrap();
+    let which = a.get_or("table", "all");
+    if which == "1" || which == "all" {
+        println!("\nTABLE I — CHARACTERISTICS OF DEVELOPED CONVOLUTION IPS\n{}", acf::report::table1().markdown());
+    }
+    if which == "2" || which == "all" {
+        println!(
+            "\nTABLE II — RESOURCE UTILIZATION (measured on simulated {}, {} MHz | paper reference)\n{}",
+            dev.name,
+            clock,
+            acf::report::table2(&dev, clock).markdown()
+        );
+    }
+    if which == "3" || which == "all" {
+        println!(
+            "\nTABLE III — COMPARISON OF OPTIMIZATION TECHNIQUES (ratings derived from policy sweeps)\n{}",
+            acf::report::table3(clock).markdown()
+        );
+    }
+    0
+}
+
+fn cmd_ip(argv: &[String], mode: Mode) -> i32 {
+    let mut specs = dev_specs();
+    specs.push(OptSpec { name: "ip", value: true, help: "conv1..conv4", default: Some("conv2") });
+    specs.push(OptSpec { name: "bits", value: true, help: "operand width", default: Some("8") });
+    specs.push(OptSpec { name: "k", value: true, help: "kernel size", default: Some("3") });
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!("{}", help("acf synth/sta/power", "per-IP reports", &specs));
+        return 0;
+    }
+    let dev = match get_device(&a) {
+        Ok(d) => d,
+        Err(e) => return fail(e),
+    };
+    let clock = a.get_f64("clock-mhz").unwrap().unwrap();
+    let kind = match ConvKind::parse(a.get_or("ip", "conv2")) {
+        Some(k) => k,
+        None => return fail("bad --ip (want conv1..conv4)"),
+    };
+    let bits = a.get_u64("bits").unwrap().unwrap() as u32;
+    let k = a.get_u64("k").unwrap().unwrap() as u32;
+    let params = ConvParams {
+        k,
+        data_bits: bits,
+        coef_bits: bits,
+        out_bits: bits.min(16),
+        shift: bits - 1,
+        round: acf::fixed::Round::Truncate,
+    };
+    let ip = match ips::generate(kind, &params) {
+        Ok(ip) => ip,
+        Err(e) => return fail(e),
+    };
+    let u = acf::synth::synthesize(&ip.netlist);
+    match mode {
+        Mode::Synth => {
+            println!(
+                "{} ({bits}-bit, {k}x{k}): LUTs={} Regs={} CARRY8={} CLBs={} DSPs={} BRAM18={}",
+                kind.name(),
+                u.luts,
+                u.regs,
+                u.carry8,
+                u.clbs,
+                u.dsps,
+                u.bram18
+            );
+        }
+        Mode::Sta => {
+            let t = acf::sta::analyze(&ip.netlist, clock, dev.speed_derate).unwrap();
+            println!(
+                "{}: period {:.3} ns | critical path {:.3} ns | WNS {:.3} ns | fmax {:.1} MHz | endpoint {}",
+                kind.name(),
+                t.period_ns,
+                t.critical_path_ns,
+                t.wns_ns,
+                t.fmax_mhz(),
+                t.endpoint
+            );
+            for (desc, at) in acf::sta::trace_critical(&ip.netlist, clock, dev.speed_derate) {
+                println!("  {:>7}  {}", fnum(at, 3), desc);
+            }
+        }
+        Mode::Power => {
+            let p = acf::power::estimate(&u, &dev, clock, None);
+            println!(
+                "{} on {}: static {:.3} W + clock {:.4} W + dynamic {:.4} W = {:.3} W",
+                kind.name(),
+                dev.name,
+                p.static_w,
+                p.clock_w,
+                p.dynamic_w,
+                p.total_w()
+            );
+        }
+    }
+    0
+}
+
+fn parse_model(a: &Args) -> Result<Model, String> {
+    match a.get_or("model", "lenet-tiny") {
+        "lenet-tiny" => Ok(Model::lenet_tiny()),
+        "lenet-wide2" => Ok(Model::lenet_wide(2)),
+        "lenet-wide4" => Ok(Model::lenet_wide(4)),
+        "lenet-12bit" => Ok(acf::report::lenet_tiny_12bit()),
+        path => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let json = acf::util::json::Json::parse(&text).map_err(|e| e.to_string())?;
+            Model::from_json(&json).map_err(|e| e.to_string())
+        }
+    }
+}
+
+fn parse_policy(a: &Args) -> Result<Policy, String> {
+    match a.get_or("policy", "adaptive") {
+        "adaptive" => Ok(Policy::adaptive()),
+        "dsp-first" => Ok(baselines::dsp_first()),
+        "quantize-first" => Ok(baselines::quantize_first()),
+        "static-single" => Ok(baselines::static_single()),
+        other => Err(format!("unknown policy '{other}'")),
+    }
+}
+
+fn cmd_plan(argv: &[String], deploy: bool) -> i32 {
+    let mut specs = dev_specs();
+    specs.push(OptSpec {
+        name: "model",
+        value: true,
+        help: "lenet-tiny|lenet-wide2|lenet-wide4|lenet-12bit|<file.json>",
+        default: Some("lenet-tiny"),
+    });
+    specs.push(OptSpec { name: "policy", value: true, help: "adaptive|dsp-first|quantize-first|static-single", default: Some("adaptive") });
+    specs.push(OptSpec { name: "images", value: true, help: "batch size (deploy)", default: Some("32") });
+    specs.push(OptSpec { name: "seed", value: true, help: "weights/data seed", default: Some("42") });
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!("{}", help("acf plan/deploy", "resource-driven planning + batch inference", &specs));
+        return 0;
+    }
+    let dev = match get_device(&a) {
+        Ok(d) => d,
+        Err(e) => return fail(e),
+    };
+    let clock = a.get_f64("clock-mhz").unwrap().unwrap();
+    let model = match parse_model(&a) {
+        Ok(m) => m,
+        Err(e) => return fail(e),
+    };
+    let policy = match parse_policy(&a) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let plan = match acf::planner::plan(&model, &dev, clock, &policy) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    println!("plan for '{}' on {} @ {} MHz (policy {}):", model.name, dev.name, clock, plan.policy);
+    for lp in &plan.conv {
+        println!(
+            "  layer {:>2}: {} x{:<4} ({} windows/img, {:.0} cyc/img)  [LUT {} DSP {}]",
+            lp.layer,
+            lp.kind.name(),
+            lp.instances,
+            lp.windows,
+            lp.cycles_per_image,
+            lp.util.luts,
+            lp.util.dsps
+        );
+    }
+    for (li, inst, u, cyc) in &plan.fc {
+        println!("  layer {li:>2}: FC x{inst:<6} ({cyc:.0} cyc/img)  [LUT {} DSP {}]", u.luts, u.dsps);
+    }
+    let (pd, pl) = plan.pressure();
+    println!(
+        "  total: LUT {}/{} ({:.1}%)  DSP {}/{} ({:.1}%)  CLB {}  modeled {:.0} img/s (bottleneck layer {})",
+        plan.total.luts,
+        dev.luts,
+        pl * 100.0,
+        plan.total.dsps,
+        dev.dsps,
+        pd * 100.0,
+        plan.total.clbs,
+        plan.images_per_sec,
+        plan.bottleneck
+    );
+    let perf = acf::sim::estimate(&model, &plan);
+    println!("  latency (single image): {:.1} µs", perf.latency_us);
+
+    if deploy {
+        let n = a.get_usize("images").unwrap().unwrap();
+        let seed = a.get_u64("seed").unwrap().unwrap();
+        let weights = acf::cnn::model::Weights::random(&model, seed);
+        let dep = match acf::coordinator::Deployment::new(model.clone(), weights.clone(), &dev, clock, &policy) {
+            Ok(d) => d,
+            Err(e) => return fail(e),
+        };
+        let ds = Dataset::generate(n, seed, model.in_h, model.in_w);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        let out = match dep.infer_batch(&images) {
+            Ok(o) => o,
+            Err(e) => return fail(e),
+        };
+        let mismatches = images
+            .iter()
+            .zip(&out)
+            .filter(|(img, o)| &acf::cnn::infer::infer(&dep.model, &weights, img) != *o)
+            .count();
+        let snap = dep.metrics.snapshot();
+        println!(
+            "deployed batch: {} images in {:.3} s ({:.0} img/s host) — {} reference mismatches",
+            snap.images,
+            snap.wall_secs,
+            snap.throughput(),
+            mismatches
+        );
+        if mismatches > 0 {
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let mut specs = dev_specs();
+    specs.push(OptSpec { name: "kind", value: true, help: "adaptation|precision", default: Some("adaptation") });
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!("{}", help("acf sweep", "device/precision sweeps", &specs));
+        return 0;
+    }
+    let clock = a.get_f64("clock-mhz").unwrap().unwrap();
+    match a.get_or("kind", "adaptation") {
+        "adaptation" => {
+            println!("\nSWEEP-A — throughput (img/s) per device per policy, lenet-tiny\n{}", acf::report::sweep_adaptation(clock).markdown())
+        }
+        "precision" => {
+            let dev = match get_device(&a) {
+                Ok(d) => d,
+                Err(e) => return fail(e),
+            };
+            println!("\nSWEEP-B — operand width vs IP (Conv_3's 8-bit ceiling)\n{}", acf::report::sweep_precision(&dev, clock).markdown())
+        }
+        other => return fail(format!("unknown sweep '{other}'")),
+    }
+    0
+}
+
+fn cmd_golden(argv: &[String]) -> i32 {
+    let specs = vec![
+        OptSpec { name: "images", value: true, help: "batch size", default: Some("16") },
+        OptSpec { name: "seed", value: true, help: "data seed", default: Some("7") },
+        OptSpec { name: "help", value: false, help: "show help", default: None },
+    ];
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!("{}", help("acf golden", "run the AOT XLA artifact vs behavioral", &specs));
+        return 0;
+    }
+    let Some(art) = acf::runtime::find_artifacts() else {
+        return fail("artifacts/ not found — run `make artifacts`");
+    };
+    let client = match acf::runtime::cpu_client() {
+        Ok(c) => c,
+        Err(e) => return fail(e),
+    };
+    let golden = match acf::runtime::GoldenCnn::load(&client, &art) {
+        Ok(g) => g,
+        Err(e) => return fail(e),
+    };
+    let weights = acf::runtime::load_weights(&art).unwrap();
+    let model = Model::lenet_tiny();
+    let n = a.get_usize("images").unwrap().unwrap();
+    let seed = a.get_u64("seed").unwrap().unwrap();
+    let ds = Dataset::generate(n, seed, 16, 16);
+    let mut ok = 0;
+    for img in &ds.images {
+        let g = golden.infer(&img.pix).unwrap();
+        let b = acf::cnn::infer::infer(&model, &weights, &img.pix);
+        if g == b {
+            ok += 1;
+        }
+    }
+    println!("golden XLA vs behavioral: {ok}/{n} bit-identical");
+    i32::from(ok != n)
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}

@@ -1,0 +1,859 @@
+//! Bus-level construction DSL over [`Netlist`] — the Rust equivalent of
+//! the paper's structural VHDL.
+//!
+//! Everything decomposes to real fabric primitives with realistic costs:
+//! adders are fused-LUT + CARRY8 ripple chains (one LUT per bit), the
+//! signed array multiplier uses dual-output LUT3 rows (one LUT per bit per
+//! row — the mapping Vivado produces for `a*b` on logic), registers are
+//! FDRE vectors. Sign extension replicates the MSB *net* and costs
+//! nothing, exactly as on hardware.
+
+use super::{CellKind, NetId, Netlist};
+use crate::fabric::carry::CARRY8_WIDTH;
+use crate::fabric::dsp48;
+use crate::fabric::lut::Lut;
+
+/// A multi-bit signal: LSB-first vector of nets, interpreted as two's
+/// complement by the arithmetic helpers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bus(pub Vec<NetId>);
+
+impl Bus {
+    pub fn width(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn msb(&self) -> NetId {
+        *self.0.last().expect("empty bus")
+    }
+
+    pub fn bit(&self, i: usize) -> NetId {
+        self.0[i]
+    }
+
+    /// Bits `[lo, hi)` as a new bus (shares nets).
+    pub fn slice(&self, lo: usize, hi: usize) -> Bus {
+        Bus(self.0[lo..hi].to_vec())
+    }
+
+    pub fn nets(&self) -> &[NetId] {
+        &self.0
+    }
+}
+
+/// Builder over a netlist.
+pub struct Builder<'a> {
+    pub nl: &'a mut Netlist,
+    zero: Option<NetId>,
+    one: Option<NetId>,
+}
+
+impl<'a> Builder<'a> {
+    pub fn new(nl: &'a mut Netlist) -> Self {
+        Builder { nl, zero: None, one: None }
+    }
+
+    // ---------------- primitive-ish helpers ----------------
+
+    /// The constant-0 net (deduplicated).
+    pub fn zero(&mut self) -> NetId {
+        if let Some(z) = self.zero {
+            return z;
+        }
+        let n = self.nl.net();
+        self.nl.add_cell(CellKind::Const { value: false }, vec![], vec![n]);
+        self.zero = Some(n);
+        n
+    }
+
+    /// The constant-1 net (deduplicated).
+    pub fn one(&mut self) -> NetId {
+        if let Some(o) = self.one {
+            return o;
+        }
+        let n = self.nl.net();
+        self.nl.add_cell(CellKind::Const { value: true }, vec![], vec![n]);
+        self.one = Some(n);
+        n
+    }
+
+    /// A constant bus of `width` bits holding `value` (two's complement).
+    pub fn const_bus(&mut self, value: i64, width: usize) -> Bus {
+        let (z, o) = (self.zero(), self.one());
+        Bus((0..width).map(|i| if (value >> i) & 1 == 1 { o } else { z }).collect())
+    }
+
+    /// Declare a primary input bus.
+    pub fn input(&mut self, name: &str, width: usize) -> Bus {
+        let nets: Vec<NetId> = (0..width)
+            .map(|_| {
+                let n = self.nl.net();
+                self.nl.add_cell(CellKind::Input { name: name.to_string() }, vec![], vec![n]);
+                n
+            })
+            .collect();
+        self.nl.inputs.push((name.to_string(), nets.clone()));
+        Bus(nets)
+    }
+
+    /// Declare a top-level output.
+    pub fn output(&mut self, name: &str, bus: &Bus) {
+        self.nl.outputs.push((name.to_string(), bus.0.clone()));
+    }
+
+    /// Single-function LUT cell.
+    pub fn lut(&mut self, f: Lut, ins: Vec<NetId>) -> NetId {
+        assert_eq!(ins.len(), f.k as usize, "LUT arity");
+        let o = self.nl.net();
+        self.nl.add_cell(CellKind::Lut { funcs: vec![f] }, ins, vec![o]);
+        o
+    }
+
+    /// Fractured LUT6_2: two functions of the same ≤5 inputs, one LUT cost.
+    pub fn lut_dual(&mut self, f6: Lut, f5: Lut, ins: Vec<NetId>) -> (NetId, NetId) {
+        assert!(f6.k as usize == ins.len() && f5.k as usize == ins.len() && ins.len() <= 5);
+        let o6 = self.nl.net();
+        let o5 = self.nl.net();
+        self.nl.add_cell(CellKind::Lut { funcs: vec![f6, f5] }, ins, vec![o6, o5]);
+        (o6, o5)
+    }
+
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.lut(Lut::not1(), vec![a])
+    }
+
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.lut(Lut::and2(), vec![a, b])
+    }
+
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.lut(Lut::xor2(), vec![a, b])
+    }
+
+    /// Per-bit 2:1 mux: `sel ? b : a`.
+    pub fn mux2(&mut self, sel: NetId, a: &Bus, b: &Bus) -> Bus {
+        assert_eq!(a.width(), b.width(), "mux2 width");
+        Bus((0..a.width())
+            .map(|i| self.lut(Lut::mux2(), vec![a.bit(i), b.bit(i), sel]))
+            .collect())
+    }
+
+    // ---------------- width adaptation ----------------
+
+    /// Sign-extend (free: replicates the MSB net).
+    pub fn sext(&mut self, a: &Bus, width: usize) -> Bus {
+        assert!(width >= a.width());
+        let mut nets = a.0.clone();
+        let msb = a.msb();
+        nets.resize(width, msb);
+        Bus(nets)
+    }
+
+    /// Zero-extend.
+    pub fn zext(&mut self, a: &Bus, width: usize) -> Bus {
+        assert!(width >= a.width());
+        let z = self.zero();
+        let mut nets = a.0.clone();
+        nets.resize(width, z);
+        Bus(nets)
+    }
+
+    /// Truncate to the low `width` bits.
+    pub fn trunc(&self, a: &Bus, width: usize) -> Bus {
+        assert!(width <= a.width());
+        Bus(a.0[..width].to_vec())
+    }
+
+    /// Concatenate (lo first).
+    pub fn concat(&self, lo: &Bus, hi: &Bus) -> Bus {
+        let mut nets = lo.0.clone();
+        nets.extend(&hi.0);
+        Bus(nets)
+    }
+
+    // ---------------- registers ----------------
+
+    /// Register a bus through FDREs. `ce`/`r` apply to every bit.
+    pub fn register(&mut self, d: &Bus, ce: NetId, r: NetId) -> Bus {
+        Bus(d
+            .0
+            .iter()
+            .map(|&bit| {
+                let q = self.nl.net();
+                self.nl.add_cell(CellKind::Fdre, vec![bit, ce, r], vec![q]);
+                q
+            })
+            .collect())
+    }
+
+    /// `stages`-deep register delay line.
+    pub fn delay(&mut self, d: &Bus, stages: usize, ce: NetId, r: NetId) -> Bus {
+        let mut cur = d.clone();
+        for _ in 0..stages {
+            cur = self.register(&cur, ce, r);
+        }
+        cur
+    }
+
+    // ---------------- carry-chain arithmetic ----------------
+
+    /// Internal: build a carry chain over per-bit (S, DI) nets with the
+    /// given carry-in. Returns sum bits (one per stage).
+    fn carry_chain(&mut self, s: &[NetId], di: &[NetId], ci: NetId) -> Vec<NetId> {
+        assert_eq!(s.len(), di.len());
+        let z = self.zero();
+        let mut sums = Vec::with_capacity(s.len());
+        let mut carry_in = ci;
+        for chunk in 0..s.len().div_ceil(CARRY8_WIDTH) {
+            let lo = chunk * CARRY8_WIDTH;
+            let hi = (lo + CARRY8_WIDTH).min(s.len());
+            let used = hi - lo;
+            let mut ins = Vec::with_capacity(17);
+            for i in 0..CARRY8_WIDTH {
+                ins.push(if lo + i < hi { s[lo + i] } else { z });
+            }
+            for i in 0..CARRY8_WIDTH {
+                ins.push(if lo + i < hi { di[lo + i] } else { z });
+            }
+            ins.push(carry_in);
+            let outs: Vec<NetId> = (0..16).map(|_| self.nl.net()).collect();
+            self.nl.add_cell(CellKind::Carry8, ins, outs.clone());
+            sums.extend(&outs[..used]);
+            carry_in = outs[8 + CARRY8_WIDTH - 1]; // CO7 cascades
+        }
+        sums
+    }
+
+    /// Signed add: result width = max(wa, wb) + 1 (never overflows).
+    pub fn add(&mut self, a: &Bus, b: &Bus) -> Bus {
+        let w = a.width().max(b.width()) + 1;
+        self.addsub_w(a, b, w, false)
+    }
+
+    /// Signed subtract `a - b`: result width = max + 1.
+    pub fn sub(&mut self, a: &Bus, b: &Bus) -> Bus {
+        let w = a.width().max(b.width()) + 1;
+        self.addsub_w(a, b, w, true)
+    }
+
+    /// Add/sub with explicit (wrapping) result width. One LUT per bit:
+    /// S = a ^ b (or xnor for sub), DI via the O5 function.
+    pub fn addsub_w(&mut self, a: &Bus, b: &Bus, width: usize, sub: bool) -> Bus {
+        let ax = self.sext(a, width);
+        let bx = self.sext(b, width);
+        let mut s_nets = Vec::with_capacity(width);
+        let mut di_nets = Vec::with_capacity(width);
+        for i in 0..width {
+            // O6 = a ^ b (^1 for sub); O5 = b (^1 for sub) — equals the
+            // generate when propagate is 0 (see carry.rs docs).
+            let f6 = if sub { Lut::from_fn(2, |x| ((x & 1) ^ ((x >> 1) & 1) ^ 1) == 1) } else { Lut::xor2() };
+            let f5 = if sub {
+                Lut::from_fn(2, |x| ((x >> 1) & 1) == 0)
+            } else {
+                Lut::from_fn(2, |x| ((x >> 1) & 1) == 1)
+            };
+            let (s, di) = self.lut_dual(f6, f5, vec![ax.bit(i), bx.bit(i)]);
+            s_nets.push(s);
+            di_nets.push(di);
+        }
+        let ci = if sub { self.one() } else { self.zero() };
+        Bus(self.carry_chain(&s_nets, &di_nets, ci))
+    }
+
+    /// `a + carry_in` at the same width (wrapping): 1 LUT/bit. This is the
+    /// lane-split correction primitive for `Conv_3` (and the incrementer).
+    pub fn add_carry_in(&mut self, a: &Bus, ci: NetId) -> Bus {
+        let w = a.width();
+        let s: Vec<NetId> = (0..w).map(|i| self.lut(Lut::buf1(), vec![a.bit(i)])).collect();
+        let z = self.zero();
+        let di = vec![z; w];
+        Bus(self.carry_chain(&s, &di, ci))
+    }
+
+    /// Incrementer `a + 1` at the same width (wrapping): 1 LUT/bit.
+    pub fn increment(&mut self, a: &Bus) -> Bus {
+        let one = self.one();
+        self.add_carry_in(a, one)
+    }
+
+    /// Gated add/sub used by the array multiplier:
+    /// `acc ± (bbit ? a : 0)`, result width = max(w)+1, fused dual-output
+    /// LUT3 per bit (S and DI from one LUT).
+    pub fn addsub_gated(&mut self, acc: &Bus, a: &Bus, bbit: NetId, sub: bool) -> Bus {
+        let w = acc.width().max(a.width()) + 1;
+        let accx = self.sext(acc, w);
+        let ax = self.sext(a, w);
+        let mut s_nets = Vec::with_capacity(w);
+        let mut di_nets = Vec::with_capacity(w);
+        for i in 0..w {
+            // inputs: {acc_i, a_i, bbit}; g = a_i & bbit
+            let f_s = if sub {
+                // S = acc ^ ~g
+                Lut::from_fn(3, |x| {
+                    let (acc_b, a_b, b_b) = (x & 1, (x >> 1) & 1, (x >> 2) & 1);
+                    (acc_b ^ ((a_b & b_b) ^ 1)) == 1
+                })
+            } else {
+                Lut::from_fn(3, |x| {
+                    let (acc_b, a_b, b_b) = (x & 1, (x >> 1) & 1, (x >> 2) & 1);
+                    (acc_b ^ (a_b & b_b)) == 1
+                })
+            };
+            let f_di = if sub {
+                // DI = ~g (equals generate when S=0)
+                Lut::from_fn(3, |x| ((((x >> 1) & 1) & ((x >> 2) & 1)) ^ 1) == 1)
+            } else {
+                // DI = g
+                Lut::from_fn(3, |x| (((x >> 1) & 1) & ((x >> 2) & 1)) == 1)
+            };
+            let (s, di) = self.lut_dual(f_s, f_di, vec![accx.bit(i), ax.bit(i), bbit]);
+            s_nets.push(s);
+            di_nets.push(di);
+        }
+        let ci = if sub { self.one() } else { self.zero() };
+        Bus(self.carry_chain(&s_nets, &di_nets, ci))
+    }
+
+    /// Signed array multiplier `a * b` → width `wa + wb`, built from
+    /// gated-add rows (last row subtracts — b's MSB has negative weight).
+    /// Pipeline registers are inserted before each row listed in `cuts`
+    /// (used by `Conv_1` to meet 200 MHz). Returns (product, stages).
+    pub fn mul_signed(
+        &mut self,
+        a: &Bus,
+        b: &Bus,
+        cuts: &[usize],
+        ce: NetId,
+        rst: NetId,
+    ) -> (Bus, usize) {
+        let (wa, wb) = (a.width(), b.width());
+        assert!(wa >= 2 && wb >= 2, "mul_signed needs >=2-bit operands");
+        // Row 0: acc = a & b0, packed two AND-pairs per fractured LUT.
+        let b0 = b.bit(0);
+        let mut row0 = Vec::with_capacity(wa);
+        let mut j = 0;
+        while j + 1 < wa {
+            let f_hi = Lut::from_fn(3, |x| (((x >> 1) & 1) & ((x >> 2) & 1)) == 1); // a_{j+1} & b0
+            let f_lo = Lut::from_fn(3, |x| ((x & 1) & ((x >> 2) & 1)) == 1); // a_j & b0
+            let (hi, lo) = self.lut_dual(f_hi, f_lo, vec![a.bit(j), a.bit(j + 1), b0]);
+            row0.push(lo);
+            row0.push(hi);
+            j += 2;
+        }
+        if j < wa {
+            row0.push(self.and2(a.bit(j), b0));
+        }
+        let mut acc = Bus(row0); // width wa; value = a * b0 (b0 ∈ {0,1} ⇒ fits)
+        let mut delayed_b = b.clone();
+        let mut b_offset = 0usize; // bits below b_offset already consumed
+        let mut delayed_a = a.clone();
+        let mut stages = 0usize;
+        let mut low_bits: Vec<NetId> = Vec::new(); // finalized product LSBs
+        for i in 1..wb {
+            if cuts.contains(&i) {
+                // Pipeline cut: register acc, the *remaining* operand
+                // bits, and already-finalized low bits.
+                acc = self.register(&acc, ce, rst);
+                delayed_a = self.register(&delayed_a, ce, rst);
+                let tail = delayed_b.slice(i - b_offset, delayed_b.width());
+                delayed_b = self.register(&tail, ce, rst);
+                b_offset = i;
+                let lb = Bus(low_bits.clone());
+                low_bits = self.register(&lb, ce, rst).0;
+                stages += 1;
+            }
+            // Finalize product bit (i-1) = acc LSB, then add the next row
+            // against the remaining high part.
+            low_bits.push(acc.bit(0));
+            let hi = acc.slice(1, acc.width());
+            acc = self.addsub_gated(&hi, &delayed_a, delayed_b.bit(i - b_offset), i == wb - 1);
+        }
+        let mut nets = low_bits;
+        nets.extend(&acc.0);
+        let full = Bus(nets);
+        let w = wa + wb;
+        let prod = if full.width() >= w {
+            self.trunc(&full, w)
+        } else {
+            self.sext(&full, w)
+        };
+        (prod, stages)
+    }
+
+    // ---------------- comparison / control ----------------
+
+    /// `bus == k` via a LUT tree.
+    pub fn eq_const(&mut self, a: &Bus, k: u64) -> NetId {
+        // Level 1: up to 6 bits per LUT comparing against the constant.
+        let mut terms: Vec<NetId> = Vec::new();
+        for chunk in a.0.chunks(6) {
+            let want: u64 = {
+                let base = terms.len() * 6;
+                let mut w = 0u64;
+                for (i, _) in chunk.iter().enumerate() {
+                    if (k >> (base + i)) & 1 == 1 {
+                        w |= 1 << i;
+                    }
+                }
+                w
+            };
+            let kk = chunk.len() as u8;
+            let f = Lut::from_fn(kk, move |x| x == want);
+            terms.push(self.lut(f, chunk.to_vec()));
+        }
+        // AND-reduce.
+        while terms.len() > 1 {
+            let mut next = Vec::new();
+            for pair in terms.chunks(2) {
+                next.push(if pair.len() == 2 { self.and2(pair[0], pair[1]) } else { pair[0] });
+            }
+            terms = next;
+        }
+        terms[0]
+    }
+
+    /// Modulo-`n` counter: register + incrementer + wrap mux. Returns
+    /// (count_bus, wrap_pulse) — wrap_pulse is high on the last count.
+    pub fn counter_mod(&mut self, n: u64, ce: NetId, rst: NetId) -> (Bus, NetId) {
+        assert!(n >= 2);
+        let width = (64 - (n - 1).leading_zeros()) as usize;
+        // Feedback: q -> inc -> mux(wrap ? 0 : inc) -> reg -> q.
+        // Build with a placeholder: allocate q nets first via FDRE cells
+        // whose D we wire after constructing the logic.
+        // Simpler: construct incrementally using a register we close the
+        // loop on manually.
+        let q_nets: Vec<NetId> = (0..width).map(|_| self.nl.net()).collect();
+        let q = Bus(q_nets.clone());
+        let inc = self.increment(&q);
+        let wrap = self.eq_const(&q, n - 1);
+        let zero_bus = self.const_bus(0, width);
+        let d = self.mux2(wrap, &inc, &zero_bus);
+        for i in 0..width {
+            self.nl.add_cell(CellKind::Fdre, vec![d.bit(i), ce, rst], vec![q_nets[i]]);
+        }
+        (q, wrap)
+    }
+
+    /// N:1 mux tree, 4 items per LUT6 level (the mapping Vivado emits for
+    /// wide muxes without F7/F8 muxes). `sel` is consumed 2 bits per level.
+    pub fn mux_tree(&mut self, items: &[NetId], sel: &[NetId]) -> NetId {
+        assert!(!items.is_empty());
+        if items.len() == 1 {
+            return items[0];
+        }
+        assert!(!sel.is_empty(), "mux_tree ran out of select bits");
+        let mut next = Vec::new();
+        for chunk in items.chunks(4) {
+            if chunk.len() == 1 {
+                next.push(chunk[0]);
+                continue;
+            }
+            let n = chunk.len();
+            let selbits = if n == 2 { 1 } else { 2 };
+            let mut ins = chunk.to_vec();
+            ins.extend(&sel[..selbits.min(sel.len())]);
+            let used_sel = ins.len() - n;
+            let f = Lut::from_fn((n + used_sel) as u8, move |x| {
+                let s = ((x >> n) as usize) & ((1 << used_sel) - 1);
+                let s = s.min(n - 1);
+                (x >> s) & 1 == 1
+            });
+            next.push(self.lut(f, ins));
+        }
+        let drop = 2.min(sel.len());
+        self.mux_tree(&next, &sel[drop..])
+    }
+
+    /// Bus-wide N:1 mux tree. All item buses must share a width.
+    pub fn mux_bus_tree(&mut self, items: &[Bus], sel: &Bus) -> Bus {
+        let w = items[0].width();
+        assert!(items.iter().all(|b| b.width() == w), "mux item widths differ");
+        Bus((0..w)
+            .map(|bit| {
+                let slice: Vec<NetId> = items.iter().map(|b| b.bit(bit)).collect();
+                self.mux_tree(&slice, &sel.0)
+            })
+            .collect())
+    }
+
+    /// Requantize: arithmetic-shift-right by the constant `shift`, then
+    /// saturate into `out_bits`. (Rounding is handled upstream by
+    /// injecting a +half constant into the accumulator.) Overflow is
+    /// detected by checking that all accumulator bits above the selected
+    /// field agree with the field's sign bit.
+    pub fn requant(&mut self, acc: &Bus, shift: u32, out_bits: u32) -> Bus {
+        let need = shift as usize + out_bits as usize;
+        let accx = if acc.width() < need + 1 { self.sext(acc, need + 1) } else { acc.clone() };
+        let field = accx.slice(shift as usize, shift as usize + out_bits as usize);
+        let field_sign = field.msb();
+        // Bits that must all equal field_sign for the value to fit.
+        let high: Vec<NetId> =
+            (shift as usize + out_bits as usize..accx.width()).map(|i| accx.bit(i)).collect();
+        let mut diffs: Vec<NetId> =
+            high.iter().map(|&h| self.xor2(h, field_sign)).collect();
+        // OR-reduce the diffs (6 per LUT).
+        while diffs.len() > 1 {
+            let mut next = Vec::new();
+            for chunk in diffs.chunks(6) {
+                if chunk.len() == 1 {
+                    next.push(chunk[0]);
+                } else {
+                    let f = Lut::from_fn(chunk.len() as u8, |x| x != 0);
+                    next.push(self.lut(f, chunk.to_vec()));
+                }
+            }
+            diffs = next;
+        }
+        let ovf = diffs.pop().unwrap_or_else(|| self.zero());
+        let acc_sign = accx.msb();
+        // out bit i = ovf ? (i == msb ? acc_sign : !acc_sign) : field_i
+        Bus((0..out_bits as usize)
+            .map(|i| {
+                let is_msb = i == out_bits as usize - 1;
+                let f = Lut::from_fn(3, move |x| {
+                    let (fld, ov, sg) = (x & 1, (x >> 1) & 1, (x >> 2) & 1);
+                    if ov == 1 {
+                        if is_msb {
+                            sg == 1
+                        } else {
+                            sg == 0
+                        }
+                    } else {
+                        fld == 1
+                    }
+                });
+                self.lut(f, vec![field.bit(i), ovf, acc_sign])
+            })
+            .collect())
+    }
+
+    // ---------------- DSP instantiation ----------------
+
+    /// Instantiate a DSP48E2. Buses narrower than the ports are
+    /// sign-extended; `zmux` is a 2-bit bus (00=Zero 01=P 10=C).
+    pub fn dsp(
+        &mut self,
+        cfg: dsp48::Config,
+        a: &Bus,
+        b: &Bus,
+        c: &Bus,
+        d: &Bus,
+        zmux: &Bus,
+        ce: NetId,
+    ) -> Bus {
+        let ax = self.sext(a, 27);
+        let bx = self.sext(b, 18);
+        let cx = self.sext(c, 48);
+        let dx = self.sext(d, 27);
+        assert_eq!(zmux.width(), 2);
+        let mut ins = ax.0;
+        ins.extend(&bx.0);
+        ins.extend(&cx.0);
+        ins.extend(&dx.0);
+        ins.extend(&zmux.0);
+        ins.push(ce);
+        let p: Vec<NetId> = (0..48).map(|_| self.nl.net()).collect();
+        self.nl.add_cell(CellKind::Dsp48e2 { cfg }, ins, p.clone());
+        Bus(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::Sim;
+    use crate::util::prop::forall;
+
+    /// Helper: build a 2-input arithmetic testbench and return closure-ish
+    /// evaluation via fresh sims.
+    fn eval2(build: impl Fn(&mut Builder, &Bus, &Bus) -> Bus, wa: usize, wb: usize, a: i64, b: i64) -> i64 {
+        let mut nl = Netlist::new();
+        let mut bld = Builder::new(&mut nl);
+        let ab = bld.input("a", wa);
+        let bb = bld.input("b", wb);
+        let y = build(&mut bld, &ab, &bb);
+        bld.output("y", &y);
+        let mut sim = Sim::new(&nl).unwrap();
+        sim.set_input("a", (a as u64) & ((1 << wa) - 1));
+        sim.set_input("b", (b as u64) & ((1 << wb) - 1));
+        sim.settle();
+        sim.output_signed("y")
+    }
+
+    #[test]
+    fn add_sub_basic() {
+        assert_eq!(eval2(|b, x, y| b.add(x, y), 8, 8, 100, 27), 127);
+        assert_eq!(eval2(|b, x, y| b.add(x, y), 8, 8, -128, -128), -256);
+        assert_eq!(eval2(|b, x, y| b.sub(x, y), 8, 8, -128, 127), -255);
+        assert_eq!(eval2(|b, x, y| b.sub(x, y), 8, 8, 5, 9), -4);
+    }
+
+    #[test]
+    fn prop_addsub_matches_integers() {
+        forall("builder add/sub == i64", 200, |g| {
+            let wa = g.usize_in(2, 12);
+            let wb = g.usize_in(2, 12);
+            let a = g.signed_bits(wa as u32);
+            let b = g.signed_bits(wb as u32);
+            let s = eval2(|bl, x, y| bl.add(x, y), wa, wb, a, b);
+            let d = eval2(|bl, x, y| bl.sub(x, y), wa, wb, a, b);
+            if s == a + b && d == a - b {
+                Ok(())
+            } else {
+                Err(format!("wa={wa} wb={wb} a={a} b={b}: add={s} sub={d}"))
+            }
+        });
+    }
+
+    #[test]
+    fn increment_wraps() {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let x = b.input("x", 4);
+        let y = b.increment(&x);
+        b.output("y", &y);
+        let mut sim = Sim::new(&nl).unwrap();
+        for v in 0..16u64 {
+            sim.set_input("x", v);
+            sim.settle();
+            assert_eq!(sim.output_unsigned("y"), (v + 1) % 16);
+        }
+    }
+
+    #[test]
+    fn mul_signed_exhaustive_4x4() {
+        for a in -8i64..8 {
+            for b in -8i64..8 {
+                let got = eval2(
+                    |bl, x, y| {
+                        let ce = bl.one();
+                        let r = bl.zero();
+                        bl.mul_signed(x, y, &[], ce, r).0
+                    },
+                    4,
+                    4,
+                    a,
+                    b,
+                );
+                assert_eq!(got, a * b, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_mul_signed_matches() {
+        forall("mul_signed == *", 120, |g| {
+            let wa = g.usize_in(2, 10);
+            let wb = g.usize_in(2, 10);
+            let a = g.signed_bits(wa as u32);
+            let b = g.signed_bits(wb as u32);
+            let got = eval2(
+                |bl, x, y| {
+                    let ce = bl.one();
+                    let r = bl.zero();
+                    bl.mul_signed(x, y, &[], ce, r).0
+                },
+                wa,
+                wb,
+                a,
+                b,
+            );
+            if got == a * b {
+                Ok(())
+            } else {
+                Err(format!("wa={wa} wb={wb}: {a}*{b} -> {got}"))
+            }
+        });
+    }
+
+    #[test]
+    fn mul_pipelined_latency_and_value() {
+        // Pipeline after row 4: output lags by 1 cycle but is exact.
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let x = b.input("x", 8);
+        let y = b.input("y", 8);
+        let ce = b.one();
+        let r = b.zero();
+        let (p, stages) = b.mul_signed(&x, &y, &[4], ce, r);
+        assert_eq!(stages, 1);
+        b.output("p", &p);
+        let mut sim = Sim::new(&nl).unwrap();
+        sim.set_input("x", (-77i64 as u64) & 0xFF);
+        sim.set_input("y", 55);
+        sim.settle();
+        sim.tick(); // one pipeline stage
+        assert_eq!(sim.output_signed("p"), -77 * 55);
+    }
+
+    #[test]
+    fn eq_const_wide() {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let x = b.input("x", 9);
+        let hit = b.eq_const(&x, 389);
+        b.output("hit", &Bus(vec![hit]));
+        let mut sim = Sim::new(&nl).unwrap();
+        for v in [0u64, 388, 389, 390, 511] {
+            sim.set_input("x", v);
+            sim.settle();
+            assert_eq!(sim.output_unsigned("hit") == 1, v == 389, "v={v}");
+        }
+    }
+
+    #[test]
+    fn counter_mod_9_sequence() {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let ce = b.one();
+        let r = b.zero();
+        let (q, wrap) = b.counter_mod(9, ce, r);
+        b.output("q", &q);
+        b.output("wrap", &Bus(vec![wrap]));
+        let mut sim = Sim::new(&nl).unwrap();
+        let mut seen = Vec::new();
+        for _ in 0..20 {
+            seen.push(sim.output_unsigned("q"));
+            sim.tick();
+        }
+        assert_eq!(&seen[..10], &[0, 1, 2, 3, 4, 5, 6, 7, 8, 0]);
+        assert_eq!(seen[9..18], seen[0..9]);
+    }
+
+    #[test]
+    fn mux2_and_extensions() {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let x = b.input("x", 4);
+        let sx = b.sext(&x, 8);
+        let zx = b.zext(&x, 8);
+        let sel = b.input("sel", 1);
+        let y = b.mux2(sel.bit(0), &sx, &zx);
+        b.output("y", &y);
+        let mut sim = Sim::new(&nl).unwrap();
+        sim.set_input("x", 0b1010); // -6 signed, 10 unsigned
+        sim.set_input("sel", 0);
+        sim.settle();
+        assert_eq!(sim.output_signed("y"), -6);
+        sim.set_input("sel", 1);
+        sim.settle();
+        assert_eq!(sim.output_signed("y"), 10);
+    }
+
+    #[test]
+    fn dsp_builder_macc() {
+        use crate::fabric::dsp48::Config;
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let a = b.input("a", 8);
+        let bb = b.input("b", 8);
+        let zm = b.input("zm", 2);
+        let c = b.const_bus(0, 48);
+        let d = b.const_bus(0, 27);
+        let ce = b.one();
+        let p = b.dsp(Config::full_macc(false), &a, &bb, &c, &d, &zm, ce);
+        b.output("p", &p);
+        let mut sim = Sim::new(&nl).unwrap();
+        let seq = [(3i64, 4i64, 0u64), (-5, 6, 1), (0, 0, 1), (0, 0, 1), (0, 0, 1)];
+        for (av, bv, zmv) in seq {
+            sim.set_input("a", (av as u64) & 0xFF);
+            sim.set_input("b", (bv as u64) & 0xFF);
+            sim.set_input("zm", zmv);
+            sim.settle();
+            sim.tick();
+        }
+        assert_eq!(sim.output_signed("p"), 3 * 4 - 5 * 6);
+    }
+
+    #[test]
+    fn mux_tree_9to1() {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let items: Vec<Bus> = (0..9).map(|i| b.input(&format!("i{i}"), 8)).collect();
+        let sel = b.input("sel", 4);
+        let y = b.mux_bus_tree(&items, &sel);
+        b.output("y", &y);
+        let luts = nl.census()[&crate::fabric::Prim::Lut];
+        assert!(luts <= 4 * 8, "9:1x8 mux too costly: {luts} LUTs");
+        let mut sim = Sim::new(&nl).unwrap();
+        for (i, v) in [(0u64, 11u64), (3, 44), (4, 55), (7, 88), (8, 99)] {
+            for j in 0..9 {
+                sim.set_input(&format!("i{j}"), j * 11 + 11);
+            }
+            sim.set_input("sel", i);
+            sim.settle();
+            assert_eq!(sim.output_unsigned("y"), v, "sel={i}");
+        }
+    }
+
+    #[test]
+    fn requant_saturates_and_shifts() {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let acc = b.input("acc", 20);
+        let y = b.requant(&acc, 4, 8);
+        b.output("y", &y);
+        let mut sim = Sim::new(&nl).unwrap();
+        for (acc_v, want) in [
+            (160i64, 10i64),
+            (-160, -10),
+            (127 << 4, 127),
+            (128 << 4, 127),      // just over -> saturate
+            (-(128 << 4), -128),  // exactly min
+            (-(129 << 4), -128),  // under -> saturate
+            (100_000, 127),
+            (-100_000, -128),
+            (15, 0),
+            (-1, -1), // floor(-1/16) = -1
+        ] {
+            sim.set_input("acc", (acc_v as u64) & ((1 << 20) - 1));
+            sim.settle();
+            assert_eq!(sim.output_signed("y"), want, "acc={acc_v}");
+        }
+    }
+
+    #[test]
+    fn prop_requant_matches_fixed() {
+        use crate::fixed::{requantize, Round};
+        forall("netlist requant == fixed::requantize", 150, |g| {
+            let shift = g.usize_in(0, 8) as u32;
+            let aw = g.usize_in((shift as usize + 9).max(10), 24);
+            let acc_v = g.signed_bits(aw as u32);
+            let mut nl = Netlist::new();
+            let mut b = Builder::new(&mut nl);
+            let acc = b.input("acc", aw);
+            let y = b.requant(&acc, shift, 8);
+            b.output("y", &y);
+            let mut sim = Sim::new(&nl).unwrap();
+            sim.set_input("acc", (acc_v as u64) & ((1u64 << aw) - 1));
+            sim.settle();
+            let got = sim.output_signed("y");
+            let want = requantize(acc_v, shift, Round::Truncate, 8);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("aw={aw} shift={shift} acc={acc_v}: got {got} want {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn census_costs_are_sane() {
+        // 8x8 multiplier should cost on the order of 70 LUTs — the basis
+        // of Conv_1's Table II footprint.
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let x = b.input("x", 8);
+        let y = b.input("y", 8);
+        let ce = b.one();
+        let r = b.zero();
+        let (p, _) = b.mul_signed(&x, &y, &[], ce, r);
+        b.output("p", &p);
+        let census = nl.census();
+        let luts = census[&crate::fabric::Prim::Lut];
+        assert!(
+            (55..=95).contains(&luts),
+            "8x8 logic multiplier LUT count out of expected envelope: {luts}"
+        );
+    }
+}

@@ -1,0 +1,365 @@
+//! Structural netlists over fabric primitives.
+//!
+//! A [`Netlist`] is a graph of single-bit nets and primitive cells — the
+//! same abstraction level as a post-synthesis Vivado netlist, which is
+//! what the paper's hand-written structural VHDL effectively pins down.
+//! The IP generators in [`crate::ips`] build netlists through the
+//! [`builder::Builder`] DSL; [`sim::Sim`] evaluates them bit-exactly;
+//! [`crate::synth`] counts them into Table II rows; [`crate::sta`] walks
+//! them for WNS.
+//!
+//! Conventions:
+//! * Nets are 1-bit. Multi-bit values are [`builder::Bus`]es (LSB-first
+//!   vectors of nets). Sign extension replicates the MSB net — free, as on
+//!   hardware.
+//! * A LUT cell may carry two functions of ≤5 shared inputs (the LUT6_2
+//!   O5/O6 fracture) and still counts as one LUT — this matters for
+//!   matching realistic multiplier costs.
+//! * Sequential cells (FDRE, DSP48E2, RAMB18) break combinational paths;
+//!   one implicit global clock.
+
+pub mod builder;
+pub mod sim;
+
+use crate::fabric::dsp48;
+use crate::fabric::lut::Lut;
+use crate::fabric::Prim;
+
+/// Net index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NetId(pub u32);
+
+/// Cell index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CellId(pub u32);
+
+/// Primitive cell kinds.
+#[derive(Debug, Clone)]
+pub enum CellKind {
+    /// Function generator: up to two functions over shared inputs.
+    /// `funcs.len() == 1` → plain LUT; `== 2` → fractured LUT6_2 (≤5 ins).
+    Lut { funcs: Vec<Lut> },
+    /// D flip-flop. Pins in: `[D, CE, R]`; out: `[Q]`.
+    Fdre,
+    /// Carry chain. Pins in: `[S0..S7, DI0..DI7, CI]`; out: `[O0..O7, CO0..CO7]`.
+    Carry8,
+    /// DSP slice. Pins in: `[A(27), B(18), C(48), D(27), ZMUX(2), CE]`;
+    /// out: `[P(48)]`. ZMUX encoding: 00=Zero, 01=P, 10=C.
+    Dsp48e2 { cfg: dsp48::Config },
+    /// Block RAM, simple dual port, registered read.
+    /// Pins in: `[WDATA(w), WADDR(log2 d), WE, RADDR(log2 d)]`; out: `[RDATA(w)]`.
+    Ramb18 { width: u32, depth: u32 },
+    /// Constant driver. Out: `[Q]`.
+    Const { value: bool },
+    /// Primary input bit. Out: `[Q]`.
+    Input { name: String },
+}
+
+impl CellKind {
+    /// Which census bucket does this cell land in (None for virtual cells).
+    pub fn prim(&self) -> Option<Prim> {
+        match self {
+            CellKind::Lut { .. } => Some(Prim::Lut),
+            CellKind::Fdre => Some(Prim::Ff),
+            CellKind::Carry8 => Some(Prim::Carry8),
+            CellKind::Dsp48e2 { .. } => Some(Prim::Dsp48e2),
+            CellKind::Ramb18 { .. } => Some(Prim::Ramb18),
+            CellKind::Const { .. } | CellKind::Input { .. } => None,
+        }
+    }
+
+    /// Sequential cells latch on the clock edge and cut timing paths.
+    pub fn is_sequential(&self) -> bool {
+        matches!(self, CellKind::Fdre | CellKind::Dsp48e2 { .. } | CellKind::Ramb18 { .. })
+    }
+}
+
+/// One cell instance.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub kind: CellKind,
+    pub ins: Vec<NetId>,
+    pub outs: Vec<NetId>,
+}
+
+/// The netlist graph.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub cells: Vec<Cell>,
+    /// Driver of each net (cell, output-pin index). Primary inputs and
+    /// constants are driven by their virtual cells.
+    drivers: Vec<Option<(CellId, u16)>>,
+    /// Declared top-level outputs: (name, bus of nets).
+    pub outputs: Vec<(String, Vec<NetId>)>,
+    /// Declared top-level inputs: (name, bus of nets) in declaration order.
+    pub inputs: Vec<(String, Vec<NetId>)>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum NetlistError {
+    #[error("net {0:?} has no driver")]
+    Undriven(NetId),
+    #[error("net {0:?} has multiple drivers")]
+    MultipleDrivers(NetId),
+    #[error("combinational loop through cell {0:?}")]
+    CombLoop(CellId),
+    #[error("pin arity mismatch on cell {0:?}: {1}")]
+    Arity(CellId, String),
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Netlist::default()
+    }
+
+    pub fn n_nets(&self) -> usize {
+        self.drivers.len()
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Allocate a fresh undriven net.
+    pub fn net(&mut self) -> NetId {
+        let id = NetId(self.drivers.len() as u32);
+        self.drivers.push(None);
+        id
+    }
+
+    /// Add a cell; registers it as driver of its output nets.
+    pub fn add_cell(&mut self, kind: CellKind, ins: Vec<NetId>, outs: Vec<NetId>) -> CellId {
+        let id = CellId(self.cells.len() as u32);
+        for (pin, &o) in outs.iter().enumerate() {
+            let slot = &mut self.drivers[o.0 as usize];
+            assert!(slot.is_none(), "net {o:?} already driven");
+            *slot = Some((id, pin as u16));
+        }
+        self.cells.push(Cell { kind, ins, outs });
+        id
+    }
+
+    pub fn driver(&self, n: NetId) -> Option<(CellId, u16)> {
+        self.drivers[n.0 as usize]
+    }
+
+    pub fn cell(&self, c: CellId) -> &Cell {
+        &self.cells[c.0 as usize]
+    }
+
+    /// Census: count cells per primitive kind.
+    pub fn census(&self) -> std::collections::BTreeMap<Prim, u64> {
+        let mut m = std::collections::BTreeMap::new();
+        for c in &self.cells {
+            if let Some(p) = c.kind.prim() {
+                *m.entry(p).or_insert(0) += 1;
+            }
+        }
+        m
+    }
+
+    /// Fanout count per net (used by STA's routing-delay estimate).
+    pub fn fanouts(&self) -> Vec<u32> {
+        let mut f = vec![0u32; self.n_nets()];
+        for c in &self.cells {
+            for &i in &c.ins {
+                f[i.0 as usize] += 1;
+            }
+        }
+        for (_, bus) in &self.outputs {
+            for &n in bus {
+                f[n.0 as usize] += 1;
+            }
+        }
+        f
+    }
+
+    /// Validate: every net driven exactly once, pin arities consistent,
+    /// and no combinational loops. Returns the combinational topological
+    /// order (cell indices, sequential cells excluded).
+    pub fn check(&self) -> Result<Vec<CellId>, NetlistError> {
+        for (i, d) in self.drivers.iter().enumerate() {
+            if d.is_none() {
+                return Err(NetlistError::Undriven(NetId(i as u32)));
+            }
+        }
+        for (ci, c) in self.cells.iter().enumerate() {
+            let id = CellId(ci as u32);
+            let (want_in, want_out): (usize, usize) = match &c.kind {
+                CellKind::Lut { funcs } => {
+                    let k = funcs[0].k as usize;
+                    if funcs.len() == 2 {
+                        if k > 5 {
+                            return Err(NetlistError::Arity(id, "dual LUT needs k<=5".into()));
+                        }
+                        if funcs[1].k != funcs[0].k {
+                            return Err(NetlistError::Arity(id, "dual LUT arity mismatch".into()));
+                        }
+                    }
+                    (k, funcs.len())
+                }
+                CellKind::Fdre => (3, 1),
+                CellKind::Carry8 => (17, 16),
+                CellKind::Dsp48e2 { .. } => (27 + 18 + 48 + 27 + 2 + 1, 48),
+                CellKind::Ramb18 { width, depth } => {
+                    let ab = (*depth as f64).log2().ceil() as usize;
+                    ((*width as usize) + ab + 1 + ab, *width as usize)
+                }
+                CellKind::Const { .. } => (0, 1),
+                CellKind::Input { .. } => (0, 1),
+            };
+            if c.ins.len() != want_in || c.outs.len() != want_out {
+                return Err(NetlistError::Arity(
+                    id,
+                    format!("got {}in/{}out want {want_in}in/{want_out}out", c.ins.len(), c.outs.len()),
+                ));
+            }
+        }
+        self.topo_comb()
+    }
+
+    /// Topological order over combinational cells (Kahn). Sequential cell
+    /// outputs are treated as sources.
+    pub fn topo_comb(&self) -> Result<Vec<CellId>, NetlistError> {
+        let n = self.cells.len();
+        let mut indeg = vec![0u32; n];
+        // For each combinational cell, count inputs driven by combinational cells.
+        let mut users: Vec<Vec<u32>> = vec![Vec::new(); n]; // comb cell -> comb users
+        for (ci, c) in self.cells.iter().enumerate() {
+            if c.kind.is_sequential() {
+                continue;
+            }
+            for &i in &c.ins {
+                if let Some((d, _)) = self.drivers[i.0 as usize] {
+                    if !self.cells[d.0 as usize].kind.is_sequential() {
+                        indeg[ci] += 1;
+                        users[d.0 as usize].push(ci as u32);
+                    }
+                }
+            }
+        }
+        let mut q: Vec<u32> = (0..n as u32)
+            .filter(|&i| !self.cells[i as usize].kind.is_sequential() && indeg[i as usize] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(c) = q.pop() {
+            order.push(CellId(c));
+            for &u in &users[c as usize] {
+                indeg[u as usize] -= 1;
+                if indeg[u as usize] == 0 {
+                    q.push(u);
+                }
+            }
+        }
+        let comb_total = self.cells.iter().filter(|c| !c.kind.is_sequential()).count();
+        if order.len() != comb_total {
+            // Find a cell still with indegree > 0 for the error message.
+            let stuck = indeg
+                .iter()
+                .enumerate()
+                .find(|(i, &d)| d > 0 && !self.cells[*i].kind.is_sequential())
+                .map(|(i, _)| CellId(i as u32))
+                .unwrap_or(CellId(0));
+            return Err(NetlistError::CombLoop(stuck));
+        }
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::lut::Lut;
+
+    fn tiny() -> (Netlist, NetId, NetId, NetId) {
+        let mut nl = Netlist::new();
+        let a = nl.net();
+        let b = nl.net();
+        let y = nl.net();
+        nl.add_cell(CellKind::Input { name: "a".into() }, vec![], vec![a]);
+        nl.add_cell(CellKind::Input { name: "b".into() }, vec![], vec![b]);
+        nl.add_cell(CellKind::Lut { funcs: vec![Lut::xor2()] }, vec![a, b], vec![y]);
+        nl.inputs.push(("a".into(), vec![a]));
+        nl.inputs.push(("b".into(), vec![b]));
+        nl.outputs.push(("y".into(), vec![y]));
+        (nl, a, b, y)
+    }
+
+    #[test]
+    fn check_passes_on_tiny() {
+        let (nl, ..) = tiny();
+        let order = nl.check().unwrap();
+        assert_eq!(order.len(), 3); // 2 inputs + 1 lut
+    }
+
+    #[test]
+    fn census_counts_luts() {
+        let (nl, ..) = tiny();
+        let c = nl.census();
+        assert_eq!(c.get(&Prim::Lut), Some(&1));
+        assert_eq!(c.get(&Prim::Ff), None);
+    }
+
+    #[test]
+    fn undriven_detected() {
+        let mut nl = Netlist::new();
+        let a = nl.net();
+        let y = nl.net();
+        nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![a], vec![y]);
+        assert!(matches!(nl.check(), Err(NetlistError::Undriven(_))));
+    }
+
+    #[test]
+    #[should_panic(expected = "already driven")]
+    fn double_driver_panics() {
+        let mut nl = Netlist::new();
+        let y = nl.net();
+        nl.add_cell(CellKind::Const { value: true }, vec![], vec![y]);
+        nl.add_cell(CellKind::Const { value: false }, vec![], vec![y]);
+    }
+
+    #[test]
+    fn comb_loop_detected() {
+        let mut nl = Netlist::new();
+        let a = nl.net();
+        let b = nl.net();
+        nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![b], vec![a]);
+        nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![a], vec![b]);
+        assert!(matches!(nl.check(), Err(NetlistError::CombLoop(_))));
+    }
+
+    #[test]
+    fn ff_breaks_loop() {
+        let mut nl = Netlist::new();
+        let q = nl.net();
+        let d = nl.net();
+        let ce = nl.net();
+        let r = nl.net();
+        nl.add_cell(CellKind::Const { value: true }, vec![], vec![ce]);
+        nl.add_cell(CellKind::Const { value: false }, vec![], vec![r]);
+        nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![q], vec![d]);
+        nl.add_cell(CellKind::Fdre, vec![d, ce, r], vec![q]);
+        assert!(nl.check().is_ok(), "FF must break the cycle");
+    }
+
+    #[test]
+    fn fanouts_counted() {
+        let (mut nl, a, _b, y) = tiny();
+        let z = nl.net();
+        nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![a], vec![z]);
+        nl.outputs.push(("z".into(), vec![z]));
+        let f = nl.fanouts();
+        assert_eq!(f[a.0 as usize], 2); // xor + not
+        assert_eq!(f[y.0 as usize], 1); // top output
+    }
+
+    #[test]
+    fn arity_mismatch_detected() {
+        let mut nl = Netlist::new();
+        let a = nl.net();
+        let y = nl.net();
+        nl.add_cell(CellKind::Input { name: "a".into() }, vec![], vec![a]);
+        nl.add_cell(CellKind::Lut { funcs: vec![Lut::xor2()] }, vec![a], vec![y]); // xor2 wants 2 ins
+        assert!(matches!(nl.check(), Err(NetlistError::Arity(..))));
+    }
+}

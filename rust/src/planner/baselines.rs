@@ -1,0 +1,98 @@
+//! Fixed-policy baseline planners — the comparators behind the paper's
+//! Table III.
+//!
+//! Each baseline models the *resource posture* of a related work as a
+//! restriction of the planner's choice set, so the comparison runs on
+//! identical infrastructure:
+//!
+//! * [`dsp_first`] — "maximize throughput" pipelines in the Luo et al. [4]
+//!   mold: always the most parallel DSP engine (`Conv_4`), regardless of
+//!   what the device actually has.
+//! * [`quantize_first`] — Shao et al. [5]-style: commit to packed 8-bit
+//!   arithmetic everywhere (`Conv_3`), trading precision for density.
+//! * [`static_single`] — Shi et al. [1]-style fixed accelerator: one
+//!   engine kind (`Conv_2`) for every layer.
+//!
+//! The adaptive policy ([`super::Policy::adaptive`]) is the paper's
+//! contribution; Table III's qualitative rows are derived by sweeping all
+//! four policies across devices and model variants (see
+//! [`crate::report::table3`]).
+
+use super::Policy;
+use crate::ips::ConvKind;
+
+/// Throughput-max posture: `Conv_4` only.
+pub fn dsp_first() -> Policy {
+    Policy { name: "dsp-first".into(), allowed: vec![ConvKind::Conv4] }
+}
+
+/// Quantize-everything posture: `Conv_3` only (8-bit ceiling).
+pub fn quantize_first() -> Policy {
+    Policy { name: "quantize-first".into(), allowed: vec![ConvKind::Conv3] }
+}
+
+/// Fixed single-engine posture: `Conv_2` only.
+pub fn static_single() -> Policy {
+    Policy { name: "static-single".into(), allowed: vec![ConvKind::Conv2] }
+}
+
+/// All policies for sweep reports (adaptive first).
+pub fn all() -> Vec<Policy> {
+    vec![Policy::adaptive(), dsp_first(), quantize_first(), static_single()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::model::{Layer, Model};
+    use crate::fabric::device::by_name;
+    use crate::planner::plan;
+
+    #[test]
+    fn dsp_first_fails_on_dsp_starved_device() {
+        // The crux of Table III's "FPGA architecture dependency: High".
+        let m = Model::lenet_tiny();
+        let dev = by_name("edge-nodsp").unwrap();
+        assert!(plan(&m, &dev, 200.0, &dsp_first()).is_err());
+        assert!(plan(&m, &dev, 200.0, &Policy::adaptive()).is_ok());
+    }
+
+    #[test]
+    fn quantize_first_fails_on_wide_precision() {
+        // Table III "Multiple precisions": Conv_3-only cannot do 12-bit.
+        let mut m = Model::lenet_tiny();
+        for layer in &mut m.layers {
+            if let Layer::Conv { params, .. } = layer {
+                params.data_bits = 12;
+                params.coef_bits = 12;
+                params.shift = 11;
+            }
+        }
+        let dev = by_name("zcu104").unwrap();
+        assert!(plan(&m, &dev, 200.0, &quantize_first()).is_err());
+        assert!(plan(&m, &dev, 200.0, &Policy::adaptive()).is_ok());
+    }
+
+    #[test]
+    fn adaptive_at_least_matches_every_baseline() {
+        let m = Model::lenet_tiny();
+        for dev in ["zu2cg", "zcu104", "edge-nodsp"] {
+            let dev = by_name(dev).unwrap();
+            let ours = plan(&m, &dev, 200.0, &Policy::adaptive());
+            for pol in [dsp_first(), quantize_first(), static_single()] {
+                if let Ok(b) = plan(&m, &dev, 200.0, &pol) {
+                    let o = ours.as_ref().expect("adaptive must be feasible wherever a baseline is");
+                    assert!(
+                        o.images_per_sec >= b.images_per_sec * 0.999,
+                        "{} on {}: adaptive {} < {} {}",
+                        pol.name,
+                        dev.name,
+                        o.images_per_sec,
+                        pol.name,
+                        b.images_per_sec
+                    );
+                }
+            }
+        }
+    }
+}

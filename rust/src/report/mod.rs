@@ -1,0 +1,382 @@
+//! Regeneration of every table in the paper's evaluation, plus the
+//! supporting sweeps (DESIGN.md experiment index).
+//!
+//! * [`table1`] — Characteristics of the developed convolution IPs.
+//! * [`table2`] — Resource utilization (LUT/Reg/CLB/DSP/WNS/Power) on the
+//!   ZCU104 at 200 MHz, 8-bit, 3×3 — measured through our synthesis, STA
+//!   and power flows, with the paper's published numbers alongside.
+//! * [`table3`] — Comparison of optimization techniques, with the
+//!   qualitative ratings *derived* from quantitative policy sweeps rather
+//!   than asserted.
+//! * [`sweep_adaptation`] — throughput vs device across policies (Sweep-A).
+//! * [`sweep_precision`] — operand-width sweep per IP (Sweep-B).
+
+use crate::cnn::model::{Layer, Model};
+use crate::fabric::device::{by_name, catalog, Device};
+use crate::ips::{self, ConvKind, ConvParams};
+use crate::planner::{baselines, plan, Policy};
+use crate::power;
+use crate::sta;
+use crate::synth::synthesize;
+use crate::util::table::{fnum, Table};
+
+/// Paper Table II reference rows: (LUTs, Regs, CLBs, DSPs, WNS, Power).
+pub const PAPER_TABLE2: [(u64, u64, u64, u64, f64, f64); 4] = [
+    (105, 54, 15, 0, 2.596, 0.593), // Conv_1
+    (30, 22, 5, 1, 2.276, 0.594),   // Conv_2
+    (45, 32, 10, 1, 2.086, 0.594),  // Conv_3
+    (42, 23, 8, 2, 2.870, 0.596),   // Conv_4
+];
+
+/// Table I — characteristics (regenerated from library metadata).
+pub fn table1() -> Table {
+    let mut t = Table::new(vec!["IP", "DSP Usage", "Logic Usage", "Key Features"]);
+    for kind in ConvKind::ALL {
+        let c = ips::characteristics(kind);
+        t.row(vec![kind.name(), c.dsp_usage, c.logic_usage, c.key_features]);
+    }
+    t
+}
+
+/// One measured Table II row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub kind: ConvKind,
+    pub luts: u64,
+    pub regs: u64,
+    pub clbs: u64,
+    pub dsps: u64,
+    pub wns_ns: f64,
+    pub power_w: f64,
+}
+
+/// Measure the Table II rows on `dev` at `clock_mhz`.
+pub fn table2_rows(dev: &Device, clock_mhz: f64) -> Vec<Table2Row> {
+    let params = ConvParams::paper_8bit();
+    ConvKind::ALL
+        .iter()
+        .map(|&kind| {
+            let ip = ips::generate(kind, &params).expect("paper config always feasible");
+            let u = synthesize(&ip.netlist);
+            let t = sta::analyze(&ip.netlist, clock_mhz, dev.speed_derate).expect("valid netlist");
+            let p = power::estimate(&u, dev, clock_mhz, None);
+            Table2Row {
+                kind,
+                luts: u.luts,
+                regs: u.regs,
+                clbs: u.clbs,
+                dsps: u.dsps,
+                wns_ns: t.wns_ns,
+                power_w: p.total_w(),
+            }
+        })
+        .collect()
+}
+
+/// Table II — measured vs paper.
+pub fn table2(dev: &Device, clock_mhz: f64) -> Table {
+    let rows = table2_rows(dev, clock_mhz);
+    let mut t = Table::new(vec![
+        "IP", "LUTs", "Regs", "CLBs", "DSPs", "WNS (ns)", "Power (W)", "paper LUTs", "paper Regs",
+        "paper CLBs", "paper DSPs", "paper WNS", "paper Power",
+    ])
+    .numeric();
+    for (i, r) in rows.iter().enumerate() {
+        let p = PAPER_TABLE2[i];
+        t.row(vec![
+            r.kind.name().to_string(),
+            r.luts.to_string(),
+            r.regs.to_string(),
+            r.clbs.to_string(),
+            r.dsps.to_string(),
+            fnum(r.wns_ns, 3),
+            fnum(r.power_w, 3),
+            p.0.to_string(),
+            p.1.to_string(),
+            p.2.to_string(),
+            p.3.to_string(),
+            fnum(p.4, 3),
+            fnum(p.5, 3),
+        ]);
+    }
+    t
+}
+
+/// A 12-bit variant of the tiny model (precision stressor for Table III).
+pub fn lenet_tiny_12bit() -> Model {
+    let mut m = Model::lenet_tiny();
+    m.name = "lenet-tiny-12b".into();
+    for layer in &mut m.layers {
+        match layer {
+            Layer::Conv { params, .. } | Layer::Fc { params, .. } => {
+                params.data_bits = 12;
+                params.coef_bits = 12;
+                params.shift = 11;
+            }
+            Layer::MaxPool => {}
+        }
+    }
+    m
+}
+
+/// Quantitative evidence behind one Table III column for one policy.
+#[derive(Debug, Clone)]
+pub struct PolicyAssessment {
+    pub policy: String,
+    /// Devices (of the catalog) where planning FAILED.
+    pub failed_devices: usize,
+    pub total_devices: usize,
+    /// Can it deploy the 12-bit model at all?
+    pub multi_precision: bool,
+    /// throughput(wide model)/throughput(tiny model) on the ZCU104 —
+    /// closer to the workload ratio = better scalability.
+    pub scalability: f64,
+    /// Geometric-mean fraction of the adaptive policy's throughput across
+    /// feasible devices.
+    pub flexibility: f64,
+}
+
+/// Run the policy sweep that substantiates Table III.
+pub fn assess_policies(clock_mhz: f64) -> Vec<PolicyAssessment> {
+    let tiny = Model::lenet_tiny();
+    let wide = Model::lenet_wide(2);
+    let twelve = lenet_tiny_12bit();
+    let devs = catalog();
+    let adaptive = Policy::adaptive();
+    // Adaptive throughput per device (the flexibility yardstick).
+    let adaptive_tp: Vec<Option<f64>> =
+        devs.iter().map(|d| plan(&tiny, d, clock_mhz, &adaptive).ok().map(|p| p.images_per_sec)).collect();
+
+    baselines::all()
+        .into_iter()
+        .map(|pol| {
+            let mut failed = 0;
+            let mut ratios = Vec::new();
+            for (d, atp) in devs.iter().zip(&adaptive_tp) {
+                match plan(&tiny, d, clock_mhz, &pol) {
+                    Ok(p) => {
+                        if let Some(atp) = atp {
+                            ratios.push((p.images_per_sec / atp).min(1.0));
+                        }
+                    }
+                    Err(_) => failed += 1,
+                }
+            }
+            let zcu = by_name("zcu104").unwrap();
+            let scal = match (plan(&wide, &zcu, clock_mhz, &pol), plan(&tiny, &zcu, clock_mhz, &pol)) {
+                (Ok(w), Ok(t)) => w.images_per_sec / t.images_per_sec,
+                _ => 0.0,
+            };
+            let multi = plan(&twelve, &zcu, clock_mhz, &pol).is_ok();
+            let flex = if ratios.is_empty() {
+                0.0
+            } else {
+                (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp()
+                    * (ratios.len() as f64 / devs.len() as f64)
+            };
+            PolicyAssessment {
+                policy: pol.name.clone(),
+                failed_devices: failed,
+                total_devices: devs.len(),
+                multi_precision: multi,
+                scalability: scal,
+                flexibility: flex,
+            }
+        })
+        .collect()
+}
+
+fn rate_dependency(a: &PolicyAssessment) -> &'static str {
+    match a.failed_devices {
+        0 => "Low",
+        1 => "Medium",
+        _ => "High",
+    }
+}
+
+fn rate_scalability(a: &PolicyAssessment) -> &'static str {
+    // The wide model has ~5.7x the tiny model's bottleneck work; retaining
+    // >=1/3 of throughput means resources scaled with the model.
+    if a.scalability >= 0.30 {
+        "High"
+    } else if a.scalability >= 0.15 {
+        "Medium"
+    } else {
+        "Low"
+    }
+}
+
+fn rate_flexibility(a: &PolicyAssessment) -> &'static str {
+    if a.flexibility >= 0.85 {
+        "High"
+    } else if a.flexibility >= 0.5 {
+        "Medium"
+    } else {
+        "Low"
+    }
+}
+
+/// Table III — attribute comparison with ratings derived from
+/// [`assess_policies`]. Columns map to the paper's: this work (adaptive)
+/// vs the three related-work postures.
+pub fn table3(clock_mhz: f64) -> Table {
+    let assessments = assess_policies(clock_mhz);
+    let mut t = Table::new(vec![
+        "Attribute",
+        "This Work (adaptive)",
+        "dsp-first [4]-like",
+        "quantize-first [5]-like",
+        "static-single [1]-like",
+    ]);
+    let col = |f: &dyn Fn(&PolicyAssessment) -> String| -> Vec<String> {
+        assessments.iter().map(|a| f(a)).collect()
+    };
+    let dep = col(&|a| rate_dependency(a).to_string());
+    t.row(vec![
+        "FPGA architecture dependency".to_string(),
+        dep[0].clone(),
+        dep[1].clone(),
+        dep[2].clone(),
+        dep[3].clone(),
+    ]);
+    let mp = col(&|a| if a.multi_precision { "Yes".into() } else { "No".into() });
+    t.row(vec!["Multiple precisions".to_string(), mp[0].clone(), mp[1].clone(), mp[2].clone(), mp[3].clone()]);
+    let sc = col(&|a| rate_scalability(a).to_string());
+    t.row(vec!["Model scalability".to_string(), sc[0].clone(), sc[1].clone(), sc[2].clone(), sc[3].clone()]);
+    let fl = col(&|a| rate_flexibility(a).to_string());
+    t.row(vec!["Resource flexibility".to_string(), fl[0].clone(), fl[1].clone(), fl[2].clone(), fl[3].clone()]);
+    t
+}
+
+/// Sweep-A: throughput (img/s) per device per policy. Uses the wide
+/// model: lenet-tiny saturates its structural-parallelism caps on every
+/// mid-size part and would make all devices look alike.
+pub fn sweep_adaptation(clock_mhz: f64) -> Table {
+    let m = Model::lenet_wide(4);
+    let pols = baselines::all();
+    let mut headers = vec!["device".to_string(), "DSPs".to_string(), "LUTs".to_string()];
+    headers.extend(pols.iter().map(|p| p.name.clone()));
+    let mut t = Table::new(headers).numeric();
+    for dev in catalog() {
+        let mut row = vec![dev.name.clone(), dev.dsps.to_string(), dev.luts.to_string()];
+        for pol in &pols {
+            row.push(match plan(&m, &dev, clock_mhz, pol) {
+                Ok(p) => format!("{:.0}", p.images_per_sec),
+                Err(_) => "infeasible".into(),
+            });
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Sweep-B: operand width vs IP feasibility/resources (the Conv_3 8-bit
+/// ceiling made visible).
+pub fn sweep_precision(dev: &Device, clock_mhz: f64) -> Table {
+    let mut t = Table::new(vec!["width", "IP", "LUTs", "Regs", "DSPs", "WNS (ns)", "lanes"]).numeric();
+    for bits in [4u32, 6, 8, 10, 12, 16] {
+        let params = ConvParams {
+            k: 3,
+            data_bits: bits,
+            coef_bits: bits,
+            out_bits: bits.min(16),
+            shift: bits - 1,
+            round: crate::fixed::Round::Truncate,
+        };
+        for kind in ConvKind::ALL {
+            match ips::generate(kind, &params) {
+                Ok(ip) => {
+                    let u = synthesize(&ip.netlist);
+                    let tm = sta::analyze(&ip.netlist, clock_mhz, dev.speed_derate).unwrap();
+                    t.row(vec![
+                        bits.to_string(),
+                        kind.name().to_string(),
+                        u.luts.to_string(),
+                        u.regs.to_string(),
+                        u.dsps.to_string(),
+                        fnum(tm.wns_ns, 3),
+                        kind.lanes().to_string(),
+                    ]);
+                }
+                Err(_) => {
+                    t.row(vec![
+                        bits.to_string(),
+                        kind.name().to_string(),
+                        "—".into(),
+                        "—".into(),
+                        "—".into(),
+                        "infeasible".into(),
+                        "—".into(),
+                    ]);
+                }
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_four_rows() {
+        let t = table1();
+        assert_eq!(t.n_rows(), 4);
+        assert_eq!(t.cell(0, 0), "Conv_1");
+        assert_eq!(t.cell(3, 1), "2 DSPs");
+    }
+
+    #[test]
+    fn table2_shape_matches_paper() {
+        let dev = by_name("zcu104").unwrap();
+        let rows = table2_rows(&dev, 200.0);
+        // Orderings from the paper (the reproduction contract — see
+        // DESIGN.md: shape, not absolute numbers).
+        let lut = |k: ConvKind| rows.iter().find(|r| r.kind == k).unwrap().luts;
+        assert!(lut(ConvKind::Conv2) < lut(ConvKind::Conv4));
+        assert!(lut(ConvKind::Conv4) <= lut(ConvKind::Conv3));
+        assert!(lut(ConvKind::Conv3) < lut(ConvKind::Conv1));
+        // All meet timing; Conv_3 tightest (§III.B).
+        for r in &rows {
+            assert!(r.wns_ns > 0.0, "{:?}", r.kind);
+        }
+        let wns = |k: ConvKind| rows.iter().find(|r| r.kind == k).unwrap().wns_ns;
+        for k in [ConvKind::Conv1, ConvKind::Conv2, ConvKind::Conv4] {
+            assert!(wns(ConvKind::Conv3) < wns(k));
+        }
+        // Power: static-dominated, Conv_4 highest.
+        for r in &rows {
+            assert!((0.593..0.60).contains(&r.power_w), "{:?} {}", r.kind, r.power_w);
+        }
+        assert!(wpow(&rows, ConvKind::Conv4) > wpow(&rows, ConvKind::Conv1));
+    }
+
+    fn wpow(rows: &[Table2Row], k: ConvKind) -> f64 {
+        rows.iter().find(|r| r.kind == k).unwrap().power_w
+    }
+
+    #[test]
+    fn table3_derivation_matches_paper_shape() {
+        let a = assess_policies(200.0);
+        assert_eq!(a[0].policy, "adaptive");
+        // This work: low dependency, multi-precision, flexible.
+        assert_eq!(a[0].failed_devices, 0, "adaptive must plan on every catalog device");
+        assert!(a[0].multi_precision);
+        assert!(a[0].flexibility > 0.99);
+        // dsp-first fails somewhere and quantize-first lacks precision.
+        let dsp = a.iter().find(|x| x.policy == "dsp-first").unwrap();
+        assert!(dsp.failed_devices >= 1);
+        let q = a.iter().find(|x| x.policy == "quantize-first").unwrap();
+        assert!(!q.multi_precision);
+    }
+
+    #[test]
+    fn sweeps_render() {
+        let dev = by_name("zcu104").unwrap();
+        let s = sweep_precision(&dev, 200.0);
+        assert!(s.n_rows() >= 24);
+        let md = s.markdown();
+        assert!(md.contains("infeasible"), "Conv_3 ceiling must be visible:\n{md}");
+    }
+}

@@ -1,0 +1,127 @@
+//! PJRT/XLA runtime — loads the AOT artifacts `python/compile/aot.py`
+//! produced and executes them from Rust. This is the system's *golden
+//! numeric reference*: the JAX/Pallas model, compiled once at build time,
+//! never Python at run time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → compile on the CPU PJRT client →
+//! execute. Inputs/outputs are int32 (int8-range values) because the xla
+//! crate's `Literal` constructors cover i32 natively.
+
+use crate::cnn::model::Weights;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (relative to the repo root).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory from the current working directory or
+/// its ancestors (tests run from the crate root; binaries may not).
+pub fn find_artifacts() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(ARTIFACT_DIR);
+        if cand.join("model.hlo.txt").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// A compiled XLA executable with fixed input arity.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT CPU client (one per process is plenty).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))
+}
+
+impl Artifact {
+    /// Load + compile an HLO-text artifact.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Artifact { exe, name: path.file_name().unwrap().to_string_lossy().into_owned() })
+    }
+
+    /// Execute with i32 vector inputs; returns the first tuple element as
+    /// i64s (aot.py lowers with return_tuple=True).
+    pub fn run_i32(&self, inputs: &[Vec<i32>]) -> Result<Vec<i64>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| xla::Literal::vec1(v.as_slice())).collect();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+        let vals = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec {}: {e:?}", self.name))?;
+        Ok(vals.into_iter().map(|v| v as i64).collect())
+    }
+}
+
+/// The golden CNN: the AOT-compiled lenet-tiny with baked weights.
+pub struct GoldenCnn {
+    artifact: Artifact,
+    pub in_len: usize,
+    pub out_len: usize,
+}
+
+impl GoldenCnn {
+    pub fn load(client: &xla::PjRtClient, art_dir: &Path) -> Result<GoldenCnn> {
+        let artifact = Artifact::load(client, &art_dir.join("model.hlo.txt"))?;
+        Ok(GoldenCnn { artifact, in_len: 256, out_len: 10 })
+    }
+
+    /// Golden logits for one image.
+    pub fn infer(&self, image: &[i64]) -> Result<Vec<i64>> {
+        if image.len() != self.in_len {
+            return Err(anyhow!("image len {} != {}", image.len(), self.in_len));
+        }
+        let x: Vec<i32> = image.iter().map(|&v| v as i32).collect();
+        let out = self.artifact.run_i32(&[x])?;
+        if out.len() != self.out_len {
+            return Err(anyhow!("logits len {} != {}", out.len(), self.out_len));
+        }
+        Ok(out)
+    }
+}
+
+/// The single-window kernel artifact (IP pass semantics cross-check).
+pub struct WindowKernel {
+    artifact: Artifact,
+}
+
+impl WindowKernel {
+    pub fn load(client: &xla::PjRtClient, art_dir: &Path) -> Result<WindowKernel> {
+        Ok(WindowKernel { artifact: Artifact::load(client, &art_dir.join("window_k3_w8.hlo.txt"))? })
+    }
+
+    pub fn eval(&self, win: &[i64; 9], coef: &[i64; 9]) -> Result<i64> {
+        let w: Vec<i32> = win.iter().map(|&v| v as i32).collect();
+        let c: Vec<i32> = coef.iter().map(|&v| v as i32).collect();
+        let out = self.artifact.run_i32(&[w, c])?;
+        Ok(out[0])
+    }
+}
+
+/// Load `weights.json` written by aot.py.
+pub fn load_weights(art_dir: &Path) -> Result<Weights> {
+    let text = std::fs::read_to_string(art_dir.join("weights.json"))?;
+    let json = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("weights.json: {e}"))?;
+    Weights::from_json(&json).map_err(|e| anyhow!("weights.json: {e}"))
+}
+
+/// The seed aot.py bakes (rngport mirrors our xorshift, so
+/// `Weights::random(model, AOT_WEIGHT_SEED)` must equal `weights.json`).
+pub const AOT_WEIGHT_SEED: u64 = 2025;

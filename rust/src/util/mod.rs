@@ -1,0 +1,20 @@
+//! Self-contained utility substrate.
+//!
+//! This environment has no network access, so every convenience that a
+//! production crate would pull from crates.io (serde, clap, criterion,
+//! proptest, rand) is implemented here from scratch:
+//!
+//! * [`json`] — a strict JSON parser/serializer backing the config system.
+//! * [`rng`] — a deterministic xorshift64* PRNG.
+//! * [`prop`] — a miniature property-based testing harness with shrinking.
+//! * [`table`] — aligned-column table formatting for reports/benches.
+//! * [`cli`] — a subcommand + flag argument parser for the `acf` binary.
+//! * [`bench`] — a micro-benchmark harness (warmup, iterations, robust
+//!   statistics) used by the `benches/` targets in place of criterion.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,250 @@
+//! Miniature property-based testing harness (proptest is unavailable
+//! offline).
+//!
+//! Supports: seeded case generation, failure reporting with the seed that
+//! reproduces it, and greedy shrinking for integer vectors / scalars. The
+//! coordinator/planner invariants and the netlist-vs-behavioral
+//! equivalence checks run through this.
+//!
+//! ```no_run
+//! use acf::util::prop::{forall, Gen};
+//! forall("add commutes", 200, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case-local generator handed to the property body.
+pub struct Gen {
+    rng: Rng,
+    /// Log of drawn scalars, used by shrinking to replay with smaller
+    /// values.
+    log: Vec<i64>,
+    /// When replaying a shrunk candidate, draws are served from here.
+    replay: Option<Vec<i64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), log: Vec::new(), replay: None, cursor: 0 }
+    }
+
+    fn draw(&mut self, fresh: impl FnOnce(&mut Rng) -> i64, clamp: impl Fn(i64) -> i64) -> i64 {
+        let v = if let Some(r) = &self.replay {
+            let raw = r.get(self.cursor).copied().unwrap_or(0);
+            clamp(raw)
+        } else {
+            fresh(&mut self.rng)
+        };
+        self.cursor += 1;
+        self.log.push(v);
+        v
+    }
+
+    /// Uniform i64 in `[lo, hi]`.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.draw(|r| r.range_i64(lo, hi), |v| v.clamp(lo, hi))
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_in(lo as i64, hi as i64) as usize
+    }
+
+    /// Signed value fitting `bits` bits — matches the IP operand domain.
+    pub fn signed_bits(&mut self, bits: u32) -> i64 {
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        self.i64_in(lo, hi)
+    }
+
+    /// Vector of signed `bits`-bit values with the given length.
+    pub fn signed_vec(&mut self, bits: u32, len: usize) -> Vec<i64> {
+        (0..len).map(|_| self.signed_bits(bits)).collect()
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self) -> bool {
+        self.i64_in(0, 1) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of a property body: `Ok(())` on pass, `Err(msg)` describing the
+/// counterexample on failure.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `body`. Panics with a reproduction seed and
+/// the (shrunk) counterexample on failure. The base seed derives from the
+/// property name so independent properties explore independent streams but
+/// every run is reproducible.
+pub fn forall(name: &str, cases: u64, mut body: impl FnMut(&mut Gen) -> PropResult) {
+    let base = fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = body(&mut g) {
+            let draws = g.log.clone();
+            let (shrunk_draws, shrunk_msg) = shrink(&draws, &mut body).unwrap_or((draws, msg));
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x})\n  counterexample: {shrunk_msg}\n  draws: {shrunk_draws:?}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly try halving each drawn scalar toward zero and
+/// truncating the draw log; keep any candidate that still fails.
+fn shrink(
+    draws: &[i64],
+    body: &mut impl FnMut(&mut Gen) -> PropResult,
+) -> Option<(Vec<i64>, String)> {
+    let mut best: Option<(Vec<i64>, String)> = None;
+    let mut current = draws.to_vec();
+    let mut improved = true;
+    let mut budget = 500usize;
+    while improved && budget > 0 {
+        improved = false;
+        for i in 0..current.len() {
+            if budget == 0 {
+                break;
+            }
+            let orig = current[i];
+            for cand in shrink_candidates(orig) {
+                budget -= 1;
+                current[i] = cand;
+                if let Err(msg) = run_replay(&current, body) {
+                    best = Some((current.clone(), msg));
+                    improved = true;
+                    break; // keep this smaller value, move on
+                }
+                current[i] = orig;
+                if budget == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    best
+}
+
+fn shrink_candidates(v: i64) -> Vec<i64> {
+    if v == 0 {
+        return vec![];
+    }
+    let mut out = vec![0];
+    if v.abs() > 1 {
+        out.push(v / 2);
+    }
+    if v < 0 {
+        out.push(-v);
+    }
+    out.push(v - v.signum());
+    out.dedup();
+    out.retain(|&c| c != v);
+    out
+}
+
+fn run_replay(draws: &[i64], body: &mut impl FnMut(&mut Gen) -> PropResult) -> PropResult {
+    let mut g = Gen::new(1);
+    g.replay = Some(draws.to_vec());
+    body(&mut g)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall("always true", 50, |g| {
+            let _ = g.i64_in(0, 10);
+            n += 1;
+            Ok(())
+        });
+        // body re-invoked only during the 50 cases (no shrinking)
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_name() {
+        forall("always false", 10, |g| {
+            let _ = g.i64_in(0, 10);
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_counterexample() {
+        // Property: v < 50. Counterexamples are 50..=1000; minimal is 50.
+        let caught = std::panic::catch_unwind(|| {
+            forall("shrinks", 100, |g| {
+                let v = g.i64_in(0, 1000);
+                if v < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("v={v}"))
+                }
+            });
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // shrinker should get at or near the boundary — well below 900.
+        let v: i64 = msg
+            .split("v=")
+            .nth(1)
+            .unwrap()
+            .split(|c: char| !c.is_ascii_digit())
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(v <= 100, "shrunk to {v}, msg: {msg}");
+    }
+
+    #[test]
+    fn signed_bits_domain() {
+        forall("signed bits domain", 300, |g| {
+            let v = g.signed_bits(8);
+            if (-128..=127).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v}"))
+            }
+        });
+    }
+
+    #[test]
+    fn choose_and_vec() {
+        forall("choose/vec", 50, |g| {
+            let xs = g.signed_vec(4, 9);
+            if xs.len() != 9 {
+                return Err("len".into());
+            }
+            let pick = *g.choose(&[1i64, 2, 3]);
+            if (1..=3).contains(&pick) {
+                Ok(())
+            } else {
+                Err(format!("{pick}"))
+            }
+        });
+    }
+}

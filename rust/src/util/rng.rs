@@ -1,0 +1,189 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! Used for test-vector generation, the property harness, the synthetic
+//! digit corpus, and toggle-activity stimulus in the power model. No
+//! `rand` crate exists in this offline environment; xorshift64* passes the
+//! statistical smoke tests we need (equidistribution over small moduli,
+//! no short cycles) and is trivially reproducible from a seed.
+
+/// xorshift64* generator. `Copy` is deliberately not derived: accidental
+/// copies silently fork the stream, which makes test failures
+/// irreproducible.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create from a seed. A zero seed is remapped (xorshift has a fixed
+    /// point at 0).
+    pub fn new(seed: u64) -> Self {
+        Rng { state: if seed == 0 { 0x9E3779B97F4A7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform u32.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` (n > 0) via Lemire-style rejection to avoid
+    /// modulo bias.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let threshold = n.wrapping_neg() % n;
+        loop {
+            let r = self.next_u64();
+            if r >= threshold {
+                return r % n;
+            }
+        }
+    }
+
+    /// Uniform usize in `[0, n)`.
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform i64 in the inclusive range `[lo, hi]`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128 + 1) as u128;
+        let v = if span > u64::MAX as u128 { self.next_u64() as u128 } else { self.below(span as u64) as u128 };
+        (lo as i128 + v as i128) as i64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.unit_f64() < p
+    }
+
+    /// A signed value that fits in `bits` bits (two's complement),
+    /// i.e. `[-2^(bits-1), 2^(bits-1)-1]`. This is the operand generator
+    /// for the fixed-point IP tests.
+    pub fn signed_bits(&mut self, bits: u32) -> i64 {
+        assert!((1..=63).contains(&bits));
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        self.range_i64(lo, hi)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork a child stream (for parallel workers needing independent
+    /// deterministic streams).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_ok() {
+        let mut r = Rng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(1);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit: {seen:?}");
+    }
+
+    #[test]
+    fn range_inclusive_bounds() {
+        let mut r = Rng::new(2);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..5000 {
+            let v = r.range_i64(-3, 3);
+            assert!((-3..=3).contains(&v));
+            saw_lo |= v == -3;
+            saw_hi |= v == 3;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn signed_bits_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..2000 {
+            let v = r.signed_bits(8);
+            assert!((-128..=127).contains(&v));
+        }
+        // 1-bit: only -1 and 0.
+        for _ in 0..50 {
+            let v = r.signed_bits(1);
+            assert!(v == -1 || v == 0);
+        }
+    }
+
+    #[test]
+    fn unit_f64_range_and_mean() {
+        let mut r = Rng::new(4);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.unit_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..20).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn forked_streams_diverge() {
+        let mut root = Rng::new(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

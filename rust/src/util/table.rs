@@ -1,0 +1,200 @@
+//! Aligned-column table formatting.
+//!
+//! The report module regenerates the paper's Tables I–III through this;
+//! benches print their series with it too. Output styles: GitHub-flavored
+//! markdown and plain aligned text.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create with headers; all columns left-aligned by default.
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        let headers: Vec<String> = headers.into_iter().map(Into::into).collect();
+        let aligns = vec![Align::Left; headers.len()];
+        Table { headers, aligns, rows: Vec::new() }
+    }
+
+    /// Set per-column alignment (panics if length mismatches headers).
+    pub fn align(mut self, aligns: Vec<Align>) -> Self {
+        assert_eq!(aligns.len(), self.headers.len(), "alignment arity");
+        self.aligns = aligns;
+        self
+    }
+
+    /// Convenience: right-align every column except the first.
+    pub fn numeric(mut self) -> Self {
+        for (i, a) in self.aligns.iter_mut().enumerate() {
+            *a = if i == 0 { Align::Left } else { Align::Right };
+        }
+        self
+    }
+
+    /// Append a row (panics on arity mismatch — a malformed report is a bug).
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Cell accessor used by tests that assert on regenerated tables.
+    pub fn cell(&self, row: usize, col: usize) -> &str {
+        &self.rows[row][col]
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&self.md_row(&self.headers, &w));
+        out.push('\n');
+        out.push('|');
+        for (i, wi) in w.iter().enumerate() {
+            match self.aligns[i] {
+                Align::Left => out.push_str(&format!(" {:-<1$} |", "", *wi)),
+                Align::Right => out.push_str(&format!(" {:-<1$}: |", "", wi.saturating_sub(1))),
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&self.md_row(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    fn md_row(&self, cells: &[String], w: &[usize]) -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            let pad = w[i].saturating_sub(c.chars().count());
+            match self.aligns[i] {
+                Align::Left => s.push_str(&format!(" {}{} |", c, " ".repeat(pad))),
+                Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), c)),
+            }
+        }
+        s
+    }
+
+    /// Plain aligned-text rendering (two-space gutters).
+    pub fn plain(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                let pad = w[i].saturating_sub(c.chars().count());
+                match self.aligns[i] {
+                    Align::Left => {
+                        s.push_str(c);
+                        if i + 1 < cells.len() {
+                            s.push_str(&" ".repeat(pad));
+                        }
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad));
+                        s.push_str(c);
+                    }
+                }
+            }
+            s
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len().saturating_sub(1))));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `prec` decimals, trimming to a stable width for
+/// table cells (e.g. WNS values: `2.596`).
+pub fn fnum(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new(vec!["IP", "LUTs", "DSPs"]).numeric();
+        t.row(vec!["Conv_1", "105", "0"]);
+        t.row(vec!["Conv_2", "30", "1"]);
+        t
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().markdown();
+        let lines: Vec<&str> = md.trim_end().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("| IP"));
+        assert!(lines[1].contains("---"));
+        assert!(lines[2].contains("Conv_1"));
+        // numeric columns right-aligned: "105" appears right-padded-left
+        assert!(lines[2].contains(" 105 |"));
+    }
+
+    #[test]
+    fn plain_alignment() {
+        let p = sample().plain();
+        let lines: Vec<&str> = p.lines().collect();
+        // All data lines same width for right-aligned last col.
+        assert!(lines[2].ends_with('0'));
+        assert!(lines[3].ends_with('1'));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only one"]);
+    }
+
+    #[test]
+    fn fnum_precision() {
+        assert_eq!(fnum(2.5964, 3), "2.596");
+        assert_eq!(fnum(0.5935, 3), "0.594"); // rounds
+    }
+
+    #[test]
+    fn cell_access() {
+        let t = sample();
+        assert_eq!(t.cell(1, 1), "30");
+        assert_eq!(t.n_rows(), 2);
+    }
+}

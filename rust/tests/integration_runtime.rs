@@ -1,0 +1,101 @@
+//! Cross-layer integration: the AOT-compiled JAX/Pallas artifacts
+//! (executed through PJRT) must agree bit-for-bit with the Rust
+//! behavioral stack and the deployed coordinator pipeline.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use acf::cnn::data::Dataset;
+use acf::cnn::infer::{argmax, infer};
+use acf::cnn::model::{Model, Weights};
+use acf::coordinator::Deployment;
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::runtime::{self, cpu_client, GoldenCnn, WindowKernel};
+use acf::util::rng::Rng;
+
+fn art_dir() -> std::path::PathBuf {
+    runtime::find_artifacts().expect(
+        "artifacts/ not found — run `make artifacts` before `cargo test` (the Makefile does)",
+    )
+}
+
+#[test]
+fn weights_json_matches_rust_rng_port() {
+    // aot.py derives weights through the Python port of our xorshift64*;
+    // both sides must produce identical values from the seed.
+    let model = Model::lenet_tiny();
+    let ours = Weights::random(&model, runtime::AOT_WEIGHT_SEED);
+    let theirs = runtime::load_weights(&art_dir()).expect("weights.json loads");
+    assert_eq!(ours, theirs, "rng port drifted between rust and python");
+}
+
+#[test]
+fn window_kernel_matches_fixed_point_reference() {
+    let client = cpu_client().unwrap();
+    let wk = WindowKernel::load(&client, &art_dir()).unwrap();
+    let params = acf::ips::ConvParams::paper_8bit();
+    let mut rng = Rng::new(0xA0A0);
+    for trial in 0..200 {
+        let mut win = [0i64; 9];
+        let mut coef = [0i64; 9];
+        for i in 0..9 {
+            win[i] = rng.signed_bits(8);
+            coef[i] = rng.signed_bits(8);
+        }
+        let got = wk.eval(&win, &coef).unwrap();
+        let want = params.window_ref(&win, &coef);
+        assert_eq!(got, want, "trial {trial}: win={win:?} coef={coef:?}");
+    }
+    // Saturation corners.
+    let hi = [127i64; 9];
+    let lo = [-128i64; 9];
+    assert_eq!(wk.eval(&hi, &hi).unwrap(), 127);
+    assert_eq!(wk.eval(&hi, &lo).unwrap(), -128);
+}
+
+#[test]
+fn golden_cnn_matches_behavioral_inference() {
+    let client = cpu_client().unwrap();
+    let art = art_dir();
+    let golden = GoldenCnn::load(&client, &art).unwrap();
+    let model = Model::lenet_tiny();
+    let weights = runtime::load_weights(&art).unwrap();
+    let ds = Dataset::generate(20, 77, 16, 16);
+    for img in &ds.images {
+        let want = infer(&model, &weights, &img.pix);
+        let got = golden.infer(&img.pix).unwrap();
+        assert_eq!(got, want, "image label {}", img.label);
+    }
+}
+
+#[test]
+fn deployed_pipeline_matches_golden_end_to_end() {
+    // The full chain: coordinator (threaded, planned IPs, behavioral
+    // models verified against netlists) == XLA(JAX/Pallas) golden.
+    let client = cpu_client().unwrap();
+    let art = art_dir();
+    let golden = GoldenCnn::load(&client, &art).unwrap();
+    let model = Model::lenet_tiny();
+    let weights = runtime::load_weights(&art).unwrap();
+    let dev = by_name("zcu104").unwrap();
+    let dep = Deployment::new(model, weights, &dev, 200.0, &Policy::adaptive()).unwrap();
+    let ds = Dataset::generate(16, 123, 16, 16);
+    let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+    let fabric = dep.infer_batch(&images).unwrap();
+    let mut agree = 0;
+    for (img, fab) in images.iter().zip(&fabric) {
+        let gold = golden.infer(img).unwrap();
+        assert_eq!(fab, &gold, "logits must be bit-identical");
+        if argmax(fab) == argmax(&gold) {
+            agree += 1;
+        }
+    }
+    assert_eq!(agree, images.len());
+}
+
+#[test]
+fn golden_rejects_bad_shapes() {
+    let client = cpu_client().unwrap();
+    let golden = GoldenCnn::load(&client, &art_dir()).unwrap();
+    assert!(golden.infer(&[0i64; 7]).is_err());
+}
