@@ -1,8 +1,12 @@
 //! Hot-path micro-benchmarks (the §Perf targets in DESIGN.md):
 //!   - netlist simulator cell-eval throughput,
 //!   - behavioral window throughput (coordinator inner loop),
-//!   - planner end-to-end latency,
+//!   - planner end-to-end latency (the unified engine-registry loop),
 //!   - threaded pipeline images/s.
+//!
+//! Emits `BENCH_hotpath.json` (our harness's machine-readable series —
+//! criterion is unavailable offline) so planner regressions are visible
+//! across runs.
 use acf::cnn::data::Dataset;
 use acf::cnn::model::{Model, Weights};
 use acf::coordinator::Deployment;
@@ -10,7 +14,7 @@ use acf::fabric::device::by_name;
 use acf::ips::{self, ConvKind, ConvParams};
 use acf::netlist::sim::Sim;
 use acf::planner::Policy;
-use acf::util::bench::{report, Bench};
+use acf::util::bench::{report, write_json, Bench};
 
 fn main() {
     let b = Bench::default();
@@ -46,12 +50,22 @@ fn main() {
         stats.push(s);
     }
 
-    // 3. Planner latency.
+    // 3. Planner latency: the uniform engine loop, small and wide models.
+    //    (First call per (model, device) pays generation+synthesis+STA;
+    //    the memo cache then reduces plan() to the binary search itself —
+    //    which is exactly the regression these series track.)
     {
-        let m = Model::lenet_tiny();
         let dev = by_name("zcu104").unwrap();
-        let s = b.run("planner::plan (lenet-tiny/zcu104)", || {
-            acf::planner::plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap()
+        for m in [Model::lenet_tiny(), Model::lenet_wide(4)] {
+            let s = b.run(&format!("planner::plan ({}/zcu104)", m.name), || {
+                acf::planner::plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap()
+            });
+            stats.push(s);
+        }
+        let edge = by_name("edge-nodsp").unwrap();
+        let m = Model::lenet_tiny();
+        let s = b.run("planner::plan (lenet-tiny/edge-nodsp)", || {
+            acf::planner::plan(&m, &edge, 200.0, &Policy::adaptive()).unwrap()
         });
         stats.push(s);
     }
@@ -70,4 +84,8 @@ fn main() {
     }
 
     report("hot paths", &stats);
+    match write_json("BENCH_hotpath.json", "hotpath", &stats) {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json ({} cases)", stats.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

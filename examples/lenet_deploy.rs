@@ -36,22 +36,22 @@ fn main() {
 
     println!("== deploy: {} on {} @ 200 MHz ==", model.name, dev.name);
     let dep = Deployment::new(model.clone(), weights, &dev, 200.0, &Policy::adaptive()).unwrap();
-    for lp in &dep.plan.conv {
+    for ep in &dep.plan.engines {
         println!(
-            "  conv layer {}: {} x{} instances ({} windows/img)",
-            lp.layer,
-            lp.kind.name(),
-            lp.instances,
-            lp.windows
+            "  layer {}: {} x{} instances ({} work units/img)",
+            ep.layer,
+            ep.kind.name(),
+            ep.instances,
+            ep.work
         );
     }
     let (pd, pl) = dep.plan.pressure();
     println!("  resources: DSP {:.1}%  LUT {:.1}%", pd * 100.0, pl * 100.0);
 
-    println!("\n== netlist spot-verification of planned IPs ==");
-    for lp in &dep.plan.conv {
-        let n = acf::sim::netlist_layer_check(&dep.model, &dep.plan, lp.layer, 0xE2E, 16).unwrap();
-        println!("  layer {}: {} windows through the {} netlist — exact", lp.layer, n, lp.kind.name());
+    println!("\n== netlist spot-verification of planned conv IPs ==");
+    for ep in dep.plan.convs() {
+        let n = acf::sim::netlist_layer_check(&dep.model, &dep.plan, ep.layer, 0xE2E, 16).unwrap();
+        println!("  layer {}: {} windows through the {} netlist — exact", ep.layer, n, ep.kind.name());
     }
 
     println!("\n== serve {n_images} synthetic digit images ==");

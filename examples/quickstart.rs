@@ -46,9 +46,9 @@ fn main() {
         match plan(&model, &dev, 200.0, &Policy::adaptive()) {
             Ok(p) => {
                 let picks: Vec<String> = p
-                    .conv
+                    .engines
                     .iter()
-                    .map(|lp| format!("L{}={}x{}", lp.layer, lp.kind.name(), lp.instances))
+                    .map(|ep| format!("L{}={}x{}", ep.layer, ep.kind.name(), ep.instances))
                     .collect();
                 println!(
                     "  {:10}  {}  -> {:.0} img/s  (DSP {:.0}%, LUT {:.0}%)",

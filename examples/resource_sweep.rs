@@ -18,9 +18,9 @@ fn main() {
         match plan(&m, &dev, 200.0, &Policy::adaptive()) {
             Ok(p) => {
                 let mix: Vec<String> = p
-                    .conv
+                    .engines
                     .iter()
-                    .map(|lp| format!("L{}: {} x{}", lp.layer, lp.kind.name(), lp.instances))
+                    .map(|ep| format!("L{}: {} x{}", ep.layer, ep.kind.name(), ep.instances))
                     .collect();
                 println!("  {:10} -> {}", dev.name, mix.join("; "));
             }

@@ -15,6 +15,12 @@ pub enum Layer {
     Fc { out_dim: usize, params: ConvParams, relu: bool },
 }
 
+/// Elements pooled per [`Layer::MaxPool`] output (2×2, stride 2). The
+/// planner profiles a comparator tree of exactly this size; keep in sync
+/// with [`Model::shapes`]'s dimension halving and the coordinator's 2×2
+/// window indexing if pooling geometry is ever generalized.
+pub const POOL_WINDOW: u32 = 4;
+
 /// A model: input geometry plus the layer stack.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Model {
@@ -106,23 +112,6 @@ impl Model {
             out.push(cur);
         }
         Ok(out)
-    }
-
-    /// Total conv window passes per image per conv layer (the planner's
-    /// workload measure): `out_h · out_w · out_ch · in_ch`.
-    pub fn conv_workloads(&self) -> Vec<(usize, u64)> {
-        let shapes = self.shapes().expect("valid model");
-        let mut cur = Shape { h: self.in_h, w: self.in_w, ch: self.in_ch };
-        let mut out = Vec::new();
-        for (i, layer) in self.layers.iter().enumerate() {
-            if let Layer::Conv { in_ch, out_ch, .. } = layer {
-                let s = shapes[i];
-                out.push((i, (s.h * s.w * out_ch * in_ch) as u64));
-            }
-            cur = shapes[i];
-        }
-        let _ = cur;
-        out
     }
 
     pub fn to_json(&self) -> Json {
@@ -306,15 +295,6 @@ mod tests {
         assert_eq!(s[2], Shape { h: 5, w: 5, ch: 8 }); // conv
         assert_eq!(s[3], Shape { h: 2, w: 2, ch: 8 }); // pool
         assert_eq!(s[4], Shape { h: 1, w: 1, ch: 10 }); // fc
-    }
-
-    #[test]
-    fn workloads() {
-        let m = Model::lenet_tiny();
-        let w = m.conv_workloads();
-        assert_eq!(w.len(), 2);
-        assert_eq!(w[0], (0, 14 * 14 * 4));
-        assert_eq!(w[1], (2, (5 * 5 * 8 * 4) as u64));
     }
 
     #[test]

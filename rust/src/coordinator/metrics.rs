@@ -1,4 +1,9 @@
 //! Deployment metrics: thread-safe counters the leader reports.
+//!
+//! Besides batch totals, the pipeline records *per-layer* worker wall
+//! time, keyed by the same layer indices the engine plan uses — so a
+//! report can put modeled cycles (from [`crate::planner::EnginePlan`])
+//! and measured host time side by side for every layer.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -9,14 +14,19 @@ pub struct Metrics {
     images: AtomicU64,
     batches: AtomicU64,
     wall_nanos: AtomicU64,
+    /// Per-layer worker wall time (nanoseconds), index = layer index.
+    layer_nanos: Vec<AtomicU64>,
 }
 
 /// A point-in-time view.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Snapshot {
     pub images: u64,
     pub batches: u64,
     pub wall_secs: f64,
+    /// Cumulative per-layer worker seconds (empty when the deployment was
+    /// built without layer accounting).
+    pub layer_secs: Vec<f64>,
 }
 
 impl Snapshot {
@@ -27,13 +37,41 @@ impl Snapshot {
             0.0
         }
     }
+
+    /// The layer whose workers burned the most wall time (the measured
+    /// counterpart of the plan's modeled bottleneck). `None` until some
+    /// layer has actually recorded work.
+    pub fn hottest_layer(&self) -> Option<usize> {
+        self.layer_secs
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s > 0.0)
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+    }
 }
 
 impl Metrics {
+    /// Metrics with per-layer accounting for `n_layers` pipeline stages.
+    pub fn with_layers(n_layers: usize) -> Metrics {
+        Metrics {
+            layer_nanos: (0..n_layers).map(|_| AtomicU64::new(0)).collect(),
+            ..Metrics::default()
+        }
+    }
+
     pub fn record_batch(&self, images: u64, wall: Duration) {
         self.images.fetch_add(images, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.wall_nanos.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one worker invocation for layer `li` (no-op for layers the
+    /// metrics were not sized for).
+    pub fn record_layer(&self, li: usize, wall: Duration) {
+        if let Some(cell) = self.layer_nanos.get(li) {
+            cell.fetch_add(wall.as_nanos() as u64, Ordering::Relaxed);
+        }
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -41,6 +79,11 @@ impl Metrics {
             images: self.images.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             wall_secs: self.wall_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            layer_secs: self
+                .layer_nanos
+                .iter()
+                .map(|n| n.load(Ordering::Relaxed) as f64 / 1e9)
+                .collect(),
         }
     }
 }
@@ -59,5 +102,22 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert!((s.wall_secs - 0.04).abs() < 1e-6);
         assert!(s.throughput() > 0.0);
+        assert!(s.layer_secs.is_empty());
+        assert_eq!(s.hottest_layer(), None);
+    }
+
+    #[test]
+    fn per_layer_accounting() {
+        let m = Metrics::with_layers(3);
+        m.record_layer(0, Duration::from_millis(1));
+        m.record_layer(2, Duration::from_millis(5));
+        m.record_layer(2, Duration::from_millis(5));
+        m.record_layer(9, Duration::from_millis(99)); // out of range: ignored
+        let s = m.snapshot();
+        assert_eq!(s.layer_secs.len(), 3);
+        assert!((s.layer_secs[0] - 0.001).abs() < 1e-9);
+        assert_eq!(s.layer_secs[1], 0.0);
+        assert!((s.layer_secs[2] - 0.010).abs() < 1e-9);
+        assert_eq!(s.hottest_layer(), Some(2));
     }
 }

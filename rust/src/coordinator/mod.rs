@@ -5,8 +5,10 @@
 //! connected by bounded channels (the fabric's line-buffer backpressure,
 //! modeled at image granularity). Values are computed with the bit-exact
 //! behavioral layer models (the netlists are spot-verified against them by
-//! [`crate::sim::netlist_layer_check`]); time comes from the schedule
-//! model. Python never appears here — the XLA golden path lives in
+//! [`crate::sim::netlist_layer_check`]); time comes from the engine plan's
+//! schedule model, and per-layer worker wall time is recorded in
+//! [`metrics::Metrics`] keyed by the same layer indices the engine plan
+//! uses. Python never appears here — the XLA golden path lives in
 //! [`crate::runtime`] and is only consulted for verification.
 
 pub mod metrics;
@@ -29,14 +31,41 @@ pub struct Deployment {
     pub metrics: metrics::Metrics,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DeployError {
-    #[error(transparent)]
-    Plan(#[from] PlanError),
-    #[error("input image has {got} pixels, model wants {want}")]
+    Plan(PlanError),
     BadImage { got: usize, want: usize },
-    #[error("input pixel {0} outside the symmetric range [-127, 127] — would trip the Conv_3 packing clamp")]
     AsymmetricInput(i64),
+}
+
+impl std::fmt::Display for DeployError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeployError::Plan(e) => e.fmt(f),
+            DeployError::BadImage { got, want } => {
+                write!(f, "input image has {got} pixels, model wants {want}")
+            }
+            DeployError::AsymmetricInput(v) => write!(
+                f,
+                "input pixel {v} outside the symmetric range [-127, 127] — would trip the Conv_3 packing clamp"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DeployError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DeployError::Plan(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<PlanError> for DeployError {
+    fn from(e: PlanError) -> DeployError {
+        DeployError::Plan(e)
+    }
 }
 
 impl Deployment {
@@ -49,7 +78,20 @@ impl Deployment {
         policy: &Policy,
     ) -> Result<Deployment, DeployError> {
         let plan = make_plan(&model, dev, clock_mhz, policy)?;
-        Ok(Deployment { model, weights: Arc::new(weights), plan, metrics: metrics::Metrics::default() })
+        let metrics = metrics::Metrics::with_layers(model.layers.len());
+        Ok(Deployment { model, weights: Arc::new(weights), plan, metrics })
+    }
+
+    /// Modeled cycles/image per layer from the engine plan (a layer's
+    /// engines — e.g. conv + fused ReLU — run pipelined, so the layer's
+    /// interval is the max over its engines). Keyed by layer index, the
+    /// same key [`metrics::Snapshot::layer_secs`] uses for measured time.
+    pub fn layer_cycles(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.model.layers.len()];
+        for ep in &self.plan.engines {
+            out[ep.layer] = out[ep.layer].max(ep.cycles_per_image);
+        }
+        out
     }
 
     /// Ingress guard: shape + symmetric-range check (see module docs of
@@ -67,13 +109,18 @@ impl Deployment {
 
     /// Serve a batch through the layer pipeline: one worker thread per
     /// layer, bounded channels for backpressure. Returns per-image logits
-    /// in order.
-    pub fn infer_batch(&self, images: &[Vec<i64>]) -> Result<Vec<Vec<i64>>, DeployError> {
+    /// in order. Accepts any slice of image-like values (`Vec<i64>`,
+    /// `&[i64]`, ...) so single-image callers need no copy.
+    pub fn infer_batch<I>(&self, images: &[I]) -> Result<Vec<Vec<i64>>, DeployError>
+    where
+        I: AsRef<[i64]> + Sync,
+    {
         for img in images {
-            self.check_image(img)?;
+            self.check_image(img.as_ref())?;
         }
         let t0 = std::time::Instant::now();
         let n_layers = self.model.layers.len();
+        let metrics = &self.metrics;
         let results: Vec<Vec<i64>> = std::thread::scope(|scope| {
             // Stage 0 feeds images as single-channel tensors.
             let (tx0, mut rx_prev) = mpsc::sync_channel::<Tensor>(CHANNEL_DEPTH);
@@ -81,6 +128,7 @@ impl Deployment {
             let weights = &self.weights;
             scope.spawn(move || {
                 for img in images {
+                    let img = img.as_ref();
                     let t: Tensor = (0..model.in_ch)
                         .map(|c| {
                             img[c * model.in_h * model.in_w..(c + 1) * model.in_h * model.in_w]
@@ -102,7 +150,9 @@ impl Deployment {
                     // worker, not per image (EXPERIMENTS.md §Perf item 5).
                     let geom = layer_input_geometry(model, li);
                     while let Ok(t) = rx_in.recv() {
+                        let lt0 = std::time::Instant::now();
                         let out = apply_layer(model, weights, li, &t, geom);
+                        metrics.record_layer(li, lt0.elapsed());
                         if tx.send(out).is_err() {
                             return;
                         }
@@ -120,9 +170,9 @@ impl Deployment {
         Ok(results)
     }
 
-    /// Single image convenience.
+    /// Single image convenience (borrows — no per-call image copy).
     pub fn infer_one(&self, image: &[i64]) -> Result<Vec<i64>, DeployError> {
-        Ok(self.infer_batch(std::slice::from_ref(&image.to_vec()))?.pop().unwrap())
+        Ok(self.infer_batch(std::slice::from_ref(&image))?.pop().unwrap())
     }
 }
 
@@ -236,6 +286,7 @@ mod tests {
     use crate::cnn::data::Dataset;
     use crate::cnn::model::{Model, Weights};
     use crate::fabric::device::by_name;
+    use crate::ips::engine::EngineKind;
 
     fn deploy() -> Deployment {
         let m = Model::lenet_tiny();
@@ -287,5 +338,24 @@ mod tests {
         assert_eq!(snap.images, 8);
         assert_eq!(snap.batches, 2);
         assert!(snap.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn per_layer_timing_keyed_off_engine_plan() {
+        let d = deploy();
+        let ds = Dataset::generate(6, 2, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        d.infer_batch(&images).unwrap();
+        let snap = d.metrics.snapshot();
+        // One measured slot per model layer, and every worker ran.
+        assert_eq!(snap.layer_secs.len(), d.model.layers.len());
+        assert!(snap.layer_secs.iter().all(|&s| s > 0.0), "{:?}", snap.layer_secs);
+        assert!(snap.hottest_layer().is_some());
+        // The modeled side uses the same keying: every planned engine maps
+        // into the per-layer cycle vector, pool/ReLU included.
+        let cycles = d.layer_cycles();
+        assert_eq!(cycles.len(), d.model.layers.len());
+        assert!(cycles.iter().all(|&c| c > 0.0), "{cycles:?}");
+        assert!(d.plan.engines.iter().any(|ep| ep.kind == EngineKind::MaxPool));
     }
 }

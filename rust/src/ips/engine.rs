@@ -1,0 +1,261 @@
+//! The unified engine registry — one abstraction over every layer engine
+//! the IP library can put on the fabric.
+//!
+//! The paper's conclusion promises expanding the adaptive IP library "to
+//! include pooling and activation functions"; this module is where that
+//! expansion becomes *uniform* instead of a pile of special cases. An
+//! [`EngineKind`] names any deployable engine — the four convolution IPs,
+//! the serial FC MAC, the max-pool comparator tree, and the ReLU gate —
+//! and every kind answers the same three questions:
+//!
+//! 1. [`generate`] — netlist + steady-state rate for a parameterization,
+//! 2. [`EngineKind::work_per_image`] — how many work units (windows, MACs,
+//!    or elements) one image costs at a given layer,
+//! 3. [`EngineKind::structural_cap`] — how many instances the streaming
+//!    dataflow can actually feed.
+//!
+//! The planner ([`crate::planner`]) consumes exactly this surface, so a
+//! new layer type (strided conv, avg-pool, ...) is one new registry entry
+//! — not another planner special case.
+
+use super::params::{ConvKind, ConvParams};
+use crate::cnn::model::{Layer, Model, Shape};
+use crate::fixed::Round;
+use crate::netlist::Netlist;
+
+/// Every engine the registry can deploy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EngineKind {
+    /// One of the paper's four convolution IPs.
+    Conv(ConvKind),
+    /// Serial MAC fully-connected engine (1 MAC/cycle).
+    Fc,
+    /// Max-pool comparator tree (1 pooled output/cycle).
+    MaxPool,
+    /// ReLU gate (1 element/cycle).
+    Relu,
+}
+
+impl EngineKind {
+    /// Display name (conv kinds keep their Table I names).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Conv(k) => k.name(),
+            EngineKind::Fc => "FC",
+            EngineKind::MaxPool => "MaxPool",
+            EngineKind::Relu => "ReLU",
+        }
+    }
+
+    /// The conv kind, when this engine is one of the four conv IPs.
+    pub fn conv_kind(&self) -> Option<ConvKind> {
+        match self {
+            EngineKind::Conv(k) => Some(*k),
+            _ => None,
+        }
+    }
+
+    /// Work units one image costs at layer `li`: conv counts window
+    /// passes, FC counts MACs, pool/ReLU count elements. `shapes` is
+    /// `model.shapes()`. Returns 0 for a kind that cannot serve the layer.
+    pub fn work_per_image(&self, model: &Model, li: usize, shapes: &[Shape]) -> u64 {
+        let s = shapes[li];
+        match (self, &model.layers[li]) {
+            (EngineKind::Conv(_), Layer::Conv { in_ch, out_ch, .. }) => {
+                (s.h * s.w * out_ch * in_ch) as u64
+            }
+            (EngineKind::Fc, Layer::Fc { out_dim, .. }) => {
+                (fc_in_dim(model, li, shapes) * out_dim) as u64
+            }
+            (EngineKind::MaxPool, Layer::MaxPool) => s.numel() as u64,
+            // ReLU rides fused on a conv/fc layer's output stream.
+            (EngineKind::Relu, Layer::Conv { .. } | Layer::Fc { .. }) => s.numel() as u64,
+            _ => 0,
+        }
+    }
+
+    /// Structural parallelism ceiling at layer `li`: finer splits would
+    /// need broadcast bandwidth the streaming front-end doesn't have.
+    pub fn structural_cap(&self, model: &Model, li: usize, shapes: &[Shape]) -> u64 {
+        let s = shapes[li];
+        match (self, &model.layers[li]) {
+            // One conv engine per (in_ch, out_ch, output_row) tuple.
+            (EngineKind::Conv(_), Layer::Conv { in_ch, out_ch, .. }) => {
+                (*in_ch as u64) * (*out_ch as u64) * s.h as u64
+            }
+            // One FC engine per neuron.
+            (EngineKind::Fc, Layer::Fc { out_dim, .. }) => *out_dim as u64,
+            // One element-stream engine per (channel, output_row).
+            (EngineKind::MaxPool, Layer::MaxPool)
+            | (EngineKind::Relu, Layer::Conv { .. } | Layer::Fc { .. }) => {
+                (s.ch * s.h) as u64
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// Input fan-in of the FC layer at `li` (flattened predecessor shape).
+/// `shapes` is `model.shapes()`.
+pub fn fc_in_dim(model: &Model, li: usize, shapes: &[Shape]) -> usize {
+    if li == 0 {
+        model.in_h * model.in_w * model.in_ch
+    } else {
+        shapes[li - 1].numel()
+    }
+}
+
+/// Uniform parameter block for any engine. Hash/Eq so profiles memoize.
+///
+/// `arith` always carries the operand/requant contract; `fanin` is only
+/// meaningful for [`EngineKind::Fc`] and `window` only for
+/// [`EngineKind::MaxPool`] — the constructors zero the irrelevant fields
+/// so equal configurations compare (and therefore cache) equal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EngineParams {
+    pub arith: ConvParams,
+    /// FC dot-product length (0 for non-FC engines).
+    pub fanin: u32,
+    /// Pool window elements (0 for non-pool engines).
+    pub window: u32,
+}
+
+impl EngineParams {
+    pub fn conv(p: ConvParams) -> EngineParams {
+        EngineParams { arith: p, fanin: 0, window: 0 }
+    }
+
+    pub fn fc(p: ConvParams, fanin: u32) -> EngineParams {
+        EngineParams { arith: p, fanin, window: 0 }
+    }
+
+    /// Canonical contract for element-stream engines (pool/ReLU): only
+    /// the data width matters, so everything else is pinned.
+    fn elem(bits: u32) -> ConvParams {
+        ConvParams { k: 1, data_bits: bits, coef_bits: 2, out_bits: bits, shift: 0, round: Round::Truncate }
+    }
+
+    pub fn pool(bits: u32, window: u32) -> EngineParams {
+        EngineParams { arith: Self::elem(bits), fanin: 0, window }
+    }
+
+    pub fn relu(bits: u32) -> EngineParams {
+        EngineParams { arith: Self::elem(bits), fanin: 0, window: 0 }
+    }
+}
+
+/// A generated engine: the netlist plus its steady-state schedule.
+#[derive(Debug, Clone)]
+pub struct EngineIp {
+    pub kind: EngineKind,
+    pub netlist: Netlist,
+    /// Work units per cycle per instance (windows, MACs, or elements).
+    pub rate: f64,
+}
+
+/// Generate any registry engine. Errors (never panics) when the kind
+/// cannot implement the parameters — e.g. `Conv_3` above 8 bits, FC
+/// fan-in overflowing the accumulator, or element widths outside the
+/// comparator/gate generators' ranges.
+pub fn generate(kind: EngineKind, p: &EngineParams) -> Result<EngineIp, String> {
+    match kind {
+        EngineKind::Conv(ck) => {
+            let ip = super::generate(ck, &p.arith)?;
+            Ok(EngineIp { kind, rate: ip.throughput_per_cycle(), netlist: ip.netlist })
+        }
+        EngineKind::Fc => {
+            let ip = super::fc::generate(&p.arith, p.fanin)?;
+            Ok(EngineIp { kind, rate: 1.0, netlist: ip.netlist })
+        }
+        EngineKind::MaxPool => {
+            let bits = p.arith.data_bits;
+            if !(2..=32).contains(&bits) {
+                return Err(format!("MaxPool data width {bits} outside 2..=32"));
+            }
+            if !(2..=16).contains(&p.window) {
+                return Err(format!("MaxPool window {} outside 2..=16", p.window));
+            }
+            let ip = super::pool::generate(bits, p.window);
+            Ok(EngineIp { kind, rate: 1.0, netlist: ip.netlist })
+        }
+        EngineKind::Relu => {
+            let bits = p.arith.data_bits;
+            if !(2..=32).contains(&bits) {
+                return Err(format!("ReLU data width {bits} outside 2..=32"));
+            }
+            let ip = super::relu::generate(bits);
+            Ok(EngineIp { kind, rate: 1.0, netlist: ip.netlist })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::model::Model;
+
+    #[test]
+    fn names_and_conv_kind() {
+        assert_eq!(EngineKind::Conv(ConvKind::Conv3).name(), "Conv_3");
+        assert_eq!(EngineKind::Fc.name(), "FC");
+        assert_eq!(EngineKind::MaxPool.name(), "MaxPool");
+        assert_eq!(EngineKind::Relu.name(), "ReLU");
+        assert_eq!(EngineKind::Fc.conv_kind(), None);
+        assert_eq!(EngineKind::Conv(ConvKind::Conv1).conv_kind(), Some(ConvKind::Conv1));
+    }
+
+    #[test]
+    fn work_and_caps_on_lenet() {
+        let m = Model::lenet_tiny();
+        let shapes = m.shapes().unwrap();
+        let conv = EngineKind::Conv(ConvKind::Conv2);
+        // Layer 0: conv 16x16x1 -> 14x14x4.
+        assert_eq!(conv.work_per_image(&m, 0, &shapes), 14 * 14 * 4);
+        assert_eq!(conv.structural_cap(&m, 0, &shapes), 4 * 14);
+        assert_eq!(EngineKind::Relu.work_per_image(&m, 0, &shapes), 14 * 14 * 4);
+        // Layer 1: pool -> 7x7x4.
+        assert_eq!(EngineKind::MaxPool.work_per_image(&m, 1, &shapes), 7 * 7 * 4);
+        assert_eq!(EngineKind::MaxPool.structural_cap(&m, 1, &shapes), 4 * 7);
+        // Layer 4: fc 32 -> 10.
+        assert_eq!(EngineKind::Fc.work_per_image(&m, 4, &shapes), 32 * 10);
+        assert_eq!(EngineKind::Fc.structural_cap(&m, 4, &shapes), 10);
+        // Mismatched kind/layer pairs are inert, not panics.
+        assert_eq!(conv.work_per_image(&m, 1, &shapes), 0);
+        assert_eq!(EngineKind::Fc.structural_cap(&m, 0, &shapes), 0);
+    }
+
+    #[test]
+    fn generate_every_kind() {
+        let p = ConvParams::paper_8bit();
+        for (kind, ep) in [
+            (EngineKind::Conv(ConvKind::Conv1), EngineParams::conv(p)),
+            (EngineKind::Conv(ConvKind::Conv4), EngineParams::conv(p)),
+            (EngineKind::Fc, EngineParams::fc(p, 32)),
+            (EngineKind::MaxPool, EngineParams::pool(8, 4)),
+            (EngineKind::Relu, EngineParams::relu(8)),
+        ] {
+            let ip = generate(kind, &ep).unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+            ip.netlist.check().unwrap();
+            assert!(ip.rate > 0.0, "{}", kind.name());
+            let u = crate::synth::synthesize(&ip.netlist);
+            assert!(u.luts + u.dsps > 0, "{} must cost something", kind.name());
+        }
+    }
+
+    #[test]
+    fn generate_rejects_bad_params() {
+        let p = ConvParams::paper_8bit();
+        // Conv_3 above its packing ceiling.
+        let mut wide = p;
+        wide.data_bits = 12;
+        wide.coef_bits = 12;
+        wide.shift = 11;
+        assert!(generate(EngineKind::Conv(ConvKind::Conv3), &EngineParams::conv(wide)).is_err());
+        // FC fan-in below the serial minimum.
+        assert!(generate(EngineKind::Fc, &EngineParams::fc(p, 1)).is_err());
+        // Pool window / widths outside the comparator generator's range.
+        assert!(generate(EngineKind::MaxPool, &EngineParams::pool(8, 1)).is_err());
+        assert!(generate(EngineKind::MaxPool, &EngineParams::pool(40, 4)).is_err());
+        assert!(generate(EngineKind::Relu, &EngineParams::relu(1)).is_err());
+    }
+}

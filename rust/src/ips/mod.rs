@@ -1,8 +1,8 @@
-//! The paper's adaptive IP library.
+//! The paper's adaptive IP library, unified behind the engine registry.
 //!
-//! Four convolution IPs spanning the DSP/logic trade-off space (Table I),
-//! plus the future-work layers the paper's conclusion promises (pooling,
-//! activation, fully-connected) so a whole CNN can be deployed:
+//! Four convolution IPs span the DSP/logic trade-off space (Table I), and
+//! the future-work layers the paper's conclusion promises (pooling,
+//! activation, fully-connected) sit beside them as first-class engines:
 //!
 //! | IP | DSPs | Logic | Lanes | Notes |
 //! |----|------|-------|-------|-------|
@@ -10,16 +10,26 @@
 //! | [`conv2`] | 1 | minimal | 1 | plain DSP MACC |
 //! | [`conv3`] | 1 | moderate | 2 | dual-pixel packing, ≤8-bit operands |
 //! | [`conv4`] | 2 | moderate | 2 | two MACC lanes, wide operands |
+//! | [`fc`] | 1 | minimal | 1 | serial dot-product MAC (1 MAC/cycle) |
+//! | [`pool`] | 0 | low | 1 | max comparator tree (1 output/cycle) |
+//! | [`relu`] | 0 | tiny | 1 | sign-gated AND (1 element/cycle) |
 //!
-//! All are generated from [`params::ConvParams`] (the VHDL generics) into
-//! checked netlists, verified bit-exactly against the behavioral model by
-//! [`verify`].
+//! [`engine`] is the single surface the planner consumes: an
+//! [`engine::EngineKind`] names any of the above, and every kind answers
+//! `generate` / `work_per_image` / `structural_cap` uniformly, so whole
+//! networks — not just conv stacks — are planned, costed, and
+//! bottleneck-checked through one abstraction.
+//!
+//! All netlists are generated from [`params::ConvParams`]-style parameter
+//! blocks (the VHDL generics) into checked netlists, verified bit-exactly
+//! against the behavioral models by [`verify`] and the per-module tests.
 
 pub mod common;
 pub mod conv1;
 pub mod conv2;
 pub mod conv3;
 pub mod conv4;
+pub mod engine;
 pub mod fc;
 pub mod params;
 pub mod pool;
@@ -216,19 +226,9 @@ mod tests {
         let lanes = ip.kind.lanes() as usize;
         let taps = p.taps() as usize;
         let mut sim = Sim::new(&ip.netlist).unwrap();
-        let dmask = (1u64 << p.data_bits) - 1;
-        let cmask = (1u64 << p.coef_bits) - 1;
-        sim.set_input("rst", 1);
-        sim.set_input("en", 1);
-        sim.set_input("coef", 0);
-        for lane in 0..lanes {
-            for e in 0..taps {
-                sim.set_input_field(&format!("win{lane}"), e * p.data_bits as usize, p.data_bits as usize, 0);
-            }
-        }
-        sim.settle();
-        sim.tick();
-        sim.set_input("rst", 0);
+        // Same shared driver as verify::run_ip; only the en-gating differs.
+        let ports = verify::IpPorts::resolve(&sim, lanes);
+        ports.reset(&mut sim, p);
         let mut results = Vec::new();
         let mut active = 0usize; // enabled cycles elapsed
         let total = windows.len() * taps + ip.out_latency as usize + 4;
@@ -237,24 +237,12 @@ mod tests {
             guard += 1;
             assert!(guard < total * 20, "stall test runaway");
             let en = !rng.chance(0.3);
-            sim.set_input("en", en as u64);
+            sim.set_input_at(ports.en, en as u64);
             let phase = active % taps;
             let pass = (active / taps).min(windows.len() - 1);
-            sim.set_input("coef", (coefs[phase] as u64) & cmask);
-            for lane in 0..lanes {
-                for e in 0..taps {
-                    sim.set_input_field(
-                        &format!("win{lane}"),
-                        e * p.data_bits as usize,
-                        p.data_bits as usize,
-                        (windows[pass][lane][e] as u64) & dmask,
-                    );
-                }
-            }
+            ports.drive(&mut sim, p, windows, pass, coefs, phase);
             sim.settle();
-            if sim.output_unsigned("valid") == 1 {
-                let row: Vec<i64> =
-                    (0..lanes).map(|l| sim.output_signed(&format!("out{l}"))).collect();
+            if let Some(row) = ports.capture(&sim) {
                 results.push(row);
                 if results.len() == windows.len() {
                     break;

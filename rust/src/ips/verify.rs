@@ -9,11 +9,92 @@
 //! the XLA artifacts by the runtime integration tests).
 
 use super::common::ConvIp;
+use super::params::ConvParams;
 use crate::netlist::sim::Sim;
 use crate::util::rng::Rng;
 
 /// One pass's stimulus: a window per lane.
 pub type PassStimulus = Vec<Vec<i64>>;
+
+/// Pre-resolved port indices for a conv IP's streaming interface, so
+/// per-cycle driving is allocation- and lookup-free. Shared by [`run_ip`]
+/// and the stall-injection drivers.
+pub struct IpPorts {
+    pub rst: usize,
+    pub en: usize,
+    pub coef: usize,
+    pub win: Vec<usize>,
+    pub valid: usize,
+    pub out: Vec<usize>,
+    pub phase: usize,
+}
+
+impl IpPorts {
+    /// Resolve every streaming bus of a `lanes`-lane IP once.
+    pub fn resolve(sim: &Sim<'_>, lanes: usize) -> IpPorts {
+        IpPorts {
+            rst: sim.input_index("rst"),
+            en: sim.input_index("en"),
+            coef: sim.input_index("coef"),
+            win: (0..lanes).map(|l| sim.input_index(&format!("win{l}"))).collect(),
+            valid: sim.output_index("valid"),
+            out: (0..lanes).map(|l| sim.output_index(&format!("out{l}"))).collect(),
+            phase: sim.output_index("phase"),
+        }
+    }
+
+    /// Apply the reset pulse with zeroed data/coefficient inputs, leaving
+    /// the IP enabled and out of reset.
+    pub fn reset(&self, sim: &mut Sim<'_>, p: &ConvParams) {
+        let taps = p.taps() as usize;
+        sim.set_input_at(self.rst, 1);
+        sim.set_input_at(self.en, 1);
+        sim.set_input_at(self.coef, 0);
+        for &win in &self.win {
+            for e in 0..taps {
+                sim.set_input_field_at(win, e * p.data_bits as usize, p.data_bits as usize, 0);
+            }
+        }
+        sim.settle();
+        sim.tick();
+        sim.set_input_at(self.rst, 0);
+    }
+
+    /// Present coefficient `phase` and every lane's window of `pass`.
+    pub fn drive(
+        &self,
+        sim: &mut Sim<'_>,
+        p: &ConvParams,
+        windows: &[PassStimulus],
+        pass: usize,
+        coefs: &[i64],
+        phase: usize,
+    ) {
+        let dmask = (1u64 << p.data_bits) - 1;
+        let cmask = (1u64 << p.coef_bits) - 1;
+        let taps = p.taps() as usize;
+        sim.set_input_at(self.coef, (coefs[phase] as u64) & cmask);
+        for (lane, &win) in self.win.iter().enumerate() {
+            for e in 0..taps {
+                sim.set_input_field_at(
+                    win,
+                    e * p.data_bits as usize,
+                    p.data_bits as usize,
+                    (windows[pass][lane][e] as u64) & dmask,
+                );
+            }
+        }
+    }
+
+    /// After `settle`: if `valid` is high, capture one output row.
+    pub fn capture(&self, sim: &Sim<'_>) -> Option<Vec<i64>> {
+        if sim.output_unsigned_at(self.valid) == 1 {
+            Some(self.out.iter().map(|&o| sim.output_signed_at(o)).collect())
+        } else {
+            None
+        }
+    }
+}
 
 /// Drive `ip` through `windows.len()` passes with the given coefficient
 /// set and return the captured outputs per pass per lane.
@@ -25,46 +106,19 @@ pub fn run_ip(ip: &ConvIp, windows: &[PassStimulus], coefs: &[i64]) -> Vec<Vec<i
     assert_eq!(coefs.len(), taps);
 
     let mut sim = Sim::new(&ip.netlist).expect("IP netlist must check");
-    let dmask = (1u64 << p.data_bits) - 1;
-    let cmask = (1u64 << p.coef_bits) - 1;
-
-    // Reset pulse.
-    sim.set_input("rst", 1);
-    sim.set_input("en", 1);
-    sim.set_input("coef", 0);
-    for lane in 0..lanes {
-        for e in 0..taps {
-            sim.set_input_field(&format!("win{lane}"), e * p.data_bits as usize, p.data_bits as usize, 0);
-        }
-    }
-    sim.settle();
-    sim.tick();
-    sim.set_input("rst", 0);
+    let ports = IpPorts::resolve(&sim, lanes);
+    ports.reset(&mut sim, p);
 
     let total = windows.len() * taps + ip.out_latency as usize + 4;
     let mut results: Vec<Vec<i64>> = Vec::new();
     for cycle in 0..total {
         let phase = cycle % taps;
         let pass = (cycle / taps).min(windows.len() - 1);
-        sim.set_input("coef", (coefs[phase] as u64) & cmask);
-        for lane in 0..lanes {
-            for e in 0..taps {
-                sim.set_input_field(
-                    &format!("win{lane}"),
-                    e * p.data_bits as usize,
-                    p.data_bits as usize,
-                    (windows[pass][lane][e] as u64) & dmask,
-                );
-            }
-        }
+        ports.drive(&mut sim, p, windows, pass, coefs, phase);
         sim.settle();
         // The IP's own view of the phase must agree with the driver's.
-        debug_assert_eq!(sim.output_unsigned("phase"), phase as u64, "cycle {cycle}");
-        if sim.output_unsigned("valid") == 1 {
-            let mut row = Vec::with_capacity(lanes);
-            for lane in 0..lanes {
-                row.push(sim.output_signed(&format!("out{lane}")));
-            }
+        debug_assert_eq!(sim.output_unsigned_at(ports.phase), phase as u64, "cycle {cycle}");
+        if let Some(row) = ports.capture(&sim) {
             results.push(row);
             if results.len() == windows.len() {
                 break; // trailing margin cycles re-process the last window

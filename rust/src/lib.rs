@@ -2,25 +2,39 @@
 //!
 //! Reproduction of *"A Resource-Driven Approach for Implementing CNNs on
 //! FPGAs Using Adaptive IPs"* (Magalhães, Fresse, Suffran, Alata — CS.AR
-//! 2025) as a three-layer Rust + JAX + Pallas system.
+//! 2025) grown into a whole-network resource-driven compiler.
 //!
 //! The paper contributes a library of four parameterizable fixed-point
 //! convolution IPs (`Conv_1..Conv_4`) whose selection *adapts to the FPGA
-//! resources available*. Since no Vivado/ZCU104 testbed exists in this
-//! environment, this crate builds the whole substrate:
+//! resources available*, and promises (conclusion) expanding the library
+//! to pooling and activation functions. This crate delivers both through
+//! a **unified engine registry**: every layer engine — the four conv IPs,
+//! the serial FC MAC, the max-pool tree, and the ReLU gate — is an
+//! [`ips::engine::EngineKind`] exposing the same `generate` /
+//! `work_per_image` / `structural_cap` surface, and the planner runs one
+//! uniform profile → select → budget loop over all of them. No layer
+//! executes for free: pool and activation engines occupy real LUTs, meet
+//! real timing, and can be the modeled bottleneck.
+//!
+//! Since no Vivado/ZCU104 testbed exists in this environment, the crate
+//! builds the whole substrate:
 //!
 //! * [`fabric`] — UltraScale+ primitive models (LUT6, CARRY8, FDRE,
 //!   DSP48E2, RAMB18) and a device catalog.
-//! * [`netlist`] — structural netlists plus a bit-exact simulator.
-//! * [`ips`] — netlist generators for the paper's four convolution IPs and
-//!   the future-work pooling/activation/FC IPs.
+//! * [`netlist`] — structural netlists plus a bit-exact simulator (with
+//!   O(1) pre-resolved port access for the verification hot loops).
+//! * [`ips`] — netlist generators for all engines and the registry
+//!   ([`ips::engine`]) the planner consumes.
 //! * [`synth`], [`sta`], [`power`] — a Vivado-like reporting flow (CLB
 //!   packing, static timing, power) that regenerates Table II.
 //! * [`cnn`], [`planner`], [`coordinator`] — the headline feature: a
-//!   resource-driven planner that picks IP variants per CNN layer under a
-//!   device budget, then deploys and simulates the network.
-//! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas model
-//!   (`artifacts/*.hlo.txt`) used as the golden numeric reference.
+//!   resource-driven planner that assigns an engine + instance count to
+//!   *every* layer under a device budget (memoized profiles, scarcity
+//!   scoring, whole-network bottleneck search), then deploys the network
+//!   on a threaded pipeline with per-layer metrics keyed off the plan.
+//! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
+//!   model used as the golden numeric reference (behind the `xla` cargo
+//!   feature; a same-surface stub otherwise).
 //!
 //! See `DESIGN.md` for the experiment index and substitution rationale.
 
@@ -33,6 +47,10 @@ pub mod netlist;
 pub mod planner;
 pub mod power;
 pub mod report;
+#[cfg(feature = "xla")]
+pub mod runtime;
+#[cfg(not(feature = "xla"))]
+#[path = "runtime/stub.rs"]
 pub mod runtime;
 pub mod sim;
 pub mod sta;

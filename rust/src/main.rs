@@ -243,21 +243,7 @@ fn cmd_plan(argv: &[String], deploy: bool) -> i32 {
         Err(e) => return fail(e),
     };
     println!("plan for '{}' on {} @ {} MHz (policy {}):", model.name, dev.name, clock, plan.policy);
-    for lp in &plan.conv {
-        println!(
-            "  layer {:>2}: {} x{:<4} ({} windows/img, {:.0} cyc/img)  [LUT {} DSP {}]",
-            lp.layer,
-            lp.kind.name(),
-            lp.instances,
-            lp.windows,
-            lp.cycles_per_image,
-            lp.util.luts,
-            lp.util.dsps
-        );
-    }
-    for (li, inst, u, cyc) in &plan.fc {
-        println!("  layer {li:>2}: FC x{inst:<6} ({cyc:.0} cyc/img)  [LUT {} DSP {}]", u.luts, u.dsps);
-    }
+    print!("{}", acf::report::plan_table(&plan).plain());
     let (pd, pl) = plan.pressure();
     println!(
         "  total: LUT {}/{} ({:.1}%)  DSP {}/{} ({:.1}%)  CLB {}  modeled {:.0} img/s (bottleneck layer {})",
@@ -301,6 +287,14 @@ fn cmd_plan(argv: &[String], deploy: bool) -> i32 {
             snap.throughput(),
             mismatches
         );
+        // Modeled (engine plan) vs measured (worker wall time) per layer —
+        // both keyed by the same layer index.
+        for (li, (cyc, secs)) in dep.layer_cycles().iter().zip(&snap.layer_secs).enumerate() {
+            println!("  layer {li}: modeled {cyc:.0} cyc/img | measured {:.2} ms host", secs * 1e3);
+        }
+        if let Some(h) = snap.hottest_layer() {
+            println!("  hottest measured layer: {h} (modeled bottleneck: {})", plan.bottleneck);
+        }
         if mismatches > 0 {
             return 1;
         }

@@ -95,17 +95,26 @@ pub struct Netlist {
     pub inputs: Vec<(String, Vec<NetId>)>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum NetlistError {
-    #[error("net {0:?} has no driver")]
     Undriven(NetId),
-    #[error("net {0:?} has multiple drivers")]
     MultipleDrivers(NetId),
-    #[error("combinational loop through cell {0:?}")]
     CombLoop(CellId),
-    #[error("pin arity mismatch on cell {0:?}: {1}")]
     Arity(CellId, String),
 }
+
+impl std::fmt::Display for NetlistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetlistError::Undriven(n) => write!(f, "net {n:?} has no driver"),
+            NetlistError::MultipleDrivers(n) => write!(f, "net {n:?} has multiple drivers"),
+            NetlistError::CombLoop(c) => write!(f, "combinational loop through cell {c:?}"),
+            NetlistError::Arity(c, what) => write!(f, "pin arity mismatch on cell {c:?}: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for NetlistError {}
 
 impl Netlist {
     pub fn new() -> Self {

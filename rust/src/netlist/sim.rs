@@ -42,6 +42,10 @@ pub struct Sim<'nl> {
     fast: Vec<FastOp>,
     /// Pre-decoded sequential elements with inline state.
     fastseq: Vec<FastSeq>,
+    /// Bus-name resolution built once at construction, so the per-cycle
+    /// setters/getters never clone a bus or scan the port lists.
+    input_ix: std::collections::HashMap<String, usize>,
+    output_ix: std::collections::HashMap<String, usize>,
     values: Vec<bool>,
     toggles: Vec<u64>,
     cycles: u64,
@@ -124,10 +128,16 @@ impl<'nl> Sim<'nl> {
                 _ => unreachable!("sequential in comb order"),
             }
         }
+        let input_ix =
+            nl.inputs.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
+        let output_ix =
+            nl.outputs.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
         let mut sim = Sim {
             nl,
             fast,
             fastseq,
+            input_ix,
+            output_ix,
             values,
             toggles: vec![0; nl.n_nets()],
             cycles: 0,
@@ -137,18 +147,29 @@ impl<'nl> Sim<'nl> {
         Ok(sim)
     }
 
+    /// Resolve a declared input bus name to its index (for the `_at`
+    /// setters in hot loops). Panics if `name` is not a declared input.
+    pub fn input_index(&self, name: &str) -> usize {
+        *self.input_ix.get(name).unwrap_or_else(|| panic!("no input named '{name}'"))
+    }
+
+    /// Resolve a declared output bus name to its index. Panics if `name`
+    /// is not a declared output.
+    pub fn output_index(&self, name: &str) -> usize {
+        *self.output_ix.get(name).unwrap_or_else(|| panic!("no output named '{name}'"))
+    }
+
     /// Set a primary input bus (LSB-first nets) to an integer value.
     /// Panics if `name` is not a declared input.
     pub fn set_input(&mut self, name: &str, value: u64) {
-        let bus = self
-            .nl
-            .inputs
-            .iter()
-            .find(|(n, _)| n == name)
-            .unwrap_or_else(|| panic!("no input named '{name}'"))
-            .1
-            .clone();
-        for (i, net) in bus.iter().enumerate() {
+        self.set_input_at(self.input_index(name), value);
+    }
+
+    /// [`Self::set_input`] by pre-resolved index — allocation- and
+    /// lookup-free, for per-cycle driver loops.
+    pub fn set_input_at(&mut self, input: usize, value: u64) {
+        let nl = self.nl; // reborrow at 'nl, independent of &mut self
+        for (i, net) in nl.inputs[input].1.iter().enumerate() {
             self.values[net.0 as usize] = (value >> i) & 1 == 1;
         }
     }
@@ -156,14 +177,13 @@ impl<'nl> Sim<'nl> {
     /// Set a contiguous field `[lo, lo+width)` of a (possibly >64-bit)
     /// input bus. Used to pack K×K windows element by element.
     pub fn set_input_field(&mut self, name: &str, lo: usize, width: usize, value: u64) {
-        let bus = self
-            .nl
-            .inputs
-            .iter()
-            .find(|(n, _)| n == name)
-            .unwrap_or_else(|| panic!("no input named '{name}'"))
-            .1
-            .clone();
+        self.set_input_field_at(self.input_index(name), lo, width, value);
+    }
+
+    /// [`Self::set_input_field`] by pre-resolved index.
+    pub fn set_input_field_at(&mut self, input: usize, lo: usize, width: usize, value: u64) {
+        let nl = self.nl;
+        let (name, bus) = &nl.inputs[input];
         assert!(lo + width <= bus.len(), "field [{lo},{}) exceeds '{name}'", lo + width);
         for i in 0..width {
             self.values[bus[lo + i].0 as usize] = (value >> i) & 1 == 1;
@@ -190,26 +210,22 @@ impl<'nl> Sim<'nl> {
 
     /// Read a declared output by name (signed).
     pub fn output_signed(&self, name: &str) -> i64 {
-        let bus = &self
-            .nl
-            .outputs
-            .iter()
-            .find(|(n, _)| n == name)
-            .unwrap_or_else(|| panic!("no output named '{name}'"))
-            .1;
-        self.get_signed(bus)
+        self.output_signed_at(self.output_index(name))
     }
 
     /// Read a declared output by name (unsigned).
     pub fn output_unsigned(&self, name: &str) -> u64 {
-        let bus = &self
-            .nl
-            .outputs
-            .iter()
-            .find(|(n, _)| n == name)
-            .unwrap_or_else(|| panic!("no output named '{name}'"))
-            .1;
-        self.get_unsigned(bus)
+        self.output_unsigned_at(self.output_index(name))
+    }
+
+    /// [`Self::output_signed`] by pre-resolved index.
+    pub fn output_signed_at(&self, output: usize) -> i64 {
+        self.get_signed(&self.nl.outputs[output].1)
+    }
+
+    /// [`Self::output_unsigned`] by pre-resolved index.
+    pub fn output_unsigned_at(&self, output: usize) -> u64 {
+        self.get_unsigned(&self.nl.outputs[output].1)
     }
 
     /// Propagate combinational logic to a fixed point (single topological

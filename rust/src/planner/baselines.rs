@@ -16,7 +16,10 @@
 //! The adaptive policy ([`super::Policy::adaptive`]) is the paper's
 //! contribution; Table III's qualitative rows are derived by sweeping all
 //! four policies across devices and model variants (see
-//! [`crate::report::table3`]).
+//! [`crate::report::table3`]). A policy restricts only the *conv*
+//! candidate set — FC, max-pool, and ReLU engines come from the unified
+//! registry identically under every policy, so the comparison isolates
+//! the conv-IP selection strategy.
 
 use super::Policy;
 use crate::ips::ConvKind;

@@ -1,110 +1,125 @@
 //! The resource-driven planner — the paper's headline capability
 //! ("automatic adaptation to the available resources") plus the
 //! future-work item ("automating IP selection based on resource
-//! availability").
+//! availability"), generalized to the whole network.
 //!
-//! Given a CNN and a device budget, choose a convolution IP *kind* and an
-//! *instance count* per conv layer (and FC engine counts) that maximize
-//! streaming throughput. Strategy: binary-search the achievable
-//! images-per-cycle target; at each target, pick per-layer assignments
-//! scored by scarcity-weighted resource pressure; accept if the summed
-//! utilization fits the device.
+//! Given a CNN and a device budget, the planner assigns an *engine* (an
+//! [`EngineKind`] from the unified registry) and an *instance count* to
+//! every layer — convolution, fully-connected, max-pool, and fused ReLU
+//! alike — maximizing streaming throughput. There are no layer-type
+//! special cases: `plan()` runs one uniform loop that, per engine site,
+//! profiles the candidate engines, picks the scarcity-cheapest assignment
+//! meeting a throughput target, sums utilization, and checks the device
+//! budget; a binary search over the target finds the best feasible rate,
+//! and the realized bottleneck is the engine (any kind) with the worst
+//! cycles-per-image.
 //!
 //! [`baselines`] holds the fixed-policy planners used for the Table III
-//! comparison.
+//! comparison; they restrict only the *conv* candidate set — the rest of
+//! the registry is policy-independent.
 
 pub mod baselines;
 
 use crate::cnn::model::{Layer, Model};
 use crate::fabric::device::Device;
-use crate::ips::{self, ConvKind, ConvParams};
+use crate::ips::engine::{self, EngineKind, EngineParams};
+use crate::ips::ConvKind;
 use crate::synth::{synthesize, Utilization};
 
-/// Profiled IP variant: resources + schedule for one parameterization.
+/// Profiled engine variant: resources + schedule for one parameterization.
 #[derive(Debug, Clone)]
-pub struct IpProfile {
-    pub kind: ConvKind,
-    pub params: ConvParams,
+pub struct EngineProfile {
+    pub kind: EngineKind,
+    pub params: EngineParams,
     pub util: Utilization,
-    /// Steady-state windows per cycle.
+    /// Steady-state work units per cycle (windows, MACs, elements).
     pub rate: f64,
     /// WNS at the target clock (must be ≥ 0 to deploy).
     pub wns_ns: f64,
 }
 
-/// Profile one IP kind under `params` at `clock_mhz` on `dev`.
+/// Profile one engine kind under `params` at `clock_mhz` on `dev`.
 /// Errors when the kind cannot implement the parameters (e.g. `Conv_3`
 /// above 8-bit) or fails timing. Results are memoized process-wide —
 /// generation + synthesis + STA is pure in (kind, params, clock, derate)
-/// and the planner's binary search re-asks constantly
-/// (EXPERIMENTS.md §Perf item 4).
+/// and the planner's binary search re-asks constantly.
+///
+/// Cache-safety note: the memo key carries only `dev.speed_derate`, not
+/// the device name, so the cached value (including a cached `Err`) must
+/// be a pure function of the key. Error strings therefore name the
+/// derate, never `dev.name` — callers add device context themselves.
 pub fn profile(
-    kind: ConvKind,
-    params: &ConvParams,
+    kind: EngineKind,
+    params: &EngineParams,
     clock_mhz: f64,
     dev: &Device,
-) -> Result<IpProfile, String> {
+) -> Result<EngineProfile, String> {
     use std::collections::HashMap;
-    use std::sync::Mutex;
-    type Key = (ConvKind, ConvParams, u64, u64);
-    static CACHE: once_cell::sync::Lazy<Mutex<HashMap<Key, Result<IpProfile, String>>>> =
-        once_cell::sync::Lazy::new(|| Mutex::new(HashMap::new()));
+    use std::sync::{Mutex, OnceLock};
+    type Key = (EngineKind, EngineParams, u64, u64);
+    type Cache = Mutex<HashMap<Key, Result<EngineProfile, String>>>;
+    static CACHE: OnceLock<Cache> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     let key = (kind, *params, clock_mhz.to_bits(), dev.speed_derate.to_bits());
-    if let Some(hit) = CACHE.lock().unwrap().get(&key) {
+    if let Some(hit) = cache.lock().unwrap().get(&key) {
         return hit.clone();
     }
-    let result = profile_uncached(kind, params, clock_mhz, dev);
-    CACHE.lock().unwrap().insert(key, result.clone());
+    let result = profile_uncached(kind, params, clock_mhz, dev.speed_derate);
+    cache.lock().unwrap().insert(key, result.clone());
     result
 }
 
 fn profile_uncached(
-    kind: ConvKind,
-    params: &ConvParams,
+    kind: EngineKind,
+    params: &EngineParams,
     clock_mhz: f64,
-    dev: &Device,
-) -> Result<IpProfile, String> {
-    let ip = ips::generate(kind, params)?;
+    derate: f64,
+) -> Result<EngineProfile, String> {
+    let ip = engine::generate(kind, params)?;
     let util = synthesize(&ip.netlist);
-    let timing = crate::sta::analyze(&ip.netlist, clock_mhz, dev.speed_derate)
-        .map_err(|e| e.to_string())?;
+    let timing =
+        crate::sta::analyze(&ip.netlist, clock_mhz, derate).map_err(|e| e.to_string())?;
     if !timing.met() {
+        // Deliberately device-name-free: this string is memoized under a
+        // (kind, params, clock, derate) key shared by every device with
+        // the same derate.
         return Err(format!(
-            "{} fails timing at {clock_mhz} MHz on {} (WNS {:.3})",
+            "{} fails timing at {clock_mhz} MHz (derate {derate}, WNS {:.3})",
             kind.name(),
-            dev.name,
             timing.wns_ns
         ));
     }
-    Ok(IpProfile { kind, params: *params, util, rate: ip.throughput_per_cycle(), wns_ns: timing.wns_ns })
+    Ok(EngineProfile { kind, params: *params, util, rate: ip.rate, wns_ns: timing.wns_ns })
 }
 
-/// Per-conv-layer assignment.
+/// One planned engine: which engine serves which layer, how many
+/// instances, and what it costs. Uniform across layer types.
 #[derive(Debug, Clone)]
-pub struct LayerPlan {
-    /// Index into `model.layers`.
+pub struct EnginePlan {
+    /// Index into `model.layers` (a conv/fc layer with fused ReLU yields
+    /// two engine plans at the same index).
     pub layer: usize,
-    pub kind: ConvKind,
+    pub kind: EngineKind,
     pub instances: u64,
     pub util: Utilization,
-    /// Window passes per image for this layer.
-    pub windows: u64,
+    /// Work units per image (windows, MACs, or elements).
+    pub work: u64,
     /// Cycles per image at this assignment.
     pub cycles_per_image: f64,
 }
 
-/// A full deployment plan.
+/// A full deployment plan: every layer's engine assignment, uniformly.
 #[derive(Debug, Clone)]
 pub struct Plan {
     pub device: Device,
     pub clock_mhz: f64,
-    pub conv: Vec<LayerPlan>,
-    /// FC engines: (layer index, instances, util, cycles/img).
-    pub fc: Vec<(usize, u64, Utilization, f64)>,
+    /// One entry per engine site, in layer order (ReLU sites follow their
+    /// host conv/fc site).
+    pub engines: Vec<EnginePlan>,
     pub total: Utilization,
     /// Modeled steady-state throughput.
     pub images_per_sec: f64,
-    /// Layer index that bounds throughput.
+    /// Layer index that bounds throughput (any engine kind).
     pub bottleneck: usize,
     /// Which policy produced this plan (for reports).
     pub policy: String,
@@ -118,17 +133,34 @@ impl Plan {
             self.total.luts as f64 / self.device.luts.max(1) as f64,
         )
     }
+
+    /// The convolution engine plans, in layer order.
+    pub fn convs(&self) -> impl Iterator<Item = &EnginePlan> {
+        self.engines.iter().filter(|e| matches!(e.kind, EngineKind::Conv(_)))
+    }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PlanError {
-    #[error("model invalid: {0}")]
     Model(String),
-    #[error("no feasible plan on {device}: {reason}")]
     Infeasible { device: String, reason: String },
 }
 
-/// Kinds a policy is allowed to use.
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Model(m) => write!(f, "model invalid: {m}"),
+            PlanError::Infeasible { device, reason } => {
+                write!(f, "no feasible plan on {device}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Conv kinds a policy is allowed to use (non-conv engines are
+/// policy-independent — every policy deploys the same FC/pool/ReLU IPs).
 #[derive(Debug, Clone)]
 pub struct Policy {
     pub name: String,
@@ -142,109 +174,160 @@ impl Policy {
     }
 }
 
-/// Plan `model` onto `dev` at `clock_mhz` under `policy`.
-pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Result<Plan, PlanError> {
-    let shapes_all = model.shapes().map_err(PlanError::Model)?;
-    let workloads = model.conv_workloads();
-    // Structural parallelism ceiling per conv layer: one engine per
-    // (in_ch, out_ch, output_row) tuple. Finer-grained splits would need
-    // window broadcast bandwidth the streaming front-end doesn't have —
-    // this keeps modeled throughput within what the dataflow can feed.
-    let caps: Vec<u64> = workloads
-        .iter()
-        .map(|&(li, _)| {
-            let Layer::Conv { in_ch, out_ch, .. } = &model.layers[li] else { unreachable!() };
-            (*in_ch as u64) * (*out_ch as u64) * shapes_all[li].h as u64
-        })
-        .collect();
+/// One engine site awaiting assignment: a layer slot, its workload, its
+/// structural parallelism ceiling, and the candidate engine profiles.
+struct Site {
+    layer: usize,
+    work: u64,
+    cap: u64,
+    candidates: Vec<EngineProfile>,
+}
 
-    // Profile every allowed kind once per distinct conv-layer params.
-    let mut profiles: Vec<Vec<IpProfile>> = Vec::new();
-    for &(li, _) in &workloads {
-        let Layer::Conv { params, .. } = &model.layers[li] else { unreachable!() };
-        let mut avail = Vec::new();
-        for kind in &policy.allowed {
-            if let Ok(p) = profile(*kind, params, clock_mhz, dev) {
-                avail.push(p);
+/// Enumerate the engine sites of `model`: one per conv/pool/fc layer plus
+/// one ReLU site per fused activation. Errors if any site ends up with no
+/// feasible candidate.
+fn engine_sites(
+    model: &Model,
+    dev: &Device,
+    clock_mhz: f64,
+    policy: &Policy,
+) -> Result<Vec<Site>, PlanError> {
+    let shapes = model.shapes().map_err(PlanError::Model)?;
+    let infeasible = |li: usize, what: &str, detail: String| PlanError::Infeasible {
+        device: dev.name.clone(),
+        reason: format!("layer {li}: no {what} engine is feasible ({detail})"),
+    };
+    let mut sites = Vec::new();
+    // Width of the element stream entering each layer (ingress pixels are
+    // 8-bit range; each conv/fc requantizes to its out_bits).
+    let mut stream_bits = 8u32;
+    for (li, layer) in model.layers.iter().enumerate() {
+        match layer {
+            Layer::Conv { params, relu, .. } => {
+                let kind_of = EngineKind::Conv;
+                let mut cands = Vec::new();
+                let mut last_err = String::new();
+                for &ck in &policy.allowed {
+                    match profile(kind_of(ck), &EngineParams::conv(*params), clock_mhz, dev) {
+                        Ok(p) => cands.push(p),
+                        Err(e) => last_err = e,
+                    }
+                }
+                if cands.is_empty() {
+                    return Err(infeasible(
+                        li,
+                        "conv",
+                        format!(
+                            "{}-bit operands under policy '{}': {last_err}",
+                            params.data_bits, policy.name
+                        ),
+                    ));
+                }
+                let ek = kind_of(policy.allowed[0]);
+                sites.push(Site {
+                    layer: li,
+                    work: ek.work_per_image(model, li, &shapes),
+                    cap: ek.structural_cap(model, li, &shapes),
+                    candidates: cands,
+                });
+                if *relu {
+                    sites.push(relu_site(model, li, params.out_bits, &shapes, dev, clock_mhz)?);
+                }
+                stream_bits = params.out_bits;
+            }
+            Layer::MaxPool => {
+                let ep = EngineParams::pool(stream_bits, crate::cnn::model::POOL_WINDOW);
+                let prof = profile(EngineKind::MaxPool, &ep, clock_mhz, dev)
+                    .map_err(|e| infeasible(li, "max-pool", e))?;
+                sites.push(Site {
+                    layer: li,
+                    work: EngineKind::MaxPool.work_per_image(model, li, &shapes),
+                    cap: EngineKind::MaxPool.structural_cap(model, li, &shapes),
+                    candidates: vec![prof],
+                });
+            }
+            Layer::Fc { params, relu, .. } => {
+                let fanin = engine::fc_in_dim(model, li, &shapes) as u32;
+                let ep = EngineParams::fc(*params, fanin);
+                let prof = profile(EngineKind::Fc, &ep, clock_mhz, dev)
+                    .map_err(|e| infeasible(li, "fully-connected", e))?;
+                sites.push(Site {
+                    layer: li,
+                    work: EngineKind::Fc.work_per_image(model, li, &shapes),
+                    cap: EngineKind::Fc.structural_cap(model, li, &shapes),
+                    candidates: vec![prof],
+                });
+                if *relu {
+                    sites.push(relu_site(model, li, params.out_bits, &shapes, dev, clock_mhz)?);
+                }
+                stream_bits = params.out_bits;
             }
         }
-        if avail.is_empty() {
-            return Err(PlanError::Infeasible {
-                device: dev.name.clone(),
-                reason: format!(
-                    "no allowed IP can implement layer {li} ({}-bit operands) under policy '{}'",
-                    match &model.layers[li] {
-                        Layer::Conv { params, .. } => params.data_bits,
-                        _ => 0,
-                    },
-                    policy.name
-                ),
-            });
-        }
-        profiles.push(avail);
     }
+    Ok(sites)
+}
 
-    // FC engines: fan-in derives from shapes; 1 MAC/cycle per instance.
-    let shapes = &shapes_all;
-    let mut fc_specs: Vec<(usize, Utilization, u64, u64)> = Vec::new(); // (layer, util/inst, macs, max engines)
-    for (li, layer) in model.layers.iter().enumerate() {
-        if let Layer::Fc { out_dim, params, .. } = layer {
-            let in_dim = if li == 0 {
-                model.in_h * model.in_w * model.in_ch
-            } else {
-                shapes[li - 1].numel()
-            };
-            let fcip = crate::ips::fc::generate(params, in_dim as u32)
-                .map_err(|e| PlanError::Infeasible { device: dev.name.clone(), reason: e })?;
-            fc_specs.push((li, synthesize(&fcip.netlist), (in_dim * out_dim) as u64, *out_dim as u64));
-        }
-    }
+fn relu_site(
+    model: &Model,
+    li: usize,
+    bits: u32,
+    shapes: &[crate::cnn::model::Shape],
+    dev: &Device,
+    clock_mhz: f64,
+) -> Result<Site, PlanError> {
+    let prof =
+        profile(EngineKind::Relu, &EngineParams::relu(bits), clock_mhz, dev).map_err(|e| {
+            PlanError::Infeasible {
+                device: dev.name.clone(),
+                reason: format!("layer {li}: no ReLU engine is feasible ({e})"),
+            }
+        })?;
+    Ok(Site {
+        layer: li,
+        work: EngineKind::Relu.work_per_image(model, li, shapes),
+        cap: EngineKind::Relu.structural_cap(model, li, shapes),
+        candidates: vec![prof],
+    })
+}
+
+/// Plan `model` onto `dev` at `clock_mhz` under `policy`.
+pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Result<Plan, PlanError> {
+    let sites = engine_sites(model, dev, clock_mhz, policy)?;
 
     // Feasibility of a target (images/cycle); returns the assignment.
-    type FcPlan = Vec<(usize, u64, Utilization, f64)>;
-    let eval = |target: f64| -> Option<(Vec<LayerPlan>, FcPlan, Utilization)> {
+    let eval = |target: f64| -> Option<(Vec<EnginePlan>, Utilization)> {
         let mut total = Utilization::default();
-        let mut convs = Vec::new();
-        for (wi, &(li, windows)) in workloads.iter().enumerate() {
-            let mut best: Option<(f64, LayerPlan)> = None;
-            for prof in &profiles[wi] {
-                let need_rate = target * windows as f64; // windows/cycle
+        let mut engines = Vec::with_capacity(sites.len());
+        for site in &sites {
+            let mut best: Option<(f64, EnginePlan)> = None;
+            for prof in &site.candidates {
+                let need_rate = target * site.work as f64; // work units/cycle
                 let inst = (need_rate / prof.rate).ceil().max(1.0) as u64;
-                if inst > caps[wi] {
+                if inst > site.cap {
                     continue; // dataflow cannot feed this many engines
                 }
                 let u = prof.util.times(inst);
                 let score = u.dsps as f64 / dev.dsps.max(1) as f64
                     + u.luts as f64 / dev.luts.max(1) as f64
                     + u.clbs as f64 / dev.clbs.max(1) as f64;
-                let lp = LayerPlan {
-                    layer: li,
+                let ep = EnginePlan {
+                    layer: site.layer,
                     kind: prof.kind,
                     instances: inst,
                     util: u,
-                    windows,
-                    cycles_per_image: windows as f64 / (prof.rate * inst as f64),
+                    work: site.work,
+                    cycles_per_image: site.work as f64 / (prof.rate * inst as f64),
                 };
                 if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
-                    best = Some((score, lp));
+                    best = Some((score, ep));
                 }
             }
-            let (_, lp) = best?;
-            total = total.plus(&lp.util);
-            convs.push(lp);
-        }
-        let mut fcs = Vec::new();
-        for &(li, ref u, macs, out_dim) in &fc_specs {
-            let inst = (target * macs as f64).ceil().max(1.0) as u64;
-            if inst > out_dim {
-                return None; // one engine per neuron is the ceiling
-            }
-            let uu = u.times(inst);
-            total = total.plus(&uu);
-            fcs.push((li, inst, uu, macs as f64 / inst as f64));
+            let (_, ep) = best?;
+            total = total.plus(&ep.util);
+            engines.push(ep);
         }
         if total.fits(dev) {
-            Some((convs, fcs, total))
+            Some((engines, total))
         } else {
             None
         }
@@ -253,7 +336,7 @@ pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Res
     if eval(1e-9).is_none() {
         return Err(PlanError::Infeasible {
             device: dev.name.clone(),
-            reason: "even one instance per layer exceeds the device".into(),
+            reason: "even one instance per engine site exceeds the device".into(),
         });
     }
     let mut lo = 1e-9f64;
@@ -266,21 +349,16 @@ pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Res
             hi = mid;
         }
     }
-    let (convs, fcs, total) = eval(lo).expect("lo feasible by construction");
+    let (engines, total) = eval(lo).expect("lo feasible by construction");
 
-    // Throughput from the realized assignment (≥ target).
+    // Throughput from the realized assignment (≥ target): the bottleneck
+    // search spans every engine kind, pool/ReLU included.
     let mut worst_cycles = 0.0f64;
     let mut bottleneck = 0usize;
-    for lp in &convs {
-        if lp.cycles_per_image > worst_cycles {
-            worst_cycles = lp.cycles_per_image;
-            bottleneck = lp.layer;
-        }
-    }
-    for &(li, _, _, cyc) in &fcs {
-        if cyc > worst_cycles {
-            worst_cycles = cyc;
-            bottleneck = li;
+    for ep in &engines {
+        if ep.cycles_per_image > worst_cycles {
+            worst_cycles = ep.cycles_per_image;
+            bottleneck = ep.layer;
         }
     }
     let images_per_sec = clock_mhz * 1.0e6 / worst_cycles.max(1e-9);
@@ -288,8 +366,7 @@ pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Res
     Ok(Plan {
         device: dev.clone(),
         clock_mhz,
-        conv: convs,
-        fc: fcs,
+        engines,
         total,
         images_per_sec,
         bottleneck,
@@ -302,16 +379,57 @@ mod tests {
     use super::*;
     use crate::cnn::model::Model;
     use crate::fabric::device::by_name;
+    use crate::ips::ConvParams;
 
     #[test]
     fn adaptive_plan_on_zcu104() {
         let m = Model::lenet_tiny();
         let dev = by_name("zcu104").unwrap();
         let p = plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap();
-        assert_eq!(p.conv.len(), 2);
+        assert_eq!(p.convs().count(), 2);
+        // conv+relu, pool, conv+relu, pool, fc => 7 engine sites.
+        assert_eq!(p.engines.len(), 7);
         assert!(p.total.fits(&dev));
         assert!(p.images_per_sec > 1000.0, "throughput {}", p.images_per_sec);
         assert!(p.total.dsps > 0, "big device should exploit DSPs");
+    }
+
+    #[test]
+    fn pool_and_relu_engines_cost_resources_and_bound_throughput() {
+        // The registry's point: the formerly-free layers now have real
+        // instances, real utilization, and participate in the bottleneck
+        // search.
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let p = plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap();
+        let of_kind =
+            |k: EngineKind| p.engines.iter().filter(|e| e.kind == k).collect::<Vec<_>>();
+        let pools = of_kind(EngineKind::MaxPool);
+        let relus = of_kind(EngineKind::Relu);
+        let fcs = of_kind(EngineKind::Fc);
+        assert_eq!(pools.len(), 2);
+        assert_eq!(relus.len(), 2);
+        assert_eq!(fcs.len(), 1);
+        for ep in pools.iter().chain(&relus).chain(&fcs) {
+            assert!(ep.instances >= 1, "{} x{}", ep.kind.name(), ep.instances);
+            assert!(ep.util.luts > 0, "{} must cost LUTs", ep.kind.name());
+            assert!(ep.work > 0 && ep.cycles_per_image > 0.0);
+        }
+        // The bottleneck search spans ALL engines: the layer it names must
+        // carry the global worst cycles-per-image.
+        let worst = p
+            .engines
+            .iter()
+            .map(|e| e.cycles_per_image)
+            .fold(0.0f64, f64::max);
+        let bneck = p
+            .engines
+            .iter()
+            .filter(|e| e.layer == p.bottleneck)
+            .map(|e| e.cycles_per_image)
+            .fold(0.0f64, f64::max);
+        assert_eq!(bneck, worst);
+        assert!((p.images_per_sec - 200.0e6 / worst).abs() < 1e-6);
     }
 
     #[test]
@@ -323,12 +441,11 @@ mod tests {
         let p = plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap();
         assert!(p.total.dsps <= dev.dsps);
         let conv1_instances: u64 = p
-            .conv
-            .iter()
-            .filter(|lp| lp.kind == ConvKind::Conv1)
-            .map(|lp| lp.instances)
+            .convs()
+            .filter(|ep| ep.kind == EngineKind::Conv(ConvKind::Conv1))
+            .map(|ep| ep.instances)
             .sum();
-        assert!(conv1_instances > 0, "expected Conv_1 fallback, got {:?}", p.conv);
+        assert!(conv1_instances > 0, "expected Conv_1 fallback, got {:?}", p.engines);
     }
 
     #[test]
@@ -367,7 +484,29 @@ mod tests {
         p.data_bits = 12;
         p.coef_bits = 12;
         p.shift = 11;
-        assert!(profile(ConvKind::Conv3, &p, 200.0, &dev).is_err());
-        assert!(profile(ConvKind::Conv4, &p, 200.0, &dev).is_ok());
+        let ep = EngineParams::conv(p);
+        assert!(profile(EngineKind::Conv(ConvKind::Conv3), &ep, 200.0, &dev).is_err());
+        assert!(profile(EngineKind::Conv(ConvKind::Conv4), &ep, 200.0, &dev).is_ok());
+    }
+
+    #[test]
+    fn cached_profile_errors_are_device_name_free() {
+        // Regression for the stale-device-name bug: the memo key is
+        // (kind, params, clock, derate), so two devices sharing a derate
+        // share cached errors — the message must not bake in a name.
+        let mut a = by_name("zcu104").unwrap();
+        a.name = "first-asker".into();
+        let mut b = by_name("zcu104").unwrap();
+        b.name = "second-asker".into();
+        let ep = EngineParams::conv(ConvParams::paper_8bit());
+        // An absurd clock fails timing for every conv kind.
+        let kind = EngineKind::Conv(ConvKind::Conv1);
+        let e1 = profile(kind, &ep, 40_000.0, &a).unwrap_err();
+        let e2 = profile(kind, &ep, 40_000.0, &b).unwrap_err();
+        assert_eq!(e1, e2);
+        assert!(
+            !e1.contains("first-asker") && !e1.contains("second-asker"),
+            "cached error leaked a device name: {e1}"
+        );
     }
 }

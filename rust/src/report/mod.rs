@@ -10,11 +10,14 @@
 //!   than asserted.
 //! * [`sweep_adaptation`] — throughput vs device across policies (Sweep-A).
 //! * [`sweep_precision`] — operand-width sweep per IP (Sweep-B).
+//! * [`plan_table`] — the unified engine-plan report: one row per planned
+//!   engine (conv, FC, max-pool, fused ReLU) with instances, work,
+//!   cycles, and resources.
 
 use crate::cnn::model::{Layer, Model};
 use crate::fabric::device::{by_name, catalog, Device};
 use crate::ips::{self, ConvKind, ConvParams};
-use crate::planner::{baselines, plan, Policy};
+use crate::planner::{baselines, plan, Plan, Policy};
 use crate::power;
 use crate::sta;
 use crate::synth::synthesize;
@@ -99,6 +102,42 @@ pub fn table2(dev: &Device, clock_mhz: f64) -> Table {
             fnum(p.5, 3),
         ]);
     }
+    t
+}
+
+/// The unified engine-plan report: every planned engine — convolution,
+/// FC, max-pool, and fused ReLU alike — as one row, plus a totals row.
+/// This is the user-facing face of the engine registry: the formerly
+/// "free" pool/activation layers show their instances and resources here.
+pub fn plan_table(plan: &Plan) -> Table {
+    let mut t = Table::new(vec![
+        "layer", "engine", "inst", "work/img", "cyc/img", "LUTs", "Regs", "DSPs", "BRAM18",
+    ])
+    .numeric();
+    for ep in &plan.engines {
+        t.row(vec![
+            ep.layer.to_string(),
+            ep.kind.name().to_string(),
+            ep.instances.to_string(),
+            ep.work.to_string(),
+            format!("{:.0}", ep.cycles_per_image),
+            ep.util.luts.to_string(),
+            ep.util.regs.to_string(),
+            ep.util.dsps.to_string(),
+            ep.util.bram18.to_string(),
+        ]);
+    }
+    t.row(vec![
+        "".into(),
+        "total".into(),
+        plan.engines.iter().map(|e| e.instances).sum::<u64>().to_string(),
+        "".into(),
+        "".into(),
+        plan.total.luts.to_string(),
+        plan.total.regs.to_string(),
+        plan.total.dsps.to_string(),
+        plan.total.bram18.to_string(),
+    ]);
     t
 }
 
@@ -369,6 +408,19 @@ mod tests {
         assert!(dsp.failed_devices >= 1);
         let q = a.iter().find(|x| x.policy == "quantize-first").unwrap();
         assert!(!q.multi_precision);
+    }
+
+    #[test]
+    fn plan_table_lists_every_engine_kind() {
+        let dev = by_name("zcu104").unwrap();
+        let p = plan(&Model::lenet_tiny(), &dev, 200.0, &Policy::adaptive()).unwrap();
+        let t = plan_table(&p);
+        // 7 engine rows (conv+ReLU, pool, conv+ReLU, pool, FC) + totals.
+        assert_eq!(t.n_rows(), 8);
+        let md = t.markdown();
+        for needle in ["MaxPool", "ReLU", "FC", "Conv_"] {
+            assert!(md.contains(needle), "missing {needle} in:\n{md}");
+        }
     }
 
     #[test]

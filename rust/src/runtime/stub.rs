@@ -1,0 +1,110 @@
+//! Stub PJRT/XLA runtime, compiled when the `xla` cargo feature is off.
+//!
+//! The real runtime (`runtime/mod.rs`) executes the AOT-compiled
+//! JAX/Pallas artifacts through the `xla` crate, which is only available
+//! in vendored toolchains. This stub keeps the same public surface so the
+//! CLI (`acf golden`) and examples always compile; every operation that
+//! would touch PJRT reports itself unavailable at run time instead.
+
+use crate::cnn::model::Weights;
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (relative to the repo root).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// The seed aot.py bakes (rngport mirrors our xorshift, so
+/// `Weights::random(model, AOT_WEIGHT_SEED)` must equal `weights.json`).
+pub const AOT_WEIGHT_SEED: u64 = 2025;
+
+const UNAVAILABLE: &str =
+    "PJRT/XLA runtime unavailable: acf was built without the 'xla' cargo feature";
+
+/// Locate the artifact directory from the current working directory or
+/// its ancestors (same search as the real runtime; loading still needs
+/// the `xla` feature).
+pub fn find_artifacts() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(ARTIFACT_DIR);
+        if cand.join("model.hlo.txt").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Placeholder for the PJRT CPU client.
+pub struct PjRtClient;
+
+/// Always errors: the stub cannot host a PJRT client.
+pub fn cpu_client() -> Result<PjRtClient, String> {
+    Err(UNAVAILABLE.into())
+}
+
+/// Placeholder compiled executable.
+pub struct Artifact {
+    pub name: String,
+}
+
+impl Artifact {
+    pub fn load(_client: &PjRtClient, _path: &Path) -> Result<Artifact, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn run_i32(&self, _inputs: &[Vec<i32>]) -> Result<Vec<i64>, String> {
+        Err(UNAVAILABLE.into())
+    }
+}
+
+/// Placeholder golden CNN.
+pub struct GoldenCnn {
+    pub in_len: usize,
+    pub out_len: usize,
+}
+
+impl GoldenCnn {
+    pub fn load(_client: &PjRtClient, _art_dir: &Path) -> Result<GoldenCnn, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn infer(&self, _image: &[i64]) -> Result<Vec<i64>, String> {
+        Err(UNAVAILABLE.into())
+    }
+}
+
+/// Placeholder single-window kernel.
+pub struct WindowKernel;
+
+impl WindowKernel {
+    pub fn load(_client: &PjRtClient, _art_dir: &Path) -> Result<WindowKernel, String> {
+        Err(UNAVAILABLE.into())
+    }
+
+    pub fn eval(&self, _win: &[i64; 9], _coef: &[i64; 9]) -> Result<i64, String> {
+        Err(UNAVAILABLE.into())
+    }
+}
+
+/// `weights.json` parsing has no PJRT dependency, so the stub supports it
+/// for what-if runs against pre-built artifact directories.
+pub fn load_weights(art_dir: &Path) -> Result<Weights, String> {
+    let text = std::fs::read_to_string(art_dir.join("weights.json")).map_err(|e| e.to_string())?;
+    let json = crate::util::json::Json::parse(&text).map_err(|e| format!("weights.json: {e}"))?;
+    Weights::from_json(&json).map_err(|e| format!("weights.json: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(cpu_client().unwrap_err().contains("xla"));
+        let c = PjRtClient;
+        assert!(Artifact::load(&c, Path::new("x")).is_err());
+        assert!(GoldenCnn::load(&c, Path::new("x")).is_err());
+        assert!(WindowKernel::load(&c, Path::new("x")).is_err());
+    }
+}

@@ -2,64 +2,51 @@
 //! planned CNN, plus netlist-level spot verification of deployed IPs.
 //!
 //! The coordinator's workers compute *values* with the behavioral models
-//! (bit-exact, fast); this module computes *time* from the IP schedules
-//! (II, latency, instances) — the same split a hardware team uses between
-//! RTL sim and analytical performance models. For small layers,
+//! (bit-exact, fast); this module computes *time* from the engine
+//! schedules (rate, instances) — the same split a hardware team uses
+//! between RTL sim and analytical performance models. Every engine kind
+//! in the plan (conv, FC, max-pool, fused ReLU) contributes its own
+//! cycles: nothing rides along for free. For small layers,
 //! [`netlist_layer_check`] additionally pushes real windows through the
 //! generated netlist in the bit-exact simulator to witness that the
 //! deployed IP kind computes exactly what the behavioral path computed.
 
 use crate::cnn::model::{Layer, Model};
+use crate::ips::engine::EngineKind;
 use crate::planner::Plan;
 
 /// Modeled timing of one deployed image stream.
 #[derive(Debug, Clone)]
 pub struct PerfReport {
     pub clock_mhz: f64,
-    /// Per-conv/fc-layer cycles per image (layer index, cycles).
-    pub layer_cycles: Vec<(usize, f64)>,
+    /// Per-engine cycles per image (layer index, engine, cycles), in plan
+    /// order — a layer with a fused ReLU appears twice.
+    pub engine_cycles: Vec<(usize, EngineKind, f64)>,
     /// Steady-state images/second (pipelined across layers).
     pub throughput_img_s: f64,
-    /// Single-image latency (sum of layer fills), microseconds.
+    /// Single-image latency (sum of engine fills), microseconds.
     pub latency_us: f64,
     pub bottleneck: usize,
 }
 
 /// Compute the performance model for a plan.
-pub fn estimate(model: &Model, plan: &Plan) -> PerfReport {
-    let mut layer_cycles = Vec::new();
+pub fn estimate(_model: &Model, plan: &Plan) -> PerfReport {
+    let mut engine_cycles = Vec::with_capacity(plan.engines.len());
     let mut worst = 0.0f64;
     let mut bottleneck = 0;
     let mut total_cycles = 0.0f64;
-    for lp in &plan.conv {
-        layer_cycles.push((lp.layer, lp.cycles_per_image));
-        total_cycles += lp.cycles_per_image;
-        if lp.cycles_per_image > worst {
-            worst = lp.cycles_per_image;
-            bottleneck = lp.layer;
+    for ep in &plan.engines {
+        engine_cycles.push((ep.layer, ep.kind, ep.cycles_per_image));
+        total_cycles += ep.cycles_per_image;
+        if ep.cycles_per_image > worst {
+            worst = ep.cycles_per_image;
+            bottleneck = ep.layer;
         }
     }
-    for &(li, _, _, cyc) in &plan.fc {
-        layer_cycles.push((li, cyc));
-        total_cycles += cyc;
-        if cyc > worst {
-            worst = cyc;
-            bottleneck = li;
-        }
-    }
-    // Pool/ReLU layers ride along at 1 value/cycle — add their element
-    // counts to latency only (they never bottleneck a conv pipeline).
-    let shapes = model.shapes().expect("valid model");
-    for (li, layer) in model.layers.iter().enumerate() {
-        if matches!(layer, Layer::MaxPool) {
-            total_cycles += shapes[li].numel() as f64;
-        }
-    }
-    layer_cycles.sort_by_key(|&(li, _)| li);
     let hz = plan.clock_mhz * 1e6;
     PerfReport {
         clock_mhz: plan.clock_mhz,
-        layer_cycles,
+        engine_cycles,
         throughput_img_s: hz / worst.max(1e-9),
         latency_us: total_cycles / hz * 1e6,
         bottleneck,
@@ -67,8 +54,8 @@ pub fn estimate(model: &Model, plan: &Plan) -> PerfReport {
 }
 
 /// Drive `n_windows` real windows of layer `layer_idx`'s workload through
-/// the *generated netlist* of the planned IP kind and compare against the
-/// behavioral expectation. Returns the number of windows checked.
+/// the *generated netlist* of the planned conv IP kind and compare against
+/// the behavioral expectation. Returns the number of windows checked.
 pub fn netlist_layer_check(
     model: &Model,
     plan: &Plan,
@@ -76,23 +63,23 @@ pub fn netlist_layer_check(
     seed: u64,
     n_windows: usize,
 ) -> Result<usize, String> {
-    let lp = plan
-        .conv
+    let kind = plan
+        .engines
         .iter()
-        .find(|lp| lp.layer == layer_idx)
+        .find_map(|ep| (ep.layer == layer_idx).then(|| ep.kind.conv_kind()).flatten())
         .ok_or_else(|| format!("layer {layer_idx} is not a planned conv layer"))?;
     let Layer::Conv { params, .. } = &model.layers[layer_idx] else {
         return Err("not a conv layer".into());
     };
-    let ip = crate::ips::generate(lp.kind, params).map_err(|e| e.to_string())?;
+    let ip = crate::ips::generate(kind, params).map_err(|e| e.to_string())?;
     let mut rng = crate::util::rng::Rng::new(seed);
-    let lanes = lp.kind.lanes() as usize;
+    let lanes = kind.lanes() as usize;
     let passes = n_windows.div_ceil(lanes);
     let (windows, coefs) = crate::ips::verify::random_stimulus(&ip, &mut rng, passes);
     let got = crate::ips::verify::run_ip(&ip, &windows, &coefs);
     let want = crate::ips::verify::expected(&ip, &windows, &coefs);
     if got != want {
-        return Err(format!("netlist mismatch on layer {layer_idx} ({})", lp.kind.name()));
+        return Err(format!("netlist mismatch on layer {layer_idx} ({})", kind.name()));
     }
     Ok(passes * lanes)
 }
@@ -117,6 +104,12 @@ mod tests {
         let perf = estimate(&m, &p);
         assert!((perf.throughput_img_s - p.images_per_sec).abs() / p.images_per_sec < 1e-9);
         assert!(perf.latency_us > 0.0);
+        // Every engine site is accounted, pool/ReLU included.
+        assert_eq!(perf.engine_cycles.len(), p.engines.len());
+        assert!(perf
+            .engine_cycles
+            .iter()
+            .any(|(_, k, c)| *k == EngineKind::MaxPool && *c > 0.0));
         // Latency must be at least one bottleneck interval.
         let interval_us = 1e6 / perf.throughput_img_s;
         assert!(perf.latency_us >= interval_us * 0.99);
@@ -125,8 +118,8 @@ mod tests {
     #[test]
     fn netlist_spot_check_passes() {
         let (m, p) = lenet_plan();
-        for lp in &p.conv {
-            let n = netlist_layer_check(&m, &p, lp.layer, 11, 8).unwrap();
+        for ep in p.convs() {
+            let n = netlist_layer_check(&m, &p, ep.layer, 11, 8).unwrap();
             assert!(n >= 8);
         }
     }

@@ -107,6 +107,35 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// JSON form of a stats series (for `BENCH_*.json` artifacts: criterion
+/// is unavailable offline, so the harness emits its own machine-readable
+/// series for regression tracking).
+pub fn stats_json(stats: &[Stats]) -> crate::util::json::Json {
+    use crate::util::json::{obj, Json};
+    Json::Arr(
+        stats
+            .iter()
+            .map(|s| {
+                obj([
+                    ("name", s.name.as_str().into()),
+                    ("iters", s.iters.into()),
+                    ("min_ns", s.min_ns.into()),
+                    ("median_ns", s.median_ns.into()),
+                    ("mean_ns", s.mean_ns.into()),
+                    ("max_ns", s.max_ns.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write a `BENCH_*.json` artifact (`{"bench": title, "cases": [...]}`).
+pub fn write_json(path: &str, title: &str, stats: &[Stats]) -> std::io::Result<()> {
+    use crate::util::json::obj;
+    let doc = obj([("bench", title.into()), ("cases", stats_json(stats))]);
+    std::fs::write(path, doc.dump())
+}
+
 /// Print a standard bench-report block for a list of stats.
 pub fn report(title: &str, stats: &[Stats]) {
     use super::table::{Align, Table};
@@ -163,6 +192,16 @@ mod tests {
             cheap.median_ns,
             costly.median_ns
         );
+    }
+
+    #[test]
+    fn json_emission_parses_back() {
+        let b = Bench::quick();
+        let s = b.run("case", || black_box(1u64));
+        let text = stats_json(&[s]).dump();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 1);
+        assert_eq!(back.as_arr().unwrap()[0].get("name").unwrap().as_str().unwrap(), "case");
     }
 
     #[test]

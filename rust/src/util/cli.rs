@@ -25,17 +25,28 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: '{1}' ({2})")]
     BadValue(String, String, String),
-    #[error("missing required positional argument <{0}>")]
     MissingPositional(&'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(n) => write!(f, "unknown option --{n}"),
+            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            CliError::BadValue(n, v, why) => write!(f, "invalid value for --{n}: '{v}' ({why})"),
+            CliError::MissingPositional(n) => {
+                write!(f, "missing required positional argument <{n}>")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv` against the declared option specs.

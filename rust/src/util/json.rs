@@ -21,13 +21,22 @@ pub enum Json {
 }
 
 /// Parse or access error with a location hint.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum JsonError {
-    #[error("json parse error at byte {0}: {1}")]
     Parse(usize, String),
-    #[error("json access error: {0}")]
     Access(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse(at, what) => write!(f, "json parse error at byte {at}: {what}"),
+            JsonError::Access(what) => write!(f, "json access error: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a complete JSON document; trailing non-whitespace is an error.

@@ -2,7 +2,9 @@
 //! (executed through PJRT) must agree bit-for-bit with the Rust
 //! behavioral stack and the deployed coordinator pipeline.
 //!
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Requires `make artifacts` and the `xla` cargo feature (the PJRT
+//! runtime is a stub without it — these tests compile to nothing then).
+#![cfg(feature = "xla")]
 
 use acf::cnn::data::Dataset;
 use acf::cnn::infer::{argmax, infer};

@@ -7,8 +7,9 @@ use acf::cnn::data::Dataset;
 use acf::cnn::model::{Layer, Model, Weights};
 use acf::coordinator::Deployment;
 use acf::fabric::device::{by_name, catalog};
+use acf::ips::engine::{self, EngineKind, EngineParams};
 use acf::ips::{self, ConvKind, ConvParams};
-use acf::planner::{baselines, plan, Policy};
+use acf::planner::{baselines, plan, profile, Policy};
 use acf::util::json::Json;
 use acf::util::prop::forall;
 use acf::util::rng::Rng;
@@ -28,15 +29,81 @@ fn planner_invariants_catalog_x_models_x_policies() {
                 assert!(
                     (perf.throughput_img_s - p.images_per_sec).abs() / p.images_per_sec < 1e-9
                 );
-                assert!(p.conv.iter().all(|lp| lp.instances >= 1));
+                assert!(p.engines.iter().all(|ep| ep.instances >= 1));
+                // Every non-conv layer type is planned too: the registry
+                // leaves nothing resource-free.
+                for (li, layer) in model.layers.iter().enumerate() {
+                    let kinds: Vec<EngineKind> = p
+                        .engines
+                        .iter()
+                        .filter(|ep| ep.layer == li)
+                        .map(|ep| ep.kind)
+                        .collect();
+                    match layer {
+                        Layer::Conv { relu, .. } => {
+                            assert!(kinds.iter().any(|k| k.conv_kind().is_some()));
+                            assert_eq!(*relu, kinds.contains(&EngineKind::Relu));
+                        }
+                        Layer::MaxPool => assert_eq!(kinds, vec![EngineKind::MaxPool]),
+                        Layer::Fc { relu, .. } => {
+                            assert!(kinds.contains(&EngineKind::Fc));
+                            assert_eq!(*relu, kinds.contains(&EngineKind::Relu));
+                        }
+                    }
+                }
                 // Bottleneck must be one of the planned layers.
-                assert!(
-                    p.conv.iter().any(|lp| lp.layer == p.bottleneck)
-                        || p.fc.iter().any(|f| f.0 == p.bottleneck)
-                );
+                assert!(p.engines.iter().any(|ep| ep.layer == p.bottleneck));
             }
         }
     }
+}
+
+#[test]
+fn prop_engine_registry_roundtrips_generate_synth_profile() {
+    // Every EngineKind must generate a checkable netlist, synthesize to
+    // nonzero utilization, and profile (synthesis + STA) on the paper's
+    // board — across random operand widths and shapes.
+    let dev = by_name("zcu104").unwrap();
+    forall("engine registry generate→synth→profile", 16, |g| {
+        let bits = g.usize_in(4, 8) as u32;
+        let fanin = g.usize_in(8, 96) as u32;
+        let window = g.usize_in(2, 8) as u32;
+        let p = ConvParams {
+            k: 3,
+            data_bits: bits,
+            coef_bits: bits,
+            out_bits: bits,
+            shift: bits - 1,
+            round: acf::fixed::Round::Truncate,
+        };
+        let cands: Vec<(EngineKind, EngineParams)> = ConvKind::ALL
+            .iter()
+            .map(|&ck| (EngineKind::Conv(ck), EngineParams::conv(p)))
+            .chain([
+                (EngineKind::Fc, EngineParams::fc(p, fanin)),
+                (EngineKind::MaxPool, EngineParams::pool(bits, window)),
+                (EngineKind::Relu, EngineParams::relu(bits)),
+            ])
+            .collect();
+        for (kind, ep) in cands {
+            let ip = engine::generate(kind, &ep)
+                .map_err(|e| format!("{} bits={bits}: {e}", kind.name()))?;
+            ip.netlist.check().map_err(|e| format!("{}: {e}", kind.name()))?;
+            if ip.rate <= 0.0 {
+                return Err(format!("{}: nonpositive rate {}", kind.name(), ip.rate));
+            }
+            let u = acf::synth::synthesize(&ip.netlist);
+            if u.luts + u.dsps == 0 {
+                return Err(format!("{}: zero utilization", kind.name()));
+            }
+            let prof = profile(kind, &ep, 200.0, &dev)
+                .map_err(|e| format!("{} profile: {e}", kind.name()))?;
+            if prof.util != u || prof.wns_ns < 0.0 {
+                return Err(format!("{}: profile disagrees with synth", kind.name()));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
