@@ -1,0 +1,101 @@
+//! Serving-tier benchmarks (DESIGN.md experiment "SERVE"):
+//!   - closed-loop single-request round trip through the scheduler +
+//!     persistent pipeline,
+//!   - micro-batched fleet throughput (32-request bursts),
+//!   - request-latency distribution and sustained img/s under a fixed
+//!     open-loop offered load (the SLO-facing series).
+//!
+//! Emits `BENCH_serve.json` next to `BENCH_hotpath.json` so serving
+//! regressions are visible across runs. The open-loop series is reported
+//! through the same `Stats` shape: the latency case's min/median/mean/max
+//! are the distribution's min/p50/mean/max, and the sustained case is
+//! expressed as ns per image so throughput regressions trend the same
+//! direction as every other series.
+
+use acf::cnn::data::Dataset;
+use acf::cnn::model::{Model, Weights};
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::serve::{open_loop, plan_fixed_fleet, ServeConfig, Server};
+use acf::util::bench::{report, write_json, Bench, Stats};
+
+fn main() {
+    let b = Bench::default();
+    let model = Model::lenet_tiny();
+    let dev = by_name("zcu104").unwrap();
+    let weights = Weights::random(&model, 1);
+    // Fixed replica count so the series is comparable across machines.
+    let fp = plan_fixed_fleet(&model, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let corpus: Vec<Vec<i64>> =
+        Dataset::generate(32, 2, 16, 16).images.iter().map(|i| i.pix.clone()).collect();
+    let mut stats = Vec::new();
+
+    // 1. Closed-loop round trip: submit one request, wait for its logits.
+    {
+        let server = Server::start(fp.deploy(model.clone(), weights.clone()), &ServeConfig::default());
+        let s = b.run("serve: closed-loop request round trip (2 replicas)", || {
+            server.submit_wait(corpus[0].clone()).unwrap().wait().unwrap()
+        });
+        println!("closed loop: {:.0} req/s", s.throughput());
+        stats.push(s);
+        drop(server.shutdown());
+    }
+
+    // 2. Micro-batched burst: 32 requests in flight at once.
+    {
+        let server = Server::start(fp.deploy(model.clone(), weights.clone()), &ServeConfig::default());
+        let s = b.run("serve: 32-request burst (2 replicas)", || {
+            let pendings: Vec<_> = corpus
+                .iter()
+                .map(|img| server.submit_wait(img.clone()).unwrap())
+                .collect();
+            pendings.into_iter().map(|p| p.wait().unwrap().len()).sum::<usize>()
+        });
+        println!("burst: {:.0} img/s (batch 32)", 32.0 * s.throughput());
+        stats.push(s);
+        drop(server.shutdown());
+    }
+
+    // 3. Fixed offered load: open loop at 1500 img/s, 600 requests.
+    {
+        const OFFERED: f64 = 1_500.0;
+        const REQUESTS: usize = 600;
+        let server = Server::start(fp.deploy(model.clone(), weights.clone()), &ServeConfig::default());
+        let outcomes = open_loop(&server, &corpus, REQUESTS, OFFERED, 0xBE7C);
+        let served = outcomes.iter().filter(|o| o.result.is_ok()).count();
+        let snap = server.shutdown();
+        println!(
+            "open loop @ {OFFERED:.0} img/s offered: {served}/{REQUESTS} served, \
+             sustained {:.0} img/s, p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms, {} shed",
+            snap.sustained_img_s, snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.rejected
+        );
+        // One flat-valued case per figure of merit, so each JSON entry is
+        // self-describing regardless of which field a tracker reads.
+        let flat = |name: String, ns: f64| Stats {
+            name,
+            iters: snap.completed,
+            min_ns: ns,
+            median_ns: ns,
+            mean_ns: ns,
+            max_ns: ns,
+        };
+        stats.push(flat(
+            format!("serve: p99 latency @ {OFFERED:.0} img/s offered (2 replicas)"),
+            snap.p99_ms * 1e6,
+        ));
+        stats.push(flat(
+            format!("serve: p50 latency @ {OFFERED:.0} img/s offered (2 replicas)"),
+            snap.p50_ms * 1e6,
+        ));
+        stats.push(flat(
+            format!("serve: sustained ns/img @ {OFFERED:.0} img/s offered (2 replicas)"),
+            1e9 / snap.sustained_img_s.max(1e-9),
+        ));
+    }
+
+    report("serving tier", &stats);
+    match write_json("BENCH_serve.json", "serve", &stats) {
+        Ok(()) => println!("\nwrote BENCH_serve.json ({} cases)", stats.len()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

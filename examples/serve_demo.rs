@@ -1,0 +1,70 @@
+//! SERVING DEMO (DESIGN.md experiment "SERVE"): one device budget → a
+//! replica fleet → micro-batched request scheduling under open-loop
+//! traffic, with admission control doing explicit load shedding.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use acf::cnn::data::Dataset;
+use acf::cnn::model::{Model, Weights};
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::serve::{open_loop, plan_fleet, ServeConfig, ServeError, Server, DEFAULT_MAX_REPLICAS};
+
+fn main() {
+    let model = Model::lenet_tiny();
+    let dev = by_name("zcu104").expect("catalog device");
+    let policy = Policy::adaptive();
+
+    println!("== 1. fleet planning: divide the {} budget until throughput peaks ==", dev.name);
+    let fp = plan_fleet(&model, &dev, 200.0, &policy, None, DEFAULT_MAX_REPLICAS)
+        .expect("lenet-tiny plans on the paper board");
+    println!(
+        "  {} replicas, each on a 1/{} shard: {:.0} img/s per replica, {:.0} img/s fleet (modeled)",
+        fp.replicas, fp.replicas, fp.per_replica.images_per_sec, fp.fleet_img_s
+    );
+    let (dsp, lut) = fp.pressure();
+    println!("  fleet pressure on the undivided part: DSP {:.1}%, LUT {:.1}%", dsp * 100.0, lut * 100.0);
+
+    println!("\n== 2. deploy: persistent pipelines, shared weights ==");
+    let weights = Weights::random(&model, 42);
+    let server = Server::start(fp.deploy(model.clone(), weights.clone()), &ServeConfig::default());
+    println!("  {} replica pipelines up ({} layer workers each)", fp.replicas, model.layers.len());
+
+    println!("\n== 3. open-loop traffic with admission control ==");
+    let corpus: Vec<Vec<i64>> =
+        Dataset::generate(32, 7, 16, 16).images.iter().map(|i| i.pix.clone()).collect();
+    let references: Vec<Vec<i64>> =
+        corpus.iter().map(|img| acf::cnn::infer::infer(&model, &weights, img)).collect();
+    let outcomes = open_loop(&server, &corpus, 400, 2_000.0, 0xACF5);
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    let mut wrong = 0usize;
+    for o in &outcomes {
+        match &o.result {
+            Ok(logits) => {
+                if logits == &references[o.image_idx] {
+                    ok += 1;
+                } else {
+                    wrong += 1;
+                }
+            }
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected serve error: {e}"),
+        }
+    }
+    let snap = server.shutdown();
+    println!("  {ok} served bit-exactly, {shed} shed at admission, {wrong} mismatched");
+    println!(
+        "  sustained {:.0} img/s, latency p50 {:.2} ms / p95 {:.2} ms / p99 {:.2} ms, queue peak {}",
+        snap.sustained_img_s, snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.queue_peak
+    );
+    for (ri, r) in snap.replicas.iter().enumerate() {
+        println!(
+            "  replica {ri}: {} images in {} micro-batches ({:.1}% busy)",
+            r.images,
+            r.batches,
+            r.utilization * 100.0
+        );
+    }
+    assert_eq!(wrong, 0, "serving path must stay bit-exact");
+}

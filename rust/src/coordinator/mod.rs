@@ -1,15 +1,21 @@
 //! Deployment coordinator — the L3 run-time that owns process topology,
 //! worker threads, backpressure, and metrics.
 //!
-//! A [`Deployment`] realizes a [`Plan`]: one worker thread per layer,
-//! connected by bounded channels (the fabric's line-buffer backpressure,
-//! modeled at image granularity). Values are computed with the bit-exact
-//! behavioral layer models (the netlists are spot-verified against them by
-//! [`crate::sim::netlist_layer_check`]); time comes from the engine plan's
-//! schedule model, and per-layer worker wall time is recorded in
-//! [`metrics::Metrics`] keyed by the same layer indices the engine plan
-//! uses. Python never appears here — the XLA golden path lives in
-//! [`crate::runtime`] and is only consulted for verification.
+//! A [`Deployment`] realizes a [`Plan`]: one *persistent* worker thread
+//! per layer, connected by bounded channels (the fabric's line-buffer
+//! backpressure, modeled at image granularity). The workers are spawned
+//! once at deployment time and live until the `Deployment` is dropped —
+//! both the one-shot [`Deployment::infer_batch`] path and the serving
+//! tier ([`crate::serve`]) feed the same pipeline, and any number of
+//! callers may submit concurrently: every in-flight image carries its own
+//! reply channel, so interleaved batches never cross-talk and each caller
+//! still gets its outputs in submission order. Values are computed with
+//! the bit-exact behavioral layer models (the netlists are spot-verified
+//! against them by [`crate::sim::netlist_layer_check`]); time comes from
+//! the engine plan's schedule model, and per-layer worker wall time is
+//! recorded in [`metrics::Metrics`] keyed by the same layer indices the
+//! engine plan uses. Python never appears here — the XLA golden path
+//! lives in [`crate::runtime`] and is only consulted for verification.
 
 pub mod metrics;
 
@@ -18,17 +24,92 @@ use crate::cnn::model::{Layer, Model, Weights};
 use crate::fabric::device::Device;
 use crate::planner::{plan as make_plan, Plan, PlanError, Policy};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Channel depth between layer workers (double-buffered line memories).
 const CHANNEL_DEPTH: usize = 2;
 
+/// One in-flight image: the activation tensor being pushed through the
+/// layer stages, the caller's batch position, and the caller's reply
+/// channel. Carrying the reply with the work is what lets multiple
+/// batches interleave on one pipeline without a demultiplexer.
+struct Job {
+    tensor: Tensor,
+    tag: usize,
+    reply: mpsc::Sender<(usize, Vec<i64>)>,
+}
+
+/// The persistent layer pipeline: one long-lived thread per layer plus an
+/// egress thread, all fed by bounded `sync_channel`s. Built once per
+/// deployment; torn down (sender dropped, workers joined) on drop.
+struct Pipeline {
+    /// `None` only during teardown. Callers clone the sender out from
+    /// under the mutex and submit without holding the lock.
+    ingress: Mutex<Option<mpsc::SyncSender<Job>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pipeline {
+    fn start(model: Arc<Model>, weights: Arc<Weights>, metrics: Arc<metrics::Metrics>) -> Pipeline {
+        let n_layers = model.layers.len();
+        let (tx0, mut rx_prev) = mpsc::sync_channel::<Job>(CHANNEL_DEPTH);
+        let mut workers = Vec::with_capacity(n_layers + 1);
+        for li in 0..n_layers {
+            let (tx, rx_next) = mpsc::sync_channel::<Job>(CHANNEL_DEPTH);
+            let rx_in = rx_prev;
+            rx_prev = rx_next;
+            let model = Arc::clone(&model);
+            let weights = Arc::clone(&weights);
+            let metrics = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || {
+                // Geometry is a per-layer constant — computed once per
+                // worker lifetime, not per image (DESIGN.md §Perf item 5).
+                let geom = layer_input_geometry(&model, li);
+                while let Ok(mut job) = rx_in.recv() {
+                    let lt0 = std::time::Instant::now();
+                    job.tensor = apply_layer(&model, &weights, li, &job.tensor, geom);
+                    metrics.record_layer(li, lt0.elapsed());
+                    if tx.send(job).is_err() {
+                        return; // downstream gone
+                    }
+                }
+            }));
+        }
+        // Egress: flatten and route each result back to its caller. Reply
+        // channels are unbounded, so egress never blocks and the pipeline
+        // cannot deadlock however many batches are in flight.
+        workers.push(std::thread::spawn(move || {
+            while let Ok(job) = rx_prev.recv() {
+                let _ = job.reply.send((job.tag, job.tensor.concat()));
+            }
+        }));
+        Pipeline { ingress: Mutex::new(Some(tx0)), workers }
+    }
+
+    /// A cloned handle to the ingress channel, or `None` mid-teardown.
+    fn sender(&self) -> Option<mpsc::SyncSender<Job>> {
+        self.ingress.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Pipeline {
+    fn drop(&mut self) {
+        // Dropping the ingress sender lets the recv-loop cascade wind the
+        // workers down; join so no thread outlives the deployment.
+        *self.ingress.lock().unwrap() = None;
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// A deployed model ready to serve batches.
 pub struct Deployment {
-    pub model: Model,
+    pub model: Arc<Model>,
     pub weights: Arc<Weights>,
     pub plan: Plan,
-    pub metrics: metrics::Metrics,
+    pub metrics: Arc<metrics::Metrics>,
+    pipeline: Pipeline,
 }
 
 #[derive(Debug)]
@@ -36,6 +117,8 @@ pub enum DeployError {
     Plan(PlanError),
     BadImage { got: usize, want: usize },
     AsymmetricInput(i64),
+    /// A layer worker exited (panicked) before the batch completed.
+    PipelineDown,
 }
 
 impl std::fmt::Display for DeployError {
@@ -49,6 +132,9 @@ impl std::fmt::Display for DeployError {
                 f,
                 "input pixel {v} outside the symmetric range [-127, 127] — would trip the Conv_3 packing clamp"
             ),
+            DeployError::PipelineDown => {
+                write!(f, "layer pipeline worker exited before the batch completed")
+            }
         }
     }
 }
@@ -78,8 +164,17 @@ impl Deployment {
         policy: &Policy,
     ) -> Result<Deployment, DeployError> {
         let plan = make_plan(&model, dev, clock_mhz, policy)?;
-        let metrics = metrics::Metrics::with_layers(model.layers.len());
-        Ok(Deployment { model, weights: Arc::new(weights), plan, metrics })
+        Ok(Deployment::with_plan(Arc::new(model), Arc::new(weights), plan))
+    }
+
+    /// Deploy an already-planned model (the serving tier's constructor:
+    /// fleet replicas share one `Arc<Model>`/`Arc<Weights>` and each get
+    /// their own pipeline from a plan made under a divided budget).
+    pub fn with_plan(model: Arc<Model>, weights: Arc<Weights>, plan: Plan) -> Deployment {
+        let metrics = Arc::new(metrics::Metrics::with_layers(model.layers.len()));
+        let pipeline =
+            Pipeline::start(Arc::clone(&model), Arc::clone(&weights), Arc::clone(&metrics));
+        Deployment { model, weights, plan, metrics, pipeline }
     }
 
     /// Modeled cycles/image per layer from the engine plan (a layer's
@@ -95,8 +190,10 @@ impl Deployment {
     }
 
     /// Ingress guard: shape + symmetric-range check (see module docs of
-    /// [`crate::cnn`] for why -128 is excluded).
-    fn check_image(&self, image: &[i64]) -> Result<(), DeployError> {
+    /// [`crate::cnn`] for why -128 is excluded). Public so the serving
+    /// tier can reject bad requests at admission instead of poisoning a
+    /// dispatched micro-batch.
+    pub fn validate_image(&self, image: &[i64]) -> Result<(), DeployError> {
         let want = self.model.in_h * self.model.in_w * self.model.in_ch;
         if image.len() != want {
             return Err(DeployError::BadImage { got: image.len(), want });
@@ -107,73 +204,56 @@ impl Deployment {
         Ok(())
     }
 
-    /// Serve a batch through the layer pipeline: one worker thread per
-    /// layer, bounded channels for backpressure. Returns per-image logits
-    /// in order. Accepts any slice of image-like values (`Vec<i64>`,
-    /// `&[i64]`, ...) so single-image callers need no copy.
+    /// Serve a batch through the persistent layer pipeline. Returns
+    /// per-image logits in submission order. Accepts any slice of
+    /// image-like values (`Vec<i64>`, `&[i64]`, ...) so single-image
+    /// callers need no copy. Safe to call from any number of threads at
+    /// once: batches interleave on the shared workers but every image is
+    /// routed back to its own caller by its carried reply channel.
     pub fn infer_batch<I>(&self, images: &[I]) -> Result<Vec<Vec<i64>>, DeployError>
     where
         I: AsRef<[i64]> + Sync,
     {
         for img in images {
-            self.check_image(img.as_ref())?;
+            self.validate_image(img.as_ref())?;
         }
         let t0 = std::time::Instant::now();
-        let n_layers = self.model.layers.len();
-        let metrics = &self.metrics;
-        let results: Vec<Vec<i64>> = std::thread::scope(|scope| {
-            // Stage 0 feeds images as single-channel tensors.
-            let (tx0, mut rx_prev) = mpsc::sync_channel::<Tensor>(CHANNEL_DEPTH);
-            let model = &self.model;
-            let weights = &self.weights;
-            scope.spawn(move || {
-                for img in images {
-                    let img = img.as_ref();
-                    let t: Tensor = (0..model.in_ch)
-                        .map(|c| {
-                            img[c * model.in_h * model.in_w..(c + 1) * model.in_h * model.in_w]
-                                .to_vec()
-                        })
-                        .collect();
-                    if tx0.send(t).is_err() {
-                        return; // downstream gone
-                    }
-                }
-            });
-            // One worker per layer.
-            for li in 0..n_layers {
-                let (tx, rx_next) = mpsc::sync_channel::<Tensor>(CHANNEL_DEPTH);
-                let rx_in = rx_prev;
-                rx_prev = rx_next;
-                scope.spawn(move || {
-                    // Geometry is a per-layer constant — computed once per
-                    // worker, not per image (EXPERIMENTS.md §Perf item 5).
-                    let geom = layer_input_geometry(model, li);
-                    while let Ok(t) = rx_in.recv() {
-                        let lt0 = std::time::Instant::now();
-                        let out = apply_layer(model, weights, li, &t, geom);
-                        metrics.record_layer(li, lt0.elapsed());
-                        if tx.send(out).is_err() {
-                            return;
-                        }
-                    }
-                });
-            }
-            // Collector.
-            let mut out = Vec::with_capacity(images.len());
-            while let Ok(t) = rx_prev.recv() {
-                out.push(t.concat());
-            }
-            out
-        });
+        let tx = self.pipeline.sender().ok_or(DeployError::PipelineDown)?;
+        let (reply_tx, reply_rx) = mpsc::channel::<(usize, Vec<i64>)>();
+        for (tag, img) in images.iter().enumerate() {
+            let job =
+                Job { tensor: tensorize(&self.model, img.as_ref()), tag, reply: reply_tx.clone() };
+            tx.send(job).map_err(|_| DeployError::PipelineDown)?;
+        }
+        // Drop our ends so the reply stream terminates even if a worker
+        // dies mid-batch (its queued jobs — and their reply clones — drop
+        // with it).
+        drop(reply_tx);
+        drop(tx);
+        let mut out = vec![Vec::new(); images.len()];
+        let mut got = 0usize;
+        while let Ok((tag, logits)) = reply_rx.recv() {
+            out[tag] = logits;
+            got += 1;
+        }
+        if got != images.len() {
+            return Err(DeployError::PipelineDown);
+        }
         self.metrics.record_batch(images.len() as u64, t0.elapsed());
-        Ok(results)
+        Ok(out)
     }
 
     /// Single image convenience (borrows — no per-call image copy).
     pub fn infer_one(&self, image: &[i64]) -> Result<Vec<i64>, DeployError> {
         Ok(self.infer_batch(std::slice::from_ref(&image))?.pop().unwrap())
     }
+}
+
+/// Split a flat ingress image into per-channel planes (stage-0 format).
+fn tensorize(model: &Model, img: &[i64]) -> Tensor {
+    (0..model.in_ch)
+        .map(|c| img[c * model.in_h * model.in_w..(c + 1) * model.in_h * model.in_w].to_vec())
+        .collect()
 }
 
 /// (h, w) of the tensor *entering* layer `li`.
@@ -338,6 +418,36 @@ mod tests {
         assert_eq!(snap.images, 8);
         assert_eq!(snap.batches, 2);
         assert!(snap.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn concurrent_batches_share_one_pipeline() {
+        // The persistent-pipeline contract: many callers, one set of layer
+        // workers, no cross-talk, per-caller ordering preserved.
+        let d = std::sync::Arc::new(deploy());
+        let ds = Dataset::generate(6, 11, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        let want: Vec<Vec<i64>> = images
+            .iter()
+            .map(|img| crate::cnn::infer::infer(&d.model, &d.weights, img))
+            .collect();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let d = std::sync::Arc::clone(&d);
+            let images = images.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rot = images;
+                rot.rotate_left(t);
+                (t, d.infer_batch(&rot).unwrap())
+            }));
+        }
+        for h in handles {
+            let (t, got) = h.join().unwrap();
+            let mut expect = want.clone();
+            expect.rotate_left(t);
+            assert_eq!(got, expect);
+        }
+        assert_eq!(d.metrics.snapshot().images, 24);
     }
 
     #[test]

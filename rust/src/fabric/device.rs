@@ -38,6 +38,28 @@ impl Device {
         need as f64 / self.luts.max(1) as f64
     }
 
+    /// An equal `1/n` slice of this part's resources — the budget one
+    /// replica of an `n`-replica serving fleet may spend. The planner runs
+    /// unchanged against the slice (resource-driven replication: the
+    /// paper's scarcity logic lifted one level up); `n` shards always fit
+    /// the whole device because each capacity is floor-divided. Static
+    /// power is split too so per-replica power reports stay meaningful;
+    /// the speed grade is a property of the silicon and is not divided.
+    pub fn shard(&self, n: u64) -> Device {
+        let n = n.max(1);
+        Device {
+            name: format!("{}/{n}", self.name),
+            part: self.part.clone(),
+            luts: self.luts / n,
+            ffs: self.ffs / n,
+            clbs: self.clbs / n,
+            dsps: self.dsps / n,
+            bram18: self.bram18 / n,
+            static_w: self.static_w / n as f64,
+            speed_derate: self.speed_derate,
+        }
+    }
+
     /// Serialize for config round-trips.
     pub fn to_json(&self) -> Json {
         crate::util::json::obj([

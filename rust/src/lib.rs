@@ -31,7 +31,15 @@
 //!   resource-driven planner that assigns an engine + instance count to
 //!   *every* layer under a device budget (memoized profiles, scarcity
 //!   scoring, whole-network bottleneck search), then deploys the network
-//!   on a threaded pipeline with per-layer metrics keyed off the plan.
+//!   on a *persistent* threaded pipeline — long-lived layer workers fed
+//!   by bounded channels, shared by every caller — with per-layer
+//!   metrics keyed off the plan.
+//! * [`serve`] — the traffic-scale serving tier (`acf serve`): a fleet
+//!   planner that replicates the whole network under divided device
+//!   budgets, a request scheduler with a bounded admission queue,
+//!   micro-batching and least-loaded dispatch, fleet metrics
+//!   (p50/p95/p99 latency, sustained throughput, per-replica
+//!   utilization), and an open-loop synthetic load generator.
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   model used as the golden numeric reference (behind the `xla` cargo
 //!   feature; a same-surface stub otherwise).
@@ -52,6 +60,7 @@ pub mod runtime;
 #[cfg(not(feature = "xla"))]
 #[path = "runtime/stub.rs"]
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sta;
 pub mod synth;
@@ -59,8 +68,3 @@ pub mod util;
 
 /// Crate version string reported by the CLI.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
-
-/// CLI entry (placeholder; fleshed out in `report`/`main`).
-pub fn cli_main() {
-    println!("acf {VERSION}");
-}

@@ -7,6 +7,7 @@
 //!   power    — power report for one IP
 //!   plan     — resource-driven deployment plan for a model on a device
 //!   deploy   — plan + run a batch of synthetic images (behavioral fabric)
+//!   serve    — plan a replica fleet and drive it with open-loop traffic
 //!   sweep    — adaptation / precision sweeps
 //!   golden   — run the AOT XLA artifact and cross-check vs behavioral
 //!   version  — print version
@@ -28,6 +29,7 @@ fn main() {
         Some("power") => cmd_ip(&argv[1..], Mode::Power),
         Some("plan") => cmd_plan(&argv[1..], false),
         Some("deploy") => cmd_plan(&argv[1..], true),
+        Some("serve") => cmd_serve(&argv[1..]),
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("golden") => cmd_golden(&argv[1..]),
         Some("version") => {
@@ -36,7 +38,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: acf <tables|synth|sta|power|plan|deploy|sweep|golden|version> [options]\n\
+                "usage: acf <tables|synth|sta|power|plan|deploy|serve|sweep|golden|version> [options]\n\
                  run `acf <cmd> --help` for per-command options"
             );
             2
@@ -298,6 +300,195 @@ fn cmd_plan(argv: &[String], deploy: bool) -> i32 {
         if mismatches > 0 {
             return 1;
         }
+    }
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let mut specs = dev_specs();
+    specs.push(OptSpec {
+        name: "model",
+        value: true,
+        help: "lenet-tiny|lenet-wide2|lenet-wide4|lenet-12bit|<file.json>",
+        default: Some("lenet-tiny"),
+    });
+    specs.push(OptSpec { name: "policy", value: true, help: "adaptive|dsp-first|quantize-first|static-single", default: Some("adaptive") });
+    specs.push(OptSpec { name: "replicas", value: true, help: "replica count, or 'auto' to search", default: Some("auto") });
+    specs.push(OptSpec { name: "max-replicas", value: true, help: "ceiling for the replica search", default: Some("8") });
+    specs.push(OptSpec { name: "target-img-s", value: true, help: "throughput SLO (modeled), or 'none'", default: Some("none") });
+    specs.push(OptSpec { name: "requests", value: true, help: "open-loop request count", default: Some("512") });
+    specs.push(OptSpec { name: "offered-img-s", value: true, help: "open-loop arrival rate, or 'auto' (calibrated)", default: Some("auto") });
+    specs.push(OptSpec { name: "max-batch", value: true, help: "micro-batch ceiling per dispatch", default: Some("8") });
+    specs.push(OptSpec { name: "queue-depth", value: true, help: "bounded submission queue depth", default: Some("64") });
+    specs.push(OptSpec { name: "seed", value: true, help: "weights/data/arrivals seed", default: Some("42") });
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!("{}", help("acf serve", "replica-fleet serving under synthetic open-loop traffic", &specs));
+        return 0;
+    }
+    let dev = match get_device(&a) {
+        Ok(d) => d,
+        Err(e) => return fail(e),
+    };
+    let clock = a.get_f64("clock-mhz").unwrap().unwrap();
+    let model = match parse_model(&a) {
+        Ok(m) => m,
+        Err(e) => return fail(e),
+    };
+    if model.in_ch != 1 {
+        return fail("the synthetic load corpus is single-channel; serve needs in_ch == 1");
+    }
+    let policy = match parse_policy(&a) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let forced = match a.get_u64_auto("replicas") {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let max_replicas = a.get_u64("max-replicas").unwrap().unwrap() as usize;
+    let target = match a.get_f64_auto("target-img-s") {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let requests = a.get_usize("requests").unwrap().unwrap();
+    let seed = a.get_u64("seed").unwrap().unwrap();
+    let cfg = acf::serve::ServeConfig {
+        queue_depth: a.get_usize("queue-depth").unwrap().unwrap(),
+        max_batch: a.get_usize("max-batch").unwrap().unwrap(),
+    };
+
+    // 1. Fleet plan: divide the device budget until the best replica
+    //    count is found (or use the forced count).
+    let fp = match forced {
+        Some(r) => acf::serve::plan_fixed_fleet(&model, &dev, clock, &policy, r as usize, target),
+        None => acf::serve::plan_fleet(&model, &dev, clock, &policy, target, max_replicas),
+    };
+    let fp = match fp {
+        Ok(fp) => fp,
+        Err(e) => return fail(e),
+    };
+    println!(
+        "fleet plan for '{}' on {} @ {} MHz (policy {}):",
+        model.name, dev.name, clock, fp.per_replica.policy
+    );
+    print!("{}", acf::report::fleet_table(&fp).plain());
+    println!("per-replica engine plan (each replica owns a 1/{} device shard):", fp.replicas);
+    print!("{}", acf::report::plan_table(&fp.per_replica).plain());
+    if !fp.meets_target {
+        println!(
+            "warning: no replica count up to {max_replicas} meets the {:.0} img/s target; serving best effort",
+            fp.target_img_s.unwrap_or(0.0)
+        );
+    }
+
+    // 2. Deploy the fleet and precompute the corpus + reference logits
+    //    (once per distinct image — responses are checked against these).
+    let weights = acf::cnn::model::Weights::random(&model, seed);
+    let replicas = fp.deploy(model.clone(), weights.clone());
+    let corpus = Dataset::generate(requests.clamp(8, 64), seed, model.in_h, model.in_w);
+    let corpus: Vec<Vec<i64>> = corpus.images.iter().map(|i| i.pix.clone()).collect();
+    let references: Vec<Vec<i64>> =
+        corpus.iter().map(|img| acf::cnn::infer::infer(&model, &weights, img)).collect();
+
+    // 3. Calibrate single-replica host throughput (the honest basis for
+    //    a measured replica-sum: the FPGA-clock model is not host time).
+    //    Runs through the one-shot path, before any server exists.
+    let cal_images: Vec<Vec<i64>> = (0..64).map(|i| corpus[i % corpus.len()].clone()).collect();
+    let t0 = std::time::Instant::now();
+    replicas[0].infer_batch(&cal_images).expect("calibration batch");
+    let single_img_s = cal_images.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let replica_sum_host = single_img_s * fp.replicas as f64;
+    let offered = match a.get_f64_auto("offered-img-s") {
+        Ok(Some(r)) => r,
+        // Auto: offer ~90% of the calibrated host replica-sum so a healthy
+        // fleet keeps up and overload stays an explicit choice.
+        Ok(None) => (replica_sum_host * 0.9).max(1.0),
+        Err(e) => return fail(e),
+    };
+
+    // 4. Bit-exactness: the serving path must produce exactly what the
+    //    one-shot infer_batch path (and the behavioral reference) does.
+    //    Uses a throwaway server over the same replicas so the load run's
+    //    fleet metrics stay untouched.
+    let sample_len = corpus.len().min(8);
+    let sample = &corpus[..sample_len];
+    let batch = replicas[0].infer_batch(sample).expect("replica serves the sample");
+    let mut mismatches = 0usize;
+    {
+        let warmup = acf::serve::Server::start(replicas.clone(), &cfg);
+        let pendings: Vec<_> = sample
+            .iter()
+            .map(|img| warmup.submit_wait(img.clone()).expect("server accepting"))
+            .collect();
+        let served: Vec<Vec<i64>> =
+            pendings.into_iter().map(|p| p.wait().expect("request served")).collect();
+        drop(warmup.shutdown());
+        for ((reference, s), b) in references[..sample_len].iter().zip(&served).zip(&batch) {
+            if s != reference || b != reference {
+                mismatches += 1;
+            }
+        }
+    }
+    println!(
+        "serving-path check: {}/{} logits bit-identical to infer_batch and the behavioral reference",
+        sample_len - mismatches,
+        sample_len
+    );
+
+    // 5. Open-loop load against a fresh server (clean metrics clock).
+    println!(
+        "open loop: {} requests at {:.0} img/s offered (Poisson arrivals, seed {})",
+        requests, offered, seed
+    );
+    let server = acf::serve::Server::start(replicas, &cfg);
+    let outcomes = acf::serve::open_loop(&server, &corpus, requests, offered, seed ^ 0x5E21);
+    let mut load_mismatches = 0usize;
+    let mut failures = 0usize;
+    for o in &outcomes {
+        match &o.result {
+            Ok(logits) => {
+                if logits != &references[o.image_idx] {
+                    load_mismatches += 1;
+                }
+            }
+            Err(acf::serve::ServeError::Overloaded { .. }) => {} // counted by metrics
+            Err(_) => failures += 1,
+        }
+    }
+    let snap = server.shutdown();
+
+    // 6. Report.
+    println!("\nmeasured fleet (host wall time; behavioral layer models):");
+    print!("{}", acf::report::serve_table(&snap).plain());
+    println!(
+        "  requests: {} accepted, {} rejected (admission control), {} failed, queue peak {}",
+        snap.accepted, snap.rejected, snap.failed, snap.queue_peak
+    );
+    println!(
+        "  latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  (mean {:.2} ms, admission to reply)",
+        snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.mean_ms
+    );
+    println!(
+        "  throughput: {:.0} img/s sustained (measured, host) vs {:.0} img/s host replica-sum ({:.0} img/s x {} replicas) — {:.2}x",
+        snap.sustained_img_s,
+        replica_sum_host,
+        single_img_s,
+        fp.replicas,
+        snap.sustained_img_s / replica_sum_host.max(1e-9)
+    );
+    println!(
+        "  modeled (FPGA @ {} MHz): {:.0} img/s fleet ({:.0} img/s x {} replicas) — the hardware this host simulation stands in for",
+        clock, fp.fleet_img_s, fp.per_replica.images_per_sec, fp.replicas
+    );
+    if mismatches > 0 || load_mismatches > 0 || failures > 0 {
+        eprintln!(
+            "error: {mismatches} sample + {load_mismatches} load mismatches, {failures} failures"
+        );
+        return 1;
     }
     0
 }

@@ -17,7 +17,7 @@ use crate::fabric::dsp48::{self, Dsp48e2, ZMux};
 use crate::fabric::ff::fdre_next;
 
 /// Pre-decoded sequential element with inline state (perf: tick() runs
-/// allocation-free and in place — EXPERIMENTS.md §Perf).
+/// allocation-free and in place — DESIGN.md §Perf item 3).
 enum FastSeq {
     Ff { d: u32, ce: u32, r: u32, q: u32, state: bool, next: bool },
     Dsp { ins: Vec<u32>, outs: Vec<u32>, dsp: Dsp48e2 },
@@ -38,7 +38,7 @@ pub struct Sim<'nl> {
     nl: &'nl Netlist,
     /// Pre-decoded combinational ops in topological order (perf: avoids
     /// per-cycle CellKind matching and NetId indirection — see
-    /// EXPERIMENTS.md §Perf items 2–3).
+    /// DESIGN.md §Perf items 2–3).
     fast: Vec<FastOp>,
     /// Pre-decoded sequential elements with inline state.
     fastseq: Vec<FastSeq>,

@@ -290,6 +290,25 @@ fn relu_site(
     })
 }
 
+/// Plan `model` under a `1/share` slice of `dev` — the primitive the
+/// serving tier's fleet planner ([`crate::serve::fleet`]) iterates to
+/// find the best replica count: each replica of a `share`-replica fleet
+/// gets an equal shard of the device and is planned exactly like a whole
+/// device (same profile → select → budget loop, same scarcity scoring).
+/// `share == 1` is identical to [`plan`].
+pub fn plan_under_fraction(
+    model: &Model,
+    dev: &Device,
+    clock_mhz: f64,
+    policy: &Policy,
+    share: u64,
+) -> Result<Plan, PlanError> {
+    if share <= 1 {
+        return plan(model, dev, clock_mhz, policy);
+    }
+    plan(model, &dev.shard(share), clock_mhz, policy)
+}
+
 /// Plan `model` onto `dev` at `clock_mhz` under `policy`.
 pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Result<Plan, PlanError> {
     let sites = engine_sites(model, dev, clock_mhz, policy)?;
@@ -475,6 +494,23 @@ mod tests {
                 assert!(d <= 1.0 && l <= 1.0);
             }
         }
+    }
+
+    #[test]
+    fn fractional_budgets_shrink_but_still_plan() {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let whole = plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap();
+        let half = plan_under_fraction(&m, &dev, 200.0, &Policy::adaptive(), 2).unwrap();
+        // A half-budget replica fits a half device, so two of them fit the
+        // whole one; throughput can only shrink per replica.
+        assert!(half.total.fits(&dev.shard(2)));
+        assert!(half.total.times(2).fits(&dev));
+        assert!(half.images_per_sec <= whole.images_per_sec * (1.0 + 1e-9));
+        // share=1 is plain plan().
+        let one = plan_under_fraction(&m, &dev, 200.0, &Policy::adaptive(), 1).unwrap();
+        assert_eq!(one.device.name, whole.device.name);
+        assert!((one.images_per_sec - whole.images_per_sec).abs() < 1e-9);
     }
 
     #[test]

@@ -13,12 +13,15 @@
 //! * [`plan_table`] — the unified engine-plan report: one row per planned
 //!   engine (conv, FC, max-pool, fused ReLU) with instances, work,
 //!   cycles, and resources.
+//! * [`fleet_table`] / [`serve_table`] — the serving tier's
+//!   modeled-fleet and measured-fleet reports (`acf serve`).
 
 use crate::cnn::model::{Layer, Model};
 use crate::fabric::device::{by_name, catalog, Device};
 use crate::ips::{self, ConvKind, ConvParams};
 use crate::planner::{baselines, plan, Plan, Policy};
 use crate::power;
+use crate::serve::{FleetPlan, FleetSnapshot};
 use crate::sta;
 use crate::synth::synthesize;
 use crate::util::table::{fnum, Table};
@@ -138,6 +141,59 @@ pub fn plan_table(plan: &Plan) -> Table {
         plan.total.dsps.to_string(),
         plan.total.bram18.to_string(),
     ]);
+    t
+}
+
+/// The fleet-plan report: how one device budget was split into replicas,
+/// with modeled per-replica and replica-sum throughput and fleet
+/// utilization against the *undivided* part.
+pub fn fleet_table(fp: &FleetPlan) -> Table {
+    let mut t = Table::new(vec![
+        "replicas",
+        "img/s per replica",
+        "img/s fleet (modeled)",
+        "LUTs fleet",
+        "DSPs fleet",
+        "LUT %",
+        "DSP %",
+        "meets SLO",
+    ])
+    .numeric();
+    let (dsp, lut) = fp.pressure();
+    t.row(vec![
+        fp.replicas.to_string(),
+        format!("{:.0}", fp.per_replica.images_per_sec),
+        format!("{:.0}", fp.fleet_img_s),
+        fp.total.luts.to_string(),
+        fp.total.dsps.to_string(),
+        format!("{:.1}", lut * 100.0),
+        format!("{:.1}", dsp * 100.0),
+        match fp.target_img_s {
+            Some(tgt) => format!("{} (target {tgt:.0})", if fp.meets_target { "yes" } else { "NO" }),
+            None => "n/a".into(),
+        },
+    ]);
+    t
+}
+
+/// The measured serving report: one row per replica (dispatch balance and
+/// utilization). Fleet-level latency/throughput live on [`FleetSnapshot`]
+/// itself; `acf serve` prints them under this table.
+pub fn serve_table(snap: &FleetSnapshot) -> Table {
+    let mut t = Table::new(vec![
+        "replica", "images", "batches", "img/batch", "busy s", "util %",
+    ])
+    .numeric();
+    for (ri, r) in snap.replicas.iter().enumerate() {
+        t.row(vec![
+            ri.to_string(),
+            r.images.to_string(),
+            r.batches.to_string(),
+            if r.batches > 0 { format!("{:.1}", r.images as f64 / r.batches as f64) } else { "-".into() },
+            format!("{:.3}", r.busy_secs),
+            format!("{:.1}", r.utilization * 100.0),
+        ]);
+    }
     t
 }
 
@@ -421,6 +477,31 @@ mod tests {
         for needle in ["MaxPool", "ReLU", "FC", "Conv_"] {
             assert!(md.contains(needle), "missing {needle} in:\n{md}");
         }
+    }
+
+    #[test]
+    fn fleet_and_serve_tables_render() {
+        let dev = by_name("zcu104").unwrap();
+        let fp = crate::serve::plan_fixed_fleet(
+            &Model::lenet_tiny(),
+            &dev,
+            200.0,
+            &Policy::adaptive(),
+            2,
+            Some(1.0),
+        )
+        .unwrap();
+        let t = fleet_table(&fp);
+        assert_eq!(t.n_rows(), 1);
+        assert_eq!(t.cell(0, 0), "2");
+        assert!(t.cell(0, 7).contains("yes"), "SLO cell: {}", t.cell(0, 7));
+        let m = crate::serve::FleetMetrics::new(2);
+        m.note_dispatched(1, 4);
+        m.note_replica_batch(1, 4, std::time::Duration::from_millis(2));
+        let t = serve_table(&m.snapshot());
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.cell(1, 1), "4");
+        assert_eq!(t.cell(0, 3), "-");
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Fleet planning: turn one device budget into a multi-replica serving
+//! fleet by running the resource-driven planner under divided budgets.
+//!
+//! This is the paper's scarcity logic lifted one level up: instead of
+//! asking "which engine fits this layer under the device budget?", the
+//! fleet planner asks "how many whole copies of the planned network fit
+//! this device, and which copy count maximizes fleet throughput (or is
+//! the largest one still meeting a target SLO)?". Each candidate count
+//! `r` plans one replica against an equal `1/r` device shard
+//! ([`crate::fabric::device::Device::shard`]); `r` such replicas are
+//! guaranteed to fit the whole part, and modeled fleet throughput is the
+//! replica-sum `r × images_per_sec`.
+
+use crate::cnn::model::{Model, Weights};
+use crate::coordinator::Deployment;
+use crate::fabric::device::Device;
+use crate::planner::{plan_under_fraction, Plan, PlanError, Policy};
+use crate::synth::Utilization;
+use std::sync::Arc;
+
+/// Default ceiling on the replica search (CLI `--max-replicas` raises it).
+pub const DEFAULT_MAX_REPLICAS: usize = 8;
+
+/// A planned serving fleet: `replicas` identical copies of `per_replica`,
+/// each owning an equal shard of `device`.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub device: Device,
+    pub clock_mhz: f64,
+    pub replicas: usize,
+    /// The plan every replica deploys (made against `device.shard(replicas)`).
+    pub per_replica: Plan,
+    /// Whole-fleet utilization (`replicas ×` the per-replica total).
+    pub total: Utilization,
+    /// Modeled replica-sum throughput: `replicas × per_replica.images_per_sec`.
+    pub fleet_img_s: f64,
+    /// The SLO the search was asked to meet, if any.
+    pub target_img_s: Option<f64>,
+    /// Whether `fleet_img_s` meets `target_img_s` (true when no target).
+    pub meets_target: bool,
+}
+
+impl FleetPlan {
+    /// Fleet pressure on the undivided device: (DSP fraction, LUT fraction).
+    pub fn pressure(&self) -> (f64, f64) {
+        (self.device.dsp_util(self.total.dsps), self.device.lut_util(self.total.luts))
+    }
+
+    /// Deploy the fleet: `replicas` persistent pipelines sharing one
+    /// model and one weight set.
+    pub fn deploy(&self, model: Model, weights: Weights) -> Vec<Arc<Deployment>> {
+        let model = Arc::new(model);
+        let weights = Arc::new(weights);
+        (0..self.replicas)
+            .map(|_| {
+                Arc::new(Deployment::with_plan(
+                    Arc::clone(&model),
+                    Arc::clone(&weights),
+                    self.per_replica.clone(),
+                ))
+            })
+            .collect()
+    }
+}
+
+/// Plan a fleet of exactly `replicas` copies (the CLI's `--replicas`
+/// override). Errors if one replica cannot be planned under `1/replicas`
+/// of the device.
+pub fn plan_fixed_fleet(
+    model: &Model,
+    dev: &Device,
+    clock_mhz: f64,
+    policy: &Policy,
+    replicas: usize,
+    target_img_s: Option<f64>,
+) -> Result<FleetPlan, PlanError> {
+    let r = replicas.max(1);
+    let per_replica = plan_under_fraction(model, dev, clock_mhz, policy, r as u64)?;
+    let fleet_img_s = r as f64 * per_replica.images_per_sec;
+    Ok(FleetPlan {
+        device: dev.clone(),
+        clock_mhz,
+        replicas: r,
+        total: per_replica.total.times(r as u64),
+        fleet_img_s,
+        target_img_s,
+        meets_target: target_img_s.map(|t| fleet_img_s >= t).unwrap_or(true),
+        per_replica,
+    })
+}
+
+/// Search replica counts `1..=max_replicas` for the best fleet.
+///
+/// With a `target_img_s` SLO: the *largest* replica count whose modeled
+/// replica-sum throughput still meets the target (more replicas = more
+/// concurrent request capacity at the same SLO); if no count meets it,
+/// the highest-throughput fleet is returned with `meets_target == false`
+/// so the caller can degrade explicitly instead of silently. Without a
+/// target: the count maximizing modeled fleet throughput (ties go to more
+/// replicas). The scan stops at the first infeasible count — shards only
+/// shrink as `r` grows, so feasibility is monotone.
+pub fn plan_fleet(
+    model: &Model,
+    dev: &Device,
+    clock_mhz: f64,
+    policy: &Policy,
+    target_img_s: Option<f64>,
+    max_replicas: usize,
+) -> Result<FleetPlan, PlanError> {
+    let mut candidates: Vec<FleetPlan> = Vec::new();
+    let mut first_err: Option<PlanError> = None;
+    for r in 1..=max_replicas.max(1) {
+        match plan_fixed_fleet(model, dev, clock_mhz, policy, r, target_img_s) {
+            Ok(fp) => candidates.push(fp),
+            Err(e) => {
+                first_err = Some(e);
+                break;
+            }
+        }
+    }
+    if candidates.is_empty() {
+        return Err(first_err.expect("loop ran at least once"));
+    }
+    let fastest = candidates
+        .iter()
+        .max_by(|a, b| {
+            (a.fleet_img_s, a.replicas)
+                .partial_cmp(&(b.fleet_img_s, b.replicas))
+                .expect("throughput is finite")
+        })
+        .expect("non-empty");
+    let pick = match target_img_s {
+        // SLO: the largest count still meeting it; none meets ⇒ the
+        // fastest fleet, flagged `meets_target == false`.
+        Some(_) => candidates.iter().rev().find(|fp| fp.meets_target).unwrap_or(fastest),
+        // No SLO: maximize modeled fleet throughput (ties → more
+        // replicas, i.e. more concurrent request capacity).
+        None => fastest,
+    };
+    Ok(pick.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::device::by_name;
+
+    #[test]
+    fn lenet_tiny_on_zcu104_replicates() {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let fp =
+            plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, DEFAULT_MAX_REPLICAS).unwrap();
+        // The acceptance bar: the default device carries at least two
+        // replicas, and the fleet out-models a single whole-device plan.
+        assert!(fp.replicas >= 2, "only {} replica(s)", fp.replicas);
+        assert!(fp.total.fits(&dev), "fleet must fit the undivided device");
+        let single = crate::planner::plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap();
+        assert!(
+            fp.fleet_img_s >= single.images_per_sec,
+            "fleet {} < single {}",
+            fp.fleet_img_s,
+            single.images_per_sec
+        );
+        assert!(fp.meets_target);
+        let (d, l) = fp.pressure();
+        assert!(d <= 1.0 && l <= 1.0);
+    }
+
+    #[test]
+    fn slo_picks_largest_meeting_count() {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let free = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, 4).unwrap();
+        // An SLO below one replica's throughput is met by every count, so
+        // the search must take the largest feasible one.
+        let modest = free.per_replica.images_per_sec * 0.5;
+        let fp = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), Some(modest), 4).unwrap();
+        assert!(fp.meets_target);
+        assert_eq!(fp.replicas, free.replicas.max(fp.replicas));
+        // An absurd SLO is unmeetable: best effort, flagged.
+        let fp = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), Some(1e15), 4).unwrap();
+        assert!(!fp.meets_target);
+        assert!(fp.fleet_img_s > 0.0);
+    }
+
+    #[test]
+    fn no_slo_search_maximizes_fleet_throughput() {
+        // Without an SLO the pick must dominate every feasible fixed
+        // count — the search is argmax, not largest-feasible.
+        let m = Model::lenet_tiny();
+        for dev_name in ["zcu104", "zu2cg", "edge-nodsp"] {
+            let dev = by_name(dev_name).unwrap();
+            let Ok(best) = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, 6) else {
+                continue;
+            };
+            for r in 1..=6usize {
+                if let Ok(fp) = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), r, None) {
+                    assert!(
+                        best.fleet_img_s >= fp.fleet_img_s - 1e-6,
+                        "{dev_name}: picked {} img/s @ r={}, but r={r} models {} img/s",
+                        best.fleet_img_s,
+                        best.replicas,
+                        fp.fleet_img_s
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_device_caps_replicas() {
+        let m = Model::lenet_tiny();
+        let dev = by_name("edge-nodsp").unwrap();
+        // The starved part may fit 1..n replicas, but never an infeasible
+        // shard; and the chosen fleet always fits the undivided device.
+        if let Ok(fp) = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, 16) {
+            assert!(fp.replicas >= 1);
+            assert!(fp.total.fits(&dev));
+        }
+    }
+
+    #[test]
+    fn deploy_shares_weights_across_replicas() {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+        let reps = fp.deploy(m, Weights::random(&Model::lenet_tiny(), 42));
+        assert_eq!(reps.len(), 2);
+        assert!(Arc::ptr_eq(&reps[0].weights, &reps[1].weights));
+        assert!(Arc::ptr_eq(&reps[0].model, &reps[1].model));
+        // Both pipelines are live and bit-identical.
+        let img = vec![0i64; 256];
+        assert_eq!(reps[0].infer_one(&img).unwrap(), reps[1].infer_one(&img).unwrap());
+    }
+}

@@ -1,0 +1,266 @@
+//! Fleet-level serving metrics: request counters, queue pressure,
+//! end-to-end latency quantiles, and per-replica utilization.
+//!
+//! Latency is measured from *admission* (the request entering the bounded
+//! submission queue) to *completion* (logits handed back), so queue wait
+//! and micro-batch formation are inside the number — the figure an SLO
+//! actually constrains. Counters are atomics; the latency reservoir is a
+//! mutex-protected vector sampled only at snapshot time, which is fine at
+//! synthetic-load scale and keeps the hot path to one lock per completed
+//! request.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Live counters for one replica of the fleet.
+#[derive(Debug, Default)]
+pub struct ReplicaMetrics {
+    /// Images dispatched to (but not yet completed by) this replica —
+    /// the least-loaded dispatch key.
+    in_flight: AtomicU64,
+    images: AtomicU64,
+    batches: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+/// Live fleet metrics shared by the scheduler, the runners, and callers.
+#[derive(Debug)]
+pub struct FleetMetrics {
+    started: Instant,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    /// Total requests dequeued by the dispatcher. Queue depth is derived
+    /// as `accepted - dispatched`: two monotonic counters cannot drift
+    /// the way a racy increment/decrement gauge can (the dispatcher may
+    /// observe a request before its submitter finishes accounting).
+    dispatched: AtomicU64,
+    queue_peak: AtomicU64,
+    /// Completion-time offsets from `started` (nanos) bounding the
+    /// sustained-throughput window.
+    first_done_nanos: AtomicU64,
+    last_done_nanos: AtomicU64,
+    latencies_nanos: Mutex<Vec<u64>>,
+    replicas: Vec<ReplicaMetrics>,
+}
+
+impl FleetMetrics {
+    pub fn new(n_replicas: usize) -> FleetMetrics {
+        FleetMetrics {
+            started: Instant::now(),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+            queue_peak: AtomicU64::new(0),
+            first_done_nanos: AtomicU64::new(u64::MAX),
+            last_done_nanos: AtomicU64::new(0),
+            latencies_nanos: Mutex::new(Vec::new()),
+            replicas: (0..n_replicas).map(|_| ReplicaMetrics::default()).collect(),
+        }
+    }
+
+    /// A request entered the submission queue.
+    pub fn note_accepted(&self) {
+        let accepted = self.accepted.fetch_add(1, Ordering::Relaxed) + 1;
+        let depth = accepted.saturating_sub(self.dispatched.load(Ordering::Relaxed));
+        self.queue_peak.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// A request bounced off the full queue (`ServeError::Overloaded`).
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` requests left the queue as one micro-batch bound for `replica`.
+    pub fn note_dispatched(&self, replica: usize, n: u64) {
+        self.dispatched.fetch_add(n, Ordering::Relaxed);
+        if let Some(r) = self.replicas.get(replica) {
+            r.in_flight.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// One request finished successfully after `latency` (admission →
+    /// reply).
+    pub fn note_completed(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let now = self.started.elapsed().as_nanos() as u64;
+        self.first_done_nanos.fetch_min(now, Ordering::Relaxed);
+        self.last_done_nanos.fetch_max(now, Ordering::Relaxed);
+        self.latencies_nanos.lock().unwrap().push(latency.as_nanos() as u64);
+    }
+
+    /// One request failed inside a replica.
+    pub fn note_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `replica` retired a micro-batch of `n` images in `busy` wall time.
+    pub fn note_replica_batch(&self, replica: usize, n: u64, busy: Duration) {
+        if let Some(r) = self.replicas.get(replica) {
+            r.images.fetch_add(n, Ordering::Relaxed);
+            r.batches.fetch_add(1, Ordering::Relaxed);
+            r.busy_nanos.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+            saturating_dec(&r.in_flight, n);
+        }
+    }
+
+    /// Current dispatched-not-done load per replica (for least-loaded
+    /// dispatch).
+    pub fn load_of(&self, replica: usize) -> u64 {
+        self.replicas.get(replica).map(|r| r.in_flight.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Point-in-time aggregate view.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let mut lat: Vec<u64> = self.latencies_nanos.lock().unwrap().clone();
+        lat.sort_unstable();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let first = self.first_done_nanos.load(Ordering::Relaxed);
+        let last = self.last_done_nanos.load(Ordering::Relaxed);
+        // Sustained window: first completion → last completion. One
+        // completion (or none) has no window; fall back to wall time.
+        let wall_secs = self.started.elapsed().as_secs_f64();
+        let window_secs = if last > first && first != u64::MAX {
+            (last - first) as f64 / 1e9
+        } else {
+            wall_secs
+        };
+        let mean_ms = if lat.is_empty() {
+            0.0
+        } else {
+            lat.iter().map(|&n| n as f64).sum::<f64>() / lat.len() as f64 / 1e6
+        };
+        let accepted = self.accepted.load(Ordering::Relaxed);
+        FleetSnapshot {
+            accepted,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            queue_depth: accepted.saturating_sub(self.dispatched.load(Ordering::Relaxed)),
+            queue_peak: self.queue_peak.load(Ordering::Relaxed),
+            wall_secs,
+            sustained_img_s: if window_secs > 0.0 { completed as f64 / window_secs } else { 0.0 },
+            p50_ms: percentile_ms(&lat, 0.50),
+            p95_ms: percentile_ms(&lat, 0.95),
+            p99_ms: percentile_ms(&lat, 0.99),
+            mean_ms,
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| {
+                    let busy_secs = r.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+                    ReplicaSnapshot {
+                        images: r.images.load(Ordering::Relaxed),
+                        batches: r.batches.load(Ordering::Relaxed),
+                        busy_secs,
+                        utilization: if wall_secs > 0.0 { busy_secs / wall_secs } else { 0.0 },
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Gauge decrement that floors at zero (a metrics type should degrade to
+/// slightly-off numbers, never wrap to 2^64 on a reordered update).
+fn saturating_dec(cell: &AtomicU64, n: u64) {
+    let _ = cell.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(n)));
+}
+
+/// Nearest-rank percentile over an already-sorted nanosecond reservoir,
+/// reported in milliseconds.
+fn percentile_ms(sorted_nanos: &[u64], q: f64) -> f64 {
+    if sorted_nanos.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_nanos.len() - 1) as f64 * q).round() as usize;
+    sorted_nanos[idx.min(sorted_nanos.len() - 1)] as f64 / 1e6
+}
+
+/// Frozen fleet statistics (what `acf serve` prints and tests assert on).
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub queue_depth: u64,
+    pub queue_peak: u64,
+    pub wall_secs: f64,
+    /// Completed images per second over the first→last completion window.
+    pub sustained_img_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub replicas: Vec<ReplicaSnapshot>,
+}
+
+/// Frozen per-replica statistics.
+#[derive(Debug, Clone)]
+pub struct ReplicaSnapshot {
+    pub images: u64,
+    pub batches: u64,
+    pub busy_secs: f64,
+    /// Fraction of fleet wall time this replica spent inferring.
+    pub utilization: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_quantiles() {
+        let m = FleetMetrics::new(2);
+        for _ in 0..10 {
+            m.note_accepted();
+        }
+        m.note_rejected();
+        m.note_dispatched(0, 6);
+        m.note_dispatched(1, 4);
+        assert_eq!(m.load_of(0), 6);
+        assert_eq!(m.load_of(1), 4);
+        for i in 0..10u64 {
+            m.note_completed(Duration::from_millis(i + 1));
+        }
+        m.note_replica_batch(0, 6, Duration::from_millis(30));
+        m.note_replica_batch(1, 4, Duration::from_millis(20));
+        let s = m.snapshot();
+        assert_eq!(s.accepted, 10);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.queue_peak, 10);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms);
+        assert!((s.p99_ms - 10.0).abs() < 1e-6, "p99 {}", s.p99_ms);
+        assert!(s.mean_ms > 5.0 && s.mean_ms < 6.0);
+        assert_eq!(s.replicas[0].images, 6);
+        assert_eq!(s.replicas[1].batches, 1);
+        assert_eq!(m.load_of(0), 0);
+        assert!(s.replicas[0].busy_secs > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_quiet() {
+        let m = FleetMetrics::new(1);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99_ms, 0.0);
+        assert_eq!(s.sustained_img_s, 0.0);
+        assert_eq!(s.replicas.len(), 1);
+        assert_eq!(s.replicas[0].utilization, 0.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).map(|i| i * 1_000_000).collect();
+        assert!((percentile_ms(&v, 0.50) - 50.0).abs() < 1.01);
+        assert!((percentile_ms(&v, 0.99) - 99.0).abs() < 1.01);
+        assert_eq!(percentile_ms(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! The traffic-scale serving tier (`acf serve`).
+//!
+//! Everything below the planner treats one device budget as one network;
+//! this module turns that budget into a *fleet*:
+//!
+//! * [`fleet`] — the fleet planner: runs [`crate::planner::plan`] under
+//!   divided budgets ([`crate::fabric::device::Device::shard`]) to find
+//!   the replica count that maximizes modeled fleet throughput or is the
+//!   largest count still meeting a target SLO.
+//! * [`scheduler`] — the request scheduler: a bounded submission queue
+//!   with explicit admission control ([`ServeError::Overloaded`] instead
+//!   of unbounded queueing), greedy micro-batching, and least-loaded
+//!   replica dispatch onto the coordinator's persistent pipelines.
+//! * [`metrics`] — fleet statistics: p50/p95/p99 end-to-end latency,
+//!   sustained throughput, queue pressure, per-replica utilization.
+//! * [`open_loop`] — a deterministic open-loop synthetic load generator
+//!   (Poisson arrivals via [`crate::util::rng`]) driving the above; the
+//!   `acf serve` CLI prints its modeled-vs-measured comparison.
+
+pub mod fleet;
+pub mod metrics;
+pub mod scheduler;
+
+pub use fleet::{plan_fixed_fleet, plan_fleet, FleetPlan, DEFAULT_MAX_REPLICAS};
+pub use metrics::{FleetMetrics, FleetSnapshot, ReplicaSnapshot};
+pub use scheduler::{Pending, Server};
+
+use crate::coordinator::DeployError;
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// Serving-path errors (the request-level counterpart of
+/// [`crate::coordinator::DeployError`]).
+#[derive(Debug)]
+pub enum ServeError {
+    /// The bounded submission queue is full: the fleet is saturated and
+    /// this request was shed at admission.
+    Overloaded { queue_depth: usize },
+    /// The image failed ingress validation.
+    BadRequest(DeployError),
+    /// The server is draining; no new requests are admitted.
+    ShuttingDown,
+    /// A replica failed while the request was in flight.
+    ReplicaFailed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { queue_depth } => {
+                write!(f, "overloaded: submission queue (depth {queue_depth}) is full")
+            }
+            ServeError::BadRequest(e) => write!(f, "bad request: {e}"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::ReplicaFailed(msg) => write!(f, "replica failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::BadRequest(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bounded submission-queue depth; a full queue rejects with
+    /// [`ServeError::Overloaded`].
+    pub queue_depth: usize,
+    /// Largest micro-batch the dispatcher forms per replica handoff.
+    pub max_batch: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { queue_depth: 64, max_batch: 8 }
+    }
+}
+
+/// Outcome of one open-loop request: which corpus image was sent and what
+/// came back (rejections appear as `Err(Overloaded)`).
+#[derive(Debug)]
+pub struct LoadOutcome {
+    pub image_idx: usize,
+    pub result: Result<Vec<i64>, ServeError>,
+}
+
+/// Drive `server` with an open-loop synthetic workload: `requests`
+/// arrivals at `offered_img_s` (Poisson — exponential inter-arrival gaps
+/// drawn from `seed`), each a uniformly chosen image from `corpus`. Open
+/// loop means arrivals never wait for responses: if the fleet falls
+/// behind, the queue fills and admission control sheds load, exactly like
+/// production ingress. Responses are collected after the last arrival.
+pub fn open_loop(
+    server: &Server,
+    corpus: &[Vec<i64>],
+    requests: usize,
+    offered_img_s: f64,
+    seed: u64,
+) -> Vec<LoadOutcome> {
+    assert!(!corpus.is_empty(), "load generator needs at least one image");
+    assert!(offered_img_s > 0.0, "offered rate must be positive");
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    let mut next_arrival = 0.0f64; // seconds since start
+    let mut submitted: Vec<(usize, Result<Pending, ServeError>)> = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        // Exponential inter-arrival with mean 1/rate; (1 - u) avoids ln(0).
+        let gap = -(1.0 - rng.unit_f64()).ln() / offered_img_s;
+        next_arrival += gap;
+        let due = Duration::from_secs_f64(next_arrival);
+        let elapsed = start.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        let idx = rng.index(corpus.len());
+        submitted.push((idx, server.submit(corpus[idx].clone())));
+    }
+    submitted
+        .into_iter()
+        .map(|(image_idx, sub)| LoadOutcome {
+            image_idx,
+            result: match sub {
+                Ok(p) => p.wait(),
+                Err(e) => Err(e),
+            },
+        })
+        .collect()
+}

@@ -1,0 +1,220 @@
+//! The request scheduler: a bounded submission queue, a micro-batching
+//! dispatcher, least-loaded replica selection, and explicit admission
+//! control.
+//!
+//! Topology (all threads long-lived, torn down on [`Server::shutdown`]):
+//!
+//! ```text
+//! submit() --try_send--> [bounded queue] --> dispatcher --+--> runner 0 -> replica 0 pipeline
+//!    |  full => ServeError::Overloaded       (micro-batch,|--> runner 1 -> replica 1 pipeline
+//!    +--> Pending (per-request reply)         least-loaded)+--> ...
+//! ```
+//!
+//! Backpressure story: the *only* unbounded buffers are per-request reply
+//! channels (capacity one message each). The submission queue is bounded
+//! and non-blocking at admission — a full queue is an `Overloaded` error
+//! the caller sees immediately, never invisible queueing. Replica work
+//! queues are bounded too; when every replica is busy the dispatcher
+//! blocks, the submission queue fills, and overload surfaces at the edge
+//! — the admission-control design the real-time serving literature asks
+//! for.
+
+use super::metrics::{FleetMetrics, FleetSnapshot};
+use super::{ServeConfig, ServeError};
+use crate::coordinator::Deployment;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// One admitted request traveling from the queue to a replica runner.
+struct Request {
+    image: Vec<i64>,
+    admitted: Instant,
+    reply: mpsc::Sender<Result<Vec<i64>, ServeError>>,
+}
+
+/// A handle to one in-flight request; resolves to its logits.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Vec<i64>, ServeError>>,
+}
+
+impl Pending {
+    /// Block until the request completes.
+    pub fn wait(self) -> Result<Vec<i64>, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+    }
+}
+
+/// A running serving fleet: replicas with persistent pipelines, a
+/// dispatcher, and per-replica runner threads.
+pub struct Server {
+    /// `None` once shutdown begins — the single source of truth for
+    /// "still admitting" (same convention as the coordinator pipeline).
+    ingress: Mutex<Option<mpsc::SyncSender<Request>>>,
+    metrics: Arc<FleetMetrics>,
+    replicas: Vec<Arc<Deployment>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    queue_depth: usize,
+}
+
+impl Server {
+    /// Start serving on `replicas` (deployed by
+    /// [`super::fleet::FleetPlan::deploy`]).
+    pub fn start(replicas: Vec<Arc<Deployment>>, cfg: &ServeConfig) -> Server {
+        assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        let queue_depth = cfg.queue_depth.max(1);
+        let max_batch = cfg.max_batch.max(1);
+        let metrics = Arc::new(FleetMetrics::new(replicas.len()));
+        let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
+        let mut threads = Vec::with_capacity(replicas.len() + 1);
+
+        // Replica runners: one thread per replica, fed micro-batches.
+        let mut batch_txs = Vec::with_capacity(replicas.len());
+        for (ri, dep) in replicas.iter().enumerate() {
+            // Depth 2: one batch inferring, one staged (double buffering,
+            // same rationale as the pipeline's CHANNEL_DEPTH).
+            let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(2);
+            batch_txs.push(btx);
+            let dep = Arc::clone(dep);
+            let metrics = Arc::clone(&metrics);
+            threads.push(std::thread::spawn(move || run_replica(ri, &dep, &brx, &metrics)));
+        }
+
+        // Dispatcher: drain the queue, form micro-batches, pick the
+        // least-loaded replica.
+        {
+            let metrics = Arc::clone(&metrics);
+            threads.push(std::thread::spawn(move || {
+                while let Ok(first) = rx.recv() {
+                    let mut batch = vec![first];
+                    while batch.len() < max_batch {
+                        match rx.try_recv() {
+                            Ok(r) => batch.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                    let target = (0..batch_txs.len())
+                        .min_by_key(|&ri| metrics.load_of(ri))
+                        .expect("at least one replica");
+                    metrics.note_dispatched(target, batch.len() as u64);
+                    if batch_txs[target].send(batch).is_err() {
+                        return; // runner died; Overloaded backpressure takes over
+                    }
+                }
+                // Queue disconnected and drained; batch_txs drop here and
+                // the runner feeds close.
+            }));
+        }
+
+        Server { ingress: Mutex::new(Some(tx)), metrics, replicas, threads, queue_depth }
+    }
+
+    /// Admission-controlled submission: validates the image, then tries
+    /// to enqueue without blocking. A full queue rejects with
+    /// [`ServeError::Overloaded`] — the caller decides whether to retry,
+    /// shed, or propagate.
+    pub fn submit(&self, image: Vec<i64>) -> Result<Pending, ServeError> {
+        self.admit(image, |tx, req| match tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.note_rejected();
+                Err(ServeError::Overloaded { queue_depth: self.queue_depth })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(ServeError::ShuttingDown),
+        })
+    }
+
+    /// Blocking submission for closed-loop callers (benches, tests):
+    /// waits for queue space instead of rejecting.
+    pub fn submit_wait(&self, image: Vec<i64>) -> Result<Pending, ServeError> {
+        self.admit(image, |tx, req| tx.send(req).map_err(|_| ServeError::ShuttingDown))
+    }
+
+    /// Shared admission path: validate, build the request, enqueue via
+    /// `send` (the try_send/send strategy), account on acceptance.
+    fn admit(
+        &self,
+        image: Vec<i64>,
+        send: impl FnOnce(&mpsc::SyncSender<Request>, Request) -> Result<(), ServeError>,
+    ) -> Result<Pending, ServeError> {
+        let tx = self.sender()?;
+        self.replicas[0].validate_image(&image).map_err(ServeError::BadRequest)?;
+        let (rtx, rrx) = mpsc::channel();
+        send(&tx, Request { image, admitted: Instant::now(), reply: rtx })?;
+        self.metrics.note_accepted();
+        Ok(Pending { rx: rrx })
+    }
+
+    fn sender(&self) -> Result<mpsc::SyncSender<Request>, ServeError> {
+        self.ingress.lock().unwrap().clone().ok_or(ServeError::ShuttingDown)
+    }
+
+    /// The shared live metrics (snapshot any time).
+    pub fn metrics(&self) -> &FleetMetrics {
+        &self.metrics
+    }
+
+    /// The replica deployments (for modeled-vs-measured reports).
+    pub fn replicas(&self) -> &[Arc<Deployment>] {
+        &self.replicas
+    }
+
+    /// Stop admitting, drain everything in flight, join all threads, and
+    /// return the final fleet statistics.
+    pub fn shutdown(mut self) -> FleetSnapshot {
+        self.stop();
+        self.metrics.snapshot()
+    }
+
+    fn stop(&mut self) {
+        // Dropping the ingress sender lets the dispatcher drain the queue
+        // and then unwind the runners.
+        *self.ingress.lock().unwrap() = None;
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One replica runner: pull a micro-batch, run it through the replica's
+/// persistent pipeline, reply per request, account per replica.
+fn run_replica(
+    ri: usize,
+    dep: &Deployment,
+    brx: &mpsc::Receiver<Vec<Request>>,
+    metrics: &FleetMetrics,
+) {
+    while let Ok(batch) = brx.recv() {
+        let n = batch.len() as u64;
+        let mut images = Vec::with_capacity(batch.len());
+        let mut meta = Vec::with_capacity(batch.len());
+        for req in batch {
+            images.push(req.image);
+            meta.push((req.admitted, req.reply));
+        }
+        let t0 = Instant::now();
+        match dep.infer_batch(&images) {
+            Ok(outs) => {
+                for ((admitted, reply), logits) in meta.into_iter().zip(outs) {
+                    metrics.note_completed(admitted.elapsed());
+                    let _ = reply.send(Ok(logits));
+                }
+            }
+            Err(e) => {
+                // Inputs were validated at admission, so this is a replica
+                // fault; fail the whole micro-batch loudly.
+                let msg = e.to_string();
+                for (_, reply) in meta {
+                    metrics.note_failed();
+                    let _ = reply.send(Err(ServeError::ReplicaFailed(msg.clone())));
+                }
+            }
+        }
+        metrics.note_replica_batch(ri, n, t0.elapsed());
+    }
+}

@@ -121,6 +121,24 @@ impl Args {
         self.typed(name, |s| s.parse::<f64>().map_err(|e| e.to_string()))
     }
 
+    /// Typed accessor where the sentinel strings `auto` / `none` mean
+    /// "unset" — for options whose default is a search, not a number
+    /// (e.g. `acf serve --replicas auto --target-img-s none`).
+    pub fn get_u64_auto(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None | Some("auto") | Some("none") => Ok(None),
+            Some(_) => self.get_u64(name),
+        }
+    }
+
+    /// Float twin of [`Args::get_u64_auto`].
+    pub fn get_f64_auto(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None | Some("auto") | Some("none") => Ok(None),
+            Some(_) => self.get_f64(name),
+        }
+    }
+
     fn typed<T>(
         &self,
         name: &str,
@@ -202,6 +220,22 @@ mod tests {
             Args::parse(&sv(&["--device"]), &specs()),
             Err(CliError::MissingValue(_))
         ));
+    }
+
+    #[test]
+    fn auto_sentinels_mean_unset() {
+        let specs = vec![
+            OptSpec { name: "replicas", value: true, help: "auto|N", default: Some("auto") },
+            OptSpec { name: "rate", value: true, help: "none|R", default: Some("none") },
+        ];
+        let a = Args::parse(&sv(&[]), &specs).unwrap();
+        assert_eq!(a.get_u64_auto("replicas").unwrap(), None);
+        assert_eq!(a.get_f64_auto("rate").unwrap(), None);
+        let a = Args::parse(&sv(&["--replicas", "3", "--rate", "250.5"]), &specs).unwrap();
+        assert_eq!(a.get_u64_auto("replicas").unwrap(), Some(3));
+        assert_eq!(a.get_f64_auto("rate").unwrap(), Some(250.5));
+        let a = Args::parse(&sv(&["--replicas", "lots"]), &specs).unwrap();
+        assert!(a.get_u64_auto("replicas").is_err());
     }
 
     #[test]

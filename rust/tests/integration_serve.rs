@@ -1,0 +1,204 @@
+//! Serving-tier integration tests: concurrent callers on one persistent
+//! pipeline, fleet planning invariants, end-to-end bit-exactness of the
+//! scheduled path, admission control under saturation, and drain-on-
+//! shutdown semantics.
+
+use acf::cnn::data::Dataset;
+use acf::cnn::model::{Model, Weights};
+use acf::coordinator::Deployment;
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::serve::{
+    open_loop, plan_fixed_fleet, plan_fleet, ServeConfig, ServeError, Server,
+    DEFAULT_MAX_REPLICAS,
+};
+use std::sync::Arc;
+
+fn corpus(n: usize, seed: u64) -> Vec<Vec<i64>> {
+    Dataset::generate(n, seed, 16, 16).images.iter().map(|i| i.pix.clone()).collect()
+}
+
+fn deploy_one() -> Deployment {
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let dev = by_name("zcu104").unwrap();
+    Deployment::new(m, w, &dev, 200.0, &Policy::adaptive()).unwrap()
+}
+
+fn fleet(replicas: usize, cfg: &ServeConfig) -> (Server, Model, Weights) {
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let dev = by_name("zcu104").unwrap();
+    let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), replicas, None).unwrap();
+    let server = Server::start(fp.deploy(m.clone(), w.clone()), cfg);
+    (server, m, w)
+}
+
+#[test]
+fn concurrent_infer_batch_is_ordered_and_exact() {
+    // Many threads hammer ONE deployment's persistent pipeline; each must
+    // get its own batch back in order, bit-exact, and the shared metrics
+    // must account for every image exactly once.
+    let dep = Arc::new(deploy_one());
+    let images = corpus(10, 3);
+    let want: Vec<Vec<i64>> = images
+        .iter()
+        .map(|img| acf::cnn::infer::infer(&dep.model, &dep.weights, img))
+        .collect();
+    let threads = 8;
+    let rounds = 3;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let dep = Arc::clone(&dep);
+        let images = images.clone();
+        let want = want.clone();
+        handles.push(std::thread::spawn(move || {
+            for r in 0..rounds {
+                let mut batch = images.clone();
+                let mut expect = want.clone();
+                batch.rotate_left((t + r) % batch.len());
+                expect.rotate_left((t + r) % expect.len());
+                assert_eq!(dep.infer_batch(&batch).unwrap(), expect);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = dep.metrics.snapshot();
+    assert_eq!(snap.images, (threads * rounds * images.len()) as u64);
+    assert_eq!(snap.batches, (threads * rounds) as u64);
+    // Every layer worker did real work.
+    assert!(snap.layer_secs.iter().all(|&s| s > 0.0));
+}
+
+#[test]
+fn fleet_planner_replicates_the_default_device() {
+    let m = Model::lenet_tiny();
+    let dev = by_name("zcu104").unwrap();
+    let fp =
+        plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, DEFAULT_MAX_REPLICAS).unwrap();
+    assert!(fp.replicas >= 2, "zcu104 must carry at least two lenet-tiny replicas");
+    assert!(fp.total.fits(&dev));
+    assert!(
+        (fp.fleet_img_s - fp.replicas as f64 * fp.per_replica.images_per_sec).abs() < 1e-6,
+        "fleet throughput is the replica sum"
+    );
+}
+
+#[test]
+fn served_logits_bit_identical_to_infer_batch() {
+    let (server, model, weights) = fleet(2, &ServeConfig::default());
+    let images = corpus(24, 9);
+    let pendings: Vec<_> =
+        images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
+    let served: Vec<Vec<i64>> =
+        pendings.into_iter().map(|p| p.wait().unwrap()).collect();
+    // Same images through the one-shot path on a replica, and through the
+    // plain behavioral reference: all three must agree bit for bit.
+    let one_shot = server.replicas()[0].infer_batch(&images).unwrap();
+    for ((img, s), b) in images.iter().zip(&served).zip(&one_shot) {
+        let reference = acf::cnn::infer::infer(&model, &weights, img);
+        assert_eq!(s, &reference);
+        assert_eq!(b, &reference);
+    }
+    let snap = server.shutdown();
+    // Only the scheduled path counts in fleet metrics; the one-shot
+    // comparison batch went straight to the replica's own pipeline.
+    assert_eq!(snap.completed, 24);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.p50_ms <= snap.p95_ms && snap.p95_ms <= snap.p99_ms);
+}
+
+#[test]
+fn saturated_queue_sheds_with_overloaded() {
+    // A deliberately tiny queue and single replica: a tight submission
+    // loop must hit admission control, and every *accepted* request must
+    // still complete correctly.
+    let cfg = ServeConfig { queue_depth: 2, max_batch: 1 };
+    let (server, model, weights) = fleet(1, &cfg);
+    let images = corpus(4, 5);
+    let mut accepted = Vec::new();
+    let mut overloaded = 0usize;
+    let mut i = 0usize;
+    while overloaded == 0 && i < 10_000 {
+        match server.submit(images[i % images.len()].clone()) {
+            Ok(p) => accepted.push((i % images.len(), p)),
+            Err(ServeError::Overloaded { queue_depth }) => {
+                assert_eq!(queue_depth, 2);
+                overloaded += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        i += 1;
+    }
+    assert!(overloaded > 0, "tight loop never tripped admission control");
+    for (idx, p) in accepted {
+        let logits = p.wait().unwrap();
+        assert_eq!(logits, acf::cnn::infer::infer(&model, &weights, &images[idx]));
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.rejected as usize, overloaded);
+    assert_eq!(snap.completed, snap.accepted);
+}
+
+#[test]
+fn bad_requests_rejected_at_admission() {
+    let (server, _, _) = fleet(1, &ServeConfig::default());
+    assert!(matches!(
+        server.submit(vec![0i64; 5]),
+        Err(ServeError::BadRequest(acf::coordinator::DeployError::BadImage { .. }))
+    ));
+    let mut img = vec![0i64; 256];
+    img[0] = -128;
+    assert!(matches!(
+        server.submit(img),
+        Err(ServeError::BadRequest(acf::coordinator::DeployError::AsymmetricInput(-128)))
+    ));
+    let snap = server.shutdown();
+    assert_eq!(snap.accepted, 0);
+}
+
+#[test]
+fn shutdown_drains_accepted_requests() {
+    let (server, model, weights) = fleet(2, &ServeConfig::default());
+    let images = corpus(12, 13);
+    let pendings: Vec<_> =
+        images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
+    // Shut down immediately: everything admitted must still be answered.
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, 12);
+    for (img, p) in images.iter().zip(pendings) {
+        assert_eq!(p.wait().unwrap(), acf::cnn::infer::infer(&model, &weights, img));
+    }
+    assert!(snap.replicas.iter().map(|r| r.images).sum::<u64>() == 12);
+}
+
+#[test]
+fn open_loop_outcomes_are_complete_and_exact() {
+    let (server, model, weights) = fleet(2, &ServeConfig::default());
+    let images = corpus(16, 21);
+    let outcomes = open_loop(&server, &images, 120, 5_000.0, 77);
+    assert_eq!(outcomes.len(), 120);
+    let mut served = 0usize;
+    for o in &outcomes {
+        match &o.result {
+            Ok(logits) => {
+                served += 1;
+                assert_eq!(
+                    logits,
+                    &acf::cnn::infer::infer(&model, &weights, &images[o.image_idx])
+                );
+            }
+            Err(ServeError::Overloaded { .. }) => {}
+            Err(e) => panic!("unexpected serve error: {e}"),
+        }
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.completed as usize, served);
+    assert_eq!((snap.accepted + snap.rejected) as usize, outcomes.len());
+    if served > 0 {
+        assert!(snap.sustained_img_s > 0.0);
+        assert!(snap.p99_ms > 0.0);
+    }
+}
