@@ -1,0 +1,93 @@
+//! Lane-parallel netlist-simulator throughput (DESIGN.md §Perf item 7).
+//!
+//! Measures one full verify pass (K² = 9 settle+tick cycles, drivers
+//! included) of the Conv_3 IP — the paper's densest mix of LUT fabric,
+//! carry chains, FFs, and a packed DSP — at 1, 8, and 64 simulator
+//! lanes. The 1-lane case is the scalar baseline (it takes the
+//! index-the-truth-table path); the others evaluate every lane in the
+//! same pass via Shannon mux-tree LUT reduction and bitwise
+//! carry/FF words.
+//!
+//! Emits `BENCH_sim.json` with the raw timing series plus derived
+//! cycles/sec and images/sec per occupancy, so the lane-packing speedup
+//! is tracked across runs next to `BENCH_hotpath.json` and
+//! `BENCH_serve.json`.
+use acf::ips::verify::{random_stimulus_lanes, IpPorts};
+use acf::ips::{self, ConvKind, ConvParams};
+use acf::netlist::sim::Sim;
+use acf::util::bench::{report, stats_json, Bench};
+use acf::util::json::{obj, Json};
+use acf::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let p = ConvParams::paper_8bit();
+    let ip = ips::generate(ConvKind::Conv3, &p).unwrap();
+    let taps = p.taps() as usize;
+    let ip_lanes = ip.kind.lanes() as usize;
+    println!(
+        "Conv_3 netlist: {} cells, {} IP lanes, II = {taps} cycles/pass",
+        ip.netlist.n_cells(),
+        ip_lanes
+    );
+
+    let mut stats = Vec::new();
+    let mut derived: Vec<Json> = Vec::new();
+    let mut baseline_pass_ns = 0.0f64;
+    for &lanes in &[1usize, 8, 64] {
+        let mut rng = Rng::new(0x51A1);
+        let (per_lane, coefs) = random_stimulus_lanes(&ip, &mut rng, lanes, 1);
+        let mut sim = Sim::with_lanes(&ip.netlist, lanes).unwrap();
+        let ports = IpPorts::resolve(&sim, ip_lanes);
+        ports.reset(&mut sim, &p);
+        let label = if lanes == 1 {
+            "Conv_3 verify pass (scalar 1-lane)".to_string()
+        } else {
+            format!("Conv_3 verify pass ({lanes}-lane)")
+        };
+        let s = b.run(&label, || {
+            // Window data is stable across a pass; the coefficient streams.
+            ports.drive_windows_lanes(&mut sim, &p, &per_lane, 0);
+            for phase in 0..taps {
+                ports.drive_coef(&mut sim, &p, &coefs, phase);
+                sim.settle();
+                sim.tick();
+            }
+        });
+        if lanes == 1 {
+            baseline_pass_ns = s.median_ns;
+        }
+        let passes_per_sec = s.throughput();
+        let cycles_per_sec = passes_per_sec * taps as f64;
+        let images_per_sec = passes_per_sec * (lanes * ip_lanes) as f64;
+        let speedup = if baseline_pass_ns > 0.0 {
+            (baseline_pass_ns / s.median_ns) * lanes as f64
+        } else {
+            1.0
+        };
+        println!(
+            "{label}: {:.2}M cycles/s, {:.2}M img/s ({speedup:.1}x scalar img/s)",
+            cycles_per_sec / 1e6,
+            images_per_sec / 1e6
+        );
+        derived.push(obj([
+            ("name", label.as_str().into()),
+            ("lanes", lanes.into()),
+            ("cycles_per_sec", cycles_per_sec.into()),
+            ("images_per_sec", images_per_sec.into()),
+            ("img_s_speedup_vs_scalar", speedup.into()),
+        ]));
+        stats.push(s);
+    }
+
+    report("lane-parallel netlist sim", &stats);
+    let doc = obj([
+        ("bench", "sim".into()),
+        ("cases", stats_json(&stats)),
+        ("derived", Json::Arr(derived)),
+    ]);
+    match std::fs::write("BENCH_sim.json", doc.dump()) {
+        Ok(()) => println!("\nwrote BENCH_sim.json ({} cases)", stats.len()),
+        Err(e) => eprintln!("could not write BENCH_sim.json: {e}"),
+    }
+}

@@ -3,25 +3,33 @@
 //!
 //! A [`Deployment`] realizes a [`Plan`]: one *persistent* worker thread
 //! per layer, connected by bounded channels (the fabric's line-buffer
-//! backpressure, modeled at image granularity). The workers are spawned
-//! once at deployment time and live until the `Deployment` is dropped —
-//! both the one-shot [`Deployment::infer_batch`] path and the serving
-//! tier ([`crate::serve`]) feed the same pipeline, and any number of
-//! callers may submit concurrently: every in-flight image carries its own
-//! reply channel, so interleaved batches never cross-talk and each caller
-//! still gets its outputs in submission order. Values are computed with
-//! the bit-exact behavioral layer models (the netlists are spot-verified
-//! against them by [`crate::sim::netlist_layer_check`]); time comes from
-//! the engine plan's schedule model, and per-layer worker wall time is
-//! recorded in [`metrics::Metrics`] keyed by the same layer indices the
-//! engine plan uses. Python never appears here — the XLA golden path
-//! lives in [`crate::runtime`] and is only consulted for verification.
+//! backpressure, modeled at lane-group granularity). The workers are
+//! spawned once at deployment time and live until the `Deployment` is
+//! dropped — both the one-shot [`Deployment::infer_batch`] path and the
+//! serving tier ([`crate::serve`]) feed the same pipeline, and any number
+//! of callers may submit concurrently: every in-flight job carries its
+//! own reply channel, so interleaved batches never cross-talk and each
+//! caller still gets its outputs in submission order.
+//!
+//! Jobs are *lane groups*, not single images: a micro-batch is packed
+//! into groups of up to [`crate::netlist::sim::LANES`] images that travel
+//! the pipeline together — the execution-side counterpart of the
+//! simulator's 64-lane settle/tick passes (the ROADMAP's "batch-aware
+//! engine plans" item, execution half). Values are computed with the
+//! bit-exact behavioral layer models (the netlists are spot-verified
+//! against them by [`crate::sim::netlist_layer_check`], itself
+//! lane-batched); time comes from the engine plan's schedule model, and
+//! per-layer worker wall time is recorded in [`metrics::Metrics`] keyed
+//! by the same layer indices the engine plan uses. Python never appears
+//! here — the XLA golden path lives in [`crate::runtime`] and is only
+//! consulted for verification.
 
 pub mod metrics;
 
 use crate::cnn::infer::Tensor;
 use crate::cnn::model::{Layer, Model, Weights};
 use crate::fabric::device::Device;
+use crate::netlist::sim::LANES;
 use crate::planner::{plan as make_plan, Plan, PlanError, Policy};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -29,14 +37,24 @@ use std::sync::{Arc, Mutex};
 /// Channel depth between layer workers (double-buffered line memories).
 const CHANNEL_DEPTH: usize = 2;
 
-/// One in-flight image: the activation tensor being pushed through the
-/// layer stages, the caller's batch position, and the caller's reply
-/// channel. Carrying the reply with the work is what lets multiple
-/// batches interleave on one pipeline without a demultiplexer.
+/// One in-flight lane group: up to [`LANES`] activation tensors pushed
+/// through the layer stages together, each with its caller's batch
+/// position, plus the caller's reply channel. Carrying the reply with the
+/// work is what lets multiple batches interleave on one pipeline without
+/// a demultiplexer.
 struct Job {
-    tensor: Tensor,
-    tag: usize,
+    tensors: Vec<Tensor>,
+    tags: Vec<usize>,
     reply: mpsc::Sender<(usize, Vec<i64>)>,
+}
+
+/// Lane-group width for a `batch`-image submission on an `n_layers`-deep
+/// pipeline: as wide as possible (fewer channel handoffs, one job per
+/// micro-batch when it fits a lane word) while still splitting large
+/// batches into at least one group per layer worker so the pipeline
+/// stays full, and never wider than the simulator's lane count.
+fn lane_group_width(batch: usize, n_layers: usize) -> usize {
+    batch.div_ceil(n_layers.max(1)).clamp(1, LANES)
 }
 
 /// The persistent layer pipeline: one long-lived thread per layer plus an
@@ -67,7 +85,9 @@ impl Pipeline {
                 let geom = layer_input_geometry(&model, li);
                 while let Ok(mut job) = rx_in.recv() {
                     let lt0 = std::time::Instant::now();
-                    job.tensor = apply_layer(&model, &weights, li, &job.tensor, geom);
+                    for tensor in job.tensors.iter_mut() {
+                        *tensor = apply_layer(&model, &weights, li, tensor, geom);
+                    }
                     metrics.record_layer(li, lt0.elapsed());
                     if tx.send(job).is_err() {
                         return; // downstream gone
@@ -80,7 +100,10 @@ impl Pipeline {
         // cannot deadlock however many batches are in flight.
         workers.push(std::thread::spawn(move || {
             while let Ok(job) = rx_prev.recv() {
-                let _ = job.reply.send((job.tag, job.tensor.concat()));
+                let Job { tensors, tags, reply } = job;
+                for (tag, tensor) in tags.into_iter().zip(tensors) {
+                    let _ = reply.send((tag, tensor.concat()));
+                }
             }
         }));
         Pipeline { ingress: Mutex::new(Some(tx0)), workers }
@@ -210,6 +233,10 @@ impl Deployment {
     /// callers need no copy. Safe to call from any number of threads at
     /// once: batches interleave on the shared workers but every image is
     /// routed back to its own caller by its carried reply channel.
+    ///
+    /// The batch is packed into lane-group jobs ([`lane_group_width`]):
+    /// a serving micro-batch rides the pipeline as a handful of lane
+    /// words rather than one channel handoff per image.
     pub fn infer_batch<I>(&self, images: &[I]) -> Result<Vec<Vec<i64>>, DeployError>
     where
         I: AsRef<[i64]> + Sync,
@@ -220,9 +247,14 @@ impl Deployment {
         let t0 = std::time::Instant::now();
         let tx = self.pipeline.sender().ok_or(DeployError::PipelineDown)?;
         let (reply_tx, reply_rx) = mpsc::channel::<(usize, Vec<i64>)>();
-        for (tag, img) in images.iter().enumerate() {
-            let job =
-                Job { tensor: tensorize(&self.model, img.as_ref()), tag, reply: reply_tx.clone() };
+        let group = lane_group_width(images.len(), self.model.layers.len());
+        for (gi, chunk) in images.chunks(group).enumerate() {
+            let base = gi * group;
+            let job = Job {
+                tensors: chunk.iter().map(|img| tensorize(&self.model, img.as_ref())).collect(),
+                tags: (base..base + chunk.len()).collect(),
+                reply: reply_tx.clone(),
+            };
             tx.send(job).map_err(|_| DeployError::PipelineDown)?;
         }
         // Drop our ends so the reply stream terminates even if a worker
@@ -373,6 +405,20 @@ mod tests {
         let w = Weights::random(&m, 42);
         let dev = by_name("zcu104").unwrap();
         Deployment::new(m, w, &dev, 200.0, &Policy::adaptive()).unwrap()
+    }
+
+    #[test]
+    fn lane_group_width_packs_and_keeps_pipeline_full() {
+        // Small batches split one group per layer worker; huge batches
+        // cap at the simulator lane width; degenerate inputs stay sane.
+        assert_eq!(lane_group_width(1, 5), 1);
+        assert_eq!(lane_group_width(5, 5), 1);
+        assert_eq!(lane_group_width(12, 5), 3);
+        assert_eq!(lane_group_width(32, 5), 7);
+        assert_eq!(lane_group_width(1000, 5), LANES);
+        assert_eq!(lane_group_width(0, 5), 1);
+        assert_eq!(lane_group_width(8, 0), 8);
+        assert_eq!(lane_group_width(10_000, 1), LANES);
     }
 
     #[test]

@@ -37,6 +37,22 @@ pub fn carry8_eval(s: u8, di: u8, ci: bool) -> (u8, u8) {
     (o, co)
 }
 
+/// Lane-parallel CARRY8: evaluate all 64 simulator lanes at once. Each
+/// element of `s`/`di` is a *lane word* (bit *l* = that stage's input in
+/// lane *l*), `ci` likewise; the eight stages ripple with pure bitwise
+/// ops, so one call does the work of 64 scalar [`carry8_eval`]s.
+pub fn carry8_eval_lanes(s: &[u64; 8], di: &[u64; 8], ci: u64) -> ([u64; 8], [u64; 8]) {
+    let mut o = [0u64; 8];
+    let mut co = [0u64; 8];
+    let mut c = ci;
+    for i in 0..CARRY8_WIDTH {
+        o[i] = s[i] ^ c;
+        c = (s[i] & c) | (!s[i] & di[i]);
+        co[i] = c;
+    }
+    (o, co)
+}
+
 /// Number of CARRY8 primitives needed for a `bits`-wide adder.
 pub fn carry8_count(bits: u32) -> u32 {
     bits.div_ceil(CARRY8_WIDTH as u32)
@@ -87,6 +103,39 @@ mod tests {
         let (o, co) = carry8_eval(0x00, 0xFF, false);
         assert_eq!(co, 0xFF); // every stage generates
         assert_eq!(o, 0xFE); // stage 0 sees ci=0, others see 1
+    }
+
+    #[test]
+    fn prop_lane_eval_matches_scalar_per_lane() {
+        forall("carry8 lanes == scalar/lane", 300, |g| {
+            let lanes = g.usize_in(1, 64);
+            // Per-lane scalar stimuli, packed into lane words.
+            let mut s = [0u64; 8];
+            let mut di = [0u64; 8];
+            let mut ci = 0u64;
+            let mut scalars = Vec::with_capacity(lanes);
+            for lane in 0..lanes {
+                let sv = g.i64_in(0, 255) as u8;
+                let dv = g.i64_in(0, 255) as u8;
+                let cv = g.bool();
+                for stage in 0..8 {
+                    s[stage] |= (((sv >> stage) & 1) as u64) << lane;
+                    di[stage] |= (((dv >> stage) & 1) as u64) << lane;
+                }
+                ci |= (cv as u64) << lane;
+                scalars.push((sv, dv, cv));
+            }
+            let (o, co) = carry8_eval_lanes(&s, &di, ci);
+            for (lane, &(sv, dv, cv)) in scalars.iter().enumerate() {
+                let (ow, cow) = carry8_eval(sv, dv, cv);
+                let ol = (0..8).fold(0u8, |a, i| a | ((((o[i] >> lane) & 1) as u8) << i));
+                let col = (0..8).fold(0u8, |a, i| a | ((((co[i] >> lane) & 1) as u8) << i));
+                if ol != ow || col != cow {
+                    return Err(format!("lane {lane}: s={sv:#x} di={dv:#x} ci={cv}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

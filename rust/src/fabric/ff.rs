@@ -15,6 +15,14 @@ pub fn fdre_next(q: bool, d: bool, ce: bool, r: bool) -> bool {
     }
 }
 
+/// Lane-parallel FDRE: every argument is a 64-lane word (bit *l* = that
+/// pin's value in simulator lane *l*); one expression of bitwise ops
+/// evaluates all lanes at once with the same R-beats-CE priority.
+#[inline]
+pub fn fdre_next_lanes(q: u64, d: u64, ce: u64, r: u64) -> u64 {
+    !r & ((ce & d) | (!ce & q))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -35,5 +43,23 @@ mod tests {
     #[test]
     fn load() {
         assert!(!fdre_next(true, false, true, false));
+    }
+
+    #[test]
+    fn lane_eval_matches_scalar_exhaustively() {
+        // 4 input bits -> 16 combinations; pack all of them into 16 lanes
+        // and check the lane word agrees with the scalar model per lane.
+        let (mut q, mut d, mut ce, mut r) = (0u64, 0u64, 0u64, 0u64);
+        for lane in 0..16u64 {
+            q |= (lane & 1) << lane;
+            d |= ((lane >> 1) & 1) << lane;
+            ce |= ((lane >> 2) & 1) << lane;
+            r |= ((lane >> 3) & 1) << lane;
+        }
+        let next = fdre_next_lanes(q, d, ce, r);
+        for lane in 0..16u64 {
+            let want = fdre_next(lane & 1 == 1, (lane >> 1) & 1 == 1, (lane >> 2) & 1 == 1, (lane >> 3) & 1 == 1);
+            assert_eq!((next >> lane) & 1 == 1, want, "lane {lane}");
+        }
     }
 }

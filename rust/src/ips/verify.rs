@@ -7,18 +7,33 @@
 //! correctness spine of the whole repository (the same `window_ref`
 //! semantics are enforced against the Pallas kernels by pytest and against
 //! the XLA artifacts by the runtime integration tests).
+//!
+//! Two lane axes meet here and must not be confused:
+//! * **IP lanes** — `Conv_3`/`Conv_4`'s dual datapaths (`win0`/`win1`),
+//!   part of the netlist itself.
+//! * **Sim lanes** — up to [`crate::netlist::sim::LANES`] independent
+//!   stimulus streams packed one-per-bit into the simulator's lane words.
+//!   [`run_ip_lanes`] drives many window streams through ONE simulator
+//!   pass structure: control (`en`/`rst`/`coef`/phase) is broadcast —
+//!   every lane runs the same schedule with the same coefficients, which
+//!   is exactly a micro-batch of images on one engine — while window data
+//!   is set per lane.
 
 use super::common::ConvIp;
 use super::params::ConvParams;
-use crate::netlist::sim::Sim;
+use crate::netlist::sim::{Sim, LANES};
 use crate::util::rng::Rng;
 
-/// One pass's stimulus: a window per lane.
+/// One pass's stimulus: a window per IP lane.
 pub type PassStimulus = Vec<Vec<i64>>;
 
+/// One sim lane's stimulus: its sequence of passes.
+pub type LaneStimulus = Vec<PassStimulus>;
+
 /// Pre-resolved port indices for a conv IP's streaming interface, so
-/// per-cycle driving is allocation- and lookup-free. Shared by [`run_ip`]
-/// and the stall-injection drivers.
+/// per-cycle driving is allocation- and lookup-free. Shared by
+/// [`run_ip_lanes`] (and through it [`run_ip`]) and the stall-injection
+/// drivers.
 pub struct IpPorts {
     pub rst: usize,
     pub en: usize,
@@ -60,7 +75,9 @@ impl IpPorts {
         sim.set_input_at(self.rst, 0);
     }
 
-    /// Present coefficient `phase` and every lane's window of `pass`.
+    /// Present coefficient `phase` and every lane's window of `pass` in
+    /// one call — the per-cycle driver the stall-injection tests use
+    /// (idempotent, so re-driving a held cycle is safe).
     pub fn drive(
         &self,
         sim: &mut Sim<'_>,
@@ -94,44 +111,115 @@ impl IpPorts {
             None
         }
     }
+
+    /// Broadcast coefficient `phase` to every sim lane (the only input
+    /// that changes mid-pass).
+    pub fn drive_coef(&self, sim: &mut Sim<'_>, p: &ConvParams, coefs: &[i64], phase: usize) {
+        let cmask = (1u64 << p.coef_bits) - 1;
+        sim.set_input_at(self.coef, (coefs[phase] as u64) & cmask);
+    }
+
+    /// Set every sim lane's windows of `pass`. Windows are stable for the
+    /// K² cycles of a pass (the IP port contract), so call this at pass
+    /// boundaries only — re-driving every cycle would put O(lanes·K²·W)
+    /// serial bit writes in the lane-parallel hot loop.
+    pub fn drive_windows_lanes(
+        &self,
+        sim: &mut Sim<'_>,
+        p: &ConvParams,
+        per_lane: &[LaneStimulus],
+        pass: usize,
+    ) {
+        let dmask = (1u64 << p.data_bits) - 1;
+        let taps = p.taps() as usize;
+        for (sl, stim) in per_lane.iter().enumerate() {
+            for (il, &win) in self.win.iter().enumerate() {
+                for e in 0..taps {
+                    sim.set_input_field_lane_at(
+                        win,
+                        sl,
+                        e * p.data_bits as usize,
+                        p.data_bits as usize,
+                        (stim[pass][il][e] as u64) & dmask,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Capture one sim lane's output row (the caller has already seen
+    /// `valid` high — control is broadcast, so all lanes pulse together).
+    pub fn capture_lane(&self, sim: &Sim<'_>, lane: usize) -> Vec<i64> {
+        self.out.iter().map(|&o| sim.output_signed_lane_at(o, lane)).collect()
+    }
 }
 
 /// Drive `ip` through `windows.len()` passes with the given coefficient
-/// set and return the captured outputs per pass per lane.
+/// set and return the captured outputs per pass per lane. A thin wrapper
+/// over [`run_ip_lanes`] at one sim lane (which still takes the scalar
+/// LUT fast path), so there is exactly one copy of the pass schedule.
 pub fn run_ip(ip: &ConvIp, windows: &[PassStimulus], coefs: &[i64]) -> Vec<Vec<i64>> {
+    let lane: LaneStimulus = windows.to_vec();
+    run_ip_lanes(ip, std::slice::from_ref(&lane), coefs).pop().expect("one sim lane")
+}
+
+/// Drive `ip` through one lane-batched run: `per_lane[l]` is sim lane
+/// `l`'s pass sequence (all lanes share the pass count, schedule, and
+/// coefficient set). Returns captured outputs per sim lane per pass per
+/// IP lane — bit-identical to running [`run_ip`] once per sim lane, at a
+/// fraction of the settle/tick cost.
+pub fn run_ip_lanes(
+    ip: &ConvIp,
+    per_lane: &[LaneStimulus],
+    coefs: &[i64],
+) -> Vec<Vec<Vec<i64>>> {
     let p = &ip.params;
-    let lanes = ip.kind.lanes() as usize;
+    let ip_lanes = ip.kind.lanes() as usize;
     let taps = p.taps() as usize;
-    assert!(windows.iter().all(|w| w.len() == lanes && w.iter().all(|l| l.len() == taps)));
+    let sim_lanes = per_lane.len();
+    assert!((1..=LANES).contains(&sim_lanes), "{sim_lanes} sim lanes unsupported");
+    let n_passes = per_lane[0].len();
+    assert!(n_passes > 0, "need at least one pass");
+    assert!(per_lane.iter().all(|stim| stim.len() == n_passes
+        && stim.iter().all(|w| w.len() == ip_lanes && w.iter().all(|l| l.len() == taps))));
     assert_eq!(coefs.len(), taps);
 
-    let mut sim = Sim::new(&ip.netlist).expect("IP netlist must check");
-    let ports = IpPorts::resolve(&sim, lanes);
+    let mut sim = Sim::with_lanes(&ip.netlist, sim_lanes).expect("IP netlist must check");
+    let ports = IpPorts::resolve(&sim, ip_lanes);
     ports.reset(&mut sim, p);
 
-    let total = windows.len() * taps + ip.out_latency as usize + 4;
-    let mut results: Vec<Vec<i64>> = Vec::new();
+    let total = n_passes * taps + ip.out_latency as usize + 4;
+    let mut results: Vec<Vec<Vec<i64>>> = vec![Vec::new(); sim_lanes];
     for cycle in 0..total {
         let phase = cycle % taps;
-        let pass = (cycle / taps).min(windows.len() - 1);
-        ports.drive(&mut sim, p, windows, pass, coefs, phase);
+        let pass = (cycle / taps).min(n_passes - 1);
+        // Windows are stable across a pass; only the coefficient streams.
+        if phase == 0 {
+            ports.drive_windows_lanes(&mut sim, p, per_lane, pass);
+        }
+        ports.drive_coef(&mut sim, p, coefs, phase);
         sim.settle();
-        // The IP's own view of the phase must agree with the driver's.
         debug_assert_eq!(sim.output_unsigned_at(ports.phase), phase as u64, "cycle {cycle}");
-        if let Some(row) = ports.capture(&sim) {
-            results.push(row);
-            if results.len() == windows.len() {
+        if sim.output_unsigned_at(ports.valid) == 1 {
+            for (lane, rows) in results.iter_mut().enumerate() {
+                if rows.len() < n_passes {
+                    rows.push(ports.capture_lane(&sim, lane));
+                }
+            }
+            if results[0].len() == n_passes {
                 break; // trailing margin cycles re-process the last window
             }
         }
         sim.tick();
     }
-    assert_eq!(
-        results.len(),
-        windows.len(),
-        "{}: expected one valid pulse per pass",
-        ip.kind.name()
-    );
+    for (lane, rows) in results.iter().enumerate() {
+        assert_eq!(
+            rows.len(),
+            n_passes,
+            "{}: sim lane {lane} missed valid pulses",
+            ip.kind.name()
+        );
+    }
     results
 }
 
@@ -169,6 +257,32 @@ pub fn random_stimulus(
     (windows, coefs)
 }
 
+/// Random lane-batched stimulus: `sim_lanes` independent streams of
+/// `passes_per_lane` passes each, plus one shared coefficient set.
+pub fn random_stimulus_lanes(
+    ip: &ConvIp,
+    rng: &mut Rng,
+    sim_lanes: usize,
+    passes_per_lane: usize,
+) -> (Vec<LaneStimulus>, Vec<i64>) {
+    let p = &ip.params;
+    let taps = p.taps() as usize;
+    let ip_lanes = ip.kind.lanes() as usize;
+    let per_lane: Vec<LaneStimulus> = (0..sim_lanes)
+        .map(|_| {
+            (0..passes_per_lane)
+                .map(|_| {
+                    (0..ip_lanes)
+                        .map(|_| (0..taps).map(|_| rng.signed_bits(p.data_bits)).collect())
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    let coefs: Vec<i64> = (0..taps).map(|_| rng.signed_bits(p.coef_bits)).collect();
+    (per_lane, coefs)
+}
+
 /// Assert netlist == behavioral over random stimulus. Returns the number
 /// of windows checked.
 pub fn check_equivalence(ip: &ConvIp, seed: u64, n_passes: usize) -> usize {
@@ -178,4 +292,75 @@ pub fn check_equivalence(ip: &ConvIp, seed: u64, n_passes: usize) -> usize {
     let want = expected(ip, &windows, &coefs);
     assert_eq!(got, want, "{} netlist != behavioral", ip.kind.name());
     n_passes * ip.kind.lanes() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ips::{generate, ConvKind};
+    use crate::util::prop::forall;
+
+    /// Lane-batched runs must be bit-identical to per-lane scalar runs
+    /// AND to the behavioral reference, across IP kinds, widths, and
+    /// occupancies.
+    #[test]
+    fn prop_lane_batched_run_matches_scalar_runs() {
+        forall("run_ip_lanes == run_ip per lane", 10, |g| {
+            let kind = *g.choose(&ConvKind::ALL);
+            let bits = g.usize_in(4, 8) as u32;
+            let p = ConvParams {
+                k: g.usize_in(2, 3) as u32,
+                data_bits: bits,
+                coef_bits: bits,
+                out_bits: bits,
+                shift: bits - 1,
+                round: crate::fixed::Round::Truncate,
+            };
+            // All four kinds generate for k<=3 at <=8 bits today; skip
+            // defensively rather than fail the property if a kind ever
+            // narrows its envelope.
+            let Ok(ip) = generate(kind, &p) else { return Ok(()) };
+            let sim_lanes = g.usize_in(2, 6);
+            let passes = g.usize_in(1, 3);
+            // Draw stimuli through the prop generator so failures shrink.
+            let taps = p.taps() as usize;
+            let ip_lanes = ip.kind.lanes() as usize;
+            let per_lane: Vec<LaneStimulus> = (0..sim_lanes)
+                .map(|_| {
+                    (0..passes)
+                        .map(|_| (0..ip_lanes).map(|_| g.signed_vec(bits, taps)).collect())
+                        .collect()
+                })
+                .collect();
+            let coefs = g.signed_vec(bits, taps);
+            let got = run_ip_lanes(&ip, &per_lane, &coefs);
+            for (lane, stim) in per_lane.iter().enumerate() {
+                let scalar = run_ip(&ip, stim, &coefs);
+                if got[lane] != scalar {
+                    return Err(format!("{} lane {lane}: lane-run != scalar run", kind.name()));
+                }
+                let want = expected(&ip, stim, &coefs);
+                if got[lane] != want {
+                    return Err(format!("{} lane {lane}: lane-run != behavioral", kind.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_occupancy_lane_run_all_kinds() {
+        // All 64 sim lanes at once, every IP kind, paper configuration.
+        let p = ConvParams::paper_8bit();
+        for kind in ConvKind::ALL {
+            let ip = generate(kind, &p).unwrap();
+            let mut rng = Rng::new(0xACE0 ^ kind as u64);
+            let (per_lane, coefs) = random_stimulus_lanes(&ip, &mut rng, LANES, 2);
+            let got = run_ip_lanes(&ip, &per_lane, &coefs);
+            for (lane, stim) in per_lane.iter().enumerate() {
+                let want = expected(&ip, stim, &coefs);
+                assert_eq!(got[lane], want, "{} lane {lane}", kind.name());
+            }
+        }
+    }
 }

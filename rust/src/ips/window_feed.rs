@@ -211,6 +211,56 @@ mod tests {
     }
 
     #[test]
+    fn lane_batched_feed_matches_reference_per_lane() {
+        // One lane-parallel Sim carries several independent pixel
+        // streams through the SAME line buffers and shift registers —
+        // the RAMB18 per-lane state path. Every lane must match the
+        // behavioral reference for its own stream.
+        let p = ConvParams::paper_8bit();
+        let row_len = 8u32;
+        let feed = generate(&p, row_len).unwrap();
+        let k = feed.k as usize;
+        let w = feed.data_bits as usize;
+        let lanes = 5usize;
+        let mut rng = Rng::new(9);
+        let streams: Vec<Vec<i64>> = (0..lanes)
+            .map(|_| (0..(row_len as usize) * 6).map(|_| rng.signed_bits(8)).collect())
+            .collect();
+        let mut sim = Sim::with_lanes(&feed.netlist, lanes).unwrap();
+        sim.set_input("rst", 1);
+        sim.set_input("en", 1);
+        sim.set_input("px", 0);
+        sim.settle();
+        sim.tick();
+        sim.set_input("rst", 0);
+        let px_ix = sim.input_index("px");
+        let mask = (1u64 << w) - 1;
+        let mut got: Vec<Vec<Vec<i64>>> = vec![Vec::new(); lanes];
+        for t in 0..streams[0].len() {
+            for (lane, s) in streams.iter().enumerate() {
+                sim.set_input_lane_at(px_ix, lane, (s[t] as u64) & mask);
+            }
+            sim.settle();
+            for (lane, rows) in got.iter_mut().enumerate() {
+                let win: Vec<i64> = (0..k * k)
+                    .map(|e| {
+                        let bus: Vec<_> =
+                            (0..w).map(|bit| feed.netlist.outputs[0].1[e * w + bit]).collect();
+                        sim.get_signed_lane(&bus, lane)
+                    })
+                    .collect();
+                rows.push(win);
+            }
+            sim.tick();
+        }
+        let prime = feed.prime_latency as usize + row_len as usize;
+        for (lane, stream) in streams.iter().enumerate() {
+            let want = feed_ref(stream, row_len as usize, k);
+            assert_eq!(&got[lane][prime..], &want[prime..], "lane {lane}");
+        }
+    }
+
+    #[test]
     fn resource_cost_scales_with_k() {
         let p3 = ConvParams::paper_8bit();
         let p5 = ConvParams { k: 5, ..p3 };

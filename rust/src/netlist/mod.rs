@@ -25,6 +25,15 @@ use crate::fabric::dsp48;
 use crate::fabric::lut::Lut;
 use crate::fabric::Prim;
 
+/// Exact address width of a `depth`-entry memory: `ceil(log2(depth))`
+/// bits (0 for depth 1). Shared by [`Netlist::check`]'s arity rules and
+/// [`sim::Sim`]'s RAM decode so the two can never disagree — the float
+/// `log2().ceil()` they previously duplicated is replaced by integer
+/// arithmetic.
+pub fn ram_addr_bits(depth: u32) -> usize {
+    crate::fixed::ceil_log2(depth) as usize
+}
+
 /// Net index.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct NetId(pub u32);
@@ -211,7 +220,7 @@ impl Netlist {
                 CellKind::Carry8 => (17, 16),
                 CellKind::Dsp48e2 { .. } => (27 + 18 + 48 + 27 + 2 + 1, 48),
                 CellKind::Ramb18 { width, depth } => {
-                    let ab = (*depth as f64).log2().ceil() as usize;
+                    let ab = ram_addr_bits(*depth);
                     ((*width as usize) + ab + 1 + ab, *width as usize)
                 }
                 CellKind::Const { .. } => (0, 1),
@@ -360,6 +369,20 @@ mod tests {
         let f = nl.fanouts();
         assert_eq!(f[a.0 as usize], 2); // xor + not
         assert_eq!(f[y.0 as usize], 1); // top output
+    }
+
+    #[test]
+    fn ram_addr_bits_exact_on_any_depth() {
+        // Non-power-of-two depths are the interesting cases: the address
+        // width must cover depth-1 without wasting a bit.
+        for (depth, want) in [(1u32, 0usize), (2, 1), (3, 2), (5, 3), (9, 4), (12, 4), (1000, 10), (4096, 12), (4097, 13)] {
+            assert_eq!(ram_addr_bits(depth), want, "depth {depth}");
+        }
+        for depth in 1u32..=4100 {
+            let bits = ram_addr_bits(depth);
+            assert!((1u64 << bits) >= depth as u64, "depth {depth}: {bits} bits too narrow");
+            assert!(bits == 0 || (1u64 << (bits - 1)) < depth as u64, "depth {depth}: {bits} bits wasteful");
+        }
     }
 
     #[test]

@@ -1,26 +1,64 @@
-//! Bit-exact netlist simulator.
+//! Bit-exact, lane-parallel netlist simulator.
 //!
-//! Cycle-based, two-phase:
+//! **Representation.** Simulation state is *lane-major*: every net holds
+//! one `u64` word whose bit *i* is that net's boolean value in
+//! independent lane *i*. A lane is a complete, isolated stimulus stream —
+//! one image of a micro-batch — so a single [`Sim::settle`]/[`Sim::tick`]
+//! pass evaluates up to [`LANES`] images at once (the same bit-parallel
+//! trick the paper's `Conv_3` plays at the operand level with dual-pixel
+//! packing, applied here across the whole netlist).
+//!
+//! **Cycle model** (unchanged from the scalar simulator), two-phase:
 //! 1. [`Sim::settle`] — evaluate combinational cells in topological order
 //!    from primary inputs, constants, and sequential-cell outputs.
 //! 2. [`Sim::tick`] — clock edge: every sequential cell latches its
 //!    settled input values; then combinational logic re-settles.
 //!
+//! **Per-cell evaluation.**
+//! * LUTs evaluate bit-parallel by Shannon mux-tree reduction of the
+//!   truth table: the 2^k INIT bits are broadcast to lane words, then
+//!   folded by each input's lane word with `(t0 & !x) | (t1 & x)` — 2^k−1
+//!   word ops evaluate all 64 lanes, so the per-lane cost *falls* as
+//!   occupancy rises. (A 1-lane `Sim` takes the classic index-the-table
+//!   scalar path instead, which is cheaper at occupancy 1.)
+//! * `Carry8` ripples its 8 stages with pure bitwise ops on lane words
+//!   ([`carry8_eval_lanes`]); FDRE is three bitwise ops
+//!   ([`fdre_next_lanes`]).
+//! * DSP48E2 and RAMB18 keep per-lane architectural state and iterate
+//!   only over the live lanes.
+//!
+//! **Toggle exactness.** Every published word is diffed against the old
+//! value and masked by the live-lane mask; `count_ones()` on `old ⊕ new`
+//! charges exactly one toggle per lane per transition, so per-net counts
+//! equal the sum of the counts that per-lane scalar runs would have
+//! produced and the activity-based power model is unchanged at any
+//! occupancy (see the differential property tests below, and
+//! [`Sim::mean_toggle_rate`] which normalizes per lane).
+//!
 //! This is the oracle that proves an IP netlist implements its behavioral
-//! model: `ips::verify` drives both with the same stimulus and compares
-//! outputs cycle by cycle. Toggle counts are tracked per net for the
-//! activity-based dynamic power estimate.
+//! model: `ips::verify` drives both with the same stimulus — lane-batched
+//! via [`Sim::with_lanes`] — and compares outputs cycle by cycle.
+//!
+//! **Bus-width contract.** Whole-bus accessors ([`Sim::set_input`],
+//! [`Sim::get_unsigned`], ...) carry at most 64 bits and assert it;
+//! wider buses (e.g. a K²·W window port) must go through the field
+//! accessors ([`Sim::set_input_field_at`] and per-element output
+//! slices), which is what every driver in the tree already does.
 
 use super::{CellKind, NetId, Netlist, NetlistError};
-use crate::fabric::carry::carry8_eval;
+use crate::fabric::carry::carry8_eval_lanes;
 use crate::fabric::dsp48::{self, Dsp48e2, ZMux};
-use crate::fabric::ff::fdre_next;
+use crate::fabric::ff::fdre_next_lanes;
 
-/// Pre-decoded sequential element with inline state (perf: tick() runs
-/// allocation-free and in place — DESIGN.md §Perf item 3).
+/// Maximum (and word-width) lane count of one simulator instance: one
+/// image per bit of a `u64` lane word.
+pub const LANES: usize = 64;
+
+/// Pre-decoded sequential element with inline per-lane state (perf:
+/// tick() runs allocation-free and in place — DESIGN.md §Perf item 3).
 enum FastSeq {
-    Ff { d: u32, ce: u32, r: u32, q: u32, state: bool, next: bool },
-    Dsp { ins: Vec<u32>, outs: Vec<u32>, dsp: Dsp48e2 },
+    Ff { d: u32, ce: u32, r: u32, q: u32, state: u64, next: u64 },
+    Dsp { ins: Vec<u32>, outs: Vec<u32>, dsps: Vec<Dsp48e2> },
     Ram {
         width: u32,
         wdata: Vec<u32>,
@@ -28,8 +66,11 @@ enum FastSeq {
         we: u32,
         raddr: Vec<u32>,
         outs: Vec<u32>,
+        /// Lane-major contents: entry `lane * depth + addr`.
+        depth: usize,
         data: Vec<u64>,
-        rd: u64,
+        /// Registered read value per lane.
+        rd: Vec<u64>,
     },
 }
 
@@ -46,23 +87,90 @@ pub struct Sim<'nl> {
     /// setters/getters never clone a bus or scan the port lists.
     input_ix: std::collections::HashMap<String, usize>,
     output_ix: std::collections::HashMap<String, usize>,
-    values: Vec<bool>,
+    /// Live lane count (1..=LANES) and its bit mask.
+    lanes: usize,
+    live: u64,
+    /// Lane word per net: bit i = the net's value in lane i.
+    values: Vec<u64>,
     toggles: Vec<u64>,
     cycles: u64,
 }
 
 /// Pre-decoded combinational operation.
 enum FastOp {
-    /// Plain or fractured LUT: gather input bits by flat net index, index
-    /// the truth table(s).
+    /// Plain or fractured LUT: gather input lane words by flat net index,
+    /// reduce the truth table(s).
     Lut { ins: Vec<u32>, funcs: Vec<(u64, u32)> }, // (init, out_net)
     /// Carry chain: (s[8], di[8], ci, o[8], co[8]) as flat net indices.
     Carry { s: [u32; 8], di: [u32; 8], ci: u32, o: [u32; 8], co: [u32; 8] },
 }
 
+/// Publish `word` onto `net`, charging toggles for every live lane whose
+/// bit changed — `count_ones()` on `old ⊕ new` under the live mask keeps
+/// the power model's activity exact at any lane occupancy. The single
+/// shared write path of `settle`/`publish_seq_outputs`.
+#[inline(always)]
+fn write_net(values: &mut [u64], toggles: &mut [u64], live: u64, net: u32, word: u64) {
+    let slot = &mut values[net as usize];
+    let diff = (*slot ^ word) & live;
+    if diff != 0 {
+        toggles[net as usize] += diff.count_ones() as u64;
+    }
+    *slot = word;
+}
+
+/// Evaluate one LUT truth table over all lanes at once: broadcast each
+/// INIT bit to a full/empty lane word, then Shannon-fold by each input's
+/// lane word. 2^k−1 word muxes evaluate up to 64 lanes.
+#[inline]
+fn lut_eval_lanes(init: u64, xs: &[u64]) -> u64 {
+    debug_assert!((1..=6).contains(&xs.len()), "LUT arity {}", xs.len());
+    let n = 1usize << xs.len();
+    let mut tab = [0u64; 64];
+    for (j, t) in tab.iter_mut().enumerate().take(n) {
+        *t = 0u64.wrapping_sub((init >> j) & 1); // all-ones / all-zeros
+    }
+    let mut size = n;
+    for &x in xs {
+        size >>= 1;
+        for j in 0..size {
+            tab[j] = (tab[2 * j] & !x) | (tab[2 * j + 1] & x);
+        }
+    }
+    tab[0]
+}
+
+/// Gather one lane's integer value from a list of net lane words.
+#[inline]
+fn bits_lane(values: &[u64], nets: &[u32], lane: usize) -> u64 {
+    let mut v = 0u64;
+    for (i, &n) in nets.iter().enumerate() {
+        v |= ((values[n as usize] >> lane) & 1) << i;
+    }
+    v
+}
+
+/// [`bits_lane`] as a signed (two's complement) value.
+#[inline]
+fn signed_lane(values: &[u64], nets: &[u32], lane: usize) -> i64 {
+    crate::fixed::pack::sign_extend(bits_lane(values, nets, lane) as i64, nets.len() as u32)
+}
+
 impl<'nl> Sim<'nl> {
-    /// Build from a netlist; runs [`Netlist::check`].
+    /// Build a single-lane (scalar) simulator; runs [`Netlist::check`].
     pub fn new(nl: &'nl Netlist) -> Result<Self, NetlistError> {
+        Sim::with_lanes(nl, 1)
+    }
+
+    /// Build a `lanes`-lane simulator (1..=[`LANES`]); every lane is an
+    /// independent stimulus stream evaluated by the same settle/tick
+    /// passes. Runs [`Netlist::check`].
+    pub fn with_lanes(nl: &'nl Netlist, lanes: usize) -> Result<Self, NetlistError> {
+        assert!(
+            (1..=LANES).contains(&lanes),
+            "lane count {lanes} outside 1..={LANES}"
+        );
+        let live = if lanes == LANES { u64::MAX } else { (1u64 << lanes) - 1 };
         let order = nl.check()?;
         let mut fastseq = Vec::new();
         for c in &nl.cells {
@@ -72,17 +180,18 @@ impl<'nl> Sim<'nl> {
                     ce: c.ins[1].0,
                     r: c.ins[2].0,
                     q: c.outs[0].0,
-                    state: false,
-                    next: false,
+                    state: 0,
+                    next: 0,
                 }),
                 CellKind::Dsp48e2 { cfg } => fastseq.push(FastSeq::Dsp {
                     ins: c.ins.iter().map(|n| n.0).collect(),
                     outs: c.outs.iter().map(|n| n.0).collect(),
-                    dsp: Dsp48e2::new(*cfg),
+                    dsps: vec![Dsp48e2::new(*cfg); lanes],
                 }),
                 CellKind::Ramb18 { width, depth } => {
                     let w = *width as usize;
-                    let ab = (*depth as f64).log2().ceil() as usize;
+                    assert!(w <= 64, "RAMB18 width {w} > 64 unsupported");
+                    let ab = super::ram_addr_bits(*depth);
                     fastseq.push(FastSeq::Ram {
                         width: *width,
                         wdata: c.ins[0..w].iter().map(|n| n.0).collect(),
@@ -90,16 +199,17 @@ impl<'nl> Sim<'nl> {
                         we: c.ins[w + ab].0,
                         raddr: c.ins[w + ab + 1..w + ab + 1 + ab].iter().map(|n| n.0).collect(),
                         outs: c.outs.iter().map(|n| n.0).collect(),
-                        data: vec![0; *depth as usize],
-                        rd: 0,
+                        depth: *depth as usize,
+                        data: vec![0; *depth as usize * lanes],
+                        rd: vec![0; lanes],
                     });
                 }
                 _ => {}
             }
         }
         // Pre-decode the comb order into flat ops. Constants are written
-        // once here and never re-evaluated.
-        let mut values = vec![false; nl.n_nets()];
+        // once here (broadcast across live lanes) and never re-evaluated.
+        let mut values = vec![0u64; nl.n_nets()];
         let mut fast = Vec::new();
         for &cid in &order {
             let cell = nl.cell(cid);
@@ -123,7 +233,9 @@ impl<'nl> Sim<'nl> {
                         co: std::array::from_fn(|i| h(8 + i)),
                     });
                 }
-                CellKind::Const { value } => values[cell.outs[0].0 as usize] = *value,
+                CellKind::Const { value } => {
+                    values[cell.outs[0].0 as usize] = if *value { live } else { 0 }
+                }
                 CellKind::Input { .. } => {}
                 _ => unreachable!("sequential in comb order"),
             }
@@ -138,6 +250,8 @@ impl<'nl> Sim<'nl> {
             fastseq,
             input_ix,
             output_ix,
+            lanes,
+            live,
             values,
             toggles: vec![0; nl.n_nets()],
             cycles: 0,
@@ -145,6 +259,11 @@ impl<'nl> Sim<'nl> {
         sim.publish_seq_outputs();
         sim.settle();
         Ok(sim)
+    }
+
+    /// Live lane count of this instance.
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Resolve a declared input bus name to its index (for the `_at`
@@ -159,8 +278,10 @@ impl<'nl> Sim<'nl> {
         *self.output_ix.get(name).unwrap_or_else(|| panic!("no output named '{name}'"))
     }
 
-    /// Set a primary input bus (LSB-first nets) to an integer value.
-    /// Panics if `name` is not a declared input.
+    /// Set a primary input bus (LSB-first nets) to an integer value in
+    /// EVERY live lane (broadcast — the natural shape for shared control
+    /// and coefficient streams). Panics if `name` is not a declared
+    /// input or the bus is wider than 64 bits.
     pub fn set_input(&mut self, name: &str, value: u64) {
         self.set_input_at(self.input_index(name), value);
     }
@@ -169,13 +290,45 @@ impl<'nl> Sim<'nl> {
     /// lookup-free, for per-cycle driver loops.
     pub fn set_input_at(&mut self, input: usize, value: u64) {
         let nl = self.nl; // reborrow at 'nl, independent of &mut self
-        for (i, net) in nl.inputs[input].1.iter().enumerate() {
-            self.values[net.0 as usize] = (value >> i) & 1 == 1;
+        let (name, bus) = &nl.inputs[input];
+        assert!(
+            bus.len() <= 64,
+            "input '{name}' is {} bits wide (> 64): drive it with the field accessors",
+            bus.len()
+        );
+        let live = self.live;
+        for (i, net) in bus.iter().enumerate() {
+            let slot = &mut self.values[net.0 as usize];
+            *slot = if (value >> i) & 1 == 1 { *slot | live } else { *slot & !live };
+        }
+    }
+
+    /// Set one lane of a primary input bus, leaving the other lanes
+    /// untouched — the per-image setter of a lane-batched driver.
+    pub fn set_input_lane(&mut self, name: &str, lane: usize, value: u64) {
+        self.set_input_lane_at(self.input_index(name), lane, value);
+    }
+
+    /// [`Self::set_input_lane`] by pre-resolved index.
+    pub fn set_input_lane_at(&mut self, input: usize, lane: usize, value: u64) {
+        let nl = self.nl;
+        let (name, bus) = &nl.inputs[input];
+        assert!(
+            bus.len() <= 64,
+            "input '{name}' is {} bits wide (> 64): drive it with the field accessors",
+            bus.len()
+        );
+        assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
+        let bit = 1u64 << lane;
+        for (i, net) in bus.iter().enumerate() {
+            let slot = &mut self.values[net.0 as usize];
+            *slot = if (value >> i) & 1 == 1 { *slot | bit } else { *slot & !bit };
         }
     }
 
     /// Set a contiguous field `[lo, lo+width)` of a (possibly >64-bit)
-    /// input bus. Used to pack K×K windows element by element.
+    /// input bus in every live lane. Used to pack K×K windows element by
+    /// element.
     pub fn set_input_field(&mut self, name: &str, lo: usize, width: usize, value: u64) {
         self.set_input_field_at(self.input_index(name), lo, width, value);
     }
@@ -184,143 +337,197 @@ impl<'nl> Sim<'nl> {
     pub fn set_input_field_at(&mut self, input: usize, lo: usize, width: usize, value: u64) {
         let nl = self.nl;
         let (name, bus) = &nl.inputs[input];
+        assert!(width <= 64, "field width {width} > 64 on '{name}'");
         assert!(lo + width <= bus.len(), "field [{lo},{}) exceeds '{name}'", lo + width);
+        let live = self.live;
         for i in 0..width {
-            self.values[bus[lo + i].0 as usize] = (value >> i) & 1 == 1;
+            let slot = &mut self.values[bus[lo + i].0 as usize];
+            *slot = if (value >> i) & 1 == 1 { *slot | live } else { *slot & !live };
         }
     }
 
-    /// Read a bus as an unsigned integer.
+    /// Set a contiguous field of an input bus in ONE lane — the
+    /// per-image window packer of the lane-batched verify drivers.
+    pub fn set_input_field_lane_at(
+        &mut self,
+        input: usize,
+        lane: usize,
+        lo: usize,
+        width: usize,
+        value: u64,
+    ) {
+        let nl = self.nl;
+        let (name, bus) = &nl.inputs[input];
+        assert!(width <= 64, "field width {width} > 64 on '{name}'");
+        assert!(lo + width <= bus.len(), "field [{lo},{}) exceeds '{name}'", lo + width);
+        assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
+        let bit = 1u64 << lane;
+        for i in 0..width {
+            let slot = &mut self.values[bus[lo + i].0 as usize];
+            *slot = if (value >> i) & 1 == 1 { *slot | bit } else { *slot & !bit };
+        }
+    }
+
+    /// Read a bus as an unsigned integer in lane 0 (the scalar view).
+    /// Panics on buses wider than 64 bits — slice them field-wise.
     pub fn get_unsigned(&self, bus: &[NetId]) -> u64 {
+        self.get_unsigned_lane(bus, 0)
+    }
+
+    /// Read a bus as an unsigned integer in one lane.
+    pub fn get_unsigned_lane(&self, bus: &[NetId], lane: usize) -> u64 {
+        assert!(
+            bus.len() <= 64,
+            "bus is {} bits wide (> 64): read it through field slices",
+            bus.len()
+        );
+        assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
         let mut v = 0u64;
         for (i, net) in bus.iter().enumerate() {
-            if self.values[net.0 as usize] {
-                v |= 1 << i;
-            }
+            v |= ((self.values[net.0 as usize] >> lane) & 1) << i;
         }
         v
     }
 
-    /// Read a bus as a signed (two's complement) integer.
+    /// Read a bus as a signed (two's complement) integer in lane 0.
     pub fn get_signed(&self, bus: &[NetId]) -> i64 {
-        let raw = self.get_unsigned(bus);
+        self.get_signed_lane(bus, 0)
+    }
+
+    /// Read a bus as a signed integer in one lane.
+    pub fn get_signed_lane(&self, bus: &[NetId], lane: usize) -> i64 {
+        let raw = self.get_unsigned_lane(bus, lane);
         let w = bus.len() as u32;
         crate::fixed::pack::sign_extend(raw as i64, w)
     }
 
-    /// Read a declared output by name (signed).
+    /// Read a declared output by name (signed, lane 0).
     pub fn output_signed(&self, name: &str) -> i64 {
         self.output_signed_at(self.output_index(name))
     }
 
-    /// Read a declared output by name (unsigned).
+    /// Read a declared output by name (unsigned, lane 0).
     pub fn output_unsigned(&self, name: &str) -> u64 {
         self.output_unsigned_at(self.output_index(name))
     }
 
     /// [`Self::output_signed`] by pre-resolved index.
     pub fn output_signed_at(&self, output: usize) -> i64 {
-        self.get_signed(&self.nl.outputs[output].1)
+        self.output_signed_lane_at(output, 0)
     }
 
     /// [`Self::output_unsigned`] by pre-resolved index.
     pub fn output_unsigned_at(&self, output: usize) -> u64 {
-        self.get_unsigned(&self.nl.outputs[output].1)
+        self.output_unsigned_lane_at(output, 0)
+    }
+
+    /// Read a declared output in one lane (signed).
+    pub fn output_signed_lane_at(&self, output: usize, lane: usize) -> i64 {
+        self.get_signed_lane(&self.nl.outputs[output].1, lane)
+    }
+
+    /// Read a declared output in one lane (unsigned).
+    pub fn output_unsigned_lane_at(&self, output: usize, lane: usize) -> u64 {
+        self.get_unsigned_lane(&self.nl.outputs[output].1, lane)
     }
 
     /// Propagate combinational logic to a fixed point (single topological
-    /// pass over the pre-decoded ops — the order is a DAG order).
+    /// pass over the pre-decoded ops — the order is a DAG order). All
+    /// lanes settle in the same pass.
     pub fn settle(&mut self) {
         let values = &mut self.values;
         let toggles = &mut self.toggles;
-        #[inline(always)]
-        fn write(values: &mut [bool], toggles: &mut [u64], net: u32, v: bool) {
-            let slot = &mut values[net as usize];
-            if *slot != v {
-                toggles[net as usize] += 1;
-                *slot = v;
-            }
-        }
+        let live = self.live;
+        let scalar = self.lanes == 1;
         for op in &self.fast {
             match op {
                 FastOp::Lut { ins, funcs } => {
-                    let mut idx = 0u64;
-                    for (i, &n) in ins.iter().enumerate() {
-                        idx |= (values[n as usize] as u64) << i;
-                    }
-                    for &(init, out) in funcs {
-                        write(values, toggles, out, (init >> idx) & 1 == 1);
+                    if scalar {
+                        // Occupancy-1 fast path: classic index-the-table.
+                        let mut idx = 0usize;
+                        for (i, &n) in ins.iter().enumerate() {
+                            idx |= ((values[n as usize] & 1) as usize) << i;
+                        }
+                        for &(init, out) in funcs {
+                            write_net(values, toggles, live, out, (init >> idx) & 1);
+                        }
+                    } else {
+                        let mut x = [0u64; 6];
+                        for (i, &n) in ins.iter().enumerate() {
+                            x[i] = values[n as usize];
+                        }
+                        for &(init, out) in funcs {
+                            let word = lut_eval_lanes(init, &x[..ins.len()]);
+                            write_net(values, toggles, live, out, word);
+                        }
                     }
                 }
                 FastOp::Carry { s, di, ci, o, co } => {
-                    let mut sv = 0u8;
-                    let mut dv = 0u8;
+                    let mut sv = [0u64; 8];
+                    let mut dv = [0u64; 8];
                     for i in 0..8 {
-                        sv |= (values[s[i] as usize] as u8) << i;
-                        dv |= (values[di[i] as usize] as u8) << i;
+                        sv[i] = values[s[i] as usize];
+                        dv[i] = values[di[i] as usize];
                     }
-                    let (ov, cv) = carry8_eval(sv, dv, values[*ci as usize]);
+                    let (ov, cv) = carry8_eval_lanes(&sv, &dv, values[*ci as usize]);
                     for i in 0..8 {
-                        write(values, toggles, o[i], (ov >> i) & 1 == 1);
-                        write(values, toggles, co[i], (cv >> i) & 1 == 1);
+                        write_net(values, toggles, live, o[i], ov[i]);
+                        write_net(values, toggles, live, co[i], cv[i]);
                     }
                 }
             }
         }
     }
-
 
     /// Clock edge: latch every sequential cell from settled values, then
     /// re-settle combinational logic. Runs allocation-free: phase 1 reads
     /// settled nets and updates inline state, phase 2 publishes outputs
     /// (a two-phase split so FF->FF shift chains latch atomically).
+    /// FDREs latch all lanes with three bitwise ops; DSP and RAM state
+    /// advances per live lane.
     pub fn tick(&mut self) {
         self.cycles += 1;
-        fn bits(values: &[bool], nets: &[u32]) -> u64 {
-            let mut v = 0u64;
-            for (i, &n) in nets.iter().enumerate() {
-                v |= (values[n as usize] as u64) << i;
-            }
-            v
-        }
-        fn signed(values: &[bool], nets: &[u32]) -> i64 {
-            crate::fixed::pack::sign_extend(bits(values, nets) as i64, nets.len() as u32)
-        }
         // Phase 1: compute next states from the settled snapshot.
         let values = &self.values;
+        let lanes = self.lanes;
         for op in &mut self.fastseq {
             match op {
                 FastSeq::Ff { d, ce, r, q: _, state, next } => {
-                    *next = fdre_next(
+                    *next = fdre_next_lanes(
                         *state,
                         values[*d as usize],
                         values[*ce as usize],
                         values[*r as usize],
                     );
                 }
-                FastSeq::Dsp { ins, outs: _, dsp } => {
-                    let a = signed(values, &ins[0..27]);
-                    let b = signed(values, &ins[27..45]);
-                    let c = signed(values, &ins[45..93]);
-                    let d = signed(values, &ins[93..120]);
-                    let zmux = match bits(values, &ins[120..122]) {
-                        0 => ZMux::Zero,
-                        1 => ZMux::P,
-                        _ => ZMux::C,
-                    };
-                    let ce = values[ins[122] as usize];
-                    dsp.clock(dsp48::Inputs { a, b, c, d, zmux, ce });
+                FastSeq::Dsp { ins, outs: _, dsps } => {
+                    for (lane, dsp) in dsps.iter_mut().enumerate() {
+                        let a = signed_lane(values, &ins[0..27], lane);
+                        let b = signed_lane(values, &ins[27..45], lane);
+                        let c = signed_lane(values, &ins[45..93], lane);
+                        let d = signed_lane(values, &ins[93..120], lane);
+                        let zmux = match bits_lane(values, &ins[120..122], lane) {
+                            0 => ZMux::Zero,
+                            1 => ZMux::P,
+                            _ => ZMux::C,
+                        };
+                        let ce = (values[ins[122] as usize] >> lane) & 1 == 1;
+                        dsp.clock(dsp48::Inputs { a, b, c, d, zmux, ce });
+                    }
                 }
-                FastSeq::Ram { width, wdata, waddr, we, raddr, outs: _, data, rd } => {
-                    let wd = bits(values, wdata);
-                    let wa = bits(values, waddr) as usize;
-                    let ra = bits(values, raddr) as usize;
-                    let len = data.len();
-                    *rd = data[ra % len];
-                    if values[*we as usize] {
-                        let w = *width as usize;
-                        let m = if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
-                        data[wa % len] = wd & m;
+                FastSeq::Ram { width, wdata, waddr, we, raddr, outs: _, depth, data, rd } => {
+                    let w = *width as usize;
+                    let m = if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
+                    for lane in 0..lanes {
+                        let wd = bits_lane(values, wdata, lane);
+                        let wa = bits_lane(values, waddr, lane) as usize;
+                        let ra = bits_lane(values, raddr, lane) as usize;
+                        let base = lane * *depth;
+                        // Read-old semantics: capture before the write lands.
+                        rd[lane] = data[base + ra % *depth];
+                        if (values[*we as usize] >> lane) & 1 == 1 {
+                            data[base + wa % *depth] = wd & m;
+                        }
                     }
                 }
             }
@@ -338,46 +545,61 @@ impl<'nl> Sim<'nl> {
     fn publish_seq_outputs(&mut self) {
         let values = &mut self.values;
         let toggles = &mut self.toggles;
-        #[inline(always)]
-        fn write(values: &mut [bool], toggles: &mut [u64], net: u32, v: bool) {
-            let slot = &mut values[net as usize];
-            if *slot != v {
-                toggles[net as usize] += 1;
-                *slot = v;
-            }
-        }
+        let live = self.live;
+        let lanes = self.lanes;
         for op in &self.fastseq {
             match op {
-                FastSeq::Ff { q, state, .. } => write(values, toggles, *q, *state),
-                FastSeq::Dsp { outs, dsp, .. } => {
-                    let p = dsp.p();
+                FastSeq::Ff { q, state, .. } => write_net(values, toggles, live, *q, *state),
+                FastSeq::Dsp { outs, dsps, .. } => {
+                    // Transpose per-lane P values into output lane words.
+                    let mut outw = [0u64; 48];
+                    for (lane, dsp) in dsps.iter().enumerate().take(lanes) {
+                        let p = dsp.p() as u64;
+                        for (i, w) in outw.iter_mut().enumerate() {
+                            *w |= ((p >> i) & 1) << lane;
+                        }
+                    }
                     for (i, &net) in outs.iter().enumerate() {
-                        write(values, toggles, net, (p >> i) & 1 == 1);
+                        write_net(values, toggles, live, net, outw[i]);
                     }
                 }
                 FastSeq::Ram { outs, rd, .. } => {
+                    let mut outw = [0u64; 64];
+                    for (lane, &v) in rd.iter().enumerate().take(lanes) {
+                        for (i, w) in outw.iter_mut().enumerate().take(outs.len()) {
+                            *w |= ((v >> i) & 1) << lane;
+                        }
+                    }
                     for (i, &net) in outs.iter().enumerate() {
-                        write(values, toggles, net, (rd >> i) & 1 == 1);
+                        write_net(values, toggles, live, net, outw[i]);
                     }
                 }
             }
         }
     }
 
-
-
-    /// Cycles simulated so far.
+    /// Cycles simulated so far (one per [`Self::tick`], regardless of
+    /// occupancy — a full 64-lane tick is still one hardware cycle).
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
 
-    /// Mean toggle rate per net per cycle — feeds the dynamic power model.
+    /// Total toggles across all nets and live lanes — equals the sum a
+    /// set of per-lane scalar runs would have produced (the differential
+    /// property tests assert this exactly).
+    pub fn toggle_total(&self) -> u64 {
+        self.toggles.iter().sum()
+    }
+
+    /// Mean toggle rate per net per cycle *per lane* — feeds the dynamic
+    /// power model. At 1 lane this is the classic scalar definition; at
+    /// higher occupancy it is the average activity of the lanes.
     pub fn mean_toggle_rate(&self) -> f64 {
         if self.cycles == 0 || self.toggles.is_empty() {
             return 0.0;
         }
-        let total: u64 = self.toggles.iter().sum();
-        total as f64 / (self.toggles.len() as f64 * self.cycles as f64)
+        let total = self.toggle_total();
+        total as f64 / (self.toggles.len() as f64 * self.cycles as f64 * self.lanes as f64)
     }
 }
 
@@ -385,7 +607,10 @@ impl<'nl> Sim<'nl> {
 mod tests {
     use super::*;
     use crate::fabric::lut::Lut;
+    use crate::netlist::builder::Builder;
     use crate::netlist::Netlist;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
 
     /// Build: y = a XOR b, z = register(y).
     fn xor_reg() -> Netlist {
@@ -529,5 +754,345 @@ mod tests {
         sim.settle();
         sim.tick(); // read of 0xCD captured into rd reg
         assert_eq!(sim.output_unsigned("rdata"), 0xCD);
+    }
+
+    // ---------------- lane-parallel coverage ----------------
+
+    #[test]
+    fn prop_lut_lane_eval_matches_table_lookup() {
+        forall("lut_eval_lanes == per-lane lookup", 400, |g| {
+            let k = g.usize_in(1, 6);
+            let table_bits = 1usize << k;
+            // Draw the INIT in 16-bit chunks to keep draws shrinkable.
+            let mut init = 0u64;
+            for chunk in 0..table_bits.div_ceil(16) {
+                init |= (g.i64_in(0, 0xFFFF) as u64) << (chunk * 16);
+            }
+            if table_bits < 64 {
+                init &= (1u64 << table_bits) - 1;
+            }
+            let xs: Vec<u64> = (0..k)
+                .map(|_| {
+                    // Two 32-bit halves per lane word.
+                    ((g.i64_in(0, u32::MAX as i64) as u64) << 32)
+                        | (g.i64_in(0, u32::MAX as i64) as u64)
+                })
+                .collect();
+            let word = lut_eval_lanes(init, &xs);
+            for lane in 0..64 {
+                let mut idx = 0u64;
+                for (i, x) in xs.iter().enumerate() {
+                    idx |= ((x >> lane) & 1) << i;
+                }
+                let want = (init >> idx) & 1;
+                if (word >> lane) & 1 != want {
+                    return Err(format!("k={k} init={init:#x} lane={lane}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Build a random arithmetic circuit: outputs `s` (a±b), `p`
+    /// (pipelined a*b) and `q` (registered sum) over random widths.
+    fn random_arith(wa: usize, wb: usize, sub: bool, cut: bool) -> Netlist {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let a_bus = b.input("a", wa);
+        let b_bus = b.input("b", wb);
+        let s = if sub { b.sub(&a_bus, &b_bus) } else { b.add(&a_bus, &b_bus) };
+        let ce = b.one();
+        let r = b.zero();
+        let cuts: &[usize] = if cut { &[1] } else { &[] };
+        let (p, _) = b.mul_signed(&a_bus, &b_bus, cuts, ce, r);
+        let q = b.register(&s, ce, r);
+        b.output("s", &s);
+        b.output("p", &p);
+        b.output("q", &q);
+        nl
+    }
+
+    /// Differential property: a `lanes`-lane Sim must be cycle-for-cycle
+    /// bit-identical to `lanes` independent scalar Sims — outputs AND
+    /// exact toggle totals (the power-model contract).
+    #[test]
+    fn prop_lane_sim_matches_scalar_sims() {
+        forall("lane sim == scalar sims", 25, |g| {
+            let wa = g.usize_in(2, 8);
+            let wb = g.usize_in(2, 8);
+            let sub = g.bool();
+            let cut = g.bool();
+            let lanes = g.usize_in(2, 8);
+            let cycles = g.usize_in(2, 6);
+            let nl = random_arith(wa, wb, sub, cut);
+            // Per-lane stimulus streams.
+            let stim: Vec<Vec<(i64, i64)>> = (0..lanes)
+                .map(|_| {
+                    (0..cycles)
+                        .map(|_| (g.signed_bits(wa as u32), g.signed_bits(wb as u32)))
+                        .collect()
+                })
+                .collect();
+            let amask = (1u64 << wa) - 1;
+            let bmask = (1u64 << wb) - 1;
+            let mut lane_sim = Sim::with_lanes(&nl, lanes).unwrap();
+            let mut scalars: Vec<Sim> = (0..lanes).map(|_| Sim::new(&nl).unwrap()).collect();
+            let outs = ["s", "p", "q"];
+            for t in 0..cycles {
+                for (lane, s) in stim.iter().enumerate() {
+                    let (av, bv) = s[t];
+                    lane_sim.set_input_lane("a", lane, (av as u64) & amask);
+                    lane_sim.set_input_lane("b", lane, (bv as u64) & bmask);
+                    scalars[lane].set_input("a", (av as u64) & amask);
+                    scalars[lane].set_input("b", (bv as u64) & bmask);
+                }
+                lane_sim.settle();
+                for sc in scalars.iter_mut() {
+                    sc.settle();
+                }
+                for name in outs {
+                    let ox = lane_sim.output_index(name);
+                    for (lane, sc) in scalars.iter().enumerate() {
+                        let got = lane_sim.output_signed_lane_at(ox, lane);
+                        let want = sc.output_signed(name);
+                        if got != want {
+                            return Err(format!(
+                                "wa={wa} wb={wb} sub={sub} cut={cut} t={t} lane={lane} {name}: {got} != {want}"
+                            ));
+                        }
+                    }
+                }
+                lane_sim.tick();
+                for sc in scalars.iter_mut() {
+                    sc.tick();
+                }
+            }
+            // Toggle exactness: lane total == sum of scalar totals, and
+            // the normalized rate is the scalar rates' exact mean.
+            let scalar_total: u64 = scalars.iter().map(|s| s.toggle_total()).sum();
+            if lane_sim.toggle_total() != scalar_total {
+                return Err(format!(
+                    "toggle totals diverge: lane={} scalar-sum={scalar_total}",
+                    lane_sim.toggle_total()
+                ));
+            }
+            let denom = nl.n_nets() as f64 * lane_sim.cycles() as f64 * lanes as f64;
+            if lane_sim.mean_toggle_rate() != scalar_total as f64 / denom {
+                return Err("mean_toggle_rate not the exact per-lane mean".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_occupancy_dsp_lanes_independent() {
+        use crate::fabric::dsp48::Config;
+        // One DSP in MACC mode, 64 lanes each accumulating a different
+        // pair sequence; every lane must match its own scalar model.
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let a = b.input("a", 8);
+        let bb = b.input("b", 8);
+        let zm = b.input("zm", 2);
+        let c = b.const_bus(0, 48);
+        let d = b.const_bus(0, 27);
+        let ce = b.one();
+        let p = b.dsp(Config::full_macc(false), &a, &bb, &c, &d, &zm, ce);
+        b.output("p", &p);
+        let mut sim = Sim::with_lanes(&nl, LANES).unwrap();
+        let a_ix = sim.input_index("a");
+        let b_ix = sim.input_index("b");
+        let mut rng = Rng::new(21);
+        let pairs: Vec<Vec<(i64, i64)>> = (0..LANES)
+            .map(|_| (0..4).map(|_| (rng.signed_bits(8), rng.signed_bits(8))).collect())
+            .collect();
+        for t in 0..4 + 3 {
+            for (lane, seq) in pairs.iter().enumerate() {
+                let (av, bv) = if t < 4 { seq[t] } else { (0, 0) };
+                sim.set_input_lane_at(a_ix, lane, (av as u64) & 0xFF);
+                sim.set_input_lane_at(b_ix, lane, (bv as u64) & 0xFF);
+            }
+            sim.set_input("zm", if t == 0 { 0 } else { 1 });
+            sim.settle();
+            sim.tick();
+        }
+        let p_ix = sim.output_index("p");
+        for (lane, seq) in pairs.iter().enumerate() {
+            let want: i64 = seq.iter().map(|&(x, y)| x * y).sum();
+            assert_eq!(sim.output_signed_lane_at(p_ix, lane), want, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn bram_lanes_have_independent_contents() {
+        // Reuse the roundtrip netlist shape at 8 lanes: each lane writes
+        // a different byte at a different address and must read back its
+        // own.
+        let mut nl = Netlist::new();
+        let wdata: Vec<_> = (0..8).map(|_| nl.net()).collect();
+        let waddr: Vec<_> = (0..4).map(|_| nl.net()).collect();
+        let we = nl.net();
+        let raddr: Vec<_> = (0..4).map(|_| nl.net()).collect();
+        let rdata: Vec<_> = (0..8).map(|_| nl.net()).collect();
+        for (name, bus) in [("wdata", &wdata), ("waddr", &waddr), ("raddr", &raddr)] {
+            for &n in bus.iter() {
+                nl.add_cell(CellKind::Input { name: name.into() }, vec![], vec![n]);
+            }
+            nl.inputs.push((name.into(), bus.to_vec()));
+        }
+        nl.add_cell(CellKind::Input { name: "we".into() }, vec![], vec![we]);
+        nl.inputs.push(("we".into(), vec![we]));
+        let mut ins = wdata.clone();
+        ins.extend(&waddr);
+        ins.push(we);
+        ins.extend(&raddr);
+        nl.add_cell(CellKind::Ramb18 { width: 8, depth: 16 }, ins, rdata.clone());
+        nl.outputs.push(("rdata".into(), rdata));
+        let lanes = 8;
+        let mut sim = Sim::with_lanes(&nl, lanes).unwrap();
+        let wd_ix = sim.input_index("wdata");
+        let wa_ix = sim.input_index("waddr");
+        let ra_ix = sim.input_index("raddr");
+        for lane in 0..lanes {
+            sim.set_input_lane_at(wd_ix, lane, 0x30 + lane as u64);
+            sim.set_input_lane_at(wa_ix, lane, lane as u64);
+            sim.set_input_lane_at(ra_ix, lane, lane as u64);
+        }
+        sim.set_input("we", 1);
+        sim.settle();
+        sim.tick();
+        sim.set_input("we", 0);
+        sim.settle();
+        sim.tick();
+        let out_ix = sim.output_index("rdata");
+        for lane in 0..lanes {
+            assert_eq!(sim.output_unsigned_lane_at(out_ix, lane), 0x30 + lane as u64, "lane {lane}");
+        }
+    }
+
+    // ---------------- wide-bus regression (>64-bit ports) ----------------
+
+    /// A 72-bit pass-through bus: in -> register -> out.
+    fn wide_bus_nl() -> Netlist {
+        let mut nl = Netlist::new();
+        let mut b = Builder::new(&mut nl);
+        let x = b.input("x", 72);
+        let ce = b.one();
+        let r = b.zero();
+        let q = b.register(&x, ce, r);
+        b.output("q", &q);
+        nl
+    }
+
+    #[test]
+    fn wide_bus_roundtrips_through_field_accessors() {
+        let nl = wide_bus_nl();
+        let mut sim = Sim::new(&nl).unwrap();
+        let x_ix = sim.input_index("x");
+        // Pack 9 bytes, read them back through 8-bit output slices.
+        for e in 0..9 {
+            sim.set_input_field_at(x_ix, e * 8, 8, 0xA0 + e as u64);
+        }
+        sim.settle();
+        sim.tick();
+        for e in 0..9 {
+            let bus: Vec<_> = nl.outputs[0].1[e * 8..(e + 1) * 8].to_vec();
+            assert_eq!(sim.get_unsigned(&bus), 0xA0 + e as u64, "byte {e}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "72 bits wide")]
+    fn wide_bus_whole_set_panics_instead_of_wrapping() {
+        let nl = wide_bus_nl();
+        let mut sim = Sim::new(&nl).unwrap();
+        // Silently wrapped the shift (or debug-panicked deep in the loop)
+        // before; now a clear width assert fires at the API boundary.
+        sim.set_input("x", 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "72 bits wide")]
+    fn wide_bus_whole_get_panics_instead_of_wrapping() {
+        let nl = wide_bus_nl();
+        let sim = Sim::new(&nl).unwrap();
+        let _ = sim.output_unsigned("q");
+    }
+
+    #[test]
+    fn non_power_of_two_ram_depth_simulates() {
+        // depth 12 -> 4 address bits via ram_addr_bits; a sim over it
+        // must construct and round-trip (regression for the float
+        // log2().ceil() duplication).
+        let mut nl = Netlist::new();
+        let wdata: Vec<_> = (0..4).map(|_| nl.net()).collect();
+        let waddr: Vec<_> = (0..4).map(|_| nl.net()).collect();
+        let we = nl.net();
+        let raddr: Vec<_> = (0..4).map(|_| nl.net()).collect();
+        let rdata: Vec<_> = (0..4).map(|_| nl.net()).collect();
+        for (name, bus) in [("wdata", &wdata), ("waddr", &waddr), ("raddr", &raddr)] {
+            for &n in bus.iter() {
+                nl.add_cell(CellKind::Input { name: name.into() }, vec![], vec![n]);
+            }
+            nl.inputs.push((name.into(), bus.to_vec()));
+        }
+        nl.add_cell(CellKind::Input { name: "we".into() }, vec![], vec![we]);
+        nl.inputs.push(("we".into(), vec![we]));
+        let mut ins = wdata.clone();
+        ins.extend(&waddr);
+        ins.push(we);
+        ins.extend(&raddr);
+        nl.add_cell(CellKind::Ramb18 { width: 4, depth: 12 }, ins, rdata.clone());
+        nl.outputs.push(("rdata".into(), rdata));
+        let mut sim = Sim::new(&nl).unwrap();
+        sim.set_input("wdata", 0x9);
+        sim.set_input("waddr", 11);
+        sim.set_input("raddr", 11);
+        sim.set_input("we", 1);
+        sim.settle();
+        sim.tick();
+        sim.set_input("we", 0);
+        sim.settle();
+        sim.tick();
+        assert_eq!(sim.output_unsigned("rdata"), 0x9);
+    }
+
+    #[test]
+    fn xor_reg_full_occupancy_differential() {
+        // All 64 lanes carry distinct streams; spot-check the smallest
+        // sequential netlist at maximum width.
+        let nl = xor_reg();
+        let mut lane_sim = Sim::with_lanes(&nl, LANES).unwrap();
+        let mut scalars: Vec<Sim> = (0..LANES).map(|_| Sim::new(&nl).unwrap()).collect();
+        let mut rng = Rng::new(3);
+        let streams: Vec<Vec<(u64, u64)>> = (0..LANES)
+            .map(|_| (0..8).map(|_| (rng.below(2), rng.below(2))).collect())
+            .collect();
+        let a_ix = lane_sim.input_index("a");
+        let b_ix = lane_sim.input_index("b");
+        for t in 0..8 {
+            for (lane, s) in streams.iter().enumerate() {
+                lane_sim.set_input_lane_at(a_ix, lane, s[t].0);
+                lane_sim.set_input_lane_at(b_ix, lane, s[t].1);
+                scalars[lane].set_input("a", s[t].0);
+                scalars[lane].set_input("b", s[t].1);
+            }
+            lane_sim.settle();
+            lane_sim.tick();
+            for sc in scalars.iter_mut() {
+                sc.settle();
+                sc.tick();
+            }
+            let q_ix = lane_sim.output_index("q");
+            for (lane, sc) in scalars.iter().enumerate() {
+                assert_eq!(
+                    lane_sim.output_unsigned_lane_at(q_ix, lane),
+                    sc.output_unsigned("q"),
+                    "t={t} lane={lane}"
+                );
+            }
+        }
+        let scalar_total: u64 = scalars.iter().map(|s| s.toggle_total()).sum();
+        assert_eq!(lane_sim.toggle_total(), scalar_total);
     }
 }

@@ -73,6 +73,9 @@ pub struct ServeConfig {
     /// [`ServeError::Overloaded`].
     pub queue_depth: usize,
     /// Largest micro-batch the dispatcher forms per replica handoff.
+    /// Clamped to the execution tier's lane width
+    /// ([`crate::netlist::sim::LANES`]) so each dispatch maps onto whole
+    /// lane-packed pipeline jobs.
     pub max_batch: usize,
 }
 

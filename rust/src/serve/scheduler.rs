@@ -2,6 +2,13 @@
 //! dispatcher, least-loaded replica selection, and explicit admission
 //! control.
 //!
+//! Micro-batches are sized to the execution tier's lane width: a batch
+//! handed to a replica runner is at most [`crate::netlist::sim::LANES`]
+//! requests, so each dispatch maps onto whole lane-packed pipeline jobs
+//! ([`Deployment::infer_batch`] packs them) instead of a stream of
+//! per-image handoffs — closing the dispatch side of the ROADMAP's
+//! "batch-aware engine plans" item.
+//!
 //! Topology (all threads long-lived, torn down on [`Server::shutdown`]):
 //!
 //! ```text
@@ -62,7 +69,10 @@ impl Server {
     pub fn start(replicas: Vec<Arc<Deployment>>, cfg: &ServeConfig) -> Server {
         assert!(!replicas.is_empty(), "a fleet needs at least one replica");
         let queue_depth = cfg.queue_depth.max(1);
-        let max_batch = cfg.max_batch.max(1);
+        // One micro-batch = at most one simulator lane word of images:
+        // anything wider would split into multiple lane groups anyway and
+        // only add queueing delay ahead of the pipeline.
+        let max_batch = cfg.max_batch.clamp(1, crate::netlist::sim::LANES);
         let metrics = Arc::new(FleetMetrics::new(replicas.len()));
         let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
         let mut threads = Vec::with_capacity(replicas.len() + 1);

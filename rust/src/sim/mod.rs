@@ -55,7 +55,10 @@ pub fn estimate(_model: &Model, plan: &Plan) -> PerfReport {
 
 /// Drive `n_windows` real windows of layer `layer_idx`'s workload through
 /// the *generated netlist* of the planned conv IP kind and compare against
-/// the behavioral expectation. Returns the number of windows checked.
+/// the behavioral expectation. The windows are spread across simulator
+/// lanes ([`crate::netlist::sim::LANES`]-wide lane words), so the check
+/// runs one lane-batched pass schedule instead of a serial pass per
+/// window group. Returns the number of windows checked.
 pub fn netlist_layer_check(
     model: &Model,
     plan: &Plan,
@@ -73,15 +76,23 @@ pub fn netlist_layer_check(
     };
     let ip = crate::ips::generate(kind, params).map_err(|e| e.to_string())?;
     let mut rng = crate::util::rng::Rng::new(seed);
-    let lanes = kind.lanes() as usize;
-    let passes = n_windows.div_ceil(lanes);
-    let (windows, coefs) = crate::ips::verify::random_stimulus(&ip, &mut rng, passes);
-    let got = crate::ips::verify::run_ip(&ip, &windows, &coefs);
-    let want = crate::ips::verify::expected(&ip, &windows, &coefs);
-    if got != want {
-        return Err(format!("netlist mismatch on layer {layer_idx} ({})", kind.name()));
+    let ip_lanes = kind.lanes() as usize;
+    let total_passes = n_windows.div_ceil(ip_lanes).max(1);
+    let sim_lanes = total_passes.min(crate::netlist::sim::LANES);
+    let passes_per_lane = total_passes.div_ceil(sim_lanes);
+    let (per_lane, coefs) =
+        crate::ips::verify::random_stimulus_lanes(&ip, &mut rng, sim_lanes, passes_per_lane);
+    let got = crate::ips::verify::run_ip_lanes(&ip, &per_lane, &coefs);
+    for (lane, stim) in per_lane.iter().enumerate() {
+        let want = crate::ips::verify::expected(&ip, stim, &coefs);
+        if got[lane] != want {
+            return Err(format!(
+                "netlist mismatch on layer {layer_idx} ({}, sim lane {lane})",
+                kind.name()
+            ));
+        }
     }
-    Ok(passes * lanes)
+    Ok(sim_lanes * passes_per_lane * ip_lanes)
 }
 
 #[cfg(test)]
