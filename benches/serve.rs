@@ -3,21 +3,32 @@
 //!     persistent pipeline,
 //!   - micro-batched fleet throughput (32-request bursts),
 //!   - request-latency distribution and sustained img/s under a fixed
-//!     open-loop offered load (the SLO-facing series).
+//!     open-loop offered load (the SLO-facing series),
+//!   - the heterogeneous-fleet series: zcu104+zu5ev vs zcu104-only,
+//!     modeled throughput normalized per modeled static watt (the
+//!     equal-power comparison), plus a measured open-loop run on the mix.
 //!
 //! Emits `BENCH_serve.json` next to `BENCH_hotpath.json` so serving
-//! regressions are visible across runs. The open-loop series is reported
-//! through the same `Stats` shape: the latency case's min/median/mean/max
-//! are the distribution's min/p50/mean/max, and the sustained case is
-//! expressed as ns per image so throughput regressions trend the same
-//! direction as every other series.
+//! regressions are visible across runs. Flat-valued figures of merit are
+//! reported through the same `Stats` shape: latency cases carry the
+//! distribution's min/p50/mean/max, rate-like cases are expressed as ns
+//! per image (or ns·W per image for the power-normalized series) so
+//! regressions trend the same direction as every other series.
 
 use acf::cnn::data::Dataset;
 use acf::cnn::model::{Model, Weights};
 use acf::fabric::device::by_name;
 use acf::planner::Policy;
-use acf::serve::{open_loop, plan_fixed_fleet, ServeConfig, Server};
+use acf::serve::{
+    open_loop, plan_fixed_fleet, plan_fleet, plan_fleet_spec, FleetSpec, ServeConfig, Server,
+};
 use acf::util::bench::{report, write_json, Bench, Stats};
+
+/// One flat-valued case per figure of merit, so each JSON entry is
+/// self-describing regardless of which field a tracker reads.
+fn flat(name: String, iters: u64, ns: f64) -> Stats {
+    Stats { name, iters, min_ns: ns, median_ns: ns, mean_ns: ns, max_ns: ns }
+}
 
 fn main() {
     let b = Bench::default();
@@ -69,27 +80,93 @@ fn main() {
              sustained {:.0} img/s, p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms, {} shed",
             snap.sustained_img_s, snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.rejected
         );
-        // One flat-valued case per figure of merit, so each JSON entry is
-        // self-describing regardless of which field a tracker reads.
-        let flat = |name: String, ns: f64| Stats {
-            name,
-            iters: snap.completed,
-            min_ns: ns,
-            median_ns: ns,
-            mean_ns: ns,
-            max_ns: ns,
-        };
         stats.push(flat(
             format!("serve: p99 latency @ {OFFERED:.0} img/s offered (2 replicas)"),
+            snap.completed,
             snap.p99_ms * 1e6,
         ));
         stats.push(flat(
             format!("serve: p50 latency @ {OFFERED:.0} img/s offered (2 replicas)"),
+            snap.completed,
             snap.p50_ms * 1e6,
         ));
         stats.push(flat(
             format!("serve: sustained ns/img @ {OFFERED:.0} img/s offered (2 replicas)"),
+            snap.completed,
             1e9 / snap.sustained_img_s.max(1e-9),
+        ));
+    }
+
+    // 4. Heterogeneous fleet: zcu104+zu5ev mix vs zcu104-only, compared
+    //    at equal modeled static power by normalizing modeled throughput
+    //    per static watt (a powered part burns its full static power
+    //    whatever its shard).
+    {
+        let spec = FleetSpec::parse("zcu104,zu5ev", &[]).unwrap();
+        let hetero = plan_fleet_spec(&model, &spec, 200.0, &Policy::adaptive(), None, 4).unwrap();
+        let single = plan_fleet(&model, &dev, 200.0, &Policy::adaptive(), None, 4).unwrap();
+        let per_watt = |img_s: f64, watts: f64| img_s / watts.max(1e-9);
+        let hetero_eff = per_watt(hetero.fleet_img_s, hetero.static_w);
+        let single_eff = per_watt(single.fleet_img_s, single.static_w);
+        println!(
+            "hetero zcu104+zu5ev: {:.0} img/s @ {:.3} W static ({:.0} img/s/W) vs \
+             zcu104-only: {:.0} img/s @ {:.3} W static ({:.0} img/s/W)",
+            hetero.fleet_img_s,
+            hetero.static_w,
+            hetero_eff,
+            single.fleet_img_s,
+            single.static_w,
+            single_eff
+        );
+        // ns·W per image: lower is better, same trend direction as every
+        // other series.
+        stats.push(flat(
+            "serve: modeled ns*W/img — zcu104+zu5ev heterogeneous fleet".to_string(),
+            hetero.replicas() as u64,
+            1e9 / hetero_eff.max(1e-9),
+        ));
+        stats.push(flat(
+            "serve: modeled ns*W/img — zcu104-only fleet".to_string(),
+            single.replicas() as u64,
+            1e9 / single_eff.max(1e-9),
+        ));
+
+        // Measured: open loop on the mix, per-group dispatch visible.
+        const OFFERED: f64 = 1_500.0;
+        const REQUESTS: usize = 600;
+        let server = Server::start_grouped(
+            hetero.deploy(model.clone(), weights.clone()),
+            hetero.replica_groups(),
+            hetero.group_labels(),
+            &ServeConfig::default(),
+        );
+        let outcomes = open_loop(&server, &corpus, REQUESTS, OFFERED, 0xBE7D);
+        let served = outcomes.iter().filter(|o| o.result.is_ok()).count();
+        let snap = server.shutdown();
+        println!(
+            "hetero open loop @ {OFFERED:.0} img/s offered: {served}/{REQUESTS} served, \
+             sustained {:.0} img/s, p99 {:.2} ms",
+            snap.sustained_img_s, snap.p99_ms
+        );
+        for g in &snap.groups {
+            println!(
+                "  {}: {} images / {} replica(s), {:.1}% busy, p99 {:.2} ms",
+                g.label,
+                g.images,
+                g.replicas,
+                g.utilization * 100.0,
+                g.p99_ms
+            );
+        }
+        stats.push(flat(
+            format!("serve: hetero sustained ns/img @ {OFFERED:.0} img/s offered (zcu104+zu5ev)"),
+            snap.completed,
+            1e9 / snap.sustained_img_s.max(1e-9),
+        ));
+        stats.push(flat(
+            format!("serve: hetero p99 latency @ {OFFERED:.0} img/s offered (zcu104+zu5ev)"),
+            snap.completed,
+            snap.p99_ms * 1e6,
         ));
     }
 

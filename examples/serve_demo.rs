@@ -1,6 +1,8 @@
-//! SERVING DEMO (DESIGN.md experiment "SERVE"): one device budget → a
-//! replica fleet → micro-batched request scheduling under open-loop
-//! traffic, with admission control doing explicit load shedding.
+//! SERVING DEMO (DESIGN.md experiment "SERVE"): a heterogeneous device
+//! catalog → one replica group per part, each with its own resource-driven
+//! plan → throughput-weighted request scheduling under open-loop traffic,
+//! with admission control doing explicit load shedding and the metrics
+//! broken out per device group.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
@@ -8,29 +10,62 @@ use acf::cnn::data::Dataset;
 use acf::cnn::model::{Model, Weights};
 use acf::fabric::device::by_name;
 use acf::planner::Policy;
-use acf::serve::{open_loop, plan_fleet, ServeConfig, ServeError, Server, DEFAULT_MAX_REPLICAS};
+use acf::serve::{
+    open_loop, plan_fleet_spec, FleetSpec, ServeConfig, ServeError, Server,
+};
 
 fn main() {
     let model = Model::lenet_tiny();
-    let dev = by_name("zcu104").expect("catalog device");
     let policy = Policy::adaptive();
 
-    println!("== 1. fleet planning: divide the {} budget until throughput peaks ==", dev.name);
-    let fp = plan_fleet(&model, &dev, 200.0, &policy, None, DEFAULT_MAX_REPLICAS)
-        .expect("lenet-tiny plans on the paper board");
+    println!("== 1. fleet planning across a heterogeneous catalog ==");
+    // The paper's board plus a smaller sibling and a DSP-starved edge
+    // part: three very different resource envelopes in one fleet.
+    let spec = FleetSpec::parse("zcu104,zu5ev,edge-nodsp", &[]).expect("built-in devices");
+    let fp = plan_fleet_spec(&model, &spec, 200.0, &policy, None, 4)
+        .expect("lenet-tiny plans on every catalog part");
+    for g in &fp.groups {
+        let convs: Vec<String> = g
+            .per_replica
+            .convs()
+            .map(|ep| format!("{} x{}", ep.kind.name(), ep.instances))
+            .collect();
+        let (dsp, lut) = g.pressure();
+        println!(
+            "  {}: {} replica(s) on 1/{} shards, {:.0} img/s group, convs [{}], DSP {:.1}% LUT {:.1}%",
+            g.device.name,
+            g.replicas,
+            g.replicas,
+            g.group_img_s,
+            convs.join(", "),
+            dsp * 100.0,
+            lut * 100.0
+        );
+    }
     println!(
-        "  {} replicas, each on a 1/{} shard: {:.0} img/s per replica, {:.0} img/s fleet (modeled)",
-        fp.replicas, fp.replicas, fp.per_replica.images_per_sec, fp.fleet_img_s
+        "  fleet: {:.0} img/s modeled across {} replicas, {:.3} W static for the mix",
+        fp.fleet_img_s,
+        fp.replicas(),
+        fp.static_w
     );
-    let (dsp, lut) = fp.pressure();
-    println!("  fleet pressure on the undivided part: DSP {:.1}%, LUT {:.1}%", dsp * 100.0, lut * 100.0);
 
-    println!("\n== 2. deploy: persistent pipelines, shared weights ==");
+    println!("\n== 2. deploy: persistent pipelines, shared weights, per-group plans ==");
     let weights = Weights::random(&model, 42);
-    let server = Server::start(fp.deploy(model.clone(), weights.clone()), &ServeConfig::default());
-    println!("  {} replica pipelines up ({} layer workers each)", fp.replicas, model.layers.len());
+    let replicas = fp.deploy(model.clone(), weights.clone());
+    let server = Server::start_grouped(
+        replicas,
+        fp.replica_groups(),
+        fp.group_labels(),
+        &ServeConfig::default(),
+    );
+    println!(
+        "  {} replica pipelines up across {} device groups ({} layer workers each)",
+        fp.replicas(),
+        fp.groups.len(),
+        model.layers.len()
+    );
 
-    println!("\n== 3. open-loop traffic with admission control ==");
+    println!("\n== 3. open-loop traffic, throughput-weighted dispatch ==");
     let corpus: Vec<Vec<i64>> =
         Dataset::generate(32, 7, 16, 16).images.iter().map(|i| i.pix.clone()).collect();
     let references: Vec<Vec<i64>> =
@@ -58,13 +93,16 @@ fn main() {
         "  sustained {:.0} img/s, latency p50 {:.2} ms / p95 {:.2} ms / p99 {:.2} ms, queue peak {}",
         snap.sustained_img_s, snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.queue_peak
     );
-    for (ri, r) in snap.replicas.iter().enumerate() {
+    for g in &snap.groups {
         println!(
-            "  replica {ri}: {} images in {} micro-batches ({:.1}% busy)",
-            r.images,
-            r.batches,
-            r.utilization * 100.0
+            "  {}: {} images over {} replica(s) ({:.1}% busy), p99 {:.2} ms, in-flight peak {}",
+            g.label,
+            g.images,
+            g.replicas,
+            g.utilization * 100.0,
+            g.p99_ms,
+            g.in_flight_peak
         );
     }
-    assert_eq!(wrong, 0, "serving path must stay bit-exact");
+    assert_eq!(wrong, 0, "serving path must stay bit-exact across device groups");
 }

@@ -45,10 +45,12 @@ impl Device {
     /// the whole device because each capacity is floor-divided. Static
     /// power is split too so per-replica power reports stay meaningful;
     /// the speed grade is a property of the silicon and is not divided.
+    /// The degenerate `shard(1)` is the whole part and keeps its name, so
+    /// single-replica fleet reports and plan memo keys don't churn.
     pub fn shard(&self, n: u64) -> Device {
         let n = n.max(1);
         Device {
-            name: format!("{}/{n}", self.name),
+            name: if n == 1 { self.name.clone() } else { format!("{}/{n}", self.name) },
             part: self.part.clone(),
             luts: self.luts / n,
             ffs: self.ffs / n,
@@ -179,6 +181,21 @@ mod tests {
     }
 
     #[test]
+    fn json_roundtrip_survives_serialized_text() {
+        // Property over the built-in catalog: to_json → render → parse →
+        // from_json is the identity, including shards (what `--catalog`
+        // files and fleet reports actually round-trip through).
+        for d in catalog() {
+            for n in [1u64, 2, 3, 7] {
+                let s = d.shard(n);
+                let text = s.to_json().to_string();
+                let back = Device::from_json(&Json::parse(&text).unwrap()).unwrap();
+                assert_eq!(back, s, "{} shard({n})", d.name);
+            }
+        }
+    }
+
+    #[test]
     fn load_catalog_from_text() {
         let text = r#"[{"name":"custom","part":"x1","luts":1000,"ffs":2000,"clbs":125,
                         "dsps":8,"bram18":4,"static_w":0.1,"speed_derate":1.3}]"#;
@@ -186,6 +203,51 @@ mod tests {
         assert_eq!(devs.len(), 1);
         assert_eq!(devs[0].dsps, 8);
         assert!((devs[0].speed_derate - 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_catalog_error_paths() {
+        // Non-array root.
+        let e = load_catalog(r#"{"name":"x"}"#).unwrap_err();
+        assert!(e.to_string().contains("array"), "{e}");
+        // Missing field: the error names the absent key.
+        let e = load_catalog(r#"[{"name":"x","part":"p","luts":10,"ffs":20,"clbs":2,"dsps":1,"bram18":1}]"#)
+            .unwrap_err();
+        assert!(e.to_string().contains("static_w"), "{e}");
+        // Wrong type for a numeric field.
+        let e = load_catalog(
+            r#"[{"name":"x","part":"p","luts":"many","ffs":20,"clbs":2,"dsps":1,"bram18":1,"static_w":0.1}]"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("number"), "{e}");
+        // Not JSON at all.
+        assert!(load_catalog("not json").is_err());
+        // Empty array is a valid (empty) catalog.
+        assert_eq!(load_catalog("[]").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn by_name_mixed_case_hit_and_miss() {
+        // Lookups are case-insensitive over both the short name and the
+        // full part string.
+        for q in ["zcu104", "ZCU104", "ZcU104", "xCZU7Ev-2ffVC1156"] {
+            assert_eq!(by_name(q).unwrap().name, "zcu104", "query '{q}'");
+        }
+        for q in ["zcu104x", "xczu7ev", "", " zcu104"] {
+            assert!(by_name(q).is_none(), "query '{q}' must miss");
+        }
+    }
+
+    #[test]
+    fn shard_one_keeps_name_and_budget() {
+        let d = by_name("zcu104").unwrap();
+        let s1 = d.shard(1);
+        assert_eq!(s1, d, "shard(1) is the whole part, name included");
+        let s3 = d.shard(3);
+        assert_eq!(s3.name, "zcu104/3");
+        assert_eq!(s3.luts, d.luts / 3);
+        assert!((s3.static_w - d.static_w / 3.0).abs() < 1e-12);
+        assert_eq!(s3.speed_derate, d.speed_derate);
     }
 
     #[test]

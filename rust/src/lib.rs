@@ -35,11 +35,14 @@
 //!   by bounded channels, shared by every caller — with per-layer
 //!   metrics keyed off the plan.
 //! * [`serve`] — the traffic-scale serving tier (`acf serve`): a fleet
-//!   planner that replicates the whole network under divided device
-//!   budgets, a request scheduler with a bounded admission queue,
-//!   micro-batching and least-loaded dispatch, fleet metrics
-//!   (p50/p95/p99 latency, sustained throughput, per-replica
-//!   utilization), and an open-loop synthetic load generator.
+//!   planner that replicates the whole network across a *heterogeneous
+//!   device catalog* (one replica group per part, each under divided
+//!   budgets with per-replica coefficient BRAM charged off the top), a
+//!   request scheduler with a bounded admission queue, per-replica
+//!   micro-batch clamps and throughput-weighted dispatch, fleet metrics
+//!   (p50/p95/p99 latency, sustained throughput, per-replica and
+//!   per-device-group utilization), and an open-loop synthetic load
+//!   generator.
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   model used as the golden numeric reference (behind the `xla` cargo
 //!   feature; a same-surface stub otherwise).

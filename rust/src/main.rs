@@ -313,12 +313,19 @@ fn cmd_serve(argv: &[String]) -> i32 {
         default: Some("lenet-tiny"),
     });
     specs.push(OptSpec { name: "policy", value: true, help: "adaptive|dsp-first|quantize-first|static-single", default: Some("adaptive") });
-    specs.push(OptSpec { name: "replicas", value: true, help: "replica count, or 'auto' to search", default: Some("auto") });
-    specs.push(OptSpec { name: "max-replicas", value: true, help: "ceiling for the replica search", default: Some("8") });
-    specs.push(OptSpec { name: "target-img-s", value: true, help: "throughput SLO (modeled), or 'none'", default: Some("none") });
+    specs.push(OptSpec {
+        name: "devices",
+        value: true,
+        help: "heterogeneous fleet: name[:count],... (e.g. zcu104,zu5ev:2; overrides --device/--replicas), or 'auto'",
+        default: Some("auto"),
+    });
+    specs.push(OptSpec { name: "catalog", value: true, help: "JSON device-array file extending --devices lookups, or 'none'", default: Some("none") });
+    specs.push(OptSpec { name: "replicas", value: true, help: "replica count (single-device mode), or 'auto' to search", default: Some("auto") });
+    specs.push(OptSpec { name: "max-replicas", value: true, help: "per-device ceiling for the replica search", default: Some("8") });
+    specs.push(OptSpec { name: "target-img-s", value: true, help: "throughput SLO (modeled; picks the cheapest static-power mix), or 'none'", default: Some("none") });
     specs.push(OptSpec { name: "requests", value: true, help: "open-loop request count", default: Some("512") });
     specs.push(OptSpec { name: "offered-img-s", value: true, help: "open-loop arrival rate, or 'auto' (calibrated)", default: Some("auto") });
-    specs.push(OptSpec { name: "max-batch", value: true, help: "micro-batch ceiling per dispatch", default: Some("8") });
+    specs.push(OptSpec { name: "max-batch", value: true, help: "micro-batch ceiling per dispatch (clamped per replica by modeled rate)", default: Some("8") });
     specs.push(OptSpec { name: "queue-depth", value: true, help: "bounded submission queue depth", default: Some("64") });
     specs.push(OptSpec { name: "seed", value: true, help: "weights/data/arrivals seed", default: Some("42") });
     let a = match Args::parse(argv, &specs) {
@@ -326,13 +333,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
         Err(e) => return fail(e),
     };
     if a.flag("help") {
-        print!("{}", help("acf serve", "replica-fleet serving under synthetic open-loop traffic", &specs));
+        print!("{}", help("acf serve", "device-fleet serving under synthetic open-loop traffic", &specs));
         return 0;
     }
-    let dev = match get_device(&a) {
-        Ok(d) => d,
-        Err(e) => return fail(e),
-    };
     let clock = a.get_f64("clock-mhz").unwrap().unwrap();
     let model = match parse_model(&a) {
         Ok(m) => m,
@@ -361,47 +364,99 @@ fn cmd_serve(argv: &[String]) -> i32 {
         max_batch: a.get_usize("max-batch").unwrap().unwrap(),
     };
 
-    // 1. Fleet plan: divide the device budget until the best replica
-    //    count is found (or use the forced count).
-    let fp = match forced {
-        Some(r) => acf::serve::plan_fixed_fleet(&model, &dev, clock, &policy, r as usize, target),
-        None => acf::serve::plan_fleet(&model, &dev, clock, &policy, target, max_replicas),
+    // 1. Fleet spec: either the single --device (PR 2 surface, with
+    //    --replicas as the forced count) or a heterogeneous --devices
+    //    list. Both resolve names against the --catalog JSON file first,
+    //    then the built-in catalog.
+    let extra = match a.get_or("catalog", "none") {
+        "none" | "auto" => Vec::new(),
+        path => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => return fail(format!("{path}: {e}")),
+            };
+            match device::load_catalog(&text) {
+                Ok(devs) => devs,
+                Err(e) => return fail(format!("{path}: {e}")),
+            }
+        }
     };
-    let fp = match fp {
+    let fleet_spec = match a.get_or("devices", "auto") {
+        "auto" | "none" => match acf::serve::FleetSpec::parse(a.get_or("device", "zcu104"), &extra)
+        {
+            Ok(mut s) => {
+                s.entries[0].count = forced.map(|r| r as usize);
+                s
+            }
+            Err(e) => return fail(e),
+        },
+        list => match acf::serve::FleetSpec::parse(list, &extra) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        },
+    };
+
+    // 2. Fleet plan: per-device replica frontiers composed across the
+    //    catalog (throughput-argmax, or cheapest static power under the
+    //    target SLO).
+    let fp = match acf::serve::plan_fleet_spec(&model, &fleet_spec, clock, &policy, target, max_replicas)
+    {
         Ok(fp) => fp,
         Err(e) => return fail(e),
     };
     println!(
-        "fleet plan for '{}' on {} @ {} MHz (policy {}):",
-        model.name, dev.name, clock, fp.per_replica.policy
+        "fleet plan for '{}' @ {} MHz (policy {}): {} device group(s), {} replica(s)",
+        model.name,
+        clock,
+        policy.name,
+        fp.groups.len(),
+        fp.replicas()
     );
     print!("{}", acf::report::fleet_table(&fp).plain());
-    println!("per-replica engine plan (each replica owns a 1/{} device shard):", fp.replicas);
-    print!("{}", acf::report::plan_table(&fp.per_replica).plain());
+    for g in &fp.groups {
+        println!(
+            "{} engine plan (each of {} replica(s) owns a 1/{} shard; {} RAMB18 coefficient store per replica):",
+            g.device.name, g.replicas, g.replicas, g.coef_bram18
+        );
+        print!("{}", acf::report::plan_table(&g.per_replica).plain());
+    }
     if !fp.meets_target {
         println!(
-            "warning: no replica count up to {max_replicas} meets the {:.0} img/s target; serving best effort",
+            "warning: no mix up to {max_replicas} replicas/device meets the {:.0} img/s target; serving best effort",
             fp.target_img_s.unwrap_or(0.0)
         );
     }
 
-    // 2. Deploy the fleet and precompute the corpus + reference logits
+    // 3. Deploy the fleet and precompute the corpus + reference logits
     //    (once per distinct image — responses are checked against these).
     let weights = acf::cnn::model::Weights::random(&model, seed);
     let replicas = fp.deploy(model.clone(), weights.clone());
+    let replica_groups = fp.replica_groups();
     let corpus = Dataset::generate(requests.clamp(8, 64), seed, model.in_h, model.in_w);
     let corpus: Vec<Vec<i64>> = corpus.images.iter().map(|i| i.pix.clone()).collect();
     let references: Vec<Vec<i64>> =
         corpus.iter().map(|img| acf::cnn::infer::infer(&model, &weights, img)).collect();
 
-    // 3. Calibrate single-replica host throughput (the honest basis for
+    // 4. Calibrate host throughput per device group (the honest basis for
     //    a measured replica-sum: the FPGA-clock model is not host time).
     //    Runs through the one-shot path, before any server exists.
     let cal_images: Vec<Vec<i64>> = (0..64).map(|i| corpus[i % corpus.len()].clone()).collect();
-    let t0 = std::time::Instant::now();
-    replicas[0].infer_batch(&cal_images).expect("calibration batch");
-    let single_img_s = cal_images.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
-    let replica_sum_host = single_img_s * fp.replicas as f64;
+    let mut group_img_s_host = vec![0.0f64; fp.groups.len()];
+    for (ri, dep) in replicas.iter().enumerate() {
+        let gi = replica_groups[ri];
+        if group_img_s_host[gi] > 0.0 {
+            continue; // one calibration per group — replicas within a group are identical
+        }
+        let t0 = std::time::Instant::now();
+        dep.infer_batch(&cal_images).expect("calibration batch");
+        group_img_s_host[gi] = cal_images.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    }
+    let replica_sum_host: f64 = fp
+        .groups
+        .iter()
+        .zip(&group_img_s_host)
+        .map(|(g, &img_s)| img_s * g.replicas as f64)
+        .sum();
     let offered = match a.get_f64_auto("offered-img-s") {
         Ok(Some(r)) => r,
         // Auto: offer ~90% of the calibrated host replica-sum so a healthy
@@ -410,16 +465,32 @@ fn cmd_serve(argv: &[String]) -> i32 {
         Err(e) => return fail(e),
     };
 
-    // 4. Bit-exactness: the serving path must produce exactly what the
-    //    one-shot infer_batch path (and the behavioral reference) does.
-    //    Uses a throwaway server over the same replicas so the load run's
-    //    fleet metrics stay untouched.
+    // 5. Bit-exactness: the serving path must produce exactly what every
+    //    group's one-shot infer_batch path (and the behavioral reference)
+    //    does — different per-device plans, identical logits. Uses a
+    //    throwaway server over the same replicas so the load run's fleet
+    //    metrics stay untouched.
     let sample_len = corpus.len().min(8);
     let sample = &corpus[..sample_len];
-    let batch = replicas[0].infer_batch(sample).expect("replica serves the sample");
     let mut mismatches = 0usize;
+    for (ri, dep) in replicas.iter().enumerate() {
+        if replica_groups[..ri].contains(&replica_groups[ri]) {
+            continue; // first replica of each group carries its plan
+        }
+        let batch = dep.infer_batch(sample).expect("replica serves the sample");
+        mismatches += references[..sample_len]
+            .iter()
+            .zip(&batch)
+            .filter(|(reference, b)| b != reference)
+            .count();
+    }
     {
-        let warmup = acf::serve::Server::start(replicas.clone(), &cfg);
+        let warmup = acf::serve::Server::start_grouped(
+            replicas.clone(),
+            replica_groups.clone(),
+            fp.group_labels(),
+            &cfg,
+        );
         let pendings: Vec<_> = sample
             .iter()
             .map(|img| warmup.submit_wait(img.clone()).expect("server accepting"))
@@ -427,24 +498,30 @@ fn cmd_serve(argv: &[String]) -> i32 {
         let served: Vec<Vec<i64>> =
             pendings.into_iter().map(|p| p.wait().expect("request served")).collect();
         drop(warmup.shutdown());
-        for ((reference, s), b) in references[..sample_len].iter().zip(&served).zip(&batch) {
-            if s != reference || b != reference {
-                mismatches += 1;
-            }
-        }
+        mismatches += references[..sample_len]
+            .iter()
+            .zip(&served)
+            .filter(|(reference, s)| s != reference)
+            .count();
     }
     println!(
-        "serving-path check: {}/{} logits bit-identical to infer_batch and the behavioral reference",
-        sample_len - mismatches,
+        "serving-path check: {} mismatches across {} device group(s) x {} sample images (scheduled + one-shot vs behavioral reference)",
+        mismatches,
+        fp.groups.len(),
         sample_len
     );
 
-    // 5. Open-loop load against a fresh server (clean metrics clock).
+    // 6. Open-loop load against a fresh server (clean metrics clock).
     println!(
         "open loop: {} requests at {:.0} img/s offered (Poisson arrivals, seed {})",
         requests, offered, seed
     );
-    let server = acf::serve::Server::start(replicas, &cfg);
+    let server = acf::serve::Server::start_grouped(
+        replicas,
+        replica_groups,
+        fp.group_labels(),
+        &cfg,
+    );
     let outcomes = acf::serve::open_loop(&server, &corpus, requests, offered, seed ^ 0x5E21);
     let mut load_mismatches = 0usize;
     let mut failures = 0usize;
@@ -461,8 +538,10 @@ fn cmd_serve(argv: &[String]) -> i32 {
     }
     let snap = server.shutdown();
 
-    // 6. Report.
+    // 7. Report: per device group first (the heterogeneous view), then
+    //    per replica.
     println!("\nmeasured fleet (host wall time; behavioral layer models):");
+    print!("{}", acf::report::serve_group_table(&snap).plain());
     print!("{}", acf::report::serve_table(&snap).plain());
     println!(
         "  requests: {} accepted, {} rejected (admission control), {} failed, queue peak {}",
@@ -473,16 +552,20 @@ fn cmd_serve(argv: &[String]) -> i32 {
         snap.p50_ms, snap.p95_ms, snap.p99_ms, snap.mean_ms
     );
     println!(
-        "  throughput: {:.0} img/s sustained (measured, host) vs {:.0} img/s host replica-sum ({:.0} img/s x {} replicas) — {:.2}x",
+        "  throughput: {:.0} img/s sustained (measured, host) vs {:.0} img/s host replica-sum — {:.2}x",
         snap.sustained_img_s,
         replica_sum_host,
-        single_img_s,
-        fp.replicas,
         snap.sustained_img_s / replica_sum_host.max(1e-9)
     );
+    let modeled_mix = fp
+        .groups
+        .iter()
+        .map(|g| format!("{} x{} @ {:.0}", g.device.name, g.replicas, g.per_replica.images_per_sec))
+        .collect::<Vec<_>>()
+        .join(" + ");
     println!(
-        "  modeled (FPGA @ {} MHz): {:.0} img/s fleet ({:.0} img/s x {} replicas) — the hardware this host simulation stands in for",
-        clock, fp.fleet_img_s, fp.per_replica.images_per_sec, fp.replicas
+        "  modeled (FPGA @ {} MHz): {:.0} img/s fleet ({modeled_mix}; {:.3} W static) — the hardware this host simulation stands in for",
+        clock, fp.fleet_img_s, fp.static_w
     );
     if mismatches > 0 || load_mismatches > 0 || failures > 0 {
         eprintln!(

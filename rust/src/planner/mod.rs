@@ -290,12 +290,51 @@ fn relu_site(
     })
 }
 
+/// RAMB18s one replica needs to hold the model's coefficients (conv
+/// filters + FC matrices), independent of how the device is sharded.
+///
+/// Each layer's coefficient store is modeled as its own memory (engines
+/// stream different layers concurrently, so the stores cannot share a
+/// port) sized `#coefficients × coef_bits` through the same aspect-ratio
+/// fit the line buffers use ([`crate::fabric::bram::ramb18_count`]).
+pub fn coefficient_bram18(model: &Model) -> u64 {
+    // Invalid geometry is the planner's error to report, not this
+    // helper's — without shapes an FC fan-in is unknown, so charge the
+    // conv stores only (plan() rejects the model right after anyway).
+    let shapes = model.shapes().unwrap_or_default();
+    let mut total = 0u64;
+    for (li, layer) in model.layers.iter().enumerate() {
+        let (coefs, bits) = match layer {
+            Layer::Conv { in_ch, out_ch, params, .. } => {
+                ((*in_ch as u64) * (*out_ch as u64) * u64::from(params.taps()), params.coef_bits)
+            }
+            Layer::Fc { out_dim, params, .. } if li == 0 || li <= shapes.len() => {
+                let fanin = engine::fc_in_dim(model, li, &shapes) as u64;
+                (fanin * (*out_dim as u64), params.coef_bits)
+            }
+            _ => continue,
+        };
+        let depth = coefs.clamp(1, u32::MAX as u64) as u32;
+        total += u64::from(crate::fabric::bram::ramb18_count(bits, depth));
+    }
+    total
+}
+
 /// Plan `model` under a `1/share` slice of `dev` — the primitive the
 /// serving tier's fleet planner ([`crate::serve::fleet`]) iterates to
 /// find the best replica count: each replica of a `share`-replica fleet
 /// gets an equal shard of the device and is planned exactly like a whole
 /// device (same profile → select → budget loop, same scarcity scoring).
-/// `share == 1` is identical to [`plan`].
+///
+/// BRAM is NOT divided evenly: every replica stores its own full copy of
+/// the model's coefficients ([`coefficient_bram18`]) no matter how small
+/// its shard is, so `share × coef` RAMB18s are charged off the top of the
+/// whole device and only the remainder is floor-divided among replicas
+/// (each shard budget then carries its own copy's worth back, since
+/// [`plan`] charges the coefficient store on whatever budget it is
+/// given — `share == 1` is exactly [`plan`] on the whole device). A
+/// device whose BRAM cannot hold `share` coefficient copies is
+/// infeasible at that share even if logic and DSPs would fit.
 pub fn plan_under_fraction(
     model: &Model,
     dev: &Device,
@@ -303,15 +342,37 @@ pub fn plan_under_fraction(
     policy: &Policy,
     share: u64,
 ) -> Result<Plan, PlanError> {
-    if share <= 1 {
-        return plan(model, dev, clock_mhz, policy);
+    let share = share.max(1);
+    let coef = coefficient_bram18(model);
+    let reserved = coef.saturating_mul(share);
+    if dev.bram18 < reserved {
+        return Err(PlanError::Infeasible {
+            device: dev.name.clone(),
+            reason: format!(
+                "{share} replica(s) need {reserved} RAMB18 of coefficient storage \
+                 ({coef} per replica, not divisible by sharding) but the part has {}",
+                dev.bram18
+            ),
+        });
     }
-    plan(model, &dev.shard(share), clock_mhz, policy)
+    let mut budget = dev.shard(share);
+    // Engines may spend (B - share×coef)/share; plan() re-charges this
+    // replica's own coefficient copy, so hand it back on top.
+    budget.bram18 = (dev.bram18 - reserved) / share + coef;
+    plan(model, &budget, clock_mhz, policy)
 }
 
 /// Plan `model` onto `dev` at `clock_mhz` under `policy`.
+///
+/// Feasibility charges the model's coefficient store
+/// ([`coefficient_bram18`]) against the device's BRAM on top of the
+/// engine resources, so a part that cannot hold the weights is rejected
+/// on every path — whole-device deployments and fleet shards alike.
+/// `Plan::total` stays engine-only (the coefficient store is a property
+/// of the model, reported separately by the serving tier's group bills).
 pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Result<Plan, PlanError> {
     let sites = engine_sites(model, dev, clock_mhz, policy)?;
+    let coef_bram = coefficient_bram18(model);
 
     // Feasibility of a target (images/cycle); returns the assignment.
     let eval = |target: f64| -> Option<(Vec<EnginePlan>, Utilization)> {
@@ -345,7 +406,9 @@ pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Res
             total = total.plus(&ep.util);
             engines.push(ep);
         }
-        if total.fits(dev) {
+        let mut charged = total;
+        charged.bram18 += coef_bram;
+        if charged.fits(dev) {
             Some((engines, total))
         } else {
             None
@@ -355,7 +418,10 @@ pub fn plan(model: &Model, dev: &Device, clock_mhz: f64, policy: &Policy) -> Res
     if eval(1e-9).is_none() {
         return Err(PlanError::Infeasible {
             device: dev.name.clone(),
-            reason: "even one instance per engine site exceeds the device".into(),
+            reason: format!(
+                "even one instance per engine site (plus {coef_bram} RAMB18 of \
+                 coefficient storage) exceeds the device"
+            ),
         });
     }
     let mut lo = 1e-9f64;
@@ -511,6 +577,42 @@ mod tests {
         let one = plan_under_fraction(&m, &dev, 200.0, &Policy::adaptive(), 1).unwrap();
         assert_eq!(one.device.name, whole.device.name);
         assert!((one.images_per_sec - whole.images_per_sec).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coefficient_bram_counts_every_weighted_layer() {
+        let m = Model::lenet_tiny();
+        // conv0: 1×4×9 = 36 coefs, conv1: 4×8×9 = 288, fc: 32×10 = 320 —
+        // each 8-bit store fits one RAMB18 (9×2048 aspect), one per layer.
+        assert_eq!(coefficient_bram18(&m), 3);
+        // Wider layers need more coefficient storage, never less.
+        let wide = Model::lenet_wide(4);
+        assert!(coefficient_bram18(&wide) >= coefficient_bram18(&m));
+    }
+
+    #[test]
+    fn sharding_reserves_coefficient_bram_off_the_top() {
+        let m = Model::lenet_tiny();
+        let coef = coefficient_bram18(&m);
+        assert!(coef > 0);
+        // A part with plenty of logic but BRAM for only one coefficient
+        // copy: share=1 plans, share=2 is rejected — the shard math used
+        // to floor-divide BRAM as if coefficients shrank with the shard.
+        let mut dev = by_name("zcu104").unwrap();
+        dev.bram18 = coef + 1;
+        assert!(plan_under_fraction(&m, &dev, 200.0, &Policy::adaptive(), 1).is_ok());
+        let err = plan_under_fraction(&m, &dev, 200.0, &Policy::adaptive(), 2).unwrap_err();
+        assert!(err.to_string().contains("coefficient"), "{err}");
+        // share=1 hands the whole budget through — identical to plan().
+        let p = plan_under_fraction(&m, &dev, 200.0, &Policy::adaptive(), 1).unwrap();
+        assert_eq!(p.device.name, "zcu104");
+        assert_eq!(p.device.bram18, coef + 1);
+        // plan() itself charges the coefficient store, so the non-serve
+        // path gives the same verdict: BRAM below one copy rejects.
+        dev.bram18 = coef - 1;
+        let err = plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap_err();
+        assert!(err.to_string().contains("coefficient"), "{err}");
+        assert!(plan_under_fraction(&m, &dev, 200.0, &Policy::adaptive(), 1).is_err());
     }
 
     #[test]

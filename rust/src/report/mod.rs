@@ -13,8 +13,10 @@
 //! * [`plan_table`] — the unified engine-plan report: one row per planned
 //!   engine (conv, FC, max-pool, fused ReLU) with instances, work,
 //!   cycles, and resources.
-//! * [`fleet_table`] / [`serve_table`] — the serving tier's
-//!   modeled-fleet and measured-fleet reports (`acf serve`).
+//! * [`fleet_table`] / [`serve_table`] / [`serve_group_table`] — the
+//!   serving tier's modeled-fleet and measured-fleet reports
+//!   (`acf serve`), broken out per device group for heterogeneous
+//!   fleets.
 
 use crate::cnn::model::{Layer, Model};
 use crate::fabric::device::{by_name, catalog, Device};
@@ -144,30 +146,47 @@ pub fn plan_table(plan: &Plan) -> Table {
     t
 }
 
-/// The fleet-plan report: how one device budget was split into replicas,
-/// with modeled per-replica and replica-sum throughput and fleet
-/// utilization against the *undivided* part.
+/// The fleet-plan report: one row per device group (how each part was
+/// split into replicas, its modeled throughput, its pressure against the
+/// *undivided* part, and its coefficient-inclusive BRAM bill), plus a
+/// fleet totals row carrying the replica sum, the modeled static power of
+/// the mix, and the SLO verdict.
 pub fn fleet_table(fp: &FleetPlan) -> Table {
     let mut t = Table::new(vec![
+        "device",
         "replicas",
         "img/s per replica",
-        "img/s fleet (modeled)",
-        "LUTs fleet",
-        "DSPs fleet",
+        "img/s group (modeled)",
         "LUT %",
         "DSP %",
+        "BRAM18 (incl. coef)",
+        "static W",
         "meets SLO",
     ])
     .numeric();
-    let (dsp, lut) = fp.pressure();
+    for g in &fp.groups {
+        let (dsp, lut) = g.pressure();
+        t.row(vec![
+            g.device.name.clone(),
+            g.replicas.to_string(),
+            format!("{:.0}", g.per_replica.images_per_sec),
+            format!("{:.0}", g.group_img_s),
+            format!("{:.1}", lut * 100.0),
+            format!("{:.1}", dsp * 100.0),
+            format!("{}/{}", g.total.bram18, g.device.bram18),
+            format!("{:.3}", g.device.static_w),
+            "".into(),
+        ]);
+    }
     t.row(vec![
-        fp.replicas.to_string(),
-        format!("{:.0}", fp.per_replica.images_per_sec),
+        "fleet".into(),
+        fp.replicas().to_string(),
+        "".into(),
         format!("{:.0}", fp.fleet_img_s),
-        fp.total.luts.to_string(),
-        fp.total.dsps.to_string(),
-        format!("{:.1}", lut * 100.0),
-        format!("{:.1}", dsp * 100.0),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{:.3}", fp.static_w),
         match fp.target_img_s {
             Some(tgt) => format!("{} (target {tgt:.0})", if fp.meets_target { "yes" } else { "NO" }),
             None => "n/a".into(),
@@ -177,21 +196,48 @@ pub fn fleet_table(fp: &FleetPlan) -> Table {
 }
 
 /// The measured serving report: one row per replica (dispatch balance and
-/// utilization). Fleet-level latency/throughput live on [`FleetSnapshot`]
-/// itself; `acf serve` prints them under this table.
+/// utilization, tagged with its device group). Fleet-level latency and
+/// throughput live on [`FleetSnapshot`] itself; `acf serve` prints them
+/// under this table.
 pub fn serve_table(snap: &FleetSnapshot) -> Table {
     let mut t = Table::new(vec![
-        "replica", "images", "batches", "img/batch", "busy s", "util %",
+        "replica", "device", "images", "batches", "img/batch", "busy s", "util %",
     ])
     .numeric();
     for (ri, r) in snap.replicas.iter().enumerate() {
+        let label = snap.groups.get(r.group).map(|g| g.label.as_str()).unwrap_or("?");
         t.row(vec![
             ri.to_string(),
+            label.to_string(),
             r.images.to_string(),
             r.batches.to_string(),
             if r.batches > 0 { format!("{:.1}", r.images as f64 / r.batches as f64) } else { "-".into() },
             format!("{:.3}", r.busy_secs),
             format!("{:.1}", r.utilization * 100.0),
+        ]);
+    }
+    t
+}
+
+/// The per-device-group serving report: measured latency quantiles,
+/// utilization, and queue pressure broken out per physical part — the
+/// view that shows which silicon is falling behind in a heterogeneous
+/// fleet.
+pub fn serve_group_table(snap: &FleetSnapshot) -> Table {
+    let mut t = Table::new(vec![
+        "device", "replicas", "images", "util %", "p50 ms", "p95 ms", "p99 ms", "in-flight peak",
+    ])
+    .numeric();
+    for g in &snap.groups {
+        t.row(vec![
+            g.label.clone(),
+            g.replicas.to_string(),
+            g.images.to_string(),
+            format!("{:.1}", g.utilization * 100.0),
+            fnum(g.p50_ms, 2),
+            fnum(g.p95_ms, 2),
+            fnum(g.p99_ms, 2),
+            g.in_flight_peak.to_string(),
         ]);
     }
     t
@@ -492,16 +538,55 @@ mod tests {
         )
         .unwrap();
         let t = fleet_table(&fp);
-        assert_eq!(t.n_rows(), 1);
-        assert_eq!(t.cell(0, 0), "2");
-        assert!(t.cell(0, 7).contains("yes"), "SLO cell: {}", t.cell(0, 7));
+        // One device group plus the fleet totals row.
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.cell(0, 0), "zcu104");
+        assert_eq!(t.cell(0, 1), "2");
+        assert_eq!(t.cell(1, 0), "fleet");
+        assert_eq!(t.cell(1, 1), "2");
+        assert!(t.cell(1, 8).contains("yes"), "SLO cell: {}", t.cell(1, 8));
+        // Coefficient BRAM shows up in the group's bill.
+        assert!(t.cell(0, 6).starts_with(&fp.groups[0].total.bram18.to_string()));
         let m = crate::serve::FleetMetrics::new(2);
         m.note_dispatched(1, 4);
         m.note_replica_batch(1, 4, std::time::Duration::from_millis(2));
-        let t = serve_table(&m.snapshot());
+        let snap = m.snapshot();
+        let t = serve_table(&snap);
         assert_eq!(t.n_rows(), 2);
-        assert_eq!(t.cell(1, 1), "4");
-        assert_eq!(t.cell(0, 3), "-");
+        assert_eq!(t.cell(1, 1), "fleet");
+        assert_eq!(t.cell(1, 2), "4");
+        assert_eq!(t.cell(0, 4), "-");
+        let t = serve_group_table(&snap);
+        assert_eq!(t.n_rows(), 1);
+        assert_eq!(t.cell(0, 0), "fleet");
+        assert_eq!(t.cell(0, 1), "2");
+        assert_eq!(t.cell(0, 2), "4");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_table_has_one_row_per_device() {
+        let spec = crate::serve::FleetSpec {
+            entries: vec![
+                crate::serve::FleetEntry { device: by_name("zcu104").unwrap(), count: Some(1) },
+                crate::serve::FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
+            ],
+        };
+        let fp = crate::serve::plan_fleet_spec(
+            &Model::lenet_tiny(),
+            &spec,
+            200.0,
+            &Policy::adaptive(),
+            None,
+            2,
+        )
+        .unwrap();
+        let t = fleet_table(&fp);
+        assert_eq!(t.n_rows(), 3);
+        assert_eq!(t.cell(0, 0), "zcu104");
+        assert_eq!(t.cell(1, 0), "zu5ev");
+        assert_eq!(t.cell(2, 0), "fleet");
+        assert_eq!(t.cell(2, 1), "2");
+        assert_eq!(t.cell(2, 8), "n/a");
     }
 
     #[test]

@@ -1,39 +1,142 @@
-//! Fleet planning: turn one device budget into a multi-replica serving
+//! Fleet planning: turn a *catalog* of device budgets into a serving
 //! fleet by running the resource-driven planner under divided budgets.
 //!
-//! This is the paper's scarcity logic lifted one level up: instead of
-//! asking "which engine fits this layer under the device budget?", the
-//! fleet planner asks "how many whole copies of the planned network fit
-//! this device, and which copy count maximizes fleet throughput (or is
-//! the largest one still meeting a target SLO)?". Each candidate count
-//! `r` plans one replica against an equal `1/r` device shard
-//! ([`crate::fabric::device::Device::shard`]); `r` such replicas are
-//! guaranteed to fit the whole part, and modeled fleet throughput is the
-//! replica-sum `r × images_per_sec`.
+//! This is the paper's scarcity logic lifted two levels up. PR 2 asked
+//! "how many whole copies of the planned network fit ONE device?"; real
+//! edge deployments mix parts with very different DSP/LUT/BRAM balances,
+//! so the fleet planner now takes a [`FleetSpec`] — a list of
+//! `(Device, forced count?)` entries, one per physical part — and plans a
+//! *replica group* per device:
+//!
+//! 1. **Per-device frontier.** For each device, the monotone shard scan
+//!    from PR 2 builds the count → plan frontier: candidate count `r`
+//!    plans one replica against an equal `1/r` shard
+//!    ([`crate::fabric::device::Device::shard`]), with the model's
+//!    coefficient BRAM charged off the top *per replica* (weights do not
+//!    shrink with the shard — [`crate::planner::coefficient_bram18`]).
+//!    The scan stops at the first infeasible count.
+//! 2. **Cross-device composition.** Each device contributes its
+//!    throughput-argmax count. Without a target the fleet is every
+//!    listed device at that count (throughput is additive across parts).
+//!    Under `--target-img-s` the composition instead minimizes modeled
+//!    static power: forced entries are always kept, optional devices are
+//!    added greedily by throughput-per-static-watt until the target is
+//!    met, then a drop pass removes any device the target can spare.
+//!
+//! Replicas on different parts legitimately run *different* plans — the
+//! same per-layer IP substitutions the paper's Table III sweeps show
+//! across resource envelopes, now live inside one fleet.
 
 use crate::cnn::model::{Model, Weights};
 use crate::coordinator::Deployment;
-use crate::fabric::device::Device;
-use crate::planner::{plan_under_fraction, Plan, PlanError, Policy};
+use crate::fabric::device::{by_name, Device};
+use crate::planner::{coefficient_bram18, plan_under_fraction, Plan, PlanError, Policy};
 use crate::synth::Utilization;
 use std::sync::Arc;
 
-/// Default ceiling on the replica search (CLI `--max-replicas` raises it).
+/// Default ceiling on the per-device replica search (CLI `--max-replicas`
+/// raises it).
 pub const DEFAULT_MAX_REPLICAS: usize = 8;
 
-/// A planned serving fleet: `replicas` identical copies of `per_replica`,
-/// each owning an equal shard of `device`.
+/// One requested fleet member: a physical part, optionally pinned to an
+/// exact replica count (`None` = search `1..=max_replicas`).
+#[derive(Debug, Clone)]
+pub struct FleetEntry {
+    pub device: Device,
+    pub count: Option<usize>,
+}
+
+/// What the fleet should be built from: one entry per physical part.
+/// Listing the same part twice means two boards, each its own group.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub entries: Vec<FleetEntry>,
+}
+
+impl FleetSpec {
+    /// A one-device spec (the PR 2 surface).
+    pub fn single(device: Device, count: Option<usize>) -> FleetSpec {
+        FleetSpec { entries: vec![FleetEntry { device, count }] }
+    }
+
+    /// Parse the CLI form `name[:count],name[:count],...` (e.g.
+    /// `zcu104,zu5ev:2`). Names resolve against `extra` (a `--catalog`
+    /// file, case-insensitive on name or part) first, then the built-in
+    /// catalog.
+    pub fn parse(spec: &str, extra: &[Device]) -> Result<FleetSpec, String> {
+        let mut entries = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (name, count) = match item.split_once(':') {
+                Some((n, c)) => {
+                    let count: usize = c
+                        .parse()
+                        .map_err(|_| format!("bad replica count '{c}' in '{item}'"))?;
+                    if count == 0 {
+                        return Err(format!("replica count must be >= 1 in '{item}'"));
+                    }
+                    (n, Some(count))
+                }
+                None => (item, None),
+            };
+            let lower = name.to_ascii_lowercase();
+            let device = extra
+                .iter()
+                .find(|d| d.name.to_ascii_lowercase() == lower || d.part.to_ascii_lowercase() == lower)
+                .cloned()
+                .or_else(|| by_name(name))
+                .ok_or_else(|| format!("unknown device '{name}' (not in --catalog or built-ins)"))?;
+            entries.push(FleetEntry { device, count });
+        }
+        if entries.is_empty() {
+            return Err("empty device list".into());
+        }
+        Ok(FleetSpec { entries })
+    }
+}
+
+/// One device's replica group inside a planned fleet.
+#[derive(Debug, Clone)]
+pub struct GroupPlan {
+    /// The undivided physical part this group runs on.
+    pub device: Device,
+    pub replicas: usize,
+    /// The plan every replica of this group deploys (made against
+    /// `device.shard(replicas)` with per-replica coefficient BRAM
+    /// reserved off the top).
+    pub per_replica: Plan,
+    /// RAMB18s of coefficient storage *per replica* (does not shrink with
+    /// the shard).
+    pub coef_bram18: u64,
+    /// Whole-group utilization on the undivided part: `replicas ×`
+    /// (engine resources + coefficient store).
+    pub total: Utilization,
+    /// Modeled replica-sum throughput of this group.
+    pub group_img_s: f64,
+}
+
+impl GroupPlan {
+    /// Group pressure on its undivided device: (DSP fraction, LUT fraction).
+    pub fn pressure(&self) -> (f64, f64) {
+        (self.device.dsp_util(self.total.dsps), self.device.lut_util(self.total.luts))
+    }
+}
+
+/// A planned serving fleet: one replica group per device, each group
+/// running its own plan.
 #[derive(Debug, Clone)]
 pub struct FleetPlan {
-    pub device: Device,
     pub clock_mhz: f64,
-    pub replicas: usize,
-    /// The plan every replica deploys (made against `device.shard(replicas)`).
-    pub per_replica: Plan,
-    /// Whole-fleet utilization (`replicas ×` the per-replica total).
-    pub total: Utilization,
-    /// Modeled replica-sum throughput: `replicas × per_replica.images_per_sec`.
+    pub groups: Vec<GroupPlan>,
+    /// Modeled fleet throughput: the sum over groups (throughput is
+    /// additive across physical parts).
     pub fleet_img_s: f64,
+    /// Modeled static power of the mix: one full `static_w` per included
+    /// part (a powered part burns its static power whatever its shard).
+    pub static_w: f64,
     /// The SLO the search was asked to meet, if any.
     pub target_img_s: Option<f64>,
     /// Whether `fleet_img_s` meets `target_img_s` (true when no target).
@@ -41,31 +144,234 @@ pub struct FleetPlan {
 }
 
 impl FleetPlan {
-    /// Fleet pressure on the undivided device: (DSP fraction, LUT fraction).
-    pub fn pressure(&self) -> (f64, f64) {
-        (self.device.dsp_util(self.total.dsps), self.device.lut_util(self.total.luts))
+    /// Total replica count across all device groups.
+    pub fn replicas(&self) -> usize {
+        self.groups.iter().map(|g| g.replicas).sum()
     }
 
-    /// Deploy the fleet: `replicas` persistent pipelines sharing one
-    /// model and one weight set.
+    /// Device-group index of each replica, group-major — the same order
+    /// [`FleetPlan::deploy`] emits replicas in (what
+    /// [`crate::serve::Server::start_grouped`] consumes).
+    pub fn replica_groups(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.replicas());
+        for (gi, g) in self.groups.iter().enumerate() {
+            for _ in 0..g.replicas {
+                out.push(gi);
+            }
+        }
+        out
+    }
+
+    /// Display label per device group (the part's name).
+    pub fn group_labels(&self) -> Vec<String> {
+        self.groups.iter().map(|g| g.device.name.clone()).collect()
+    }
+
+    /// Deploy the fleet: one persistent pipeline per replica, group-major
+    /// order, all sharing one model and one weight set. Replicas of
+    /// different groups run different plans.
     pub fn deploy(&self, model: Model, weights: Weights) -> Vec<Arc<Deployment>> {
         let model = Arc::new(model);
         let weights = Arc::new(weights);
-        (0..self.replicas)
-            .map(|_| {
-                Arc::new(Deployment::with_plan(
+        let mut out = Vec::with_capacity(self.replicas());
+        for g in &self.groups {
+            for _ in 0..g.replicas {
+                out.push(Arc::new(Deployment::with_plan(
                     Arc::clone(&model),
                     Arc::clone(&weights),
-                    self.per_replica.clone(),
-                ))
-            })
-            .collect()
+                    g.per_replica.clone(),
+                )));
+            }
+        }
+        out
     }
 }
 
-/// Plan a fleet of exactly `replicas` copies (the CLI's `--replicas`
-/// override). Errors if one replica cannot be planned under `1/replicas`
-/// of the device.
+/// Plan one device's replica group at an exact count. Errors if one
+/// replica cannot be planned under `1/count` of the device (including
+/// when the part's BRAM cannot hold `count` coefficient copies).
+fn plan_group(
+    model: &Model,
+    dev: &Device,
+    clock_mhz: f64,
+    policy: &Policy,
+    count: usize,
+) -> Result<GroupPlan, PlanError> {
+    let r = count.max(1);
+    let per_replica = plan_under_fraction(model, dev, clock_mhz, policy, r as u64)?;
+    let coef = coefficient_bram18(model);
+    let mut total = per_replica.total.times(r as u64);
+    total.bram18 += coef * r as u64;
+    Ok(GroupPlan {
+        device: dev.clone(),
+        replicas: r,
+        group_img_s: r as f64 * per_replica.images_per_sec,
+        coef_bram18: coef,
+        per_replica,
+        total,
+    })
+}
+
+/// Build one device's count frontier: candidates at `1..=max` (or exactly
+/// the forced count), stopping at the first infeasible count — shards
+/// only shrink as `r` grows, so feasibility is monotone.
+fn group_frontier(
+    model: &Model,
+    dev: &Device,
+    clock_mhz: f64,
+    policy: &Policy,
+    forced: Option<usize>,
+    max_replicas: usize,
+) -> Result<Vec<GroupPlan>, PlanError> {
+    if let Some(r) = forced {
+        return Ok(vec![plan_group(model, dev, clock_mhz, policy, r)?]);
+    }
+    let mut out = Vec::new();
+    let mut first_err: Option<PlanError> = None;
+    for r in 1..=max_replicas.max(1) {
+        match plan_group(model, dev, clock_mhz, policy, r) {
+            Ok(g) => out.push(g),
+            Err(e) => {
+                first_err = Some(e);
+                break;
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(first_err.expect("loop ran at least once"));
+    }
+    Ok(out)
+}
+
+/// The throughput-argmax candidate of a frontier (ties go to more
+/// replicas — more concurrent request capacity at the same rate).
+fn best_of(frontier: &[GroupPlan]) -> &GroupPlan {
+    frontier
+        .iter()
+        .max_by(|a, b| {
+            (a.group_img_s, a.replicas)
+                .partial_cmp(&(b.group_img_s, b.replicas))
+                .expect("throughput is finite")
+        })
+        .expect("frontier is non-empty")
+}
+
+/// Plan a heterogeneous fleet across `spec`'s devices.
+///
+/// Without a target: every listed device serves at its throughput-argmax
+/// replica count — throughput is additive across parts, so the per-device
+/// argmax composes to the fleet argmax. Devices that cannot carry even
+/// one replica are skipped (unless their count was forced, which is an
+/// error); if no device can, the first planning error is returned.
+///
+/// With `target_img_s`: the cheapest modeled-static-power mix meeting the
+/// target. Forced entries are always included at their forced count;
+/// optional devices are added greedily by modeled throughput per static
+/// watt until the target is met, then a drop pass removes (most power-
+/// hungry first) any optional device the target can spare. If even the
+/// full mix falls short, everything is included and `meets_target` is
+/// `false` so the caller can degrade explicitly instead of silently.
+pub fn plan_fleet_spec(
+    model: &Model,
+    spec: &FleetSpec,
+    clock_mhz: f64,
+    policy: &Policy,
+    target_img_s: Option<f64>,
+    max_replicas: usize,
+) -> Result<FleetPlan, PlanError> {
+    assert!(!spec.entries.is_empty(), "a fleet spec needs at least one device");
+    // Per-device argmax candidates, in spec order.
+    let mut candidates: Vec<(GroupPlan, bool)> = Vec::new(); // (group, forced?)
+    let mut first_err: Option<PlanError> = None;
+    for entry in &spec.entries {
+        match group_frontier(model, &entry.device, clock_mhz, policy, entry.count, max_replicas) {
+            Ok(frontier) => candidates.push((best_of(&frontier).clone(), entry.count.is_some())),
+            // A forced count that cannot plan is the caller's mistake; an
+            // unforced device that fits nothing just sits the fleet out.
+            Err(e) if entry.count.is_some() => return Err(e),
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    if candidates.is_empty() {
+        return Err(first_err.expect("at least one entry failed"));
+    }
+
+    let chosen: Vec<GroupPlan> = match target_img_s {
+        None => candidates.into_iter().map(|(g, _)| g).collect(),
+        Some(target) => {
+            let mut included: Vec<(GroupPlan, bool)> = Vec::new();
+            let mut optional: Vec<GroupPlan> = Vec::new();
+            for (g, forced) in candidates {
+                if forced {
+                    included.push((g, true));
+                } else {
+                    optional.push(g);
+                }
+            }
+            // Greedy add by throughput per static watt. A fleet is never
+            // empty: with no forced entries at least one optional group
+            // joins, whatever the target.
+            optional.sort_by(|a, b| {
+                let ea = a.group_img_s / a.device.static_w.max(1e-12);
+                let eb = b.group_img_s / b.device.static_w.max(1e-12);
+                eb.partial_cmp(&ea).expect("efficiency is finite")
+            });
+            let sum = |v: &[(GroupPlan, bool)]| v.iter().map(|(g, _)| g.group_img_s).sum::<f64>();
+            let mut optional = optional.into_iter();
+            while included.is_empty() || sum(&included) < target {
+                match optional.next() {
+                    Some(g) => included.push((g, false)),
+                    None => break,
+                }
+            }
+            // Drop pass: shed the most power-hungry optional groups the
+            // target can spare (greedy add can overshoot).
+            let mut order: Vec<usize> = (0..included.len()).filter(|&i| !included[i].1).collect();
+            order.sort_by(|&i, &j| {
+                included[j]
+                    .0
+                    .device
+                    .static_w
+                    .partial_cmp(&included[i].0.device.static_w)
+                    .expect("power is finite")
+            });
+            let mut dropped = vec![false; included.len()];
+            let mut live = sum(&included);
+            let mut kept = included.len();
+            for i in order {
+                // Never shed the last group: a degenerate (e.g. zero)
+                // target still gets a serving fleet.
+                if kept > 1 && live - included[i].0.group_img_s >= target {
+                    live -= included[i].0.group_img_s;
+                    dropped[i] = true;
+                    kept -= 1;
+                }
+            }
+            included
+                .into_iter()
+                .zip(dropped)
+                .filter(|(_, d)| !d)
+                .map(|((g, _), _)| g)
+                .collect()
+        }
+    };
+    assert!(!chosen.is_empty(), "composition keeps at least one group");
+
+    let fleet_img_s = chosen.iter().map(|g| g.group_img_s).sum::<f64>();
+    let static_w = chosen.iter().map(|g| g.device.static_w).sum::<f64>();
+    Ok(FleetPlan {
+        clock_mhz,
+        groups: chosen,
+        fleet_img_s,
+        static_w,
+        target_img_s,
+        meets_target: target_img_s.map(|t| fleet_img_s >= t).unwrap_or(true),
+    })
+}
+
+/// Plan a single-device fleet of exactly `replicas` copies (the CLI's
+/// `--replicas` override). Errors if one replica cannot be planned under
+/// `1/replicas` of the device.
 pub fn plan_fixed_fleet(
     model: &Model,
     dev: &Device,
@@ -74,31 +380,12 @@ pub fn plan_fixed_fleet(
     replicas: usize,
     target_img_s: Option<f64>,
 ) -> Result<FleetPlan, PlanError> {
-    let r = replicas.max(1);
-    let per_replica = plan_under_fraction(model, dev, clock_mhz, policy, r as u64)?;
-    let fleet_img_s = r as f64 * per_replica.images_per_sec;
-    Ok(FleetPlan {
-        device: dev.clone(),
-        clock_mhz,
-        replicas: r,
-        total: per_replica.total.times(r as u64),
-        fleet_img_s,
-        target_img_s,
-        meets_target: target_img_s.map(|t| fleet_img_s >= t).unwrap_or(true),
-        per_replica,
-    })
+    let spec = FleetSpec::single(dev.clone(), Some(replicas.max(1)));
+    plan_fleet_spec(model, &spec, clock_mhz, policy, target_img_s, replicas.max(1))
 }
 
-/// Search replica counts `1..=max_replicas` for the best fleet.
-///
-/// With a `target_img_s` SLO: the *largest* replica count whose modeled
-/// replica-sum throughput still meets the target (more replicas = more
-/// concurrent request capacity at the same SLO); if no count meets it,
-/// the highest-throughput fleet is returned with `meets_target == false`
-/// so the caller can degrade explicitly instead of silently. Without a
-/// target: the count maximizing modeled fleet throughput (ties go to more
-/// replicas). The scan stops at the first infeasible count — shards only
-/// shrink as `r` grows, so feasibility is monotone.
+/// Search replica counts `1..=max_replicas` for the best single-device
+/// fleet (the PR 2 surface; a one-entry [`plan_fleet_spec`]).
 pub fn plan_fleet(
     model: &Model,
     dev: &Device,
@@ -107,37 +394,8 @@ pub fn plan_fleet(
     target_img_s: Option<f64>,
     max_replicas: usize,
 ) -> Result<FleetPlan, PlanError> {
-    let mut candidates: Vec<FleetPlan> = Vec::new();
-    let mut first_err: Option<PlanError> = None;
-    for r in 1..=max_replicas.max(1) {
-        match plan_fixed_fleet(model, dev, clock_mhz, policy, r, target_img_s) {
-            Ok(fp) => candidates.push(fp),
-            Err(e) => {
-                first_err = Some(e);
-                break;
-            }
-        }
-    }
-    if candidates.is_empty() {
-        return Err(first_err.expect("loop ran at least once"));
-    }
-    let fastest = candidates
-        .iter()
-        .max_by(|a, b| {
-            (a.fleet_img_s, a.replicas)
-                .partial_cmp(&(b.fleet_img_s, b.replicas))
-                .expect("throughput is finite")
-        })
-        .expect("non-empty");
-    let pick = match target_img_s {
-        // SLO: the largest count still meeting it; none meets ⇒ the
-        // fastest fleet, flagged `meets_target == false`.
-        Some(_) => candidates.iter().rev().find(|fp| fp.meets_target).unwrap_or(fastest),
-        // No SLO: maximize modeled fleet throughput (ties → more
-        // replicas, i.e. more concurrent request capacity).
-        None => fastest,
-    };
-    Ok(pick.clone())
+    let spec = FleetSpec::single(dev.clone(), None);
+    plan_fleet_spec(model, &spec, clock_mhz, policy, target_img_s, max_replicas)
 }
 
 #[cfg(test)]
@@ -145,17 +403,22 @@ mod tests {
     use super::*;
     use crate::fabric::device::by_name;
 
+    fn adaptive() -> Policy {
+        Policy::adaptive()
+    }
+
     #[test]
     fn lenet_tiny_on_zcu104_replicates() {
         let m = Model::lenet_tiny();
         let dev = by_name("zcu104").unwrap();
-        let fp =
-            plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, DEFAULT_MAX_REPLICAS).unwrap();
+        let fp = plan_fleet(&m, &dev, 200.0, &adaptive(), None, DEFAULT_MAX_REPLICAS).unwrap();
+        assert_eq!(fp.groups.len(), 1);
+        let g = &fp.groups[0];
         // The acceptance bar: the default device carries at least two
         // replicas, and the fleet out-models a single whole-device plan.
-        assert!(fp.replicas >= 2, "only {} replica(s)", fp.replicas);
-        assert!(fp.total.fits(&dev), "fleet must fit the undivided device");
-        let single = crate::planner::plan(&m, &dev, 200.0, &Policy::adaptive()).unwrap();
+        assert!(g.replicas >= 2, "only {} replica(s)", g.replicas);
+        assert!(g.total.fits(&dev), "group must fit the undivided device");
+        let single = crate::planner::plan(&m, &dev, 200.0, &adaptive()).unwrap();
         assert!(
             fp.fleet_img_s >= single.images_per_sec,
             "fleet {} < single {}",
@@ -163,44 +426,30 @@ mod tests {
             single.images_per_sec
         );
         assert!(fp.meets_target);
-        let (d, l) = fp.pressure();
+        let (d, l) = g.pressure();
         assert!(d <= 1.0 && l <= 1.0);
+        // Coefficient storage is charged per replica in the group total.
+        assert!(g.coef_bram18 > 0);
+        assert!(g.total.bram18 >= g.coef_bram18 * g.replicas as u64);
     }
 
     #[test]
-    fn slo_picks_largest_meeting_count() {
-        let m = Model::lenet_tiny();
-        let dev = by_name("zcu104").unwrap();
-        let free = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, 4).unwrap();
-        // An SLO below one replica's throughput is met by every count, so
-        // the search must take the largest feasible one.
-        let modest = free.per_replica.images_per_sec * 0.5;
-        let fp = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), Some(modest), 4).unwrap();
-        assert!(fp.meets_target);
-        assert_eq!(fp.replicas, free.replicas.max(fp.replicas));
-        // An absurd SLO is unmeetable: best effort, flagged.
-        let fp = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), Some(1e15), 4).unwrap();
-        assert!(!fp.meets_target);
-        assert!(fp.fleet_img_s > 0.0);
-    }
-
-    #[test]
-    fn no_slo_search_maximizes_fleet_throughput() {
+    fn single_device_search_maximizes_fleet_throughput() {
         // Without an SLO the pick must dominate every feasible fixed
         // count — the search is argmax, not largest-feasible.
         let m = Model::lenet_tiny();
         for dev_name in ["zcu104", "zu2cg", "edge-nodsp"] {
             let dev = by_name(dev_name).unwrap();
-            let Ok(best) = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, 6) else {
+            let Ok(best) = plan_fleet(&m, &dev, 200.0, &adaptive(), None, 6) else {
                 continue;
             };
             for r in 1..=6usize {
-                if let Ok(fp) = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), r, None) {
+                if let Ok(fp) = plan_fixed_fleet(&m, &dev, 200.0, &adaptive(), r, None) {
                     assert!(
                         best.fleet_img_s >= fp.fleet_img_s - 1e-6,
                         "{dev_name}: picked {} img/s @ r={}, but r={r} models {} img/s",
                         best.fleet_img_s,
-                        best.replicas,
+                        best.replicas(),
                         fp.fleet_img_s
                     );
                 }
@@ -209,27 +458,147 @@ mod tests {
     }
 
     #[test]
-    fn tiny_device_caps_replicas() {
+    fn heterogeneous_fleet_is_the_sum_of_its_groups() {
         let m = Model::lenet_tiny();
-        let dev = by_name("edge-nodsp").unwrap();
-        // The starved part may fit 1..n replicas, but never an infeasible
-        // shard; and the chosen fleet always fits the undivided device.
-        if let Ok(fp) = plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, 16) {
-            assert!(fp.replicas >= 1);
-            assert!(fp.total.fits(&dev));
-        }
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: by_name("zcu104").unwrap(), count: None },
+                FleetEntry { device: by_name("zu5ev").unwrap(), count: None },
+            ],
+        };
+        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 4).unwrap();
+        assert_eq!(fp.groups.len(), 2);
+        assert_eq!(fp.group_labels(), vec!["zcu104".to_string(), "zu5ev".to_string()]);
+        let sum: f64 = fp.groups.iter().map(|g| g.group_img_s).sum();
+        assert!((fp.fleet_img_s - sum).abs() < 1e-6);
+        let zcu = plan_fleet(&m, &by_name("zcu104").unwrap(), 200.0, &adaptive(), None, 4).unwrap();
+        let zu5 = plan_fleet(&m, &by_name("zu5ev").unwrap(), 200.0, &adaptive(), None, 4).unwrap();
+        // Composition is per-device argmax, so the mix models exactly the
+        // two single-device fleets added together — and beats both.
+        assert!((fp.fleet_img_s - (zcu.fleet_img_s + zu5.fleet_img_s)).abs() < 1e-6);
+        assert!(fp.fleet_img_s > zcu.fleet_img_s.max(zu5.fleet_img_s));
+        // Group-major replica bookkeeping is consistent.
+        assert_eq!(fp.replicas(), fp.groups[0].replicas + fp.groups[1].replicas);
+        let rg = fp.replica_groups();
+        assert_eq!(rg.len(), fp.replicas());
+        assert_eq!(rg.iter().filter(|&&g| g == 0).count(), fp.groups[0].replicas);
+        // Static power is one full part each.
+        assert!((fp.static_w - (0.593 + 0.45)).abs() < 1e-9);
     }
 
     #[test]
-    fn deploy_shares_weights_across_replicas() {
+    fn forced_counts_are_pinned_and_validated() {
         let m = Model::lenet_tiny();
-        let dev = by_name("zcu104").unwrap();
-        let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: by_name("zcu104").unwrap(), count: Some(2) },
+                FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
+            ],
+        };
+        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 8).unwrap();
+        assert_eq!(fp.groups[0].replicas, 2);
+        assert_eq!(fp.groups[1].replicas, 1);
+        // A forced count the device cannot hold is an error, not a skip.
+        let spec = FleetSpec::single(by_name("edge-nodsp").unwrap(), Some(64));
+        assert!(plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 8).is_err());
+    }
+
+    #[test]
+    fn target_picks_cheapest_static_power_mix() {
+        let m = Model::lenet_tiny();
+        let zcu = by_name("zcu104").unwrap();
+        let zu5 = by_name("zu5ev").unwrap();
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: zcu.clone(), count: None },
+                FleetEntry { device: zu5.clone(), count: None },
+            ],
+        };
+        let free = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 4).unwrap();
+        // A target one device alone can meet: the composition must shed
+        // the other part's static power.
+        let one_dev_target = free.groups.iter().map(|g| g.group_img_s).fold(f64::MAX, f64::min) * 0.5;
+        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), Some(one_dev_target), 4).unwrap();
+        assert!(fp.meets_target);
+        assert_eq!(fp.groups.len(), 1, "one part suffices for the target");
+        assert!(fp.static_w < free.static_w);
+        // An unmeetable target keeps the whole mix, flagged.
+        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), Some(1e15), 4).unwrap();
+        assert!(!fp.meets_target);
+        assert_eq!(fp.groups.len(), 2);
+        // A forced entry is never shed, even when the other part covers
+        // the target more efficiently.
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: zcu.clone(), count: None },
+                FleetEntry { device: zu5.clone(), count: Some(1) },
+            ],
+        };
+        let fp =
+            plan_fleet_spec(&m, &spec, 200.0, &adaptive(), Some(one_dev_target), 4).unwrap();
+        assert!(fp.groups.iter().any(|g| g.device.name == "zu5ev"));
+    }
+
+    #[test]
+    fn coefficient_bram_caps_replica_counts() {
+        let m = Model::lenet_tiny();
+        let coef = crate::planner::coefficient_bram18(&m);
+        // A part with abundant logic but BRAM for exactly one coefficient
+        // copy: the old floor-divide would have packed more replicas.
+        let mut dev = by_name("zcu104").unwrap();
+        dev.name = "bram-starved".into();
+        dev.bram18 = coef + 1;
+        let fp = plan_fleet(&m, &dev, 200.0, &adaptive(), None, 4).unwrap();
+        assert_eq!(fp.replicas(), 1, "BRAM reserve must cap the fleet at one replica");
+        assert!(plan_fixed_fleet(&m, &dev, 200.0, &adaptive(), 2, None).is_err());
+        // With BRAM for two copies the cap moves to two.
+        dev.bram18 = 2 * coef;
+        let fp = plan_fleet(&m, &dev, 200.0, &adaptive(), None, 4).unwrap();
+        assert_eq!(fp.replicas(), 2);
+        assert!(fp.groups[0].total.bram18 <= dev.bram18);
+    }
+
+    #[test]
+    fn spec_parsing_names_counts_and_catalogs() {
+        let spec = FleetSpec::parse("zcu104,zu5ev:2", &[]).unwrap();
+        assert_eq!(spec.entries.len(), 2);
+        assert_eq!(spec.entries[0].device.name, "zcu104");
+        assert_eq!(spec.entries[0].count, None);
+        assert_eq!(spec.entries[1].device.name, "zu5ev");
+        assert_eq!(spec.entries[1].count, Some(2));
+        // Extra catalog devices shadow nothing but are reachable by name,
+        // case-insensitively.
+        let mut custom = by_name("zu2cg").unwrap();
+        custom.name = "myboard".into();
+        let spec = FleetSpec::parse("MyBoard:1,zcu104", &[custom]).unwrap();
+        assert_eq!(spec.entries[0].device.name, "myboard");
+        assert_eq!(spec.entries[0].count, Some(1));
+        // Errors: unknown device, bad count, zero count, empty list.
+        assert!(FleetSpec::parse("nosuchpart", &[]).is_err());
+        assert!(FleetSpec::parse("zcu104:x", &[]).is_err());
+        assert!(FleetSpec::parse("zcu104:0", &[]).is_err());
+        assert!(FleetSpec::parse("", &[]).is_err());
+        assert!(FleetSpec::parse(" , ", &[]).is_err());
+    }
+
+    #[test]
+    fn deploy_shares_weights_across_groups() {
+        let m = Model::lenet_tiny();
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: by_name("zcu104").unwrap(), count: Some(1) },
+                FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
+            ],
+        };
+        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 2).unwrap();
         let reps = fp.deploy(m, Weights::random(&Model::lenet_tiny(), 42));
         assert_eq!(reps.len(), 2);
         assert!(Arc::ptr_eq(&reps[0].weights, &reps[1].weights));
         assert!(Arc::ptr_eq(&reps[0].model, &reps[1].model));
-        // Both pipelines are live and bit-identical.
+        // Replicas of different groups carry their own group's plan...
+        assert_eq!(reps[0].plan.device.name, "zcu104");
+        assert_eq!(reps[1].plan.device.name, "zu5ev");
+        // ...and both pipelines are live and bit-identical.
         let img = vec![0i64; 256];
         assert_eq!(reps[0].infer_one(&img).unwrap(), reps[1].infer_one(&img).unwrap());
     }

@@ -1,13 +1,22 @@
 //! Fleet-level serving metrics: request counters, queue pressure,
-//! end-to-end latency quantiles, and per-replica utilization.
+//! end-to-end latency quantiles, and per-replica / per-device-group
+//! utilization.
 //!
 //! Latency is measured from *admission* (the request entering the bounded
 //! submission queue) to *completion* (logits handed back), so queue wait
 //! and micro-batch formation are inside the number — the figure an SLO
-//! actually constrains. Counters are atomics; the latency reservoir is a
-//! mutex-protected vector sampled only at snapshot time, which is fine at
-//! synthetic-load scale and keeps the hot path to one lock per completed
-//! request.
+//! actually constrains. Counters are atomics; the latency reservoirs are
+//! mutex-protected vectors sampled only at snapshot time, which is fine
+//! at synthetic-load scale and keeps the hot path to two locks per
+//! completed request (fleet + device group).
+//!
+//! Heterogeneous fleets make the *group* axis the interesting one: a
+//! DSP-starved part serves slower than the paper's board, so fleet-wide
+//! quantiles hide which silicon is falling behind. Every replica is
+//! assigned to a device group at construction
+//! ([`FleetMetrics::grouped`]); latency, utilization, and dispatch
+//! pressure (in-flight images) are broken out per group in
+//! [`FleetSnapshot::groups`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -17,11 +26,43 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Default)]
 pub struct ReplicaMetrics {
     /// Images dispatched to (but not yet completed by) this replica —
-    /// the least-loaded dispatch key.
+    /// the dispatch-load key (divided by the replica's modeled rate for
+    /// throughput-weighted selection).
     in_flight: AtomicU64,
     images: AtomicU64,
     batches: AtomicU64,
     busy_nanos: AtomicU64,
+}
+
+/// Live counters for one device group (all replicas on one physical
+/// part).
+#[derive(Debug)]
+struct GroupMetrics {
+    label: String,
+    replicas: usize,
+    images: AtomicU64,
+    batches: AtomicU64,
+    busy_nanos: AtomicU64,
+    /// Images dispatched to the group and not yet retired — the group's
+    /// share of queue pressure.
+    in_flight: AtomicU64,
+    in_flight_peak: AtomicU64,
+    latencies_nanos: Mutex<Vec<u64>>,
+}
+
+impl GroupMetrics {
+    fn new(label: String, replicas: usize) -> GroupMetrics {
+        GroupMetrics {
+            label,
+            replicas,
+            images: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            busy_nanos: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            in_flight_peak: AtomicU64::new(0),
+            latencies_nanos: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 /// Live fleet metrics shared by the scheduler, the runners, and callers.
@@ -44,10 +85,34 @@ pub struct FleetMetrics {
     last_done_nanos: AtomicU64,
     latencies_nanos: Mutex<Vec<u64>>,
     replicas: Vec<ReplicaMetrics>,
+    /// Device-group index per replica (same length as `replicas`).
+    replica_group: Vec<usize>,
+    groups: Vec<GroupMetrics>,
 }
 
 impl FleetMetrics {
+    /// A single-group fleet (`n_replicas` replicas of one device) — the
+    /// PR 2 surface.
     pub fn new(n_replicas: usize) -> FleetMetrics {
+        FleetMetrics::grouped(vec![0; n_replicas], vec!["fleet".to_string()])
+    }
+
+    /// A heterogeneous fleet: `replica_group[i]` is the device-group
+    /// index of replica `i`, `labels[g]` its display name (one entry per
+    /// group; every index in `replica_group` must be covered).
+    pub fn grouped(replica_group: Vec<usize>, labels: Vec<String>) -> FleetMetrics {
+        assert!(!labels.is_empty(), "a fleet has at least one device group");
+        assert!(
+            replica_group.iter().all(|&g| g < labels.len()),
+            "replica group index out of range"
+        );
+        let groups = labels
+            .into_iter()
+            .enumerate()
+            .map(|(gi, label)| {
+                GroupMetrics::new(label, replica_group.iter().filter(|&&g| g == gi).count())
+            })
+            .collect();
         FleetMetrics {
             started: Instant::now(),
             accepted: AtomicU64::new(0),
@@ -59,8 +124,14 @@ impl FleetMetrics {
             first_done_nanos: AtomicU64::new(u64::MAX),
             last_done_nanos: AtomicU64::new(0),
             latencies_nanos: Mutex::new(Vec::new()),
-            replicas: (0..n_replicas).map(|_| ReplicaMetrics::default()).collect(),
+            replicas: replica_group.iter().map(|_| ReplicaMetrics::default()).collect(),
+            replica_group,
+            groups,
         }
+    }
+
+    fn group_of(&self, replica: usize) -> Option<&GroupMetrics> {
+        self.replica_group.get(replica).and_then(|&g| self.groups.get(g))
     }
 
     /// A request entered the submission queue.
@@ -81,16 +152,24 @@ impl FleetMetrics {
         if let Some(r) = self.replicas.get(replica) {
             r.in_flight.fetch_add(n, Ordering::Relaxed);
         }
+        if let Some(g) = self.group_of(replica) {
+            let now = g.in_flight.fetch_add(n, Ordering::Relaxed) + n;
+            g.in_flight_peak.fetch_max(now, Ordering::Relaxed);
+        }
     }
 
-    /// One request finished successfully after `latency` (admission →
-    /// reply).
-    pub fn note_completed(&self, latency: Duration) {
+    /// One request on `replica` finished successfully after `latency`
+    /// (admission → reply).
+    pub fn note_completed(&self, replica: usize, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let now = self.started.elapsed().as_nanos() as u64;
         self.first_done_nanos.fetch_min(now, Ordering::Relaxed);
         self.last_done_nanos.fetch_max(now, Ordering::Relaxed);
-        self.latencies_nanos.lock().unwrap().push(latency.as_nanos() as u64);
+        let nanos = latency.as_nanos() as u64;
+        self.latencies_nanos.lock().unwrap().push(nanos);
+        if let Some(g) = self.group_of(replica) {
+            g.latencies_nanos.lock().unwrap().push(nanos);
+        }
     }
 
     /// One request failed inside a replica.
@@ -100,16 +179,23 @@ impl FleetMetrics {
 
     /// `replica` retired a micro-batch of `n` images in `busy` wall time.
     pub fn note_replica_batch(&self, replica: usize, n: u64, busy: Duration) {
+        let busy_nanos = busy.as_nanos() as u64;
         if let Some(r) = self.replicas.get(replica) {
             r.images.fetch_add(n, Ordering::Relaxed);
             r.batches.fetch_add(1, Ordering::Relaxed);
-            r.busy_nanos.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+            r.busy_nanos.fetch_add(busy_nanos, Ordering::Relaxed);
             saturating_dec(&r.in_flight, n);
+        }
+        if let Some(g) = self.group_of(replica) {
+            g.images.fetch_add(n, Ordering::Relaxed);
+            g.batches.fetch_add(1, Ordering::Relaxed);
+            g.busy_nanos.fetch_add(busy_nanos, Ordering::Relaxed);
+            saturating_dec(&g.in_flight, n);
         }
     }
 
-    /// Current dispatched-not-done load per replica (for least-loaded
-    /// dispatch).
+    /// Current dispatched-not-done load per replica (the numerator of the
+    /// throughput-weighted dispatch key).
     pub fn load_of(&self, replica: usize) -> u64 {
         self.replicas.get(replica).map(|r| r.in_flight.load(Ordering::Relaxed)).unwrap_or(0)
     }
@@ -151,13 +237,40 @@ impl FleetMetrics {
             replicas: self
                 .replicas
                 .iter()
-                .map(|r| {
+                .zip(&self.replica_group)
+                .map(|(r, &group)| {
                     let busy_secs = r.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
                     ReplicaSnapshot {
+                        group,
                         images: r.images.load(Ordering::Relaxed),
                         batches: r.batches.load(Ordering::Relaxed),
                         busy_secs,
                         utilization: if wall_secs > 0.0 { busy_secs / wall_secs } else { 0.0 },
+                    }
+                })
+                .collect(),
+            groups: self
+                .groups
+                .iter()
+                .map(|g| {
+                    let mut glat: Vec<u64> = g.latencies_nanos.lock().unwrap().clone();
+                    glat.sort_unstable();
+                    let busy_secs = g.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+                    // A group's capacity-seconds is wall time × replicas.
+                    let cap_secs = wall_secs * g.replicas.max(1) as f64;
+                    GroupSnapshot {
+                        label: g.label.clone(),
+                        replicas: g.replicas,
+                        images: g.images.load(Ordering::Relaxed),
+                        batches: g.batches.load(Ordering::Relaxed),
+                        busy_secs,
+                        utilization: if cap_secs > 0.0 { busy_secs / cap_secs } else { 0.0 },
+                        completed: glat.len() as u64,
+                        p50_ms: percentile_ms(&glat, 0.50),
+                        p95_ms: percentile_ms(&glat, 0.95),
+                        p99_ms: percentile_ms(&glat, 0.99),
+                        in_flight: g.in_flight.load(Ordering::Relaxed),
+                        in_flight_peak: g.in_flight_peak.load(Ordering::Relaxed),
                     }
                 })
                 .collect(),
@@ -198,16 +311,41 @@ pub struct FleetSnapshot {
     pub p99_ms: f64,
     pub mean_ms: f64,
     pub replicas: Vec<ReplicaSnapshot>,
+    /// Per-device-group breakdown (one entry per physical part).
+    pub groups: Vec<GroupSnapshot>,
 }
 
 /// Frozen per-replica statistics.
 #[derive(Debug, Clone)]
 pub struct ReplicaSnapshot {
+    /// Index into [`FleetSnapshot::groups`].
+    pub group: usize,
     pub images: u64,
     pub batches: u64,
     pub busy_secs: f64,
     /// Fraction of fleet wall time this replica spent inferring.
     pub utilization: f64,
+}
+
+/// Frozen per-device-group statistics.
+#[derive(Debug, Clone)]
+pub struct GroupSnapshot {
+    pub label: String,
+    pub replicas: usize,
+    pub images: u64,
+    pub batches: u64,
+    pub busy_secs: f64,
+    /// Busy time over the group's capacity (wall time × replicas).
+    pub utilization: f64,
+    /// Requests completed by this group.
+    pub completed: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Images dispatched to the group and not yet retired (its share of
+    /// queue pressure at snapshot time).
+    pub in_flight: u64,
+    pub in_flight_peak: u64,
 }
 
 #[cfg(test)]
@@ -226,7 +364,7 @@ mod tests {
         assert_eq!(m.load_of(0), 6);
         assert_eq!(m.load_of(1), 4);
         for i in 0..10u64 {
-            m.note_completed(Duration::from_millis(i + 1));
+            m.note_completed((i % 2) as usize, Duration::from_millis(i + 1));
         }
         m.note_replica_batch(0, 6, Duration::from_millis(30));
         m.note_replica_batch(1, 4, Duration::from_millis(20));
@@ -243,6 +381,57 @@ mod tests {
         assert_eq!(s.replicas[1].batches, 1);
         assert_eq!(m.load_of(0), 0);
         assert!(s.replicas[0].busy_secs > 0.0);
+        // Both replicas belong to the single default group, which sees
+        // every image and every latency sample.
+        assert_eq!(s.groups.len(), 1);
+        let g = &s.groups[0];
+        assert_eq!(g.label, "fleet");
+        assert_eq!(g.replicas, 2);
+        assert_eq!(g.images, 10);
+        assert_eq!(g.batches, 2);
+        assert_eq!(g.completed, 10);
+        assert_eq!(g.in_flight, 0);
+        assert_eq!(g.in_flight_peak, 10);
+        assert!((g.p99_ms - s.p99_ms).abs() < 1e-9);
+        // Group utilization averages over both replicas' capacity.
+        assert!(g.utilization <= s.replicas[0].utilization + s.replicas[1].utilization);
+    }
+
+    #[test]
+    fn grouped_breakdown_attributes_per_device() {
+        // Replicas 0,1 on group 0 ("zcu104"), replica 2 on group 1
+        // ("edge-nodsp").
+        let m = FleetMetrics::grouped(
+            vec![0, 0, 1],
+            vec!["zcu104".to_string(), "edge-nodsp".to_string()],
+        );
+        m.note_dispatched(0, 2);
+        m.note_dispatched(1, 2);
+        m.note_dispatched(2, 3);
+        m.note_completed(0, Duration::from_millis(2));
+        m.note_completed(1, Duration::from_millis(4));
+        m.note_completed(2, Duration::from_millis(40));
+        m.note_replica_batch(0, 2, Duration::from_millis(2));
+        m.note_replica_batch(2, 3, Duration::from_millis(40));
+        let s = m.snapshot();
+        assert_eq!(s.groups.len(), 2);
+        let (g0, g1) = (&s.groups[0], &s.groups[1]);
+        assert_eq!(g0.label, "zcu104");
+        assert_eq!(g0.replicas, 2);
+        assert_eq!(g1.replicas, 1);
+        assert_eq!(g0.completed, 2);
+        assert_eq!(g1.completed, 1);
+        // The slow part's latency stays in ITS group's quantiles.
+        assert!(g1.p99_ms > g0.p99_ms * 5.0, "g0 {} g1 {}", g0.p99_ms, g1.p99_ms);
+        // Queue pressure: group 0 retired one of two batches (2 of 4
+        // images), group 1 retired everything.
+        assert_eq!(g0.in_flight, 2);
+        assert_eq!(g0.in_flight_peak, 4);
+        assert_eq!(g1.in_flight, 0);
+        assert_eq!(g1.in_flight_peak, 3);
+        // Replica snapshots point back at their groups.
+        assert_eq!(s.replicas[0].group, 0);
+        assert_eq!(s.replicas[2].group, 1);
     }
 
     #[test]
@@ -254,6 +443,9 @@ mod tests {
         assert_eq!(s.sustained_img_s, 0.0);
         assert_eq!(s.replicas.len(), 1);
         assert_eq!(s.replicas[0].utilization, 0.0);
+        assert_eq!(s.groups.len(), 1);
+        assert_eq!(s.groups[0].utilization, 0.0);
+        assert_eq!(s.groups[0].completed, 0);
     }
 
     #[test]

@@ -1,18 +1,25 @@
 //! The traffic-scale serving tier (`acf serve`).
 //!
 //! Everything below the planner treats one device budget as one network;
-//! this module turns that budget into a *fleet*:
+//! this module turns a *catalog of device budgets* into a fleet:
 //!
-//! * [`fleet`] — the fleet planner: runs [`crate::planner::plan`] under
-//!   divided budgets ([`crate::fabric::device::Device::shard`]) to find
-//!   the replica count that maximizes modeled fleet throughput or is the
-//!   largest count still meeting a target SLO.
+//! * [`fleet`] — the fleet planner: takes a [`FleetSpec`] of
+//!   `(device, count?)` entries (one per physical part), builds each
+//!   device's replica-count frontier by running [`crate::planner::plan`]
+//!   under divided budgets ([`crate::fabric::device::Device::shard`],
+//!   with per-replica coefficient BRAM charged off the top), and
+//!   composes the groups across devices — maximizing modeled fleet
+//!   throughput, or minimizing modeled static power under a target SLO.
+//!   Replicas on different parts run *different* plans (the paper's IP
+//!   substitutions, live inside one fleet).
 //! * [`scheduler`] — the request scheduler: a bounded submission queue
 //!   with explicit admission control ([`ServeError::Overloaded`] instead
-//!   of unbounded queueing), greedy micro-batching, and least-loaded
-//!   replica dispatch onto the coordinator's persistent pipelines.
+//!   of unbounded queueing), per-replica micro-batch clamps, and
+//!   throughput-weighted replica dispatch (expected drain time, not raw
+//!   queue length) onto the coordinator's persistent pipelines.
 //! * [`metrics`] — fleet statistics: p50/p95/p99 end-to-end latency,
-//!   sustained throughput, queue pressure, per-replica utilization.
+//!   sustained throughput, queue pressure, and utilization, broken out
+//!   per replica and per device group.
 //! * [`open_loop`] — a deterministic open-loop synthetic load generator
 //!   (Poisson arrivals via [`crate::util::rng`]) driving the above; the
 //!   `acf serve` CLI prints its modeled-vs-measured comparison.
@@ -21,8 +28,11 @@ pub mod fleet;
 pub mod metrics;
 pub mod scheduler;
 
-pub use fleet::{plan_fixed_fleet, plan_fleet, FleetPlan, DEFAULT_MAX_REPLICAS};
-pub use metrics::{FleetMetrics, FleetSnapshot, ReplicaSnapshot};
+pub use fleet::{
+    plan_fixed_fleet, plan_fleet, plan_fleet_spec, FleetEntry, FleetPlan, FleetSpec, GroupPlan,
+    DEFAULT_MAX_REPLICAS,
+};
+pub use metrics::{FleetMetrics, FleetSnapshot, GroupSnapshot, ReplicaSnapshot};
 pub use scheduler::{Pending, Server};
 
 use crate::coordinator::DeployError;
@@ -75,7 +85,9 @@ pub struct ServeConfig {
     /// Largest micro-batch the dispatcher forms per replica handoff.
     /// Clamped to the execution tier's lane width
     /// ([`crate::netlist::sim::LANES`]) so each dispatch maps onto whole
-    /// lane-packed pipeline jobs.
+    /// lane-packed pipeline jobs, then scaled *per replica* by modeled
+    /// throughput relative to the fleet's fastest replica — slow parts
+    /// take proportionally smaller batches (see [`scheduler`]).
     pub max_batch: usize,
 }
 

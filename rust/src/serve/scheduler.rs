@@ -1,20 +1,31 @@
 //! The request scheduler: a bounded submission queue, a micro-batching
-//! dispatcher, least-loaded replica selection, and explicit admission
-//! control.
+//! dispatcher, throughput-weighted replica selection, and explicit
+//! admission control.
 //!
-//! Micro-batches are sized to the execution tier's lane width: a batch
-//! handed to a replica runner is at most [`crate::netlist::sim::LANES`]
-//! requests, so each dispatch maps onto whole lane-packed pipeline jobs
-//! ([`Deployment::infer_batch`] packs them) instead of a stream of
-//! per-image handoffs — closing the dispatch side of the ROADMAP's
-//! "batch-aware engine plans" item.
+//! Heterogeneous fleets put replicas with very different modeled rates
+//! behind one queue, so the PR 2 least-loaded rule (pick the fewest
+//! in-flight images) is wrong: three images queued on a DSP-starved
+//! edge part take far longer to drain than five on the paper's board.
+//! Dispatch is therefore *throughput-weighted*: every replica advertises
+//! its plan's modeled `images_per_sec`, and the dispatcher picks the
+//! replica with the smallest expected drain time
+//! `(in_flight + 1) / images_per_sec`. With equal weights this degrades
+//! to exactly the least-loaded rule.
+//!
+//! Micro-batches clamp *per replica*, not globally: each replica's
+//! ceiling is the configured `max_batch` scaled by its rate relative to
+//! the fastest replica (floored at 1, capped at the execution tier's
+//! lane width [`crate::netlist::sim::LANES`]), so one dispatch costs
+//! roughly equal wall time on every part and a slow group never hoards
+//! a lane-wide batch while fast silicon idles.
 //!
 //! Topology (all threads long-lived, torn down on [`Server::shutdown`]):
 //!
 //! ```text
 //! submit() --try_send--> [bounded queue] --> dispatcher --+--> runner 0 -> replica 0 pipeline
-//!    |  full => ServeError::Overloaded       (micro-batch,|--> runner 1 -> replica 1 pipeline
-//!    +--> Pending (per-request reply)         least-loaded)+--> ...
+//!    |  full => ServeError::Overloaded    (weighted pick, |--> runner 1 -> replica 1 pipeline
+//!    +--> Pending (per-request reply)      per-replica    +--> ...
+//!                                          micro-batch)
 //! ```
 //!
 //! Backpressure story: the *only* unbounded buffers are per-request reply
@@ -64,16 +75,43 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start serving on `replicas` (deployed by
-    /// [`super::fleet::FleetPlan::deploy`]).
+    /// Start serving a single-device fleet (every replica in one metrics
+    /// group). Dispatch is still throughput-weighted — identical plans
+    /// just make the weights equal.
     pub fn start(replicas: Vec<Arc<Deployment>>, cfg: &ServeConfig) -> Server {
+        let groups = vec![0; replicas.len()];
+        Server::start_grouped(replicas, groups, vec!["fleet".to_string()], cfg)
+    }
+
+    /// Start serving a heterogeneous fleet: `groups[i]` is the device-
+    /// group index of `replicas[i]` and `labels[g]` names group `g`
+    /// (what [`super::fleet::FleetPlan::replica_groups`] /
+    /// [`super::fleet::FleetPlan::group_labels`] produce).
+    pub fn start_grouped(
+        replicas: Vec<Arc<Deployment>>,
+        groups: Vec<usize>,
+        labels: Vec<String>,
+        cfg: &ServeConfig,
+    ) -> Server {
         assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        assert_eq!(groups.len(), replicas.len(), "one group index per replica");
         let queue_depth = cfg.queue_depth.max(1);
-        // One micro-batch = at most one simulator lane word of images:
-        // anything wider would split into multiple lane groups anyway and
-        // only add queueing delay ahead of the pipeline.
-        let max_batch = cfg.max_batch.clamp(1, crate::netlist::sim::LANES);
-        let metrics = Arc::new(FleetMetrics::new(replicas.len()));
+        // Each replica advertises its plan's modeled throughput as its
+        // dispatch weight.
+        let weights: Vec<f64> =
+            replicas.iter().map(|d| d.plan.images_per_sec.max(1e-9)).collect();
+        let top_weight = weights.iter().copied().fold(f64::MIN, f64::max);
+        // Per-replica micro-batch ceiling: at most one simulator lane
+        // word (a wider batch would split into multiple lane groups and
+        // only add queueing delay), scaled down for replicas modeled
+        // slower than the fastest so a dispatch costs roughly equal wall
+        // time on every part.
+        let global_batch = cfg.max_batch.clamp(1, crate::netlist::sim::LANES);
+        let max_batch: Vec<usize> = weights
+            .iter()
+            .map(|w| ((global_batch as f64 * w / top_weight).ceil() as usize).clamp(1, global_batch))
+            .collect();
+        let metrics = Arc::new(FleetMetrics::grouped(groups, labels));
         let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
         let mut threads = Vec::with_capacity(replicas.len() + 1);
 
@@ -89,22 +127,26 @@ impl Server {
             threads.push(std::thread::spawn(move || run_replica(ri, &dep, &brx, &metrics)));
         }
 
-        // Dispatcher: drain the queue, form micro-batches, pick the
-        // least-loaded replica.
+        // Dispatcher: drain the queue, pick the replica with the least
+        // expected drain time, micro-batch up to ITS clamp.
         {
             let metrics = Arc::clone(&metrics);
             threads.push(std::thread::spawn(move || {
                 while let Ok(first) = rx.recv() {
+                    let target = (0..batch_txs.len())
+                        .min_by(|&a, &b| {
+                            let da = (metrics.load_of(a) + 1) as f64 / weights[a];
+                            let db = (metrics.load_of(b) + 1) as f64 / weights[b];
+                            da.partial_cmp(&db).expect("drain time is finite")
+                        })
+                        .expect("at least one replica");
                     let mut batch = vec![first];
-                    while batch.len() < max_batch {
+                    while batch.len() < max_batch[target] {
                         match rx.try_recv() {
                             Ok(r) => batch.push(r),
                             Err(_) => break,
                         }
                     }
-                    let target = (0..batch_txs.len())
-                        .min_by_key(|&ri| metrics.load_of(ri))
-                        .expect("at least one replica");
                     metrics.note_dispatched(target, batch.len() as u64);
                     if batch_txs[target].send(batch).is_err() {
                         return; // runner died; Overloaded backpressure takes over
@@ -192,7 +234,8 @@ impl Drop for Server {
 }
 
 /// One replica runner: pull a micro-batch, run it through the replica's
-/// persistent pipeline, reply per request, account per replica.
+/// persistent pipeline, reply per request, account per replica (and
+/// therefore per device group).
 fn run_replica(
     ri: usize,
     dep: &Deployment,
@@ -211,7 +254,7 @@ fn run_replica(
         match dep.infer_batch(&images) {
             Ok(outs) => {
                 for ((admitted, reply), logits) in meta.into_iter().zip(outs) {
-                    metrics.note_completed(admitted.elapsed());
+                    metrics.note_completed(ri, admitted.elapsed());
                     let _ = reply.send(Ok(logits));
                 }
             }

@@ -1,16 +1,17 @@
 //! Serving-tier integration tests: concurrent callers on one persistent
-//! pipeline, fleet planning invariants, end-to-end bit-exactness of the
-//! scheduled path, admission control under saturation, and drain-on-
-//! shutdown semantics.
+//! pipeline, fleet planning invariants (single-device and heterogeneous),
+//! end-to-end bit-exactness of the scheduled path across device groups,
+//! admission control under saturation, coefficient-BRAM honesty under
+//! sharding, and drain-on-shutdown semantics.
 
 use acf::cnn::data::Dataset;
 use acf::cnn::model::{Model, Weights};
 use acf::coordinator::Deployment;
-use acf::fabric::device::by_name;
+use acf::fabric::device::{by_name, load_catalog};
 use acf::planner::Policy;
 use acf::serve::{
-    open_loop, plan_fixed_fleet, plan_fleet, ServeConfig, ServeError, Server,
-    DEFAULT_MAX_REPLICAS,
+    open_loop, plan_fixed_fleet, plan_fleet, plan_fleet_spec, FleetEntry, FleetSpec, ServeConfig,
+    ServeError, Server, DEFAULT_MAX_REPLICAS,
 };
 use std::sync::Arc;
 
@@ -78,36 +79,160 @@ fn fleet_planner_replicates_the_default_device() {
     let dev = by_name("zcu104").unwrap();
     let fp =
         plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, DEFAULT_MAX_REPLICAS).unwrap();
-    assert!(fp.replicas >= 2, "zcu104 must carry at least two lenet-tiny replicas");
-    assert!(fp.total.fits(&dev));
+    assert!(fp.replicas() >= 2, "zcu104 must carry at least two lenet-tiny replicas");
+    assert_eq!(fp.groups.len(), 1);
+    assert!(fp.groups[0].total.fits(&dev));
     assert!(
-        (fp.fleet_img_s - fp.replicas as f64 * fp.per_replica.images_per_sec).abs() < 1e-6,
+        (fp.fleet_img_s
+            - fp.replicas() as f64 * fp.groups[0].per_replica.images_per_sec)
+            .abs()
+            < 1e-6,
         "fleet throughput is the replica sum"
     );
 }
 
 #[test]
-fn served_logits_bit_identical_to_infer_batch() {
-    let (server, model, weights) = fleet(2, &ServeConfig::default());
+fn heterogeneous_mix_beats_best_single_device_fleet() {
+    // The pinned catalog: the paper's board plus a smaller sibling. The
+    // mix's modeled throughput must beat the best fleet either part can
+    // field alone — each part contributes its own replica group.
+    let m = Model::lenet_tiny();
+    let zcu = by_name("zcu104").unwrap();
+    let zu5 = by_name("zu5ev").unwrap();
+    let max = 4;
+    let spec = FleetSpec {
+        entries: vec![
+            FleetEntry { device: zcu.clone(), count: None },
+            FleetEntry { device: zu5.clone(), count: None },
+        ],
+    };
+    let mix = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, max).unwrap();
+    let best_single = [zcu, zu5]
+        .iter()
+        .filter_map(|d| plan_fleet(&m, d, 200.0, &Policy::adaptive(), None, max).ok())
+        .map(|fp| fp.fleet_img_s)
+        .fold(0.0f64, f64::max);
+    assert!(best_single > 0.0);
+    assert!(
+        mix.fleet_img_s > best_single,
+        "mix {} img/s must beat best single-device {} img/s",
+        mix.fleet_img_s,
+        best_single
+    );
+    // Every group fits its own undivided part.
+    for g in &mix.groups {
+        assert!(g.total.fits(&g.device), "{} group must fit its part", g.device.name);
+    }
+}
+
+#[test]
+fn mixed_fleet_groups_run_different_ip_selections() {
+    // zcu104 (DSP-rich) + edge-nodsp (4 DSPs): the per-device replica
+    // plans MUST differ in conv IP selection — the DSP-starved part falls
+    // back to the logic-only Conv_1 (the paper's motivating case), the
+    // big part spends DSPs.
+    let m = Model::lenet_tiny();
+    let spec = FleetSpec {
+        entries: vec![
+            FleetEntry { device: by_name("zcu104").unwrap(), count: None },
+            FleetEntry { device: by_name("edge-nodsp").unwrap(), count: None },
+        ],
+    };
+    let fp = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 2).unwrap();
+    assert_eq!(fp.groups.len(), 2);
+    let convs_of = |gi: usize| -> Vec<(String, u64)> {
+        fp.groups[gi]
+            .per_replica
+            .convs()
+            .map(|ep| (ep.kind.name().to_string(), ep.instances))
+            .collect()
+    };
+    let big = convs_of(0);
+    let starved = convs_of(1);
+    assert_ne!(big, starved, "groups must plan different IP mixes: {big:?} vs {starved:?}");
+    // The starved group uses no DSPs beyond its part's budget and leans
+    // on Conv_1; the big group actually spends DSPs.
+    assert!(fp.groups[1].per_replica.total.dsps <= fp.groups[1].device.dsps);
+    assert!(
+        starved.iter().any(|(name, _)| name == "Conv_1"),
+        "edge-nodsp group must fall back to Conv_1: {starved:?}"
+    );
+    assert!(fp.groups[0].per_replica.total.dsps > 0, "zcu104 group should exploit DSPs");
+}
+
+#[test]
+fn served_logits_bit_identical_across_device_groups() {
+    // A heterogeneous fleet serves through the scheduler; every response
+    // must be bit-identical to the one-shot path of EVERY group and to
+    // the behavioral reference — different plans, identical arithmetic.
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let spec = FleetSpec {
+        entries: vec![
+            FleetEntry { device: by_name("zcu104").unwrap(), count: Some(1) },
+            FleetEntry { device: by_name("edge-nodsp").unwrap(), count: Some(1) },
+        ],
+    };
+    let fp = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 2).unwrap();
+    let replicas = fp.deploy(m.clone(), w.clone());
+    assert_eq!(replicas.len(), 2);
     let images = corpus(24, 9);
+    // One-shot through each group's own pipeline.
+    let per_group: Vec<Vec<Vec<i64>>> =
+        replicas.iter().map(|dep| dep.infer_batch(&images).unwrap()).collect();
+    // Scheduled path over the grouped server.
+    let server = Server::start_grouped(
+        replicas,
+        fp.replica_groups(),
+        fp.group_labels(),
+        &ServeConfig::default(),
+    );
     let pendings: Vec<_> =
         images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
-    let served: Vec<Vec<i64>> =
-        pendings.into_iter().map(|p| p.wait().unwrap()).collect();
-    // Same images through the one-shot path on a replica, and through the
-    // plain behavioral reference: all three must agree bit for bit.
-    let one_shot = server.replicas()[0].infer_batch(&images).unwrap();
-    for ((img, s), b) in images.iter().zip(&served).zip(&one_shot) {
-        let reference = acf::cnn::infer::infer(&model, &weights, img);
-        assert_eq!(s, &reference);
-        assert_eq!(b, &reference);
+    let served: Vec<Vec<i64>> = pendings.into_iter().map(|p| p.wait().unwrap()).collect();
+    for (i, img) in images.iter().enumerate() {
+        let reference = acf::cnn::infer::infer(&m, &w, img);
+        assert_eq!(served[i], reference, "scheduled path, image {i}");
+        for (gi, outs) in per_group.iter().enumerate() {
+            assert_eq!(outs[i], reference, "group {gi} one-shot, image {i}");
+        }
     }
     let snap = server.shutdown();
     // Only the scheduled path counts in fleet metrics; the one-shot
-    // comparison batch went straight to the replica's own pipeline.
+    // comparison batches went straight to the replicas' own pipelines.
     assert_eq!(snap.completed, 24);
     assert_eq!(snap.failed, 0);
     assert!(snap.p50_ms <= snap.p95_ms && snap.p95_ms <= snap.p99_ms);
+    // The per-group breakdown accounts for exactly the scheduled images.
+    assert_eq!(snap.groups.len(), 2);
+    assert_eq!(snap.groups.iter().map(|g| g.images).sum::<u64>(), 24);
+    assert_eq!(snap.groups.iter().map(|g| g.completed).sum::<u64>(), 24);
+}
+
+#[test]
+fn coefficient_bram_overpack_is_rejected_or_downsized() {
+    // Regression for the BRAM sharding bug: coefficient storage is
+    // per-replica and does not shrink with the shard. A part whose BRAM
+    // holds exactly two coefficient copies used to accept many replicas
+    // (floor-divided BRAM looked free); now the fleet caps at two.
+    let m = Model::lenet_tiny();
+    let coef = acf::planner::coefficient_bram18(&m);
+    assert!(coef > 0, "lenet-tiny stores coefficients");
+    // Pin the catalog through the same JSON path `--catalog` uses.
+    let text = format!(
+        r#"[{{"name":"bramtight","part":"x-bram-tight","luts":230400,"ffs":460800,
+             "clbs":28800,"dsps":1728,"bram18":{},"static_w":0.5,"speed_derate":1.0}}]"#,
+        2 * coef
+    );
+    let extra = load_catalog(&text).unwrap();
+    let spec = FleetSpec::parse("bramtight", &extra).unwrap();
+    let fp = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 8).unwrap();
+    assert_eq!(fp.replicas(), 2, "BRAM holds exactly two coefficient copies");
+    assert!(fp.groups[0].total.bram18 <= fp.groups[0].device.bram18);
+    // Forcing a third replica is an explicit error, not silent overpack.
+    let spec = FleetSpec::parse("bramtight:3", &extra).unwrap();
+    let err = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 8).unwrap_err();
+    assert!(err.to_string().contains("coefficient"), "{err}");
 }
 
 #[test]
