@@ -14,10 +14,15 @@ use acf::fabric::device::by_name;
 use acf::ips::{self, ConvKind, ConvParams};
 use acf::netlist::sim::Sim;
 use acf::planner::Policy;
-use acf::util::bench::{report, write_json, Bench};
+use acf::util::bench::{quick_env, report, write_json, Bench, Stats};
 
 fn main() {
-    let b = Bench::default();
+    // ACF_BENCH_QUICK=1 (CI) shrinks timing budgets; modeled series are
+    // identical in both modes.
+    let b = Bench::from_env();
+    if quick_env() {
+        println!("ACF_BENCH_QUICK=1: quick mode");
+    }
     let p = ConvParams::paper_8bit();
     let mut stats = Vec::new();
 
@@ -68,6 +73,23 @@ fn main() {
             acf::planner::plan(&m, &edge, 200.0, &Policy::adaptive()).unwrap()
         });
         stats.push(s);
+
+        // Modeled plan quality (deterministic — these gate in CI through
+        // `acf bench-check`): per-image time of the chosen engine mix.
+        // A change that degrades engine selection shows up here even if
+        // the planner got faster.
+        for (m, d) in [
+            (Model::lenet_tiny(), &dev),
+            (Model::lenet_wide(4), &dev),
+            (Model::lenet_tiny(), &edge),
+        ] {
+            let p = acf::planner::plan(&m, d, 200.0, &Policy::adaptive()).unwrap();
+            stats.push(Stats::flat(
+                format!("plan: modeled ns/img — {} on {} (adaptive)", m.name, d.name),
+                1,
+                1e9 / p.images_per_sec.max(1e-9),
+            ));
+        }
     }
 
     // 4. Threaded pipeline throughput.

@@ -2,7 +2,9 @@
 //! catalog → one replica group per part, each with its own resource-driven
 //! plan → throughput-weighted request scheduling under open-loop traffic,
 //! with admission control doing explicit load shedding and the metrics
-//! broken out per device group.
+//! broken out per device group — then a second act: the live rebalancer
+//! growing a deliberately under-provisioned fleet under a step load and
+//! shrinking it back in the lull, from the memoized plan frontier.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
@@ -11,8 +13,11 @@ use acf::cnn::model::{Model, Weights};
 use acf::fabric::device::by_name;
 use acf::planner::Policy;
 use acf::serve::{
-    open_loop, plan_fleet_spec, FleetSpec, ServeConfig, ServeError, Server,
+    open_loop, plan_fleet_spec, FleetFrontier, FleetSpec, RebalanceConfig, Rebalancer,
+    ServeConfig, ServeError, Server,
 };
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let model = Model::lenet_tiny();
@@ -105,4 +110,74 @@ fn main() {
         );
     }
     assert_eq!(wrong, 0, "serving path must stay bit-exact across device groups");
+
+    println!("\n== 4. dynamic rebalancing under a step load ==");
+    // Start the paper's board at ONE replica although its frontier holds
+    // more, then let the controller react to a saturating burst and the
+    // silence after it. No planner runs here — only frontier lookups.
+    let spec = FleetSpec::single(by_name("zcu104").unwrap(), None);
+    let frontier = FleetFrontier::build(&model, &spec, 200.0, &policy, 3)
+        .expect("zcu104 frontier");
+    let fp = frontier.fleet_at(&[1]);
+    let model_arc = Arc::new(model.clone());
+    let weights_arc = Arc::new(weights.clone());
+    let server = Arc::new(Server::start_grouped(
+        fp.deploy_shared(Arc::clone(&model_arc), Arc::clone(&weights_arc)),
+        fp.replica_groups(),
+        fp.group_labels(),
+        &ServeConfig::default(),
+    ));
+    let rb = Rebalancer::start(
+        Arc::clone(&server),
+        frontier,
+        &fp,
+        model_arc,
+        weights_arc,
+        RebalanceConfig {
+            window: Duration::from_millis(100),
+            cooldown: Duration::from_millis(200),
+            ..RebalanceConfig::default()
+        },
+    );
+    println!("  phase 1 (low): {} replica(s)", server.live_counts()[0]);
+    // Spike: closed-loop saturation from several threads for ~1.5 s.
+    let mut spikers = Vec::new();
+    for t in 0..6usize {
+        let server = Arc::clone(&server);
+        let corpus = corpus.clone();
+        spikers.push(std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let mut n = 0usize;
+            while t0.elapsed() < Duration::from_millis(1500) {
+                let idx = (t + n) % corpus.len();
+                server.submit_wait(corpus[idx].clone()).unwrap().wait().unwrap();
+                n += 1;
+            }
+            n
+        }));
+    }
+    let spiked: usize = spikers.into_iter().map(|h| h.join().unwrap()).sum();
+    println!(
+        "  phase 2 (spike): {} closed-loop requests -> {} replica(s)",
+        spiked,
+        server.live_counts()[0]
+    );
+    // Lull: let the controller shrink back.
+    std::thread::sleep(Duration::from_millis(1500));
+    println!("  phase 3 (lull): {} replica(s)", server.live_counts()[0]);
+    rb.stop();
+    let snap = server.shutdown();
+    println!("  rebalance timeline ({} action(s)):", snap.events.len());
+    for e in &snap.events {
+        println!(
+            "    t={:.2}s {} {} {} -> {} ({})",
+            e.at_secs, e.label, e.action, e.from, e.to, e.reason
+        );
+    }
+    let g = &snap.groups[0];
+    println!(
+        "  churn: {} replicas spawned, {} drained cleanly, {} missed the drain deadline",
+        g.spawned, g.drained, g.drain_failed
+    );
+    assert_eq!(snap.completed, snap.accepted, "no admitted request may be dropped");
 }

@@ -31,6 +31,7 @@ use crate::cnn::model::{Layer, Model, Weights};
 use crate::fabric::device::Device;
 use crate::netlist::sim::LANES;
 use crate::planner::{plan as make_plan, Plan, PlanError, Policy};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -65,6 +66,10 @@ struct Pipeline {
     /// under the mutex and submit without holding the lock.
     ingress: Mutex<Option<mpsc::SyncSender<Job>>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Lane-group jobs submitted but not yet fully replied — the drain
+    /// signal the serving tier polls before retiring a replica pipeline
+    /// (covers one-shot `infer_batch` callers the scheduler cannot see).
+    in_flight: Arc<AtomicU64>,
 }
 
 impl Pipeline {
@@ -98,15 +103,18 @@ impl Pipeline {
         // Egress: flatten and route each result back to its caller. Reply
         // channels are unbounded, so egress never blocks and the pipeline
         // cannot deadlock however many batches are in flight.
+        let in_flight = Arc::new(AtomicU64::new(0));
+        let egress_in_flight = Arc::clone(&in_flight);
         workers.push(std::thread::spawn(move || {
             while let Ok(job) = rx_prev.recv() {
                 let Job { tensors, tags, reply } = job;
                 for (tag, tensor) in tags.into_iter().zip(tensors) {
                     let _ = reply.send((tag, tensor.concat()));
                 }
+                egress_in_flight.fetch_sub(1, Ordering::Release);
             }
         }));
-        Pipeline { ingress: Mutex::new(Some(tx0)), workers }
+        Pipeline { ingress: Mutex::new(Some(tx0)), workers, in_flight }
     }
 
     /// A cloned handle to the ingress channel, or `None` mid-teardown.
@@ -217,14 +225,16 @@ impl Deployment {
     /// tier can reject bad requests at admission instead of poisoning a
     /// dispatched micro-batch.
     pub fn validate_image(&self, image: &[i64]) -> Result<(), DeployError> {
-        let want = self.model.in_h * self.model.in_w * self.model.in_ch;
-        if image.len() != want {
-            return Err(DeployError::BadImage { got: image.len(), want });
-        }
-        if let Some(&bad) = image.iter().find(|&&p| !(-127..=127).contains(&p)) {
-            return Err(DeployError::AsymmetricInput(bad));
-        }
-        Ok(())
+        validate_image(&self.model, image)
+    }
+
+    /// Lane-group jobs currently inside this deployment's pipeline. The
+    /// retire path of the serving tier polls this to confirm a replica is
+    /// quiescent before tearing its pipeline down — unlike the scheduler's
+    /// own dispatch counters, it also covers one-shot [`Self::infer_batch`]
+    /// callers that never went through a server.
+    pub fn in_flight(&self) -> u64 {
+        self.pipeline.in_flight.load(Ordering::Acquire)
     }
 
     /// Serve a batch through the persistent layer pipeline. Returns
@@ -255,7 +265,11 @@ impl Deployment {
                 tags: (base..base + chunk.len()).collect(),
                 reply: reply_tx.clone(),
             };
-            tx.send(job).map_err(|_| DeployError::PipelineDown)?;
+            self.pipeline.in_flight.fetch_add(1, Ordering::Release);
+            if tx.send(job).is_err() {
+                self.pipeline.in_flight.fetch_sub(1, Ordering::Release);
+                return Err(DeployError::PipelineDown);
+            }
         }
         // Drop our ends so the reply stream terminates even if a worker
         // dies mid-batch (its queued jobs — and their reply clones — drop
@@ -279,6 +293,21 @@ impl Deployment {
     pub fn infer_one(&self, image: &[i64]) -> Result<Vec<i64>, DeployError> {
         Ok(self.infer_batch(std::slice::from_ref(&image))?.pop().unwrap())
     }
+}
+
+/// Ingress guard against a bare model: shape + symmetric-range check.
+/// The serving tier validates at admission against the fleet's shared
+/// `Arc<Model>` rather than any particular replica, so admission keeps
+/// working while rebalancing swaps replica pipelines in and out.
+pub fn validate_image(model: &Model, image: &[i64]) -> Result<(), DeployError> {
+    let want = model.in_h * model.in_w * model.in_ch;
+    if image.len() != want {
+        return Err(DeployError::BadImage { got: image.len(), want });
+    }
+    if let Some(&bad) = image.iter().find(|&&p| !(-127..=127).contains(&p)) {
+        return Err(DeployError::AsymmetricInput(bad));
+    }
+    Ok(())
 }
 
 /// Split a flat ingress image into per-channel planes (stage-0 format).
@@ -451,6 +480,21 @@ mod tests {
         let mut img = vec![0i64; 256];
         img[7] = -128;
         assert!(matches!(d.infer_one(&img), Err(DeployError::AsymmetricInput(-128))));
+        // The model-level guard is the same check without a deployment.
+        assert!(validate_image(&d.model, &img).is_err());
+        assert!(validate_image(&d.model, &[0i64; 256]).is_ok());
+    }
+
+    #[test]
+    fn pipeline_in_flight_settles_to_zero() {
+        let d = deploy();
+        assert_eq!(d.in_flight(), 0);
+        let ds = Dataset::generate(6, 8, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        d.infer_batch(&images).unwrap();
+        // infer_batch waits for every reply, so the gauge must be back to
+        // zero by the time it returns — the retire path's drain contract.
+        assert_eq!(d.in_flight(), 0);
     }
 
     #[test]

@@ -37,12 +37,16 @@
 //! * [`serve`] — the traffic-scale serving tier (`acf serve`): a fleet
 //!   planner that replicates the whole network across a *heterogeneous
 //!   device catalog* (one replica group per part, each under divided
-//!   budgets with per-replica coefficient BRAM charged off the top), a
-//!   request scheduler with a bounded admission queue, per-replica
-//!   micro-batch clamps and throughput-weighted dispatch, fleet metrics
-//!   (p50/p95/p99 latency, sustained throughput, per-replica and
-//!   per-device-group utilization), and an open-loop synthetic load
-//!   generator.
+//!   budgets with per-replica coefficient BRAM charged off the top,
+//!   memoized as a count → plan frontier), a request scheduler with a
+//!   bounded admission queue, per-replica micro-batch clamps,
+//!   throughput-weighted dispatch, and a *dynamic* replica set, a live
+//!   rebalance controller that grows/shrinks device groups under load
+//!   from the memoized frontier (`acf serve --rebalance`), fleet
+//!   metrics (p50/p95/p99 latency, sustained throughput, per-replica
+//!   and per-device-group utilization, drain summaries, the rebalance
+//!   event log), and a deterministic open-loop / step-load synthetic
+//!   traffic generator.
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   model used as the golden numeric reference (behind the `xla` cargo
 //!   feature; a same-surface stub otherwise).

@@ -5,12 +5,14 @@
 //!   synth    — synthesize one IP and print its utilization
 //!   sta      — timing report (+ critical path trace) for one IP
 //!   power    — power report for one IP
-//!   plan     — resource-driven deployment plan for a model on a device
-//!   deploy   — plan + run a batch of synthetic images (behavioral fabric)
-//!   serve    — plan a replica fleet and drive it with open-loop traffic
-//!   sweep    — adaptation / precision sweeps
-//!   golden   — run the AOT XLA artifact and cross-check vs behavioral
-//!   version  — print version
+//!   plan        — resource-driven deployment plan for a model on a device
+//!   deploy      — plan + run a batch of synthetic images (behavioral fabric)
+//!   serve       — plan a replica fleet and drive it with open-loop traffic
+//!                 (--rebalance adds the live controller under a step load)
+//!   sweep       — adaptation / precision sweeps
+//!   golden      — run the AOT XLA artifact and cross-check vs behavioral
+//!   bench-check — gate fresh BENCH_*.json series against BENCH_baseline/
+//!   version     — print version
 
 use acf::cnn::data::Dataset;
 use acf::cnn::model::Model;
@@ -32,13 +34,14 @@ fn main() {
         Some("serve") => cmd_serve(&argv[1..]),
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("golden") => cmd_golden(&argv[1..]),
+        Some("bench-check") => cmd_bench_check(&argv[1..]),
         Some("version") => {
             println!("acf {}", acf::VERSION);
             0
         }
         _ => {
             eprintln!(
-                "usage: acf <tables|synth|sta|power|plan|deploy|serve|sweep|golden|version> [options]\n\
+                "usage: acf <tables|synth|sta|power|plan|deploy|serve|sweep|golden|bench-check|version> [options]\n\
                  run `acf <cmd> --help` for per-command options"
             );
             2
@@ -328,6 +331,11 @@ fn cmd_serve(argv: &[String]) -> i32 {
     specs.push(OptSpec { name: "max-batch", value: true, help: "micro-batch ceiling per dispatch (clamped per replica by modeled rate)", default: Some("8") });
     specs.push(OptSpec { name: "queue-depth", value: true, help: "bounded submission queue depth", default: Some("64") });
     specs.push(OptSpec { name: "seed", value: true, help: "weights/data/arrivals seed", default: Some("42") });
+    specs.push(OptSpec { name: "rebalance", value: false, help: "enable the live rebalancer and drive a low->spike->low step load", default: None });
+    specs.push(OptSpec { name: "window-ms", value: true, help: "rebalance control period / signal window", default: Some("250") });
+    specs.push(OptSpec { name: "headroom", value: true, help: "capacity headroom the rebalancer keeps (scale-up watermark = 1 - headroom)", default: Some("0.25") });
+    specs.push(OptSpec { name: "cooldown-ms", value: true, help: "quiet time between rebalance actions, or 'auto' (2x window)", default: Some("auto") });
+    specs.push(OptSpec { name: "drain-deadline-ms", value: true, help: "how long a retiring replica gets to drain before being reported late", default: Some("5000") });
     let a = match Args::parse(argv, &specs) {
         Ok(a) => a,
         Err(e) => return fail(e),
@@ -359,9 +367,27 @@ fn cmd_serve(argv: &[String]) -> i32 {
     };
     let requests = a.get_usize("requests").unwrap().unwrap();
     let seed = a.get_u64("seed").unwrap().unwrap();
+    let drain_deadline = match a.get_ms("drain-deadline-ms") {
+        Ok(d) => d.unwrap(),
+        Err(e) => return fail(e),
+    };
     let cfg = acf::serve::ServeConfig {
         queue_depth: a.get_usize("queue-depth").unwrap().unwrap(),
         max_batch: a.get_usize("max-batch").unwrap().unwrap(),
+        drain_deadline,
+    };
+    let rebalance = a.flag("rebalance");
+    let window = match a.get_ms("window-ms") {
+        Ok(w) => w.unwrap(),
+        Err(e) => return fail(e),
+    };
+    let headroom = match a.get_f64("headroom") {
+        Ok(h) => h.unwrap(),
+        Err(e) => return fail(e),
+    };
+    let cooldown = match a.get_ms_auto("cooldown-ms") {
+        Ok(c) => c.unwrap_or(2 * window),
+        Err(e) => return fail(e),
     };
 
     // 1. Fleet spec: either the single --device (PR 2 surface, with
@@ -398,12 +424,14 @@ fn cmd_serve(argv: &[String]) -> i32 {
 
     // 2. Fleet plan: per-device replica frontiers composed across the
     //    catalog (throughput-argmax, or cheapest static power under the
-    //    target SLO).
-    let fp = match acf::serve::plan_fleet_spec(&model, &fleet_spec, clock, &policy, target, max_replicas)
-    {
-        Ok(fp) => fp,
-        Err(e) => return fail(e),
-    };
+    //    target SLO). The frontier is kept — it is what the live
+    //    rebalancer indexes instead of ever re-running the planner.
+    let frontier =
+        match acf::serve::FleetFrontier::build(&model, &fleet_spec, clock, &policy, max_replicas) {
+            Ok(fr) => fr,
+            Err(e) => return fail(e),
+        };
+    let fp = acf::serve::compose_frontier(&frontier, target);
     println!(
         "fleet plan for '{}' @ {} MHz (policy {}): {} device group(s), {} replica(s)",
         model.name,
@@ -429,8 +457,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
 
     // 3. Deploy the fleet and precompute the corpus + reference logits
     //    (once per distinct image — responses are checked against these).
+    //    Model/weights stay behind shared handles so rebalance-spawned
+    //    replicas reuse the same allocations.
     let weights = acf::cnn::model::Weights::random(&model, seed);
-    let replicas = fp.deploy(model.clone(), weights.clone());
+    let model_arc = std::sync::Arc::new(model.clone());
+    let weights_arc = std::sync::Arc::new(weights.clone());
+    let replicas =
+        fp.deploy_shared(std::sync::Arc::clone(&model_arc), std::sync::Arc::clone(&weights_arc));
     let replica_groups = fp.replica_groups();
     let corpus = Dataset::generate(requests.clamp(8, 64), seed, model.in_h, model.in_w);
     let corpus: Vec<Vec<i64>> = corpus.images.iter().map(|i| i.pix.clone()).collect();
@@ -512,17 +545,64 @@ fn cmd_serve(argv: &[String]) -> i32 {
     );
 
     // 6. Open-loop load against a fresh server (clean metrics clock).
-    println!(
-        "open loop: {} requests at {:.0} img/s offered (Poisson arrivals, seed {})",
-        requests, offered, seed
-    );
-    let server = acf::serve::Server::start_grouped(
+    //    With --rebalance the profile is a low -> spike -> low step load
+    //    and the live controller resizes device groups underneath it.
+    let server = std::sync::Arc::new(acf::serve::Server::start_grouped(
         replicas,
         replica_groups,
         fp.group_labels(),
         &cfg,
-    );
-    let outcomes = acf::serve::open_loop(&server, &corpus, requests, offered, seed ^ 0x5E21);
+    ));
+    let outcomes = if rebalance {
+        if fleet_spec.entries.iter().all(|e| e.count.is_some()) {
+            println!(
+                "warning: every device group has a forced count (--replicas / name:count) — \
+                 the rebalancer never resizes pinned groups, so it will observe but not act"
+            );
+        }
+        let rb = acf::serve::Rebalancer::start(
+            std::sync::Arc::clone(&server),
+            frontier.clone(),
+            &fp,
+            std::sync::Arc::clone(&model_arc),
+            std::sync::Arc::clone(&weights_arc),
+            acf::serve::RebalanceConfig {
+                window,
+                headroom,
+                cooldown,
+                ..acf::serve::RebalanceConfig::default()
+            },
+        );
+        let low = (offered * 0.3).max(1.0);
+        let spike = (offered * 1.6).max(1.0);
+        let phases = [
+            acf::serve::LoadPhase { requests: requests / 4, offered_img_s: low },
+            acf::serve::LoadPhase { requests: requests / 2, offered_img_s: spike },
+            acf::serve::LoadPhase {
+                requests: requests - requests / 4 - requests / 2,
+                offered_img_s: low,
+            },
+        ];
+        println!(
+            "step load: {} requests in phases {:.0} / {:.0} / {:.0} img/s offered (Poisson arrivals, seed {}; rebalance window {:?}, headroom {:.2})",
+            requests,
+            phases[0].offered_img_s,
+            phases[1].offered_img_s,
+            phases[2].offered_img_s,
+            seed,
+            window,
+            headroom
+        );
+        let outcomes = acf::serve::step_load(&server, &corpus, &phases, seed ^ 0x5E21);
+        rb.stop();
+        outcomes
+    } else {
+        println!(
+            "open loop: {} requests at {:.0} img/s offered (Poisson arrivals, seed {})",
+            requests, offered, seed
+        );
+        acf::serve::open_loop(&server, &corpus, requests, offered, seed ^ 0x5E21)
+    };
     let mut load_mismatches = 0usize;
     let mut failures = 0usize;
     for o in &outcomes {
@@ -543,6 +623,12 @@ fn cmd_serve(argv: &[String]) -> i32 {
     println!("\nmeasured fleet (host wall time; behavioral layer models):");
     print!("{}", acf::report::serve_group_table(&snap).plain());
     print!("{}", acf::report::serve_table(&snap).plain());
+    if rebalance {
+        println!("\nrebalance timeline ({} action(s)):", snap.events.len());
+        if !snap.events.is_empty() {
+            print!("{}", acf::report::rebalance_table(&snap.events).plain());
+        }
+    }
     println!(
         "  requests: {} accepted, {} rejected (admission control), {} failed, queue peak {}",
         snap.accepted, snap.rejected, snap.failed, snap.queue_peak
@@ -644,6 +730,132 @@ fn cmd_golden(argv: &[String]) -> i32 {
     }
     println!("golden XLA vs behavioral: {ok}/{n} bit-identical");
     i32::from(ok != n)
+}
+
+/// The bench files the CI gate covers.
+const BENCH_FILES: [&str; 3] = ["BENCH_hotpath.json", "BENCH_serve.json", "BENCH_sim.json"];
+
+fn cmd_bench_check(argv: &[String]) -> i32 {
+    use acf::util::bench::{
+        check_against_baseline, check_relations, parse_bench_doc, parse_relations, BenchCase,
+        CheckReport,
+    };
+    use acf::util::json::Json;
+    let specs = vec![
+        OptSpec { name: "dir", value: true, help: "directory holding fresh BENCH_*.json", default: Some(".") },
+        OptSpec { name: "baseline", value: true, help: "committed baseline directory", default: Some("BENCH_baseline") },
+        OptSpec { name: "tolerance", value: true, help: "fractional slack for modeled series (0.05 = 5%)", default: Some("0.05") },
+        OptSpec { name: "update", value: false, help: "rewrite the baseline (pinned) from the fresh files", default: None },
+        OptSpec { name: "help", value: false, help: "show help", default: None },
+    ];
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!("{}", help("acf bench-check", "gate fresh bench series against the committed baseline", &specs));
+        return 0;
+    }
+    let dir = a.get_or("dir", ".");
+    let baseline_dir = a.get_or("baseline", "BENCH_baseline");
+    let tolerance = a.get_f64("tolerance").unwrap().unwrap();
+
+    let load = |path: &std::path::Path| -> Result<Json, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    };
+
+    // Fresh documents are mandatory — a missing file means the bench
+    // never ran, which must not read as "no regression".
+    let mut fresh = Vec::new();
+    for file in BENCH_FILES {
+        let path = std::path::Path::new(dir).join(file);
+        let json = match load(&path) {
+            Ok(j) => j,
+            Err(e) => return fail(format!("fresh bench output missing: {e}")),
+        };
+        match parse_bench_doc(&json) {
+            Ok(doc) => fresh.push((file, json, doc)),
+            Err(e) => return fail(format!("{file}: {e}")),
+        }
+    }
+
+    if a.flag("update") {
+        if let Err(e) = std::fs::create_dir_all(baseline_dir) {
+            return fail(format!("{baseline_dir}: {e}"));
+        }
+        for (file, json, _) in &fresh {
+            let mut obj = match json.as_obj() {
+                Ok(o) => o.clone(),
+                Err(e) => return fail(format!("{file}: {e}")),
+            };
+            obj.insert("pinned".to_string(), Json::Bool(true));
+            let path = std::path::Path::new(baseline_dir).join(file);
+            if let Err(e) = std::fs::write(&path, Json::Obj(obj).dump()) {
+                return fail(format!("{}: {e}", path.display()));
+            }
+            println!("pinned {}", path.display());
+        }
+        // Carry the relations file along so a refreshed directory is a
+        // complete baseline (committing it must not drop the ordering
+        // gates).
+        let rel_dst = std::path::Path::new(baseline_dir).join("relations.json");
+        if !rel_dst.exists() {
+            let rel_src = std::path::Path::new("BENCH_baseline").join("relations.json");
+            if rel_src.exists() {
+                if let Err(e) = std::fs::copy(&rel_src, &rel_dst) {
+                    return fail(format!("{}: {e}", rel_dst.display()));
+                }
+                println!("copied {} -> {}", rel_src.display(), rel_dst.display());
+            }
+        }
+        println!("baseline refreshed — commit {baseline_dir}/ to activate the modeled gate");
+        return 0;
+    }
+
+    let mut report = CheckReport::default();
+    let all_cases: Vec<BenchCase> =
+        fresh.iter().flat_map(|(_, _, d)| d.cases.iter().cloned()).collect();
+
+    // Ordering relations (machine-independent — gate from day one).
+    let rel_path = std::path::Path::new(baseline_dir).join("relations.json");
+    match load(&rel_path) {
+        Ok(json) => match parse_relations(&json) {
+            Ok(rels) => report.merge(check_relations(&all_cases, &rels)),
+            Err(e) => return fail(format!("{}: {e}", rel_path.display())),
+        },
+        Err(e) => return fail(format!("relations baseline missing: {e}")),
+    }
+
+    // Absolute modeled series vs the committed (pinned) baselines.
+    for (file, _, doc) in &fresh {
+        let path = std::path::Path::new(baseline_dir).join(file);
+        let base = match load(&path).and_then(|j| parse_bench_doc(&j)) {
+            Ok(b) => b,
+            Err(e) => return fail(format!("baseline missing for {file}: {e}")),
+        };
+        report.merge(check_against_baseline(doc, &base, tolerance));
+    }
+
+    for note in &report.notes {
+        println!("note: {note}");
+    }
+    if report.ok() {
+        println!(
+            "bench-check: OK — {} series across {} files, {} relation/baseline notes",
+            all_cases.len(),
+            BENCH_FILES.len(),
+            report.notes.len()
+        );
+        0
+    } else {
+        for f in &report.failures {
+            eprintln!("FAIL: {f}");
+        }
+        eprintln!("bench-check: {} failure(s)", report.failures.len());
+        1
+    }
 }
 
 fn fail(e: impl std::fmt::Display) -> i32 {

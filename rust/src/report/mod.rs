@@ -13,10 +13,10 @@
 //! * [`plan_table`] — the unified engine-plan report: one row per planned
 //!   engine (conv, FC, max-pool, fused ReLU) with instances, work,
 //!   cycles, and resources.
-//! * [`fleet_table`] / [`serve_table`] / [`serve_group_table`] — the
-//!   serving tier's modeled-fleet and measured-fleet reports
-//!   (`acf serve`), broken out per device group for heterogeneous
-//!   fleets.
+//! * [`fleet_table`] / [`serve_table`] / [`serve_group_table`] /
+//!   [`rebalance_table`] — the serving tier's modeled-fleet and
+//!   measured-fleet reports (`acf serve`), broken out per device group
+//!   for heterogeneous fleets, plus the dynamic-rebalance timeline.
 
 use crate::cnn::model::{Layer, Model};
 use crate::fabric::device::{by_name, catalog, Device};
@@ -220,15 +220,30 @@ pub fn serve_table(snap: &FleetSnapshot) -> Table {
 }
 
 /// The per-device-group serving report: measured latency quantiles,
-/// utilization, and queue pressure broken out per physical part — the
-/// view that shows which silicon is falling behind in a heterogeneous
-/// fleet.
+/// utilization, queue pressure, and the drain summary broken out per
+/// physical part — the view that shows which silicon is falling behind
+/// in a heterogeneous fleet, and whether every retired replica actually
+/// finished its in-flight work ("drains" counts clean drains vs drain-
+/// deadline misses; a miss also shows how many images were left behind).
 pub fn serve_group_table(snap: &FleetSnapshot) -> Table {
     let mut t = Table::new(vec![
-        "device", "replicas", "images", "util %", "p50 ms", "p95 ms", "p99 ms", "in-flight peak",
+        "device",
+        "replicas",
+        "images",
+        "util %",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "in-flight peak",
+        "drains ok/late",
     ])
     .numeric();
     for g in &snap.groups {
+        let drains = if g.drain_failed > 0 {
+            format!("{}/{} ({} img stuck)", g.drained, g.drain_failed, g.drain_leftover_images)
+        } else {
+            format!("{}/0", g.drained)
+        };
         t.row(vec![
             g.label.clone(),
             g.replicas.to_string(),
@@ -238,6 +253,25 @@ pub fn serve_group_table(snap: &FleetSnapshot) -> Table {
             fnum(g.p95_ms, 2),
             fnum(g.p99_ms, 2),
             g.in_flight_peak.to_string(),
+            drains,
+        ]);
+    }
+    t
+}
+
+/// The rebalance timeline: one row per scale action, in order — when it
+/// fired, which device group it resized, how, and the signal that
+/// triggered it. Printed by `acf serve --rebalance` after the load run.
+pub fn rebalance_table(events: &[crate::serve::RebalanceEvent]) -> Table {
+    let mut t =
+        Table::new(vec!["t (s)", "device", "action", "replicas", "trigger"]).numeric();
+    for e in events {
+        t.row(vec![
+            fnum(e.at_secs, 2),
+            e.label.clone(),
+            e.action.to_string(),
+            format!("{} -> {}", e.from, e.to),
+            e.reason.clone(),
         ]);
     }
     t
@@ -561,6 +595,33 @@ mod tests {
         assert_eq!(t.cell(0, 0), "fleet");
         assert_eq!(t.cell(0, 1), "2");
         assert_eq!(t.cell(0, 2), "4");
+        // No retirements: a clean "0/0" drain summary.
+        assert_eq!(t.cell(0, 8), "0/0");
+    }
+
+    #[test]
+    fn drain_summary_and_rebalance_timeline_render() {
+        let m = crate::serve::FleetMetrics::new(2);
+        m.note_drained(0);
+        m.note_drain_timeout(0, 3);
+        m.note_rebalance(crate::serve::RebalanceEvent {
+            at_secs: 0.0,
+            group: 0,
+            label: "fleet".into(),
+            action: crate::serve::RebalanceAction::Grow,
+            from: 1,
+            to: 2,
+            reason: "queue 80% full".into(),
+        });
+        let snap = m.snapshot();
+        let t = serve_group_table(&snap);
+        assert_eq!(t.cell(0, 8), "1/1 (3 img stuck)");
+        let t = rebalance_table(&snap.events);
+        assert_eq!(t.n_rows(), 1);
+        assert_eq!(t.cell(0, 1), "fleet");
+        assert_eq!(t.cell(0, 2), "grow");
+        assert_eq!(t.cell(0, 3), "1 -> 2");
+        assert!(t.cell(0, 4).contains("queue"));
     }
 
     #[test]

@@ -103,6 +103,10 @@ impl FleetSpec {
 pub struct GroupPlan {
     /// The undivided physical part this group runs on.
     pub device: Device,
+    /// Index of the [`FleetSpec`] entry (and therefore the
+    /// [`FleetFrontier`] group) this plan came from — the same part can
+    /// be listed twice (two boards), so names are not a key.
+    pub spec_entry: usize,
     pub replicas: usize,
     /// The plan every replica of this group deploys (made against
     /// `device.shard(replicas)` with per-replica coefficient BRAM
@@ -171,8 +175,13 @@ impl FleetPlan {
     /// order, all sharing one model and one weight set. Replicas of
     /// different groups run different plans.
     pub fn deploy(&self, model: Model, weights: Weights) -> Vec<Arc<Deployment>> {
-        let model = Arc::new(model);
-        let weights = Arc::new(weights);
+        self.deploy_shared(Arc::new(model), Arc::new(weights))
+    }
+
+    /// [`FleetPlan::deploy`] against already-shared model/weight handles —
+    /// what the rebalancer uses so replicas it spins up later share the
+    /// exact same allocations as the initial fleet.
+    pub fn deploy_shared(&self, model: Arc<Model>, weights: Arc<Weights>) -> Vec<Arc<Deployment>> {
         let mut out = Vec::with_capacity(self.replicas());
         for g in &self.groups {
             for _ in 0..g.replicas {
@@ -193,6 +202,7 @@ impl FleetPlan {
 fn plan_group(
     model: &Model,
     dev: &Device,
+    spec_entry: usize,
     clock_mhz: f64,
     policy: &Policy,
     count: usize,
@@ -204,6 +214,7 @@ fn plan_group(
     total.bram18 += coef * r as u64;
     Ok(GroupPlan {
         device: dev.clone(),
+        spec_entry,
         replicas: r,
         group_img_s: r as f64 * per_replica.images_per_sec,
         coef_bram18: coef,
@@ -212,48 +223,158 @@ fn plan_group(
     })
 }
 
-/// Build one device's count frontier: candidates at `1..=max` (or exactly
-/// the forced count), stopping at the first infeasible count — shards
-/// only shrink as `r` grows, so feasibility is monotone.
-fn group_frontier(
-    model: &Model,
-    dev: &Device,
-    clock_mhz: f64,
-    policy: &Policy,
-    forced: Option<usize>,
-    max_replicas: usize,
-) -> Result<Vec<GroupPlan>, PlanError> {
-    if let Some(r) = forced {
-        return Ok(vec![plan_group(model, dev, clock_mhz, policy, r)?]);
-    }
-    let mut out = Vec::new();
-    let mut first_err: Option<PlanError> = None;
-    for r in 1..=max_replicas.max(1) {
-        match plan_group(model, dev, clock_mhz, policy, r) {
-            Ok(g) => out.push(g),
-            Err(e) => {
-                first_err = Some(e);
-                break;
-            }
-        }
-    }
-    if out.is_empty() {
-        return Err(first_err.expect("loop ran at least once"));
-    }
-    Ok(out)
+/// One device's memoized count → plan frontier: `counts[c - 1]` is the
+/// group plan at `c` replicas (each against a `1/c` shard with its
+/// coefficient BRAM charged). Built once at plan time; the live
+/// rebalancer resizes groups by *indexing* this — no planner run ever
+/// happens while traffic is flowing.
+#[derive(Debug, Clone)]
+pub struct GroupFrontier {
+    pub device: Device,
+    /// Index of the [`FleetSpec`] entry this frontier belongs to.
+    pub spec_entry: usize,
+    /// Forced replica count, if the spec pinned one (the rebalancer
+    /// leaves forced groups alone).
+    pub forced: Option<usize>,
+    counts: Vec<GroupPlan>,
 }
 
-/// The throughput-argmax candidate of a frontier (ties go to more
-/// replicas — more concurrent request capacity at the same rate).
-fn best_of(frontier: &[GroupPlan]) -> &GroupPlan {
-    frontier
-        .iter()
-        .max_by(|a, b| {
-            (a.group_img_s, a.replicas)
-                .partial_cmp(&(b.group_img_s, b.replicas))
-                .expect("throughput is finite")
-        })
-        .expect("frontier is non-empty")
+impl GroupFrontier {
+    /// Largest feasible replica count (the frontier is contiguous from 1:
+    /// shards only shrink as the count grows, so feasibility is monotone).
+    pub fn max_count(&self) -> usize {
+        self.forced.unwrap_or(self.counts.len())
+    }
+
+    /// Smallest plannable count (1, or the forced count when pinned).
+    pub fn min_count(&self) -> usize {
+        self.forced.unwrap_or(1)
+    }
+
+    /// The memoized group plan at `count` replicas.
+    pub fn at(&self, count: usize) -> &GroupPlan {
+        if let Some(f) = self.forced {
+            assert_eq!(count, f, "group is pinned to {f} replicas");
+            return &self.counts[0];
+        }
+        assert!(
+            (1..=self.counts.len()).contains(&count),
+            "count {count} outside frontier 1..={}",
+            self.counts.len()
+        );
+        &self.counts[count - 1]
+    }
+
+    /// The throughput-argmax candidate (ties go to more replicas — more
+    /// concurrent request capacity at the same rate).
+    pub fn argmax(&self) -> &GroupPlan {
+        self.counts
+            .iter()
+            .max_by(|a, b| {
+                (a.group_img_s, a.replicas)
+                    .partial_cmp(&(b.group_img_s, b.replicas))
+                    .expect("throughput is finite")
+            })
+            .expect("frontier is non-empty")
+    }
+}
+
+/// The memoized fleet-wide plan frontier: one [`GroupFrontier`] per
+/// feasible spec entry. This is what PR 4's composition search walks and
+/// what the PR 5 rebalancer keeps attached at serve time.
+#[derive(Debug, Clone)]
+pub struct FleetFrontier {
+    pub clock_mhz: f64,
+    pub groups: Vec<GroupFrontier>,
+}
+
+impl FleetFrontier {
+    /// Build every device's count frontier: candidates at `1..=max`
+    /// (or exactly the forced count), stopping at the first infeasible
+    /// count. A forced count that cannot plan is the caller's mistake
+    /// (error); an unforced device that fits nothing just sits the fleet
+    /// out — unless *no* device fits, which returns the first error.
+    pub fn build(
+        model: &Model,
+        spec: &FleetSpec,
+        clock_mhz: f64,
+        policy: &Policy,
+        max_replicas: usize,
+    ) -> Result<FleetFrontier, PlanError> {
+        assert!(!spec.entries.is_empty(), "a fleet spec needs at least one device");
+        let mut groups = Vec::new();
+        let mut first_err: Option<PlanError> = None;
+        for (si, entry) in spec.entries.iter().enumerate() {
+            let built: Result<Vec<GroupPlan>, PlanError> = match entry.count {
+                Some(r) => plan_group(model, &entry.device, si, clock_mhz, policy, r)
+                    .map(|g| vec![g]),
+                None => {
+                    let mut out = Vec::new();
+                    let mut err: Option<PlanError> = None;
+                    for r in 1..=max_replicas.max(1) {
+                        match plan_group(model, &entry.device, si, clock_mhz, policy, r) {
+                            Ok(g) => out.push(g),
+                            Err(e) => {
+                                err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    if out.is_empty() {
+                        Err(err.expect("loop ran at least once"))
+                    } else {
+                        Ok(out)
+                    }
+                }
+            };
+            match built {
+                Ok(counts) => groups.push(GroupFrontier {
+                    device: entry.device.clone(),
+                    spec_entry: si,
+                    forced: entry.count,
+                    counts,
+                }),
+                Err(e) if entry.count.is_some() => return Err(e),
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        if groups.is_empty() {
+            return Err(first_err.expect("at least one entry failed"));
+        }
+        Ok(FleetFrontier { clock_mhz, groups })
+    }
+
+    /// Assemble a [`FleetPlan`] at explicit per-group counts (`counts[i]`
+    /// replicas for `groups[i]`; 0 leaves the group out). This is the
+    /// rebalancer's entry point for "what would the fleet look like at
+    /// these counts" and the test harness's way to start a fleet below
+    /// its argmax.
+    pub fn fleet_at(&self, counts: &[usize]) -> FleetPlan {
+        assert_eq!(counts.len(), self.groups.len(), "one count per frontier group");
+        let chosen: Vec<GroupPlan> = self
+            .groups
+            .iter()
+            .zip(counts)
+            .filter(|(_, &c)| c > 0)
+            .map(|(g, &c)| g.at(c).clone())
+            .collect();
+        assert!(!chosen.is_empty(), "a fleet needs at least one replica");
+        compose(self.clock_mhz, chosen, None)
+    }
+}
+
+/// Finalize a fleet from chosen group plans.
+fn compose(clock_mhz: f64, groups: Vec<GroupPlan>, target_img_s: Option<f64>) -> FleetPlan {
+    let fleet_img_s = groups.iter().map(|g| g.group_img_s).sum::<f64>();
+    let static_w = groups.iter().map(|g| g.device.static_w).sum::<f64>();
+    FleetPlan {
+        clock_mhz,
+        groups,
+        fleet_img_s,
+        static_w,
+        target_img_s,
+        meets_target: target_img_s.map(|t| fleet_img_s >= t).unwrap_or(true),
+    }
 }
 
 /// Plan a heterogeneous fleet across `spec`'s devices.
@@ -279,22 +400,22 @@ pub fn plan_fleet_spec(
     target_img_s: Option<f64>,
     max_replicas: usize,
 ) -> Result<FleetPlan, PlanError> {
-    assert!(!spec.entries.is_empty(), "a fleet spec needs at least one device");
-    // Per-device argmax candidates, in spec order.
-    let mut candidates: Vec<(GroupPlan, bool)> = Vec::new(); // (group, forced?)
-    let mut first_err: Option<PlanError> = None;
-    for entry in &spec.entries {
-        match group_frontier(model, &entry.device, clock_mhz, policy, entry.count, max_replicas) {
-            Ok(frontier) => candidates.push((best_of(&frontier).clone(), entry.count.is_some())),
-            // A forced count that cannot plan is the caller's mistake; an
-            // unforced device that fits nothing just sits the fleet out.
-            Err(e) if entry.count.is_some() => return Err(e),
-            Err(e) => first_err = first_err.or(Some(e)),
-        }
-    }
-    if candidates.is_empty() {
-        return Err(first_err.expect("at least one entry failed"));
-    }
+    let frontier = FleetFrontier::build(model, spec, clock_mhz, policy, max_replicas)?;
+    Ok(compose_frontier(&frontier, target_img_s))
+}
+
+/// The PR 4 composition search over an already-built frontier: per-group
+/// argmax candidates, then (under a target) the cheapest static-power
+/// mix. Separated from [`plan_fleet_spec`] so the rebalancer can re-run
+/// composition against its memoized frontier without replanning.
+pub fn compose_frontier(frontier: &FleetFrontier, target_img_s: Option<f64>) -> FleetPlan {
+    let candidates: Vec<(GroupPlan, bool)> = frontier
+        .groups
+        .iter()
+        .map(|g| (g.argmax().clone(), g.forced.is_some()))
+        .collect();
+    assert!(!candidates.is_empty(), "frontier has at least one group");
+    let clock_mhz = frontier.clock_mhz;
 
     let chosen: Vec<GroupPlan> = match target_img_s {
         None => candidates.into_iter().map(|(g, _)| g).collect(),
@@ -356,17 +477,16 @@ pub fn plan_fleet_spec(
         }
     };
     assert!(!chosen.is_empty(), "composition keeps at least one group");
+    compose(clock_mhz, chosen, target_img_s)
+}
 
-    let fleet_img_s = chosen.iter().map(|g| g.group_img_s).sum::<f64>();
-    let static_w = chosen.iter().map(|g| g.device.static_w).sum::<f64>();
-    Ok(FleetPlan {
-        clock_mhz,
-        groups: chosen,
-        fleet_img_s,
-        static_w,
-        target_img_s,
-        meets_target: target_img_s.map(|t| fleet_img_s >= t).unwrap_or(true),
-    })
+/// A plan's engine signature: `(layer, kind, instances)` per engine
+/// site. Two shard plans with equal signatures deploy identical
+/// pipelines, so a group can be resized by adding/retiring replicas
+/// *incrementally* instead of rolling the whole group onto new plans —
+/// the common case for models far from the resource ceiling.
+pub fn plan_signature(plan: &Plan) -> Vec<(usize, crate::ips::engine::EngineKind, u64)> {
+    plan.engines.iter().map(|e| (e.layer, e.kind, e.instances)).collect()
 }
 
 /// Plan a single-device fleet of exactly `replicas` copies (the CLI's
@@ -579,6 +699,72 @@ mod tests {
         assert!(FleetSpec::parse("zcu104:0", &[]).is_err());
         assert!(FleetSpec::parse("", &[]).is_err());
         assert!(FleetSpec::parse(" , ", &[]).is_err());
+    }
+
+    #[test]
+    fn frontier_memoizes_counts_and_composes_at_any_point() {
+        let m = Model::lenet_tiny();
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: by_name("zcu104").unwrap(), count: None },
+                FleetEntry { device: by_name("zu5ev").unwrap(), count: None },
+            ],
+        };
+        let fr = FleetFrontier::build(&m, &spec, 200.0, &adaptive(), 4).unwrap();
+        assert_eq!(fr.groups.len(), 2);
+        assert_eq!(fr.groups[0].spec_entry, 0);
+        assert!(fr.groups[0].max_count() >= 2, "zcu104 carries at least two replicas");
+        // at() returns exactly the plan the full search would make.
+        for c in 1..=fr.groups[0].max_count() {
+            let g = fr.groups[0].at(c);
+            assert_eq!(g.replicas, c);
+            let zcu = by_name("zcu104").unwrap();
+            let direct = plan_fixed_fleet(&m, &zcu, 200.0, &adaptive(), c, None).unwrap();
+            assert!((g.group_img_s - direct.groups[0].group_img_s).abs() < 1e-6);
+        }
+        // Composition over the frontier == the one-shot search.
+        let via_frontier = compose_frontier(&fr, None);
+        let direct = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 4).unwrap();
+        assert!((via_frontier.fleet_img_s - direct.fleet_img_s).abs() < 1e-6);
+        assert_eq!(via_frontier.replicas(), direct.replicas());
+        // fleet_at pins explicit counts — including starting BELOW the
+        // argmax (the rebalancer's low-water starting point) and leaving
+        // a group out entirely.
+        let low = fr.fleet_at(&[1, 1]);
+        assert_eq!(low.replicas(), 2);
+        assert_eq!(low.groups.len(), 2);
+        assert!(low.fleet_img_s <= via_frontier.fleet_img_s + 1e-9);
+        let solo = fr.fleet_at(&[1, 0]);
+        assert_eq!(solo.groups.len(), 1);
+        assert_eq!(solo.groups[0].device.name, "zcu104");
+    }
+
+    #[test]
+    fn plan_signature_detects_identical_and_different_shard_plans() {
+        let m = Model::lenet_tiny();
+        let fr = FleetFrontier::build(
+            &m,
+            &FleetSpec::single(by_name("zcu104").unwrap(), None),
+            200.0,
+            &adaptive(),
+            3,
+        )
+        .unwrap();
+        let g = &fr.groups[0];
+        // A plan's signature equals itself and is stable across clones.
+        let s1 = plan_signature(&g.at(1).per_replica);
+        assert_eq!(s1, plan_signature(&g.at(1).per_replica.clone()));
+        // Different devices produce different signatures (the edge part
+        // substitutes IPs — the paper's adaptive story).
+        let edge = FleetFrontier::build(
+            &m,
+            &FleetSpec::single(by_name("edge-nodsp").unwrap(), None),
+            200.0,
+            &adaptive(),
+            1,
+        )
+        .unwrap();
+        assert_ne!(s1, plan_signature(&edge.groups[0].at(1).per_replica));
     }
 
     #[test]

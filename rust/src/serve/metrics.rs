@@ -1,6 +1,6 @@
 //! Fleet-level serving metrics: request counters, queue pressure,
-//! end-to-end latency quantiles, and per-replica / per-device-group
-//! utilization.
+//! end-to-end latency quantiles, per-replica / per-device-group
+//! utilization, windowed control signals, and the rebalance event log.
 //!
 //! Latency is measured from *admission* (the request entering the bounded
 //! submission queue) to *completion* (logits handed back), so queue wait
@@ -13,13 +13,21 @@
 //! Heterogeneous fleets make the *group* axis the interesting one: a
 //! DSP-starved part serves slower than the paper's board, so fleet-wide
 //! quantiles hide which silicon is falling behind. Every replica is
-//! assigned to a device group at construction
-//! ([`FleetMetrics::grouped`]); latency, utilization, and dispatch
-//! pressure (in-flight images) are broken out per group in
+//! assigned to a device group at registration; latency, utilization, and
+//! dispatch pressure (in-flight images) are broken out per group in
 //! [`FleetSnapshot::groups`].
+//!
+//! Since the rebalancing tier (PR 5) the replica set is *dynamic*: the
+//! registry is an append-only `RwLock<Vec<_>>` — replica ids are stable
+//! for the life of the server, retired replicas keep their history (and
+//! show up flagged in the snapshot), and group "replicas" counts track
+//! the *live* membership. Latency samples carry their completion offset
+//! so [`FleetMetrics::window`] can answer "what happened in the last
+//! control period" without a second reservoir, and every scale action is
+//! recorded in the [`RebalanceEvent`] log the timeline report prints.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Live counters for one replica of the fleet.
@@ -27,11 +35,22 @@ use std::time::{Duration, Instant};
 pub struct ReplicaMetrics {
     /// Images dispatched to (but not yet completed by) this replica —
     /// the dispatch-load key (divided by the replica's modeled rate for
-    /// throughput-weighted selection).
+    /// throughput-weighted selection) and the drain signal the retire
+    /// path waits on.
     in_flight: AtomicU64,
     images: AtomicU64,
     batches: AtomicU64,
     busy_nanos: AtomicU64,
+    /// Set when the replica is marked for retirement (no new dispatches);
+    /// history is kept so the final report still shows its work.
+    retired: AtomicBool,
+}
+
+/// Registry entry: a replica and the device group it belongs to.
+#[derive(Debug)]
+struct ReplicaEntry {
+    group: usize,
+    m: ReplicaMetrics,
 }
 
 /// Live counters for one device group (all replicas on one physical
@@ -39,7 +58,10 @@ pub struct ReplicaMetrics {
 #[derive(Debug)]
 struct GroupMetrics {
     label: String,
-    replicas: usize,
+    /// Replicas currently serving (registered minus retiring/retired).
+    live: AtomicU64,
+    /// Replicas ever registered to this group (rebalance churn included).
+    spawned: AtomicU64,
     images: AtomicU64,
     batches: AtomicU64,
     busy_nanos: AtomicU64,
@@ -47,25 +69,105 @@ struct GroupMetrics {
     /// share of queue pressure.
     in_flight: AtomicU64,
     in_flight_peak: AtomicU64,
-    latencies_nanos: Mutex<Vec<u64>>,
+    /// `(completion offset from start, latency)` in nanos — the offset is
+    /// what lets [`FleetMetrics::window`] cut a sliding window out of the
+    /// same reservoir the all-time quantiles use.
+    latencies_nanos: Mutex<Vec<(u64, u64)>>,
+    /// Drain outcomes: replicas retired after a clean drain vs replicas
+    /// that missed their drain deadline (and how many images they still
+    /// held when it expired). Shutdown and live retirement both report
+    /// here — a replica that fails to drain is surfaced, never silently
+    /// dropped.
+    drained: AtomicU64,
+    drain_failed: AtomicU64,
+    drain_leftover_images: AtomicU64,
 }
 
 impl GroupMetrics {
-    fn new(label: String, replicas: usize) -> GroupMetrics {
+    fn new(label: String) -> GroupMetrics {
         GroupMetrics {
             label,
-            replicas,
+            live: AtomicU64::new(0),
+            spawned: AtomicU64::new(0),
             images: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             busy_nanos: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
             in_flight_peak: AtomicU64::new(0),
             latencies_nanos: Mutex::new(Vec::new()),
+            drained: AtomicU64::new(0),
+            drain_failed: AtomicU64::new(0),
+            drain_leftover_images: AtomicU64::new(0),
         }
     }
 }
 
-/// Live fleet metrics shared by the scheduler, the runners, and callers.
+/// What a rebalance action did to one device group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceAction {
+    /// Replicas added on the group's existing per-replica plan.
+    Grow,
+    /// Replicas retired (after drain) from the group's existing plan.
+    Shrink,
+    /// The whole group rolled onto a different frontier plan: new
+    /// replicas spun up first, old ones retired after their in-flight
+    /// micro-batches drained.
+    Swap,
+}
+
+impl std::fmt::Display for RebalanceAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RebalanceAction::Grow => write!(f, "grow"),
+            RebalanceAction::Shrink => write!(f, "shrink"),
+            RebalanceAction::Swap => write!(f, "swap"),
+        }
+    }
+}
+
+/// One entry of the rebalance timeline (what `report::rebalance_table`
+/// prints and the step-load integration test asserts on).
+#[derive(Debug, Clone)]
+pub struct RebalanceEvent {
+    /// Seconds since the metrics clock started.
+    pub at_secs: f64,
+    /// Device-group index the action applied to.
+    pub group: usize,
+    pub label: String,
+    pub action: RebalanceAction,
+    /// Replica count before / after the action.
+    pub from: usize,
+    pub to: usize,
+    /// The signal that triggered it (human-readable).
+    pub reason: String,
+}
+
+/// One group's sliding-window control signals (what the rebalancer reads
+/// each tick — deliberately cheap: only the window's own latency samples
+/// are sorted, never the all-time reservoirs).
+#[derive(Debug, Clone)]
+pub struct GroupWindow {
+    pub group: usize,
+    pub label: String,
+    /// Replicas currently live in the group.
+    pub live: usize,
+    /// Requests completed inside the window.
+    pub completed: u64,
+    /// Completion rate over the window.
+    pub img_s: f64,
+    /// p50 latency over the window's completions (0 when idle).
+    pub p50_ms: f64,
+    /// p99 latency over the window's completions (0 when idle).
+    pub p99_ms: f64,
+    /// Images dispatched to the group and not yet retired, now.
+    pub in_flight: u64,
+    /// Cumulative busy seconds (the controller differences consecutive
+    /// ticks for windowed utilization — one atomic load here).
+    pub busy_secs: f64,
+}
+
+/// Live fleet metrics shared by the scheduler, the runners, the
+/// rebalancer, and callers.
 #[derive(Debug)]
 pub struct FleetMetrics {
     started: Instant,
@@ -83,11 +185,12 @@ pub struct FleetMetrics {
     /// sustained-throughput window.
     first_done_nanos: AtomicU64,
     last_done_nanos: AtomicU64,
-    latencies_nanos: Mutex<Vec<u64>>,
-    replicas: Vec<ReplicaMetrics>,
-    /// Device-group index per replica (same length as `replicas`).
-    replica_group: Vec<usize>,
+    latencies_nanos: Mutex<Vec<(u64, u64)>>,
+    /// Append-only replica registry; ids are indices and stay valid after
+    /// retirement.
+    replicas: RwLock<Vec<ReplicaEntry>>,
     groups: Vec<GroupMetrics>,
+    events: Mutex<Vec<RebalanceEvent>>,
 }
 
 impl FleetMetrics {
@@ -99,21 +202,15 @@ impl FleetMetrics {
 
     /// A heterogeneous fleet: `replica_group[i]` is the device-group
     /// index of replica `i`, `labels[g]` its display name (one entry per
-    /// group; every index in `replica_group` must be covered).
+    /// group). More replicas can be registered later with
+    /// [`FleetMetrics::register_replica`]; the group set is fixed.
     pub fn grouped(replica_group: Vec<usize>, labels: Vec<String>) -> FleetMetrics {
         assert!(!labels.is_empty(), "a fleet has at least one device group");
         assert!(
             replica_group.iter().all(|&g| g < labels.len()),
             "replica group index out of range"
         );
-        let groups = labels
-            .into_iter()
-            .enumerate()
-            .map(|(gi, label)| {
-                GroupMetrics::new(label, replica_group.iter().filter(|&&g| g == gi).count())
-            })
-            .collect();
-        FleetMetrics {
+        let m = FleetMetrics {
             started: Instant::now(),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -124,14 +221,74 @@ impl FleetMetrics {
             first_done_nanos: AtomicU64::new(u64::MAX),
             last_done_nanos: AtomicU64::new(0),
             latencies_nanos: Mutex::new(Vec::new()),
-            replicas: replica_group.iter().map(|_| ReplicaMetrics::default()).collect(),
-            replica_group,
-            groups,
+            replicas: RwLock::new(Vec::new()),
+            groups: labels.into_iter().map(GroupMetrics::new).collect(),
+            events: Mutex::new(Vec::new()),
+        };
+        for g in replica_group {
+            m.register_replica(g);
+        }
+        m
+    }
+
+    /// Register a new replica in device group `group`, returning its
+    /// stable replica id. Ids are never reused; a retired replica keeps
+    /// its slot (and its history) in the registry.
+    pub fn register_replica(&self, group: usize) -> usize {
+        assert!(group < self.groups.len(), "replica group index out of range");
+        let mut reg = self.replicas.write().unwrap();
+        let id = reg.len();
+        reg.push(ReplicaEntry { group, m: ReplicaMetrics::default() });
+        self.groups[group].live.fetch_add(1, Ordering::Relaxed);
+        self.groups[group].spawned.fetch_add(1, Ordering::Relaxed);
+        id
+    }
+
+    /// Mark `replica` as retiring: the dispatcher has stopped feeding it
+    /// and its group's live count drops now (drain outcome is reported
+    /// separately via [`FleetMetrics::note_drained`] /
+    /// [`FleetMetrics::note_drain_timeout`]).
+    pub fn note_retiring(&self, replica: usize) {
+        let reg = self.replicas.read().unwrap();
+        if let Some(e) = reg.get(replica) {
+            if !e.m.retired.swap(true, Ordering::Relaxed) {
+                saturating_dec(&self.groups[e.group].live, 1);
+            }
         }
     }
 
-    fn group_of(&self, replica: usize) -> Option<&GroupMetrics> {
-        self.replica_group.get(replica).and_then(|&g| self.groups.get(g))
+    /// A retiring replica of `group` drained cleanly (in-flight reached
+    /// zero before the deadline).
+    pub fn note_drained(&self, group: usize) {
+        if let Some(g) = self.groups.get(group) {
+            g.drained.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A retiring replica of `group` missed its drain deadline while
+    /// still holding `leftover` images. The replica is detached and
+    /// reported — never silently dropped.
+    pub fn note_drain_timeout(&self, group: usize, leftover: u64) {
+        if let Some(g) = self.groups.get(group) {
+            g.drain_failed.fetch_add(1, Ordering::Relaxed);
+            g.drain_leftover_images.fetch_add(leftover, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one rebalance action in the timeline.
+    pub fn note_rebalance(&self, mut event: RebalanceEvent) {
+        event.at_secs = self.started.elapsed().as_secs_f64();
+        self.events.lock().unwrap().push(event);
+    }
+
+    /// The rebalance timeline so far.
+    pub fn events(&self) -> Vec<RebalanceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    fn with_group_of<T>(&self, replica: usize, f: impl FnOnce(&GroupMetrics) -> T) -> Option<T> {
+        let reg = self.replicas.read().unwrap();
+        reg.get(replica).and_then(|e| self.groups.get(e.group)).map(f)
     }
 
     /// A request entered the submission queue.
@@ -149,12 +306,27 @@ impl FleetMetrics {
     /// `n` requests left the queue as one micro-batch bound for `replica`.
     pub fn note_dispatched(&self, replica: usize, n: u64) {
         self.dispatched.fetch_add(n, Ordering::Relaxed);
-        if let Some(r) = self.replicas.get(replica) {
-            r.in_flight.fetch_add(n, Ordering::Relaxed);
+        let reg = self.replicas.read().unwrap();
+        if let Some(e) = reg.get(replica) {
+            e.m.in_flight.fetch_add(n, Ordering::Relaxed);
+            if let Some(g) = self.groups.get(e.group) {
+                let now = g.in_flight.fetch_add(n, Ordering::Relaxed) + n;
+                g.in_flight_peak.fetch_max(now, Ordering::Relaxed);
+            }
         }
-        if let Some(g) = self.group_of(replica) {
-            let now = g.in_flight.fetch_add(n, Ordering::Relaxed) + n;
-            g.in_flight_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// A dispatch to `replica` bounced (its feed closed mid-handoff
+    /// during retirement) and the batch is being re-dispatched: undo the
+    /// dispatch accounting so queue depth and in-flight stay honest.
+    pub fn note_requeued(&self, replica: usize, n: u64) {
+        saturating_dec(&self.dispatched, n);
+        let reg = self.replicas.read().unwrap();
+        if let Some(e) = reg.get(replica) {
+            saturating_dec(&e.m.in_flight, n);
+            if let Some(g) = self.groups.get(e.group) {
+                saturating_dec(&g.in_flight, n);
+            }
         }
     }
 
@@ -166,10 +338,10 @@ impl FleetMetrics {
         self.first_done_nanos.fetch_min(now, Ordering::Relaxed);
         self.last_done_nanos.fetch_max(now, Ordering::Relaxed);
         let nanos = latency.as_nanos() as u64;
-        self.latencies_nanos.lock().unwrap().push(nanos);
-        if let Some(g) = self.group_of(replica) {
-            g.latencies_nanos.lock().unwrap().push(nanos);
-        }
+        self.latencies_nanos.lock().unwrap().push((now, nanos));
+        let _ = self.with_group_of(replica, |g| {
+            g.latencies_nanos.lock().unwrap().push((now, nanos));
+        });
     }
 
     /// One request failed inside a replica.
@@ -177,32 +349,131 @@ impl FleetMetrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `n` admitted requests left the queue permanently without reaching
+    /// any replica (every slot gone — each request was also failed
+    /// individually). Keeps the `accepted - dispatched` queue-depth
+    /// derivation honest.
+    pub fn note_abandoned(&self, n: u64) {
+        self.dispatched.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// `replica`'s runner died with work still dispatched to it (its
+    /// feed channel dropped, taking any queued micro-batches along).
+    /// Zero its in-flight gauge, release the group's share, and count
+    /// the trapped images as failed — their reply channels dropped with
+    /// the batches, so the callers already see errors; the books must
+    /// agree. Returns how many images were lost.
+    pub fn note_dead_replica(&self, replica: usize) -> u64 {
+        let reg = self.replicas.read().unwrap();
+        let Some(e) = reg.get(replica) else {
+            return 0;
+        };
+        let lost = e.m.in_flight.swap(0, Ordering::Relaxed);
+        if lost > 0 {
+            if let Some(g) = self.groups.get(e.group) {
+                saturating_dec(&g.in_flight, lost);
+            }
+            self.failed.fetch_add(lost, Ordering::Relaxed);
+        }
+        lost
+    }
+
     /// `replica` retired a micro-batch of `n` images in `busy` wall time.
     pub fn note_replica_batch(&self, replica: usize, n: u64, busy: Duration) {
         let busy_nanos = busy.as_nanos() as u64;
-        if let Some(r) = self.replicas.get(replica) {
-            r.images.fetch_add(n, Ordering::Relaxed);
-            r.batches.fetch_add(1, Ordering::Relaxed);
-            r.busy_nanos.fetch_add(busy_nanos, Ordering::Relaxed);
-            saturating_dec(&r.in_flight, n);
-        }
-        if let Some(g) = self.group_of(replica) {
-            g.images.fetch_add(n, Ordering::Relaxed);
-            g.batches.fetch_add(1, Ordering::Relaxed);
-            g.busy_nanos.fetch_add(busy_nanos, Ordering::Relaxed);
-            saturating_dec(&g.in_flight, n);
+        let reg = self.replicas.read().unwrap();
+        if let Some(e) = reg.get(replica) {
+            e.m.images.fetch_add(n, Ordering::Relaxed);
+            e.m.batches.fetch_add(1, Ordering::Relaxed);
+            e.m.busy_nanos.fetch_add(busy_nanos, Ordering::Relaxed);
+            saturating_dec(&e.m.in_flight, n);
+            if let Some(g) = self.groups.get(e.group) {
+                g.images.fetch_add(n, Ordering::Relaxed);
+                g.batches.fetch_add(1, Ordering::Relaxed);
+                g.busy_nanos.fetch_add(busy_nanos, Ordering::Relaxed);
+                saturating_dec(&g.in_flight, n);
+            }
         }
     }
 
     /// Current dispatched-not-done load per replica (the numerator of the
-    /// throughput-weighted dispatch key).
+    /// throughput-weighted dispatch key, and the retire path's drain
+    /// signal).
     pub fn load_of(&self, replica: usize) -> u64 {
-        self.replicas.get(replica).map(|r| r.in_flight.load(Ordering::Relaxed)).unwrap_or(0)
+        self.replicas
+            .read()
+            .unwrap()
+            .get(replica)
+            .map(|e| e.m.in_flight.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Number of device groups (fixed for the life of the fleet).
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Requests admitted but not yet dispatched, now.
+    pub fn queue_depth(&self) -> u64 {
+        self.accepted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.dispatched.load(Ordering::Relaxed))
+    }
+
+    /// Total requests shed at admission so far (one atomic load — the
+    /// controller differences consecutive ticks).
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Sliding-window control signals per device group: completions,
+    /// rate, and p99 over the last `window`, plus the live replica count
+    /// and current in-flight pressure. This is what the rebalancer's
+    /// control loop reads each tick.
+    pub fn window(&self, window: Duration) -> Vec<GroupWindow> {
+        let now = self.started.elapsed().as_nanos() as u64;
+        let cut = now.saturating_sub(window.as_nanos() as u64);
+        let secs = window.as_secs_f64().max(1e-9);
+        self.groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                // The reservoir is appended in (near-)monotonic
+                // completion-offset order, so the window is a suffix:
+                // walk backwards and stop at the first sample older
+                // than the cut. Cost is O(window), not O(lifetime) —
+                // the control loop ticks 4x/s on servers that may run
+                // for days. Out-of-order jitter at the boundary is
+                // microseconds against windows of ≥ tens of ms.
+                let mut lat: Vec<u64> = g
+                    .latencies_nanos
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .rev()
+                    .take_while(|(off, _)| *off >= cut)
+                    .map(|(_, l)| *l)
+                    .collect();
+                lat.sort_unstable();
+                GroupWindow {
+                    group: gi,
+                    label: g.label.clone(),
+                    live: g.live.load(Ordering::Relaxed) as usize,
+                    completed: lat.len() as u64,
+                    img_s: lat.len() as f64 / secs,
+                    p50_ms: percentile_ms(&lat, 0.50),
+                    p99_ms: percentile_ms(&lat, 0.99),
+                    in_flight: g.in_flight.load(Ordering::Relaxed),
+                    busy_secs: g.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+                }
+            })
+            .collect()
     }
 
     /// Point-in-time aggregate view.
     pub fn snapshot(&self) -> FleetSnapshot {
-        let mut lat: Vec<u64> = self.latencies_nanos.lock().unwrap().clone();
+        let mut lat: Vec<u64> =
+            self.latencies_nanos.lock().unwrap().iter().map(|&(_, l)| l).collect();
         lat.sort_unstable();
         let completed = self.completed.load(Ordering::Relaxed);
         let first = self.first_done_nanos.load(Ordering::Relaxed);
@@ -236,14 +507,16 @@ impl FleetMetrics {
             mean_ms,
             replicas: self
                 .replicas
+                .read()
+                .unwrap()
                 .iter()
-                .zip(&self.replica_group)
-                .map(|(r, &group)| {
-                    let busy_secs = r.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+                .map(|e| {
+                    let busy_secs = e.m.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
                     ReplicaSnapshot {
-                        group,
-                        images: r.images.load(Ordering::Relaxed),
-                        batches: r.batches.load(Ordering::Relaxed),
+                        group: e.group,
+                        retired: e.m.retired.load(Ordering::Relaxed),
+                        images: e.m.images.load(Ordering::Relaxed),
+                        batches: e.m.batches.load(Ordering::Relaxed),
                         busy_secs,
                         utilization: if wall_secs > 0.0 { busy_secs / wall_secs } else { 0.0 },
                     }
@@ -253,14 +526,24 @@ impl FleetMetrics {
                 .groups
                 .iter()
                 .map(|g| {
-                    let mut glat: Vec<u64> = g.latencies_nanos.lock().unwrap().clone();
+                    let mut glat: Vec<u64> = g
+                        .latencies_nanos
+                        .lock()
+                        .unwrap()
+                        .iter()
+                        .map(|&(_, l)| l)
+                        .collect();
                     glat.sort_unstable();
                     let busy_secs = g.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
-                    // A group's capacity-seconds is wall time × replicas.
-                    let cap_secs = wall_secs * g.replicas.max(1) as f64;
+                    let live = g.live.load(Ordering::Relaxed) as usize;
+                    // A group's capacity-seconds is wall time × live
+                    // replicas — an approximation once rebalancing varies
+                    // the count mid-run, but exact for static fleets.
+                    let cap_secs = wall_secs * live.max(1) as f64;
                     GroupSnapshot {
                         label: g.label.clone(),
-                        replicas: g.replicas,
+                        replicas: live,
+                        spawned: g.spawned.load(Ordering::Relaxed),
                         images: g.images.load(Ordering::Relaxed),
                         batches: g.batches.load(Ordering::Relaxed),
                         busy_secs,
@@ -271,9 +554,13 @@ impl FleetMetrics {
                         p99_ms: percentile_ms(&glat, 0.99),
                         in_flight: g.in_flight.load(Ordering::Relaxed),
                         in_flight_peak: g.in_flight_peak.load(Ordering::Relaxed),
+                        drained: g.drained.load(Ordering::Relaxed),
+                        drain_failed: g.drain_failed.load(Ordering::Relaxed),
+                        drain_leftover_images: g.drain_leftover_images.load(Ordering::Relaxed),
                     }
                 })
                 .collect(),
+            events: self.events(),
         }
     }
 }
@@ -313,6 +600,8 @@ pub struct FleetSnapshot {
     pub replicas: Vec<ReplicaSnapshot>,
     /// Per-device-group breakdown (one entry per physical part).
     pub groups: Vec<GroupSnapshot>,
+    /// The rebalance timeline (empty for static fleets).
+    pub events: Vec<RebalanceEvent>,
 }
 
 /// Frozen per-replica statistics.
@@ -320,6 +609,8 @@ pub struct FleetSnapshot {
 pub struct ReplicaSnapshot {
     /// Index into [`FleetSnapshot::groups`].
     pub group: usize,
+    /// Whether the replica had been retired by snapshot time.
+    pub retired: bool,
     pub images: u64,
     pub batches: u64,
     pub busy_secs: f64,
@@ -331,11 +622,14 @@ pub struct ReplicaSnapshot {
 #[derive(Debug, Clone)]
 pub struct GroupSnapshot {
     pub label: String,
+    /// Replicas live at snapshot time.
     pub replicas: usize,
+    /// Replicas ever spawned into this group (rebalance churn included).
+    pub spawned: u64,
     pub images: u64,
     pub batches: u64,
     pub busy_secs: f64,
-    /// Busy time over the group's capacity (wall time × replicas).
+    /// Busy time over the group's capacity (wall time × live replicas).
     pub utilization: f64,
     /// Requests completed by this group.
     pub completed: u64,
@@ -346,6 +640,12 @@ pub struct GroupSnapshot {
     /// queue pressure at snapshot time).
     pub in_flight: u64,
     pub in_flight_peak: u64,
+    /// Replicas retired after a clean drain.
+    pub drained: u64,
+    /// Replicas that missed their drain deadline (reported, not hidden).
+    pub drain_failed: u64,
+    /// Images those replicas still held when their deadlines expired.
+    pub drain_leftover_images: u64,
 }
 
 #[cfg(test)]
@@ -381,12 +681,14 @@ mod tests {
         assert_eq!(s.replicas[1].batches, 1);
         assert_eq!(m.load_of(0), 0);
         assert!(s.replicas[0].busy_secs > 0.0);
+        assert!(!s.replicas[0].retired);
         // Both replicas belong to the single default group, which sees
         // every image and every latency sample.
         assert_eq!(s.groups.len(), 1);
         let g = &s.groups[0];
         assert_eq!(g.label, "fleet");
         assert_eq!(g.replicas, 2);
+        assert_eq!(g.spawned, 2);
         assert_eq!(g.images, 10);
         assert_eq!(g.batches, 2);
         assert_eq!(g.completed, 10);
@@ -395,6 +697,10 @@ mod tests {
         assert!((g.p99_ms - s.p99_ms).abs() < 1e-9);
         // Group utilization averages over both replicas' capacity.
         assert!(g.utilization <= s.replicas[0].utilization + s.replicas[1].utilization);
+        // No rebalancing happened: an empty timeline and clean drains.
+        assert!(s.events.is_empty());
+        assert_eq!(g.drained, 0);
+        assert_eq!(g.drain_failed, 0);
     }
 
     #[test]
@@ -454,5 +760,129 @@ mod tests {
         assert!((percentile_ms(&v, 0.50) - 50.0).abs() < 1.01);
         assert!((percentile_ms(&v, 0.99) - 99.0).abs() < 1.01);
         assert_eq!(percentile_ms(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn dynamic_registration_and_retirement() {
+        let m = FleetMetrics::grouped(vec![0], vec!["zcu104".into(), "zu5ev".into()]);
+        // Register into the second (initially empty) group.
+        let r1 = m.register_replica(1);
+        let r2 = m.register_replica(1);
+        assert_eq!((r1, r2), (1, 2));
+        m.note_dispatched(r1, 3);
+        m.note_replica_batch(r1, 3, Duration::from_millis(5));
+        // Retire r1: live drops immediately, history survives.
+        m.note_retiring(r1);
+        m.note_retiring(r1); // idempotent — live only drops once
+        m.note_drained(1);
+        let s = m.snapshot();
+        assert_eq!(s.groups[1].replicas, 1);
+        assert_eq!(s.groups[1].spawned, 2);
+        assert_eq!(s.groups[1].drained, 1);
+        assert_eq!(s.groups[1].drain_failed, 0);
+        assert!(s.replicas[r1].retired);
+        assert_eq!(s.replicas[r1].images, 3);
+        assert!(!s.replicas[r2].retired);
+        // A timed-out drain is reported with its leftover images.
+        m.note_drain_timeout(1, 7);
+        let s = m.snapshot();
+        assert_eq!(s.groups[1].drain_failed, 1);
+        assert_eq!(s.groups[1].drain_leftover_images, 7);
+    }
+
+    #[test]
+    fn dead_replica_releases_gauges_and_counts_failures() {
+        let m = FleetMetrics::new(2);
+        m.note_accepted();
+        m.note_accepted();
+        m.note_accepted();
+        m.note_dispatched(0, 3);
+        assert_eq!(m.load_of(0), 3);
+        // Runner 0 dies with 3 images trapped in its feed.
+        let lost = m.note_dead_replica(0);
+        assert_eq!(lost, 3);
+        assert_eq!(m.load_of(0), 0);
+        let s = m.snapshot();
+        assert_eq!(s.failed, 3);
+        assert_eq!(s.groups[0].in_flight, 0);
+        assert_eq!(s.queue_depth, 0);
+        // Idempotent-ish: nothing left to lose.
+        assert_eq!(m.note_dead_replica(0), 0);
+        assert_eq!(m.note_dead_replica(99), 0);
+    }
+
+    #[test]
+    fn requeue_undoes_dispatch_accounting() {
+        let m = FleetMetrics::new(2);
+        m.note_accepted();
+        m.note_accepted();
+        m.note_dispatched(0, 2);
+        assert_eq!(m.queue_depth(), 0);
+        assert_eq!(m.load_of(0), 2);
+        // The handoff bounced (replica retiring): the batch goes back to
+        // the dispatcher's hand and the books rewind.
+        m.note_requeued(0, 2);
+        assert_eq!(m.queue_depth(), 2);
+        assert_eq!(m.load_of(0), 0);
+        m.note_dispatched(1, 2);
+        assert_eq!(m.queue_depth(), 0);
+        assert_eq!(m.load_of(1), 2);
+    }
+
+    #[test]
+    fn windowed_signals_cut_by_completion_time() {
+        let m = FleetMetrics::grouped(vec![0, 1], vec!["a".into(), "b".into()]);
+        m.note_dispatched(0, 1);
+        m.note_completed(0, Duration::from_millis(3));
+        std::thread::sleep(Duration::from_millis(60));
+        m.note_dispatched(1, 2);
+        m.note_completed(1, Duration::from_millis(9));
+        // A 40 ms window sees only the recent completion on group 1.
+        let w = m.window(Duration::from_millis(40));
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].completed, 0);
+        assert_eq!(w[0].p99_ms, 0.0);
+        assert_eq!(w[1].completed, 1);
+        assert!((w[1].p99_ms - 9.0).abs() < 1e-6);
+        assert!(w[1].img_s > 0.0);
+        assert_eq!(w[1].in_flight, 2); // dispatched 2, completed reply for 1, batch not retired
+        // A generous window sees both.
+        let w = m.window(Duration::from_secs(10));
+        assert_eq!(w[0].completed, 1);
+        assert_eq!(w[1].completed, 1);
+        assert_eq!(w[0].live, 1);
+    }
+
+    #[test]
+    fn rebalance_events_are_timestamped_in_order() {
+        let m = FleetMetrics::new(1);
+        m.note_rebalance(RebalanceEvent {
+            at_secs: -1.0, // overwritten by the metrics clock
+            group: 0,
+            label: "fleet".into(),
+            action: RebalanceAction::Grow,
+            from: 1,
+            to: 2,
+            reason: "queue 80% full".into(),
+        });
+        std::thread::sleep(Duration::from_millis(5));
+        m.note_rebalance(RebalanceEvent {
+            at_secs: -1.0,
+            group: 0,
+            label: "fleet".into(),
+            action: RebalanceAction::Shrink,
+            from: 2,
+            to: 1,
+            reason: "idle".into(),
+        });
+        let ev = m.events();
+        assert_eq!(ev.len(), 2);
+        assert!(ev[0].at_secs >= 0.0);
+        assert!(ev[1].at_secs > ev[0].at_secs);
+        assert_eq!(ev[0].action, RebalanceAction::Grow);
+        assert_eq!(ev[1].action, RebalanceAction::Shrink);
+        assert_eq!(format!("{}", ev[0].action), "grow");
+        let s = m.snapshot();
+        assert_eq!(s.events.len(), 2);
     }
 }

@@ -5,35 +5,48 @@
 //!
 //! * [`fleet`] — the fleet planner: takes a [`FleetSpec`] of
 //!   `(device, count?)` entries (one per physical part), builds each
-//!   device's replica-count frontier by running [`crate::planner::plan`]
-//!   under divided budgets ([`crate::fabric::device::Device::shard`],
-//!   with per-replica coefficient BRAM charged off the top), and
-//!   composes the groups across devices — maximizing modeled fleet
-//!   throughput, or minimizing modeled static power under a target SLO.
-//!   Replicas on different parts run *different* plans (the paper's IP
-//!   substitutions, live inside one fleet).
+//!   device's memoized replica-count frontier ([`FleetFrontier`]) by
+//!   running [`crate::planner::plan`] under divided budgets
+//!   ([`crate::fabric::device::Device::shard`], with per-replica
+//!   coefficient BRAM charged off the top), and composes the groups
+//!   across devices — maximizing modeled fleet throughput, or minimizing
+//!   modeled static power under a target SLO. Replicas on different
+//!   parts run *different* plans (the paper's IP substitutions, live
+//!   inside one fleet).
 //! * [`scheduler`] — the request scheduler: a bounded submission queue
 //!   with explicit admission control ([`ServeError::Overloaded`] instead
-//!   of unbounded queueing), per-replica micro-batch clamps, and
+//!   of unbounded queueing), per-replica micro-batch clamps,
 //!   throughput-weighted replica dispatch (expected drain time, not raw
-//!   queue length) onto the coordinator's persistent pipelines.
+//!   queue length) onto the coordinator's persistent pipelines, and a
+//!   dynamic replica set (add/retire with weighted-drain handoff).
+//! * [`rebalance`] — the live controller: watches windowed fleet
+//!   signals (queue pressure, per-group utilization, p99 drift) and
+//!   grows or shrinks device groups from the memoized frontier without
+//!   draining the server.
 //! * [`metrics`] — fleet statistics: p50/p95/p99 end-to-end latency,
-//!   sustained throughput, queue pressure, and utilization, broken out
-//!   per replica and per device group.
-//! * [`open_loop`] — a deterministic open-loop synthetic load generator
-//!   (Poisson arrivals via [`crate::util::rng`]) driving the above; the
-//!   `acf serve` CLI prints its modeled-vs-measured comparison.
+//!   sustained throughput, queue pressure, utilization, per-group drain
+//!   summaries, and the rebalance event log, broken out per replica and
+//!   per device group.
+//! * [`open_loop`] / [`step_load`] — deterministic open-loop synthetic
+//!   load (Poisson arrivals via a reproducible [`arrival_schedule`])
+//!   driving the above; the `acf serve` CLI prints its
+//!   modeled-vs-measured comparison.
 
 pub mod fleet;
 pub mod metrics;
+pub mod rebalance;
 pub mod scheduler;
 
 pub use fleet::{
-    plan_fixed_fleet, plan_fleet, plan_fleet_spec, FleetEntry, FleetPlan, FleetSpec, GroupPlan,
-    DEFAULT_MAX_REPLICAS,
+    compose_frontier, plan_fixed_fleet, plan_fleet, plan_fleet_spec, plan_signature, FleetEntry,
+    FleetFrontier, FleetPlan, FleetSpec, GroupFrontier, GroupPlan, DEFAULT_MAX_REPLICAS,
 };
-pub use metrics::{FleetMetrics, FleetSnapshot, GroupSnapshot, ReplicaSnapshot};
-pub use scheduler::{Pending, Server};
+pub use metrics::{
+    FleetMetrics, FleetSnapshot, GroupSnapshot, GroupWindow, RebalanceAction, RebalanceEvent,
+    ReplicaSnapshot,
+};
+pub use rebalance::{RebalanceConfig, Rebalancer};
+pub use scheduler::{DrainReport, Pending, Server};
 
 use crate::coordinator::DeployError;
 use crate::util::rng::Rng;
@@ -52,6 +65,9 @@ pub enum ServeError {
     ShuttingDown,
     /// A replica failed while the request was in flight.
     ReplicaFailed(String),
+    /// A fleet-resize operation could not be applied (e.g. retiring the
+    /// last live replica, or a replica id no longer in rotation).
+    Rebalance(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -63,6 +79,7 @@ impl std::fmt::Display for ServeError {
             ServeError::BadRequest(e) => write!(f, "bad request: {e}"),
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
             ServeError::ReplicaFailed(msg) => write!(f, "replica failed: {msg}"),
+            ServeError::Rebalance(msg) => write!(f, "rebalance rejected: {msg}"),
         }
     }
 }
@@ -86,14 +103,22 @@ pub struct ServeConfig {
     /// Clamped to the execution tier's lane width
     /// ([`crate::netlist::sim::LANES`]) so each dispatch maps onto whole
     /// lane-packed pipeline jobs, then scaled *per replica* by modeled
-    /// throughput relative to the fleet's fastest replica — slow parts
-    /// take proportionally smaller batches (see [`scheduler`]).
+    /// throughput relative to the fleet's fastest live replica — slow
+    /// parts take proportionally smaller batches (see [`scheduler`]).
     pub max_batch: usize,
+    /// How long a retiring replica (live rebalance or shutdown) gets to
+    /// finish its in-flight micro-batches before it is detached and
+    /// *reported* in the per-group drain summary.
+    pub drain_deadline: Duration,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { queue_depth: 64, max_batch: 8 }
+        ServeConfig {
+            queue_depth: 64,
+            max_batch: 8,
+            drain_deadline: Duration::from_secs(5),
+        }
     }
 }
 
@@ -105,12 +130,47 @@ pub struct LoadOutcome {
     pub result: Result<Vec<i64>, ServeError>,
 }
 
+/// One phase of a step-load profile: `requests` Poisson arrivals at
+/// `offered_img_s`.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadPhase {
+    pub requests: usize,
+    pub offered_img_s: f64,
+}
+
+/// The deterministic open-loop arrival schedule: for each of `requests`
+/// arrivals, its absolute due time (seconds from the run's start) and
+/// its corpus index. Exponential inter-arrival gaps with mean
+/// `1/offered_img_s` drawn from `seed` — the same seed, rate, corpus
+/// size, and request count reproduce the *identical* sequence on every
+/// run and every machine, which is what pins the serve benches and the
+/// CI step-load tests.
+pub fn arrival_schedule(
+    corpus_len: usize,
+    requests: usize,
+    offered_img_s: f64,
+    seed: u64,
+) -> Vec<(f64, usize)> {
+    assert!(corpus_len > 0, "load generator needs at least one image");
+    assert!(offered_img_s > 0.0, "offered rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mut at = 0.0f64;
+    (0..requests)
+        .map(|_| {
+            // Exponential inter-arrival with mean 1/rate; (1 - u) avoids
+            // ln(0).
+            at += -(1.0 - rng.unit_f64()).ln() / offered_img_s;
+            (at, rng.index(corpus_len))
+        })
+        .collect()
+}
+
 /// Drive `server` with an open-loop synthetic workload: `requests`
-/// arrivals at `offered_img_s` (Poisson — exponential inter-arrival gaps
-/// drawn from `seed`), each a uniformly chosen image from `corpus`. Open
-/// loop means arrivals never wait for responses: if the fleet falls
-/// behind, the queue fills and admission control sheds load, exactly like
-/// production ingress. Responses are collected after the last arrival.
+/// arrivals at `offered_img_s` (Poisson — see [`arrival_schedule`]),
+/// each a uniformly chosen image from `corpus`. Open loop means arrivals
+/// never wait for responses: if the fleet falls behind, the queue fills
+/// and admission control sheds load, exactly like production ingress.
+/// Responses are collected after the last arrival.
 pub fn open_loop(
     server: &Server,
     corpus: &[Vec<i64>],
@@ -118,23 +178,44 @@ pub fn open_loop(
     offered_img_s: f64,
     seed: u64,
 ) -> Vec<LoadOutcome> {
+    step_load(server, corpus, &[LoadPhase { requests, offered_img_s }], seed)
+}
+
+/// Drive `server` with a multi-phase open-loop profile (e.g. the
+/// low → spike → low shape the rebalancer is tested under). Phase `k`
+/// draws its arrivals from a seed forked off `seed` by `k`, so adding
+/// or resizing a phase never perturbs the others. Arrival timing stays
+/// open-loop *across* phases: the schedule is absolute from the start
+/// of the run, and responses are only collected after the last arrival
+/// of the last phase.
+pub fn step_load(
+    server: &Server,
+    corpus: &[Vec<i64>],
+    phases: &[LoadPhase],
+    seed: u64,
+) -> Vec<LoadOutcome> {
     assert!(!corpus.is_empty(), "load generator needs at least one image");
-    assert!(offered_img_s > 0.0, "offered rate must be positive");
-    let mut rng = Rng::new(seed);
     let start = Instant::now();
-    let mut next_arrival = 0.0f64; // seconds since start
-    let mut submitted: Vec<(usize, Result<Pending, ServeError>)> = Vec::with_capacity(requests);
-    for _ in 0..requests {
-        // Exponential inter-arrival with mean 1/rate; (1 - u) avoids ln(0).
-        let gap = -(1.0 - rng.unit_f64()).ln() / offered_img_s;
-        next_arrival += gap;
-        let due = Duration::from_secs_f64(next_arrival);
-        let elapsed = start.elapsed();
-        if due > elapsed {
-            std::thread::sleep(due - elapsed);
+    let mut base = 0.0f64; // absolute end of the previous phase
+    let mut submitted: Vec<(usize, Result<Pending, ServeError>)> = Vec::new();
+    for (k, phase) in phases.iter().enumerate() {
+        let schedule = arrival_schedule(
+            corpus.len(),
+            phase.requests,
+            phase.offered_img_s,
+            seed.wrapping_add((k as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+        );
+        let mut last = base;
+        for (at, idx) in schedule {
+            let due = Duration::from_secs_f64(base + at);
+            last = base + at;
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+            submitted.push((idx, server.submit(corpus[idx].clone())));
         }
-        let idx = rng.index(corpus.len());
-        submitted.push((idx, server.submit(corpus[idx].clone())));
+        base = last;
     }
     submitted
         .into_iter()
@@ -146,4 +227,42 @@ pub fn open_loop(
             },
         })
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_schedule_is_deterministic() {
+        // Same seed + rate + corpus + count ⇒ the identical sequence —
+        // the reproducibility contract CI serve tests rely on.
+        let a = arrival_schedule(16, 200, 1500.0, 0xBE7C);
+        let b = arrival_schedule(16, 200, 1500.0, 0xBE7C);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.0.to_bits() == y.0.to_bits() && x.1 == y.1, "{x:?} != {y:?}");
+        }
+        // A different seed produces a different sequence.
+        let c = arrival_schedule(16, 200, 1500.0, 0xBE7D);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.0 != y.0 || x.1 != y.1));
+        // A different rate rescales time but draws the same images.
+        let d = arrival_schedule(16, 200, 150.0, 0xBE7C);
+        assert!(a.iter().zip(&d).all(|(x, y)| x.1 == y.1));
+        assert!(d.last().unwrap().0 > a.last().unwrap().0);
+    }
+
+    #[test]
+    fn arrival_schedule_statistics_match_the_offered_rate() {
+        // 2000 arrivals at 1000 img/s should span ~2 s; the sample mean
+        // of an exponential at n=2000 is within a loose 15% band.
+        let s = arrival_schedule(8, 2000, 1000.0, 7);
+        let span = s.last().unwrap().0;
+        assert!((1.7..2.3).contains(&span), "span {span}");
+        // Monotone non-decreasing due times; indices stay in range.
+        for w in s.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+        }
+        assert!(s.iter().all(|&(_, i)| i < 8));
+    }
 }

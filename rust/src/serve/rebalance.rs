@@ -1,0 +1,442 @@
+//! Dynamic fleet rebalancing: a control loop that watches the live
+//! [`super::metrics::FleetMetrics`] over a sliding window and grows or shrinks device
+//! groups *without draining the server* — the run-time half of the
+//! paper's adaptivity claim. PR 4 froze replica counts at plan time; a
+//! traffic spike or lull wasted exactly the moldability the adaptive
+//! IPs exist for. The rebalancer closes that gap at serve time.
+//!
+//! **Signals** (per control tick, one tick per `window`):
+//!
+//! * queue pressure — admitted-not-dispatched depth against the bounded
+//!   queue's capacity, plus the rejection delta (load already shed);
+//! * per-group utilization — busy-seconds delta over
+//!   `tick × live replicas`;
+//! * p99 drift — a group's in-window p99 blowing past 4× its own
+//!   in-window median while work is queued (the early-warning signal
+//!   before the queue actually fills).
+//!
+//! All signals come from atomic counters and the bounded sliding-window
+//! pass — the controller never takes a full metrics snapshot, whose
+//! all-time latency reservoirs grow with uptime.
+//!
+//! **Actions.** Scaling decisions index the memoized
+//! [`FleetFrontier`] — the per-device count → plan frontiers built at
+//! plan time — so *no planner run ever happens under traffic*; the
+//! composition search is re-run incrementally by moving one group one
+//! count step at a time under its still-attached device budget. If the
+//! frontier's plan at the new count has the same engine signature as
+//! the current one (the common case away from the resource ceiling),
+//! replicas are simply added to or retired from the group. If the
+//! signature differs (the shard shrank enough that the planner would
+//! substitute IPs — the paper's Table III adaptations, now happening
+//! live), the group *swaps* one-in-one-out: each new pipeline spins up
+//! on the new frontier plan before one old replica retires (after its
+//! in-flight micro-batches drain), so the group never goes dark and the
+//! transient overcommit on the physical part is bounded to one extra
+//! replica. Either way no admitted request is dropped and the scheduler
+//! keeps dispatching throughout.
+//!
+//! **Stability.** Two mechanisms keep the loop from thrashing:
+//! hysteresis (the scale-down watermark sits far below the scale-up
+//! watermark, and shrinking additionally requires an empty queue and a
+//! shed-free window) and a cooldown (after any action the controller
+//! only observes for `cooldown`, letting the fleet settle before the
+//! next decision). Forced (`name:count`) groups are never resized —
+//! a pinned count is an operator statement, not a hint.
+
+use super::fleet::{plan_signature, FleetFrontier, FleetPlan, GroupFrontier};
+use super::metrics::{RebalanceAction, RebalanceEvent};
+use super::scheduler::Server;
+use crate::cnn::model::{Model, Weights};
+use crate::coordinator::Deployment;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Control-loop knobs (`acf serve --rebalance --window-ms --headroom`).
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// Control period and signal window.
+    pub window: Duration,
+    /// Capacity headroom the fleet tries to keep: the scale-up watermark
+    /// is `1 - headroom` group utilization.
+    pub headroom: f64,
+    /// Minimum quiet time after an action before the next one.
+    pub cooldown: Duration,
+    /// Per-group replica floor (unforced groups never shrink below it).
+    pub min_replicas: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> RebalanceConfig {
+        RebalanceConfig {
+            window: Duration::from_millis(250),
+            headroom: 0.25,
+            cooldown: Duration::from_millis(500),
+            min_replicas: 1,
+        }
+    }
+}
+
+impl RebalanceConfig {
+    /// Scale-up utilization watermark.
+    fn high_water(&self) -> f64 {
+        (1.0 - self.headroom.clamp(0.0, 0.95)).max(0.05)
+    }
+
+    /// Scale-down utilization watermark — deliberately far below the
+    /// scale-up mark (hysteresis).
+    fn low_water(&self) -> f64 {
+        self.high_water() * 0.35
+    }
+}
+
+/// One managed device group: its frontier and the live count the
+/// controller believes it has.
+struct Managed {
+    /// Server-side group index (metrics / dispatch).
+    group: usize,
+    frontier: GroupFrontier,
+    count: usize,
+}
+
+/// The live rebalance controller. Owns a background thread; call
+/// [`Rebalancer::stop`] before shutting the server down.
+pub struct Rebalancer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Rebalancer {
+    /// Start rebalancing `server` (already serving `plan`) against the
+    /// memoized `frontier`. `model`/`weights` are the fleet's shared
+    /// network — new replicas deploy from them with frontier plans.
+    /// Groups whose spec entry pinned a count are left alone.
+    pub fn start(
+        server: Arc<Server>,
+        frontier: FleetFrontier,
+        plan: &FleetPlan,
+        model: Arc<Model>,
+        weights: Arc<Weights>,
+        cfg: RebalanceConfig,
+    ) -> Rebalancer {
+        // Map each server group back to its frontier entry. Groups the
+        // composition search shed (under a target) are simply absent —
+        // their budgets stay attached in `frontier` but they were never
+        // deployed, so there is nothing to resize.
+        let managed: Vec<Managed> = plan
+            .groups
+            .iter()
+            .enumerate()
+            .filter_map(|(gi, g)| {
+                let f = frontier
+                    .groups
+                    .iter()
+                    .find(|f| f.spec_entry == g.spec_entry)?
+                    .clone();
+                if f.forced.is_some() {
+                    return None; // pinned counts are operator statements
+                }
+                Some(Managed { group: gi, frontier: f, count: g.replicas })
+            })
+            .collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            control_loop(&server, managed, &model, &weights, &cfg, &thread_stop);
+        });
+        Rebalancer { stop, handle: Some(handle) }
+    }
+
+    /// Stop the control loop and join its thread. Always call this
+    /// before `Server::shutdown` so no resize races the teardown.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Rebalancer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+/// Sleep `total` in small slices so a stop request is honored promptly.
+fn interruptible_sleep(total: Duration, stop: &AtomicBool) {
+    let slice = Duration::from_millis(20);
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline && !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(slice.min(deadline.saturating_duration_since(Instant::now())));
+    }
+}
+
+fn control_loop(
+    server: &Server,
+    mut managed: Vec<Managed>,
+    model: &Arc<Model>,
+    weights: &Arc<Weights>,
+    cfg: &RebalanceConfig,
+    stop: &AtomicBool,
+) {
+    if managed.is_empty() {
+        return; // every group pinned — nothing to control
+    }
+    // Floor the tick so a degenerate `--window-ms 0` cannot turn the
+    // loop into a busy-spin contending every latency mutex.
+    let tick = cfg.window.max(Duration::from_millis(10));
+    // Signals come from atomic counters and the bounded window() pass —
+    // never from FleetMetrics::snapshot(), whose all-time latency
+    // reservoirs grow without bound over a long-running server.
+    let mut prev_busy: Vec<f64> =
+        server.metrics().window(tick).iter().map(|w| w.busy_secs).collect();
+    let mut prev_rejected = server.metrics().rejected_total();
+    let mut prev_at = Instant::now();
+    let mut last_action: Option<Instant> = None; // free to act at once
+    while !stop.load(Ordering::Relaxed) {
+        interruptible_sleep(tick, stop);
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let now = Instant::now();
+        let dt = now.duration_since(prev_at).as_secs_f64().max(1e-6);
+        let win = server.metrics().window(tick);
+        let queue_depth = server.metrics().queue_depth();
+        let rejected = server.metrics().rejected_total();
+
+        // Fleet-level pressure signals.
+        let queue_ratio = queue_depth as f64 / server.queue_capacity().max(1) as f64;
+        let shed = rejected.saturating_sub(prev_rejected);
+        // p99 drift: some group's in-window tail blowing past 4x its own
+        // in-window median while work is still queued — the early
+        // warning before the queue actually fills.
+        let drift = queue_depth > 0
+            && win
+                .iter()
+                .any(|w| w.completed > 3 && w.p99_ms > 4.0 * w.p50_ms.max(0.01));
+
+        // Per-group utilization over this tick (busy-seconds delta).
+        let util: Vec<f64> = managed
+            .iter()
+            .map(|m| {
+                let cur = win.get(m.group).map(|w| w.busy_secs).unwrap_or(0.0);
+                let was = prev_busy.get(m.group).copied().unwrap_or(0.0);
+                let live = win.get(m.group).map(|w| w.live.max(1)).unwrap_or(1);
+                ((cur - was) / (dt * live as f64)).max(0.0)
+            })
+            .collect();
+
+        if last_action.map_or(true, |t| now.duration_since(t) >= cfg.cooldown) {
+            let hot = util.iter().any(|&u| u > cfg.high_water());
+            let pressured = queue_ratio >= 0.5 || shed > 0 || hot || drift;
+            let acted = if pressured {
+                grow_step(server, &mut managed, &util, model, weights, queue_ratio, shed)
+            } else if queue_depth == 0 && shed == 0 {
+                shrink_step(server, &mut managed, &util, model, weights, cfg)
+            } else {
+                false
+            };
+            if acted {
+                last_action = Some(now);
+            }
+        }
+        prev_busy = win.iter().map(|w| w.busy_secs).collect();
+        prev_rejected = rejected;
+        prev_at = now;
+    }
+}
+
+/// Grow the group with the largest modeled marginal gain by one count
+/// step. Returns whether anything changed.
+fn grow_step(
+    server: &Server,
+    managed: &mut [Managed],
+    util: &[f64],
+    model: &Arc<Model>,
+    weights: &Arc<Weights>,
+    queue_ratio: f64,
+    shed: u64,
+) -> bool {
+    let mut best: Option<(usize, f64)> = None; // (managed idx, marginal img/s)
+    for (mi, m) in managed.iter().enumerate() {
+        if m.count >= m.frontier.max_count() {
+            continue;
+        }
+        let marginal =
+            m.frontier.at(m.count + 1).group_img_s - m.frontier.at(m.count).group_img_s;
+        if marginal < -1e-9 {
+            // Past the group's modeled argmax: another replica would
+            // *reduce* modeled capacity (smaller shards plan slower
+            // engines). Growing here would make an overload worse, not
+            // better. Zero-marginal steps stay allowed — equal modeled
+            // throughput across more replicas still buys host-side
+            // parallelism and request concurrency.
+            continue;
+        }
+        if best.map(|(_, b)| marginal > b).unwrap_or(true) {
+            best = Some((mi, marginal));
+        }
+    }
+    let Some((mi, _)) = best else {
+        return false; // every group at its frontier ceiling or past argmax
+    };
+    let reason = format!(
+        "queue {:.0}% full, {} shed, util {:.0}%",
+        queue_ratio * 100.0,
+        shed,
+        util[mi] * 100.0
+    );
+    let (group, from, to) = {
+        let m = &managed[mi];
+        (m.group, m.count, m.count + 1)
+    };
+    let acted =
+        apply_resize(server, &managed[mi].frontier, group, from, to, &reason, model, weights);
+    // Resync even on failure: an aborted swap may still have mutated the
+    // fleet (adds that landed before an add raced shutdown, retires that
+    // were refused).
+    resync_count(server, &mut managed[mi], if acted { to } else { from });
+    acted
+}
+
+/// After an action (attempted or applied), re-read the group's *actual*
+/// live count (a retire can be refused, an add can race a shutdown) so
+/// the controller never drifts from the fleet; clamp into the frontier's
+/// valid range so a transiently over-committed group still indexes the
+/// frontier safely.
+fn resync_count(server: &Server, m: &mut Managed, intended: usize) {
+    let live = server.live_counts().get(m.group).copied().unwrap_or(intended);
+    m.count = live.clamp(m.frontier.min_count(), m.frontier.max_count());
+}
+
+/// Shrink the coldest eligible group by one count step. Returns whether
+/// anything changed.
+fn shrink_step(
+    server: &Server,
+    managed: &mut [Managed],
+    util: &[f64],
+    model: &Arc<Model>,
+    weights: &Arc<Weights>,
+    cfg: &RebalanceConfig,
+) -> bool {
+    let mut coldest: Option<(usize, f64)> = None;
+    for (mi, m) in managed.iter().enumerate() {
+        if m.count <= cfg.min_replicas.max(m.frontier.min_count()) {
+            continue;
+        }
+        if util[mi] >= cfg.low_water() {
+            continue;
+        }
+        if coldest.map(|(_, c)| util[mi] < c).unwrap_or(true) {
+            coldest = Some((mi, util[mi]));
+        }
+    }
+    let Some((mi, u)) = coldest else {
+        return false;
+    };
+    let reason = format!(
+        "idle: util {:.0}% < {:.0}% low water, queue empty",
+        u * 100.0,
+        cfg.low_water() * 100.0
+    );
+    let (group, from, to) = {
+        let m = &managed[mi];
+        (m.group, m.count, m.count - 1)
+    };
+    let acted =
+        apply_resize(server, &managed[mi].frontier, group, from, to, &reason, model, weights);
+    resync_count(server, &mut managed[mi], if acted { to } else { from });
+    acted
+}
+
+/// Move one group from `from` to `to` replicas using the memoized
+/// frontier: incremental add/retire when the engine signature is
+/// unchanged, a full spin-up-then-drain swap when the new shard plans
+/// differently. Logs the action in the rebalance timeline.
+#[allow(clippy::too_many_arguments)]
+fn apply_resize(
+    server: &Server,
+    frontier: &GroupFrontier,
+    group: usize,
+    from: usize,
+    to: usize,
+    reason: &str,
+    model: &Arc<Model>,
+    weights: &Arc<Weights>,
+) -> bool {
+    let new_plan = frontier.at(to);
+    let same = plan_signature(&frontier.at(from).per_replica)
+        == plan_signature(&new_plan.per_replica);
+    let deploy = || {
+        Arc::new(Deployment::with_plan(
+            Arc::clone(model),
+            Arc::clone(weights),
+            new_plan.per_replica.clone(),
+        ))
+    };
+    let action = if same && to > from {
+        let mut ok = true;
+        for _ in from..to {
+            ok &= server.add_replica(deploy(), group).is_ok();
+        }
+        if !ok {
+            return false; // shutting down — nothing to log
+        }
+        RebalanceAction::Grow
+    } else if same {
+        // Retire the least-loaded replicas first; their in-flight work
+        // drains before teardown.
+        let ids = server.replica_ids_of_group(group);
+        let mut retired = 0usize;
+        for &id in ids.iter().take(from.saturating_sub(to)) {
+            if server.retire_replica(id).is_ok() {
+                retired += 1;
+            }
+        }
+        if retired == 0 {
+            return false; // e.g. it was the last live replica fleet-wide
+        }
+        RebalanceAction::Shrink
+    } else {
+        // Rolling swap: the new shard plans differently (live IP
+        // substitution). One-in-one-out so the group never goes dark
+        // *and* the transient overcommit on the physical part is bounded
+        // to a single extra replica (the reconfiguration-overlap cost of
+        // a live transition, not `from + to` pipelines at once), then
+        // add or retire the remainder to land on `to`.
+        let old = server.replica_ids_of_group(group);
+        let mut spawned = 0usize;
+        for id in &old {
+            if spawned < to {
+                if server.add_replica(deploy(), group).is_err() {
+                    return false;
+                }
+                spawned += 1;
+            }
+            let _ = server.retire_replica(*id);
+        }
+        while spawned < to {
+            if server.add_replica(deploy(), group).is_err() {
+                return false;
+            }
+            spawned += 1;
+        }
+        RebalanceAction::Swap
+    };
+    server.metrics().note_rebalance(RebalanceEvent {
+        at_secs: 0.0, // stamped by the metrics clock
+        group,
+        label: frontier.device.name.clone(),
+        action,
+        from,
+        to,
+        reason: reason.to_string(),
+    });
+    true
+}

@@ -1,6 +1,7 @@
 //! The request scheduler: a bounded submission queue, a micro-batching
-//! dispatcher, throughput-weighted replica selection, and explicit
-//! admission control.
+//! dispatcher, throughput-weighted replica selection, explicit admission
+//! control, and — since PR 5 — a *dynamic* replica set that grows and
+//! shrinks while traffic flows.
 //!
 //! Heterogeneous fleets put replicas with very different modeled rates
 //! behind one queue, so the PR 2 least-loaded rule (pick the fewest
@@ -14,18 +15,31 @@
 //!
 //! Micro-batches clamp *per replica*, not globally: each replica's
 //! ceiling is the configured `max_batch` scaled by its rate relative to
-//! the fastest replica (floored at 1, capped at the execution tier's
-//! lane width [`crate::netlist::sim::LANES`]), so one dispatch costs
-//! roughly equal wall time on every part and a slow group never hoards
-//! a lane-wide batch while fast silicon idles.
+//! the fastest live replica (floored at 1, capped at the execution
+//! tier's lane width [`crate::netlist::sim::LANES`]), so one dispatch
+//! costs roughly equal wall time on every part and a slow group never
+//! hoards a lane-wide batch while fast silicon idles.
 //!
-//! Topology (all threads long-lived, torn down on [`Server::shutdown`]):
+//! **Replica lifecycle.** PR 2–4 assumed plan-once/run-forever: the
+//! dispatcher captured a fixed replica list at startup. The dispatcher
+//! now reads a shared slot table on every pick, so
+//! [`Server::add_replica`] can bring a freshly planned pipeline into
+//! rotation mid-flight and [`Server::retire_replica`] can take one out:
+//! the slot is unlisted first (no new dispatches), its feed closes, its
+//! already-queued micro-batches drain (the *weighted-drain handoff* —
+//! remaining load rebalances onto the surviving replicas by the same
+//! expected-drain-time rule), and only then is its pipeline torn down.
+//! A replica that misses the drain deadline is detached and *reported*
+//! in the per-group drain summary — never silently dropped, and never
+//! able to wedge a shutdown.
+//!
+//! Topology (all threads long-lived until retired or shutdown):
 //!
 //! ```text
 //! submit() --try_send--> [bounded queue] --> dispatcher --+--> runner 0 -> replica 0 pipeline
-//!    |  full => ServeError::Overloaded    (weighted pick, |--> runner 1 -> replica 1 pipeline
-//!    +--> Pending (per-request reply)      per-replica    +--> ...
-//!                                          micro-batch)
+//!    |  full => ServeError::Overloaded    (weighted pick  |--> runner 1 -> replica 1 pipeline
+//!    +--> Pending (per-request reply)      over the LIVE  +--> ... (slots added/retired live)
+//!                                          slot table)
 //! ```
 //!
 //! Backpressure story: the *only* unbounded buffers are per-request reply
@@ -39,9 +53,10 @@
 
 use super::metrics::{FleetMetrics, FleetSnapshot};
 use super::{ServeConfig, ServeError};
-use crate::coordinator::Deployment;
+use crate::cnn::model::Model;
+use crate::coordinator::{validate_image, Deployment};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One admitted request traveling from the queue to a replica runner.
 struct Request {
@@ -62,16 +77,56 @@ impl Pending {
     }
 }
 
+/// One live, dispatchable replica.
+struct Slot {
+    /// Stable replica id (index into the metrics registry; never reused).
+    id: usize,
+    group: usize,
+    /// Modeled `images_per_sec` — the dispatch weight.
+    weight: f64,
+    tx: mpsc::SyncSender<Vec<Request>>,
+}
+
+/// A runner thread and the deployment it drives (kept so retirement can
+/// tear the pipeline down *after* the drain, off the dispatch path).
+struct Runner {
+    id: usize,
+    dep: Arc<Deployment>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+/// Outcome of retiring one replica.
+#[derive(Debug, Clone)]
+pub struct DrainReport {
+    pub replica: usize,
+    pub group: usize,
+    /// Whether in-flight work reached zero before the deadline.
+    pub drained: bool,
+    /// Images still dispatched-not-done when the deadline expired.
+    pub leftover: u64,
+}
+
 /// A running serving fleet: replicas with persistent pipelines, a
-/// dispatcher, and per-replica runner threads.
+/// dispatcher, and per-replica runner threads. The replica set is
+/// dynamic — see the module docs for the lifecycle.
 pub struct Server {
     /// `None` once shutdown begins — the single source of truth for
     /// "still admitting" (same convention as the coordinator pipeline).
     ingress: Mutex<Option<mpsc::SyncSender<Request>>>,
     metrics: Arc<FleetMetrics>,
-    replicas: Vec<Arc<Deployment>>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    /// The fleet's shared model — admission validates against this, not
+    /// any particular replica, so rebalancing can swap every replica out
+    /// without ever closing the front door.
+    model: Arc<Model>,
+    /// Live dispatch targets (shared with the dispatcher thread).
+    slots: Arc<Mutex<Vec<Slot>>>,
+    /// Runners for live and draining replicas.
+    runners: Mutex<Vec<Runner>>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Set once shutdown has completed (idempotence + final snapshot).
+    finished: Mutex<Option<FleetSnapshot>>,
     queue_depth: usize,
+    drain_deadline: Duration,
 }
 
 impl Server {
@@ -96,68 +151,240 @@ impl Server {
         assert!(!replicas.is_empty(), "a fleet needs at least one replica");
         assert_eq!(groups.len(), replicas.len(), "one group index per replica");
         let queue_depth = cfg.queue_depth.max(1);
-        // Each replica advertises its plan's modeled throughput as its
-        // dispatch weight.
-        let weights: Vec<f64> =
-            replicas.iter().map(|d| d.plan.images_per_sec.max(1e-9)).collect();
-        let top_weight = weights.iter().copied().fold(f64::MIN, f64::max);
         // Per-replica micro-batch ceiling: at most one simulator lane
         // word (a wider batch would split into multiple lane groups and
-        // only add queueing delay), scaled down for replicas modeled
-        // slower than the fastest so a dispatch costs roughly equal wall
-        // time on every part.
+        // only add queueing delay); per-slot scaling happens at dispatch
+        // time against the *current* fastest live replica.
         let global_batch = cfg.max_batch.clamp(1, crate::netlist::sim::LANES);
-        let max_batch: Vec<usize> = weights
-            .iter()
-            .map(|w| ((global_batch as f64 * w / top_weight).ceil() as usize).clamp(1, global_batch))
-            .collect();
-        let metrics = Arc::new(FleetMetrics::grouped(groups, labels));
+        let metrics = Arc::new(FleetMetrics::grouped(Vec::new(), labels));
+        let model = Arc::clone(&replicas[0].model);
         let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
-        let mut threads = Vec::with_capacity(replicas.len() + 1);
-
-        // Replica runners: one thread per replica, fed micro-batches.
-        let mut batch_txs = Vec::with_capacity(replicas.len());
-        for (ri, dep) in replicas.iter().enumerate() {
-            // Depth 2: one batch inferring, one staged (double buffering,
-            // same rationale as the pipeline's CHANNEL_DEPTH).
-            let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(2);
-            batch_txs.push(btx);
-            let dep = Arc::clone(dep);
-            let metrics = Arc::clone(&metrics);
-            threads.push(std::thread::spawn(move || run_replica(ri, &dep, &brx, &metrics)));
+        let server = Server {
+            ingress: Mutex::new(Some(tx)),
+            metrics,
+            model,
+            slots: Arc::new(Mutex::new(Vec::new())),
+            runners: Mutex::new(Vec::new()),
+            dispatcher: Mutex::new(None),
+            finished: Mutex::new(None),
+            queue_depth,
+            drain_deadline: cfg.drain_deadline,
+        };
+        for (dep, group) in replicas.into_iter().zip(groups) {
+            server.add_slot(dep, group);
         }
 
-        // Dispatcher: drain the queue, pick the replica with the least
-        // expected drain time, micro-batch up to ITS clamp.
-        {
-            let metrics = Arc::clone(&metrics);
-            threads.push(std::thread::spawn(move || {
-                while let Ok(first) = rx.recv() {
-                    let target = (0..batch_txs.len())
-                        .min_by(|&a, &b| {
-                            let da = (metrics.load_of(a) + 1) as f64 / weights[a];
-                            let db = (metrics.load_of(b) + 1) as f64 / weights[b];
-                            da.partial_cmp(&db).expect("drain time is finite")
-                        })
-                        .expect("at least one replica");
-                    let mut batch = vec![first];
-                    while batch.len() < max_batch[target] {
+        // Dispatcher: drain the queue, pick the live replica with the
+        // least expected drain time, micro-batch up to ITS clamp. A
+        // handoff that bounces (slot retired between pick and send) is
+        // re-dispatched, so no admitted request is ever dropped.
+        let slots = Arc::clone(&server.slots);
+        let metrics = Arc::clone(&server.metrics);
+        let handle = std::thread::spawn(move || {
+            while let Ok(first) = rx.recv() {
+                let mut batch = vec![first];
+                // Work in hand must land somewhere within this grace
+                // period. Normally a pick succeeds instantly; the
+                // deadline only matters if every runner died (the batch
+                // is then failed loudly instead of spinning forever and
+                // wedging shutdown's dispatcher join).
+                let give_up = Instant::now() + Duration::from_millis(50);
+                while !batch.is_empty() {
+                    let Some((id, tx, cap)) = pick_slot(&slots, &metrics, global_batch) else {
+                        if Instant::now() >= give_up {
+                            metrics.note_abandoned(batch.len() as u64);
+                            for req in batch.drain(..) {
+                                metrics.note_failed();
+                                let _ = req.reply.send(Err(ServeError::ReplicaFailed(
+                                    "no live replicas in dispatch rotation".into(),
+                                )));
+                            }
+                            break;
+                        }
+                        // Mid-swap instant with no live slot: adds always
+                        // precede retires, so this resolves immediately.
+                        std::thread::sleep(Duration::from_micros(200));
+                        continue;
+                    };
+                    while batch.len() < cap {
                         match rx.try_recv() {
                             Ok(r) => batch.push(r),
                             Err(_) => break,
                         }
                     }
-                    metrics.note_dispatched(target, batch.len() as u64);
-                    if batch_txs[target].send(batch).is_err() {
-                        return; // runner died; Overloaded backpressure takes over
+                    // Work carried over from a bounce may exceed THIS
+                    // slot's clamp (a slow part must never receive a
+                    // fast part's batch whole); the tail re-dispatches
+                    // on the next pick.
+                    let rest = if batch.len() > cap { batch.split_off(cap) } else { Vec::new() };
+                    metrics.note_dispatched(id, batch.len() as u64);
+                    match tx.send(batch) {
+                        Ok(()) => batch = rest,
+                        Err(mpsc::SendError(mut bounced)) => {
+                            // The runner's feed closed under us: rewind
+                            // the books and pick again. If the slot is
+                            // still listed the runner *died* (a retire
+                            // already unlists) — unlist it and account
+                            // the death (its channel-trapped images
+                            // included) so live counts, in-flight
+                            // gauges, and the drain summary stay honest.
+                            metrics.note_requeued(id, bounced.len() as u64);
+                            let dead = {
+                                let mut slots = slots.lock().unwrap();
+                                let pos = slots.iter().position(|s| s.id == id);
+                                pos.map(|p| slots.remove(p))
+                            };
+                            if let Some(slot) = dead {
+                                metrics.note_retiring(slot.id);
+                                let lost = metrics.note_dead_replica(slot.id);
+                                metrics.note_drain_timeout(slot.group, lost);
+                            }
+                            bounced.extend(rest);
+                            batch = bounced;
+                        }
                     }
                 }
-                // Queue disconnected and drained; batch_txs drop here and
-                // the runner feeds close.
-            }));
-        }
+            }
+            // Queue disconnected and drained; slot feeds stay open for
+            // the shutdown path to close after this thread is joined.
+        });
+        *server.dispatcher.lock().unwrap() = Some(handle);
+        server
+    }
 
-        Server { ingress: Mutex::new(Some(tx)), metrics, replicas, threads, queue_depth }
+    /// Register a replica and bring it into dispatch rotation
+    /// (infallible — shared by startup and live adds).
+    fn add_slot(&self, dep: Arc<Deployment>, group: usize) -> usize {
+        let id = self.metrics.register_replica(group);
+        let weight = dep.plan.images_per_sec.max(1e-9);
+        // Depth 2: one batch inferring, one staged (double buffering,
+        // same rationale as the pipeline's CHANNEL_DEPTH).
+        let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(2);
+        let runner_dep = Arc::clone(&dep);
+        let metrics = Arc::clone(&self.metrics);
+        let handle =
+            std::thread::spawn(move || run_replica(id, &runner_dep, &brx, &metrics));
+        self.runners.lock().unwrap().push(Runner { id, dep, handle });
+        self.slots.lock().unwrap().push(Slot { id, group, weight, tx: btx });
+        id
+    }
+
+    /// Bring a freshly deployed replica into dispatch rotation while the
+    /// server keeps admitting. Returns its stable replica id.
+    pub fn add_replica(&self, dep: Arc<Deployment>, group: usize) -> Result<usize, ServeError> {
+        if self.ingress.lock().unwrap().is_none() {
+            return Err(ServeError::ShuttingDown);
+        }
+        Ok(self.add_slot(dep, group))
+    }
+
+    /// Retire one replica without draining the server: unlist it (no new
+    /// dispatches — its share of load immediately rebalances onto the
+    /// surviving replicas by expected drain time), close its feed, wait
+    /// up to the configured drain deadline for its in-flight micro-
+    /// batches to finish, then tear its pipeline down off-thread. The
+    /// last live replica cannot be retired.
+    pub fn retire_replica(&self, replica: usize) -> Result<DrainReport, ServeError> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            if slots.len() <= 1 {
+                return Err(ServeError::Rebalance(
+                    "cannot retire the last live replica".into(),
+                ));
+            }
+            let Some(pos) = slots.iter().position(|s| s.id == replica) else {
+                return Err(ServeError::Rebalance(format!(
+                    "replica {replica} is not in dispatch rotation"
+                )));
+            };
+            slots.remove(pos)
+        };
+        let group = slot.group;
+        self.metrics.note_retiring(replica);
+        drop(slot); // closes the runner's feed once queued batches drain
+        let deadline = Instant::now() + self.drain_deadline;
+        let report = self.reap(replica, group, deadline);
+        Ok(report)
+    }
+
+    /// Wait (until `deadline`) for `replica`'s in-flight work to drain,
+    /// record the outcome in the per-group drain summary, and join or
+    /// detach its runner. Shared by live retirement and shutdown. The
+    /// drain condition covers both the scheduler's own dispatch counters
+    /// AND the pipeline's job gauge ([`Deployment::in_flight`]), so a
+    /// one-shot `infer_batch` caller sharing the replica outside the
+    /// server holds the drain open too.
+    fn reap(&self, replica: usize, group: usize, deadline: Instant) -> DrainReport {
+        let runner = {
+            let mut runners = self.runners.lock().unwrap();
+            runners.iter().position(|r| r.id == replica).map(|pos| runners.remove(pos))
+        };
+        let pipeline_busy =
+            |r: &Option<Runner>| r.as_ref().map(|r| r.dep.in_flight() > 0).unwrap_or(false);
+        let mut leftover = self.metrics.load_of(replica);
+        while (leftover > 0 || pipeline_busy(&runner)) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_micros(500));
+            leftover = self.metrics.load_of(replica);
+        }
+        // Also give the runner thread itself (and any one-shot pipeline
+        // work) until the deadline to wind down, so join below cannot
+        // block past it.
+        let finished = loop {
+            match &runner {
+                Some(r) if !r.handle.is_finished() => {
+                    if Instant::now() >= deadline {
+                        break false;
+                    }
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                _ => break true,
+            }
+        };
+        let drained = leftover == 0 && finished && !pipeline_busy(&runner);
+        if drained {
+            self.metrics.note_drained(group);
+            if let Some(r) = runner {
+                let _ = r.handle.join();
+                drop(r.dep); // pipeline teardown, after the drain
+            }
+        } else {
+            self.metrics.note_drain_timeout(group, leftover);
+            if let Some(r) = runner {
+                // Report-and-detach: a reaper thread absorbs the eventual
+                // teardown so a wedged replica cannot block the caller.
+                std::thread::spawn(move || {
+                    let _ = r.handle.join();
+                    drop(r.dep);
+                });
+            }
+        }
+        DrainReport { replica, group, drained, leftover }
+    }
+
+    /// Live replicas per device group (dispatch rotation view).
+    pub fn live_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.metrics.n_groups()];
+        for s in self.slots.lock().unwrap().iter() {
+            if let Some(c) = counts.get_mut(s.group) {
+                *c += 1;
+            }
+        }
+        counts
+    }
+
+    /// Replica ids currently in dispatch rotation for `group`, least
+    /// loaded first (the retirement-candidate order).
+    pub fn replica_ids_of_group(&self, group: usize) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.group == group)
+            .map(|s| s.id)
+            .collect();
+        ids.sort_by_key(|&id| self.metrics.load_of(id));
+        ids
     }
 
     /// Admission-controlled submission: validates the image, then tries
@@ -189,7 +416,7 @@ impl Server {
         send: impl FnOnce(&mpsc::SyncSender<Request>, Request) -> Result<(), ServeError>,
     ) -> Result<Pending, ServeError> {
         let tx = self.sender()?;
-        self.replicas[0].validate_image(&image).map_err(ServeError::BadRequest)?;
+        validate_image(&self.model, &image).map_err(ServeError::BadRequest)?;
         let (rtx, rrx) = mpsc::channel();
         send(&tx, Request { image, admitted: Instant::now(), reply: rtx })?;
         self.metrics.note_accepted();
@@ -205,32 +432,84 @@ impl Server {
         &self.metrics
     }
 
-    /// The replica deployments (for modeled-vs-measured reports).
-    pub fn replicas(&self) -> &[Arc<Deployment>] {
-        &self.replicas
+    /// The bounded submission queue's capacity (the denominator of the
+    /// rebalancer's queue-pressure signal).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_depth
     }
 
-    /// Stop admitting, drain everything in flight, join all threads, and
-    /// return the final fleet statistics.
-    pub fn shutdown(mut self) -> FleetSnapshot {
-        self.stop();
-        self.metrics.snapshot()
-    }
-
-    fn stop(&mut self) {
+    /// Stop admitting, drain everything in flight (reporting any replica
+    /// that misses the drain deadline in the per-group drain summary),
+    /// join all threads, and return the final fleet statistics.
+    /// Idempotent — later calls return the same snapshot.
+    pub fn shutdown(&self) -> FleetSnapshot {
+        let mut finished = self.finished.lock().unwrap();
+        if let Some(snap) = finished.as_ref() {
+            return snap.clone();
+        }
         // Dropping the ingress sender lets the dispatcher drain the queue
-        // and then unwind the runners.
+        // and exit.
         *self.ingress.lock().unwrap() = None;
-        for h in self.threads.drain(..) {
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
             let _ = h.join();
         }
+        // Close every live feed, then hold all replicas to one shared
+        // drain deadline. Outcomes land in the per-group drain summary
+        // (`GroupSnapshot::{drained, drain_failed, drain_leftover_images}`)
+        // — a replica that cannot finish is reported, not silently
+        // dropped, and cannot wedge the shutdown.
+        let closing: Vec<(usize, usize)> = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.drain(..).map(|s| (s.id, s.group)).collect()
+        };
+        let deadline = Instant::now() + self.drain_deadline;
+        for (id, group) in closing {
+            self.reap(id, group, deadline);
+        }
+        // Anything left in `runners` had no slot — runners whose death
+        // the dispatcher already accounted. Join the finished ones (they
+        // are done or nearly done), detach the rest to reaper threads.
+        for r in self.runners.lock().unwrap().drain(..) {
+            if r.handle.is_finished() {
+                let _ = r.handle.join();
+                drop(r.dep);
+            } else {
+                std::thread::spawn(move || {
+                    let _ = r.handle.join();
+                    drop(r.dep);
+                });
+            }
+        }
+        let snap = self.metrics.snapshot();
+        *finished = Some(snap.clone());
+        snap
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop();
+        self.shutdown();
     }
+}
+
+/// Pick the live replica with the least expected drain time
+/// `(in_flight + 1) / weight`, returning its id, a feed handle, and its
+/// per-dispatch micro-batch clamp (scaled by its weight relative to the
+/// fastest live replica).
+fn pick_slot(
+    slots: &Mutex<Vec<Slot>>,
+    metrics: &FleetMetrics,
+    global_batch: usize,
+) -> Option<(usize, mpsc::SyncSender<Vec<Request>>, usize)> {
+    let slots = slots.lock().unwrap();
+    let best = slots.iter().min_by(|a, b| {
+        let da = (metrics.load_of(a.id) + 1) as f64 / a.weight;
+        let db = (metrics.load_of(b.id) + 1) as f64 / b.weight;
+        da.partial_cmp(&db).expect("drain time is finite")
+    })?;
+    let top = slots.iter().map(|s| s.weight).fold(f64::MIN, f64::max);
+    let cap = ((global_batch as f64 * best.weight / top).ceil() as usize).clamp(1, global_batch);
+    Some((best.id, best.tx.clone(), cap))
 }
 
 /// One replica runner: pull a micro-batch, run it through the replica's

@@ -24,6 +24,22 @@ impl Stats {
     pub fn throughput(&self) -> f64 {
         1.0e9 / self.median_ns
     }
+
+    /// A flat-valued case for figures of merit that are not timed
+    /// iterations (modeled ns/img, latency quantiles, ...): every field
+    /// carries the same value so each JSON entry is self-describing
+    /// regardless of which field a tracker reads.
+    pub fn flat(name: impl Into<String>, iters: u64, ns: f64) -> Stats {
+        Stats { name: name.into(), iters, min_ns: ns, median_ns: ns, mean_ns: ns, max_ns: ns }
+    }
+}
+
+/// True when `ACF_BENCH_QUICK=1` (or any value other than `0`): benches
+/// shrink their workloads — shorter measurement budgets, fewer open-loop
+/// requests — so the CI bench job finishes in minutes. Full mode stays
+/// the default for local runs.
+pub fn quick_env() -> bool {
+    std::env::var("ACF_BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
 }
 
 /// Harness configuration.
@@ -45,6 +61,16 @@ impl Default for Bench {
 impl Bench {
     pub fn quick() -> Self {
         Bench { warmup: Duration::from_millis(20), budget: Duration::from_millis(120), min_samples: 5 }
+    }
+
+    /// [`Bench::quick`] when [`quick_env`] is set (CI), the full default
+    /// otherwise.
+    pub fn from_env() -> Self {
+        if quick_env() {
+            Bench::quick()
+        } else {
+            Bench::default()
+        }
     }
 
     /// Time `f`, which performs ONE logical iteration, returning stats.
@@ -136,6 +162,247 @@ pub fn write_json(path: &str, title: &str, stats: &[Stats]) -> std::io::Result<(
     std::fs::write(path, doc.dump())
 }
 
+// ---------------------------------------------------------------------
+// Bench regression gate (`acf bench-check`)
+//
+// CI runs the three bench targets and uploads `BENCH_*.json`; the gate
+// then compares the fresh series against the committed
+// `BENCH_baseline/` in two ways:
+//
+//  * **Modeled series** (case name contains "modeled") are
+//    deterministic model evaluations — planner outcomes, not host
+//    timings — so they are compared against a *pinned* baseline with a
+//    small tolerance and FAIL the job on regression. This is what
+//    protects the PR 1–4 wins (engine selection, fleet composition)
+//    from quietly degrading.
+//  * **Measured series** are host timings and vary across runners; they
+//    are reported (drift vs baseline) but never gate.
+//
+// A second, machine-independent gate is the *relations* file: ordering
+// invariants between same-run series (e.g. "64-lane sim must be ≥ 8×
+// cheaper per image than scalar", "the heterogeneous fleet must model
+// at least as fast as the best single device"). These hold on any
+// hardware and gate from the very first CI run, before any absolute
+// baseline has been pinned on a reference machine with
+// `acf bench-check --update`.
+// ---------------------------------------------------------------------
+
+/// One `(name, median_ns)` series point loaded back from a
+/// `BENCH_*.json` document.
+#[derive(Debug, Clone)]
+pub struct BenchCase {
+    pub name: String,
+    pub median_ns: f64,
+}
+
+/// A parsed `BENCH_*.json` (or baseline) document.
+#[derive(Debug, Clone)]
+pub struct BenchDoc {
+    pub bench: String,
+    /// Baselines start unpinned (`"pinned": false`, no cases): the
+    /// modeled gate stays quiet until a maintainer runs
+    /// `acf bench-check --update` on a reference machine and commits
+    /// the result. Fresh bench output parses as pinned.
+    pub pinned: bool,
+    pub cases: Vec<BenchCase>,
+}
+
+/// Parse a bench/baseline JSON document (tolerates extra keys such as
+/// `derived`).
+pub fn parse_bench_doc(json: &crate::util::json::Json) -> Result<BenchDoc, String> {
+    let bench = json
+        .get("bench")
+        .and_then(|b| b.as_str().map(str::to_string))
+        .map_err(|e| format!("bad 'bench' field: {e}"))?;
+    let pinned = match json.get_opt("pinned").map_err(|e| e.to_string())? {
+        Some(p) => p.as_bool().map_err(|e| format!("bad 'pinned' field: {e}"))?,
+        None => true,
+    };
+    let mut cases = Vec::new();
+    let raw = json
+        .get("cases")
+        .and_then(|c| c.as_arr().map(<[_]>::to_vec))
+        .map_err(|e| e.to_string())?;
+    for c in raw {
+        cases.push(BenchCase {
+            name: c
+                .get("name")
+                .and_then(|n| n.as_str().map(str::to_string))
+                .map_err(|e| format!("case missing 'name': {e}"))?,
+            median_ns: c
+                .get("median_ns")
+                .and_then(|m| m.as_f64())
+                .map_err(|e| format!("case missing 'median_ns': {e}"))?,
+        });
+    }
+    Ok(BenchDoc { bench, pinned, cases })
+}
+
+/// Whether a series is a deterministic model evaluation (gated) rather
+/// than a host timing (report-only). Convention: modeled case names
+/// carry the word "modeled".
+pub fn is_modeled(name: &str) -> bool {
+    name.contains("modeled")
+}
+
+/// An ordering invariant between two same-run series:
+/// `median(a) <= max_ratio × median(b)`.
+#[derive(Debug, Clone)]
+pub struct Relation {
+    pub a: String,
+    pub b: String,
+    pub max_ratio: f64,
+    pub why: String,
+}
+
+/// Parse `BENCH_baseline/relations.json`: an array of
+/// `{"a": ..., "b": ..., "max_ratio": ..., "why": ...}` objects.
+pub fn parse_relations(json: &crate::util::json::Json) -> Result<Vec<Relation>, String> {
+    let mut out = Vec::new();
+    for r in json.as_arr().map_err(|e| e.to_string())? {
+        out.push(Relation {
+            a: r.get("a").and_then(|v| v.as_str().map(str::to_string)).map_err(|e| e.to_string())?,
+            b: r.get("b").and_then(|v| v.as_str().map(str::to_string)).map_err(|e| e.to_string())?,
+            max_ratio: r.get("max_ratio").and_then(|v| v.as_f64()).map_err(|e| e.to_string())?,
+            why: r
+                .get_opt("why")
+                .map_err(|e| e.to_string())?
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()
+                .map_err(|e| e.to_string())?
+                .unwrap_or_default(),
+        });
+    }
+    Ok(out)
+}
+
+/// Outcome of a check pass: hard failures (exit non-zero) and
+/// informational notes.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    pub failures: Vec<String>,
+    pub notes: Vec<String>,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    pub fn merge(&mut self, other: CheckReport) {
+        self.failures.extend(other.failures);
+        self.notes.extend(other.notes);
+    }
+}
+
+/// Compare a fresh bench document against its committed baseline:
+/// modeled series gate within `tolerance` (fractional — 0.05 allows a
+/// 5% slowdown), measured series report drift only.
+pub fn check_against_baseline(
+    current: &BenchDoc,
+    baseline: &BenchDoc,
+    tolerance: f64,
+) -> CheckReport {
+    let mut rep = CheckReport::default();
+    if !baseline.pinned {
+        rep.notes.push(format!(
+            "{}: baseline unpinned — modeled gate idle (pin with `acf bench-check --update` on a reference machine and commit BENCH_baseline/)",
+            current.bench
+        ));
+        return rep;
+    }
+    for base in &baseline.cases {
+        let Some(cur) = current.cases.iter().find(|c| c.name == base.name) else {
+            if is_modeled(&base.name) {
+                rep.failures.push(format!(
+                    "{}: modeled series '{}' vanished from the fresh run",
+                    current.bench, base.name
+                ));
+            } else {
+                rep.notes.push(format!(
+                    "{}: measured series '{}' no longer emitted",
+                    current.bench, base.name
+                ));
+            }
+            continue;
+        };
+        let ratio = cur.median_ns / base.median_ns.max(1e-12);
+        if is_modeled(&base.name) {
+            if ratio > 1.0 + tolerance {
+                rep.failures.push(format!(
+                    "{}: modeled regression in '{}': {:.1} -> {:.1} ns ({:+.1}% > {:.0}% tolerance)",
+                    current.bench,
+                    base.name,
+                    base.median_ns,
+                    cur.median_ns,
+                    (ratio - 1.0) * 100.0,
+                    tolerance * 100.0
+                ));
+            } else if ratio < 1.0 - tolerance {
+                rep.notes.push(format!(
+                    "{}: modeled improvement in '{}' ({:+.1}%) — refresh the baseline to lock it in",
+                    current.bench,
+                    base.name,
+                    (ratio - 1.0) * 100.0
+                ));
+            }
+        } else {
+            rep.notes.push(format!(
+                "{}: measured '{}' drift {:+.1}% (report-only)",
+                current.bench,
+                base.name,
+                (ratio - 1.0) * 100.0
+            ));
+        }
+    }
+    for cur in &current.cases {
+        if is_modeled(&cur.name) && !baseline.cases.iter().any(|b| b.name == cur.name) {
+            rep.notes.push(format!(
+                "{}: new modeled series '{}' is unpinned — refresh the baseline to gate it",
+                current.bench, cur.name
+            ));
+        }
+    }
+    rep
+}
+
+/// Evaluate ordering relations over the union of all fresh cases. A
+/// relation whose endpoints are missing is a hard failure — a silently
+/// unevaluable gate is no gate.
+pub fn check_relations(cases: &[BenchCase], relations: &[Relation]) -> CheckReport {
+    let mut rep = CheckReport::default();
+    let find = |name: &str| cases.iter().find(|c| c.name == name);
+    for r in relations {
+        let (Some(a), Some(b)) = (find(&r.a), find(&r.b)) else {
+            rep.failures.push(format!(
+                "relation '{}' <= {:.3} x '{}': series missing from the fresh run",
+                r.a, r.max_ratio, r.b
+            ));
+            continue;
+        };
+        if a.median_ns > r.max_ratio * b.median_ns {
+            rep.failures.push(format!(
+                "relation violated: '{}' ({:.1} ns) > {:.3} x '{}' ({:.1} ns){}",
+                r.a,
+                a.median_ns,
+                r.max_ratio,
+                r.b,
+                b.median_ns,
+                if r.why.is_empty() { String::new() } else { format!(" — {}", r.why) }
+            ));
+        } else {
+            rep.notes.push(format!(
+                "relation holds: '{}' <= {:.3} x '{}' (ratio {:.3})",
+                r.a,
+                r.max_ratio,
+                r.b,
+                a.median_ns / b.median_ns.max(1e-12)
+            ));
+        }
+    }
+    rep
+}
+
 /// Print a standard bench-report block for a list of stats.
 pub fn report(title: &str, stats: &[Stats]) {
     use super::table::{Align, Table};
@@ -210,5 +477,115 @@ mod tests {
         assert_eq!(fmt_ns(1_500.0), "1.50 µs");
         assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
         assert_eq!(fmt_ns(3_200_000_000.0), "3.200 s");
+    }
+
+    fn doc(bench: &str, pinned: bool, cases: &[(&str, f64)]) -> BenchDoc {
+        BenchDoc {
+            bench: bench.into(),
+            pinned,
+            cases: cases
+                .iter()
+                .map(|&(n, v)| BenchCase { name: n.into(), median_ns: v })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn bench_doc_round_trips_through_json() {
+        let b = Bench::quick();
+        let s = b.run("case", || black_box(1u64));
+        let modeled = Stats::flat("x: modeled ns/img", 1, 42.5);
+        let text = crate::util::json::obj([
+            ("bench", "t".into()),
+            ("cases", stats_json(&[s, modeled])),
+        ])
+        .dump();
+        let parsed = parse_bench_doc(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed.bench, "t");
+        assert!(parsed.pinned, "fresh bench output parses as pinned");
+        assert_eq!(parsed.cases.len(), 2);
+        assert_eq!(parsed.cases[1].name, "x: modeled ns/img");
+        assert!((parsed.cases[1].median_ns - 42.5).abs() < 1e-9);
+        assert!(is_modeled(&parsed.cases[1].name));
+        assert!(!is_modeled(&parsed.cases[0].name));
+    }
+
+    #[test]
+    fn modeled_regression_fails_and_baseline_passes() {
+        let base = doc("serve", true, &[("a: modeled ns/img", 100.0), ("b timing", 50.0)]);
+        // Identical run: clean.
+        let rep = check_against_baseline(&base, &base, 0.05);
+        assert!(rep.ok(), "{:?}", rep.failures);
+        // Within tolerance: clean.
+        let near = doc("serve", true, &[("a: modeled ns/img", 104.0), ("b timing", 400.0)]);
+        let rep = check_against_baseline(&near, &base, 0.05);
+        assert!(rep.ok(), "{:?}", rep.failures);
+        // Measured drift is report-only even at 8x.
+        assert!(rep.notes.iter().any(|n| n.contains("report-only")));
+        // An injected modeled regression fails.
+        let bad = doc("serve", true, &[("a: modeled ns/img", 120.0), ("b timing", 50.0)]);
+        let rep = check_against_baseline(&bad, &base, 0.05);
+        assert!(!rep.ok());
+        assert!(rep.failures[0].contains("modeled regression"), "{:?}", rep.failures);
+        // A vanished modeled series fails too.
+        let gone = doc("serve", true, &[("b timing", 50.0)]);
+        assert!(!check_against_baseline(&gone, &base, 0.05).ok());
+        // Improvements do not fail, they nudge a refresh.
+        let better = doc("serve", true, &[("a: modeled ns/img", 80.0), ("b timing", 50.0)]);
+        let rep = check_against_baseline(&better, &base, 0.05);
+        assert!(rep.ok());
+        assert!(rep.notes.iter().any(|n| n.contains("improvement")));
+    }
+
+    #[test]
+    fn unpinned_baseline_is_idle_not_green_lit() {
+        let base = doc("serve", false, &[]);
+        let cur = doc("serve", true, &[("a: modeled ns/img", 1e12)]);
+        let rep = check_against_baseline(&cur, &base, 0.05);
+        assert!(rep.ok());
+        assert!(rep.notes.iter().any(|n| n.contains("unpinned")));
+    }
+
+    #[test]
+    fn relations_gate_orderings_machine_independently() {
+        let cases = vec![
+            BenchCase { name: "scalar".into(), median_ns: 800.0 },
+            BenchCase { name: "wide".into(), median_ns: 90.0 },
+        ];
+        let holds = Relation {
+            a: "wide".into(),
+            b: "scalar".into(),
+            max_ratio: 0.125,
+            why: "lane packing".into(),
+        };
+        assert!(check_relations(&cases, &[holds.clone()]).ok());
+        // Injected regression: the wide path got slower than the bound.
+        let slow = vec![
+            BenchCase { name: "scalar".into(), median_ns: 800.0 },
+            BenchCase { name: "wide".into(), median_ns: 300.0 },
+        ];
+        let rep = check_relations(&slow, &[holds.clone()]);
+        assert!(!rep.ok());
+        assert!(rep.failures[0].contains("lane packing"));
+        // A relation over a missing series is a loud failure, not a skip.
+        let rep = check_relations(&[], &[holds]);
+        assert!(!rep.ok());
+        // Relations parse from the committed JSON shape.
+        let text = r#"[{"a":"wide","b":"scalar","max_ratio":0.125,"why":"lanes"}]"#;
+        let rels = parse_relations(&crate::util::json::Json::parse(text).unwrap()).unwrap();
+        assert_eq!(rels.len(), 1);
+        assert!((rels[0].max_ratio - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quick_mode_reads_the_environment() {
+        // Don't mutate the process env (tests run in parallel); just pin
+        // the parsing contract on the current state.
+        let expect = std::env::var("ACF_BENCH_QUICK")
+            .map(|v| v != "0" && !v.is_empty())
+            .unwrap_or(false);
+        assert_eq!(quick_env(), expect);
+        let b = Bench::from_env();
+        assert!(b.budget >= Bench::quick().budget);
     }
 }

@@ -139,6 +139,38 @@ impl Args {
         }
     }
 
+    /// Duration accessor for `--*-ms` options: a bare number is
+    /// milliseconds, and the suffixes `ms` / `s` are accepted so
+    /// `--window-ms 250`, `--window-ms 250ms`, and `--window-ms 2s` all
+    /// parse (serving-control knobs read more naturally with units).
+    pub fn get_ms(&self, name: &str) -> Result<Option<std::time::Duration>, CliError> {
+        self.typed(name, |s| {
+            let (num, scale_ms) = if let Some(n) = s.strip_suffix("ms") {
+                (n, 1.0)
+            } else if let Some(n) = s.strip_suffix('s') {
+                (n, 1_000.0)
+            } else {
+                (s, 1.0)
+            };
+            let v: f64 = num
+                .trim()
+                .parse()
+                .map_err(|_| "want a duration like 250, 250ms, or 2s".to_string())?;
+            if !v.is_finite() || v < 0.0 {
+                return Err("duration must be a finite non-negative number".to_string());
+            }
+            Ok(std::time::Duration::from_secs_f64(v * scale_ms / 1_000.0))
+        })
+    }
+
+    /// `auto`/`none`-aware twin of [`Args::get_ms`].
+    pub fn get_ms_auto(&self, name: &str) -> Result<Option<std::time::Duration>, CliError> {
+        match self.get(name) {
+            None | Some("auto") | Some("none") => Ok(None),
+            Some(_) => self.get_ms(name),
+        }
+    }
+
     fn typed<T>(
         &self,
         name: &str,
@@ -236,6 +268,27 @@ mod tests {
         assert_eq!(a.get_f64_auto("rate").unwrap(), Some(250.5));
         let a = Args::parse(&sv(&["--replicas", "lots"]), &specs).unwrap();
         assert!(a.get_u64_auto("replicas").is_err());
+    }
+
+    #[test]
+    fn ms_durations_with_and_without_suffix() {
+        use std::time::Duration;
+        let specs = vec![
+            OptSpec { name: "window-ms", value: true, help: "period", default: Some("250") },
+            OptSpec { name: "cooldown-ms", value: true, help: "auto|ms", default: Some("auto") },
+        ];
+        let a = Args::parse(&sv(&[]), &specs).unwrap();
+        assert_eq!(a.get_ms("window-ms").unwrap(), Some(Duration::from_millis(250)));
+        assert_eq!(a.get_ms_auto("cooldown-ms").unwrap(), None);
+        let a = Args::parse(&sv(&["--window-ms", "100ms", "--cooldown-ms", "2s"]), &specs).unwrap();
+        assert_eq!(a.get_ms("window-ms").unwrap(), Some(Duration::from_millis(100)));
+        assert_eq!(a.get_ms_auto("cooldown-ms").unwrap(), Some(Duration::from_secs(2)));
+        let a = Args::parse(&sv(&["--window-ms", "1.5s"]), &specs).unwrap();
+        assert_eq!(a.get_ms("window-ms").unwrap(), Some(Duration::from_millis(1500)));
+        for bad in ["fast", "-5", "nan", "infs"] {
+            let a = Args::parse(&sv(&["--window-ms", bad]), &specs).unwrap();
+            assert!(a.get_ms("window-ms").is_err(), "'{bad}' must not parse");
+        }
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Dynamic-rebalancing integration tests: the step-load contract (the
+//! fleet grows under a spike and shrinks back in the lull, with zero
+//! dropped in-flight requests and bit-exact outputs throughout), and the
+//! replica add/retire lifecycle underneath it (weighted-drain handoff,
+//! last-replica protection, drain summaries).
+
+use acf::cnn::data::Dataset;
+use acf::cnn::model::{Model, Weights};
+use acf::coordinator::Deployment;
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::serve::{
+    plan_fixed_fleet, FleetFrontier, FleetSpec, RebalanceAction, RebalanceConfig, Rebalancer,
+    ServeConfig, ServeError, Server,
+};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn corpus(n: usize, seed: u64) -> Vec<Vec<i64>> {
+    Dataset::generate(n, seed, 16, 16).images.iter().map(|i| i.pix.clone()).collect()
+}
+
+/// Poll `cond` until it holds or `timeout` expires; returns whether it
+/// held.
+fn wait_for(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+#[test]
+fn step_load_grows_under_spike_and_shrinks_back() {
+    // One zcu104 group, started at ONE replica although the frontier
+    // holds more — the spike must pull extra replicas in, the lull must
+    // retire them, and every admitted request must complete bit-exactly.
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let spec = FleetSpec::single(by_name("zcu104").unwrap(), None);
+    let frontier = FleetFrontier::build(&m, &spec, 200.0, &Policy::adaptive(), 3).unwrap();
+    assert!(frontier.groups[0].max_count() >= 2, "zcu104 must hold at least two replicas");
+    let fp = frontier.fleet_at(&[1]);
+    assert_eq!(fp.replicas(), 1);
+
+    let model = Arc::new(m.clone());
+    let weights = Arc::new(w.clone());
+    let cfg = ServeConfig { queue_depth: 8, max_batch: 4, ..ServeConfig::default() };
+    let server = Arc::new(Server::start_grouped(
+        fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
+        fp.replica_groups(),
+        fp.group_labels(),
+        &cfg,
+    ));
+    let rb = Rebalancer::start(
+        Arc::clone(&server),
+        frontier,
+        &fp,
+        Arc::clone(&model),
+        Arc::clone(&weights),
+        RebalanceConfig {
+            window: Duration::from_millis(100),
+            headroom: 0.25,
+            cooldown: Duration::from_millis(150),
+            min_replicas: 1,
+        },
+    );
+
+    let images = corpus(12, 9);
+    let refs: Vec<Vec<i64>> =
+        images.iter().map(|img| acf::cnn::infer::infer(&m, &w, img)).collect();
+
+    // Phase 1 — low load: a few closed-loop requests, all exact.
+    for (i, img) in images.iter().take(4).enumerate() {
+        let logits = server.submit_wait(img.clone()).unwrap().wait().unwrap();
+        assert_eq!(logits, refs[i], "low-phase image {i}");
+        std::thread::sleep(Duration::from_millis(15));
+    }
+
+    // Phase 2 — spike: saturate the single replica from many closed-loop
+    // threads until the controller scales the group up.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut spikers = Vec::new();
+    for t in 0..8usize {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        let images = images.clone();
+        let refs = refs.clone();
+        spikers.push(std::thread::spawn(move || {
+            let mut sent = 0usize;
+            let mut k = t;
+            while !stop.load(Ordering::Relaxed) {
+                let idx = k % images.len();
+                k += 1;
+                let logits = server.submit_wait(images[idx].clone()).unwrap().wait().unwrap();
+                assert_eq!(logits, refs[idx], "spike thread {t} request {sent}");
+                sent += 1;
+            }
+            sent
+        }));
+    }
+    let grew = wait_for(Duration::from_secs(20), || {
+        server.live_counts()[0] > 1
+    });
+    stop.store(true, Ordering::Relaxed);
+    let spike_sent: usize = spikers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(grew, "fleet never scaled up under the spike");
+    assert!(spike_sent > 0, "spike threads must have exercised the fleet");
+
+    // Phase 3 — lull: zero traffic; the controller must shrink back to
+    // one replica (one step per cooldown).
+    let shrank = wait_for(Duration::from_secs(20), || server.live_counts()[0] == 1);
+    assert!(shrank, "fleet never shrank back in the lull: {:?}", server.live_counts());
+
+    // A little post-shrink traffic still serves bit-exactly.
+    for (i, img) in images.iter().take(4).enumerate() {
+        let logits = server.submit_wait(img.clone()).unwrap().wait().unwrap();
+        assert_eq!(logits, refs[i], "post-shrink image {i}");
+    }
+
+    rb.stop();
+    let snap = server.shutdown();
+    // Zero dropped in-flight requests: everything admitted completed.
+    assert_eq!(snap.completed, snap.accepted, "admitted requests must all complete");
+    assert_eq!(snap.failed, 0);
+    // The timeline shows both directions.
+    let acted = |a: RebalanceAction, b: RebalanceAction| {
+        snap.events.iter().any(|e| e.action == a || e.action == b)
+    };
+    assert!(
+        acted(RebalanceAction::Grow, RebalanceAction::Swap),
+        "no grow/swap event: {:?}",
+        snap.events
+    );
+    assert!(
+        acted(RebalanceAction::Shrink, RebalanceAction::Swap),
+        "no shrink/swap event: {:?}",
+        snap.events
+    );
+    // Churn really happened and every retirement drained cleanly.
+    let g = &snap.groups[0];
+    assert!(g.spawned > 1, "spike must have spawned extra replicas");
+    assert_eq!(g.drain_failed, 0, "no replica may miss its drain deadline");
+    assert_eq!(g.drain_leftover_images, 0);
+    assert!(g.drained >= g.spawned, "every replica (live ones at shutdown included) drains");
+}
+
+#[test]
+fn replicas_add_and_retire_under_live_traffic() {
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let dev = by_name("zcu104").unwrap();
+    let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let model = Arc::new(m.clone());
+    let weights = Arc::new(w.clone());
+    let server = Server::start_grouped(
+        fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
+        fp.replica_groups(),
+        fp.group_labels(),
+        &ServeConfig::default(),
+    );
+    assert_eq!(server.live_counts(), vec![2]);
+
+    // Work in flight across both replicas...
+    let images = corpus(10, 21);
+    let pendings: Vec<_> =
+        images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
+
+    // ...while one of them retires: the weighted-drain handoff must let
+    // its queued micro-batches finish before teardown.
+    let victim = server.replica_ids_of_group(0)[0];
+    let report = server.retire_replica(victim).unwrap();
+    assert!(report.drained, "replica must drain within the default deadline");
+    assert_eq!(report.leftover, 0);
+    assert_eq!(server.live_counts(), vec![1]);
+    // Retiring the last live replica is refused.
+    let last = server.replica_ids_of_group(0)[0];
+    assert!(matches!(server.retire_replica(last), Err(ServeError::Rebalance(_))));
+    // Unknown / already-retired ids are refused too (after adding a
+    // second replica so the guard above is not what trips).
+    let dep = Arc::new(Deployment::with_plan(
+        Arc::clone(&model),
+        Arc::clone(&weights),
+        fp.groups[0].per_replica.clone(),
+    ));
+    let added = server.add_replica(dep, 0).unwrap();
+    assert_eq!(server.live_counts(), vec![2]);
+    assert!(matches!(server.retire_replica(victim), Err(ServeError::Rebalance(_))));
+
+    // Everything admitted before and during the churn completes exactly.
+    for (img, p) in images.iter().zip(pendings) {
+        assert_eq!(p.wait().unwrap(), acf::cnn::infer::infer(&m, &w, img));
+    }
+    // And the refreshed fleet serves new traffic on the added replica.
+    let extra: Vec<_> =
+        images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
+    for (img, p) in images.iter().zip(extra) {
+        assert_eq!(p.wait().unwrap(), acf::cnn::infer::infer(&m, &w, img));
+    }
+
+    let snap = server.shutdown();
+    assert_eq!(snap.completed, snap.accepted);
+    assert_eq!(snap.failed, 0);
+    let g = &snap.groups[0];
+    assert_eq!(g.spawned, 3, "2 initial + 1 added");
+    assert_eq!(g.drain_failed, 0);
+    // 1 live retirement + 2 live replicas reaped at shutdown.
+    assert_eq!(g.drained, 3);
+    // The retired replica's history survives, flagged.
+    assert!(snap.replicas[victim].retired);
+    assert_eq!(snap.replicas.len(), 3);
+    assert!(added < snap.replicas.len());
+    // Shutdown is idempotent.
+    let again = server.shutdown();
+    assert_eq!(again.completed, snap.completed);
+}

@@ -240,7 +240,7 @@ fn saturated_queue_sheds_with_overloaded() {
     // A deliberately tiny queue and single replica: a tight submission
     // loop must hit admission control, and every *accepted* request must
     // still complete correctly.
-    let cfg = ServeConfig { queue_depth: 2, max_batch: 1 };
+    let cfg = ServeConfig { queue_depth: 2, max_batch: 1, ..ServeConfig::default() };
     let (server, model, weights) = fleet(1, &cfg);
     let images = corpus(4, 5);
     let mut accepted = Vec::new();
