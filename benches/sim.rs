@@ -8,11 +8,19 @@
 //! same pass via Shannon mux-tree LUT reduction and bitwise
 //! carry/FF words.
 //!
+//! Also measures the event-driven settle scheduler's occupancy
+//! sensitivity on Conv_1 (the logic-only IP, where settle cost dominates
+//! a pass): a quiet stimulus — uniform constant windows, constant
+//! coefficient stream — against a churning one, each under both the
+//! event-driven settle and the forced dense sweep.
+//! `BENCH_baseline/relations.json` pins the ordering (event ≥ 2× dense
+//! images/s when quiet, within 10% at full churn) machine-independently.
+//!
 //! Emits `BENCH_sim.json` with the raw timing series plus derived
 //! cycles/sec and images/sec per occupancy, so the lane-packing speedup
 //! is tracked across runs next to `BENCH_hotpath.json` and
 //! `BENCH_serve.json`.
-use acf::ips::verify::{random_stimulus_lanes, IpPorts};
+use acf::ips::verify::{random_stimulus_lanes, IpPorts, LaneStimulus};
 use acf::ips::{self, ConvKind, ConvParams};
 use acf::netlist::sim::Sim;
 use acf::util::bench::{quick_env, report, stats_json, Bench, Stats};
@@ -70,10 +78,16 @@ fn main() {
         } else {
             1.0
         };
+        let st = sim.settle_stats();
         println!(
-            "{label}: {:.2}M cycles/s, {:.2}M img/s ({speedup:.1}x scalar img/s)",
+            "{label}: {:.2}M cycles/s, {:.2}M img/s ({speedup:.1}x scalar img/s) — \
+             {} settles ({} dense / {} event), {:.1}% of ops evaluated",
             cycles_per_sec / 1e6,
-            images_per_sec / 1e6
+            images_per_sec / 1e6,
+            st.settles,
+            st.dense_settles,
+            st.event_settles(),
+            st.evaluated_fraction() * 100.0
         );
         derived.push(obj([
             ("name", label.as_str().into()),
@@ -102,6 +116,76 @@ fn main() {
         (64 * ip_lanes) as u64,
         taps as f64 * 5.0 / (64.0 * ip_lanes as f64),
     ));
+
+    // ---- event-driven settle: occupancy sensitivity (Conv_1) ----
+    //
+    // Conv_1 is the logic-only IP (no DSP), so settle cost dominates a
+    // pass and the event scheduler's win/overhead is what gets timed.
+    // Low occupancy drives uniform constant windows and a constant
+    // coefficient stream: a window-mux select change lands on identical
+    // element values, so only the phase counter and accumulator cones
+    // stay active and the multiplier fabric is quiet. High occupancy
+    // streams a fresh random coefficient every phase against random
+    // windows, churning the whole datapath. Each mode runs under the
+    // event-driven settle and the forced dense sweep; relations.json
+    // pins the ordering so `acf bench-check` gates it in CI.
+    let ip1 = ips::generate(ConvKind::Conv1, &p).unwrap();
+    let ip1_lanes = ip1.kind.lanes() as usize;
+    println!(
+        "\nConv_1 netlist: {} cells (logic-only), occupancy series at 64 sim lanes",
+        ip1.netlist.n_cells()
+    );
+    let low_stim: Vec<LaneStimulus> =
+        (0..64).map(|_| vec![vec![vec![21i64; taps]; ip1_lanes]]).collect();
+    let low_coefs = vec![9i64; taps];
+    let mut rng = Rng::new(0x0CC1);
+    let (high_stim, high_coefs) = random_stimulus_lanes(&ip1, &mut rng, 64, 1);
+    for (occ, stim, coefs) in
+        [("low", &low_stim, &low_coefs), ("high", &high_stim, &high_coefs)]
+    {
+        for (mode, dense) in [("event", false), ("dense", true)] {
+            let mut sim = Sim::with_lanes(&ip1.netlist, 64).unwrap();
+            sim.set_force_dense(dense);
+            let ports = IpPorts::resolve(&sim, ip1_lanes);
+            ports.reset(&mut sim, &p);
+            let label = format!("Conv_1 {mode} settle, {occ} occupancy (64-lane pass)");
+            let s = b.run(&label, || {
+                ports.drive_windows_lanes(&mut sim, &p, stim, 0);
+                for phase in 0..taps {
+                    ports.drive_coef(&mut sim, &p, coefs, phase);
+                    sim.settle();
+                    sim.tick();
+                }
+            });
+            let st = sim.settle_stats();
+            let images_per_sec = s.throughput() * (64 * ip1_lanes) as f64;
+            println!(
+                "{label}: {:.2}M img/s — {} settles ({} dense / {} event), \
+                 {:.1}% of ops evaluated",
+                images_per_sec / 1e6,
+                st.settles,
+                st.dense_settles,
+                st.event_settles(),
+                st.evaluated_fraction() * 100.0
+            );
+            derived.push(obj([
+                ("name", label.as_str().into()),
+                ("occupancy", occ.into()),
+                ("mode", mode.into()),
+                ("images_per_sec", images_per_sec.into()),
+                ("settles", st.settles.into()),
+                ("dense_settles", st.dense_settles.into()),
+                ("evaluated_fraction", st.evaluated_fraction().into()),
+            ]));
+            stats.push(s);
+            // Flat ns/img series — the endpoints relations.json pins.
+            stats.push(Stats::flat(
+                format!("sim: measured ns/img — Conv_1 {mode} settle, {occ} occupancy (64-lane)"),
+                (64 * ip1_lanes) as u64,
+                1e9 / images_per_sec.max(1e-9),
+            ));
+        }
+    }
 
     report("lane-parallel netlist sim", &stats);
     let doc = obj([

@@ -50,8 +50,14 @@ fn main() {
 
     println!("\n== netlist spot-verification of planned conv IPs ==");
     for ep in dep.plan.convs() {
-        let n = acf::sim::netlist_layer_check(&dep.model, &dep.plan, ep.layer, 0xE2E, 16).unwrap();
-        println!("  layer {}: {} windows through the {} netlist — exact", ep.layer, n, ep.kind.name());
+        let chk = acf::sim::netlist_layer_check(&dep.model, &dep.plan, ep.layer, 0xE2E, 16).unwrap();
+        println!(
+            "  layer {}: {} windows through the {} netlist — exact ({:.1}% of ops evaluated)",
+            ep.layer,
+            chk.windows,
+            ep.kind.name(),
+            chk.activity.evaluated_fraction() * 100.0
+        );
     }
 
     println!("\n== serve {n_images} synthetic digit images ==");

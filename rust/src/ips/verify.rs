@@ -21,7 +21,7 @@
 
 use super::common::ConvIp;
 use super::params::ConvParams;
-use crate::netlist::sim::{Sim, LANES};
+use crate::netlist::sim::{SettleStats, Sim, LANES};
 use crate::util::rng::Rng;
 
 /// One pass's stimulus: a window per IP lane.
@@ -173,6 +173,34 @@ pub fn run_ip_lanes(
     per_lane: &[LaneStimulus],
     coefs: &[i64],
 ) -> Vec<Vec<Vec<i64>>> {
+    run_ip_lanes_report(ip, per_lane, coefs, false).outputs
+}
+
+/// One lane-batched run's outputs plus the simulator's settle-scheduler
+/// accounting — what the layer checks and benches surface alongside the
+/// values.
+pub struct LaneRunReport {
+    /// Captured outputs per sim lane per pass per IP lane.
+    pub outputs: Vec<Vec<Vec<i64>>>,
+    /// Cumulative scheduler activity over the whole run (event vs. dense
+    /// settles, ops evaluated vs. the dense workload).
+    pub activity: SettleStats,
+    /// Total toggles charged across all nets and lanes — the power-model
+    /// signal, exact regardless of which settle path ran.
+    pub toggles: u64,
+}
+
+/// [`run_ip_lanes`] with the activity report kept. With `dense`, the
+/// simulator is forced onto full sweeps for every settle (the PR 3
+/// baseline the event scheduler is measured against); otherwise the
+/// event-driven path applies. Outputs and toggles must be identical
+/// either way — the differential tests below pin that.
+pub fn run_ip_lanes_report(
+    ip: &ConvIp,
+    per_lane: &[LaneStimulus],
+    coefs: &[i64],
+    dense: bool,
+) -> LaneRunReport {
     let p = &ip.params;
     let ip_lanes = ip.kind.lanes() as usize;
     let taps = p.taps() as usize;
@@ -185,6 +213,9 @@ pub fn run_ip_lanes(
     assert_eq!(coefs.len(), taps);
 
     let mut sim = Sim::with_lanes(&ip.netlist, sim_lanes).expect("IP netlist must check");
+    if dense {
+        sim.set_force_dense(true);
+    }
     let ports = IpPorts::resolve(&sim, ip_lanes);
     ports.reset(&mut sim, p);
 
@@ -220,7 +251,11 @@ pub fn run_ip_lanes(
             ip.kind.name()
         );
     }
-    results
+    LaneRunReport {
+        activity: sim.settle_stats().clone(),
+        toggles: sim.toggle_total(),
+        outputs: results,
+    }
 }
 
 /// Behavioral expectation for the same stimulus (lane-aware: includes the
@@ -346,6 +381,45 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Differential suite on *real* IP layers: the event-driven settle
+    /// must produce bit-exact outputs AND exact toggle totals versus the
+    /// forced dense sweep, at 1, 8, and 64 sim lanes, for every IP kind.
+    #[test]
+    fn event_run_matches_dense_run_exactly_all_kinds() {
+        let p = ConvParams::paper_8bit();
+        for kind in ConvKind::ALL {
+            let ip = generate(kind, &p).unwrap();
+            for sim_lanes in [1usize, 8, LANES] {
+                let mut rng = Rng::new(0xD1FF ^ ((kind as u64) << 8) ^ sim_lanes as u64);
+                let (per_lane, coefs) = random_stimulus_lanes(&ip, &mut rng, sim_lanes, 1);
+                let event = run_ip_lanes_report(&ip, &per_lane, &coefs, false);
+                let dense = run_ip_lanes_report(&ip, &per_lane, &coefs, true);
+                assert_eq!(
+                    event.outputs,
+                    dense.outputs,
+                    "{} @ {sim_lanes} lanes: event != dense outputs",
+                    kind.name()
+                );
+                assert_eq!(
+                    event.toggles,
+                    dense.toggles,
+                    "{} @ {sim_lanes} lanes: toggle totals diverge",
+                    kind.name()
+                );
+                // The event run must also match the behavioral reference
+                // (not merely agree with dense on a shared wrong answer).
+                for (lane, stim) in per_lane.iter().enumerate() {
+                    let want = expected(&ip, stim, &coefs);
+                    assert_eq!(event.outputs[lane], want, "{} lane {lane}", kind.name());
+                }
+                // Accounting invariants: the dense run swept every pass
+                // densely; the event run never exceeds the dense workload.
+                assert_eq!(dense.activity.dense_settles, dense.activity.settles);
+                assert!(event.activity.ops_evaluated <= event.activity.ops_total);
+            }
+        }
     }
 
     #[test]

@@ -236,6 +236,33 @@ impl Netlist {
         self.topo_comb()
     }
 
+    /// Topological level of every cell, computed from a combinational
+    /// order produced by [`Netlist::check`]/[`Netlist::topo_comb`].
+    /// Sources — primary inputs, constants, and (by convention)
+    /// sequential cells, whose outputs the settle pass treats as
+    /// sources — sit at level 0; every other combinational cell is one
+    /// more than its deepest combinational driver. The contract the
+    /// event-driven simulator schedules by: for every comb→comb edge,
+    /// `level(consumer) > level(producer)`, so one ascending sweep over
+    /// per-level dirty queues reaches the settle fixpoint with each
+    /// woken cell evaluated exactly once.
+    pub fn comb_levels(&self, order: &[CellId]) -> Vec<u32> {
+        let mut level = vec![0u32; self.cells.len()];
+        for &cid in order {
+            let c = self.cell(cid);
+            let mut l = 0u32;
+            for &i in &c.ins {
+                if let Some((d, _)) = self.drivers[i.0 as usize] {
+                    if !self.cells[d.0 as usize].kind.is_sequential() {
+                        l = l.max(level[d.0 as usize] + 1);
+                    }
+                }
+            }
+            level[cid.0 as usize] = l;
+        }
+        level
+    }
+
     /// Topological order over combinational cells (Kahn). Sequential cell
     /// outputs are treated as sources.
     pub fn topo_comb(&self) -> Result<Vec<CellId>, NetlistError> {
@@ -383,6 +410,61 @@ mod tests {
             assert!((1u64 << bits) >= depth as u64, "depth {depth}: {bits} bits too narrow");
             assert!(bits == 0 || (1u64 << (bits - 1)) < depth as u64, "depth {depth}: {bits} bits wasteful");
         }
+    }
+
+    #[test]
+    fn comb_levels_count_chain_depth() {
+        // a -> not -> not -> not: the chain levels 1, 2, 3 above the input.
+        let mut nl = Netlist::new();
+        let a = nl.net();
+        let x = nl.net();
+        let y = nl.net();
+        let z = nl.net();
+        nl.add_cell(CellKind::Input { name: "a".into() }, vec![], vec![a]);
+        let c1 = nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![a], vec![x]);
+        let c2 = nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![x], vec![y]);
+        let c3 = nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![y], vec![z]);
+        nl.inputs.push(("a".into(), vec![a]));
+        nl.outputs.push(("z".into(), vec![z]));
+        let order = nl.check().unwrap();
+        let levels = nl.comb_levels(&order);
+        assert_eq!(levels[0], 0, "input cell is a source");
+        assert_eq!(levels[c1.0 as usize], 1);
+        assert_eq!(levels[c2.0 as usize], 2);
+        assert_eq!(levels[c3.0 as usize], 3);
+    }
+
+    #[test]
+    fn comb_levels_strictly_increase_along_comb_edges_of_real_ip() {
+        // The schedule contract on a real generated netlist: every
+        // combinational consumer sits strictly above each of its
+        // combinational producers, and sequential cells cut the order.
+        let p = crate::ips::ConvParams::paper_8bit();
+        let ip = crate::ips::generate(crate::ips::ConvKind::Conv1, &p).unwrap();
+        let order = ip.netlist.check().unwrap();
+        let levels = ip.netlist.comb_levels(&order);
+        let mut max_level = 0;
+        for (ci, c) in ip.netlist.cells.iter().enumerate() {
+            if c.kind.is_sequential() {
+                continue;
+            }
+            let mut want = 0u32;
+            for &i in &c.ins {
+                let (d, _) = ip.netlist.driver(i).unwrap();
+                if !ip.netlist.cell(d).kind.is_sequential() {
+                    assert!(
+                        levels[ci] > levels[d.0 as usize],
+                        "cell {ci}: consumer level {} <= producer level {}",
+                        levels[ci],
+                        levels[d.0 as usize]
+                    );
+                    want = want.max(levels[d.0 as usize] + 1);
+                }
+            }
+            assert_eq!(levels[ci], want, "cell {ci} level not tight");
+            max_level = max_level.max(levels[ci]);
+        }
+        assert!(max_level >= 4, "Conv_1 should levelize non-trivially, got {max_level}");
     }
 
     #[test]

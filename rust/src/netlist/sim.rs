@@ -1,4 +1,4 @@
-//! Bit-exact, lane-parallel netlist simulator.
+//! Bit-exact, lane-parallel, event-driven netlist simulator.
 //!
 //! **Representation.** Simulation state is *lane-major*: every net holds
 //! one `u64` word whose bit *i* is that net's boolean value in
@@ -13,6 +13,36 @@
 //!    from primary inputs, constants, and sequential-cell outputs.
 //! 2. [`Sim::tick`] — clock edge: every sequential cell latches its
 //!    settled input values; then combinational logic re-settles.
+//!
+//! **Event-driven settle.** A dense settle evaluates every pre-decoded
+//! op every pass even when most of the fabric is quiet. Instead, the
+//! simulator schedules on **topological levels with a dirty set**:
+//!
+//! * At build time every comb op gets a level from
+//!   [`Netlist::comb_levels`] (sequential outputs count as sources), and
+//!   a CSR net→reader-op map records each net's immediate fanout cone.
+//! * At run time the dirty set is seeded by the input setters (only when
+//!   a lane word actually changes) and by FF/DSP/RAM output publication
+//!   after [`Sim::tick`]. [`Sim::settle`] then sweeps the per-level
+//!   queues in ascending order, evaluating only woken ops; an op that
+//!   produces a changed word wakes its readers, which the levelization
+//!   contract guarantees sit at strictly deeper levels — so each woken
+//!   op is evaluated at most once per settle and one ascending sweep
+//!   reaches the same fixpoint as the dense pass.
+//! * The lane-word `old ^ new` diff the toggle counter already computes
+//!   is the change-detection signal, so wakeups are free and
+//!   toggle/power accounting stays *exact*: a skipped op's inputs are
+//!   bit-identical to its last evaluation, hence its outputs (and their
+//!   toggle charges, zero) are too.
+//! * Dense full sweeps remain as bootstrap (first settle after load),
+//!   as a fallback when the seed set is already a large fraction of the
+//!   op list (quiet-fabric wins only exist when the cone is small), as
+//!   a forced mode for benchmarking ([`Sim::set_force_dense`]), and as
+//!   the `dense-check` debug cross-check ([`Sim::assert_dense_fixpoint`]).
+//!
+//! [`Sim::settle_stats`] reports the resulting activity (ops evaluated
+//! vs. total, wakeups per level, dense vs. event passes) so benches and
+//! the layer checks can show how quiet a workload really is.
 //!
 //! **Per-cell evaluation.**
 //! * LUTs evaluate bit-parallel by Shannon mux-tree reduction of the
@@ -54,6 +84,13 @@ use crate::fabric::ff::fdre_next_lanes;
 /// image per bit of a `u64` lane word.
 pub const LANES: usize = 64;
 
+/// With the `dense-check` feature, every Nth [`Sim::settle`] re-evaluates
+/// the whole op list read-only and asserts the event-driven result is a
+/// dense fixpoint (live-lane values identical). Cheap enough for
+/// debug/test builds, never compiled into release benches.
+#[cfg(feature = "dense-check")]
+const DENSE_CHECK_EVERY: u64 = 16;
+
 /// Pre-decoded sequential element with inline per-lane state (perf:
 /// tick() runs allocation-free and in place — DESIGN.md §Perf item 3).
 enum FastSeq {
@@ -72,6 +109,190 @@ enum FastSeq {
         /// Registered read value per lane.
         rd: Vec<u64>,
     },
+}
+
+/// Activity accounting of the settle scheduler, cumulative since
+/// construction. `ops_evaluated <= ops_total` always: the levelized
+/// sweep evaluates each woken op at most once per settle, and a dense
+/// pass evaluates each op exactly once.
+#[derive(Debug, Clone, Default)]
+pub struct SettleStats {
+    /// Total [`Sim::settle`] calls (dense + event).
+    pub settles: u64,
+    /// Settles that ran the dense full sweep (bootstrap, forced, or
+    /// seed-fraction fallback).
+    pub dense_settles: u64,
+    /// Comb ops actually evaluated across all settles.
+    pub ops_evaluated: u64,
+    /// Comb ops a dense-only simulator would have evaluated
+    /// (`settles * fast.len()`).
+    pub ops_total: u64,
+    /// Ops woken per topological level, summed over event settles only.
+    pub wakeups_per_level: Vec<u64>,
+}
+
+impl SettleStats {
+    /// Settles that took the event-driven path.
+    pub fn event_settles(&self) -> u64 {
+        self.settles - self.dense_settles
+    }
+
+    /// Fraction of the dense workload actually evaluated (1.0 = every
+    /// settle swept every op; small = the fabric was quiet).
+    pub fn evaluated_fraction(&self) -> f64 {
+        if self.ops_total == 0 {
+            return 0.0;
+        }
+        self.ops_evaluated as f64 / self.ops_total as f64
+    }
+}
+
+/// Build-time levelization + fanout index and the run-time dirty set of
+/// the event-driven settle.
+struct Scheduler {
+    /// Topological level of each fast op (parallel to `Sim::fast`).
+    op_level: Vec<u32>,
+    /// CSR offsets: readers of net `n` are
+    /// `user_ops[user_start[n]..user_start[n+1]]`.
+    user_start: Vec<u32>,
+    /// Flattened fast-op indices, grouped by the net they read.
+    user_ops: Vec<u32>,
+    /// Woken-op queue per topological level; drained ascending.
+    pending: Vec<Vec<u32>>,
+    /// Dedup flag per fast op: already sitting in a pending queue.
+    queued: Vec<bool>,
+    /// Number of ops currently queued across all levels.
+    n_queued: usize,
+}
+
+impl Scheduler {
+    /// Queue every reader of `net` that is not already queued.
+    #[inline]
+    fn wake_net(&mut self, net: u32) {
+        let lo = self.user_start[net as usize] as usize;
+        let hi = self.user_start[net as usize + 1] as usize;
+        for k in lo..hi {
+            let op = self.user_ops[k] as usize;
+            if !self.queued[op] {
+                self.queued[op] = true;
+                self.pending[self.op_level[op] as usize].push(op as u32);
+                self.n_queued += 1;
+            }
+        }
+    }
+
+    /// Drop every queued wakeup (a dense sweep just satisfied them all).
+    fn clear(&mut self) {
+        if self.n_queued == 0 {
+            return;
+        }
+        for q in &mut self.pending {
+            for &op in q.iter() {
+                self.queued[op as usize] = false;
+            }
+            q.clear();
+        }
+        self.n_queued = 0;
+    }
+}
+
+/// Publish `word` onto `net`, charging toggles for every live lane whose
+/// bit changed — `count_ones()` on `old ⊕ new` under the live mask keeps
+/// the power model's activity exact at any lane occupancy, and the same
+/// diff doubles as the event scheduler's change signal: when `WAKE`,
+/// a changed word queues the net's reader ops. The single shared write
+/// path of `settle`/`publish_seq_outputs`.
+#[inline(always)]
+fn publish<const WAKE: bool>(
+    values: &mut [u64],
+    toggles: &mut [u64],
+    live: u64,
+    sched: &mut Scheduler,
+    net: u32,
+    word: u64,
+) {
+    let slot = &mut values[net as usize];
+    let diff = (*slot ^ word) & live;
+    *slot = word;
+    if diff != 0 {
+        toggles[net as usize] += diff.count_ones() as u64;
+        if WAKE {
+            sched.wake_net(net);
+        }
+    }
+}
+
+/// Drive an input net's lane bits under `mask`. Inputs charge no toggles
+/// (stimulus is free, as before), and wakeups fire only when the lane
+/// word actually changes — repeated identical stimulus costs no settle
+/// work. `wake` is false only in forced-dense mode.
+#[inline(always)]
+fn drive_net(
+    values: &mut [u64],
+    sched: &mut Scheduler,
+    wake: bool,
+    net: u32,
+    mask: u64,
+    bit_on: bool,
+) {
+    let slot = &mut values[net as usize];
+    let word = if bit_on { *slot | mask } else { *slot & !mask };
+    if *slot != word {
+        *slot = word;
+        if wake {
+            sched.wake_net(net);
+        }
+    }
+}
+
+/// Evaluate one comb op from `values` and publish its outputs. With
+/// `WAKE`, changed outputs queue their reader ops (the event path);
+/// without, outputs publish silently (the dense path — order covers
+/// everything anyway).
+fn eval_op<const WAKE: bool>(
+    op: &FastOp,
+    scalar: bool,
+    values: &mut [u64],
+    toggles: &mut [u64],
+    live: u64,
+    sched: &mut Scheduler,
+) {
+    match op {
+        FastOp::Lut { ins, funcs } => {
+            if scalar {
+                // Occupancy-1 fast path: classic index-the-table.
+                let mut idx = 0usize;
+                for (i, &n) in ins.iter().enumerate() {
+                    idx |= ((values[n as usize] & 1) as usize) << i;
+                }
+                for &(init, out) in funcs {
+                    publish::<WAKE>(values, toggles, live, sched, out, (init >> idx) & 1);
+                }
+            } else {
+                let mut x = [0u64; 6];
+                for (i, &n) in ins.iter().enumerate() {
+                    x[i] = values[n as usize];
+                }
+                for &(init, out) in funcs {
+                    let word = lut_eval_lanes(init, &x[..ins.len()]);
+                    publish::<WAKE>(values, toggles, live, sched, out, word);
+                }
+            }
+        }
+        FastOp::Carry { s, di, ci, o, co } => {
+            let mut sv = [0u64; 8];
+            let mut dv = [0u64; 8];
+            for i in 0..8 {
+                sv[i] = values[s[i] as usize];
+                dv[i] = values[di[i] as usize];
+            }
+            let (ov, cv) = carry8_eval_lanes(&sv, &dv, values[*ci as usize]);
+            for i in 0..8 {
+                publish::<WAKE>(values, toggles, live, sched, o[i], ov[i]);
+                publish::<WAKE>(values, toggles, live, sched, co[i], cv[i]);
+            }
+        }
+    }
 }
 
 /// Simulator instance bound to a checked netlist.
@@ -94,6 +315,15 @@ pub struct Sim<'nl> {
     values: Vec<u64>,
     toggles: Vec<u64>,
     cycles: u64,
+    /// Event-driven settle machinery (levels, fanout CSR, dirty queues).
+    sched: Scheduler,
+    stats: SettleStats,
+    /// Next settle must be a dense sweep: no fixpoint established yet
+    /// (fresh build, or wakes were suppressed by forced-dense mode).
+    bootstrap: bool,
+    /// Benchmark/debug mode: every settle sweeps densely and wakeups are
+    /// suppressed ([`Sim::set_force_dense`]).
+    force_dense: bool,
 }
 
 /// Pre-decoded combinational operation.
@@ -105,18 +335,27 @@ enum FastOp {
     Carry { s: [u32; 8], di: [u32; 8], ci: u32, o: [u32; 8], co: [u32; 8] },
 }
 
-/// Publish `word` onto `net`, charging toggles for every live lane whose
-/// bit changed — `count_ones()` on `old ⊕ new` under the live mask keeps
-/// the power model's activity exact at any lane occupancy. The single
-/// shared write path of `settle`/`publish_seq_outputs`.
-#[inline(always)]
-fn write_net(values: &mut [u64], toggles: &mut [u64], live: u64, net: u32, word: u64) {
-    let slot = &mut values[net as usize];
-    let diff = (*slot ^ word) & live;
-    if diff != 0 {
-        toggles[net as usize] += diff.count_ones() as u64;
+impl FastOp {
+    /// Visit every input net this op reads (the edges the fanout CSR
+    /// indexes).
+    fn for_each_input(&self, mut f: impl FnMut(u32)) {
+        match self {
+            FastOp::Lut { ins, .. } => {
+                for &n in ins {
+                    f(n);
+                }
+            }
+            FastOp::Carry { s, di, ci, .. } => {
+                for &n in s {
+                    f(n);
+                }
+                for &n in di {
+                    f(n);
+                }
+                f(*ci);
+            }
+        }
     }
-    *slot = word;
 }
 
 /// Evaluate one LUT truth table over all lanes at once: broadcast each
@@ -209,19 +448,25 @@ impl<'nl> Sim<'nl> {
         }
         // Pre-decode the comb order into flat ops. Constants are written
         // once here (broadcast across live lanes) and never re-evaluated.
+        // Each op carries its topological level for the event scheduler.
+        let cell_levels = nl.comb_levels(&order);
         let mut values = vec![0u64; nl.n_nets()];
         let mut fast = Vec::new();
+        let mut op_level = Vec::new();
         for &cid in &order {
             let cell = nl.cell(cid);
             match &cell.kind {
-                CellKind::Lut { funcs } => fast.push(FastOp::Lut {
-                    ins: cell.ins.iter().map(|n| n.0).collect(),
-                    funcs: funcs
-                        .iter()
-                        .zip(&cell.outs)
-                        .map(|(f, o)| (f.init, o.0))
-                        .collect(),
-                }),
+                CellKind::Lut { funcs } => {
+                    fast.push(FastOp::Lut {
+                        ins: cell.ins.iter().map(|n| n.0).collect(),
+                        funcs: funcs
+                            .iter()
+                            .zip(&cell.outs)
+                            .map(|(f, o)| (f.init, o.0))
+                            .collect(),
+                    });
+                    op_level.push(cell_levels[cid.0 as usize]);
+                }
                 CellKind::Carry8 => {
                     let g = |i: usize| cell.ins[i].0;
                     let h = |i: usize| cell.outs[i].0;
@@ -232,6 +477,7 @@ impl<'nl> Sim<'nl> {
                         o: std::array::from_fn(|i| h(i)),
                         co: std::array::from_fn(|i| h(8 + i)),
                     });
+                    op_level.push(cell_levels[cid.0 as usize]);
                 }
                 CellKind::Const { value } => {
                     values[cell.outs[0].0 as usize] = if *value { live } else { 0 }
@@ -240,6 +486,33 @@ impl<'nl> Sim<'nl> {
                 _ => unreachable!("sequential in comb order"),
             }
         }
+        // Fanout CSR: net -> indices of the fast ops that read it.
+        let n_nets = nl.n_nets();
+        let mut user_start = vec![0u32; n_nets + 1];
+        for op in &fast {
+            op.for_each_input(|n| user_start[n as usize + 1] += 1);
+        }
+        for i in 0..n_nets {
+            user_start[i + 1] += user_start[i];
+        }
+        let mut user_ops = vec![0u32; user_start[n_nets] as usize];
+        let mut cursor = user_start.clone();
+        for (oi, op) in fast.iter().enumerate() {
+            op.for_each_input(|n| {
+                let c = &mut cursor[n as usize];
+                user_ops[*c as usize] = oi as u32;
+                *c += 1;
+            });
+        }
+        let n_levels = op_level.iter().map(|&l| l as usize + 1).max().unwrap_or(1);
+        let sched = Scheduler {
+            op_level,
+            user_start,
+            user_ops,
+            pending: vec![Vec::new(); n_levels],
+            queued: vec![false; fast.len()],
+            n_queued: 0,
+        };
         let input_ix =
             nl.inputs.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
         let output_ix =
@@ -255,6 +528,10 @@ impl<'nl> Sim<'nl> {
             values,
             toggles: vec![0; nl.n_nets()],
             cycles: 0,
+            sched,
+            stats: SettleStats { wakeups_per_level: vec![0; n_levels], ..Default::default() },
+            bootstrap: true,
+            force_dense: false,
         };
         sim.publish_seq_outputs();
         sim.settle();
@@ -297,9 +574,11 @@ impl<'nl> Sim<'nl> {
             bus.len()
         );
         let live = self.live;
+        let wake = !self.force_dense;
+        let values = &mut self.values;
+        let sched = &mut self.sched;
         for (i, net) in bus.iter().enumerate() {
-            let slot = &mut self.values[net.0 as usize];
-            *slot = if (value >> i) & 1 == 1 { *slot | live } else { *slot & !live };
+            drive_net(values, sched, wake, net.0, live, (value >> i) & 1 == 1);
         }
     }
 
@@ -320,9 +599,11 @@ impl<'nl> Sim<'nl> {
         );
         assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
         let bit = 1u64 << lane;
+        let wake = !self.force_dense;
+        let values = &mut self.values;
+        let sched = &mut self.sched;
         for (i, net) in bus.iter().enumerate() {
-            let slot = &mut self.values[net.0 as usize];
-            *slot = if (value >> i) & 1 == 1 { *slot | bit } else { *slot & !bit };
+            drive_net(values, sched, wake, net.0, bit, (value >> i) & 1 == 1);
         }
     }
 
@@ -340,9 +621,11 @@ impl<'nl> Sim<'nl> {
         assert!(width <= 64, "field width {width} > 64 on '{name}'");
         assert!(lo + width <= bus.len(), "field [{lo},{}) exceeds '{name}'", lo + width);
         let live = self.live;
+        let wake = !self.force_dense;
+        let values = &mut self.values;
+        let sched = &mut self.sched;
         for i in 0..width {
-            let slot = &mut self.values[bus[lo + i].0 as usize];
-            *slot = if (value >> i) & 1 == 1 { *slot | live } else { *slot & !live };
+            drive_net(values, sched, wake, bus[lo + i].0, live, (value >> i) & 1 == 1);
         }
     }
 
@@ -362,9 +645,11 @@ impl<'nl> Sim<'nl> {
         assert!(lo + width <= bus.len(), "field [{lo},{}) exceeds '{name}'", lo + width);
         assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
         let bit = 1u64 << lane;
+        let wake = !self.force_dense;
+        let values = &mut self.values;
+        let sched = &mut self.sched;
         for i in 0..width {
-            let slot = &mut self.values[bus[lo + i].0 as usize];
-            *slot = if (value >> i) & 1 == 1 { *slot | bit } else { *slot & !bit };
+            drive_net(values, sched, wake, bus[lo + i].0, bit, (value >> i) & 1 == 1);
         }
     }
 
@@ -431,25 +716,118 @@ impl<'nl> Sim<'nl> {
         self.get_unsigned_lane(&self.nl.outputs[output].1, lane)
     }
 
-    /// Propagate combinational logic to a fixed point (single topological
-    /// pass over the pre-decoded ops — the order is a DAG order). All
-    /// lanes settle in the same pass.
+    /// Propagate combinational logic to a fixed point. All lanes settle
+    /// in the same pass.
+    ///
+    /// Takes the event-driven path (levelized sweep of the dirty set)
+    /// unless this is the bootstrap settle, dense mode is forced, or the
+    /// seed set already covers ≥ 25% of the op list — at that occupancy
+    /// the dense sweep's branch-free march over the flat op array beats
+    /// queue bookkeeping, which keeps full-activity workloads within a
+    /// few percent of the PR 3 baseline while quiet workloads skip
+    /// almost everything.
     pub fn settle(&mut self) {
+        self.stats.settles += 1;
+        self.stats.ops_total += self.fast.len() as u64;
+        let dense =
+            self.force_dense || self.bootstrap || self.sched.n_queued * 4 >= self.fast.len();
+        if dense {
+            self.settle_dense();
+            self.bootstrap = false;
+        } else {
+            self.settle_event();
+        }
+        #[cfg(feature = "dense-check")]
+        {
+            if self.stats.settles % DENSE_CHECK_EVERY == 0 {
+                self.assert_dense_fixpoint();
+            }
+        }
+    }
+
+    /// Dense full sweep: evaluate every op in topological order. No
+    /// wakeups — the order itself covers every dependency — and any
+    /// queued wakeups are satisfied by the sweep, so the dirty set is
+    /// cleared afterwards.
+    fn settle_dense(&mut self) {
+        self.stats.dense_settles += 1;
+        self.stats.ops_evaluated += self.fast.len() as u64;
         let values = &mut self.values;
         let toggles = &mut self.toggles;
         let live = self.live;
         let scalar = self.lanes == 1;
+        let sched = &mut self.sched;
         for op in &self.fast {
+            eval_op::<false>(op, scalar, values, toggles, live, sched);
+        }
+        sched.clear();
+    }
+
+    /// Event-driven sweep: drain the per-level queues in ascending
+    /// order. Evaluating a level-L op can only wake strictly deeper
+    /// levels (the [`Netlist::comb_levels`] contract), so each queue is
+    /// complete when its level is reached and each woken op is evaluated
+    /// exactly once.
+    fn settle_event(&mut self) {
+        let values = &mut self.values;
+        let toggles = &mut self.toggles;
+        let live = self.live;
+        let scalar = self.lanes == 1;
+        let fast = &self.fast;
+        let sched = &mut self.sched;
+        let mut evaluated = 0u64;
+        for lvl in 0..sched.pending.len() {
+            let mut q = std::mem::take(&mut sched.pending[lvl]);
+            self.stats.wakeups_per_level[lvl] += q.len() as u64;
+            for &op in &q {
+                sched.queued[op as usize] = false;
+                eval_op::<true>(&fast[op as usize], scalar, values, toggles, live, sched);
+                evaluated += 1;
+            }
+            q.clear();
+            sched.pending[lvl] = q; // hand the allocation back
+        }
+        sched.n_queued = 0;
+        self.stats.ops_evaluated += evaluated;
+    }
+
+    /// Cumulative scheduler activity (ops evaluated vs. dense workload,
+    /// wakeups per level, dense/event pass split).
+    pub fn settle_stats(&self) -> &SettleStats {
+        &self.stats
+    }
+
+    /// Force (or release) dense full sweeps on every settle. While
+    /// forced, wakeups are suppressed entirely so the dense path pays
+    /// zero scheduler overhead — the honest PR 3 baseline for benches.
+    /// Releasing the mode re-bootstraps: the next settle sweeps densely
+    /// once to re-establish the fixpoint the suppressed wakeups would
+    /// have maintained.
+    pub fn set_force_dense(&mut self, dense: bool) {
+        if self.force_dense && !dense {
+            self.bootstrap = true;
+        }
+        self.force_dense = dense;
+    }
+
+    /// Debug cross-check: re-evaluate every comb op read-only and assert
+    /// the current values are a dense fixpoint on the live lanes. Panics
+    /// on divergence (an event-scheduling bug). O(fast.len()), no state
+    /// change.
+    pub fn assert_dense_fixpoint(&self) {
+        let values = &self.values;
+        let live = self.live;
+        let scalar = self.lanes == 1;
+        for (oi, op) in self.fast.iter().enumerate() {
             match op {
                 FastOp::Lut { ins, funcs } => {
                     if scalar {
-                        // Occupancy-1 fast path: classic index-the-table.
                         let mut idx = 0usize;
                         for (i, &n) in ins.iter().enumerate() {
                             idx |= ((values[n as usize] & 1) as usize) << i;
                         }
                         for &(init, out) in funcs {
-                            write_net(values, toggles, live, out, (init >> idx) & 1);
+                            check_net(values, live, oi, out, (init >> idx) & 1);
                         }
                     } else {
                         let mut x = [0u64; 6];
@@ -457,8 +835,7 @@ impl<'nl> Sim<'nl> {
                             x[i] = values[n as usize];
                         }
                         for &(init, out) in funcs {
-                            let word = lut_eval_lanes(init, &x[..ins.len()]);
-                            write_net(values, toggles, live, out, word);
+                            check_net(values, live, oi, out, lut_eval_lanes(init, &x[..ins.len()]));
                         }
                     }
                 }
@@ -471,8 +848,8 @@ impl<'nl> Sim<'nl> {
                     }
                     let (ov, cv) = carry8_eval_lanes(&sv, &dv, values[*ci as usize]);
                     for i in 0..8 {
-                        write_net(values, toggles, live, o[i], ov[i]);
-                        write_net(values, toggles, live, co[i], cv[i]);
+                        check_net(values, live, oi, o[i], ov[i]);
+                        check_net(values, live, oi, co[i], cv[i]);
                     }
                 }
             }
@@ -484,7 +861,8 @@ impl<'nl> Sim<'nl> {
     /// settled nets and updates inline state, phase 2 publishes outputs
     /// (a two-phase split so FF->FF shift chains latch atomically).
     /// FDREs latch all lanes with three bitwise ops; DSP and RAM state
-    /// advances per live lane.
+    /// advances per live lane. Changed sequential outputs seed the
+    /// event scheduler's dirty set for the re-settle.
     pub fn tick(&mut self) {
         self.cycles += 1;
         // Phase 1: compute next states from the settled snapshot.
@@ -543,13 +921,24 @@ impl<'nl> Sim<'nl> {
     }
 
     fn publish_seq_outputs(&mut self) {
+        if self.force_dense {
+            self.publish_seq_outputs_impl::<false>();
+        } else {
+            self.publish_seq_outputs_impl::<true>();
+        }
+    }
+
+    fn publish_seq_outputs_impl<const WAKE: bool>(&mut self) {
         let values = &mut self.values;
         let toggles = &mut self.toggles;
         let live = self.live;
         let lanes = self.lanes;
+        let sched = &mut self.sched;
         for op in &self.fastseq {
             match op {
-                FastSeq::Ff { q, state, .. } => write_net(values, toggles, live, *q, *state),
+                FastSeq::Ff { q, state, .. } => {
+                    publish::<WAKE>(values, toggles, live, sched, *q, *state)
+                }
                 FastSeq::Dsp { outs, dsps, .. } => {
                     // Transpose per-lane P values into output lane words.
                     let mut outw = [0u64; 48];
@@ -560,7 +949,7 @@ impl<'nl> Sim<'nl> {
                         }
                     }
                     for (i, &net) in outs.iter().enumerate() {
-                        write_net(values, toggles, live, net, outw[i]);
+                        publish::<WAKE>(values, toggles, live, sched, net, outw[i]);
                     }
                 }
                 FastSeq::Ram { outs, rd, .. } => {
@@ -571,7 +960,7 @@ impl<'nl> Sim<'nl> {
                         }
                     }
                     for (i, &net) in outs.iter().enumerate() {
-                        write_net(values, toggles, live, net, outw[i]);
+                        publish::<WAKE>(values, toggles, live, sched, net, outw[i]);
                     }
                 }
             }
@@ -601,6 +990,16 @@ impl<'nl> Sim<'nl> {
         let total = self.toggle_total();
         total as f64 / (self.toggles.len() as f64 * self.cycles as f64 * self.lanes as f64)
     }
+}
+
+/// Assert one net's value equals an independently re-evaluated word on
+/// the live lanes (the `assert_dense_fixpoint` comparator).
+fn check_net(values: &[u64], live: u64, op: usize, net: u32, want: u64) {
+    let got = values[net as usize];
+    assert!(
+        (got ^ want) & live == 0,
+        "event/dense divergence at op {op}, net {net}: got {got:#x}, want {want:#x}"
+    );
 }
 
 #[cfg(test)]
@@ -1094,5 +1493,209 @@ mod tests {
         }
         let scalar_total: u64 = scalars.iter().map(|s| s.toggle_total()).sum();
         assert_eq!(lane_sim.toggle_total(), scalar_total);
+    }
+
+    // ---------------- event-driven scheduler coverage ----------------
+
+    /// `chains` independent NOT-LUT chains of length `len`: input "x{i}"
+    /// feeds a chain whose final net is output "y{i}". Wide enough that
+    /// a single-input poke stays under the dense-fallback threshold, so
+    /// these tests pin the *event* path specifically (tiny netlists
+    /// always fall back to the dense sweep).
+    fn not_chains(chains: usize, len: usize) -> Netlist {
+        let mut nl = Netlist::new();
+        for i in 0..chains {
+            let x = nl.net();
+            nl.add_cell(CellKind::Input { name: format!("x{i}") }, vec![], vec![x]);
+            nl.inputs.push((format!("x{i}"), vec![x]));
+            let mut prev = x;
+            for _ in 0..len {
+                let o = nl.net();
+                nl.add_cell(CellKind::Lut { funcs: vec![Lut::not1()] }, vec![prev], vec![o]);
+                prev = o;
+            }
+            nl.outputs.push((format!("y{i}"), vec![prev]));
+        }
+        nl
+    }
+
+    #[test]
+    fn event_settle_wakes_only_the_touched_cone() {
+        // 16 chains x 2 NOTs = 32 ops; poking one input must evaluate
+        // exactly that chain's 2 ops and nothing else.
+        let nl = not_chains(16, 2);
+        let mut sim = Sim::new(&nl).unwrap();
+        {
+            let st = sim.settle_stats();
+            assert_eq!(st.settles, 1, "construction runs the bootstrap settle");
+            assert_eq!(st.dense_settles, 1);
+            assert_eq!(st.ops_evaluated, 32);
+            assert_eq!(st.ops_total, 32);
+        }
+        sim.set_input("x0", 1);
+        sim.settle();
+        let st = sim.settle_stats().clone();
+        assert_eq!(st.settles, 2);
+        assert_eq!(st.dense_settles, 1, "poke settle must take the event path");
+        assert_eq!(st.event_settles(), 1);
+        assert_eq!(st.ops_evaluated, 34, "only the 2-op cone of x0 re-evaluates");
+        assert_eq!(st.ops_total, 64);
+        assert_eq!(st.wakeups_per_level, vec![0, 1, 1]);
+        assert!(st.evaluated_fraction() < 1.0);
+        // Values are still exact: y0 follows x0, every other chain holds.
+        assert_eq!(sim.output_unsigned("y0"), 1);
+        for i in 1..16 {
+            assert_eq!(sim.output_unsigned(&format!("y{i}")), 0, "chain {i} untouched");
+        }
+        sim.assert_dense_fixpoint();
+    }
+
+    #[test]
+    fn redundant_stimulus_costs_no_settle_work() {
+        // Satellite regression: setters wake only when the lane word
+        // actually changes, so repeated identical stimulus evaluates
+        // nothing.
+        let nl = not_chains(16, 2);
+        let mut sim = Sim::new(&nl).unwrap();
+        let baseline = sim.settle_stats().ops_evaluated;
+        let x0 = sim.input_index("x0");
+        sim.set_input_at(x0, 0); // already 0 everywhere
+        sim.set_input_lane_at(x0, 0, 0); // already 0 in lane 0
+        sim.settle();
+        let st = sim.settle_stats().clone();
+        assert_eq!(st.ops_evaluated, baseline, "identical stimulus woke ops");
+        assert_eq!(st.event_settles(), 1, "empty settle still takes the event path");
+        // A real change must still wake the cone (the setter is not
+        // silently dropping work).
+        sim.set_input_at(x0, 1);
+        sim.settle();
+        assert_eq!(sim.settle_stats().ops_evaluated, baseline + 2);
+        assert_eq!(sim.output_unsigned("y0"), 1);
+    }
+
+    /// Differential property: the event-driven scheduler must match a
+    /// forced dense sweep cycle for cycle — bit-exact outputs AND exact
+    /// toggle totals — at 1/8/64 lanes.
+    #[test]
+    fn prop_event_settle_matches_dense_sweep() {
+        forall("event settle == forced dense sweep", 25, |g| {
+            let wa = g.usize_in(2, 8);
+            let wb = g.usize_in(2, 8);
+            let sub = g.bool();
+            let cut = g.bool();
+            let lanes = [1usize, 8, LANES][g.usize_in(0, 2)];
+            let cycles = g.usize_in(2, 6);
+            let nl = random_arith(wa, wb, sub, cut);
+            let amask = (1u64 << wa) - 1;
+            let bmask = (1u64 << wb) - 1;
+            let mut ev = Sim::with_lanes(&nl, lanes).unwrap();
+            let mut dn = Sim::with_lanes(&nl, lanes).unwrap();
+            dn.set_force_dense(true);
+            let outs = ["s", "p", "q"];
+            for t in 0..cycles {
+                for lane in 0..lanes {
+                    let av = (g.signed_bits(wa as u32) as u64) & amask;
+                    let bv = (g.signed_bits(wb as u32) as u64) & bmask;
+                    ev.set_input_lane("a", lane, av);
+                    ev.set_input_lane("b", lane, bv);
+                    dn.set_input_lane("a", lane, av);
+                    dn.set_input_lane("b", lane, bv);
+                }
+                // Settle twice: the second pass re-settles an already
+                // settled state (free on the event side) and must agree.
+                for _ in 0..2 {
+                    ev.settle();
+                    dn.settle();
+                }
+                for name in outs {
+                    let ox = ev.output_index(name);
+                    for lane in 0..lanes {
+                        let got = ev.output_signed_lane_at(ox, lane);
+                        let want = dn.output_signed_lane_at(ox, lane);
+                        if got != want {
+                            return Err(format!(
+                                "wa={wa} wb={wb} sub={sub} cut={cut} lanes={lanes} t={t} lane={lane} {name}: event {got} != dense {want}"
+                            ));
+                        }
+                    }
+                }
+                ev.tick();
+                dn.tick();
+            }
+            if ev.toggle_total() != dn.toggle_total() {
+                return Err(format!(
+                    "toggle totals diverge: event={} dense={}",
+                    ev.toggle_total(),
+                    dn.toggle_total()
+                ));
+            }
+            ev.assert_dense_fixpoint();
+            let st = ev.settle_stats();
+            if st.ops_evaluated > st.ops_total {
+                return Err(format!("stats bound violated: {st:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn settle_stats_monotone_and_bounded() {
+        let nl = random_arith(6, 6, false, true);
+        let mut sim = Sim::with_lanes(&nl, 8).unwrap();
+        let mut rng = Rng::new(7);
+        let mut prev = sim.settle_stats().clone();
+        for _ in 0..20 {
+            sim.set_input("a", rng.below(1 << 6));
+            sim.set_input("b", rng.below(1 << 6));
+            sim.settle();
+            sim.tick();
+            let st = sim.settle_stats().clone();
+            assert!(st.settles > prev.settles, "settles not monotone");
+            assert!(st.ops_evaluated >= prev.ops_evaluated, "ops_evaluated not monotone");
+            assert!(st.ops_total >= prev.ops_total, "ops_total not monotone");
+            assert!(st.ops_evaluated <= st.ops_total, "evaluated exceeds dense workload");
+            assert!(st.dense_settles <= st.settles);
+            // Every wakeup is an evaluation in some event settle.
+            let wakeups: u64 = st.wakeups_per_level.iter().sum();
+            assert!(wakeups <= st.ops_evaluated);
+            prev = st;
+        }
+        assert!(sim.settle_stats().evaluated_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn dense_fixpoint_holds_after_event_settles() {
+        // Random single-lane pokes on a 64-op netlist: every settle must
+        // leave a state the dense sweep would not change, and at least
+        // some settles must actually skip work.
+        let nl = not_chains(16, 4);
+        let mut sim = Sim::with_lanes(&nl, LANES).unwrap();
+        let mut rng = Rng::new(9);
+        for t in 0..32usize {
+            let i = rng.below(16) as usize;
+            sim.set_input_lane(&format!("x{i}"), t % LANES, rng.below(2));
+            sim.settle();
+            sim.assert_dense_fixpoint();
+        }
+        let st = sim.settle_stats();
+        assert!(st.event_settles() >= 1, "no event-path settles ran: {st:?}");
+        assert!(st.ops_evaluated < st.ops_total, "no work was skipped: {st:?}");
+    }
+
+    #[test]
+    fn force_dense_release_rebootstraps() {
+        let nl = not_chains(4, 2);
+        let mut sim = Sim::new(&nl).unwrap();
+        sim.set_force_dense(true);
+        sim.set_input("x0", 1);
+        sim.settle(); // dense, wakeups suppressed
+        assert_eq!(sim.output_unsigned("y0"), 1);
+        sim.set_force_dense(false);
+        sim.set_input("x1", 1);
+        sim.settle(); // must re-bootstrap densely — and still be exact
+        assert_eq!(sim.output_unsigned("y1"), 1);
+        sim.assert_dense_fixpoint();
+        let st = sim.settle_stats();
+        assert_eq!(st.dense_settles, st.settles, "post-release settle must be dense");
     }
 }

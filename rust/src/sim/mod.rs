@@ -53,19 +53,30 @@ pub fn estimate(_model: &Model, plan: &Plan) -> PerfReport {
     }
 }
 
+/// Result of one netlist spot check: how many windows were verified and
+/// how much of the fabric the event-driven settle actually evaluated
+/// doing it (a quiet layer shows a small `evaluated_fraction`).
+#[derive(Debug, Clone)]
+pub struct LayerCheck {
+    /// Windows driven through the netlist and matched bit-exactly.
+    pub windows: usize,
+    /// Settle-scheduler activity of the verifying simulator.
+    pub activity: crate::netlist::sim::SettleStats,
+}
+
 /// Drive `n_windows` real windows of layer `layer_idx`'s workload through
 /// the *generated netlist* of the planned conv IP kind and compare against
 /// the behavioral expectation. The windows are spread across simulator
 /// lanes ([`crate::netlist::sim::LANES`]-wide lane words), so the check
 /// runs one lane-batched pass schedule instead of a serial pass per
-/// window group. Returns the number of windows checked.
+/// window group. Returns the window count and the run's activity stats.
 pub fn netlist_layer_check(
     model: &Model,
     plan: &Plan,
     layer_idx: usize,
     seed: u64,
     n_windows: usize,
-) -> Result<usize, String> {
+) -> Result<LayerCheck, String> {
     let kind = plan
         .engines
         .iter()
@@ -82,17 +93,20 @@ pub fn netlist_layer_check(
     let passes_per_lane = total_passes.div_ceil(sim_lanes);
     let (per_lane, coefs) =
         crate::ips::verify::random_stimulus_lanes(&ip, &mut rng, sim_lanes, passes_per_lane);
-    let got = crate::ips::verify::run_ip_lanes(&ip, &per_lane, &coefs);
+    let report = crate::ips::verify::run_ip_lanes_report(&ip, &per_lane, &coefs, false);
     for (lane, stim) in per_lane.iter().enumerate() {
         let want = crate::ips::verify::expected(&ip, stim, &coefs);
-        if got[lane] != want {
+        if report.outputs[lane] != want {
             return Err(format!(
                 "netlist mismatch on layer {layer_idx} ({}, sim lane {lane})",
                 kind.name()
             ));
         }
     }
-    Ok(sim_lanes * passes_per_lane * ip_lanes)
+    Ok(LayerCheck {
+        windows: sim_lanes * passes_per_lane * ip_lanes,
+        activity: report.activity,
+    })
 }
 
 #[cfg(test)]
@@ -130,8 +144,12 @@ mod tests {
     fn netlist_spot_check_passes() {
         let (m, p) = lenet_plan();
         for ep in p.convs() {
-            let n = netlist_layer_check(&m, &p, ep.layer, 11, 8).unwrap();
-            assert!(n >= 8);
+            let chk = netlist_layer_check(&m, &p, ep.layer, 11, 8).unwrap();
+            assert!(chk.windows >= 8);
+            // Activity accounting is well-formed on real layers, too.
+            assert!(chk.activity.settles > 0);
+            assert!(chk.activity.ops_evaluated <= chk.activity.ops_total);
+            assert!(chk.activity.evaluated_fraction() <= 1.0);
         }
     }
 
