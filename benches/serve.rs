@@ -22,6 +22,7 @@ use acf::planner::Policy;
 use acf::serve::{
     open_loop, plan_fixed_fleet, plan_fleet, plan_fleet_spec, FleetSpec, ServeConfig, Server,
 };
+use acf::trace::{RingSink, Tracer};
 use acf::util::bench::{quick_env, report, write_json, Bench, Stats};
 
 fn main() {
@@ -93,6 +94,35 @@ fn main() {
         ));
         stats.push(Stats::flat(
             format!("serve: sustained ns/img @ {OFFERED:.0} img/s offered (2 replicas)"),
+            snap.completed,
+            1e9 / snap.sustained_img_s.max(1e-9),
+        ));
+    }
+
+    // 3b. The same offered load with full tracing on: every request
+    //     records its six-stage span chain (plus per-layer pipeline spans)
+    //     into the bounded ring sink. The relation gate in
+    //     BENCH_baseline/relations.json pins this series to within 15% of
+    //     the untraced one — the measured cost of observability.
+    {
+        const OFFERED: f64 = 1_500.0;
+        let requests = open_requests;
+        let tracer = Tracer::ring(RingSink::DEFAULT_CAP);
+        let cfg = ServeConfig { tracer: tracer.clone(), ..ServeConfig::default() };
+        let server = Server::start(fp.deploy(model.clone(), weights.clone()), &cfg);
+        let outcomes = open_loop(&server, &corpus, requests, OFFERED, 0xBE7C);
+        let served = outcomes.iter().filter(|o| o.result.is_ok()).count();
+        let snap = server.shutdown();
+        let events = tracer.drain();
+        println!(
+            "traced open loop @ {OFFERED:.0} img/s offered: {served}/{requests} served, \
+             sustained {:.0} img/s, {} trace events ({} dropped)",
+            snap.sustained_img_s,
+            events.len(),
+            tracer.dropped()
+        );
+        stats.push(Stats::flat(
+            format!("serve: traced sustained ns/img @ {OFFERED:.0} img/s offered (2 replicas)"),
             snap.completed,
             1e9 / snap.sustained_img_s.max(1e-9),
         ));

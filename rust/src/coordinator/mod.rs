@@ -31,7 +31,8 @@ use crate::cnn::model::{Layer, Model, Weights};
 use crate::fabric::device::Device;
 use crate::netlist::sim::LANES;
 use crate::planner::{plan as make_plan, Plan, PlanError, Policy};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::trace::{ArgValue, Clock, Tracer};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -58,6 +59,27 @@ fn lane_group_width(batch: usize, n_layers: usize) -> usize {
     batch.div_ceil(n_layers.max(1)).clamp(1, LANES)
 }
 
+/// Where a replica pipeline's per-layer spans go. A deployment is built
+/// *before* the serving tier knows its replica id, so the trace context
+/// is attached after registration ([`Deployment::attach_trace`]) and can
+/// be re-attached when a deployment moves to a later server. The `on`
+/// flag keeps the per-job cost of disabled tracing to one relaxed load
+/// per layer; the context itself lives behind a mutex that is only
+/// locked when tracing is live.
+#[derive(Debug, Default)]
+struct PipelineTrace {
+    on: AtomicBool,
+    ctx: Mutex<Option<TraceCtx>>,
+}
+
+#[derive(Debug, Clone)]
+struct TraceCtx {
+    tracer: Tracer,
+    clock: Clock,
+    pid: u64,
+    tid: u64,
+}
+
 /// The persistent layer pipeline: one long-lived thread per layer plus an
 /// egress thread, all fed by bounded `sync_channel`s. Built once per
 /// deployment; torn down (sender dropped, workers joined) on drop.
@@ -70,6 +92,7 @@ struct Pipeline {
     /// signal the serving tier polls before retiring a replica pipeline
     /// (covers one-shot `infer_batch` callers the scheduler cannot see).
     in_flight: Arc<AtomicU64>,
+    trace: Arc<PipelineTrace>,
 }
 
 impl Pipeline {
@@ -77,6 +100,7 @@ impl Pipeline {
         let n_layers = model.layers.len();
         let (tx0, mut rx_prev) = mpsc::sync_channel::<Job>(CHANNEL_DEPTH);
         let mut workers = Vec::with_capacity(n_layers + 1);
+        let trace = Arc::new(PipelineTrace::default());
         for li in 0..n_layers {
             let (tx, rx_next) = mpsc::sync_channel::<Job>(CHANNEL_DEPTH);
             let rx_in = rx_prev;
@@ -84,16 +108,43 @@ impl Pipeline {
             let model = Arc::clone(&model);
             let weights = Arc::clone(&weights);
             let metrics = Arc::clone(&metrics);
+            let trace = Arc::clone(&trace);
             workers.push(std::thread::spawn(move || {
                 // Geometry is a per-layer constant — computed once per
                 // worker lifetime, not per image (DESIGN.md §Perf item 5).
                 let geom = layer_input_geometry(&model, li);
                 while let Ok(mut job) = rx_in.recv() {
+                    // One relaxed load per job when tracing is off; the
+                    // context mutex is only touched when it is on.
+                    let span_ctx = if trace.on.load(Ordering::Relaxed) {
+                        trace
+                            .ctx
+                            .lock()
+                            .unwrap()
+                            .clone()
+                            .map(|c| (c.clock.now_nanos(), c))
+                    } else {
+                        None
+                    };
                     let lt0 = std::time::Instant::now();
                     for tensor in job.tensors.iter_mut() {
                         *tensor = apply_layer(&model, &weights, li, tensor, geom);
                     }
                     metrics.record_layer(li, lt0.elapsed());
+                    if let Some((t0, c)) = span_ctx {
+                        // Layer workers run concurrently, so each layer
+                        // gets its own thread track in the replica's
+                        // tid block.
+                        c.tracer.span(
+                            format!("layer{li}"),
+                            "sim",
+                            c.pid,
+                            crate::trace::layer_tid(c.tid, li),
+                            t0,
+                            c.clock.now_nanos(),
+                            vec![("images", ArgValue::U(job.tensors.len() as u64))],
+                        );
+                    }
                     if tx.send(job).is_err() {
                         return; // downstream gone
                     }
@@ -114,7 +165,7 @@ impl Pipeline {
                 egress_in_flight.fetch_sub(1, Ordering::Release);
             }
         }));
-        Pipeline { ingress: Mutex::new(Some(tx0)), workers, in_flight }
+        Pipeline { ingress: Mutex::new(Some(tx0)), workers, in_flight, trace }
     }
 
     /// A cloned handle to the ingress channel, or `None` mid-teardown.
@@ -226,6 +277,28 @@ impl Deployment {
     /// dispatched micro-batch.
     pub fn validate_image(&self, image: &[i64]) -> Result<(), DeployError> {
         validate_image(&self.model, image)
+    }
+
+    /// Route this deployment's pipeline-worker layer spans to `tracer`
+    /// on track `(pid, base_tid)` — `base_tid` is the replica's own
+    /// track ([`crate::trace::tid_of_replica`]); each layer worker takes
+    /// a derived track in the replica's tid block. Called by the serving
+    /// tier once the replica id exists; re-attaching moves the spans
+    /// (a deployment reused by a later server follows that server's
+    /// sink and clock).
+    pub fn attach_trace(&self, tracer: Tracer, clock: Clock, pid: u64, base_tid: u64) {
+        // Context is written before the flag flips so a worker that sees
+        // `on` always finds a live context (the mutex orders the reads).
+        *self.pipeline.trace.ctx.lock().unwrap() =
+            Some(TraceCtx { tracer, clock, pid, tid: base_tid });
+        self.pipeline.trace.on.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop recording layer spans (workers fall back to one relaxed
+    /// load per job).
+    pub fn detach_trace(&self) {
+        self.pipeline.trace.on.store(false, Ordering::Relaxed);
+        *self.pipeline.trace.ctx.lock().unwrap() = None;
     }
 
     /// Lane-group jobs currently inside this deployment's pipeline. The
@@ -538,6 +611,37 @@ mod tests {
             assert_eq!(got, expect);
         }
         assert_eq!(d.metrics.snapshot().images, 24);
+    }
+
+    #[test]
+    fn pipeline_layer_spans_attach_and_detach() {
+        use crate::trace::{pid_of_group, tid_of_replica, Clock, Tracer, TIDS_PER_REPLICA};
+        let d = deploy();
+        let tracer = Tracer::ring(4096);
+        d.attach_trace(tracer.clone(), Clock::wall(), pid_of_group(0), tid_of_replica(0));
+        let ds = Dataset::generate(4, 9, 16, 16);
+        let images: Vec<Vec<i64>> = ds.images.iter().map(|i| i.pix.clone()).collect();
+        d.infer_batch(&images).unwrap();
+        // Every layer worker recorded at least one span (workers record
+        // before forwarding, so all spans exist once the batch returns),
+        // each on its own track inside the replica's tid block.
+        let evs = tracer.drain();
+        for li in 0..d.model.layers.len() {
+            assert!(
+                evs.iter().any(|e| e.name == format!("layer{li}")),
+                "no span for layer {li}"
+            );
+        }
+        let base = tid_of_replica(0);
+        for e in &evs {
+            assert_eq!(e.cat, "sim");
+            assert_eq!(e.pid, pid_of_group(0));
+            assert!(e.tid > base && e.tid < base + TIDS_PER_REPLICA, "tid {}", e.tid);
+        }
+        // Detached: the same traffic records nothing.
+        d.detach_trace();
+        d.infer_batch(&images).unwrap();
+        assert!(tracer.drain().is_empty());
     }
 
     #[test]

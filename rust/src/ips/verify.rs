@@ -22,6 +22,7 @@
 use super::common::ConvIp;
 use super::params::ConvParams;
 use crate::netlist::sim::{SettleStats, Sim, LANES};
+use crate::trace::{ArgValue, SettleTrace};
 use crate::util::rng::Rng;
 
 /// One pass's stimulus: a window per IP lane.
@@ -201,6 +202,23 @@ pub fn run_ip_lanes_report(
     coefs: &[i64],
     dense: bool,
 ) -> LaneRunReport {
+    run_ip_lanes_report_traced(ip, per_lane, coefs, dense, None)
+}
+
+/// [`run_ip_lanes_report`] with per-pass settle attribution: when `trace`
+/// carries a live tracer, each pipeline pass becomes a `"sim"`-category
+/// span named `settle:{label}:pass{n}` on the given `(pid, tid)` track,
+/// carrying the *interval's* [`SettleStats`] as span args. The stats
+/// counters are cumulative over the simulator's lifetime, so each span
+/// subtracts the snapshot taken at its pass boundary
+/// ([`SettleStats::delta_since`]) — attributing only that pass's settles.
+pub fn run_ip_lanes_report_traced(
+    ip: &ConvIp,
+    per_lane: &[LaneStimulus],
+    coefs: &[i64],
+    dense: bool,
+    trace: Option<&SettleTrace<'_>>,
+) -> LaneRunReport {
     let p = &ip.params;
     let ip_lanes = ip.kind.lanes() as usize;
     let taps = p.taps() as usize;
@@ -221,11 +239,24 @@ pub fn run_ip_lanes_report(
 
     let total = n_passes * taps + ip.out_latency as usize + 4;
     let mut results: Vec<Vec<Vec<i64>>> = vec![Vec::new(); sim_lanes];
+    // Pass-attribution state: (span start, stats snapshot at that start).
+    let trace = trace.filter(|t| t.tracer.on());
+    let mut open_span = trace.map(|t| (t.clock.now_nanos(), sim.settle_stats().clone()));
+    let mut spans_done = 0usize;
     for cycle in 0..total {
         let phase = cycle % taps;
         let pass = (cycle / taps).min(n_passes - 1);
         // Windows are stable across a pass; only the coefficient streams.
         if phase == 0 {
+            if cycle > 0 {
+                if let (Some(t), Some(open)) = (trace, open_span.as_mut()) {
+                    let now = t.clock.now_nanos();
+                    let stats = sim.settle_stats().clone();
+                    record_pass_span(t, spans_done, open.0, now, &stats.delta_since(&open.1));
+                    *open = (now, stats);
+                    spans_done += 1;
+                }
+            }
             ports.drive_windows_lanes(&mut sim, p, per_lane, pass);
         }
         ports.drive_coef(&mut sim, p, coefs, phase);
@@ -243,6 +274,11 @@ pub fn run_ip_lanes_report(
         }
         sim.tick();
     }
+    // Final span: the last pass plus the pipeline's drain margin.
+    if let (Some(t), Some((t0, prev))) = (trace, open_span) {
+        let now = t.clock.now_nanos();
+        record_pass_span(t, spans_done, t0, now, &sim.settle_stats().delta_since(&prev));
+    }
     for (lane, rows) in results.iter().enumerate() {
         assert_eq!(
             rows.len(),
@@ -256,6 +292,27 @@ pub fn run_ip_lanes_report(
         toggles: sim.toggle_total(),
         outputs: results,
     }
+}
+
+/// Emit one pass's settle-attribution span; `d` is already the interval
+/// delta (see [`run_ip_lanes_report_traced`]).
+fn record_pass_span(t: &SettleTrace<'_>, pass: usize, t0: u64, t1: u64, d: &SettleStats) {
+    t.tracer.span(
+        format!("settle:{}:pass{pass}", t.label),
+        "sim",
+        t.pid,
+        t.tid,
+        t0,
+        t1,
+        vec![
+            ("settles", ArgValue::U(d.settles)),
+            ("dense_settles", ArgValue::U(d.dense_settles)),
+            ("event_settles", ArgValue::U(d.event_settles())),
+            ("ops_evaluated", ArgValue::U(d.ops_evaluated)),
+            ("ops_total", ArgValue::U(d.ops_total)),
+            ("evaluated_fraction", ArgValue::F(d.evaluated_fraction())),
+        ],
+    );
 }
 
 /// Behavioral expectation for the same stimulus (lane-aware: includes the
@@ -420,6 +477,55 @@ mod tests {
                 assert!(event.activity.ops_evaluated <= event.activity.ops_total);
             }
         }
+    }
+
+    #[test]
+    fn traced_lane_run_attributes_every_settle_exactly_once() {
+        use crate::trace::{pid_of_group, ArgValue, Clock, SettleTrace, Tracer, TID_CONTROL};
+        let p = ConvParams::paper_8bit();
+        let ip = generate(ConvKind::Conv2, &p).unwrap();
+        let mut rng = Rng::new(0x7E57);
+        let (per_lane, coefs) = random_stimulus_lanes(&ip, &mut rng, 4, 3);
+        let plain = run_ip_lanes_report(&ip, &per_lane, &coefs, false);
+        let tracer = Tracer::ring(1024);
+        let clock = Clock::manual();
+        let ctx = SettleTrace {
+            tracer: &tracer,
+            clock: &clock,
+            pid: pid_of_group(0),
+            tid: TID_CONTROL,
+            label: "conv2 L0".to_string(),
+        };
+        let traced = run_ip_lanes_report_traced(&ip, &per_lane, &coefs, false, Some(&ctx));
+        assert_eq!(traced.outputs, plain.outputs, "tracing must not perturb results");
+        assert_eq!(traced.toggles, plain.toggles, "tracing must not perturb toggles");
+        let evs = tracer.drain();
+        assert!(evs.len() >= 3, "at least one span per pass, got {}", evs.len());
+        assert!(evs
+            .iter()
+            .all(|e| e.cat == "sim" && e.name.starts_with("settle:conv2 L0:pass")));
+        // The per-span deltas partition the run: settles attributed across
+        // all spans equal the cumulative total minus whatever ran before
+        // the first snapshot (the construction bootstrap + port reset) —
+        // mirrored here on an identical fresh simulator.
+        let attributed: u64 = evs
+            .iter()
+            .map(|e| match e.args.iter().find(|(k, _)| *k == "settles") {
+                Some((_, ArgValue::U(v))) => *v,
+                other => panic!("span lacks a settles arg: {other:?}"),
+            })
+            .sum();
+        let mut pre_sim = Sim::with_lanes(&ip.netlist, per_lane.len()).unwrap();
+        let pre_ports = IpPorts::resolve(&pre_sim, ip.kind.lanes() as usize);
+        pre_ports.reset(&mut pre_sim, &p);
+        let pre = pre_sim.settle_stats().settles;
+        assert_eq!(attributed, traced.activity.settles - pre);
+        // A context whose tracer is off records nothing.
+        let off = Tracer::off();
+        let ctx_off =
+            SettleTrace { tracer: &off, clock: &clock, pid: 1, tid: 0, label: "x".to_string() };
+        run_ip_lanes_report_traced(&ip, &per_lane, &coefs, false, Some(&ctx_off));
+        assert!(off.drain().is_empty());
     }
 
     #[test]

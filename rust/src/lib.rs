@@ -47,6 +47,11 @@
 //!   and per-device-group utilization, drain summaries, the rebalance
 //!   event log), and a deterministic open-loop / step-load synthetic
 //!   traffic generator.
+//! * [`trace`] — end-to-end request tracing: per-request span chains
+//!   (admit → queue wait → batch form → dispatch → sim → reply), fleet
+//!   events and per-pass settle attribution on one injectable [`trace::Clock`],
+//!   a bounded ring [`trace::TraceSink`], and a Chrome trace-event
+//!   exporter (`acf serve --trace out.json`, viewable in Perfetto).
 //! * [`runtime`] — PJRT/XLA execution of the AOT-compiled JAX/Pallas
 //!   model used as the golden numeric reference (behind the `xla` cargo
 //!   feature; a same-surface stub otherwise).
@@ -71,6 +76,7 @@ pub mod serve;
 pub mod sim;
 pub mod sta;
 pub mod synth;
+pub mod trace;
 pub mod util;
 
 /// Crate version string reported by the CLI.

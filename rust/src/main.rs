@@ -8,10 +8,12 @@
 //!   plan        — resource-driven deployment plan for a model on a device
 //!   deploy      — plan + run a batch of synthetic images (behavioral fabric)
 //!   serve       — plan a replica fleet and drive it with open-loop traffic
-//!                 (--rebalance adds the live controller under a step load)
+//!                 (--rebalance adds the live controller under a step load;
+//!                 --trace FILE exports the run's Chrome trace-event timeline)
 //!   sweep       — adaptation / precision sweeps
 //!   golden      — run the AOT XLA artifact and cross-check vs behavioral
 //!   bench-check — gate fresh BENCH_*.json series against BENCH_baseline/
+//!   trace-check — validate a Chrome trace-event JSON file (CI gate)
 //!   version     — print version
 
 use acf::cnn::data::Dataset;
@@ -35,13 +37,14 @@ fn main() {
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("golden") => cmd_golden(&argv[1..]),
         Some("bench-check") => cmd_bench_check(&argv[1..]),
+        Some("trace-check") => cmd_trace_check(&argv[1..]),
         Some("version") => {
             println!("acf {}", acf::VERSION);
             0
         }
         _ => {
             eprintln!(
-                "usage: acf <tables|synth|sta|power|plan|deploy|serve|sweep|golden|bench-check|version> [options]\n\
+                "usage: acf <tables|synth|sta|power|plan|deploy|serve|sweep|golden|bench-check|trace-check|version> [options]\n\
                  run `acf <cmd> --help` for per-command options"
             );
             2
@@ -336,6 +339,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
     specs.push(OptSpec { name: "headroom", value: true, help: "capacity headroom the rebalancer keeps (scale-up watermark = 1 - headroom)", default: Some("0.25") });
     specs.push(OptSpec { name: "cooldown-ms", value: true, help: "quiet time between rebalance actions, or 'auto' (2x window)", default: Some("auto") });
     specs.push(OptSpec { name: "drain-deadline-ms", value: true, help: "how long a retiring replica gets to drain before being reported late", default: Some("5000") });
+    specs.push(OptSpec { name: "trace", value: true, help: "write the run's span timeline (admission to settle) as Chrome trace-event JSON to this file (open in chrome://tracing or Perfetto), or 'none'", default: Some("none") });
     let a = match Args::parse(argv, &specs) {
         Ok(a) => a,
         Err(e) => return fail(e),
@@ -371,10 +375,24 @@ fn cmd_serve(argv: &[String]) -> i32 {
         Ok(d) => d.unwrap(),
         Err(e) => return fail(e),
     };
+    // One clock for the whole run: the server's metrics/spans and the
+    // CLI-side settle-attribution spans must share a timeline.
+    let trace_path = match a.get_or("trace", "none") {
+        "none" => None,
+        p => Some(p.to_string()),
+    };
+    let wall = acf::trace::Clock::wall();
+    let tracer = if trace_path.is_some() {
+        acf::trace::Tracer::ring(acf::trace::RingSink::DEFAULT_CAP)
+    } else {
+        acf::trace::Tracer::off()
+    };
     let cfg = acf::serve::ServeConfig {
         queue_depth: a.get_usize("queue-depth").unwrap().unwrap(),
         max_batch: a.get_usize("max-batch").unwrap().unwrap(),
         drain_deadline,
+        clock: wall.clone(),
+        tracer: tracer.clone(),
     };
     let rebalance = a.flag("rebalance");
     let window = match a.get_ms("window-ms") {
@@ -518,11 +536,15 @@ fn cmd_serve(argv: &[String]) -> i32 {
             .count();
     }
     {
+        // The warmup server's request ids restart at 1 — trace it and its
+        // spans would collide with the load run's request tracks.
+        let warmup_cfg =
+            acf::serve::ServeConfig { tracer: acf::trace::Tracer::off(), ..cfg.clone() };
         let warmup = acf::serve::Server::start_grouped(
             replicas.clone(),
             replica_groups.clone(),
             fp.group_labels(),
-            &cfg,
+            &warmup_cfg,
         );
         let pendings: Vec<_> = sample
             .iter()
@@ -653,6 +675,73 @@ fn cmd_serve(argv: &[String]) -> i32 {
         "  modeled (FPGA @ {} MHz): {:.0} img/s fleet ({modeled_mix}; {:.3} W static) — the hardware this host simulation stands in for",
         clock, fp.fleet_img_s, fp.static_w
     );
+
+    // 8. Trace export (--trace): attribute settle-scheduler activity to
+    //    each group's planned conv engines on its control track (same
+    //    clock as the request spans), then render everything the run
+    //    recorded as one Chrome trace-event document.
+    if let Some(path) = &trace_path {
+        for (gi, g) in fp.groups.iter().enumerate() {
+            for ep in &g.per_replica.engines {
+                if ep.kind.conv_kind().is_none() {
+                    continue;
+                }
+                let ctx = acf::trace::SettleTrace {
+                    tracer: &tracer,
+                    clock: &wall,
+                    pid: acf::trace::pid_of_group(gi),
+                    tid: acf::trace::TID_CONTROL,
+                    label: format!("{} L{}", g.device.name, ep.layer),
+                };
+                match acf::sim::netlist_layer_check_traced(
+                    &model,
+                    &g.per_replica,
+                    ep.layer,
+                    seed,
+                    8,
+                    Some(&ctx),
+                ) {
+                    Ok(chk) => println!(
+                        "  settle attribution: {} L{} — {} windows, {:.1}% of dense ops evaluated",
+                        g.device.name,
+                        ep.layer,
+                        chk.windows,
+                        chk.activity.evaluated_fraction() * 100.0
+                    ),
+                    Err(e) => return fail(format!("settle attribution ({}): {e}", g.device.name)),
+                }
+            }
+        }
+        let events = tracer.drain();
+        let mut processes = vec![(acf::trace::PID_REQUESTS, "requests".to_string())];
+        let mut threads = Vec::new();
+        for (gi, label) in fp.group_labels().iter().enumerate() {
+            processes.push((acf::trace::pid_of_group(gi), label.clone()));
+            threads.push((acf::trace::pid_of_group(gi), acf::trace::TID_CONTROL, "control".to_string()));
+        }
+        // Every replica ever registered — retired ones keep their track.
+        for (ri, r) in snap.replicas.iter().enumerate() {
+            threads.push((
+                acf::trace::pid_of_group(r.group),
+                acf::trace::tid_of_replica(ri),
+                format!("replica {ri}"),
+            ));
+        }
+        let doc = acf::trace::chrome_trace(&events, &processes, &threads);
+        if let Err(e) = std::fs::write(path, doc.dump()) {
+            return fail(format!("{path}: {e}"));
+        }
+        println!(
+            "\ntrace: {} events -> {path} ({} dropped by the ring buffer)",
+            events.len(),
+            tracer.dropped()
+        );
+        let stages = acf::trace::stage_summary(&events);
+        if !stages.is_empty() {
+            println!("trace critical path (per request stage, admission to reply):");
+            print!("{}", acf::report::trace_summary(&stages).plain());
+        }
+    }
     if mismatches > 0 || load_mismatches > 0 || failures > 0 {
         eprintln!(
             "error: {mismatches} sample + {load_mismatches} load mismatches, {failures} failures"
@@ -856,6 +945,47 @@ fn cmd_bench_check(argv: &[String]) -> i32 {
         eprintln!("bench-check: {} failure(s)", report.failures.len());
         1
     }
+}
+
+fn cmd_trace_check(argv: &[String]) -> i32 {
+    let specs = vec![OptSpec { name: "help", value: false, help: "show help", default: None }];
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") || a.positional().is_empty() {
+        print!(
+            "{}",
+            help(
+                "acf trace-check <file.json>",
+                "validate a Chrome trace-event JSON file (shape, required fields, span nesting)",
+                &specs
+            )
+        );
+        return i32::from(!a.flag("help"));
+    }
+    let mut code = 0;
+    for path in a.positional() {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return fail(format!("{path}: {e}")),
+        };
+        let json = match acf::util::json::Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => return fail(format!("{path}: not valid JSON: {e}")),
+        };
+        match acf::trace::validate_chrome_trace(&json) {
+            Ok(chk) => println!(
+                "{path}: OK — {} events ({} spans, {} instants, {} metadata) on {} tracks ({} request chains)",
+                chk.events, chk.spans, chk.instants, chk.metadata, chk.tracks, chk.request_tracks
+            ),
+            Err(e) => {
+                eprintln!("{path}: INVALID — {e}");
+                code = 1;
+            }
+        }
+    }
+    code
 }
 
 fn fail(e: impl std::fmt::Display) -> i32 {

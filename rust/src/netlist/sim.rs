@@ -145,6 +145,41 @@ impl SettleStats {
         }
         self.ops_evaluated as f64 / self.ops_total as f64
     }
+
+    /// Activity since `baseline` (an earlier clone of these stats).
+    ///
+    /// The counters are cumulative over a [`Sim`]'s lifetime, so code
+    /// attributing work to an *interval* — e.g. one pipeline pass inside
+    /// a multi-pass lane run — must subtract the snapshot it took at the
+    /// interval's start or it double-counts everything before it.
+    /// Differences saturate at zero so a stale baseline degrades to
+    /// "no delta" instead of wrapping.
+    pub fn delta_since(&self, baseline: &SettleStats) -> SettleStats {
+        let wakeups = self
+            .wakeups_per_level
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| w.saturating_sub(baseline.wakeups_per_level.get(i).copied().unwrap_or(0)))
+            .collect();
+        SettleStats {
+            settles: self.settles.saturating_sub(baseline.settles),
+            dense_settles: self.dense_settles.saturating_sub(baseline.dense_settles),
+            ops_evaluated: self.ops_evaluated.saturating_sub(baseline.ops_evaluated),
+            ops_total: self.ops_total.saturating_sub(baseline.ops_total),
+            wakeups_per_level: wakeups,
+        }
+    }
+
+    /// Zero every counter (level histogram keeps its length). Pairs with
+    /// [`SettleStats::delta_since`]: reset when a fresh epoch should not
+    /// inherit earlier activity.
+    pub fn reset(&mut self) {
+        self.settles = 0;
+        self.dense_settles = 0;
+        self.ops_evaluated = 0;
+        self.ops_total = 0;
+        self.wakeups_per_level.iter_mut().for_each(|w| *w = 0);
+    }
 }
 
 /// Build-time levelization + fanout index and the run-time dirty set of
@@ -1661,6 +1696,59 @@ mod tests {
             prev = st;
         }
         assert!(sim.settle_stats().evaluated_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn settle_stats_deltas_partition_the_cumulative_totals() {
+        // The interval-attribution contract: snapshot before each settle,
+        // take delta_since after, and the per-settle deltas must sum back
+        // to the cumulative counters exactly — no double-counting across
+        // consecutive settles, including the per-level wakeup histogram.
+        let nl = random_arith(6, 6, false, true);
+        let mut sim = Sim::with_lanes(&nl, 8).unwrap();
+        let mut rng = Rng::new(21);
+        // Seed the accumulator with the construction-time bootstrap
+        // settle, which happened before the first interval snapshot.
+        let mut acc = sim.settle_stats().clone();
+        for _ in 0..12 {
+            let before = sim.settle_stats().clone();
+            sim.set_input("a", rng.below(1 << 6));
+            sim.set_input("b", rng.below(1 << 6));
+            sim.settle();
+            sim.tick();
+            let d = sim.settle_stats().delta_since(&before);
+            // The explicit settle plus the re-settle inside tick().
+            assert_eq!(d.settles, 2, "each iteration contributes exactly two settles");
+            assert!(d.ops_evaluated <= d.ops_total);
+            acc.settles += d.settles;
+            acc.dense_settles += d.dense_settles;
+            acc.ops_evaluated += d.ops_evaluated;
+            acc.ops_total += d.ops_total;
+            for (a, w) in acc.wakeups_per_level.iter_mut().zip(&d.wakeups_per_level) {
+                *a += w;
+            }
+        }
+        let total = sim.settle_stats();
+        assert_eq!(acc.settles, total.settles);
+        assert_eq!(acc.dense_settles, total.dense_settles);
+        assert_eq!(acc.ops_evaluated, total.ops_evaluated);
+        assert_eq!(acc.ops_total, total.ops_total);
+        assert_eq!(acc.wakeups_per_level, total.wakeups_per_level);
+        // delta_since(self) is zero; a stale (larger) baseline saturates.
+        let z = total.delta_since(total);
+        assert_eq!((z.settles, z.ops_evaluated, z.ops_total), (0, 0, 0));
+        assert!(z.wakeups_per_level.iter().all(|&w| w == 0));
+        let stale = total.delta_since(&SettleStats {
+            settles: total.settles + 5,
+            ..total.clone()
+        });
+        assert_eq!(stale.settles, 0);
+        // reset zeroes counters but keeps the histogram's length.
+        let mut r = total.clone();
+        r.reset();
+        assert_eq!((r.settles, r.dense_settles, r.ops_evaluated, r.ops_total), (0, 0, 0, 0));
+        assert_eq!(r.wakeups_per_level.len(), total.wakeups_per_level.len());
+        assert!(r.wakeups_per_level.iter().all(|&w| w == 0));
     }
 
     #[test]

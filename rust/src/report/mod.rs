@@ -277,6 +277,23 @@ pub fn rebalance_table(events: &[crate::serve::RebalanceEvent]) -> Table {
     t
 }
 
+/// The trace critical-path table: one row per request stage in pipeline
+/// order (mean and nearest-rank p99 over every request in the trace).
+/// Printed by `acf serve --trace` after the load run — the per-stage
+/// answer to "where does a request's time go".
+pub fn trace_summary(stats: &[crate::trace::StageStat]) -> Table {
+    let mut t = Table::new(vec!["stage", "spans", "mean ms", "p99 ms"]).numeric();
+    for s in stats {
+        t.row(vec![
+            s.stage.to_string(),
+            s.count.to_string(),
+            fnum(s.mean_ms, 3),
+            fnum(s.p99_ms, 3),
+        ]);
+    }
+    t
+}
+
 /// A 12-bit variant of the tiny model (precision stressor for Table III).
 pub fn lenet_tiny_12bit() -> Model {
     let mut m = Model::lenet_tiny();
@@ -648,6 +665,34 @@ mod tests {
         assert_eq!(t.cell(2, 0), "fleet");
         assert_eq!(t.cell(2, 1), "2");
         assert_eq!(t.cell(2, 8), "n/a");
+    }
+
+    #[test]
+    fn trace_summary_renders_stages_in_pipeline_order() {
+        use crate::trace::{stage_summary, EventKind, TraceEvent, PID_REQUESTS};
+        let span = |name: &'static str, dur: u64| TraceEvent {
+            name: name.to_string(),
+            cat: "request",
+            kind: EventKind::Span,
+            ts_nanos: 0,
+            dur_nanos: dur,
+            pid: PID_REQUESTS,
+            tid: 1,
+            args: Vec::new(),
+        };
+        let events = vec![
+            span("reply", 2_000_000),
+            span("admit", 1_000_000),
+            span("admit", 3_000_000),
+        ];
+        let t = trace_summary(&stage_summary(&events));
+        assert_eq!(t.n_rows(), 2);
+        // Pipeline order, not event order: admit before reply.
+        assert_eq!(t.cell(0, 0), "admit");
+        assert_eq!(t.cell(0, 1), "2");
+        assert_eq!(t.cell(0, 2), "2.000");
+        assert_eq!(t.cell(1, 0), "reply");
+        assert_eq!(t.cell(1, 3), "2.000");
     }
 
     #[test]

@@ -28,7 +28,9 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
+
+use crate::trace::{self, ArgValue, Clock, Tracer};
 
 /// Live counters for one replica of the fleet.
 #[derive(Debug, Default)]
@@ -170,7 +172,14 @@ pub struct GroupWindow {
 /// rebalancer, and callers.
 #[derive(Debug)]
 pub struct FleetMetrics {
-    started: Instant,
+    /// Time source for latency reservoirs, windows, AND trace spans —
+    /// one clock, so the request timeline and the rebalance timeline are
+    /// directly comparable (and deterministic under `Clock::manual`).
+    clock: Clock,
+    /// Trace handle shared by every component holding the registry.
+    /// `Tracer::off()` (the default) keeps every instrumentation site to
+    /// a single branch.
+    tracer: Tracer,
     accepted: AtomicU64,
     rejected: AtomicU64,
     completed: AtomicU64,
@@ -205,13 +214,27 @@ impl FleetMetrics {
     /// group). More replicas can be registered later with
     /// [`FleetMetrics::register_replica`]; the group set is fixed.
     pub fn grouped(replica_group: Vec<usize>, labels: Vec<String>) -> FleetMetrics {
+        FleetMetrics::grouped_with(replica_group, labels, Clock::wall(), Tracer::off())
+    }
+
+    /// [`FleetMetrics::grouped`] with an explicit time source and trace
+    /// handle. Tests inject `Clock::manual()` for deterministic windows;
+    /// `acf serve --trace` injects a ring-buffer [`Tracer`] here so every
+    /// component that can see the registry shares one sink and one clock.
+    pub fn grouped_with(
+        replica_group: Vec<usize>,
+        labels: Vec<String>,
+        clock: Clock,
+        tracer: Tracer,
+    ) -> FleetMetrics {
         assert!(!labels.is_empty(), "a fleet has at least one device group");
         assert!(
             replica_group.iter().all(|&g| g < labels.len()),
             "replica group index out of range"
         );
         let m = FleetMetrics {
-            started: Instant::now(),
+            clock,
+            tracer,
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
@@ -231,6 +254,18 @@ impl FleetMetrics {
         m
     }
 
+    /// The shared time source. Span timestamps taken from this clock are
+    /// directly comparable with the latency reservoirs and window cuts.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// The shared trace handle (off unless the fleet was built with
+    /// [`FleetMetrics::grouped_with`] and a live sink).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
     /// Register a new replica in device group `group`, returning its
     /// stable replica id. Ids are never reused; a retired replica keeps
     /// its slot (and its history) in the registry.
@@ -241,6 +276,16 @@ impl FleetMetrics {
         reg.push(ReplicaEntry { group, m: ReplicaMetrics::default() });
         self.groups[group].live.fetch_add(1, Ordering::Relaxed);
         self.groups[group].spawned.fetch_add(1, Ordering::Relaxed);
+        if self.tracer.on() {
+            self.tracer.instant(
+                "replica_add",
+                "fleet",
+                trace::pid_of_group(group),
+                trace::TID_CONTROL,
+                self.clock.now_nanos(),
+                vec![("replica", ArgValue::U(id as u64))],
+            );
+        }
         id
     }
 
@@ -253,6 +298,16 @@ impl FleetMetrics {
         if let Some(e) = reg.get(replica) {
             if !e.m.retired.swap(true, Ordering::Relaxed) {
                 saturating_dec(&self.groups[e.group].live, 1);
+                if self.tracer.on() {
+                    self.tracer.instant(
+                        "replica_retire",
+                        "fleet",
+                        trace::pid_of_group(e.group),
+                        trace::TID_CONTROL,
+                        self.clock.now_nanos(),
+                        vec![("replica", ArgValue::U(replica as u64))],
+                    );
+                }
             }
         }
     }
@@ -262,6 +317,16 @@ impl FleetMetrics {
     pub fn note_drained(&self, group: usize) {
         if let Some(g) = self.groups.get(group) {
             g.drained.fetch_add(1, Ordering::Relaxed);
+            if self.tracer.on() {
+                self.tracer.instant(
+                    "replica_drained",
+                    "fleet",
+                    trace::pid_of_group(group),
+                    trace::TID_CONTROL,
+                    self.clock.now_nanos(),
+                    Vec::new(),
+                );
+            }
         }
     }
 
@@ -272,12 +337,38 @@ impl FleetMetrics {
         if let Some(g) = self.groups.get(group) {
             g.drain_failed.fetch_add(1, Ordering::Relaxed);
             g.drain_leftover_images.fetch_add(leftover, Ordering::Relaxed);
+            if self.tracer.on() {
+                self.tracer.instant(
+                    "drain_timeout",
+                    "fleet",
+                    trace::pid_of_group(group),
+                    trace::TID_CONTROL,
+                    self.clock.now_nanos(),
+                    vec![("leftover_images", ArgValue::U(leftover))],
+                );
+            }
         }
     }
 
-    /// Record one rebalance action in the timeline.
+    /// Record one rebalance action in the timeline (and, when tracing,
+    /// as an instant on the group's control track — same clock, so the
+    /// action lines up against the request spans it displaced).
     pub fn note_rebalance(&self, mut event: RebalanceEvent) {
-        event.at_secs = self.started.elapsed().as_secs_f64();
+        event.at_secs = self.clock.now_secs();
+        if self.tracer.on() {
+            self.tracer.instant(
+                format!("rebalance_{}", event.action),
+                "fleet",
+                trace::pid_of_group(event.group),
+                trace::TID_CONTROL,
+                self.clock.now_nanos(),
+                vec![
+                    ("from", ArgValue::U(event.from as u64)),
+                    ("to", ArgValue::U(event.to as u64)),
+                    ("reason", ArgValue::S(event.reason.clone())),
+                ],
+            );
+        }
         self.events.lock().unwrap().push(event);
     }
 
@@ -299,8 +390,21 @@ impl FleetMetrics {
     }
 
     /// A request bounced off the full queue (`ServeError::Overloaded`).
+    /// Shed decisions are traced on the requests process's control track
+    /// (tid 0 — request ids start at 1) so overload shows up in the same
+    /// timeline as the chains it thinned.
     pub fn note_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+        if self.tracer.on() {
+            self.tracer.instant(
+                "shed",
+                "fleet",
+                trace::PID_REQUESTS,
+                0,
+                self.clock.now_nanos(),
+                vec![("queue_depth", ArgValue::U(self.queue_depth()))],
+            );
+        }
     }
 
     /// `n` requests left the queue as one micro-batch bound for `replica`.
@@ -334,7 +438,7 @@ impl FleetMetrics {
     /// (admission → reply).
     pub fn note_completed(&self, replica: usize, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let now = self.started.elapsed().as_nanos() as u64;
+        let now = self.clock.now_nanos();
         self.first_done_nanos.fetch_min(now, Ordering::Relaxed);
         self.last_done_nanos.fetch_max(now, Ordering::Relaxed);
         let nanos = latency.as_nanos() as u64;
@@ -431,7 +535,7 @@ impl FleetMetrics {
     /// and current in-flight pressure. This is what the rebalancer's
     /// control loop reads each tick.
     pub fn window(&self, window: Duration) -> Vec<GroupWindow> {
-        let now = self.started.elapsed().as_nanos() as u64;
+        let now = self.clock.now_nanos();
         let cut = now.saturating_sub(window.as_nanos() as u64);
         let secs = window.as_secs_f64().max(1e-9);
         self.groups
@@ -480,7 +584,7 @@ impl FleetMetrics {
         let last = self.last_done_nanos.load(Ordering::Relaxed);
         // Sustained window: first completion → last completion. One
         // completion (or none) has no window; fall back to wall time.
-        let wall_secs = self.started.elapsed().as_secs_f64();
+        let wall_secs = self.clock.now_secs();
         let window_secs = if last > first && first != u64::MAX {
             (last - first) as f64 / 1e9
         } else {
@@ -831,10 +935,18 @@ mod tests {
 
     #[test]
     fn windowed_signals_cut_by_completion_time() {
-        let m = FleetMetrics::grouped(vec![0, 1], vec!["a".into(), "b".into()]);
+        // Deterministic: the manual clock replaces the real sleep this
+        // test used before the Clock abstraction existed.
+        let clock = Clock::manual();
+        let m = FleetMetrics::grouped_with(
+            vec![0, 1],
+            vec!["a".into(), "b".into()],
+            clock.clone(),
+            Tracer::off(),
+        );
         m.note_dispatched(0, 1);
         m.note_completed(0, Duration::from_millis(3));
-        std::thread::sleep(Duration::from_millis(60));
+        clock.advance(Duration::from_millis(60));
         m.note_dispatched(1, 2);
         m.note_completed(1, Duration::from_millis(9));
         // A 40 ms window sees only the recent completion on group 1.
@@ -855,7 +967,13 @@ mod tests {
 
     #[test]
     fn rebalance_events_are_timestamped_in_order() {
-        let m = FleetMetrics::new(1);
+        let clock = Clock::manual();
+        let m = FleetMetrics::grouped_with(
+            vec![0],
+            vec!["fleet".to_string()],
+            clock.clone(),
+            Tracer::off(),
+        );
         m.note_rebalance(RebalanceEvent {
             at_secs: -1.0, // overwritten by the metrics clock
             group: 0,
@@ -865,7 +983,7 @@ mod tests {
             to: 2,
             reason: "queue 80% full".into(),
         });
-        std::thread::sleep(Duration::from_millis(5));
+        clock.advance(Duration::from_millis(5));
         m.note_rebalance(RebalanceEvent {
             at_secs: -1.0,
             group: 0,
@@ -884,5 +1002,59 @@ mod tests {
         assert_eq!(format!("{}", ev[0].action), "grow");
         let s = m.snapshot();
         assert_eq!(s.events.len(), 2);
+    }
+
+    #[test]
+    fn fleet_lifecycle_events_are_traced_on_group_control_tracks() {
+        let clock = Clock::manual();
+        let tracer = Tracer::ring(64);
+        let m = FleetMetrics::grouped_with(
+            vec![0],
+            vec!["zcu104".into(), "zu5ev".into()],
+            clock.clone(),
+            tracer.clone(),
+        );
+        clock.advance(Duration::from_millis(1));
+        let r = m.register_replica(1);
+        m.note_retiring(r);
+        m.note_retiring(r); // idempotent: no second retire event
+        m.note_drained(1);
+        m.note_drain_timeout(1, 4);
+        m.note_rejected();
+        m.note_rebalance(RebalanceEvent {
+            at_secs: -1.0,
+            group: 1,
+            label: "zu5ev".into(),
+            action: RebalanceAction::Swap,
+            from: 1,
+            to: 2,
+            reason: "p99 drift".into(),
+        });
+        let names: Vec<String> = tracer.drain().into_iter().map(|e| e.name).collect();
+        assert_eq!(
+            names,
+            vec![
+                "replica_add", // the constructor's replica 0
+                "replica_add",
+                "replica_retire",
+                "replica_drained",
+                "drain_timeout",
+                "shed",
+                "rebalance_swap",
+            ]
+        );
+        // Same clock as the metrics timeline: events carry manual time.
+        let tracer2 = Tracer::ring(8);
+        let m2 = FleetMetrics::grouped_with(
+            Vec::new(),
+            vec!["g".into()],
+            clock.clone(),
+            tracer2.clone(),
+        );
+        m2.register_replica(0);
+        let ev = &tracer2.drain()[0];
+        assert_eq!(ev.ts_nanos, 1_000_000);
+        assert_eq!(ev.pid, trace::pid_of_group(0));
+        assert_eq!(ev.tid, trace::TID_CONTROL);
     }
 }

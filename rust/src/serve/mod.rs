@@ -49,6 +49,7 @@ pub use rebalance::{RebalanceConfig, Rebalancer};
 pub use scheduler::{DrainReport, Pending, Server};
 
 use crate::coordinator::DeployError;
+use crate::trace::{Clock, Tracer};
 use crate::util::rng::Rng;
 use std::time::{Duration, Instant};
 
@@ -110,6 +111,15 @@ pub struct ServeConfig {
     /// finish its in-flight micro-batches before it is detached and
     /// *reported* in the per-group drain summary.
     pub drain_deadline: Duration,
+    /// Time source for metrics windows, latency reservoirs, and trace
+    /// spans. Injected (rather than created inside the server) so spans
+    /// recorded *outside* the server — e.g. the CLI's per-engine settle
+    /// attribution — line up on the same timeline.
+    pub clock: Clock,
+    /// Trace handle. [`crate::trace::Tracer::off`] (the default) records
+    /// nothing and costs one branch per instrumentation site; pass
+    /// `Tracer::ring(cap)` to collect spans for `acf serve --trace`.
+    pub tracer: Tracer,
 }
 
 impl Default for ServeConfig {
@@ -118,6 +128,8 @@ impl Default for ServeConfig {
             queue_depth: 64,
             max_batch: 8,
             drain_deadline: Duration::from_secs(5),
+            clock: Clock::wall(),
+            tracer: Tracer::off(),
         }
     }
 }

@@ -43,6 +43,18 @@
 //! only observes for `cooldown`, letting the fleet settle before the
 //! next decision). Forced (`name:count`) groups are never resized —
 //! a pinned count is an operator statement, not a hint.
+//!
+//! **Observability.** Every action lands in the [`RebalanceEvent`]
+//! timeline via [`super::metrics::FleetMetrics::note_rebalance`], which —
+//! when the fleet was started with a live [`crate::trace::Tracer`]
+//! (`acf serve --trace`) — also mirrors it as a `rebalance_grow` /
+//! `rebalance_shrink` / `rebalance_swap` instant on the group's control
+//! track, stamped by the same clock as the request span chains. A scale
+//! action in the exported timeline therefore sits exactly where the
+//! latency it caused (or cured) is visible; the add/retire/drain
+//! lifecycle of each replica the action touched shows up as
+//! `replica_add` / `replica_retire` / `replica_drained` instants on the
+//! same track.
 
 use super::fleet::{plan_signature, FleetFrontier, FleetPlan, GroupFrontier};
 use super::metrics::{RebalanceAction, RebalanceEvent};

@@ -55,13 +55,32 @@ use super::metrics::{FleetMetrics, FleetSnapshot};
 use super::{ServeConfig, ServeError};
 use crate::cnn::model::Model;
 use crate::coordinator::{validate_image, Deployment};
+use crate::trace::{self, ArgValue};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One admitted request traveling from the queue to a replica runner.
+///
+/// The `*_nanos` fields are lifecycle timestamps on the fleet's shared
+/// [`crate::trace::Clock`], stamped where the request crosses each stage
+/// boundary (admission, enqueue, dispatcher pull, runner handoff). The
+/// runner turns them into the request's span chain at completion —
+/// adjacent spans *share* their boundary timestamp, so the chain is
+/// contiguous and non-overlapping by construction. Latency accounting
+/// uses `admitted_nanos` on the same clock.
 struct Request {
+    /// Trace thread id within [`trace::PID_REQUESTS`] (ids start at 1;
+    /// tid 0 is the shed/control track).
+    id: u64,
     image: Vec<i64>,
-    admitted: Instant,
+    admitted_nanos: u64,
+    enqueued_nanos: u64,
+    /// Stamped by the dispatcher on first pull (0 = not yet pulled;
+    /// preserved across bounce re-dispatches).
+    dequeued_nanos: u64,
+    /// Stamped at every handoff attempt; the successful one wins.
+    handoff_nanos: u64,
     reply: mpsc::Sender<Result<Vec<i64>, ServeError>>,
 }
 
@@ -127,6 +146,9 @@ pub struct Server {
     finished: Mutex<Option<FleetSnapshot>>,
     queue_depth: usize,
     drain_deadline: Duration,
+    /// Next request id (trace tid). Starts at 1 — tid 0 of the requests
+    /// process is the control track shed instants land on.
+    next_req: AtomicU64,
 }
 
 impl Server {
@@ -156,7 +178,12 @@ impl Server {
         // only add queueing delay); per-slot scaling happens at dispatch
         // time against the *current* fastest live replica.
         let global_batch = cfg.max_batch.clamp(1, crate::netlist::sim::LANES);
-        let metrics = Arc::new(FleetMetrics::grouped(Vec::new(), labels));
+        let metrics = Arc::new(FleetMetrics::grouped_with(
+            Vec::new(),
+            labels,
+            cfg.clock.clone(),
+            cfg.tracer.clone(),
+        ));
         let model = Arc::clone(&replicas[0].model);
         let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
         let server = Server {
@@ -169,6 +196,7 @@ impl Server {
             finished: Mutex::new(None),
             queue_depth,
             drain_deadline: cfg.drain_deadline,
+            next_req: AtomicU64::new(1),
         };
         for (dep, group) in replicas.into_iter().zip(groups) {
             server.add_slot(dep, group);
@@ -181,7 +209,15 @@ impl Server {
         let slots = Arc::clone(&server.slots);
         let metrics = Arc::clone(&server.metrics);
         let handle = std::thread::spawn(move || {
-            while let Ok(first) = rx.recv() {
+            let clock = metrics.clock().clone();
+            // The tracer is fixed at construction, so stage-boundary
+            // stamping (a clock read per pull/handoff) can be skipped for
+            // the life of the server when tracing is off.
+            let tracing = metrics.tracer().on();
+            while let Ok(mut first) = rx.recv() {
+                if tracing && first.dequeued_nanos == 0 {
+                    first.dequeued_nanos = clock.now_nanos();
+                }
                 let mut batch = vec![first];
                 // Work in hand must land somewhere within this grace
                 // period. Normally a pick succeeds instantly; the
@@ -208,7 +244,12 @@ impl Server {
                     };
                     while batch.len() < cap {
                         match rx.try_recv() {
-                            Ok(r) => batch.push(r),
+                            Ok(mut r) => {
+                                if tracing && r.dequeued_nanos == 0 {
+                                    r.dequeued_nanos = clock.now_nanos();
+                                }
+                                batch.push(r);
+                            }
                             Err(_) => break,
                         }
                     }
@@ -217,6 +258,12 @@ impl Server {
                     // fast part's batch whole); the tail re-dispatches
                     // on the next pick.
                     let rest = if batch.len() > cap { batch.split_off(cap) } else { Vec::new() };
+                    if tracing {
+                        let t_handoff = clock.now_nanos();
+                        for r in &mut batch {
+                            r.handoff_nanos = t_handoff;
+                        }
+                    }
                     metrics.note_dispatched(id, batch.len() as u64);
                     match tx.send(batch) {
                         Ok(()) => batch = rest,
@@ -257,13 +304,27 @@ impl Server {
     fn add_slot(&self, dep: Arc<Deployment>, group: usize) -> usize {
         let id = self.metrics.register_replica(group);
         let weight = dep.plan.images_per_sec.max(1e-9);
+        // Route the replica's pipeline-worker layer spans onto its trace
+        // track (the id only exists now, post-registration). Re-attaching
+        // is fine: a deployment reused by a later server just moves to
+        // that server's sink and track.
+        if self.metrics.tracer().on() {
+            dep.attach_trace(
+                self.metrics.tracer().clone(),
+                self.metrics.clock().clone(),
+                trace::pid_of_group(group),
+                trace::tid_of_replica(id),
+            );
+        } else {
+            dep.detach_trace();
+        }
         // Depth 2: one batch inferring, one staged (double buffering,
         // same rationale as the pipeline's CHANNEL_DEPTH).
         let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(2);
         let runner_dep = Arc::clone(&dep);
         let metrics = Arc::clone(&self.metrics);
         let handle =
-            std::thread::spawn(move || run_replica(id, &runner_dep, &brx, &metrics));
+            std::thread::spawn(move || run_replica(id, group, &runner_dep, &brx, &metrics));
         self.runners.lock().unwrap().push(Runner { id, dep, handle });
         self.slots.lock().unwrap().push(Slot { id, group, weight, tx: btx });
         id
@@ -416,9 +477,26 @@ impl Server {
         send: impl FnOnce(&mpsc::SyncSender<Request>, Request) -> Result<(), ServeError>,
     ) -> Result<Pending, ServeError> {
         let tx = self.sender()?;
+        let clock = self.metrics.clock();
+        let admitted_nanos = clock.now_nanos();
         validate_image(&self.model, &image).map_err(ServeError::BadRequest)?;
+        // The admit span covers validation; with tracing off, skip the
+        // second clock read (the boundary is never rendered).
+        let enqueued_nanos =
+            if self.metrics.tracer().on() { clock.now_nanos() } else { admitted_nanos };
         let (rtx, rrx) = mpsc::channel();
-        send(&tx, Request { image, admitted: Instant::now(), reply: rtx })?;
+        send(
+            &tx,
+            Request {
+                id: self.next_req.fetch_add(1, Ordering::Relaxed),
+                image,
+                admitted_nanos,
+                enqueued_nanos,
+                dequeued_nanos: 0,
+                handoff_nanos: 0,
+                reply: rtx,
+            },
+        )?;
         self.metrics.note_accepted();
         Ok(Pending { rx: rrx })
     }
@@ -512,41 +590,109 @@ fn pick_slot(
     Some((best.id, best.tx.clone(), cap))
 }
 
+/// What the runner keeps of a request while its image is inferring: the
+/// stage-boundary timestamps that become its span chain, and the reply.
+struct ReqMeta {
+    id: u64,
+    admitted_nanos: u64,
+    enqueued_nanos: u64,
+    dequeued_nanos: u64,
+    handoff_nanos: u64,
+    reply: mpsc::Sender<Result<Vec<i64>, ServeError>>,
+}
+
 /// One replica runner: pull a micro-batch, run it through the replica's
 /// persistent pipeline, reply per request, account per replica (and
-/// therefore per device group).
+/// therefore per device group). When tracing, each completed request's
+/// full span chain is recorded here — the only point that has every
+/// boundary timestamp in hand — and the batch itself gets a span on the
+/// replica's own track.
 fn run_replica(
     ri: usize,
+    group: usize,
     dep: &Deployment,
     brx: &mpsc::Receiver<Vec<Request>>,
     metrics: &FleetMetrics,
 ) {
+    let clock = metrics.clock().clone();
+    let tracer = metrics.tracer().clone();
+    let (rpid, rtid) = (trace::pid_of_group(group), trace::tid_of_replica(ri));
     while let Ok(batch) = brx.recv() {
         let n = batch.len() as u64;
         let mut images = Vec::with_capacity(batch.len());
         let mut meta = Vec::with_capacity(batch.len());
         for req in batch {
             images.push(req.image);
-            meta.push((req.admitted, req.reply));
+            meta.push(ReqMeta {
+                id: req.id,
+                admitted_nanos: req.admitted_nanos,
+                enqueued_nanos: req.enqueued_nanos,
+                dequeued_nanos: req.dequeued_nanos,
+                handoff_nanos: req.handoff_nanos,
+                reply: req.reply,
+            });
         }
-        let t0 = Instant::now();
+        let t_start = clock.now_nanos();
         match dep.infer_batch(&images) {
             Ok(outs) => {
-                for ((admitted, reply), logits) in meta.into_iter().zip(outs) {
-                    metrics.note_completed(ri, admitted.elapsed());
-                    let _ = reply.send(Ok(logits));
+                let t_infer_done = clock.now_nanos();
+                for (slot, (m, logits)) in meta.into_iter().zip(outs).enumerate() {
+                    let t_done = clock.now_nanos();
+                    metrics.note_completed(
+                        ri,
+                        Duration::from_nanos(t_done.saturating_sub(m.admitted_nanos)),
+                    );
+                    let _ = m.reply.send(Ok(logits));
+                    if tracer.on() {
+                        let t_replied = clock.now_nanos();
+                        let tid = m.id;
+                        let pid = trace::PID_REQUESTS;
+                        tracer.span("admit", "request", pid, tid, m.admitted_nanos, m.enqueued_nanos, Vec::new());
+                        tracer.span("queue_wait", "request", pid, tid, m.enqueued_nanos, m.dequeued_nanos, Vec::new());
+                        tracer.span("batch_form", "request", pid, tid, m.dequeued_nanos, m.handoff_nanos, Vec::new());
+                        tracer.span(
+                            "dispatch",
+                            "request",
+                            pid,
+                            tid,
+                            m.handoff_nanos,
+                            t_start,
+                            vec![
+                                ("replica", ArgValue::U(ri as u64)),
+                                ("group", ArgValue::U(group as u64)),
+                                ("lane_slot", ArgValue::U(slot as u64)),
+                            ],
+                        );
+                        tracer.span("sim", "request", pid, tid, t_start, t_infer_done, Vec::new());
+                        tracer.span("reply", "request", pid, tid, t_infer_done, t_replied, Vec::new());
+                    }
+                }
+                if tracer.on() {
+                    tracer.span(
+                        "infer_batch",
+                        "replica",
+                        rpid,
+                        rtid,
+                        t_start,
+                        t_infer_done,
+                        vec![("images", ArgValue::U(n))],
+                    );
                 }
             }
             Err(e) => {
                 // Inputs were validated at admission, so this is a replica
                 // fault; fail the whole micro-batch loudly.
                 let msg = e.to_string();
-                for (_, reply) in meta {
+                for m in meta {
                     metrics.note_failed();
-                    let _ = reply.send(Err(ServeError::ReplicaFailed(msg.clone())));
+                    let _ = m.reply.send(Err(ServeError::ReplicaFailed(msg.clone())));
                 }
             }
         }
-        metrics.note_replica_batch(ri, n, t0.elapsed());
+        metrics.note_replica_batch(
+            ri,
+            n,
+            Duration::from_nanos(clock.now_nanos().saturating_sub(t_start)),
+        );
     }
 }

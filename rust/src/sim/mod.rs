@@ -77,6 +77,22 @@ pub fn netlist_layer_check(
     seed: u64,
     n_windows: usize,
 ) -> Result<LayerCheck, String> {
+    netlist_layer_check_traced(model, plan, layer_idx, seed, n_windows, None)
+}
+
+/// [`netlist_layer_check`] with settle attribution: when `trace` carries a
+/// live tracer, the check's lane-batched run emits per-pass `"sim"` spans
+/// (with interval [`crate::netlist::sim::SettleStats`] args) on the trace
+/// track named by the context — how `acf serve --trace` puts per-engine
+/// settle activity on each device group's control track.
+pub fn netlist_layer_check_traced(
+    model: &Model,
+    plan: &Plan,
+    layer_idx: usize,
+    seed: u64,
+    n_windows: usize,
+    trace: Option<&crate::trace::SettleTrace<'_>>,
+) -> Result<LayerCheck, String> {
     let kind = plan
         .engines
         .iter()
@@ -93,7 +109,8 @@ pub fn netlist_layer_check(
     let passes_per_lane = total_passes.div_ceil(sim_lanes);
     let (per_lane, coefs) =
         crate::ips::verify::random_stimulus_lanes(&ip, &mut rng, sim_lanes, passes_per_lane);
-    let report = crate::ips::verify::run_ip_lanes_report(&ip, &per_lane, &coefs, false);
+    let report =
+        crate::ips::verify::run_ip_lanes_report_traced(&ip, &per_lane, &coefs, false, trace);
     for (lane, stim) in per_lane.iter().enumerate() {
         let want = crate::ips::verify::expected(&ip, stim, &coefs);
         if report.outputs[lane] != want {

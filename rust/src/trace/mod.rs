@@ -1,0 +1,778 @@
+//! End-to-end request tracing: span timelines from admission to settle.
+//!
+//! Every admitted request owns a chain of spans — `admit → queue_wait →
+//! batch_form → dispatch → sim → reply` — stamped on one shared [`Clock`]
+//! so the chain is contiguous and non-overlapping by construction (adjacent
+//! stages share their boundary timestamp). Fleet-level events (rebalance
+//! actions, replica add/retire/drain, shed decisions) and simulator
+//! attribution spans (per-pass settle activity from
+//! `netlist::sim::SettleStats`) land on the same clock, which makes the
+//! export a single coherent timeline.
+//!
+//! Spans flow into a [`TraceSink`]. The production sink is a bounded
+//! ring buffer ([`RingSink`]: one short mutex hold per event, drop-oldest
+//! on overflow with a drop counter); when tracing is off the [`Tracer`]
+//! holds no sink at all and every hot-path call site is a single
+//! `Option::is_some` check. [`chrome_trace`] renders the drained events as
+//! Chrome trace-event JSON (open in `chrome://tracing` or Perfetto) with
+//! one track per replica and one per device group; [`validate_chrome_trace`]
+//! is the CI checker for that format and [`stage_summary`] feeds the
+//! `report::trace_summary` critical-path table.
+//!
+//! Track layout: requests live in process [`PID_REQUESTS`] with one thread
+//! per request id; device group `g` is process `pid_of_group(g)` whose
+//! thread 0 ([`TID_CONTROL`]) carries fleet events and settle attribution,
+//! and whose thread block starting at `tid_of_replica(r)` carries replica
+//! `r`'s micro-batches plus one thread per (concurrent) pipeline-layer
+//! worker ([`layer_tid`]).
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Process id of the per-request span chains (tid = request id).
+pub const PID_REQUESTS: u64 = 1;
+/// Process ids of device groups start here (`pid_of_group`).
+pub const GROUP_PID_BASE: u64 = 10;
+/// Thread 0 of a group process: fleet events + settle attribution.
+pub const TID_CONTROL: u64 = 0;
+
+/// Trace process id for device group `g`.
+pub fn pid_of_group(group: usize) -> u64 {
+    GROUP_PID_BASE + group as u64
+}
+
+/// Thread ids reserved per replica inside its group's process: the
+/// replica's own track (micro-batch spans) plus one track per pipeline
+/// layer — the layer workers run *concurrently*, so their spans must not
+/// share a track (partial overlap on one track is a malformed timeline).
+pub const TIDS_PER_REPLICA: u64 = 32;
+
+/// Trace thread id of replica `r`'s own track inside its group's
+/// process. Offset past [`TID_CONTROL`]; each replica owns the block
+/// `[tid_of_replica(r), tid_of_replica(r) + TIDS_PER_REPLICA)`.
+pub fn tid_of_replica(replica: usize) -> u64 {
+    1 + replica as u64 * TIDS_PER_REPLICA
+}
+
+/// Trace thread id for layer `layer`'s worker of the replica whose own
+/// track is `base_tid` (= [`tid_of_replica`]). Models deeper than the
+/// per-replica block wrap within it — layer tracks may then interleave,
+/// but never bleed into another replica's block.
+pub fn layer_tid(base_tid: u64, layer: usize) -> u64 {
+    base_tid + 1 + layer as u64 % (TIDS_PER_REPLICA - 1)
+}
+
+/// The six per-request stages, in pipeline order.
+pub const REQUEST_STAGES: [&str; 6] =
+    ["admit", "queue_wait", "batch_form", "dispatch", "sim", "reply"];
+
+// ---------------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------------
+
+/// Injectable time source shared by metrics windows and trace spans.
+///
+/// `Clock::wall()` wraps a monotonic `Instant` taken at construction;
+/// `Clock::manual()` is an atomic counter advanced explicitly by tests, so
+/// windowed quantiles and span timestamps are deterministic without real
+/// sleeps. Cloning a clock shares its zero point (and, for manual clocks,
+/// the counter itself).
+#[derive(Debug, Clone)]
+pub struct Clock(ClockSrc);
+
+#[derive(Debug, Clone)]
+enum ClockSrc {
+    Wall(Instant),
+    Manual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// Monotonic wall clock with "now" as its zero point.
+    pub fn wall() -> Clock {
+        Clock(ClockSrc::Wall(Instant::now()))
+    }
+
+    /// Deterministic test clock starting at zero; advance with [`Clock::advance`].
+    pub fn manual() -> Clock {
+        Clock(ClockSrc::Manual(Arc::new(AtomicU64::new(0))))
+    }
+
+    /// Nanoseconds since the clock's zero point.
+    pub fn now_nanos(&self) -> u64 {
+        match &self.0 {
+            ClockSrc::Wall(t0) => t0.elapsed().as_nanos() as u64,
+            ClockSrc::Manual(n) => n.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Seconds since the clock's zero point.
+    pub fn now_secs(&self) -> f64 {
+        self.now_nanos() as f64 / 1e9
+    }
+
+    /// Move a manual clock forward. Panics on a wall clock — real time
+    /// cannot be steered, and silently ignoring the call would make a
+    /// mis-wired test pass vacuously.
+    pub fn advance(&self, by: Duration) {
+        match &self.0 {
+            ClockSrc::Manual(n) => {
+                n.fetch_add(by.as_nanos() as u64, Ordering::Relaxed);
+            }
+            ClockSrc::Wall(_) => panic!("Clock::advance is only valid on Clock::manual()"),
+        }
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::wall()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// A typed argument value attached to a trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl ArgValue {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgValue::U(v) => Json::Num(*v as f64),
+            ArgValue::F(v) => Json::Num(*v),
+            ArgValue::S(v) => Json::Str(v.clone()),
+        }
+    }
+}
+
+/// Span (has a duration) or instant (a point marker).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+/// One recorded event. Timestamps are nanoseconds on the owning [`Clock`];
+/// `(pid, tid)` select the track (see module docs for the layout).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Coarse category: `"request"`, `"replica"`, `"fleet"`, or `"sim"`.
+    pub cat: &'static str,
+    pub kind: EventKind,
+    pub ts_nanos: u64,
+    /// Zero for instants.
+    pub dur_nanos: u64,
+    pub pid: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// Destination for trace events. Implementations must tolerate concurrent
+/// `record` calls from dispatcher, runner, and pipeline-worker threads.
+pub trait TraceSink: Send + Sync + fmt::Debug {
+    fn record(&self, ev: TraceEvent);
+    /// Take all buffered events (oldest first), leaving the sink empty.
+    fn drain(&self) -> Vec<TraceEvent>;
+    /// Events discarded because the sink was full.
+    fn dropped(&self) -> u64;
+}
+
+/// Bounded drop-oldest ring buffer. One short mutex hold per event; the
+/// drop counter is lock-free so overflow is observable without draining.
+#[derive(Debug)]
+pub struct RingSink {
+    cap: usize,
+    buf: Mutex<VecDeque<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+impl RingSink {
+    /// Comfortable for quick serve runs: 6 spans/request plus per-layer and
+    /// fleet events stays well under this for tens of thousands of requests.
+    pub const DEFAULT_CAP: usize = 1 << 17;
+
+    pub fn new(cap: usize) -> RingSink {
+        RingSink {
+            cap: cap.max(1),
+            buf: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+}
+
+impl TraceSink for RingSink {
+    fn record(&self, ev: TraceEvent) {
+        let mut buf = self.buf.lock().unwrap();
+        if buf.len() == self.cap {
+            buf.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.push_back(ev);
+    }
+
+    fn drain(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut *self.buf.lock().unwrap()).into()
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Discards everything. Exists so code paths that *require* a sink can be
+/// exercised with tracing semantically off.
+#[derive(Debug, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn record(&self, _ev: TraceEvent) {}
+    fn drain(&self) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+    fn dropped(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracer
+// ---------------------------------------------------------------------------
+
+/// Cheap clonable handle given to every instrumented component.
+///
+/// `Tracer::off()` (the default) holds no sink: `on()` is false and every
+/// instrumentation site skips argument construction entirely, so disabled
+/// tracing costs one branch per site.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    sink: Option<Arc<dyn TraceSink>>,
+}
+
+impl Tracer {
+    /// Tracing disabled; all record calls are no-ops.
+    pub fn off() -> Tracer {
+        Tracer { sink: None }
+    }
+
+    /// Trace into the given sink.
+    pub fn new(sink: Arc<dyn TraceSink>) -> Tracer {
+        Tracer { sink: Some(sink) }
+    }
+
+    /// Trace into a fresh bounded ring buffer of `cap` events.
+    pub fn ring(cap: usize) -> Tracer {
+        Tracer::new(Arc::new(RingSink::new(cap)))
+    }
+
+    /// True when a sink is attached. Call sites gate argument construction
+    /// on this so disabled tracing stays off the hot path.
+    pub fn on(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    pub fn record(&self, ev: TraceEvent) {
+        if let Some(sink) = &self.sink {
+            sink.record(ev);
+        }
+    }
+
+    /// Record a completed span covering `[start_nanos, end_nanos]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        name: impl Into<String>,
+        cat: &'static str,
+        pid: u64,
+        tid: u64,
+        start_nanos: u64,
+        end_nanos: u64,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        self.record(TraceEvent {
+            name: name.into(),
+            cat,
+            kind: EventKind::Span,
+            ts_nanos: start_nanos,
+            dur_nanos: end_nanos.saturating_sub(start_nanos),
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Record a point event.
+    pub fn instant(
+        &self,
+        name: impl Into<String>,
+        cat: &'static str,
+        pid: u64,
+        tid: u64,
+        ts_nanos: u64,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        self.record(TraceEvent {
+            name: name.into(),
+            cat,
+            kind: EventKind::Instant,
+            ts_nanos,
+            dur_nanos: 0,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Drain the attached sink (empty when tracing is off).
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        match &self.sink {
+            Some(sink) => sink.drain(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Drop count of the attached sink (zero when tracing is off).
+    pub fn dropped(&self) -> u64 {
+        self.sink.as_ref().map_or(0, |s| s.dropped())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Settle attribution context
+// ---------------------------------------------------------------------------
+
+/// Context handed into the netlist-simulation paths so per-pass settle
+/// spans land on a fleet track with `SettleStats` deltas attached.
+pub struct SettleTrace<'a> {
+    pub tracer: &'a Tracer,
+    pub clock: &'a Clock,
+    pub pid: u64,
+    pub tid: u64,
+    /// Prefix for span names, e.g. `"zcu104 L0"`.
+    pub label: String,
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+fn micros(nanos: u64) -> Json {
+    Json::Num(nanos as f64 / 1000.0)
+}
+
+fn meta_event(name: &str, pid: u64, tid: Option<u64>, label: &str) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(name.to_string()));
+    o.insert("ph".to_string(), Json::Str("M".to_string()));
+    o.insert("ts".to_string(), Json::Num(0.0));
+    o.insert("pid".to_string(), Json::Num(pid as f64));
+    if let Some(tid) = tid {
+        o.insert("tid".to_string(), Json::Num(tid as f64));
+    }
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(label.to_string()));
+    o.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+/// Render events as a Chrome trace-event document (`chrome://tracing`,
+/// Perfetto). `processes` names process tracks as `(pid, label)`;
+/// `threads` names thread tracks as `(pid, tid, label)` — pass every
+/// replica ever registered, retired ones included, so their history keeps
+/// a labelled track. Spans become `ph:"X"` complete events, instants
+/// `ph:"i"`, labels `ph:"M"` metadata; timestamps are microseconds.
+pub fn chrome_trace(
+    events: &[TraceEvent],
+    processes: &[(u64, String)],
+    threads: &[(u64, u64, String)],
+) -> Json {
+    let mut out = Vec::with_capacity(events.len() + processes.len() + threads.len());
+    for (pid, label) in processes {
+        out.push(meta_event("process_name", *pid, None, label));
+    }
+    for (pid, tid, label) in threads {
+        out.push(meta_event("thread_name", *pid, Some(*tid), label));
+    }
+    for ev in events {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(ev.name.clone()));
+        o.insert("cat".to_string(), Json::Str(ev.cat.to_string()));
+        o.insert("ts".to_string(), micros(ev.ts_nanos));
+        o.insert("pid".to_string(), Json::Num(ev.pid as f64));
+        o.insert("tid".to_string(), Json::Num(ev.tid as f64));
+        match ev.kind {
+            EventKind::Span => {
+                o.insert("ph".to_string(), Json::Str("X".to_string()));
+                o.insert("dur".to_string(), micros(ev.dur_nanos));
+            }
+            EventKind::Instant => {
+                o.insert("ph".to_string(), Json::Str("i".to_string()));
+                o.insert("s".to_string(), Json::Str("t".to_string()));
+            }
+        }
+        if !ev.args.is_empty() {
+            let args: BTreeMap<String, Json> =
+                ev.args.iter().map(|(k, v)| (k.to_string(), v.to_json())).collect();
+            o.insert("args".to_string(), Json::Obj(args));
+        }
+        out.push(Json::Obj(o));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    doc.insert("traceEvents".to_string(), Json::Arr(out));
+    Json::Obj(doc)
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace validation (CI checker)
+// ---------------------------------------------------------------------------
+
+/// What [`validate_chrome_trace`] counted in a well-formed document.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceCheck {
+    pub events: usize,
+    pub spans: usize,
+    pub instants: usize,
+    pub metadata: usize,
+    /// Distinct `(pid, tid)` pairs carrying spans or instants.
+    pub tracks: usize,
+    /// Tracks in [`PID_REQUESTS`], i.e. per-request span chains.
+    pub request_tracks: usize,
+}
+
+fn field_u64(ev: &Json, key: &str, idx: usize) -> Result<u64, String> {
+    let v = ev
+        .get(key)
+        .map_err(|_| format!("event {idx}: missing required field '{key}'"))?;
+    let f = v
+        .as_f64()
+        .map_err(|_| format!("event {idx}: field '{key}' is not a number"))?;
+    if f < 0.0 {
+        return Err(format!("event {idx}: field '{key}' is negative"));
+    }
+    Ok(f as u64)
+}
+
+/// Validate a Chrome trace-event document: top-level shape, required
+/// `name`/`ph`/`ts`/`pid`/`tid` fields (`dur` on complete spans), and —
+/// per track — that spans either nest or are disjoint (partial overlap is
+/// a malformed timeline). Used by `acf trace-check` in CI.
+pub fn validate_chrome_trace(doc: &Json) -> Result<TraceCheck, String> {
+    let events = match doc {
+        Json::Obj(_) => doc
+            .get("traceEvents")
+            .map_err(|_| "top-level object lacks 'traceEvents'".to_string())?
+            .as_arr()
+            .map_err(|_| "'traceEvents' is not an array".to_string())?,
+        Json::Arr(a) => a.as_slice(),
+        _ => return Err("trace document must be an object or array".to_string()),
+    };
+    let mut check = TraceCheck { events: events.len(), ..TraceCheck::default() };
+    // (pid, tid) -> [(ts_nanos_scaled, end)] in ts units (µs as f64).
+    let mut spans_by_track: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut tracks: std::collections::BTreeSet<(u64, u64)> = std::collections::BTreeSet::new();
+    for (idx, ev) in events.iter().enumerate() {
+        if ev.as_obj().is_err() {
+            return Err(format!("event {idx}: not an object"));
+        }
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str().map(str::to_string))
+            .map_err(|_| format!("event {idx}: missing required field 'ph'"))?;
+        ev.get("name")
+            .and_then(|v| v.as_str().map(drop))
+            .map_err(|_| format!("event {idx}: missing required field 'name'"))?;
+        let pid = field_u64(ev, "pid", idx)?;
+        let ts = ev
+            .get("ts")
+            .and_then(|v| v.as_f64())
+            .map_err(|_| format!("event {idx}: missing required field 'ts'"))?;
+        match ph.as_str() {
+            "M" => check.metadata += 1,
+            "X" => {
+                let tid = field_u64(ev, "tid", idx)?;
+                let dur = ev
+                    .get("dur")
+                    .and_then(|v| v.as_f64())
+                    .map_err(|_| format!("event {idx}: complete span lacks 'dur'"))?;
+                if dur < 0.0 {
+                    return Err(format!("event {idx}: negative span duration"));
+                }
+                check.spans += 1;
+                tracks.insert((pid, tid));
+                spans_by_track.entry((pid, tid)).or_default().push((ts, ts + dur));
+            }
+            "i" | "I" => {
+                let tid = field_u64(ev, "tid", idx)?;
+                check.instants += 1;
+                tracks.insert((pid, tid));
+            }
+            other => return Err(format!("event {idx}: unsupported phase '{other}'")),
+        }
+    }
+    for ((pid, tid), spans) in spans_by_track.iter_mut() {
+        spans.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Stack-check nesting: each span must close before any enclosing one.
+        let mut stack: Vec<(f64, f64)> = Vec::new();
+        for &(start, end) in spans.iter() {
+            while let Some(&(_, open_end)) = stack.last() {
+                if open_end <= start {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(_, open_end)) = stack.last() {
+                if end > open_end {
+                    return Err(format!(
+                        "track pid={pid} tid={tid}: span [{start}, {end}] partially \
+                         overlaps enclosing span ending at {open_end}"
+                    ));
+                }
+            }
+            stack.push((start, end));
+        }
+    }
+    check.tracks = tracks.len();
+    check.request_tracks = tracks.iter().filter(|(pid, _)| *pid == PID_REQUESTS).count();
+    Ok(check)
+}
+
+// ---------------------------------------------------------------------------
+// Per-stage summary
+// ---------------------------------------------------------------------------
+
+/// Aggregate latency of one request stage across the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStat {
+    pub stage: &'static str,
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Mean/p99 per request stage, in pipeline order, from drained events.
+/// Only `cat == "request"` spans contribute; stages never observed are
+/// omitted. Feeds `report::trace_summary`.
+pub fn stage_summary(events: &[TraceEvent]) -> Vec<StageStat> {
+    let mut out = Vec::new();
+    for stage in REQUEST_STAGES {
+        let mut durs: Vec<u64> = events
+            .iter()
+            .filter(|e| e.cat == "request" && e.kind == EventKind::Span && e.name == stage)
+            .map(|e| e.dur_nanos)
+            .collect();
+        if durs.is_empty() {
+            continue;
+        }
+        durs.sort_unstable();
+        let total: u128 = durs.iter().map(|&d| d as u128).sum();
+        let mean_ms = total as f64 / durs.len() as f64 / 1e6;
+        // Nearest-rank p99, matching serve::metrics quantiles.
+        let rank = ((durs.len() as f64) * 0.99).ceil() as usize;
+        let p99_ms = durs[rank.clamp(1, durs.len()) - 1] as f64 / 1e6;
+        out.push(StageStat { stage, count: durs.len() as u64, mean_ms, p99_ms });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, pid: u64, tid: u64, start: u64, end: u64) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat: "request",
+            kind: EventKind::Span,
+            ts_nanos: start,
+            dur_nanos: end - start,
+            pid,
+            tid,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn manual_clock_is_deterministic_and_shared_across_clones() {
+        let c = Clock::manual();
+        let c2 = c.clone();
+        assert_eq!(c.now_nanos(), 0);
+        c.advance(Duration::from_millis(3));
+        assert_eq!(c.now_nanos(), 3_000_000);
+        assert_eq!(c2.now_nanos(), 3_000_000, "clones share the counter");
+        c2.advance(Duration::from_nanos(5));
+        assert_eq!(c.now_nanos(), 3_000_005);
+    }
+
+    #[test]
+    fn replica_tid_blocks_never_collide() {
+        // Replica tracks stay clear of TID_CONTROL, and one replica's
+        // layer tracks (any depth) never reach the next replica's block.
+        for r in 0..8 {
+            assert!(tid_of_replica(r) > TID_CONTROL);
+            for layer in 0..100 {
+                let t = layer_tid(tid_of_replica(r), layer);
+                assert!(t > tid_of_replica(r));
+                assert!(t < tid_of_replica(r + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = Clock::wall();
+        let a = c.now_nanos();
+        let b = c.now_nanos();
+        assert!(b >= a);
+    }
+
+    #[test]
+    #[should_panic(expected = "only valid on Clock::manual")]
+    fn advancing_a_wall_clock_panics() {
+        Clock::wall().advance(Duration::from_secs(1));
+    }
+
+    #[test]
+    fn ring_sink_bounds_memory_and_counts_drops() {
+        let sink = RingSink::new(3);
+        for i in 0..5u64 {
+            sink.record(span("s", 1, i, i, i + 1));
+        }
+        assert_eq!(sink.dropped(), 2);
+        let kept = sink.drain();
+        assert_eq!(kept.len(), 3);
+        // Drop-oldest: the survivors are the three most recent events.
+        assert_eq!(kept.iter().map(|e| e.tid).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert!(sink.drain().is_empty(), "drain empties the buffer");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::off();
+        assert!(!t.on());
+        t.span("x", "request", 1, 1, 0, 10, Vec::new());
+        t.instant("y", "fleet", 1, 1, 5, Vec::new());
+        assert!(t.drain().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn tracer_span_and_instant_round_trip() {
+        let t = Tracer::ring(16);
+        assert!(t.on());
+        t.span("admit", "request", PID_REQUESTS, 7, 100, 250, vec![("n", ArgValue::U(3))]);
+        t.instant("shed", "fleet", PID_REQUESTS, 8, 300, Vec::new());
+        let evs = t.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "admit");
+        assert_eq!(evs[0].kind, EventKind::Span);
+        assert_eq!((evs[0].ts_nanos, evs[0].dur_nanos), (100, 150));
+        assert_eq!(evs[1].kind, EventKind::Instant);
+    }
+
+    #[test]
+    fn chrome_export_round_trips_through_validator() {
+        let events = vec![
+            span("admit", PID_REQUESTS, 1, 0, 1000),
+            span("queue_wait", PID_REQUESTS, 1, 1000, 4000),
+            TraceEvent {
+                name: "rebalance_grow".to_string(),
+                cat: "fleet",
+                kind: EventKind::Instant,
+                ts_nanos: 2500,
+                dur_nanos: 0,
+                pid: pid_of_group(0),
+                tid: TID_CONTROL,
+                args: vec![("from", ArgValue::U(1)), ("to", ArgValue::U(2))],
+            },
+        ];
+        let doc = chrome_trace(
+            &events,
+            &[(PID_REQUESTS, "requests".to_string()), (pid_of_group(0), "zcu104".to_string())],
+            &[(pid_of_group(0), tid_of_replica(0), "replica 0".to_string())],
+        );
+        // Survives its own serialization.
+        let parsed = Json::parse(&doc.dump()).expect("export is valid JSON");
+        let check = validate_chrome_trace(&parsed).expect("export is a valid chrome trace");
+        assert_eq!(check.spans, 2);
+        assert_eq!(check.instants, 1);
+        assert_eq!(check.metadata, 3);
+        assert_eq!(check.request_tracks, 1);
+    }
+
+    #[test]
+    fn validator_accepts_nested_spans_but_rejects_partial_overlap() {
+        // batch span [0, 100] containing layer spans [10, 40] and [40, 90]: ok.
+        let nested = chrome_trace(
+            &[
+                span("infer_batch", 10, 1, 0, 100),
+                span("layer0", 10, 1, 10, 40),
+                span("layer1", 10, 1, 40, 90),
+            ],
+            &[],
+            &[],
+        );
+        validate_chrome_trace(&nested).expect("nesting is legal");
+
+        let overlapping =
+            chrome_trace(&[span("a", 10, 1, 0, 100_000), span("b", 10, 1, 50_000, 150_000)], &[], &[]);
+        let err = validate_chrome_trace(&overlapping).unwrap_err();
+        assert!(err.contains("partially"), "got: {err}");
+    }
+
+    #[test]
+    fn validator_rejects_missing_required_fields() {
+        let doc = Json::parse(r#"{"traceEvents":[{"name":"x","ph":"X","ts":0,"pid":1}]}"#).unwrap();
+        let err = validate_chrome_trace(&doc).unwrap_err();
+        assert!(err.contains("tid"), "got: {err}");
+
+        let doc = Json::parse(r#"{"traceEvents":[{"ph":"X","ts":0,"pid":1,"tid":1,"dur":1}]}"#).unwrap();
+        let err = validate_chrome_trace(&doc).unwrap_err();
+        assert!(err.contains("name"), "got: {err}");
+
+        let doc =
+            Json::parse(r#"{"traceEvents":[{"name":"x","ph":"X","ts":0,"pid":1,"tid":1}]}"#).unwrap();
+        let err = validate_chrome_trace(&doc).unwrap_err();
+        assert!(err.contains("dur"), "got: {err}");
+    }
+
+    #[test]
+    fn stage_summary_means_and_p99_are_exact_on_known_durations() {
+        let mut events = Vec::new();
+        // 100 admit spans of 1ms..100ms.
+        for i in 1..=100u64 {
+            events.push(span("admit", PID_REQUESTS, i, 0, i * 1_000_000));
+        }
+        events.push(span("reply", PID_REQUESTS, 1, 0, 2_000_000));
+        // A replica-track span must not contaminate request stages.
+        let mut batch = span("admit", 10, 1, 0, 500_000_000);
+        batch.cat = "replica";
+        events.push(batch);
+
+        let stats = stage_summary(&events);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].stage, "admit");
+        assert_eq!(stats[0].count, 100);
+        assert!((stats[0].mean_ms - 50.5).abs() < 1e-9);
+        assert!((stats[0].p99_ms - 99.0).abs() < 1e-9);
+        assert_eq!(stats[1].stage, "reply");
+        assert!((stats[1].p99_ms - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,307 @@
+//! End-to-end tracing integration tests: a traced step-load run under the
+//! rebalancer must record a complete, contiguous six-stage span chain for
+//! every completed request, a fleet event for every scale action, and a
+//! Chrome trace-event export that passes the `acf trace-check` validator —
+//! with retired replicas' history keeping its own labelled track.
+
+use acf::cnn::data::Dataset;
+use acf::cnn::model::{Model, Weights};
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::serve::{
+    plan_fixed_fleet, FleetFrontier, FleetSpec, RebalanceConfig, Rebalancer, ServeConfig, Server,
+};
+use acf::trace::{
+    chrome_trace, pid_of_group, tid_of_replica, validate_chrome_trace, EventKind, TraceEvent,
+    Tracer, PID_REQUESTS, REQUEST_STAGES, TIDS_PER_REPLICA,
+};
+use acf::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn corpus(n: usize, seed: u64) -> Vec<Vec<i64>> {
+    Dataset::generate(n, seed, 16, 16).images.iter().map(|i| i.pix.clone()).collect()
+}
+
+/// Poll `cond` until it holds or `timeout` expires; returns whether it
+/// held.
+fn wait_for(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+/// Group `"request"`-process spans by request id (the tid), each chain
+/// sorted by start time.
+fn request_chains(events: &[TraceEvent]) -> BTreeMap<u64, Vec<TraceEvent>> {
+    let mut chains: BTreeMap<u64, Vec<TraceEvent>> = BTreeMap::new();
+    for e in events {
+        if e.pid == PID_REQUESTS && e.kind == EventKind::Span {
+            chains.entry(e.tid).or_default().push(e.clone());
+        }
+    }
+    for spans in chains.values_mut() {
+        spans.sort_by_key(|e| (e.ts_nanos, e.ts_nanos + e.dur_nanos));
+    }
+    chains
+}
+
+/// One request's spans must be exactly the six pipeline stages, in order,
+/// contiguous (each stage starts where the previous ended — so the chain
+/// cannot overlap itself) and monotone admit ≤ dispatch ≤ reply-end.
+fn assert_complete_chain(tid: u64, spans: &[TraceEvent]) {
+    let names: Vec<&str> = spans.iter().map(|e| e.name.as_str()).collect();
+    assert_eq!(names, REQUEST_STAGES, "request {tid}: stage set/order");
+    for e in spans {
+        assert_eq!(e.cat, "request", "request {tid}: span '{}' category", e.name);
+    }
+    for pair in spans.windows(2) {
+        assert_eq!(
+            pair[0].ts_nanos + pair[0].dur_nanos,
+            pair[1].ts_nanos,
+            "request {tid}: '{}' must end exactly where '{}' begins",
+            pair[0].name,
+            pair[1].name
+        );
+    }
+    let (admit, dispatch, reply) = (&spans[0], &spans[3], &spans[5]);
+    assert!(admit.ts_nanos <= dispatch.ts_nanos, "request {tid}: admit after dispatch");
+    assert!(
+        dispatch.ts_nanos <= reply.ts_nanos + reply.dur_nanos,
+        "request {tid}: dispatch after reply"
+    );
+}
+
+#[test]
+fn traced_step_load_yields_complete_chains_and_fleet_events() {
+    // The PR 5 step-load scenario — grow under a spike, shrink in the
+    // lull — run with the trace sink live: the whole story (every request
+    // chain, every scale action, the retired replica's work) must come
+    // back out of the ring.
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let spec = FleetSpec::single(by_name("zcu104").unwrap(), None);
+    let frontier = FleetFrontier::build(&m, &spec, 200.0, &Policy::adaptive(), 3).unwrap();
+    let fp = frontier.fleet_at(&[1]);
+    assert_eq!(fp.replicas(), 1);
+
+    let model = Arc::new(m.clone());
+    let weights = Arc::new(w.clone());
+    let tracer = Tracer::ring(1 << 18);
+    let cfg = ServeConfig {
+        queue_depth: 8,
+        max_batch: 4,
+        tracer: tracer.clone(),
+        ..ServeConfig::default()
+    };
+    let server = Arc::new(Server::start_grouped(
+        fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
+        fp.replica_groups(),
+        fp.group_labels(),
+        &cfg,
+    ));
+    let rb = Rebalancer::start(
+        Arc::clone(&server),
+        frontier,
+        &fp,
+        Arc::clone(&model),
+        Arc::clone(&weights),
+        RebalanceConfig {
+            window: Duration::from_millis(100),
+            headroom: 0.25,
+            cooldown: Duration::from_millis(150),
+            min_replicas: 1,
+        },
+    );
+
+    let images = corpus(8, 7);
+
+    // Phase 1 — low load.
+    for img in images.iter().take(4) {
+        server.submit_wait(img.clone()).unwrap().wait().unwrap();
+    }
+
+    // Phase 2 — spike from closed-loop threads until the controller grows
+    // the group.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut spikers = Vec::new();
+    for t in 0..8usize {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        let images = images.clone();
+        spikers.push(std::thread::spawn(move || {
+            let mut sent = 0usize;
+            let mut k = t;
+            while !stop.load(Ordering::Relaxed) {
+                let idx = k % images.len();
+                k += 1;
+                server.submit_wait(images[idx].clone()).unwrap().wait().unwrap();
+                sent += 1;
+            }
+            sent
+        }));
+    }
+    let grew = wait_for(Duration::from_secs(20), || server.live_counts()[0] > 1);
+    stop.store(true, Ordering::Relaxed);
+    let spike_sent: usize = spikers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(grew, "fleet never scaled up under the spike");
+    assert!(spike_sent > 0);
+
+    // Phase 3 — lull: the shrink retires a replica while tracing is live.
+    let shrank = wait_for(Duration::from_secs(20), || server.live_counts()[0] == 1);
+    assert!(shrank, "fleet never shrank back in the lull: {:?}", server.live_counts());
+
+    rb.stop();
+    let snap = server.shutdown();
+    let events = tracer.drain();
+    assert_eq!(tracer.dropped(), 0, "ring must not overflow at this scale");
+    assert_eq!(snap.completed, snap.accepted, "admitted requests must all complete");
+    assert_eq!(snap.failed, 0);
+
+    // (1) Every completed request left a complete chain, and ids are
+    // dense from 1 (closed-loop submit_wait never sheds an id).
+    let chains = request_chains(&events);
+    let ids: Vec<u64> = chains.keys().copied().collect();
+    let want: Vec<u64> = (1..=snap.completed).collect();
+    assert_eq!(ids, want, "one chain per completed request, ids dense from 1");
+    for (tid, spans) in &chains {
+        assert_complete_chain(*tid, spans);
+    }
+
+    // (2) Fleet lifecycle on the control track: one replica_add per
+    // registration, a traced retirement for the shrink, and one
+    // rebalance_* instant per timeline entry.
+    let count = |name: &str| events.iter().filter(|e| e.name == name).count();
+    assert_eq!(count("replica_add"), snap.replicas.len());
+    assert!(count("replica_retire") >= 1, "shrink must trace a retirement");
+    let rebalances = events.iter().filter(|e| e.name.starts_with("rebalance_")).count();
+    assert!(!snap.events.is_empty(), "the controller must have acted");
+    assert_eq!(rebalances, snap.events.len(), "one instant per rebalance timeline entry");
+
+    // (3) Retired replicas' spans survive: every retired replica that
+    // served images keeps its infer_batch spans on its own track.
+    assert!(snap.replicas.iter().any(|r| r.retired), "the shrink retired a replica");
+    for (id, r) in snap.replicas.iter().enumerate() {
+        if r.retired && r.images > 0 {
+            assert!(
+                events.iter().any(|e| e.pid == pid_of_group(r.group)
+                    && e.tid == tid_of_replica(id)
+                    && e.name == "infer_batch"),
+                "retired replica {id} lost its spans"
+            );
+        }
+    }
+
+    // (4) The export round-trips through the CI validator: serialize,
+    // re-parse, validate — same path as `acf serve --trace` + trace-check.
+    let mut processes = vec![(PID_REQUESTS, "requests".to_string())];
+    for (g, label) in fp.group_labels().iter().enumerate() {
+        processes.push((pid_of_group(g), format!("group {g}: {label}")));
+    }
+    let threads: Vec<(u64, u64, String)> = snap
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(id, r)| (pid_of_group(r.group), tid_of_replica(id), format!("replica {id}")))
+        .collect();
+    let doc = chrome_trace(&events, &processes, &threads);
+    let parsed = Json::parse(&doc.dump()).unwrap();
+    let chk = validate_chrome_trace(&parsed).unwrap();
+    assert_eq!(chk.metadata, processes.len() + threads.len());
+    assert_eq!(
+        chk.request_tracks,
+        chains.len() + usize::from(snap.rejected > 0),
+        "one request track per chain (plus the shed track if anything shed)"
+    );
+    assert!(chk.spans >= chains.len() * REQUEST_STAGES.len());
+}
+
+#[test]
+fn retired_replica_history_keeps_its_track_in_the_export() {
+    // Deterministic victim: feed a 2-replica fleet until a chosen replica
+    // has demonstrably served, retire it, keep serving on the survivor —
+    // the victim's batch and per-layer spans must still come out of the
+    // sink and land on its labelled track in the export.
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 5);
+    let dev = by_name("zcu104").unwrap();
+    let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let model = Arc::new(m.clone());
+    let weights = Arc::new(w.clone());
+    let tracer = Tracer::ring(1 << 16);
+    let cfg = ServeConfig { max_batch: 4, tracer: tracer.clone(), ..ServeConfig::default() };
+    let server = Server::start_grouped(
+        fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
+        fp.replica_groups(),
+        fp.group_labels(),
+        &cfg,
+    );
+
+    let images = corpus(8, 3);
+    let victim = server.replica_ids_of_group(0)[0];
+    // Throughput-weighted dispatch spreads batches, but nothing promises
+    // which replica gets any particular one — feed until the victim has
+    // served at least one.
+    let fed = wait_for(Duration::from_secs(10), || {
+        let pend: Vec<_> =
+            images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
+        for p in pend {
+            p.wait().unwrap();
+        }
+        server.metrics().snapshot().replicas[victim].images > 0
+    });
+    assert!(fed, "victim replica never served a batch");
+
+    let report = server.retire_replica(victim).unwrap();
+    assert!(report.drained);
+    for img in images.iter().take(4) {
+        server.submit_wait(img.clone()).unwrap().wait().unwrap();
+    }
+    let snap = server.shutdown();
+    let events = tracer.drain();
+    assert!(snap.replicas[victim].retired);
+
+    // The victim's tid block still holds its work: the batch span on the
+    // base tid, per-layer pipeline spans on the worker tids above it.
+    let base = tid_of_replica(victim);
+    let victim_spans: Vec<&TraceEvent> = events
+        .iter()
+        .filter(|e| {
+            e.pid == pid_of_group(0)
+                && e.tid >= base
+                && e.tid < base + TIDS_PER_REPLICA
+                && e.kind == EventKind::Span
+        })
+        .collect();
+    assert!(
+        victim_spans.iter().any(|e| e.name == "infer_batch" && e.cat == "replica"),
+        "retired replica's batch spans must survive"
+    );
+    assert!(
+        victim_spans.iter().any(|e| e.cat == "sim" && e.tid > base),
+        "retired replica's per-layer spans must survive"
+    );
+
+    // And the export still carries a labelled track for it.
+    let processes =
+        vec![(PID_REQUESTS, "requests".to_string()), (pid_of_group(0), "group 0".to_string())];
+    let threads: Vec<(u64, u64, String)> = snap
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(id, r)| (pid_of_group(r.group), tid_of_replica(id), format!("replica {id}")))
+        .collect();
+    assert_eq!(threads.len(), 2, "retired replicas stay in the registry");
+    let doc = chrome_trace(&events, &processes, &threads);
+    let chk = validate_chrome_trace(&doc).unwrap();
+    assert_eq!(chk.metadata, processes.len() + threads.len());
+    assert!(chk.spans > 0);
+    assert!(chk.request_tracks > 0);
+}
