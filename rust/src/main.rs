@@ -9,7 +9,12 @@
 //!   deploy      — plan + run a batch of synthetic images (behavioral fabric)
 //!   serve       — plan a replica fleet and drive it with open-loop traffic
 //!                 (--rebalance adds the live controller under a step load;
-//!                 --trace FILE exports the run's Chrome trace-event timeline)
+//!                 --trace FILE exports the run's Chrome trace-event timeline;
+//!                 --scenario FILE runs a deterministic fault-injection
+//!                 scenario against the modeled fleet instead)
+//!   scenario-check — run every scenario JSON in a directory and write
+//!                 per-scenario verdict files (CI gate; quick mode via
+//!                 ACF_BENCH_QUICK=1)
 //!   sweep       — adaptation / precision sweeps
 //!   golden      — run the AOT XLA artifact and cross-check vs behavioral
 //!   bench-check — gate fresh BENCH_*.json series against BENCH_baseline/
@@ -34,6 +39,7 @@ fn main() {
         Some("plan") => cmd_plan(&argv[1..], false),
         Some("deploy") => cmd_plan(&argv[1..], true),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("scenario-check") => cmd_scenario_check(&argv[1..]),
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("golden") => cmd_golden(&argv[1..]),
         Some("bench-check") => cmd_bench_check(&argv[1..]),
@@ -44,7 +50,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: acf <tables|synth|sta|power|plan|deploy|serve|sweep|golden|bench-check|trace-check|version> [options]\n\
+                "usage: acf <tables|synth|sta|power|plan|deploy|serve|scenario-check|sweep|golden|bench-check|trace-check|version> [options]\n\
                  run `acf <cmd> --help` for per-command options"
             );
             2
@@ -190,8 +196,8 @@ fn cmd_ip(argv: &[String], mode: Mode) -> i32 {
     0
 }
 
-fn parse_model(a: &Args) -> Result<Model, String> {
-    match a.get_or("model", "lenet-tiny") {
+fn model_by_name(name: &str) -> Result<Model, String> {
+    match name {
         "lenet-tiny" => Ok(Model::lenet_tiny()),
         "lenet-wide2" => Ok(Model::lenet_wide(2)),
         "lenet-wide4" => Ok(Model::lenet_wide(4)),
@@ -202,6 +208,10 @@ fn parse_model(a: &Args) -> Result<Model, String> {
             Model::from_json(&json).map_err(|e| e.to_string())
         }
     }
+}
+
+fn parse_model(a: &Args) -> Result<Model, String> {
+    model_by_name(a.get_or("model", "lenet-tiny"))
 }
 
 fn parse_policy(a: &Args) -> Result<Policy, String> {
@@ -340,6 +350,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
     specs.push(OptSpec { name: "cooldown-ms", value: true, help: "quiet time between rebalance actions, or 'auto' (2x window)", default: Some("auto") });
     specs.push(OptSpec { name: "drain-deadline-ms", value: true, help: "how long a retiring replica gets to drain before being reported late", default: Some("5000") });
     specs.push(OptSpec { name: "trace", value: true, help: "write the run's span timeline (admission to settle) as Chrome trace-event JSON to this file (open in chrome://tracing or Perfetto), or 'none'", default: Some("none") });
+    specs.push(OptSpec { name: "scenario", value: true, help: "run a deterministic fault-injection scenario JSON against the modeled fleet instead of live traffic (exit code = verdict), or 'none'", default: Some("none") });
+    specs.push(OptSpec { name: "verdict", value: true, help: "with --scenario: also write the verdict report JSON to this file, or 'none'", default: Some("none") });
     let a = match Args::parse(argv, &specs) {
         Ok(a) => a,
         Err(e) => return fail(e),
@@ -349,6 +361,12 @@ fn cmd_serve(argv: &[String]) -> i32 {
         return 0;
     }
     let clock = a.get_f64("clock-mhz").unwrap().unwrap();
+    let scenario_path = a.get_or("scenario", "none");
+    if scenario_path != "none" {
+        // Scenario mode: the file names its own model/fleet; everything
+        // else (catalog, policy, seed, trace) comes from the flags.
+        return cmd_serve_scenario(&a, scenario_path, clock);
+    }
     let model = match parse_model(&a) {
         Ok(m) => m,
         Err(e) => return fail(e),
@@ -412,18 +430,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
     //    --replicas as the forced count) or a heterogeneous --devices
     //    list. Both resolve names against the --catalog JSON file first,
     //    then the built-in catalog.
-    let extra = match a.get_or("catalog", "none") {
-        "none" | "auto" => Vec::new(),
-        path => {
-            let text = match std::fs::read_to_string(path) {
-                Ok(t) => t,
-                Err(e) => return fail(format!("{path}: {e}")),
-            };
-            match device::load_catalog(&text) {
-                Ok(devs) => devs,
-                Err(e) => return fail(format!("{path}: {e}")),
-            }
-        }
+    let extra = match load_extra_catalog(&a) {
+        Ok(devs) => devs,
+        Err(e) => return fail(e),
     };
     let fleet_spec = match a.get_or("devices", "auto") {
         "auto" | "none" => match acf::serve::FleetSpec::parse(a.get_or("device", "zcu104"), &extra)
@@ -749,6 +758,249 @@ fn cmd_serve(argv: &[String]) -> i32 {
         return 1;
     }
     0
+}
+
+/// `--catalog` loading shared by the serve and scenario paths.
+fn load_extra_catalog(a: &Args) -> Result<Vec<device::Device>, String> {
+    match a.get_or("catalog", "none") {
+        "none" | "auto" => Ok(Vec::new()),
+        path => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            device::load_catalog(&text).map_err(|e| format!("{path}: {e}"))
+        }
+    }
+}
+
+/// Parse a scenario document and plan the fleet it names. Shared by
+/// `serve --scenario` and `scenario-check`; errors carry the offending
+/// field but not the file name (callers prepend it).
+fn plan_scenario(
+    text: &str,
+    extra: &[device::Device],
+    clock: f64,
+    policy: &acf::planner::Policy,
+    max_replicas: usize,
+) -> Result<(acf::serve::Scenario, acf::serve::FleetPlan), String> {
+    let sc = acf::serve::Scenario::from_str(text)?;
+    let model = model_by_name(&sc.model).map_err(|e| format!("model: {e}"))?;
+    let spec = acf::serve::FleetSpec::parse(&sc.devices, extra)
+        .map_err(|e| format!("devices: {e}"))?;
+    let frontier = acf::serve::FleetFrontier::build(&model, &spec, clock, policy, max_replicas)
+        .map_err(|e| e.to_string())?;
+    Ok((sc, acf::serve::compose_frontier(&frontier, None)))
+}
+
+/// `acf serve --scenario FILE`: run the deterministic fault-injection
+/// engine against the modeled fleet the scenario names. Prints per-phase
+/// verdicts and the fault timeline; exit code is the verdict (0 = PASS,
+/// 1 = any failed assertion — including a clean whole-fleet loss).
+fn cmd_serve_scenario(a: &Args, path: &str, clock: f64) -> i32 {
+    let policy = match parse_policy(a) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let max_replicas = a.get_u64("max-replicas").unwrap().unwrap() as usize;
+    let seed = a.get_u64("seed").unwrap().unwrap();
+    let extra = match load_extra_catalog(a) {
+        Ok(devs) => devs,
+        Err(e) => return fail(e),
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return fail(format!("{path}: {e}")),
+    };
+    let (sc, fp) = match plan_scenario(&text, &extra, clock, &policy, max_replicas) {
+        Ok(v) => v,
+        Err(e) => return fail(format!("{path}: {e}")),
+    };
+    let trace_path = match a.get_or("trace", "none") {
+        "none" => None,
+        p => Some(p.to_string()),
+    };
+    let tracer = if trace_path.is_some() {
+        acf::trace::Tracer::ring(acf::trace::RingSink::DEFAULT_CAP)
+    } else {
+        acf::trace::Tracer::off()
+    };
+    println!(
+        "scenario '{}' — {} (fleet {}, model {}, {} phase(s), seed {})",
+        sc.name,
+        sc.description,
+        sc.devices,
+        sc.model,
+        sc.phases.len(),
+        seed
+    );
+    println!(
+        "fleet plan @ {} MHz (policy {}): {} device group(s), {} replica(s), {:.1} img/s modeled",
+        clock,
+        policy.name,
+        fp.groups.len(),
+        fp.replicas(),
+        fp.fleet_img_s
+    );
+    let opts = acf::serve::ScenarioOpts { seed, quick: false, tracer: tracer.clone() };
+    let report = match acf::serve::run_scenario(&sc, &fp, &opts) {
+        Ok(r) => r,
+        Err(e) => return fail(format!("{path}: {e}")),
+    };
+    print!("{}", acf::report::scenario_table(&report).plain());
+    if !report.faults.is_empty() {
+        println!("fault timeline:");
+        print!("{}", acf::report::fault_timeline_table(&report.faults).plain());
+    }
+    println!(
+        "drops: {}  fleet_lost: {}  verdict: {}",
+        report.drops,
+        report.fleet_lost,
+        if report.passed { "PASS" } else { "FAIL" }
+    );
+    match a.get_or("verdict", "none") {
+        "none" => {}
+        out => {
+            if let Err(e) = std::fs::write(out, report.to_json().dump()) {
+                return fail(format!("{out}: {e}"));
+            }
+            println!("verdict JSON -> {out}");
+        }
+    }
+    if let Some(tpath) = &trace_path {
+        let events = tracer.drain();
+        let mut processes = vec![
+            (acf::trace::PID_SCENARIO, "scenario".to_string()),
+            (acf::trace::PID_REQUESTS, "requests".to_string()),
+        ];
+        let mut threads =
+            vec![(acf::trace::PID_SCENARIO, acf::trace::TID_CONTROL, "phases".to_string())];
+        let mut ri = 0usize;
+        for (gi, g) in fp.groups.iter().enumerate() {
+            processes.push((acf::trace::pid_of_group(gi), g.device.name.clone()));
+            threads.push((
+                acf::trace::pid_of_group(gi),
+                acf::trace::TID_CONTROL,
+                "control".to_string(),
+            ));
+            for _ in 0..g.replicas {
+                threads.push((
+                    acf::trace::pid_of_group(gi),
+                    acf::trace::tid_of_replica(ri),
+                    format!("replica {ri}"),
+                ));
+                ri += 1;
+            }
+        }
+        let doc = acf::trace::chrome_trace(&events, &processes, &threads);
+        if let Err(e) = std::fs::write(tpath, doc.dump()) {
+            return fail(format!("{tpath}: {e}"));
+        }
+        println!(
+            "trace: {} events -> {tpath} ({} dropped by the ring buffer)",
+            events.len(),
+            tracer.dropped()
+        );
+    }
+    i32::from(!report.passed)
+}
+
+/// `acf scenario-check [DIR]`: run every `*.json` scenario in DIR
+/// (default `scenarios`) against its planned fleet, write one
+/// `SCENARIO_<name>.json` verdict per scenario, and exit non-zero if any
+/// scenario fails. Quick mode (`ACF_BENCH_QUICK=1`) scales request
+/// counts down for CI — profile shapes and verdict logic are unchanged.
+fn cmd_scenario_check(argv: &[String]) -> i32 {
+    let specs = vec![
+        OptSpec { name: "out", value: true, help: "directory the SCENARIO_<name>.json verdict files are written to", default: Some(".") },
+        OptSpec { name: "seed", value: true, help: "scenario seed (arrival jitter)", default: Some("7") },
+        OptSpec { name: "clock-mhz", value: true, help: "FPGA clock for the fleet plans", default: Some("200") },
+        OptSpec { name: "max-replicas", value: true, help: "per-device ceiling for the replica search", default: Some("8") },
+        OptSpec { name: "policy", value: true, help: "adaptive|dsp-first|quantize-first|static-single", default: Some("adaptive") },
+        OptSpec { name: "catalog", value: true, help: "JSON device-array file extending device lookups, or 'none'", default: Some("none") },
+        OptSpec { name: "help", value: false, help: "show help", default: None },
+    ];
+    let a = match Args::parse(argv, &specs) {
+        Ok(a) => a,
+        Err(e) => return fail(e),
+    };
+    if a.flag("help") {
+        print!(
+            "{}",
+            help(
+                "acf scenario-check [scenario-dir]",
+                "run every scenario JSON in a directory and gate on the verdicts",
+                &specs
+            )
+        );
+        return 0;
+    }
+    let dir = a.positional().first().map(String::as_str).unwrap_or("scenarios");
+    let quick = acf::util::bench::quick_env();
+    let seed = a.get_u64("seed").unwrap().unwrap();
+    let clock = a.get_f64("clock-mhz").unwrap().unwrap();
+    let max_replicas = a.get_u64("max-replicas").unwrap().unwrap() as usize;
+    let policy = match parse_policy(&a) {
+        Ok(p) => p,
+        Err(e) => return fail(e),
+    };
+    let extra = match load_extra_catalog(&a) {
+        Ok(devs) => devs,
+        Err(e) => return fail(e),
+    };
+    let out_dir = a.get_or("out", ".");
+    let mut files: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|entry| entry.ok().map(|entry| entry.path()))
+            .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+            .collect(),
+        Err(e) => return fail(format!("{dir}: {e}")),
+    };
+    files.sort();
+    if files.is_empty() {
+        return fail(format!("{dir}: no *.json scenarios found"));
+    }
+    let mut failures = 0usize;
+    for path in &files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => return fail(format!("{}: {e}", path.display())),
+        };
+        let (sc, fp) = match plan_scenario(&text, &extra, clock, &policy, max_replicas) {
+            Ok(v) => v,
+            Err(e) => return fail(format!("{}: {e}", path.display())),
+        };
+        let opts = acf::serve::ScenarioOpts { seed, quick, tracer: acf::trace::Tracer::off() };
+        let report = match acf::serve::run_scenario(&sc, &fp, &opts) {
+            Ok(r) => r,
+            Err(e) => return fail(format!("{}: {e}", path.display())),
+        };
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("scenario");
+        let out_path = std::path::Path::new(out_dir).join(format!("SCENARIO_{stem}.json"));
+        if let Err(e) = std::fs::write(&out_path, report.to_json().dump()) {
+            return fail(format!("{}: {e}", out_path.display()));
+        }
+        println!(
+            "{}: {} — {} phase(s), {} fault(s), {} drop(s) -> {}",
+            path.display(),
+            if report.passed { "PASS" } else { "FAIL" },
+            report.phases.len(),
+            report.faults.len(),
+            report.drops,
+            out_path.display()
+        );
+        if !report.passed {
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        eprintln!("scenario-check: {failures} of {} scenario(s) failed", files.len());
+        1
+    } else {
+        println!(
+            "scenario-check: OK — {} scenario(s), seed {seed}, quick mode {}",
+            files.len(),
+            if quick { "on" } else { "off" }
+        );
+        0
+    }
 }
 
 fn cmd_sweep(argv: &[String]) -> i32 {

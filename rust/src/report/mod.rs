@@ -17,6 +17,9 @@
 //!   [`rebalance_table`] — the serving tier's modeled-fleet and
 //!   measured-fleet reports (`acf serve`), broken out per device group
 //!   for heterogeneous fleets, plus the dynamic-rebalance timeline.
+//! * [`scenario_table`] / [`fault_timeline_table`] — the deterministic
+//!   scenario harness's verdict: per-phase SLO checks and the fault
+//!   injection timeline with recovery times (`acf serve --scenario`).
 
 use crate::cnn::model::{Layer, Model};
 use crate::fabric::device::{by_name, catalog, Device};
@@ -272,6 +275,68 @@ pub fn rebalance_table(events: &[crate::serve::RebalanceEvent]) -> Table {
             e.action.to_string(),
             format!("{} -> {}", e.from, e.to),
             e.reason.clone(),
+        ]);
+    }
+    t
+}
+
+/// The scenario verdict table: one row per phase — offered load and its
+/// fate (accepted / shed / dropped), the phase-window latency
+/// quantiles, and each configured assertion as `name actual<=limit`
+/// with the failing ones marked. Printed by `acf serve --scenario`.
+pub fn scenario_table(report: &crate::serve::ScenarioReport) -> Table {
+    let mut t = Table::new(vec![
+        "phase", "requests", "accepted", "shed %", "drops", "p50 ms", "p99 ms", "checks",
+        "verdict",
+    ])
+    .numeric();
+    for p in &report.phases {
+        let checks = if p.checks.is_empty() {
+            "none".to_string()
+        } else {
+            p.checks
+                .iter()
+                .map(|c| {
+                    let mark = if c.passed { "" } else { " FAIL" };
+                    format!("{} {}<={}{}", c.name, fnum(c.actual, 1), fnum(c.limit, 1), mark)
+                })
+                .collect::<Vec<_>>()
+                .join("; ")
+        };
+        t.row(vec![
+            p.name.clone(),
+            p.requests.to_string(),
+            p.accepted.to_string(),
+            format!("{:.1}", p.shed_pct),
+            p.drops.to_string(),
+            fnum(p.p50_ms, 2),
+            fnum(p.p99_ms, 2),
+            checks,
+            if p.passed { "PASS".into() } else { "FAIL".into() },
+        ]);
+    }
+    t
+}
+
+/// The fault injection timeline: one row per injected fault — when it
+/// fired, what it did, and how long the fleet took to return under its
+/// pre-fault envelope ("never" marks an unrecovered fault). Printed by
+/// `acf serve --scenario` under the verdict table.
+pub fn fault_timeline_table(faults: &[crate::serve::FaultOutcome]) -> Table {
+    let mut t =
+        Table::new(vec!["t (s)", "phase", "fault", "group", "detail", "recovery"]).numeric();
+    for f in faults {
+        let recovery = match f.recovery_ms {
+            Some(ms) => format!("{} ms", fnum(ms, 1)),
+            None => "never".into(),
+        };
+        t.row(vec![
+            fnum(f.at_ms / 1e3, 3),
+            f.phase.to_string(),
+            f.kind.clone(),
+            f.group.to_string(),
+            f.detail.clone(),
+            recovery,
         ]);
     }
     t
@@ -665,6 +730,30 @@ mod tests {
         assert_eq!(t.cell(2, 0), "fleet");
         assert_eq!(t.cell(2, 1), "2");
         assert_eq!(t.cell(2, 8), "n/a");
+    }
+
+    #[test]
+    fn scenario_and_fault_tables_render() {
+        use crate::serve::scenario::{run_modeled, Scenario, ScenarioOpts, SimGroup};
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","queue_depth":64,"recovery_tail":16,"phases":[
+                {"name":"steady","requests":300,
+                 "load":{"profile":"constant","rate_x":0.35},
+                 "faults":[{"at_frac":0.5,"kind":"replica_death","group":0}],
+                 "asserts":{"max_shed_pct":10.0,"recovery_ms_max":60000.0}}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
+        let t = scenario_table(&r);
+        assert_eq!(t.n_rows(), 1);
+        assert_eq!(t.cell(0, 0), "steady");
+        assert_eq!(t.cell(0, 8), if r.phases[0].passed { "PASS" } else { "FAIL" });
+        assert!(t.cell(0, 7).contains("max_shed_pct"), "checks cell: {}", t.cell(0, 7));
+        let t = fault_timeline_table(&r.faults);
+        assert_eq!(t.n_rows(), 1);
+        assert_eq!(t.cell(0, 2), "replica_death");
+        assert!(t.cell(0, 5).ends_with("ms") || t.cell(0, 5) == "never");
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Fault injection primitives for the scenario harness.
+//!
+//! Three fault classes, mirroring the failures an edge fleet actually
+//! sees (ISSUE 8 / the ROADMAP scenario arc):
+//!
+//! * **Replica death** — one replica of a group disappears without a
+//!   drain window ([`FaultKind::ReplicaDeath`]). The scheduler unlists
+//!   it immediately; in-flight work finishes or is rewound through the
+//!   bounced-handoff path, and queued traffic reroutes to survivors.
+//! * **Group loss** — every replica of a device group dies at once
+//!   ([`FaultKind::GroupLoss`]), e.g. a board falls off the fabric.
+//!   Surviving groups absorb the traffic; losing the *fleet's* last
+//!   replica is a legal injection whose outcome is a failed scenario
+//!   verdict, not a process error.
+//! * **Latency degradation** — a replica keeps answering but slower by
+//!   a multiplicative factor for a bounded duration
+//!   ([`FaultKind::LatencyDegrade`]), modeling thermal throttling or a
+//!   congested link. Injected at the dispatch boundary via
+//!   [`LatencyShim`] so admission, batching, and rebalance signals all
+//!   see the real (degraded) service rate.
+//!
+//! Every injection and its outcome is recorded as a [`FaultEvent`] in
+//! [`crate::serve::FleetMetrics`] and mirrored as an instant on the
+//! trace control tracks, so a failing scenario exports a Chrome trace
+//! of exactly what happened and when.
+
+use crate::util::sync::lock_ok;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A scheduled fault, relative to the phase that carries it: fires at
+/// `at_frac` of the way through the phase's arrival window.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Position within the phase, in `[0, 1]` of the phase's span.
+    pub at_frac: f64,
+    pub kind: FaultKind,
+}
+
+/// What to inject. Targets are device-group indices (the scenario
+/// engine picks a concrete replica within the group deterministically:
+/// the highest-id live one).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Kill one live replica of `group`, without drain.
+    ReplicaDeath { group: usize },
+    /// Kill every live replica of `group` at once.
+    GroupLoss { group: usize },
+    /// Multiply the service time of one replica of `group` by `factor`
+    /// for `duration`, then restore it.
+    LatencyDegrade { group: usize, factor: f64, duration: Duration },
+}
+
+impl FaultKind {
+    /// The device group this fault targets.
+    pub fn group(&self) -> usize {
+        match *self {
+            FaultKind::ReplicaDeath { group }
+            | FaultKind::GroupLoss { group }
+            | FaultKind::LatencyDegrade { group, .. } => group,
+        }
+    }
+
+    /// Short machine-readable name, used in verdict JSON and traces.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::ReplicaDeath { .. } => "replica_death",
+            FaultKind::GroupLoss { .. } => "group_loss",
+            FaultKind::LatencyDegrade { .. } => "latency_degrade",
+        }
+    }
+}
+
+/// What a recorded fault event *was* — injections plus the outcomes the
+/// fleet derived from them (a replica death that empties a group also
+/// logs a [`FaultEventKind::GroupLost`]; emptying the fleet logs
+/// [`FaultEventKind::FleetLost`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEventKind {
+    ReplicaDeath,
+    GroupLoss,
+    /// Outcome: a group's last live replica is gone; traffic reroutes.
+    GroupLost,
+    /// Outcome: the fleet's last live replica is gone; nothing can
+    /// serve. A scenario run turns this into a FAIL verdict.
+    FleetLost,
+    LatencyDegrade,
+    /// A latency degradation's duration elapsed and the replica's
+    /// service rate was restored.
+    LatencyRestore,
+}
+
+impl std::fmt::Display for FaultEventKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultEventKind::ReplicaDeath => "replica_death",
+            FaultEventKind::GroupLoss => "group_loss",
+            FaultEventKind::GroupLost => "group_lost",
+            FaultEventKind::FleetLost => "fleet_lost",
+            FaultEventKind::LatencyDegrade => "latency_degrade",
+            FaultEventKind::LatencyRestore => "latency_restore",
+        })
+    }
+}
+
+/// One entry of the fault timeline kept by
+/// [`crate::serve::FleetMetrics`]: when (seconds on the metrics clock),
+/// what, and to whom.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    /// Seconds since the metrics epoch.
+    pub at_secs: f64,
+    pub kind: FaultEventKind,
+    /// Device group the event concerns (`None` for fleet-wide events).
+    pub group: Option<usize>,
+    /// Replica the event concerns (`None` for group/fleet events).
+    pub replica: Option<usize>,
+    /// Free-form context ("factor 4x for 200ms", "2 survivors", ...).
+    pub detail: String,
+}
+
+/// The dispatch-boundary latency shim: a per-replica map of extra
+/// synthetic delay. The scheduler consults it once per micro-batch
+/// handoff — *before* the batch enters the replica's pipeline — so a
+/// degraded replica's slowdown is visible to everything downstream
+/// (latency reservoirs, utilization windows, rebalance signals) exactly
+/// as a genuinely slow device would be.
+#[derive(Debug, Default)]
+pub struct LatencyShim {
+    delays: Mutex<BTreeMap<usize, Duration>>,
+}
+
+impl LatencyShim {
+    pub fn new() -> LatencyShim {
+        LatencyShim::default()
+    }
+
+    /// Inject `extra` delay per micro-batch on `replica` (replaces any
+    /// previous injection on that replica).
+    pub fn inject(&self, replica: usize, extra: Duration) {
+        lock_ok(&self.delays).insert(replica, extra);
+    }
+
+    /// Remove the injection on `replica`; returns whether one existed.
+    pub fn clear(&self, replica: usize) -> bool {
+        lock_ok(&self.delays).remove(&replica).is_some()
+    }
+
+    /// Drop every injection (end-of-scenario cleanup).
+    pub fn clear_all(&self) {
+        lock_ok(&self.delays).clear();
+    }
+
+    /// The extra delay currently injected on `replica`, if any.
+    pub fn delay_of(&self, replica: usize) -> Option<Duration> {
+        lock_ok(&self.delays).get(&replica).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_shim_injects_and_clears() {
+        let shim = LatencyShim::new();
+        assert_eq!(shim.delay_of(3), None);
+        shim.inject(3, Duration::from_millis(20));
+        assert_eq!(shim.delay_of(3), Some(Duration::from_millis(20)));
+        // Re-injection replaces.
+        shim.inject(3, Duration::from_millis(5));
+        assert_eq!(shim.delay_of(3), Some(Duration::from_millis(5)));
+        // Other replicas unaffected.
+        assert_eq!(shim.delay_of(0), None);
+        assert!(shim.clear(3));
+        assert!(!shim.clear(3), "second clear finds nothing");
+        assert_eq!(shim.delay_of(3), None);
+        shim.inject(1, Duration::from_millis(1));
+        shim.inject(2, Duration::from_millis(2));
+        shim.clear_all();
+        assert_eq!(shim.delay_of(1), None);
+        assert_eq!(shim.delay_of(2), None);
+    }
+
+    #[test]
+    fn fault_kind_names_and_groups() {
+        let k = FaultKind::LatencyDegrade {
+            group: 2,
+            factor: 4.0,
+            duration: Duration::from_millis(100),
+        };
+        assert_eq!(k.name(), "latency_degrade");
+        assert_eq!(k.group(), 2);
+        assert_eq!(FaultKind::ReplicaDeath { group: 0 }.name(), "replica_death");
+        assert_eq!(FaultKind::GroupLoss { group: 1 }.group(), 1);
+        assert_eq!(FaultEventKind::FleetLost.to_string(), "fleet_lost");
+    }
+}

@@ -30,7 +30,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 use std::time::Duration;
 
+use crate::serve::fault::{FaultEvent, FaultEventKind};
 use crate::trace::{self, ArgValue, Clock, Tracer};
+use crate::util::sync::{lock_ok, read_ok, write_ok};
 
 /// Live counters for one replica of the fleet.
 #[derive(Debug, Default)]
@@ -200,6 +202,9 @@ pub struct FleetMetrics {
     replicas: RwLock<Vec<ReplicaEntry>>,
     groups: Vec<GroupMetrics>,
     events: Mutex<Vec<RebalanceEvent>>,
+    /// The fault timeline (injections and their outcomes) — what the
+    /// scenario harness asserts on and the fault tables print.
+    faults: Mutex<Vec<FaultEvent>>,
 }
 
 impl FleetMetrics {
@@ -247,6 +252,7 @@ impl FleetMetrics {
             replicas: RwLock::new(Vec::new()),
             groups: labels.into_iter().map(GroupMetrics::new).collect(),
             events: Mutex::new(Vec::new()),
+            faults: Mutex::new(Vec::new()),
         };
         for g in replica_group {
             m.register_replica(g);
@@ -271,7 +277,7 @@ impl FleetMetrics {
     /// its slot (and its history) in the registry.
     pub fn register_replica(&self, group: usize) -> usize {
         assert!(group < self.groups.len(), "replica group index out of range");
-        let mut reg = self.replicas.write().unwrap();
+        let mut reg = write_ok(&self.replicas);
         let id = reg.len();
         reg.push(ReplicaEntry { group, m: ReplicaMetrics::default() });
         self.groups[group].live.fetch_add(1, Ordering::Relaxed);
@@ -294,7 +300,7 @@ impl FleetMetrics {
     /// separately via [`FleetMetrics::note_drained`] /
     /// [`FleetMetrics::note_drain_timeout`]).
     pub fn note_retiring(&self, replica: usize) {
-        let reg = self.replicas.read().unwrap();
+        let reg = read_ok(&self.replicas);
         if let Some(e) = reg.get(replica) {
             if !e.m.retired.swap(true, Ordering::Relaxed) {
                 saturating_dec(&self.groups[e.group].live, 1);
@@ -369,16 +375,57 @@ impl FleetMetrics {
                 ],
             );
         }
-        self.events.lock().unwrap().push(event);
+        lock_ok(&self.events).push(event);
     }
 
     /// The rebalance timeline so far.
     pub fn events(&self) -> Vec<RebalanceEvent> {
-        self.events.lock().unwrap().clone()
+        lock_ok(&self.events).clone()
+    }
+
+    /// Record one fault-timeline entry, stamping it with the metrics
+    /// clock and mirroring it on the trace control tracks: group-scoped
+    /// faults land on their group's control track, fleet-wide ones on
+    /// the requests process's control track — the same timeline the
+    /// request chains and rebalance actions live on, so a Chrome trace
+    /// of a failing scenario shows exactly what happened and when.
+    pub fn note_fault(&self, mut event: FaultEvent) {
+        event.at_secs = self.clock.now_secs();
+        if self.tracer.on() {
+            let (pid, tid) = match event.group {
+                Some(g) => (trace::pid_of_group(g), trace::TID_CONTROL),
+                None => (trace::PID_REQUESTS, 0),
+            };
+            let mut args = vec![("detail", ArgValue::S(event.detail.clone()))];
+            if let Some(r) = event.replica {
+                args.push(("replica", ArgValue::U(r as u64)));
+            }
+            self.tracer.instant(
+                format!("fault_{}", event.kind),
+                "fault",
+                pid,
+                tid,
+                self.clock.now_nanos(),
+                args,
+            );
+        }
+        lock_ok(&self.faults).push(event);
+    }
+
+    /// The fault timeline so far (injections and derived outcomes, in
+    /// record order).
+    pub fn faults(&self) -> Vec<FaultEvent> {
+        lock_ok(&self.faults).clone()
+    }
+
+    /// Whether a [`FaultEventKind::FleetLost`] outcome has been recorded
+    /// — the scenario engine turns this into a failed verdict.
+    pub fn fleet_lost(&self) -> bool {
+        lock_ok(&self.faults).iter().any(|e| e.kind == FaultEventKind::FleetLost)
     }
 
     fn with_group_of<T>(&self, replica: usize, f: impl FnOnce(&GroupMetrics) -> T) -> Option<T> {
-        let reg = self.replicas.read().unwrap();
+        let reg = read_ok(&self.replicas);
         reg.get(replica).and_then(|e| self.groups.get(e.group)).map(f)
     }
 
@@ -410,7 +457,7 @@ impl FleetMetrics {
     /// `n` requests left the queue as one micro-batch bound for `replica`.
     pub fn note_dispatched(&self, replica: usize, n: u64) {
         self.dispatched.fetch_add(n, Ordering::Relaxed);
-        let reg = self.replicas.read().unwrap();
+        let reg = read_ok(&self.replicas);
         if let Some(e) = reg.get(replica) {
             e.m.in_flight.fetch_add(n, Ordering::Relaxed);
             if let Some(g) = self.groups.get(e.group) {
@@ -425,7 +472,7 @@ impl FleetMetrics {
     /// dispatch accounting so queue depth and in-flight stay honest.
     pub fn note_requeued(&self, replica: usize, n: u64) {
         saturating_dec(&self.dispatched, n);
-        let reg = self.replicas.read().unwrap();
+        let reg = read_ok(&self.replicas);
         if let Some(e) = reg.get(replica) {
             saturating_dec(&e.m.in_flight, n);
             if let Some(g) = self.groups.get(e.group) {
@@ -442,9 +489,9 @@ impl FleetMetrics {
         self.first_done_nanos.fetch_min(now, Ordering::Relaxed);
         self.last_done_nanos.fetch_max(now, Ordering::Relaxed);
         let nanos = latency.as_nanos() as u64;
-        self.latencies_nanos.lock().unwrap().push((now, nanos));
+        lock_ok(&self.latencies_nanos).push((now, nanos));
         let _ = self.with_group_of(replica, |g| {
-            g.latencies_nanos.lock().unwrap().push((now, nanos));
+            lock_ok(&g.latencies_nanos).push((now, nanos));
         });
     }
 
@@ -468,7 +515,7 @@ impl FleetMetrics {
     /// the batches, so the callers already see errors; the books must
     /// agree. Returns how many images were lost.
     pub fn note_dead_replica(&self, replica: usize) -> u64 {
-        let reg = self.replicas.read().unwrap();
+        let reg = read_ok(&self.replicas);
         let Some(e) = reg.get(replica) else {
             return 0;
         };
@@ -485,7 +532,7 @@ impl FleetMetrics {
     /// `replica` retired a micro-batch of `n` images in `busy` wall time.
     pub fn note_replica_batch(&self, replica: usize, n: u64, busy: Duration) {
         let busy_nanos = busy.as_nanos() as u64;
-        let reg = self.replicas.read().unwrap();
+        let reg = read_ok(&self.replicas);
         if let Some(e) = reg.get(replica) {
             e.m.images.fetch_add(n, Ordering::Relaxed);
             e.m.batches.fetch_add(1, Ordering::Relaxed);
@@ -504,12 +551,17 @@ impl FleetMetrics {
     /// throughput-weighted dispatch key, and the retire path's drain
     /// signal).
     pub fn load_of(&self, replica: usize) -> u64 {
-        self.replicas
-            .read()
-            .unwrap()
+        read_ok(&self.replicas)
             .get(replica)
             .map(|e| e.m.in_flight.load(Ordering::Relaxed))
             .unwrap_or(0)
+    }
+
+    /// Live replicas per device group, now (index = group id). The fault
+    /// hooks use this to tell a replica death from a group loss from a
+    /// fleet loss.
+    pub fn live_counts(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g.live.load(Ordering::Relaxed) as usize).collect()
     }
 
     /// Number of device groups (fixed for the life of the fleet).
@@ -549,10 +601,7 @@ impl FleetMetrics {
                 // the control loop ticks 4x/s on servers that may run
                 // for days. Out-of-order jitter at the boundary is
                 // microseconds against windows of ≥ tens of ms.
-                let mut lat: Vec<u64> = g
-                    .latencies_nanos
-                    .lock()
-                    .unwrap()
+                let mut lat: Vec<u64> = lock_ok(&g.latencies_nanos)
                     .iter()
                     .rev()
                     .take_while(|(off, _)| *off >= cut)
@@ -574,10 +623,82 @@ impl FleetMetrics {
             .collect()
     }
 
+    /// Fleet-wide sliding-window signals over the last `window`: the
+    /// recovery tracker's view of "is the fleet back under its pre-fault
+    /// envelope". Same suffix walk as [`FleetMetrics::window`], over the
+    /// fleet reservoir.
+    pub fn window_fleet(&self, window: Duration) -> FleetWindow {
+        let now = self.clock.now_nanos();
+        let cut = now.saturating_sub(window.as_nanos() as u64);
+        let mut lat: Vec<u64> = lock_ok(&self.latencies_nanos)
+            .iter()
+            .rev()
+            .take_while(|(off, _)| *off >= cut)
+            .map(|(_, l)| *l)
+            .collect();
+        lat.sort_unstable();
+        FleetWindow {
+            completed: lat.len() as u64,
+            p50_ms: percentile_ms(&lat, 0.50),
+            p99_ms: percentile_ms(&lat, 0.99),
+        }
+    }
+
+    /// Fleet-wide quantiles over the last `n` completions (or fewer,
+    /// early on). The scenario engine's recovery signal: unlike a time
+    /// window, a completion-count tail is *scale-free* — the same
+    /// scenario file probes the same number of samples whether the
+    /// modeled fleet serves 100 or 100 000 img/s, so verdicts stay
+    /// machine- and model-independent.
+    pub fn tail_stats(&self, n: usize) -> FleetWindow {
+        let mut lat: Vec<u64> = {
+            let res = lock_ok(&self.latencies_nanos);
+            res[res.len().saturating_sub(n)..].iter().map(|&(_, l)| l).collect()
+        };
+        lat.sort_unstable();
+        FleetWindow {
+            completed: lat.len() as u64,
+            p50_ms: percentile_ms(&lat, 0.50),
+            p99_ms: percentile_ms(&lat, 0.99),
+        }
+    }
+
+    /// Fleet latency quantiles over completions whose completion offset
+    /// falls in `[from_nanos, to_nanos)` — the phase-scoped view the
+    /// scenario verdict table prints (a phase's stats are a range query
+    /// on the same reservoir the all-time quantiles use, so no second
+    /// accounting path exists to drift).
+    pub fn range_stats(&self, from_nanos: u64, to_nanos: u64) -> RangeStats {
+        let mut lat: Vec<u64> = lock_ok(&self.latencies_nanos)
+            .iter()
+            .filter(|(off, _)| *off >= from_nanos && *off < to_nanos)
+            .map(|(_, l)| *l)
+            .collect();
+        lat.sort_unstable();
+        RangeStats {
+            completed: lat.len() as u64,
+            p50_ms: percentile_ms(&lat, 0.50),
+            p95_ms: percentile_ms(&lat, 0.95),
+            p99_ms: percentile_ms(&lat, 0.99),
+        }
+    }
+
+    /// The five request counters in one read (accepted, rejected,
+    /// completed, failed, dispatched) — what the scenario engine
+    /// differences at phase boundaries.
+    pub fn totals(&self) -> Totals {
+        Totals {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            dispatched: self.dispatched.load(Ordering::Relaxed),
+        }
+    }
+
     /// Point-in-time aggregate view.
     pub fn snapshot(&self) -> FleetSnapshot {
-        let mut lat: Vec<u64> =
-            self.latencies_nanos.lock().unwrap().iter().map(|&(_, l)| l).collect();
+        let mut lat: Vec<u64> = lock_ok(&self.latencies_nanos).iter().map(|&(_, l)| l).collect();
         lat.sort_unstable();
         let completed = self.completed.load(Ordering::Relaxed);
         let first = self.first_done_nanos.load(Ordering::Relaxed);
@@ -609,10 +730,7 @@ impl FleetMetrics {
             p95_ms: percentile_ms(&lat, 0.95),
             p99_ms: percentile_ms(&lat, 0.99),
             mean_ms,
-            replicas: self
-                .replicas
-                .read()
-                .unwrap()
+            replicas: read_ok(&self.replicas)
                 .iter()
                 .map(|e| {
                     let busy_secs = e.m.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
@@ -630,13 +748,8 @@ impl FleetMetrics {
                 .groups
                 .iter()
                 .map(|g| {
-                    let mut glat: Vec<u64> = g
-                        .latencies_nanos
-                        .lock()
-                        .unwrap()
-                        .iter()
-                        .map(|&(_, l)| l)
-                        .collect();
+                    let mut glat: Vec<u64> =
+                        lock_ok(&g.latencies_nanos).iter().map(|&(_, l)| l).collect();
                     glat.sort_unstable();
                     let busy_secs = g.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
                     let live = g.live.load(Ordering::Relaxed) as usize;
@@ -665,6 +778,7 @@ impl FleetMetrics {
                 })
                 .collect(),
             events: self.events(),
+            faults: self.faults(),
         }
     }
 }
@@ -706,6 +820,36 @@ pub struct FleetSnapshot {
     pub groups: Vec<GroupSnapshot>,
     /// The rebalance timeline (empty for static fleets).
     pub events: Vec<RebalanceEvent>,
+    /// The fault timeline (empty unless faults were injected).
+    pub faults: Vec<FaultEvent>,
+}
+
+/// Fleet-wide sliding-window signals ([`FleetMetrics::window_fleet`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetWindow {
+    pub completed: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Fleet latency quantiles over a completion-offset range
+/// ([`FleetMetrics::range_stats`]) — one scenario phase's view.
+#[derive(Debug, Clone, Copy)]
+pub struct RangeStats {
+    pub completed: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// One consistent read of the request counters ([`FleetMetrics::totals`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Totals {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub dispatched: u64,
 }
 
 /// Frozen per-replica statistics.
@@ -1056,5 +1200,100 @@ mod tests {
         assert_eq!(ev.ts_nanos, 1_000_000);
         assert_eq!(ev.pid, trace::pid_of_group(0));
         assert_eq!(ev.tid, trace::TID_CONTROL);
+    }
+
+    #[test]
+    fn fault_timeline_is_stamped_and_traced() {
+        let clock = Clock::manual();
+        let tracer = Tracer::ring(16);
+        let m = FleetMetrics::grouped_with(
+            vec![0, 1],
+            vec!["a".into(), "b".into()],
+            clock.clone(),
+            tracer.clone(),
+        );
+        clock.advance(Duration::from_millis(10));
+        m.note_fault(FaultEvent {
+            at_secs: -1.0, // overwritten by the metrics clock
+            kind: FaultEventKind::ReplicaDeath,
+            group: Some(1),
+            replica: Some(1),
+            detail: "injected".into(),
+        });
+        clock.advance(Duration::from_millis(10));
+        m.note_fault(FaultEvent {
+            at_secs: -1.0,
+            kind: FaultEventKind::FleetLost,
+            group: None,
+            replica: None,
+            detail: "no live replicas".into(),
+        });
+        let faults = m.faults();
+        assert_eq!(faults.len(), 2);
+        assert!((faults[0].at_secs - 0.010).abs() < 1e-9);
+        assert!(faults[1].at_secs > faults[0].at_secs);
+        assert!(m.fleet_lost());
+        // Group-scoped fault on its group's control track; fleet-wide
+        // one on the requests process's control track.
+        let evs: Vec<_> = tracer
+            .drain()
+            .into_iter()
+            .filter(|e| e.name.starts_with("fault_"))
+            .collect();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "fault_replica_death");
+        assert_eq!(evs[0].pid, trace::pid_of_group(1));
+        assert_eq!(evs[1].name, "fault_fleet_lost");
+        assert_eq!(evs[1].pid, trace::PID_REQUESTS);
+        assert_eq!(m.snapshot().faults.len(), 2);
+    }
+
+    #[test]
+    fn range_stats_and_fleet_window_cut_the_shared_reservoir() {
+        let clock = Clock::manual();
+        let m = FleetMetrics::grouped_with(
+            vec![0],
+            vec!["g".into()],
+            clock.clone(),
+            Tracer::off(),
+        );
+        // Three completions at t = 10, 20, 30 ms with latencies 1/5/9 ms.
+        for (t, l) in [(10u64, 1u64), (20, 5), (30, 9)] {
+            clock.advance(Duration::from_millis(10));
+            let _ = t;
+            m.note_completed(0, Duration::from_millis(l));
+        }
+        // Range [15ms, 35ms) sees the 5 and 9 ms samples.
+        let r = m.range_stats(15_000_000, 35_000_000);
+        assert_eq!(r.completed, 2);
+        assert!((r.p50_ms - 5.0).abs() < 1e-9);
+        assert!((r.p99_ms - 9.0).abs() < 1e-9);
+        // An empty range is quiet.
+        let r = m.range_stats(40_000_000, 50_000_000);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.p99_ms, 0.0);
+        // A 15 ms fleet window at t=30ms sees the last two samples.
+        let w = m.window_fleet(Duration::from_millis(15));
+        assert_eq!(w.completed, 2);
+        assert!((w.p99_ms - 9.0).abs() < 1e-9);
+        // A completion-count tail cuts by order, not time.
+        let t2 = m.tail_stats(2);
+        assert_eq!(t2.completed, 2);
+        assert!((t2.p50_ms - 5.0).abs() < 1e-9);
+        assert!((t2.p99_ms - 9.0).abs() < 1e-9);
+        // Asking for more than exists returns everything.
+        assert_eq!(m.tail_stats(100).completed, 3);
+        // Totals reads match the individual counters.
+        m.note_accepted();
+        m.note_rejected();
+        let t = m.totals();
+        assert_eq!(t.accepted, 1);
+        assert_eq!(t.rejected, 1);
+        assert_eq!(t.completed, 3);
+        assert_eq!(t.failed, 0);
+        // live_counts reflects the registry.
+        assert_eq!(m.live_counts(), vec![1]);
+        m.note_retiring(0);
+        assert_eq!(m.live_counts(), vec![0]);
     }
 }

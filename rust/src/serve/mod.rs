@@ -32,20 +32,26 @@
 //!   driving the above; the `acf serve` CLI prints its
 //!   modeled-vs-measured comparison.
 
+pub mod fault;
 pub mod fleet;
 pub mod metrics;
 pub mod rebalance;
+pub mod scenario;
 pub mod scheduler;
 
+pub use fault::{FaultEvent, FaultEventKind, FaultKind, FaultSpec, LatencyShim};
 pub use fleet::{
     compose_frontier, plan_fixed_fleet, plan_fleet, plan_fleet_spec, plan_signature, FleetEntry,
     FleetFrontier, FleetPlan, FleetSpec, GroupFrontier, GroupPlan, DEFAULT_MAX_REPLICAS,
 };
 pub use metrics::{
-    FleetMetrics, FleetSnapshot, GroupSnapshot, GroupWindow, RebalanceAction, RebalanceEvent,
-    ReplicaSnapshot,
+    FleetMetrics, FleetSnapshot, FleetWindow, GroupSnapshot, GroupWindow, RangeStats,
+    RebalanceAction, RebalanceEvent, ReplicaSnapshot, Totals,
 };
-pub use rebalance::{RebalanceConfig, Rebalancer};
+pub use rebalance::{RebalanceConfig, Rebalancer, RecoveryEnvelope, RecoveryTracker};
+pub use scenario::{
+    run_scenario, FaultOutcome, PhaseVerdict, Scenario, ScenarioOpts, ScenarioReport,
+};
 pub use scheduler::{DrainReport, Pending, Server};
 
 use crate::coordinator::DeployError;
@@ -69,6 +75,11 @@ pub enum ServeError {
     /// A fleet-resize operation could not be applied (e.g. retiring the
     /// last live replica, or a replica id no longer in rotation).
     Rebalance(String),
+    /// A fault injection could not be applied (e.g. targeting a group
+    /// with no live replicas). Distinct from [`ServeError::Rebalance`]
+    /// because the scenario engine treats it as a scenario-authoring
+    /// error, not a fleet condition.
+    Fault(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -81,6 +92,7 @@ impl std::fmt::Display for ServeError {
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
             ServeError::ReplicaFailed(msg) => write!(f, "replica failed: {msg}"),
             ServeError::Rebalance(msg) => write!(f, "rebalance rejected: {msg}"),
+            ServeError::Fault(msg) => write!(f, "fault injection rejected: {msg}"),
         }
     }
 }
@@ -163,15 +175,87 @@ pub fn arrival_schedule(
     offered_img_s: f64,
     seed: u64,
 ) -> Vec<(f64, usize)> {
+    profile_schedule(corpus_len, requests, &LoadProfile::Constant { img_s: offered_img_s }, seed)
+}
+
+/// A time-varying offered-rate shape for one scenario phase. The rate is
+/// a function of *arrival index* (fraction of the way through the
+/// phase), so the same profile stretches or compresses with the request
+/// count — quick mode scales a phase down without changing its shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadProfile {
+    /// Flat offered rate (what [`arrival_schedule`] always produced).
+    Constant { img_s: f64 },
+    /// Linear ramp across the phase — half a diurnal cycle; chain a ramp
+    /// up and a ramp down for the full curve.
+    Ramp { from_img_s: f64, to_img_s: f64 },
+    /// Flash crowd: `base_img_s` except between `start_frac` and
+    /// `end_frac` of the phase, where the rate jumps to `spike_img_s`.
+    Spike { base_img_s: f64, spike_img_s: f64, start_frac: f64, end_frac: f64 },
+    /// Adversarial micro-bursts: every `every` arrivals, the next `len`
+    /// arrive at `burst_img_s` instead of `base_img_s` — repeated
+    /// short-lived queue slams that hunt for admission-control and
+    /// rebalance-hysteresis edge cases.
+    Bursts { base_img_s: f64, burst_img_s: f64, every: usize, len: usize },
+}
+
+impl LoadProfile {
+    /// The offered rate for arrival `i` of `requests`.
+    pub fn rate_at(&self, i: usize, requests: usize) -> f64 {
+        let frac = if requests > 1 { i as f64 / (requests - 1) as f64 } else { 0.0 };
+        match *self {
+            LoadProfile::Constant { img_s } => img_s,
+            LoadProfile::Ramp { from_img_s, to_img_s } => {
+                from_img_s + (to_img_s - from_img_s) * frac
+            }
+            LoadProfile::Spike { base_img_s, spike_img_s, start_frac, end_frac } => {
+                if frac >= start_frac && frac < end_frac {
+                    spike_img_s
+                } else {
+                    base_img_s
+                }
+            }
+            LoadProfile::Bursts { base_img_s, burst_img_s, every, len } => {
+                if every > 0 && i % every < len {
+                    burst_img_s
+                } else {
+                    base_img_s
+                }
+            }
+        }
+    }
+
+    /// The peak rate anywhere in the profile (sanity checks / reports).
+    pub fn peak_img_s(&self) -> f64 {
+        match *self {
+            LoadProfile::Constant { img_s } => img_s,
+            LoadProfile::Ramp { from_img_s, to_img_s } => from_img_s.max(to_img_s),
+            LoadProfile::Spike { base_img_s, spike_img_s, .. } => base_img_s.max(spike_img_s),
+            LoadProfile::Bursts { base_img_s, burst_img_s, .. } => base_img_s.max(burst_img_s),
+        }
+    }
+}
+
+/// [`arrival_schedule`] generalized to a time-varying [`LoadProfile`]:
+/// arrival `i`'s exponential inter-arrival gap uses the profile's rate
+/// at `i`. Same seed + profile + corpus + count ⇒ the identical
+/// sequence — the determinism contract the scenario harness is built on.
+pub fn profile_schedule(
+    corpus_len: usize,
+    requests: usize,
+    profile: &LoadProfile,
+    seed: u64,
+) -> Vec<(f64, usize)> {
     assert!(corpus_len > 0, "load generator needs at least one image");
-    assert!(offered_img_s > 0.0, "offered rate must be positive");
     let mut rng = Rng::new(seed);
     let mut at = 0.0f64;
     (0..requests)
-        .map(|_| {
+        .map(|i| {
+            let rate = profile.rate_at(i, requests);
+            assert!(rate > 0.0, "offered rate must be positive");
             // Exponential inter-arrival with mean 1/rate; (1 - u) avoids
             // ln(0).
-            at += -(1.0 - rng.unit_f64()).ln() / offered_img_s;
+            at += -(1.0 - rng.unit_f64()).ln() / rate;
             (at, rng.index(corpus_len))
         })
         .collect()
@@ -206,17 +290,46 @@ pub fn step_load(
     phases: &[LoadPhase],
     seed: u64,
 ) -> Vec<LoadOutcome> {
+    let profiled: Vec<ProfilePhase> = phases
+        .iter()
+        .map(|p| ProfilePhase {
+            requests: p.requests,
+            profile: LoadProfile::Constant { img_s: p.offered_img_s },
+        })
+        .collect();
+    profile_load(server, corpus, &profiled, seed)
+}
+
+/// One phase of a profiled load: `requests` arrivals shaped by
+/// `profile`. The scenario DSL's phases lower to this.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfilePhase {
+    pub requests: usize,
+    pub profile: LoadProfile,
+}
+
+/// Fork the arrival seed for phase `k` — adding or resizing a phase
+/// never perturbs the others' schedules. Shared by [`profile_load`] and
+/// the scenario engine's virtual-time driver so a scenario's modeled
+/// run and a real serve of the same phases draw identical schedules.
+pub fn phase_seed(seed: u64, k: usize) -> u64 {
+    seed.wrapping_add((k as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// [`step_load`] generalized to time-varying [`LoadProfile`] phases.
+pub fn profile_load(
+    server: &Server,
+    corpus: &[Vec<i64>],
+    phases: &[ProfilePhase],
+    seed: u64,
+) -> Vec<LoadOutcome> {
     assert!(!corpus.is_empty(), "load generator needs at least one image");
     let start = Instant::now();
     let mut base = 0.0f64; // absolute end of the previous phase
     let mut submitted: Vec<(usize, Result<Pending, ServeError>)> = Vec::new();
     for (k, phase) in phases.iter().enumerate() {
-        let schedule = arrival_schedule(
-            corpus.len(),
-            phase.requests,
-            phase.offered_img_s,
-            seed.wrapping_add((k as u64).wrapping_mul(0x9E3779B97F4A7C15)),
-        );
+        let schedule =
+            profile_schedule(corpus.len(), phase.requests, &phase.profile, phase_seed(seed, k));
         let mut last = base;
         for (at, idx) in schedule {
             let due = Duration::from_secs_f64(base + at);
@@ -276,5 +389,72 @@ mod tests {
             assert!(w[1].0 >= w[0].0);
         }
         assert!(s.iter().all(|&(_, i)| i < 8));
+    }
+
+    #[test]
+    fn load_profiles_shape_the_rate() {
+        let ramp = LoadProfile::Ramp { from_img_s: 100.0, to_img_s: 300.0 };
+        assert_eq!(ramp.rate_at(0, 101), 100.0);
+        assert_eq!(ramp.rate_at(100, 101), 300.0);
+        assert_eq!(ramp.rate_at(50, 101), 200.0);
+        assert_eq!(ramp.peak_img_s(), 300.0);
+        let spike = LoadProfile::Spike {
+            base_img_s: 100.0,
+            spike_img_s: 1000.0,
+            start_frac: 0.4,
+            end_frac: 0.6,
+        };
+        assert_eq!(spike.rate_at(0, 101), 100.0);
+        assert_eq!(spike.rate_at(50, 101), 1000.0);
+        assert_eq!(spike.rate_at(99, 101), 100.0);
+        let bursts =
+            LoadProfile::Bursts { base_img_s: 100.0, burst_img_s: 800.0, every: 10, len: 3 };
+        assert_eq!(bursts.rate_at(0, 101), 800.0);
+        assert_eq!(bursts.rate_at(2, 101), 800.0);
+        assert_eq!(bursts.rate_at(3, 101), 100.0);
+        assert_eq!(bursts.rate_at(12, 101), 800.0);
+        assert_eq!(bursts.peak_img_s(), 800.0);
+        // Degenerate single-arrival phase uses frac 0.
+        assert_eq!(ramp.rate_at(0, 1), 100.0);
+    }
+
+    #[test]
+    fn profile_schedule_is_deterministic_and_matches_constant() {
+        // Constant profile reproduces arrival_schedule exactly (same rng
+        // stream) — the serve benches' pinned schedules are unchanged.
+        let a = arrival_schedule(16, 100, 500.0, 0xA1);
+        let b = profile_schedule(16, 100, &LoadProfile::Constant { img_s: 500.0 }, 0xA1);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.0.to_bits() == y.0.to_bits() && x.1 == y.1);
+        }
+        // A spike compresses arrivals inside its window: the spiked
+        // schedule finishes earlier than the flat one at the base rate.
+        let s = profile_schedule(
+            16,
+            100,
+            &LoadProfile::Spike {
+                base_img_s: 500.0,
+                spike_img_s: 5000.0,
+                start_frac: 0.2,
+                end_frac: 0.8,
+            },
+            0xA1,
+        );
+        assert!(s.last().unwrap().0 < a.last().unwrap().0);
+        // Bit-identical across runs.
+        let s2 = profile_schedule(
+            16,
+            100,
+            &LoadProfile::Spike {
+                base_img_s: 500.0,
+                spike_img_s: 5000.0,
+                start_frac: 0.2,
+                end_frac: 0.8,
+            },
+            0xA1,
+        );
+        for (x, y) in s.iter().zip(&s2) {
+            assert!(x.0.to_bits() == y.0.to_bits() && x.1 == y.1);
+        }
     }
 }

@@ -452,3 +452,150 @@ fn apply_resize(
     });
     true
 }
+
+/// The fleet's health just before a fault: the bar recovery is measured
+/// against. Captured by the scenario engine one event before the
+/// injection fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryEnvelope {
+    /// Admitted-not-dispatched depth at capture time.
+    pub queue_depth: u64,
+    /// Fleet p99 over the recovery tail at capture time (ms).
+    pub p99_ms: f64,
+    /// Absolute p99 slack (ms) added to the envelope. The caller sets
+    /// it to its service granularity — the scenario engine uses a
+    /// couple of worst-case batch times, so a fleet whose quantiles are
+    /// inherently steppy (p99 over a short tail is the max sample, and
+    /// every latency is a whole number of batch quanta) is not asked to
+    /// land on an unreachable sub-quantum bar.
+    pub p99_slack_ms: f64,
+}
+
+/// Measures recovery time for one injected fault: the time from the
+/// fault instant until queue pressure AND windowed p99 are both back
+/// under their pre-fault envelope (with a small tolerance — see
+/// [`RecoveryTracker::observe`]). A fault the fleet absorbs without
+/// ever breaching its envelope recovers in zero time; a fault the fleet
+/// never re-absorbs yields `None`, which the scenario verdict turns
+/// into a failed recovery assertion.
+#[derive(Debug, Clone)]
+pub struct RecoveryTracker {
+    fault_nanos: u64,
+    env: RecoveryEnvelope,
+    breached: bool,
+    recovered_nanos: Option<u64>,
+}
+
+impl RecoveryTracker {
+    /// Start tracking a fault injected at `fault_nanos` (on the metrics
+    /// clock) against the pre-fault `envelope`.
+    pub fn new(fault_nanos: u64, envelope: RecoveryEnvelope) -> RecoveryTracker {
+        RecoveryTracker {
+            fault_nanos,
+            env: envelope,
+            breached: false,
+            recovered_nanos: None,
+        }
+    }
+
+    /// Whether `queue_depth` / `p99_ms` are back under the envelope.
+    /// Tolerances: the queue bar is at least 1 (an envelope captured at
+    /// an idle instant must not demand a permanently empty queue), and
+    /// the p99 bar is the envelope +25% or + the envelope's absolute
+    /// slack, whichever is larger (quantiles over small tails are
+    /// steppy — see [`RecoveryEnvelope::p99_slack_ms`]).
+    fn under(&self, queue_depth: u64, p99_ms: f64) -> bool {
+        let q_bar = self.env.queue_depth.max(1);
+        let p_bar = (self.env.p99_ms * 1.25).max(self.env.p99_ms + self.env.p99_slack_ms);
+        queue_depth <= q_bar && p99_ms <= p_bar
+    }
+
+    /// Feed one observation (after any simulation event / control tick).
+    /// The first observation *over* the envelope marks a breach; the
+    /// first observation back under it after a breach marks recovery.
+    /// Observations after recovery are ignored — recovery time is the
+    /// first return to the envelope, not the last.
+    pub fn observe(&mut self, now_nanos: u64, queue_depth: u64, p99_ms: f64) {
+        if self.recovered_nanos.is_some() || now_nanos < self.fault_nanos {
+            return;
+        }
+        if self.under(queue_depth, p99_ms) {
+            if self.breached {
+                self.recovered_nanos = Some(now_nanos);
+            }
+        } else {
+            self.breached = true;
+        }
+    }
+
+    /// End of run: a fault whose envelope was never breached was
+    /// absorbed outright — recovery time zero. A breached-and-never-
+    /// recovered fault stays `None`.
+    pub fn finish(&mut self) {
+        if !self.breached && self.recovered_nanos.is_none() {
+            self.recovered_nanos = Some(self.fault_nanos);
+        }
+    }
+
+    /// Milliseconds from the fault instant to recovery, if recovered.
+    pub fn recovery_ms(&self) -> Option<f64> {
+        self.recovered_nanos.map(|n| n.saturating_sub(self.fault_nanos) as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod recovery_tests {
+    use super::*;
+
+    const MS: u64 = 1_000_000;
+
+    #[test]
+    fn breach_then_recover_measures_the_gap() {
+        let env = RecoveryEnvelope { queue_depth: 2, p99_ms: 4.0, p99_slack_ms: 0.25 };
+        let mut t = RecoveryTracker::new(100 * MS, env);
+        // Pre-fault observations are ignored.
+        t.observe(50 * MS, 60, 50.0);
+        // Queue blows past the envelope after the fault.
+        t.observe(110 * MS, 40, 4.0);
+        // Still over (p99 this time).
+        t.observe(120 * MS, 1, 9.0);
+        // Back under both bars: recovered at 150 ms.
+        t.observe(150 * MS, 2, 4.9);
+        // Later wobble does not move the recovery point.
+        t.observe(200 * MS, 50, 50.0);
+        t.finish();
+        assert_eq!(t.recovery_ms(), Some(50.0));
+    }
+
+    #[test]
+    fn absorbed_fault_recovers_in_zero_time() {
+        let env = RecoveryEnvelope { queue_depth: 3, p99_ms: 5.0, p99_slack_ms: 0.25 };
+        let mut t = RecoveryTracker::new(100 * MS, env);
+        // Never over the envelope (tolerances included).
+        t.observe(110 * MS, 3, 6.0); // 6.0 <= 5.0 * 1.25
+        t.observe(150 * MS, 1, 4.0);
+        t.finish();
+        assert_eq!(t.recovery_ms(), Some(0.0));
+    }
+
+    #[test]
+    fn unrecovered_fault_stays_none() {
+        let env = RecoveryEnvelope { queue_depth: 1, p99_ms: 2.0, p99_slack_ms: 0.25 };
+        let mut t = RecoveryTracker::new(100 * MS, env);
+        t.observe(110 * MS, 64, 80.0);
+        t.observe(400 * MS, 64, 120.0);
+        t.finish();
+        assert_eq!(t.recovery_ms(), None);
+    }
+
+    #[test]
+    fn idle_envelope_tolerates_one_queued_request() {
+        // Envelope captured at a perfectly idle instant: queue bar
+        // floors at 1 so a single in-queue request is not a breach.
+        let env = RecoveryEnvelope { queue_depth: 0, p99_ms: 0.0, p99_slack_ms: 0.25 };
+        let mut t = RecoveryTracker::new(0, env);
+        t.observe(10 * MS, 1, 0.2); // within both floors
+        t.finish();
+        assert_eq!(t.recovery_ms(), Some(0.0));
+    }
+}

@@ -1,0 +1,1381 @@
+//! The deterministic scenario harness (`acf serve --scenario`).
+//!
+//! A *scenario* is a JSON-described sequence of phases, each combining a
+//! [`LoadSpec`] (diurnal ramps, flash-crowd spikes, adversarial
+//! micro-bursts — lowered to [`LoadProfile`]s), scheduled [`FaultSpec`]
+//! injections (replica death, whole-group loss, latency degradation),
+//! and per-phase pass/fail assertions (max shed %, p99 ceiling,
+//! recovery time, zero admitted-request drops). The CLI runs one with
+//! `acf serve --scenario scenarios/flash_crowd.json --seed 7`.
+//!
+//! **Why a virtual-time engine.** The acceptance contract is *byte-
+//! identical verdict reports* for the same scenario file + seed —
+//! across runs and across machines. Wall-clock threads cannot give that
+//! (dispatch interleavings and measured latencies jitter), so the
+//! engine is a single-threaded discrete-event simulation over the
+//! *modeled* fleet: replicas serve at their plan's `images_per_sec`
+//! (the planner's figure, derived from cycle-exact layer IPs), time is
+//! a [`Clock::manual`], and arrivals come from the same
+//! [`profile_schedule`] a real serve would draw. This mirrors the
+//! repo's modeled-vs-measured bench split: modeled numbers gate CI,
+//! measured numbers ride along as report-only. The *real*
+//! [`super::Server`] carries the same fault surface
+//! ([`super::Server::kill_replica`], [`super::Server::kill_group`],
+//! [`super::Server::inject_latency`]) and is exercised qualitatively by
+//! the integration tests; the scenario verdict is the deterministic,
+//! machine-independent artifact.
+//!
+//! **Scale-free assertions.** Load is written in multiples of the
+//! fleet's modeled throughput, and the recovery signal is the p99 over
+//! the last `recovery_tail` *completions* (not a time window) with a
+//! couple of worst-case batch times of absolute slack folded into the
+//! envelope — so one scenario file means the same thing on a fleet
+//! serving 100 img/s and one serving 100 000, and quick mode shrinks
+//! request counts without distorting what "recovered" means.
+//!
+//! Everything downstream of the event loop reuses the production
+//! types: [`FleetMetrics`] (latency reservoirs, tail/range cuts, fault
+//! timeline), [`RecoveryTracker`] (the recovery-time definition), and
+//! the [`crate::trace`] tracks — so a failing scenario exports a Chrome
+//! trace whose fault instants sit on the same control tracks a live
+//! serve would use.
+
+use super::fault::{FaultEvent, FaultEventKind, FaultKind, FaultSpec};
+use super::metrics::FleetMetrics;
+use super::rebalance::{RecoveryEnvelope, RecoveryTracker};
+use super::{phase_seed, profile_schedule, FleetPlan, LoadProfile};
+use crate::trace::{self, Clock, Tracer};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// One phase's load shape, in multiples of the fleet's *modeled*
+/// throughput — scenarios are written against capacity, not absolute
+/// rates, so one file exercises any fleet composition the same way.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadSpec {
+    Constant { rate_x: f64 },
+    Ramp { from_x: f64, to_x: f64 },
+    Spike { base_x: f64, spike_x: f64, start_frac: f64, end_frac: f64 },
+    Bursts { base_x: f64, burst_x: f64, every: usize, len: usize },
+}
+
+impl LoadSpec {
+    /// Resolve the relative shape against a concrete modeled fleet rate.
+    pub fn resolve(&self, fleet_img_s: f64) -> LoadProfile {
+        let r = fleet_img_s;
+        match *self {
+            LoadSpec::Constant { rate_x } => LoadProfile::Constant { img_s: rate_x * r },
+            LoadSpec::Ramp { from_x, to_x } => {
+                LoadProfile::Ramp { from_img_s: from_x * r, to_img_s: to_x * r }
+            }
+            LoadSpec::Spike { base_x, spike_x, start_frac, end_frac } => LoadProfile::Spike {
+                base_img_s: base_x * r,
+                spike_img_s: spike_x * r,
+                start_frac,
+                end_frac,
+            },
+            LoadSpec::Bursts { base_x, burst_x, every, len } => LoadProfile::Bursts {
+                base_img_s: base_x * r,
+                burst_img_s: burst_x * r,
+                every,
+                len,
+            },
+        }
+    }
+}
+
+/// A phase's pass/fail bars. Absent bars are not checked; `zero_drops`
+/// defaults to *on* — an admitted request silently vanishing is the one
+/// failure mode no scenario should ever tolerate implicitly.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseAsserts {
+    /// Max % of this phase's arrivals shed at admission.
+    pub max_shed_pct: Option<f64>,
+    /// Max fleet p99 (ms) over completions inside the phase's window.
+    pub p99_ms_max: Option<f64>,
+    /// Max recovery time (ms) for every fault injected in this phase.
+    pub recovery_ms_max: Option<f64>,
+    /// Admitted requests of this phase must all complete (default true).
+    pub zero_drops: bool,
+}
+
+/// One scenario phase: a load profile, scheduled faults, assertions.
+#[derive(Debug, Clone)]
+pub struct ScenarioPhase {
+    pub name: String,
+    pub requests: usize,
+    /// Optional explicit start (seconds from run start). Must not fall
+    /// before the previous phase's arrivals end; omitted = back-to-back.
+    pub start_s: Option<f64>,
+    pub load: LoadSpec,
+    pub faults: Vec<FaultSpec>,
+    pub asserts: PhaseAsserts,
+}
+
+/// A parsed scenario file.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    /// Fleet spec string (`"zcu104:2,zu5ev"`) resolved by the CLI
+    /// against the device catalog.
+    pub devices: String,
+    /// Model name (resolved by the CLI against the model registry).
+    pub model: String,
+    pub queue_depth: usize,
+    pub max_batch: usize,
+    /// Completion-count tail the recovery envelope and the recovery
+    /// p99 observations are measured over. Counting completions (not
+    /// wall time) keeps the signal identical across fleet speeds and
+    /// quick-mode request scaling. Default 64.
+    pub recovery_tail: usize,
+    pub phases: Vec<ScenarioPhase>,
+}
+
+fn bad(msg: impl Into<String>) -> String {
+    msg.into()
+}
+
+impl Scenario {
+    /// Parse a scenario from JSON source (see DESIGN.md §Fault model &
+    /// scenario schema for the grammar). Errors name the offending
+    /// field; a malformed document fails with the JSON parser's
+    /// byte-position error.
+    #[allow(clippy::should_implement_trait)] // inherent for call-site clarity
+    pub fn from_str(src: &str) -> Result<Scenario, String> {
+        let v = Json::parse(src).map_err(|e| format!("scenario JSON: {e}"))?;
+        Scenario::parse(&v)
+    }
+
+    /// Parse a scenario from an already-parsed JSON document.
+    pub fn parse(v: &Json) -> Result<Scenario, String> {
+        let name = v.get("name").and_then(Json::as_str).map_err(|e| bad(format!("name: {e}")))?;
+        let description =
+            v.get_str_or("description", "").map_err(|e| bad(format!("description: {e}")))?;
+        let devices =
+            v.get("devices").and_then(Json::as_str).map_err(|e| bad(format!("devices: {e}")))?;
+        let model = v.get_str_or("model", "lenet-tiny").map_err(|e| bad(format!("model: {e}")))?;
+        let queue_depth =
+            v.get_usize_or("queue_depth", 64).map_err(|e| bad(format!("queue_depth: {e}")))?;
+        let max_batch =
+            v.get_usize_or("max_batch", 8).map_err(|e| bad(format!("max_batch: {e}")))?;
+        let recovery_tail =
+            v.get_usize_or("recovery_tail", 64).map_err(|e| bad(format!("recovery_tail: {e}")))?;
+        if recovery_tail == 0 {
+            return Err(bad("recovery_tail must be at least 1"));
+        }
+        let phases_v =
+            v.get("phases").and_then(Json::as_arr).map_err(|e| bad(format!("phases: {e}")))?;
+        if phases_v.is_empty() {
+            return Err(bad("a scenario needs at least one phase"));
+        }
+        let mut phases = Vec::with_capacity(phases_v.len());
+        let mut last_start: Option<f64> = None;
+        for (i, pv) in phases_v.iter().enumerate() {
+            let phase = parse_phase(pv, i)?;
+            if let (Some(prev), Some(cur)) = (last_start, phase.start_s) {
+                if cur <= prev {
+                    return Err(bad(format!(
+                        "phase '{}': overlapping phases — start_s {cur} is not after the \
+                         previous phase's start_s {prev}",
+                        phase.name
+                    )));
+                }
+            }
+            if phase.start_s.is_some() {
+                last_start = phase.start_s;
+            }
+            phases.push(phase);
+        }
+        Ok(Scenario {
+            name: name.to_string(),
+            description,
+            devices: devices.to_string(),
+            model,
+            queue_depth: queue_depth.max(1),
+            max_batch: max_batch.max(1),
+            recovery_tail,
+            phases,
+        })
+    }
+}
+
+fn parse_phase(v: &Json, idx: usize) -> Result<ScenarioPhase, String> {
+    let name = v.get_str_or("name", &format!("phase{idx}")).map_err(|e| bad(e.to_string()))?;
+    let ctx = |e: &dyn std::fmt::Display, field: &str| format!("phase '{name}' {field}: {e}");
+    let requests = v.get("requests").and_then(Json::as_usize).map_err(|e| ctx(&e, "requests"))?;
+    if requests == 0 {
+        return Err(bad(format!("phase '{name}': zero requests")));
+    }
+    let start_s = match v.get_opt("start_s").map_err(|e| ctx(&e, "start_s"))? {
+        Some(j) => Some(j.as_f64().map_err(|e| ctx(&e, "start_s"))?),
+        None => None,
+    };
+    let load = parse_load(v.get("load").map_err(|e| ctx(&e, "load"))?, &name)?;
+    let mut faults = Vec::new();
+    if let Some(fv) = v.get_opt("faults").map_err(|e| ctx(&e, "faults"))? {
+        for f in fv.as_arr().map_err(|e| ctx(&e, "faults"))? {
+            faults.push(parse_fault(f, &name)?);
+        }
+    }
+    let asserts = match v.get_opt("asserts").map_err(|e| ctx(&e, "asserts"))? {
+        Some(a) => PhaseAsserts {
+            max_shed_pct: opt_f64(a, "max_shed_pct").map_err(|e| ctx(&e, "asserts"))?,
+            p99_ms_max: opt_f64(a, "p99_ms_max").map_err(|e| ctx(&e, "asserts"))?,
+            recovery_ms_max: opt_f64(a, "recovery_ms_max").map_err(|e| ctx(&e, "asserts"))?,
+            zero_drops: a.get_bool_or("zero_drops", true).map_err(|e| ctx(&e, "asserts"))?,
+        },
+        None => PhaseAsserts {
+            max_shed_pct: None,
+            p99_ms_max: None,
+            recovery_ms_max: None,
+            zero_drops: true,
+        },
+    };
+    Ok(ScenarioPhase { name, requests, start_s, load, faults, asserts })
+}
+
+fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>, crate::util::json::JsonError> {
+    v.get_opt(key)?.map(Json::as_f64).transpose()
+}
+
+fn parse_load(v: &Json, phase: &str) -> Result<LoadSpec, String> {
+    let ctx = |e: &dyn std::fmt::Display| format!("phase '{phase}' load: {e}");
+    let profile = v.get("profile").and_then(Json::as_str).map_err(|e| ctx(&e))?;
+    let spec = match profile {
+        "constant" => LoadSpec::Constant {
+            rate_x: v.get("rate_x").and_then(Json::as_f64).map_err(|e| ctx(&e))?,
+        },
+        "ramp" => LoadSpec::Ramp {
+            from_x: v.get("from_x").and_then(Json::as_f64).map_err(|e| ctx(&e))?,
+            to_x: v.get("to_x").and_then(Json::as_f64).map_err(|e| ctx(&e))?,
+        },
+        "spike" => LoadSpec::Spike {
+            base_x: v.get("base_x").and_then(Json::as_f64).map_err(|e| ctx(&e))?,
+            spike_x: v.get("spike_x").and_then(Json::as_f64).map_err(|e| ctx(&e))?,
+            start_frac: v.get_f64_or("start_frac", 0.4).map_err(|e| ctx(&e))?,
+            end_frac: v.get_f64_or("end_frac", 0.6).map_err(|e| ctx(&e))?,
+        },
+        "bursts" => LoadSpec::Bursts {
+            base_x: v.get("base_x").and_then(Json::as_f64).map_err(|e| ctx(&e))?,
+            burst_x: v.get("burst_x").and_then(Json::as_f64).map_err(|e| ctx(&e))?,
+            every: v.get_usize_or("every", 32).map_err(|e| ctx(&e))?,
+            len: v.get_usize_or("len", 8).map_err(|e| ctx(&e))?,
+        },
+        other => {
+            return Err(bad(format!(
+                "phase '{phase}' load: unknown load profile '{other}' \
+                 (expected constant|ramp|spike|bursts)"
+            )))
+        }
+    };
+    let rates_ok = match spec {
+        LoadSpec::Constant { rate_x } => rate_x > 0.0,
+        LoadSpec::Ramp { from_x, to_x } => from_x > 0.0 && to_x > 0.0,
+        LoadSpec::Spike { base_x, spike_x, start_frac, end_frac } => {
+            base_x > 0.0
+                && spike_x > 0.0
+                && (0.0..=1.0).contains(&start_frac)
+                && end_frac > start_frac
+        }
+        LoadSpec::Bursts { base_x, burst_x, every, .. } => {
+            base_x > 0.0 && burst_x > 0.0 && every > 0
+        }
+    };
+    if !rates_ok {
+        return Err(bad(format!(
+            "phase '{phase}' load: rates must be positive (and spike window well-formed)"
+        )));
+    }
+    Ok(spec)
+}
+
+fn parse_fault(v: &Json, phase: &str) -> Result<FaultSpec, String> {
+    let ctx = |e: &dyn std::fmt::Display| format!("phase '{phase}' fault: {e}");
+    let at_frac = v.get("at_frac").and_then(Json::as_f64).map_err(|e| ctx(&e))?;
+    if !(0.0..=1.0).contains(&at_frac) {
+        return Err(bad(format!("phase '{phase}' fault: at_frac {at_frac} outside [0, 1]")));
+    }
+    let kind_s = v.get("kind").and_then(Json::as_str).map_err(|e| ctx(&e))?;
+    let group = v.get_usize_or("group", 0).map_err(|e| ctx(&e))?;
+    let kind = match kind_s {
+        "replica_death" => FaultKind::ReplicaDeath { group },
+        "group_loss" => FaultKind::GroupLoss { group },
+        "latency_degrade" => {
+            let factor = v.get_f64_or("factor", 4.0).map_err(|e| ctx(&e))?;
+            let duration_ms = v.get_f64_or("duration_ms", 200.0).map_err(|e| ctx(&e))?;
+            let well_formed = factor > 1.0 && duration_ms > 0.0;
+            if !well_formed {
+                return Err(bad(format!(
+                    "phase '{phase}' fault: latency_degrade needs factor > 1 and \
+                     duration_ms > 0"
+                )));
+            }
+            FaultKind::LatencyDegrade {
+                group,
+                factor,
+                duration: Duration::from_secs_f64(duration_ms / 1e3),
+            }
+        }
+        other => {
+            return Err(bad(format!(
+                "phase '{phase}' fault: unknown fault kind '{other}' \
+                 (expected replica_death|group_loss|latency_degrade)"
+            )))
+        }
+    };
+    Ok(FaultSpec { at_frac, kind })
+}
+
+// ---------------------------------------------------------------------------
+// The virtual-time engine.
+
+/// Engine options.
+#[derive(Debug, Clone)]
+pub struct ScenarioOpts {
+    pub seed: u64,
+    /// Quick mode (CI): scale every phase's request count down (shape
+    /// preserved — profiles are functions of arrival *fraction*).
+    pub quick: bool,
+    /// Trace sink; phase spans land on [`trace::PID_SCENARIO`], fault
+    /// instants on the group control tracks.
+    pub tracer: Tracer,
+}
+
+impl Default for ScenarioOpts {
+    fn default() -> ScenarioOpts {
+        ScenarioOpts { seed: 7, quick: false, tracer: Tracer::off() }
+    }
+}
+
+/// One assertion's outcome inside a phase verdict.
+#[derive(Debug, Clone)]
+pub struct CheckResult {
+    pub name: String,
+    /// The configured bar.
+    pub limit: f64,
+    /// The observed value (`-1` for a never-recovered recovery check).
+    pub actual: f64,
+    pub passed: bool,
+}
+
+/// One phase's verdict.
+#[derive(Debug, Clone)]
+pub struct PhaseVerdict {
+    pub name: String,
+    /// Arrivals offered in this phase (after quick-mode scaling).
+    pub requests: usize,
+    pub accepted: u64,
+    pub shed: u64,
+    pub shed_pct: f64,
+    /// Admitted-in-phase requests that never completed (fleet loss).
+    pub drops: u64,
+    /// Completions inside the phase's time window (admissions from a
+    /// previous phase completing here count here — completion-time
+    /// attribution, matching the latency reservoir's view).
+    pub completed: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub checks: Vec<CheckResult>,
+    pub passed: bool,
+}
+
+/// One injected fault's outcome.
+#[derive(Debug, Clone)]
+pub struct FaultOutcome {
+    /// Injection instant, ms from run start.
+    pub at_ms: f64,
+    /// Phase index the fault belonged to.
+    pub phase: usize,
+    /// Fault kind name (`replica_death` | `group_loss` | `latency_degrade`).
+    pub kind: String,
+    /// Target device group.
+    pub group: usize,
+    pub detail: String,
+    /// Recovery time in ms ([`RecoveryTracker`] semantics); `None` if
+    /// the fleet never returned under its pre-fault envelope.
+    pub recovery_ms: Option<f64>,
+    pub recovered: bool,
+}
+
+/// The full scenario verdict — what `acf serve --scenario` prints and
+/// what [`ScenarioReport::to_json`] serializes byte-identically for a
+/// given scenario + seed.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub seed: u64,
+    pub quick: bool,
+    /// Modeled fleet throughput the load multipliers resolved against.
+    pub fleet_img_s: f64,
+    pub phases: Vec<PhaseVerdict>,
+    pub faults: Vec<FaultOutcome>,
+    /// Total admitted-but-never-completed requests.
+    pub drops: u64,
+    /// Whether the fleet lost its last live replica at any point.
+    pub fleet_lost: bool,
+    pub passed: bool,
+}
+
+/// Round for the verdict JSON: three decimals is far above the noise
+/// floor of any modeled quantity and keeps the report byte-stable.
+fn r3(v: f64) -> f64 {
+    (v * 1e3).round() / 1e3
+}
+
+impl ScenarioReport {
+    /// Deterministic JSON (sorted keys via [`Json::dump`], all floats
+    /// rounded to 3 decimals): same scenario + seed ⇒ identical bytes.
+    pub fn to_json(&self) -> Json {
+        let phases: Vec<Json> = self
+            .phases
+            .iter()
+            .map(|p| {
+                let checks: Vec<Json> = p
+                    .checks
+                    .iter()
+                    .map(|c| {
+                        crate::util::json::obj([
+                            ("name", Json::Str(c.name.clone())),
+                            ("limit", Json::Num(r3(c.limit))),
+                            ("actual", Json::Num(r3(c.actual))),
+                            ("passed", Json::Bool(c.passed)),
+                        ])
+                    })
+                    .collect();
+                crate::util::json::obj([
+                    ("name", Json::Str(p.name.clone())),
+                    ("requests", Json::Num(p.requests as f64)),
+                    ("accepted", Json::Num(p.accepted as f64)),
+                    ("shed", Json::Num(p.shed as f64)),
+                    ("shed_pct", Json::Num(r3(p.shed_pct))),
+                    ("drops", Json::Num(p.drops as f64)),
+                    ("completed", Json::Num(p.completed as f64)),
+                    ("p50_ms", Json::Num(r3(p.p50_ms))),
+                    ("p99_ms", Json::Num(r3(p.p99_ms))),
+                    ("checks", Json::Arr(checks)),
+                    ("passed", Json::Bool(p.passed)),
+                ])
+            })
+            .collect();
+        let faults: Vec<Json> = self
+            .faults
+            .iter()
+            .map(|f| {
+                crate::util::json::obj([
+                    ("at_ms", Json::Num(r3(f.at_ms))),
+                    ("phase", Json::Num(f.phase as f64)),
+                    ("kind", Json::Str(f.kind.clone())),
+                    ("group", Json::Num(f.group as f64)),
+                    ("detail", Json::Str(f.detail.clone())),
+                    (
+                        "recovery_ms",
+                        f.recovery_ms.map(|v| Json::Num(r3(v))).unwrap_or(Json::Null),
+                    ),
+                    ("recovered", Json::Bool(f.recovered)),
+                ])
+            })
+            .collect();
+        crate::util::json::obj([
+            ("name", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("quick", Json::Bool(self.quick)),
+            ("fleet_img_s", Json::Num(r3(self.fleet_img_s))),
+            ("phases", Json::Arr(phases)),
+            ("faults", Json::Arr(faults)),
+            ("drops", Json::Num(self.drops as f64)),
+            ("fleet_lost", Json::Bool(self.fleet_lost)),
+            ("passed", Json::Bool(self.passed)),
+        ])
+    }
+}
+
+/// Quick-mode request scaling: a quarter of the configured count,
+/// floored so tiny phases keep enough arrivals to exercise their shape.
+pub fn quick_requests(requests: usize) -> usize {
+    (requests / 4).max(24).min(requests)
+}
+
+/// Run `scenario` against the modeled `fleet` plan. Deterministic for a
+/// given (scenario, fleet, seed): the engine is a single-threaded
+/// discrete-event simulation in virtual time — see the module docs.
+pub fn run_scenario(
+    scenario: &Scenario,
+    fleet: &FleetPlan,
+    opts: &ScenarioOpts,
+) -> Result<ScenarioReport, String> {
+    let groups: Vec<SimGroup> = fleet
+        .groups
+        .iter()
+        .map(|g| SimGroup {
+            label: g.device.name.clone(),
+            replicas: g.replicas,
+            rate: g.per_replica.images_per_sec,
+        })
+        .collect();
+    run_modeled(scenario, &groups, fleet.fleet_img_s, opts)
+}
+
+/// One device group of the modeled fleet (decoupled from [`FleetPlan`]
+/// so the engine is unit-testable without running the planner).
+#[derive(Debug, Clone)]
+pub struct SimGroup {
+    pub label: String,
+    pub replicas: usize,
+    /// Modeled per-replica service rate (img/s).
+    pub rate: f64,
+}
+
+/// A replica of the simulated fleet.
+struct SimReplica {
+    group: usize,
+    /// Modeled service rate (img/s).
+    rate: f64,
+    /// Per-dispatch micro-batch clamp (scheduler scaling rule).
+    clamp: usize,
+    alive: bool,
+    /// When the in-flight batch completes (`None` = idle).
+    busy_until: Option<u64>,
+    /// Admission timestamps of the in-flight batch's requests.
+    batch: Vec<u64>,
+    /// When the in-flight batch was dispatched.
+    batch_start: u64,
+    /// Latency-degradation state: service times multiply by
+    /// `degrade_factor` until `degrade_until`.
+    degrade_factor: f64,
+    degrade_until: Option<u64>,
+}
+
+/// Event classes, in tie-break priority order at equal timestamps:
+/// completions free capacity before new work lands; restores and faults
+/// apply before the arrival that observes them.
+const EV_COMPLETE: u8 = 0;
+const EV_RESTORE: u8 = 1;
+const EV_FAULT: u8 = 2;
+const EV_ARRIVAL: u8 = 3;
+
+struct ScheduledFault {
+    at_nanos: u64,
+    phase: usize,
+    kind: FaultKind,
+}
+
+fn secs_to_nanos(s: f64) -> u64 {
+    (s * 1e9).round() as u64
+}
+
+/// The next event as `(time, class, key)` — the minimum over pending
+/// completions, degrade expiries, faults, and arrivals, with the class
+/// ordering breaking timestamp ties. `None` when the run is over.
+fn next_event(
+    reps: &[SimReplica],
+    faults: &[ScheduledFault],
+    next_fault: usize,
+    arrivals: &[(u64, usize)],
+    next_arrival: usize,
+) -> Option<(u64, u8, usize)> {
+    let mut next: Option<(u64, u8, usize)> = None;
+    let mut consider = |cand: (u64, u8, usize)| {
+        if next.map(|n| cand < n).unwrap_or(true) {
+            next = Some(cand);
+        }
+    };
+    for (ri, r) in reps.iter().enumerate() {
+        if let Some(t) = r.busy_until {
+            consider((t, EV_COMPLETE, ri));
+        }
+        if r.alive {
+            if let Some(t) = r.degrade_until {
+                consider((t, EV_RESTORE, ri));
+            }
+        }
+    }
+    if next_fault < faults.len() {
+        consider((faults[next_fault].at_nanos, EV_FAULT, next_fault));
+    }
+    if next_arrival < arrivals.len() {
+        consider((arrivals[next_arrival].0, EV_ARRIVAL, next_arrival));
+    }
+    next
+}
+
+/// Fill every idle live replica from the queue — fastest replica first
+/// (ties broken by lowest id), batch clamped per replica — mirroring
+/// the real scheduler's throughput-weighted pick.
+fn dispatch(
+    now: u64,
+    queue: &mut VecDeque<(u64, usize)>,
+    reps: &mut [SimReplica],
+    metrics: &FleetMetrics,
+) {
+    while !queue.is_empty() {
+        let mut best: Option<usize> = None;
+        for (ri, r) in reps.iter().enumerate() {
+            if !r.alive || r.busy_until.is_some() {
+                continue;
+            }
+            if best.map(|b| r.rate > reps[b].rate).unwrap_or(true) {
+                best = Some(ri);
+            }
+        }
+        let Some(ri) = best else { return };
+        let k = queue.len().min(reps[ri].clamp);
+        let batch: Vec<u64> = queue.drain(..k).map(|(admit, _phase)| admit).collect();
+        metrics.note_dispatched(ri, batch.len() as u64);
+        let eff_rate = reps[ri].rate / reps[ri].degrade_factor;
+        let service_s = batch.len() as f64 / eff_rate;
+        reps[ri].busy_until = Some(now + secs_to_nanos(service_s));
+        reps[ri].batch = batch;
+        reps[ri].batch_start = now;
+    }
+}
+
+/// Feed one observation to every active recovery tracker: current queue
+/// pressure plus the p99 over the last `tail` completions.
+fn observe_trackers(
+    now: u64,
+    queue_len: usize,
+    trackers: &mut [(usize, RecoveryTracker)],
+    metrics: &FleetMetrics,
+    tail: usize,
+) {
+    if trackers.is_empty() {
+        return;
+    }
+    let p99 = metrics.tail_stats(tail).p99_ms;
+    for (_, t) in trackers.iter_mut() {
+        t.observe(now, queue_len as u64, p99);
+    }
+}
+
+/// The engine proper, over synthetic groups (see [`run_scenario`]).
+pub fn run_modeled(
+    scenario: &Scenario,
+    groups: &[SimGroup],
+    fleet_img_s: f64,
+    opts: &ScenarioOpts,
+) -> Result<ScenarioReport, String> {
+    if groups.iter().map(|g| g.replicas).sum::<usize>() == 0 {
+        return Err("the fleet plan has no replicas".into());
+    }
+    let has_throughput = fleet_img_s > 0.0; // NaN-safe: NaN fails too
+    if !has_throughput {
+        return Err("the fleet plan has no modeled throughput".into());
+    }
+    for ph in &scenario.phases {
+        for f in &ph.faults {
+            if f.kind.group() >= groups.len() {
+                return Err(format!(
+                    "phase '{}': fault targets group {} but the fleet has {} groups",
+                    ph.name,
+                    f.kind.group(),
+                    groups.len()
+                ));
+            }
+        }
+    }
+
+    let clock = Clock::manual();
+    let labels: Vec<String> = groups.iter().map(|g| g.label.clone()).collect();
+    let mut replica_groups = Vec::new();
+    for (gi, g) in groups.iter().enumerate() {
+        replica_groups.extend(std::iter::repeat(gi).take(g.replicas));
+    }
+    let metrics = FleetMetrics::grouped_with(
+        replica_groups.clone(),
+        labels,
+        clock.clone(),
+        opts.tracer.clone(),
+    );
+
+    // Replica table, scheduler batch-clamp rule included.
+    let global_batch = scenario.max_batch.clamp(1, crate::netlist::sim::LANES);
+    let top_rate =
+        groups.iter().filter(|g| g.replicas > 0).map(|g| g.rate).fold(f64::MIN, f64::max);
+    let mut reps: Vec<SimReplica> = replica_groups
+        .iter()
+        .map(|&gi| {
+            let rate = groups[gi].rate.max(1e-9);
+            let clamp =
+                ((global_batch as f64 * rate / top_rate).ceil() as usize).clamp(1, global_batch);
+            SimReplica {
+                group: gi,
+                rate,
+                clamp,
+                alive: true,
+                busy_until: None,
+                batch: Vec::new(),
+                batch_start: 0,
+                degrade_factor: 1.0,
+                degrade_until: None,
+            }
+        })
+        .collect();
+    // Absolute p99 slack for recovery envelopes: a couple of worst-case
+    // batch times on the slowest replica. The modeled fleet's latency
+    // quantiles move in whole batch quanta, so a recovered fleet's tail
+    // p99 can legitimately sit a few quanta above an envelope captured
+    // at a calm instant — the slack keeps that from reading as
+    // "never recovered".
+    let min_rate = reps.iter().map(|r| r.rate).fold(f64::MAX, f64::min);
+    let p99_slack_ms = (2.0 * global_batch as f64 + 4.0) / min_rate * 1e3;
+
+    // Build the arrival timeline and the fault schedule, phase by phase.
+    let mut arrivals: Vec<(u64, usize)> = Vec::new(); // (due_nanos, phase)
+    let mut faults: Vec<ScheduledFault> = Vec::new();
+    let mut phase_start = Vec::with_capacity(scenario.phases.len());
+    let mut phase_requests = Vec::with_capacity(scenario.phases.len());
+    let mut base_s = 0.0f64;
+    for (k, ph) in scenario.phases.iter().enumerate() {
+        if let Some(s) = ph.start_s {
+            if s < base_s {
+                return Err(format!(
+                    "phase '{}': overlapping phases — start_s {s:.3} falls before the \
+                     previous phase's arrivals end at {base_s:.3}s",
+                    ph.name
+                ));
+            }
+            base_s = s;
+        }
+        let requests = if opts.quick { quick_requests(ph.requests) } else { ph.requests };
+        let profile = ph.load.resolve(fleet_img_s);
+        let schedule = profile_schedule(1, requests, &profile, phase_seed(opts.seed, k));
+        let span_s = schedule.last().map(|&(at, _)| at).unwrap_or(0.0);
+        phase_start.push(secs_to_nanos(base_s));
+        phase_requests.push(requests);
+        for &(at, _) in &schedule {
+            arrivals.push((secs_to_nanos(base_s + at), k));
+        }
+        for f in &ph.faults {
+            faults.push(ScheduledFault {
+                at_nanos: secs_to_nanos(base_s + f.at_frac * span_s),
+                phase: k,
+                kind: f.kind.clone(),
+            });
+        }
+        base_s += span_s;
+    }
+    faults.sort_by_key(|f| f.at_nanos);
+
+    // Per-phase books.
+    let n_phases = scenario.phases.len();
+    let mut accepted = vec![0u64; n_phases];
+    let mut shed = vec![0u64; n_phases];
+    let mut drops = vec![0u64; n_phases];
+
+    // Engine state.
+    let mut queue: VecDeque<(u64, usize)> = VecDeque::new(); // (admit_nanos, phase)
+    let mut next_arrival = 0usize;
+    let mut next_fault = 0usize;
+    let mut trackers: Vec<(usize, RecoveryTracker)> = Vec::new(); // (outcome idx, tracker)
+    let mut outcomes: Vec<FaultOutcome> = Vec::new();
+
+    while let Some((t, class, key)) =
+        next_event(&reps, &faults, next_fault, &arrivals, next_arrival)
+    {
+        let now = clock.now_nanos();
+        if t > now {
+            clock.advance(Duration::from_nanos(t - now));
+        }
+        let now = clock.now_nanos();
+
+        match class {
+            EV_COMPLETE => {
+                let ri = key;
+                let n = reps[ri].batch.len() as u64;
+                let batch = std::mem::take(&mut reps[ri].batch);
+                for admit in batch {
+                    metrics.note_completed(ri, Duration::from_nanos(now.saturating_sub(admit)));
+                }
+                metrics
+                    .note_replica_batch(ri, n, Duration::from_nanos(now - reps[ri].batch_start));
+                reps[ri].busy_until = None;
+                if !reps[ri].alive {
+                    // A killed replica's in-flight batch just finished:
+                    // its drain is complete.
+                    metrics.note_drained(reps[ri].group);
+                } else {
+                    dispatch(now, &mut queue, &mut reps, &metrics);
+                }
+            }
+            EV_RESTORE => {
+                let ri = key;
+                reps[ri].degrade_until = None;
+                reps[ri].degrade_factor = 1.0;
+                metrics.note_fault(FaultEvent {
+                    at_secs: 0.0,
+                    kind: FaultEventKind::LatencyRestore,
+                    group: Some(reps[ri].group),
+                    replica: Some(ri),
+                    detail: "degradation lifted".into(),
+                });
+            }
+            EV_FAULT => {
+                next_fault += 1;
+                // Pre-fault envelope, captured immediately before the
+                // injection mutates the fleet.
+                let env = RecoveryEnvelope {
+                    queue_depth: queue.len() as u64,
+                    p99_ms: metrics.tail_stats(scenario.recovery_tail).p99_ms,
+                    p99_slack_ms,
+                };
+                let f = &faults[key];
+                let detail = apply_fault(now, f, &mut reps, &metrics);
+                trackers.push((outcomes.len(), RecoveryTracker::new(now, env)));
+                outcomes.push(FaultOutcome {
+                    at_ms: now as f64 / 1e6,
+                    phase: f.phase,
+                    kind: f.kind.name().to_string(),
+                    group: f.kind.group(),
+                    detail,
+                    recovery_ms: None,
+                    recovered: false,
+                });
+                // No dispatch here: a fault only ever removes or slows
+                // capacity — it cannot free an idle slot.
+            }
+            EV_ARRIVAL => {
+                let (admit, ph) = arrivals[key];
+                next_arrival += 1;
+                if queue.len() >= scenario.queue_depth {
+                    metrics.note_rejected();
+                    shed[ph] += 1;
+                } else {
+                    metrics.note_accepted();
+                    accepted[ph] += 1;
+                    queue.push_back((admit, ph));
+                    dispatch(now, &mut queue, &mut reps, &metrics);
+                }
+            }
+            _ => unreachable!(),
+        }
+        observe_trackers(now, queue.len(), &mut trackers, &metrics, scenario.recovery_tail);
+
+        // No live replicas and nothing in flight: the queue can never
+        // drain again. Resolve the rest of the arrival schedule through
+        // the admission books (the frozen queue still sheds once full)
+        // and stop simulating.
+        if reps.iter().all(|r| !r.alive && r.busy_until.is_none()) {
+            while next_arrival < arrivals.len() {
+                let (admit, ph) = arrivals[next_arrival];
+                next_arrival += 1;
+                if queue.len() >= scenario.queue_depth {
+                    metrics.note_rejected();
+                    shed[ph] += 1;
+                } else {
+                    metrics.note_accepted();
+                    accepted[ph] += 1;
+                    queue.push_back((admit, ph));
+                }
+            }
+            next_fault = faults.len();
+            break;
+        }
+    }
+
+    // End of run: whatever is still queued was admitted and will never
+    // complete — a drop, the cardinal sin. Attribute by arrival phase.
+    let leftover = queue.len() as u64;
+    for (_, ph) in queue.drain(..) {
+        drops[ph] += 1;
+        metrics.note_failed();
+    }
+    if leftover > 0 {
+        metrics.note_abandoned(leftover);
+    }
+    for (oi, tr) in trackers.iter_mut() {
+        tr.finish();
+        outcomes[*oi].recovery_ms = tr.recovery_ms();
+        outcomes[*oi].recovered = tr.recovery_ms().is_some();
+    }
+
+    // Phase spans on the scenario track (arrival windows).
+    if opts.tracer.on() {
+        for (k, ph) in scenario.phases.iter().enumerate() {
+            let end = phase_start.get(k + 1).copied().unwrap_or_else(|| clock.now_nanos());
+            opts.tracer.span(
+                ph.name.clone(),
+                "scenario",
+                trace::PID_SCENARIO,
+                0,
+                phase_start[k],
+                end,
+                Vec::new(),
+            );
+        }
+    }
+
+    // Verdicts.
+    let end_nanos = clock.now_nanos();
+    let mut verdicts = Vec::with_capacity(n_phases);
+    let mut all_passed = true;
+    for (k, ph) in scenario.phases.iter().enumerate() {
+        let from = phase_start[k];
+        let to = phase_start.get(k + 1).copied().unwrap_or(end_nanos.saturating_add(1));
+        let stats = metrics.range_stats(from, to);
+        let offered = phase_requests[k] as u64;
+        let shed_pct = if offered > 0 { shed[k] as f64 / offered as f64 * 100.0 } else { 0.0 };
+        let mut checks = Vec::new();
+        if let Some(bar) = ph.asserts.max_shed_pct {
+            checks.push(CheckResult {
+                name: "max_shed_pct".into(),
+                limit: bar,
+                actual: shed_pct,
+                passed: shed_pct <= bar,
+            });
+        }
+        if let Some(bar) = ph.asserts.p99_ms_max {
+            checks.push(CheckResult {
+                name: "p99_ms_max".into(),
+                limit: bar,
+                actual: stats.p99_ms,
+                passed: stats.p99_ms <= bar,
+            });
+        }
+        if let Some(bar) = ph.asserts.recovery_ms_max {
+            let unrecovered = outcomes.iter().any(|o| o.phase == k && !o.recovered);
+            let worst = outcomes
+                .iter()
+                .filter(|o| o.phase == k)
+                .filter_map(|o| o.recovery_ms)
+                .fold(0.0f64, f64::max);
+            checks.push(CheckResult {
+                name: "recovery_ms_max".into(),
+                limit: bar,
+                actual: if unrecovered { -1.0 } else { worst },
+                passed: !unrecovered && worst <= bar,
+            });
+        }
+        if ph.asserts.zero_drops {
+            checks.push(CheckResult {
+                name: "zero_drops".into(),
+                limit: 0.0,
+                actual: drops[k] as f64,
+                passed: drops[k] == 0,
+            });
+        }
+        let passed = checks.iter().all(|c| c.passed);
+        all_passed &= passed;
+        verdicts.push(PhaseVerdict {
+            name: ph.name.clone(),
+            requests: phase_requests[k],
+            accepted: accepted[k],
+            shed: shed[k],
+            shed_pct,
+            drops: drops[k],
+            completed: stats.completed,
+            p50_ms: stats.p50_ms,
+            p99_ms: stats.p99_ms,
+            checks,
+            passed,
+        });
+    }
+    let fleet_lost = metrics.fleet_lost();
+    // Losing the whole fleet is a failed scenario even if every
+    // configured bar happens to pass (e.g. all drops attributed to a
+    // phase with zero_drops disabled).
+    let passed = all_passed && !fleet_lost;
+    Ok(ScenarioReport {
+        name: scenario.name.clone(),
+        seed: opts.seed,
+        quick: opts.quick,
+        fleet_img_s,
+        phases: verdicts,
+        faults: outcomes,
+        drops: drops.iter().sum(),
+        fleet_lost,
+        passed,
+    })
+}
+
+/// Apply one fault to the simulated fleet, recording its event(s) in
+/// the metrics fault timeline. Returns the human-readable detail for
+/// the [`FaultOutcome`].
+fn apply_fault(
+    now: u64,
+    f: &ScheduledFault,
+    reps: &mut [SimReplica],
+    metrics: &FleetMetrics,
+) -> String {
+    let group = f.kind.group();
+    // Deterministic victim: the highest-id live replica of the group.
+    let victim = |reps: &[SimReplica]| {
+        reps.iter()
+            .enumerate()
+            .rev()
+            .find(|(_, r)| r.alive && r.group == group)
+            .map(|(ri, _)| ri)
+    };
+    let kill = |ri: usize, reps: &mut [SimReplica], metrics: &FleetMetrics| {
+        reps[ri].alive = false;
+        reps[ri].degrade_until = None;
+        reps[ri].degrade_factor = 1.0;
+        metrics.note_retiring(ri);
+        metrics.note_fault(FaultEvent {
+            at_secs: 0.0,
+            kind: FaultEventKind::ReplicaDeath,
+            group: Some(group),
+            replica: Some(ri),
+            detail: "injected kill (no drain)".into(),
+        });
+        if reps[ri].busy_until.is_none() {
+            // Idle at death: nothing in flight, drain is trivially done.
+            metrics.note_drained(group);
+        }
+    };
+    let post_loss = |reps: &[SimReplica], metrics: &FleetMetrics| {
+        let survivors = reps.iter().filter(|r| r.alive).count();
+        if !reps.iter().any(|r| r.alive && r.group == group) {
+            metrics.note_fault(FaultEvent {
+                at_secs: 0.0,
+                kind: FaultEventKind::GroupLost,
+                group: Some(group),
+                replica: None,
+                detail: format!("group empty; {survivors} fleet survivors"),
+            });
+        }
+        if survivors == 0 {
+            metrics.note_fault(FaultEvent {
+                at_secs: 0.0,
+                kind: FaultEventKind::FleetLost,
+                group: None,
+                replica: None,
+                detail: "no live replicas remain".into(),
+            });
+        }
+        survivors
+    };
+    match f.kind {
+        FaultKind::ReplicaDeath { .. } => match victim(reps) {
+            Some(ri) => {
+                kill(ri, reps, metrics);
+                let survivors = post_loss(reps, metrics);
+                format!("killed replica {ri}; {survivors} fleet survivors")
+            }
+            None => "target group already empty; no-op".to_string(),
+        },
+        FaultKind::GroupLoss { .. } => {
+            let victims: Vec<usize> = reps
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.alive && r.group == group)
+                .map(|(ri, _)| ri)
+                .collect();
+            if victims.is_empty() {
+                return "target group already empty; no-op".to_string();
+            }
+            metrics.note_fault(FaultEvent {
+                at_secs: 0.0,
+                kind: FaultEventKind::GroupLoss,
+                group: Some(group),
+                replica: None,
+                detail: format!("killing {} replicas", victims.len()),
+            });
+            let n = victims.len();
+            for ri in victims {
+                kill(ri, reps, metrics);
+            }
+            let survivors = post_loss(reps, metrics);
+            format!("killed {n} replicas; {survivors} fleet survivors")
+        }
+        FaultKind::LatencyDegrade { factor, duration, .. } => match victim(reps) {
+            Some(ri) => {
+                reps[ri].degrade_factor = factor;
+                reps[ri].degrade_until = Some(now + duration.as_nanos() as u64);
+                metrics.note_fault(FaultEvent {
+                    at_secs: 0.0,
+                    kind: FaultEventKind::LatencyDegrade,
+                    group: Some(group),
+                    replica: Some(ri),
+                    detail: format!(
+                        "{factor:.1}x slower for {:.0}ms",
+                        duration.as_secs_f64() * 1e3
+                    ),
+                });
+                format!(
+                    "replica {ri} degraded {factor:.1}x for {:.0}ms",
+                    duration.as_secs_f64() * 1e3
+                )
+            }
+            None => "target group already empty; no-op".to_string(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SC: &str = r#"{
+        "name": "t",
+        "devices": "zcu104:2",
+        "model": "lenet-tiny",
+        "queue_depth": 16,
+        "max_batch": 4,
+        "recovery_tail": 16,
+        "phases": [
+            {"name": "warm", "requests": 64,
+             "load": {"profile": "constant", "rate_x": 0.4},
+             "asserts": {"max_shed_pct": 50.0}},
+            {"name": "crunch", "requests": 64,
+             "load": {"profile": "spike", "base_x": 0.3, "spike_x": 2.0,
+                      "start_frac": 0.3, "end_frac": 0.7},
+             "faults": [{"at_frac": 0.5, "kind": "replica_death", "group": 0}],
+             "asserts": {"recovery_ms_max": 60000.0}}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_a_full_scenario() {
+        let sc = Scenario::from_str(SC).unwrap();
+        assert_eq!(sc.name, "t");
+        assert_eq!(sc.devices, "zcu104:2");
+        assert_eq!(sc.queue_depth, 16);
+        assert_eq!(sc.recovery_tail, 16);
+        assert_eq!(sc.phases.len(), 2);
+        assert_eq!(sc.phases[0].load, LoadSpec::Constant { rate_x: 0.4 });
+        assert!(sc.phases[0].asserts.zero_drops, "zero_drops defaults on");
+        assert_eq!(sc.phases[0].asserts.max_shed_pct, Some(50.0));
+        assert_eq!(sc.phases[1].faults.len(), 1);
+        assert_eq!(sc.phases[1].faults[0].kind, FaultKind::ReplicaDeath { group: 0 });
+        assert_eq!(sc.phases[1].asserts.recovery_ms_max, Some(60000.0));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        // Malformed JSON surfaces the parser's error.
+        let e = Scenario::from_str("{not json").unwrap_err();
+        assert!(e.contains("scenario JSON"), "{e}");
+        // Unknown fault kind.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"zcu104","phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5},
+                 "faults":[{"at_frac":0.5,"kind":"meteor_strike"}]}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown fault kind 'meteor_strike'"), "{e}");
+        // Unknown load profile.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"zcu104","phases":[
+                {"name":"p","requests":8,"load":{"profile":"sawtooth","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("unknown load profile 'sawtooth'"), "{e}");
+        // at_frac out of range.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"zcu104","phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5},
+                 "faults":[{"at_frac":1.5,"kind":"replica_death"}]}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("at_frac 1.5 outside"), "{e}");
+        // Zero requests.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"zcu104","phases":[
+                {"name":"p","requests":0,"load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("zero requests"), "{e}");
+        // Overlapping explicit phase starts.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"zcu104","phases":[
+                {"name":"a","requests":8,"start_s":2.0,
+                 "load":{"profile":"constant","rate_x":0.5}},
+                {"name":"b","requests":8,"start_s":1.0,
+                 "load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("overlapping phases"), "{e}");
+        // Zero recovery tail.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"zcu104","recovery_tail":0,"phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("recovery_tail"), "{e}");
+        // No phases at all.
+        let e = Scenario::from_str(r#"{"name":"x","devices":"zcu104","phases":[]}"#).unwrap_err();
+        assert!(e.contains("at least one phase"), "{e}");
+    }
+
+    fn two_group_fleet() -> Vec<SimGroup> {
+        vec![
+            SimGroup { label: "fast".into(), replicas: 2, rate: 2000.0 },
+            SimGroup { label: "slow".into(), replicas: 1, rate: 800.0 },
+        ]
+    }
+
+    #[test]
+    fn engine_is_bit_deterministic() {
+        let sc = Scenario::from_str(SC).unwrap();
+        let groups = two_group_fleet();
+        let opts = ScenarioOpts { seed: 7, quick: false, tracer: Tracer::off() };
+        let a = run_modeled(&sc, &groups, 4800.0, &opts).unwrap();
+        let b = run_modeled(&sc, &groups, 4800.0, &opts).unwrap();
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+        // A different seed draws a different schedule (almost surely a
+        // different report — at minimum the fault lands elsewhere).
+        let c = run_modeled(
+            &sc,
+            &groups,
+            4800.0,
+            &ScenarioOpts { seed: 8, quick: false, tracer: Tracer::off() },
+        )
+        .unwrap();
+        assert_ne!(a.to_json().dump(), c.to_json().dump());
+    }
+
+    #[test]
+    fn underloaded_phase_completes_everything() {
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","queue_depth":32,"phases":[
+                {"name":"p","requests":200,
+                 "load":{"profile":"constant","rate_x":0.5},
+                 "asserts":{"max_shed_pct":0.0,"p99_ms_max":100.0}}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
+        assert!(r.passed, "{:?}", r.phases[0].checks);
+        assert_eq!(r.phases[0].accepted, 200);
+        assert_eq!(r.phases[0].shed, 0);
+        assert_eq!(r.phases[0].completed, 200);
+        assert_eq!(r.drops, 0);
+        assert!(!r.fleet_lost);
+        assert!(r.phases[0].p99_ms > 0.0);
+    }
+
+    #[test]
+    fn overload_sheds_instead_of_dropping() {
+        // 3x modeled capacity into a shallow queue: plenty of shed, but
+        // zero drops — admission control holds the line.
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","queue_depth":8,"phases":[
+                {"name":"p","requests":300,
+                 "load":{"profile":"constant","rate_x":3.0},
+                 "asserts":{"max_shed_pct":90.0}}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0 }];
+        let r = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap();
+        assert!(r.phases[0].shed > 0, "3x load must shed");
+        assert_eq!(r.drops, 0);
+        assert_eq!(r.phases[0].accepted + r.phases[0].shed, r.phases[0].requests as u64);
+        assert_eq!(r.phases[0].completed, r.phases[0].accepted);
+    }
+
+    #[test]
+    fn fleet_loss_fails_with_drops_not_a_panic() {
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","queue_depth":16,"phases":[
+                {"name":"p","requests":200,
+                 "load":{"profile":"constant","rate_x":0.8},
+                 "faults":[{"at_frac":0.5,"kind":"group_loss","group":0}]}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
+        assert!(!r.passed, "fleet loss must fail the scenario");
+        assert!(r.fleet_lost);
+        assert!(r.drops > 0, "queued work at fleet loss becomes drops");
+        // One injection recorded; the loss cascade (group_lost,
+        // fleet_lost) lives on the metrics fault timeline.
+        let kinds: Vec<&str> = r.faults.iter().map(|f| f.kind.as_str()).collect();
+        assert_eq!(kinds, vec!["group_loss"]);
+        assert!(!r.faults[0].recovered, "a dead fleet never recovers");
+        // The zero_drops check (default on) is the failing assertion.
+        let zd = r.phases[0].checks.iter().find(|c| c.name == "zero_drops").unwrap();
+        assert!(!zd.passed);
+    }
+
+    #[test]
+    fn replica_death_with_headroom_recovers() {
+        // Two replicas at 35% fleet load: killing one leaves the
+        // survivor at ~70% — the transient drains and the tail p99
+        // settles inside the envelope's batch-quantum slack.
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","queue_depth":64,
+                "recovery_tail":16,"phases":[
+                {"name":"p","requests":400,
+                 "load":{"profile":"constant","rate_x":0.35},
+                 "faults":[{"at_frac":0.5,"kind":"replica_death","group":0}],
+                 "asserts":{"recovery_ms_max":60000.0}}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
+        assert!(r.passed, "{:?} {:?}", r.phases[0].checks, r.faults);
+        assert_eq!(r.drops, 0);
+        assert!(r.faults[0].recovered);
+        assert!(r.faults[0].recovery_ms.unwrap() >= 0.0);
+        assert!(!r.fleet_lost);
+    }
+
+    #[test]
+    fn latency_degrade_restores_on_schedule() {
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","queue_depth":64,"phases":[
+                {"name":"p","requests":300,
+                 "load":{"profile":"constant","rate_x":0.5},
+                 "faults":[{"at_frac":0.3,"kind":"latency_degrade","group":0,
+                            "factor":6.0,"duration_ms":50.0}]}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
+        assert_eq!(r.faults.len(), 1);
+        assert_eq!(r.faults[0].kind, "latency_degrade");
+        assert_eq!(r.drops, 0);
+        assert!(!r.fleet_lost);
+    }
+
+    #[test]
+    fn quick_mode_scales_requests_down() {
+        assert_eq!(quick_requests(400), 100);
+        assert_eq!(quick_requests(100), 25);
+        assert_eq!(quick_requests(40), 24);
+        assert_eq!(quick_requests(10), 10, "never scales up");
+        let sc = Scenario::from_str(SC).unwrap();
+        let groups = two_group_fleet();
+        let r = run_modeled(
+            &sc,
+            &groups,
+            4800.0,
+            &ScenarioOpts { seed: 7, quick: true, tracer: Tracer::off() },
+        )
+        .unwrap();
+        assert!(r.quick);
+        assert_eq!(r.phases[0].requests, 24);
+    }
+
+    #[test]
+    fn fault_group_out_of_range_is_a_runtime_error() {
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5},
+                 "faults":[{"at_frac":0.5,"kind":"replica_death","group":9}]}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0 }];
+        let e = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap_err();
+        assert!(e.contains("targets group 9"), "{e}");
+    }
+
+    #[test]
+    fn runtime_overlap_check_catches_early_start_s() {
+        // Parses fine (start_s values increase) but phase b's explicit
+        // start lands inside phase a's arrival window at run time.
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d","phases":[
+                {"name":"a","requests":2000,
+                 "load":{"profile":"constant","rate_x":0.1}},
+                {"name":"b","requests":8,"start_s":0.001,
+                 "load":{"profile":"constant","rate_x":0.1}}]}"#,
+        )
+        .unwrap();
+        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0 }];
+        let e = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap_err();
+        assert!(e.contains("overlapping phases"), "{e}");
+    }
+}

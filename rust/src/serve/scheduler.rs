@@ -51,11 +51,13 @@
 //! — the admission-control design the real-time serving literature asks
 //! for.
 
+use super::fault::{FaultEvent, FaultEventKind, LatencyShim};
 use super::metrics::{FleetMetrics, FleetSnapshot};
 use super::{ServeConfig, ServeError};
 use crate::cnn::model::Model;
 use crate::coordinator::{validate_image, Deployment};
 use crate::trace::{self, ArgValue};
+use crate::util::sync::lock_ok;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -149,6 +151,9 @@ pub struct Server {
     /// Next request id (trace tid). Starts at 1 — tid 0 of the requests
     /// process is the control track shed instants land on.
     next_req: AtomicU64,
+    /// Per-replica synthetic latency injections (scenario faults),
+    /// consulted by every runner at the dispatch boundary.
+    degrade: Arc<LatencyShim>,
 }
 
 impl Server {
@@ -197,6 +202,7 @@ impl Server {
             queue_depth,
             drain_deadline: cfg.drain_deadline,
             next_req: AtomicU64::new(1),
+            degrade: Arc::new(LatencyShim::new()),
         };
         for (dep, group) in replicas.into_iter().zip(groups) {
             server.add_slot(dep, group);
@@ -277,7 +283,7 @@ impl Server {
                             // gauges, and the drain summary stay honest.
                             metrics.note_requeued(id, bounced.len() as u64);
                             let dead = {
-                                let mut slots = slots.lock().unwrap();
+                                let mut slots = lock_ok(&slots);
                                 let pos = slots.iter().position(|s| s.id == id);
                                 pos.map(|p| slots.remove(p))
                             };
@@ -295,7 +301,7 @@ impl Server {
             // Queue disconnected and drained; slot feeds stay open for
             // the shutdown path to close after this thread is joined.
         });
-        *server.dispatcher.lock().unwrap() = Some(handle);
+        *lock_ok(&server.dispatcher) = Some(handle);
         server
     }
 
@@ -323,17 +329,18 @@ impl Server {
         let (btx, brx) = mpsc::sync_channel::<Vec<Request>>(2);
         let runner_dep = Arc::clone(&dep);
         let metrics = Arc::clone(&self.metrics);
+        let shim = Arc::clone(&self.degrade);
         let handle =
-            std::thread::spawn(move || run_replica(id, group, &runner_dep, &brx, &metrics));
-        self.runners.lock().unwrap().push(Runner { id, dep, handle });
-        self.slots.lock().unwrap().push(Slot { id, group, weight, tx: btx });
+            std::thread::spawn(move || run_replica(id, group, &runner_dep, &brx, &metrics, &shim));
+        lock_ok(&self.runners).push(Runner { id, dep, handle });
+        lock_ok(&self.slots).push(Slot { id, group, weight, tx: btx });
         id
     }
 
     /// Bring a freshly deployed replica into dispatch rotation while the
     /// server keeps admitting. Returns its stable replica id.
     pub fn add_replica(&self, dep: Arc<Deployment>, group: usize) -> Result<usize, ServeError> {
-        if self.ingress.lock().unwrap().is_none() {
+        if lock_ok(&self.ingress).is_none() {
             return Err(ServeError::ShuttingDown);
         }
         Ok(self.add_slot(dep, group))
@@ -347,7 +354,7 @@ impl Server {
     /// last live replica cannot be retired.
     pub fn retire_replica(&self, replica: usize) -> Result<DrainReport, ServeError> {
         let slot = {
-            let mut slots = self.slots.lock().unwrap();
+            let mut slots = lock_ok(&self.slots);
             if slots.len() <= 1 {
                 return Err(ServeError::Rebalance(
                     "cannot retire the last live replica".into(),
@@ -368,6 +375,129 @@ impl Server {
         Ok(report)
     }
 
+    /// Fault injection: kill one replica *without* a drain wait. The slot
+    /// is unlisted exactly as in [`Server::retire_replica`] — queued
+    /// micro-batches still finish (admitted requests are never dropped by
+    /// a kill; what cannot be served reroutes or sheds at admission) —
+    /// but the caller gets control back immediately and a background
+    /// reaper absorbs the teardown. Unlike retirement, killing a group's
+    /// (or the fleet's) last replica is allowed: the outcome is recorded
+    /// as a [`FaultEventKind::GroupLost`] / [`FaultEventKind::FleetLost`]
+    /// event, traffic reroutes to any survivors, and a fleet with no
+    /// survivors degrades to the dispatcher's abandon path — a failed
+    /// scenario verdict, never a process abort.
+    pub fn kill_replica(&self, replica: usize) -> Result<(), ServeError> {
+        let slot = {
+            let mut slots = lock_ok(&self.slots);
+            let Some(pos) = slots.iter().position(|s| s.id == replica) else {
+                return Err(ServeError::Fault(format!(
+                    "replica {replica} is not in dispatch rotation"
+                )));
+            };
+            slots.remove(pos)
+        };
+        let group = slot.group;
+        self.metrics.note_retiring(replica);
+        self.degrade.clear(replica);
+        drop(slot); // closes the runner's feed once queued batches drain
+        self.metrics.note_fault(FaultEvent {
+            at_secs: 0.0,
+            kind: FaultEventKind::ReplicaDeath,
+            group: Some(group),
+            replica: Some(replica),
+            detail: "injected kill (no drain)".into(),
+        });
+        let live = self.live_counts();
+        let survivors: usize = live.iter().sum();
+        if live.get(group).copied() == Some(0) {
+            self.metrics.note_fault(FaultEvent {
+                at_secs: 0.0,
+                kind: FaultEventKind::GroupLost,
+                group: Some(group),
+                replica: None,
+                detail: format!("group empty; {survivors} fleet survivors"),
+            });
+        }
+        if survivors == 0 {
+            self.metrics.note_fault(FaultEvent {
+                at_secs: 0.0,
+                kind: FaultEventKind::FleetLost,
+                group: None,
+                replica: None,
+                detail: "no live replicas remain".into(),
+            });
+        }
+        // Reap off-thread: wait out the in-flight drain and tear the
+        // pipeline down without blocking the injector.
+        let runner = {
+            let mut runners = lock_ok(&self.runners);
+            runners.iter().position(|r| r.id == replica).map(|pos| runners.remove(pos))
+        };
+        let metrics = Arc::clone(&self.metrics);
+        let deadline = Instant::now() + self.drain_deadline;
+        std::thread::spawn(move || {
+            reap_runner(&metrics, runner, replica, group, deadline);
+        });
+        Ok(())
+    }
+
+    /// Fault injection: kill every live replica of `group` at once (a
+    /// board falling off the fabric). Returns how many replicas died.
+    pub fn kill_group(&self, group: usize) -> Result<usize, ServeError> {
+        let ids = self.replica_ids_of_group(group);
+        if ids.is_empty() {
+            return Err(ServeError::Fault(format!("group {group} has no live replicas")));
+        }
+        self.metrics.note_fault(FaultEvent {
+            at_secs: 0.0,
+            kind: FaultEventKind::GroupLoss,
+            group: Some(group),
+            replica: None,
+            detail: format!("killing {} replicas", ids.len()),
+        });
+        let n = ids.len();
+        for id in ids {
+            self.kill_replica(id)?;
+        }
+        Ok(n)
+    }
+
+    /// Fault injection: add `extra` synthetic delay per micro-batch on
+    /// `replica`, applied by its runner at the dispatch boundary — the
+    /// slowdown is visible to latency reservoirs, utilization windows,
+    /// and rebalance signals exactly as genuinely slow silicon would be.
+    pub fn inject_latency(&self, replica: usize, extra: Duration) -> Result<(), ServeError> {
+        let group = lock_ok(&self.slots).iter().find(|s| s.id == replica).map(|s| s.group);
+        let Some(group) = group else {
+            return Err(ServeError::Fault(format!(
+                "replica {replica} is not in dispatch rotation"
+            )));
+        };
+        self.degrade.inject(replica, extra);
+        self.metrics.note_fault(FaultEvent {
+            at_secs: 0.0,
+            kind: FaultEventKind::LatencyDegrade,
+            group: Some(group),
+            replica: Some(replica),
+            detail: format!("+{:.1}ms per batch", extra.as_secs_f64() * 1e3),
+        });
+        Ok(())
+    }
+
+    /// Lift a latency injection; a no-op if none is active on `replica`.
+    pub fn clear_latency(&self, replica: usize) {
+        if self.degrade.clear(replica) {
+            let group = lock_ok(&self.slots).iter().find(|s| s.id == replica).map(|s| s.group);
+            self.metrics.note_fault(FaultEvent {
+                at_secs: 0.0,
+                kind: FaultEventKind::LatencyRestore,
+                group,
+                replica: Some(replica),
+                detail: "degradation lifted".into(),
+            });
+        }
+    }
+
     /// Wait (until `deadline`) for `replica`'s in-flight work to drain,
     /// record the outcome in the per-group drain summary, and join or
     /// detach its runner. Shared by live retirement and shutdown. The
@@ -377,55 +507,16 @@ impl Server {
     /// server holds the drain open too.
     fn reap(&self, replica: usize, group: usize, deadline: Instant) -> DrainReport {
         let runner = {
-            let mut runners = self.runners.lock().unwrap();
+            let mut runners = lock_ok(&self.runners);
             runners.iter().position(|r| r.id == replica).map(|pos| runners.remove(pos))
         };
-        let pipeline_busy =
-            |r: &Option<Runner>| r.as_ref().map(|r| r.dep.in_flight() > 0).unwrap_or(false);
-        let mut leftover = self.metrics.load_of(replica);
-        while (leftover > 0 || pipeline_busy(&runner)) && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_micros(500));
-            leftover = self.metrics.load_of(replica);
-        }
-        // Also give the runner thread itself (and any one-shot pipeline
-        // work) until the deadline to wind down, so join below cannot
-        // block past it.
-        let finished = loop {
-            match &runner {
-                Some(r) if !r.handle.is_finished() => {
-                    if Instant::now() >= deadline {
-                        break false;
-                    }
-                    std::thread::sleep(Duration::from_micros(500));
-                }
-                _ => break true,
-            }
-        };
-        let drained = leftover == 0 && finished && !pipeline_busy(&runner);
-        if drained {
-            self.metrics.note_drained(group);
-            if let Some(r) = runner {
-                let _ = r.handle.join();
-                drop(r.dep); // pipeline teardown, after the drain
-            }
-        } else {
-            self.metrics.note_drain_timeout(group, leftover);
-            if let Some(r) = runner {
-                // Report-and-detach: a reaper thread absorbs the eventual
-                // teardown so a wedged replica cannot block the caller.
-                std::thread::spawn(move || {
-                    let _ = r.handle.join();
-                    drop(r.dep);
-                });
-            }
-        }
-        DrainReport { replica, group, drained, leftover }
+        reap_runner(&self.metrics, runner, replica, group, deadline)
     }
 
     /// Live replicas per device group (dispatch rotation view).
     pub fn live_counts(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.metrics.n_groups()];
-        for s in self.slots.lock().unwrap().iter() {
+        for s in lock_ok(&self.slots).iter() {
             if let Some(c) = counts.get_mut(s.group) {
                 *c += 1;
             }
@@ -436,10 +527,7 @@ impl Server {
     /// Replica ids currently in dispatch rotation for `group`, least
     /// loaded first (the retirement-candidate order).
     pub fn replica_ids_of_group(&self, group: usize) -> Vec<usize> {
-        let mut ids: Vec<usize> = self
-            .slots
-            .lock()
-            .unwrap()
+        let mut ids: Vec<usize> = lock_ok(&self.slots)
             .iter()
             .filter(|s| s.group == group)
             .map(|s| s.id)
@@ -502,7 +590,7 @@ impl Server {
     }
 
     fn sender(&self) -> Result<mpsc::SyncSender<Request>, ServeError> {
-        self.ingress.lock().unwrap().clone().ok_or(ServeError::ShuttingDown)
+        lock_ok(&self.ingress).clone().ok_or(ServeError::ShuttingDown)
     }
 
     /// The shared live metrics (snapshot any time).
@@ -521,14 +609,15 @@ impl Server {
     /// join all threads, and return the final fleet statistics.
     /// Idempotent — later calls return the same snapshot.
     pub fn shutdown(&self) -> FleetSnapshot {
-        let mut finished = self.finished.lock().unwrap();
+        let mut finished = lock_ok(&self.finished);
         if let Some(snap) = finished.as_ref() {
             return snap.clone();
         }
+        self.degrade.clear_all();
         // Dropping the ingress sender lets the dispatcher drain the queue
         // and exit.
-        *self.ingress.lock().unwrap() = None;
-        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+        *lock_ok(&self.ingress) = None;
+        if let Some(h) = lock_ok(&self.dispatcher).take() {
             let _ = h.join();
         }
         // Close every live feed, then hold all replicas to one shared
@@ -537,7 +626,7 @@ impl Server {
         // — a replica that cannot finish is reported, not silently
         // dropped, and cannot wedge the shutdown.
         let closing: Vec<(usize, usize)> = {
-            let mut slots = self.slots.lock().unwrap();
+            let mut slots = lock_ok(&self.slots);
             slots.drain(..).map(|s| (s.id, s.group)).collect()
         };
         let deadline = Instant::now() + self.drain_deadline;
@@ -545,9 +634,11 @@ impl Server {
             self.reap(id, group, deadline);
         }
         // Anything left in `runners` had no slot — runners whose death
-        // the dispatcher already accounted. Join the finished ones (they
-        // are done or nearly done), detach the rest to reaper threads.
-        for r in self.runners.lock().unwrap().drain(..) {
+        // the dispatcher already accounted, or kill-reaped replicas whose
+        // background reaper already removed them. Join the finished ones
+        // (they are done or nearly done), detach the rest to reaper
+        // threads.
+        for r in lock_ok(&self.runners).drain(..) {
             if r.handle.is_finished() {
                 let _ = r.handle.join();
                 drop(r.dep);
@@ -579,15 +670,76 @@ fn pick_slot(
     metrics: &FleetMetrics,
     global_batch: usize,
 ) -> Option<(usize, mpsc::SyncSender<Vec<Request>>, usize)> {
-    let slots = slots.lock().unwrap();
+    let slots = lock_ok(slots);
     let best = slots.iter().min_by(|a, b| {
         let da = (metrics.load_of(a.id) + 1) as f64 / a.weight;
         let db = (metrics.load_of(b.id) + 1) as f64 / b.weight;
-        da.partial_cmp(&db).expect("drain time is finite")
+        // Weights are clamped positive at registration, so drain times
+        // are finite; an Equal fallback keeps a hypothetical NaN from
+        // aborting the dispatcher mid-run.
+        da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
     })?;
     let top = slots.iter().map(|s| s.weight).fold(f64::MIN, f64::max);
     let cap = ((global_batch as f64 * best.weight / top).ceil() as usize).clamp(1, global_batch);
     Some((best.id, best.tx.clone(), cap))
+}
+
+/// Wait (until `deadline`) for `replica`'s in-flight work to drain,
+/// record the outcome in the per-group drain summary, and join or
+/// detach its runner. Shared by live retirement, shutdown, and the
+/// kill-path's background reaper (which is why this is a free function
+/// over the metrics handle, not a `Server` method). The drain condition
+/// covers both the scheduler's own dispatch counters AND the pipeline's
+/// job gauge ([`Deployment::in_flight`]), so a one-shot `infer_batch`
+/// caller sharing the replica outside the server holds the drain open
+/// too.
+fn reap_runner(
+    metrics: &FleetMetrics,
+    runner: Option<Runner>,
+    replica: usize,
+    group: usize,
+    deadline: Instant,
+) -> DrainReport {
+    let pipeline_busy =
+        |r: &Option<Runner>| r.as_ref().map(|r| r.dep.in_flight() > 0).unwrap_or(false);
+    let mut leftover = metrics.load_of(replica);
+    while (leftover > 0 || pipeline_busy(&runner)) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_micros(500));
+        leftover = metrics.load_of(replica);
+    }
+    // Also give the runner thread itself (and any one-shot pipeline
+    // work) until the deadline to wind down, so join below cannot
+    // block past it.
+    let finished = loop {
+        match &runner {
+            Some(r) if !r.handle.is_finished() => {
+                if Instant::now() >= deadline {
+                    break false;
+                }
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            _ => break true,
+        }
+    };
+    let drained = leftover == 0 && finished && !pipeline_busy(&runner);
+    if drained {
+        metrics.note_drained(group);
+        if let Some(r) = runner {
+            let _ = r.handle.join();
+            drop(r.dep); // pipeline teardown, after the drain
+        }
+    } else {
+        metrics.note_drain_timeout(group, leftover);
+        if let Some(r) = runner {
+            // Report-and-detach: a reaper thread absorbs the eventual
+            // teardown so a wedged replica cannot block the caller.
+            std::thread::spawn(move || {
+                let _ = r.handle.join();
+                drop(r.dep);
+            });
+        }
+    }
+    DrainReport { replica, group, drained, leftover }
 }
 
 /// What the runner keeps of a request while its image is inferring: the
@@ -613,11 +765,21 @@ fn run_replica(
     dep: &Deployment,
     brx: &mpsc::Receiver<Vec<Request>>,
     metrics: &FleetMetrics,
+    shim: &LatencyShim,
 ) {
     let clock = metrics.clock().clone();
     let tracer = metrics.tracer().clone();
     let (rpid, rtid) = (trace::pid_of_group(group), trace::tid_of_replica(ri));
     while let Ok(batch) = brx.recv() {
+        // Degradation shim at the dispatch boundary: an injected fault
+        // slows this replica down *before* the batch enters its
+        // pipeline, so the extra time lands in every request's measured
+        // latency and stretches the replica's effective service rate
+        // (fewer batches per second) — exactly how throttled silicon
+        // would present.
+        if let Some(extra) = shim.delay_of(ri) {
+            std::thread::sleep(extra);
+        }
         let n = batch.len() as u64;
         let mut images = Vec::with_capacity(batch.len());
         let mut meta = Vec::with_capacity(batch.len());

@@ -37,6 +37,11 @@ use crate::util::json::Json;
 
 /// Process id of the per-request span chains (tid = request id).
 pub const PID_REQUESTS: u64 = 1;
+/// Process id of the scenario harness's own track: one span per phase
+/// (tid 0), so fault instants on the group control tracks and shed
+/// instants on the requests track line up against the phase that
+/// produced them.
+pub const PID_SCENARIO: u64 = 2;
 /// Process ids of device groups start here (`pid_of_group`).
 pub const GROUP_PID_BASE: u64 = 10;
 /// Thread 0 of a group process: fleet events + settle attribution.
@@ -219,7 +224,7 @@ impl RingSink {
 
 impl TraceSink for RingSink {
     fn record(&self, ev: TraceEvent) {
-        let mut buf = self.buf.lock().unwrap();
+        let mut buf = crate::util::sync::lock_ok(&self.buf);
         if buf.len() == self.cap {
             buf.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
@@ -228,7 +233,7 @@ impl TraceSink for RingSink {
     }
 
     fn drain(&self) -> Vec<TraceEvent> {
-        std::mem::take(&mut *self.buf.lock().unwrap()).into()
+        std::mem::take(&mut *crate::util::sync::lock_ok(&self.buf)).into()
     }
 
     fn dropped(&self) -> u64 {

@@ -118,6 +118,26 @@ impl Json {
         Ok(self.as_obj()?.get(key).filter(|v| !matches!(v, Json::Null)))
     }
 
+    /// Optional numeric field with a default (config-parsing shorthand).
+    pub fn get_f64_or(&self, key: &str, default: f64) -> Result<f64, JsonError> {
+        self.get_opt(key)?.map(Json::as_f64).transpose().map(|v| v.unwrap_or(default))
+    }
+
+    /// Optional integer field with a default.
+    pub fn get_usize_or(&self, key: &str, default: usize) -> Result<usize, JsonError> {
+        self.get_opt(key)?.map(Json::as_usize).transpose().map(|v| v.unwrap_or(default))
+    }
+
+    /// Optional boolean field with a default.
+    pub fn get_bool_or(&self, key: &str, default: bool) -> Result<bool, JsonError> {
+        self.get_opt(key)?.map(Json::as_bool).transpose().map(|v| v.unwrap_or(default))
+    }
+
+    /// Optional string field with a default.
+    pub fn get_str_or(&self, key: &str, default: &str) -> Result<String, JsonError> {
+        Ok(self.get_opt(key)?.map(Json::as_str).transpose()?.unwrap_or(default).to_string())
+    }
+
     fn kind(&self) -> &'static str {
         match self {
             Json::Null => "null",
@@ -531,6 +551,24 @@ mod tests {
         assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
         assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
         assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn defaulted_getters() {
+        let v = Json::parse(r#"{"a": 2.5, "n": 7, "b": false, "s": "x", "z": null}"#).unwrap();
+        assert_eq!(v.get_f64_or("a", 1.0).unwrap(), 2.5);
+        assert_eq!(v.get_f64_or("missing", 1.0).unwrap(), 1.0);
+        assert_eq!(v.get_usize_or("n", 3).unwrap(), 7);
+        assert_eq!(v.get_usize_or("missing", 3).unwrap(), 3);
+        assert!(!v.get_bool_or("b", true).unwrap());
+        assert!(v.get_bool_or("missing", true).unwrap());
+        assert_eq!(v.get_str_or("s", "d").unwrap(), "x");
+        assert_eq!(v.get_str_or("missing", "d").unwrap(), "d");
+        // Explicit null falls back to the default, same as get_opt.
+        assert_eq!(v.get_f64_or("z", 9.0).unwrap(), 9.0);
+        // Type mismatches still error instead of defaulting.
+        assert!(v.get_f64_or("s", 1.0).is_err());
+        assert!(v.get_bool_or("a", true).is_err());
     }
 
     #[test]

@@ -11,10 +11,12 @@
 //! * [`cli`] — a subcommand + flag argument parser for the `acf` binary.
 //! * [`bench`] — a micro-benchmark harness (warmup, iterations, robust
 //!   statistics) used by the `benches/` targets in place of criterion.
+//! * [`sync`] — poison-tolerant lock helpers for the serve request path.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod table;

@@ -1,0 +1,246 @@
+//! Scenario-harness integration tests: byte-identical verdict reports
+//! for a fixed (scenario, seed) pair, clean whole-fleet-loss failures,
+//! and the real server's fault-injection surface (replica kill without
+//! drain, whole-group loss, latency degradation) under live load.
+
+use acf::cnn::data::Dataset;
+use acf::cnn::model::{Model, Weights};
+use acf::fabric::device::by_name;
+use acf::planner::Policy;
+use acf::serve::{
+    compose_frontier, run_scenario, FaultEventKind, FleetEntry, FleetFrontier, FleetPlan,
+    FleetSpec, Scenario, ScenarioOpts, ServeConfig, Server,
+};
+use acf::trace::Tracer;
+use std::time::Duration;
+
+fn corpus(n: usize, seed: u64) -> Vec<Vec<i64>> {
+    Dataset::generate(n, seed, 16, 16).images.iter().map(|i| i.pix.clone()).collect()
+}
+
+/// Plan the fleet a scenario names, the same way the CLI does.
+fn plan_for(sc: &Scenario) -> FleetPlan {
+    let model = Model::lenet_tiny();
+    assert_eq!(sc.model, "lenet-tiny", "test fleets pin the tiny model");
+    let spec = FleetSpec::parse(&sc.devices, &[]).unwrap();
+    let frontier = FleetFrontier::build(&model, &spec, 200.0, &Policy::adaptive(), 8).unwrap();
+    compose_frontier(&frontier, None)
+}
+
+fn shipped_scenario(name: &str) -> Scenario {
+    let path = format!("{}/scenarios/{name}", env!("CARGO_MANIFEST_DIR"));
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    Scenario::from_str(&text).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+#[test]
+fn replica_death_verdict_is_byte_identical_across_runs() {
+    // The acceptance contract: the shipped replica_death scenario at
+    // seed 7, run twice against the same plan, serializes to identical
+    // bytes — and passes its recovery-time and zero-drop assertions.
+    let sc = shipped_scenario("replica_death.json");
+    let fp = plan_for(&sc);
+    let opts = ScenarioOpts { seed: 7, quick: false, tracer: Tracer::off() };
+    let a = run_scenario(&sc, &fp, &opts).unwrap();
+    let b = run_scenario(&sc, &fp, &opts).unwrap();
+    assert_eq!(a.to_json().dump(), b.to_json().dump(), "verdict bytes must be reproducible");
+    assert!(a.passed, "shipped replica_death scenario must pass: {}", a.to_json().dump());
+    assert_eq!(a.drops, 0, "no admitted request may be dropped by a single replica death");
+    assert!(!a.fleet_lost);
+    // The fault recovered, and the phase carries an explicit passing
+    // recovery-time check.
+    assert_eq!(a.faults.len(), 1);
+    assert!(a.faults[0].recovered, "survivor must absorb the load");
+    let recovery_checks: Vec<_> = a
+        .phases
+        .iter()
+        .flat_map(|p| &p.checks)
+        .filter(|c| c.name == "recovery_ms_max")
+        .collect();
+    assert_eq!(recovery_checks.len(), 1);
+    assert!(recovery_checks[0].passed);
+}
+
+#[test]
+fn every_shipped_scenario_parses_and_plans() {
+    // scenario-check's precondition: the five shipped files must parse
+    // and their fleets must plan. Quick mode must keep verdicts green.
+    for name in [
+        "diurnal.json",
+        "flash_crowd.json",
+        "replica_death.json",
+        "group_loss.json",
+        "latency_degrade.json",
+    ] {
+        let sc = shipped_scenario(name);
+        let model = Model::lenet_tiny();
+        let spec = FleetSpec::parse(&sc.devices, &[]).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let frontier = FleetFrontier::build(&model, &spec, 200.0, &Policy::adaptive(), 8)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let fp = compose_frontier(&frontier, None);
+        let opts = ScenarioOpts { seed: 7, quick: true, tracer: Tracer::off() };
+        let report = run_scenario(&sc, &fp, &opts).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(report.passed, "{name} must pass in quick mode: {}", report.to_json().dump());
+    }
+}
+
+#[test]
+fn whole_fleet_loss_is_a_clean_fail_not_an_error() {
+    // Killing the fleet's last replica mid-phase: the engine must return
+    // a FAILED verdict (dropped admissions, fleet_lost) — never an Err
+    // and never a panic.
+    let src = r#"{
+        "name": "total_loss",
+        "devices": "zcu104:1",
+        "recovery_tail": 16,
+        "phases": [
+            {
+                "name": "doomed",
+                "requests": 200,
+                "load": { "profile": "constant", "rate_x": 0.5 },
+                "faults": [ { "kind": "group_loss", "group": 0, "at_frac": 0.3 } ],
+                "asserts": { "zero_drops": true }
+            }
+        ]
+    }"#;
+    let sc = Scenario::from_str(src).unwrap();
+    let fp = plan_for(&sc);
+    let report =
+        run_scenario(&sc, &fp, &ScenarioOpts { seed: 7, quick: false, tracer: Tracer::off() })
+            .unwrap();
+    assert!(!report.passed, "a dead fleet cannot pass");
+    assert!(report.fleet_lost);
+    assert!(report.drops > 0, "queued admissions die with the fleet");
+    let zero_drop_checks: Vec<_> = report.phases[0]
+        .checks
+        .iter()
+        .filter(|c| c.name == "zero_drops")
+        .collect();
+    assert_eq!(zero_drop_checks.len(), 1);
+    assert!(!zero_drop_checks[0].passed, "the drop book must indict the fleet loss");
+}
+
+fn two_replica_server(cfg: &ServeConfig) -> (Server, Model, Weights) {
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let dev = by_name("zcu104").unwrap();
+    let fp =
+        acf::serve::plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let server = Server::start(fp.deploy(m.clone(), w.clone()), cfg);
+    (server, m, w)
+}
+
+#[test]
+fn killed_replica_never_drops_admitted_requests() {
+    // Live server: admit a wave, kill one of two replicas without drain
+    // mid-flight, admit another wave. Every accepted request completes
+    // bit-exactly; the kill shows up on the fault timeline.
+    let (server, model, weights) = two_replica_server(&ServeConfig::default());
+    let images = corpus(8, 31);
+    let mut pendings = Vec::new();
+    for img in &images {
+        pendings.push((img.clone(), server.submit_wait(img.clone()).unwrap()));
+    }
+    let victim = server.replica_ids_of_group(0)[0];
+    server.kill_replica(victim).unwrap();
+    assert_eq!(server.live_counts(), vec![1], "one survivor in rotation");
+    for img in &images {
+        pendings.push((img.clone(), server.submit_wait(img.clone()).unwrap()));
+    }
+    for (img, p) in pendings {
+        assert_eq!(p.wait().unwrap(), acf::cnn::infer::infer(&model, &weights, &img));
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, snap.accepted);
+    assert!(
+        snap.faults.iter().any(|f| f.kind == FaultEventKind::ReplicaDeath),
+        "kill must land on the fault timeline: {:?}",
+        snap.faults
+    );
+    assert!(!snap.faults.iter().any(|f| f.kind == FaultEventKind::FleetLost));
+}
+
+#[test]
+fn group_loss_reroutes_to_the_surviving_group() {
+    // Heterogeneous fleet; kill the whole second group (its only
+    // replica). Traffic reroutes to group 0, the timeline records both
+    // the group_loss injection and the resulting group-lost state, and
+    // nothing admitted is dropped.
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let spec = FleetSpec {
+        entries: vec![
+            FleetEntry { device: by_name("zcu104").unwrap(), count: Some(1) },
+            FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
+        ],
+    };
+    let fp =
+        acf::serve::plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 2).unwrap();
+    let server = Server::start_grouped(
+        fp.deploy(m.clone(), w.clone()),
+        fp.replica_groups(),
+        fp.group_labels(),
+        &ServeConfig::default(),
+    );
+    let images = corpus(6, 17);
+    let mut pendings: Vec<_> =
+        images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
+    let killed = server.kill_group(1).unwrap();
+    assert_eq!(killed, 1);
+    assert_eq!(server.live_counts(), vec![1, 0]);
+    // The fleet still serves — on group 0 alone.
+    for img in &images {
+        pendings.push(server.submit_wait(img.clone()).unwrap());
+    }
+    for (i, p) in pendings.into_iter().enumerate() {
+        let logits = p.wait().unwrap();
+        assert_eq!(logits, acf::cnn::infer::infer(&m, &w, &images[i % images.len()]));
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.completed, snap.accepted);
+    let kinds: Vec<_> = snap.faults.iter().map(|f| f.kind).collect();
+    assert!(kinds.contains(&FaultEventKind::GroupLoss), "injection event: {kinds:?}");
+    assert!(kinds.contains(&FaultEventKind::GroupLost), "resulting state event: {kinds:?}");
+    assert!(!kinds.contains(&FaultEventKind::FleetLost));
+}
+
+#[test]
+fn latency_injection_slows_batches_then_lifts() {
+    // A 50ms-per-batch shim on the only replica must dominate the serve
+    // time of sequential waits, and clearing it must restore speed. Both
+    // transitions land on the fault timeline.
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let dev = by_name("zcu104").unwrap();
+    let fp =
+        acf::serve::plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 1, None).unwrap();
+    let server = Server::start(fp.deploy(m.clone(), w.clone()), &ServeConfig::default());
+    let images = corpus(4, 23);
+    let replica = server.replica_ids_of_group(0)[0];
+    let wave = |server: &Server| {
+        let t0 = std::time::Instant::now();
+        for img in &images {
+            let p = server.submit_wait(img.clone()).unwrap();
+            assert_eq!(p.wait().unwrap(), acf::cnn::infer::infer(&m, &w, img));
+        }
+        t0.elapsed()
+    };
+    server.inject_latency(replica, Duration::from_millis(50)).unwrap();
+    let degraded = wave(&server);
+    server.clear_latency(replica);
+    let healthy = wave(&server);
+    // 4 sequential waits x 50ms shim: the degraded wave carries at least
+    // 200ms of injected delay; the healthy wave carries none.
+    assert!(
+        degraded >= Duration::from_millis(200),
+        "shim must be applied per batch: {degraded:?}"
+    );
+    assert!(degraded > healthy, "degraded {degraded:?} vs healthy {healthy:?}");
+    let snap = server.shutdown();
+    assert_eq!(snap.failed, 0);
+    let kinds: Vec<_> = snap.faults.iter().map(|f| f.kind).collect();
+    assert!(kinds.contains(&FaultEventKind::LatencyDegrade), "{kinds:?}");
+    assert!(kinds.contains(&FaultEventKind::LatencyRestore), "{kinds:?}");
+}
