@@ -187,6 +187,68 @@ fn main() {
         }
     }
 
+    // ---- netlist optimizer: opt vs no-opt (Conv_1) ----
+    //
+    // The pass pipeline (DESIGN.md §Netlist optimization) shrinks the
+    // builder's raw output before simulation; this series times the same
+    // 64-lane verify pass on the raw Conv_1 netlist and on the O2-optimized
+    // one, and records both LUT counts. relations.json pins two invariants
+    // machine-independently: the optimized netlist must simulate at least
+    // as many img/s (small timer-jitter slack), and optimization must
+    // never add LUTs (strict, deterministic cell counts).
+    let raw_ip1 = ips::conv1::generate(&p).unwrap();
+    let mut opt_ip1 = ips::conv1::generate(&p).unwrap();
+    let rep = acf::netlist::opt::optimize_at(&mut opt_ip1.netlist, acf::netlist::opt::OptLevel::O2);
+    println!(
+        "\nConv_1 opt pipeline: {} -> {} cells ({} removed, {} nets dropped, {} fixpoint round(s))",
+        rep.pre_cells,
+        rep.post_cells,
+        rep.cells_removed(),
+        rep.nets_removed(),
+        rep.iterations
+    );
+    for (variant, ip1) in [("unoptimized", &raw_ip1), ("optimized", &opt_ip1)] {
+        let mut rng = Rng::new(0x09F7);
+        let (stim, coefs) = random_stimulus_lanes(ip1, &mut rng, 64, 1);
+        let mut sim = Sim::with_lanes(&ip1.netlist, 64).unwrap();
+        let ports = IpPorts::resolve(&sim, ip1_lanes);
+        ports.reset(&mut sim, &p);
+        let label = format!("Conv_1 {variant} netlist (64-lane pass)");
+        let s = b.run(&label, || {
+            ports.drive_windows_lanes(&mut sim, &p, &stim, 0);
+            for phase in 0..taps {
+                ports.drive_coef(&mut sim, &p, &coefs, phase);
+                sim.settle();
+                sim.tick();
+            }
+        });
+        let images_per_sec = s.throughput() * (64 * ip1_lanes) as f64;
+        let luts = *ip1.netlist.census().get(&acf::fabric::Prim::Lut).unwrap_or(&0);
+        println!(
+            "{label}: {:.2}M img/s, {} cells, {luts} LUTs",
+            images_per_sec / 1e6,
+            ip1.netlist.n_cells()
+        );
+        derived.push(obj([
+            ("name", label.as_str().into()),
+            ("variant", variant.into()),
+            ("images_per_sec", images_per_sec.into()),
+            ("cells", ip1.netlist.n_cells().into()),
+            ("luts", luts.into()),
+        ]));
+        stats.push(s);
+        stats.push(Stats::flat(
+            format!("sim: measured ns/img — Conv_1 {variant} netlist (64-lane)"),
+            (64 * ip1_lanes) as u64,
+            1e9 / images_per_sec.max(1e-9),
+        ));
+        stats.push(Stats::flat(
+            format!("sim: netlist LUT count — Conv_1 {variant}"),
+            1,
+            luts as f64,
+        ));
+    }
+
     report("lane-parallel netlist sim", &stats);
     let doc = obj([
         ("bench", "sim".into()),

@@ -2,6 +2,8 @@
 //!
 //! Deploys the quantized LeNet-style CNN onto the simulated ZCU104 with
 //! the resource-driven planner, then:
+//!   0. prints the netlist optimizer's per-engine shrink table (the
+//!      pass pipeline every planned engine ran through),
 //!   1. spot-verifies each planned conv IP's *netlist* against the
 //!      behavioral model (bit-exact),
 //!   2. serves a batch of synthetic digit images through the threaded
@@ -47,6 +49,9 @@ fn main() {
     }
     let (pd, pl) = dep.plan.pressure();
     println!("  resources: DSP {:.1}%  LUT {:.1}%", pd * 100.0, pl * 100.0);
+
+    println!("\n== netlist optimization (pass pipeline, pre -> post at O2) ==");
+    print!("{}", acf::report::opt_table().plain());
 
     println!("\n== netlist spot-verification of planned conv IPs ==");
     for ep in dep.plan.convs() {

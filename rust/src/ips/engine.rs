@@ -164,7 +164,8 @@ pub fn generate(kind: EngineKind, p: &EngineParams) -> Result<EngineIp, String> 
             Ok(EngineIp { kind, rate: ip.throughput_per_cycle(), netlist: ip.netlist })
         }
         EngineKind::Fc => {
-            let ip = super::fc::generate(&p.arith, p.fanin)?;
+            let mut ip = super::fc::generate(&p.arith, p.fanin)?;
+            crate::netlist::opt::optimize(&mut ip.netlist);
             Ok(EngineIp { kind, rate: 1.0, netlist: ip.netlist })
         }
         EngineKind::MaxPool => {
@@ -175,7 +176,8 @@ pub fn generate(kind: EngineKind, p: &EngineParams) -> Result<EngineIp, String> 
             if !(2..=16).contains(&p.window) {
                 return Err(format!("MaxPool window {} outside 2..=16", p.window));
             }
-            let ip = super::pool::generate(bits, p.window);
+            let mut ip = super::pool::generate(bits, p.window);
+            crate::netlist::opt::optimize(&mut ip.netlist);
             Ok(EngineIp { kind, rate: 1.0, netlist: ip.netlist })
         }
         EngineKind::Relu => {
@@ -183,7 +185,8 @@ pub fn generate(kind: EngineKind, p: &EngineParams) -> Result<EngineIp, String> 
             if !(2..=32).contains(&bits) {
                 return Err(format!("ReLU data width {bits} outside 2..=32"));
             }
-            let ip = super::relu::generate(bits);
+            let mut ip = super::relu::generate(bits);
+            crate::netlist::opt::optimize(&mut ip.netlist);
             Ok(EngineIp { kind, rate: 1.0, netlist: ip.netlist })
         }
     }

@@ -40,14 +40,19 @@ pub mod window_feed;
 pub use common::ConvIp;
 pub use params::{ConvKind, ConvParams};
 
-/// Generate any of the four convolution IPs.
+/// Generate any of the four convolution IPs, optimized at the
+/// process-wide [`crate::netlist::opt::level`]. The per-module
+/// generators (`conv1::generate`, ...) stay raw for differential tests
+/// and pre/post-opt reporting.
 pub fn generate(kind: ConvKind, p: &ConvParams) -> Result<ConvIp, String> {
-    match kind {
+    let mut ip = match kind {
         ConvKind::Conv1 => conv1::generate(p),
         ConvKind::Conv2 => conv2::generate(p),
         ConvKind::Conv3 => conv3::generate(p),
         ConvKind::Conv4 => conv4::generate(p),
-    }
+    }?;
+    crate::netlist::opt::optimize(&mut ip.netlist);
+    Ok(ip)
 }
 
 /// Table I row: qualitative characteristics (design intent, as published).

@@ -1,7 +1,8 @@
 //! `acf` — the adaptive-conv-FPGA command line.
 //!
 //! Subcommands:
-//!   tables   — regenerate the paper's Tables I/II/III
+//!   tables   — regenerate the paper's Tables I/II/III (+ the netlist
+//!              optimizer's per-engine shrink report via --table opt)
 //!   synth    — synthesize one IP and print its utilization
 //!   sta      — timing report (+ critical path trace) for one IP
 //!   power    — power report for one IP
@@ -69,8 +70,33 @@ fn dev_specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "device", value: true, help: "device name/part", default: Some("zcu104") },
         OptSpec { name: "clock-mhz", value: true, help: "target clock", default: Some("200") },
+        opt_level_spec(),
         OptSpec { name: "help", value: false, help: "show help", default: None },
     ]
+}
+
+fn opt_level_spec() -> OptSpec {
+    OptSpec {
+        name: "opt-level",
+        value: true,
+        help: "netlist optimization level 0|1|2 (auto = ACF_OPT_LEVEL, default full opt)",
+        default: Some("auto"),
+    }
+}
+
+/// Resolve `--opt-level` into the process-wide netlist-opt level.
+/// `auto` keeps the `ACF_OPT_LEVEL` env default.
+fn apply_opt_level(a: &Args) -> Result<(), String> {
+    match a.get_or("opt-level", "auto") {
+        "auto" => Ok(()),
+        s => match acf::netlist::opt::OptLevel::parse(s) {
+            Some(l) => {
+                acf::netlist::opt::set_level(l);
+                Ok(())
+            }
+            None => Err(format!("bad --opt-level '{s}' (want 0|1|2|auto)")),
+        },
+    }
 }
 
 fn get_device(a: &Args) -> Result<device::Device, String> {
@@ -80,7 +106,7 @@ fn get_device(a: &Args) -> Result<device::Device, String> {
 
 fn cmd_tables(argv: &[String]) -> i32 {
     let mut specs = dev_specs();
-    specs.push(OptSpec { name: "table", value: true, help: "1|2|3|all", default: Some("all") });
+    specs.push(OptSpec { name: "table", value: true, help: "1|2|3|opt|all", default: Some("all") });
     let a = match Args::parse(argv, &specs) {
         Ok(a) => a,
         Err(e) => return fail(e),
@@ -88,6 +114,9 @@ fn cmd_tables(argv: &[String]) -> i32 {
     if a.flag("help") {
         print!("{}", help("acf tables", "regenerate the paper's tables", &specs));
         return 0;
+    }
+    if let Err(e) = apply_opt_level(&a) {
+        return fail(e);
     }
     let dev = match get_device(&a) {
         Ok(d) => d,
@@ -112,6 +141,12 @@ fn cmd_tables(argv: &[String]) -> i32 {
             acf::report::table3(clock).markdown()
         );
     }
+    if which == "opt" || which == "all" {
+        println!(
+            "\nNETLIST OPTIMIZATION PASS PIPELINE — per-engine pre -> post primitives at O2\n{}",
+            acf::report::opt_table().markdown()
+        );
+    }
     0
 }
 
@@ -127,6 +162,9 @@ fn cmd_ip(argv: &[String], mode: Mode) -> i32 {
     if a.flag("help") {
         print!("{}", help("acf synth/sta/power", "per-IP reports", &specs));
         return 0;
+    }
+    if let Err(e) = apply_opt_level(&a) {
+        return fail(e);
     }
     let dev = match get_device(&a) {
         Ok(d) => d,
@@ -242,6 +280,9 @@ fn cmd_plan(argv: &[String], deploy: bool) -> i32 {
     if a.flag("help") {
         print!("{}", help("acf plan/deploy", "resource-driven planning + batch inference", &specs));
         return 0;
+    }
+    if let Err(e) = apply_opt_level(&a) {
+        return fail(e);
     }
     let dev = match get_device(&a) {
         Ok(d) => d,
@@ -359,6 +400,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
     if a.flag("help") {
         print!("{}", help("acf serve", "device-fleet serving under synthetic open-loop traffic", &specs));
         return 0;
+    }
+    if let Err(e) = apply_opt_level(&a) {
+        return fail(e);
     }
     let clock = a.get_f64("clock-mhz").unwrap().unwrap();
     let scenario_path = a.get_or("scenario", "none");
@@ -915,6 +959,7 @@ fn cmd_scenario_check(argv: &[String]) -> i32 {
         OptSpec { name: "max-replicas", value: true, help: "per-device ceiling for the replica search", default: Some("8") },
         OptSpec { name: "policy", value: true, help: "adaptive|dsp-first|quantize-first|static-single", default: Some("adaptive") },
         OptSpec { name: "catalog", value: true, help: "JSON device-array file extending device lookups, or 'none'", default: Some("none") },
+        opt_level_spec(),
         OptSpec { name: "help", value: false, help: "show help", default: None },
     ];
     let a = match Args::parse(argv, &specs) {
@@ -931,6 +976,9 @@ fn cmd_scenario_check(argv: &[String]) -> i32 {
             )
         );
         return 0;
+    }
+    if let Err(e) = apply_opt_level(&a) {
+        return fail(e);
     }
     let dir = a.positional().first().map(String::as_str).unwrap_or("scenarios");
     let quick = acf::util::bench::quick_env();
@@ -1013,6 +1061,9 @@ fn cmd_sweep(argv: &[String]) -> i32 {
     if a.flag("help") {
         print!("{}", help("acf sweep", "device/precision sweeps", &specs));
         return 0;
+    }
+    if let Err(e) = apply_opt_level(&a) {
+        return fail(e);
     }
     let clock = a.get_f64("clock-mhz").unwrap().unwrap();
     match a.get_or("kind", "adaptation") {

@@ -19,6 +19,7 @@
 //!   one implicit global clock.
 
 pub mod builder;
+pub mod opt;
 pub mod sim;
 
 use crate::fabric::dsp48;
@@ -234,6 +235,36 @@ impl Netlist {
             }
         }
         self.topo_comb()
+    }
+
+    /// Driven-but-unread nets that make their driver wholly
+    /// unobservable: every output of the (non-`Input`) driver cell has
+    /// zero readers and is not a declared output, so the cell is
+    /// silently simulated for nothing. Partially-used fixed-arity
+    /// primitives (CARRY8 carry-outs, spare DSP product bits) are *not*
+    /// flagged — their cells still feed live pins. [`opt::dce::Dce`]
+    /// removes every flagged net; see [`Netlist::check_warn`].
+    pub fn unread_nets(&self) -> Vec<NetId> {
+        let fan = self.fanouts();
+        let mut bad = Vec::new();
+        for c in &self.cells {
+            if matches!(c.kind, CellKind::Input { .. }) {
+                continue;
+            }
+            if c.outs.iter().all(|&o| fan[o.0 as usize] == 0) {
+                bad.extend(c.outs.iter().copied());
+            }
+        }
+        bad
+    }
+
+    /// [`Netlist::check`] plus the builder-wart warning list: the
+    /// combinational order and the [`Netlist::unread_nets`] to warn
+    /// about (empty on any netlist that went through dead-logic
+    /// elimination).
+    pub fn check_warn(&self) -> Result<(Vec<CellId>, Vec<NetId>), NetlistError> {
+        let order = self.check()?;
+        Ok((order, self.unread_nets()))
     }
 
     /// Topological level of every cell, computed from a combinational

@@ -1,0 +1,290 @@
+//! Constant propagation through LUT truth tables.
+//!
+//! Computes per-net constness (seeded from `Const` cells, propagated
+//! forward through LUTs in topological order), then folds every LUT:
+//! constant pins and duplicate pins collapse out of the truth table,
+//! inputs the folded function no longer depends on are pruned, and the
+//! result is classified — a constant (cell dropped, output aliased to a
+//! canonical const net), an identity buffer (cell dropped, output
+//! aliased to its surviving input), or a smaller retabled LUT. Dual
+//! LUT6_2 cells fold per-function and demote to single-function cells
+//! when one half dies. Duplicate `Const` cells are deduplicated to the
+//! first driver of each value.
+
+use super::super::{Cell, CellKind, NetId, Netlist};
+use super::{const_net, const_seeds, Edit, Pass, PassStats};
+use crate::fabric::lut::Lut;
+
+pub struct ConstProp;
+
+/// Result of folding one LUT function against known-constant and
+/// duplicate inputs.
+pub(crate) enum Folded {
+    /// Function is constant regardless of surviving inputs.
+    Const(bool),
+    /// Function is the identity on this single surviving input.
+    Ident(NetId),
+    /// Reduced function over the listed surviving inputs (`k ≥ 1`).
+    Fun(Vec<NetId>, Lut),
+}
+
+/// Fold `f` (over input nets `ins`, one per pin) against `konst`:
+/// constant pins become literals, repeated nets share one variable, and
+/// variables the folded table does not depend on are pruned.
+pub(crate) fn fold_func(f: &Lut, ins: &[NetId], konst: &[Option<bool>]) -> Folded {
+    debug_assert_eq!(ins.len(), f.k as usize);
+    enum Src {
+        K(bool),
+        V(usize),
+    }
+    let mut survivors: Vec<NetId> = Vec::new();
+    let srcs: Vec<Src> = ins
+        .iter()
+        .map(|&n| {
+            if let Some(v) = konst[n.0 as usize] {
+                Src::K(v)
+            } else {
+                match survivors.iter().position(|&s| s == n) {
+                    Some(p) => Src::V(p),
+                    None => {
+                        survivors.push(n);
+                        Src::V(survivors.len() - 1)
+                    }
+                }
+            }
+        })
+        .collect();
+    let m = survivors.len();
+    // Truth table over the surviving variables.
+    let table: Vec<bool> = (0..(1u64 << m))
+        .map(|a| {
+            let mut idx = 0u64;
+            for (pin, s) in srcs.iter().enumerate() {
+                let bit = match s {
+                    Src::K(v) => *v,
+                    Src::V(p) => (a >> p) & 1 == 1,
+                };
+                if bit {
+                    idx |= 1 << pin;
+                }
+            }
+            f.eval(idx)
+        })
+        .collect();
+    // Support pruning: drop variables the table never depends on.
+    let dep: Vec<usize> = (0..m)
+        .filter(|&s| (0..(1u64 << m)).any(|a| table[a as usize] != table[(a ^ (1 << s)) as usize]))
+        .collect();
+    if dep.is_empty() {
+        return Folded::Const(table[0]);
+    }
+    let final_ins: Vec<NetId> = dep.iter().map(|&s| survivors[s]).collect();
+    let lut = Lut::from_fn(dep.len() as u8, |a| {
+        let mut full = 0u64;
+        for (j, &s) in dep.iter().enumerate() {
+            if (a >> j) & 1 == 1 {
+                full |= 1 << s;
+            }
+        }
+        table[full as usize]
+    });
+    if lut.k == 1 && lut.init == 0b10 {
+        return Folded::Ident(final_ins[0]);
+    }
+    Folded::Fun(final_ins, lut)
+}
+
+/// Where an aliased net should point after the rewrite.
+enum To {
+    Net(NetId),
+    Const(bool),
+}
+
+/// Planned rewrite of one cell.
+enum Act {
+    Keep,
+    Drop,
+    /// Replace with a single-function LUT driving `out`.
+    Single { ins: Vec<NetId>, f: Lut, out: NetId },
+    /// Replace with a dual-function LUT over shared inputs (outs kept).
+    Dual { ins: Vec<NetId>, funcs: [Lut; 2] },
+}
+
+impl Pass for ConstProp {
+    fn name(&self) -> &'static str {
+        "const_prop"
+    }
+
+    fn run(&self, nl: &mut Netlist) -> PassStats {
+        let mut st = PassStats { pass: self.name(), ..PassStats::default() };
+        let order = match nl.topo_comb() {
+            Ok(o) => o,
+            Err(_) => return st,
+        };
+        let mut konst = const_seeds(nl);
+        let mut acts: Vec<Act> = (0..nl.n_cells()).map(|_| Act::Keep).collect();
+        let mut aliases: Vec<(NetId, To)> = Vec::new();
+        let mut seen_const: [Option<NetId>; 2] = [None, None];
+        let mut need_const = [false; 2];
+        // One topological sweep: constness of a LUT's inputs is final by
+        // the time the LUT is classified, so constant chains fold in a
+        // single application.
+        for &cid in &order {
+            let ci = cid.0 as usize;
+            let c = &nl.cells[ci];
+            match &c.kind {
+                CellKind::Const { value } => {
+                    let v = *value as usize;
+                    match seen_const[v] {
+                        None => seen_const[v] = Some(c.outs[0]),
+                        Some(canon) => {
+                            aliases.push((c.outs[0], To::Net(canon)));
+                            acts[ci] = Act::Drop;
+                        }
+                    }
+                }
+                CellKind::Lut { funcs } => {
+                    let folded: Vec<Folded> =
+                        funcs.iter().map(|f| fold_func(f, &c.ins, &konst)).collect();
+                    for (fi, fd) in folded.iter().enumerate() {
+                        if let Folded::Const(v) = fd {
+                            konst[c.outs[fi].0 as usize] = Some(*v);
+                        }
+                    }
+                    acts[ci] = classify(c, funcs, folded, &mut aliases, &mut need_const, &mut st);
+                }
+                _ => {}
+            }
+        }
+        let edit_needed = !aliases.is_empty() || acts.iter().any(|a| !matches!(a, Act::Keep));
+        if !edit_needed {
+            return st;
+        }
+        // Materialize const nets the aliases need (may append cells; the
+        // appended cells are untouched by `acts`, which is indexed by the
+        // original cell ids).
+        let canon: [Option<NetId>; 2] = [
+            if need_const[0] { Some(seen_const[0].unwrap_or_else(|| const_net(nl, false))) } else { None },
+            if need_const[1] { Some(seen_const[1].unwrap_or_else(|| const_net(nl, true))) } else { None },
+        ];
+        let mut edit = Edit::new(nl);
+        for (ci, act) in acts.iter().enumerate() {
+            match act {
+                Act::Keep => {}
+                Act::Drop => edit.drop_cell(ci),
+                Act::Single { ins, f, out } => edit.replace_cell(
+                    ci,
+                    Cell { kind: CellKind::Lut { funcs: vec![*f] }, ins: ins.clone(), outs: vec![*out] },
+                ),
+                Act::Dual { ins, funcs } => edit.replace_cell(
+                    ci,
+                    Cell {
+                        kind: CellKind::Lut { funcs: funcs.to_vec() },
+                        ins: ins.clone(),
+                        outs: nl.cells[ci].outs.clone(),
+                    },
+                ),
+            }
+        }
+        for (net, to) in aliases {
+            let target = match to {
+                To::Net(n) => n,
+                To::Const(v) => canon[v as usize].expect("const target materialized"),
+            };
+            edit.alias_net(net, target);
+        }
+        let (c, n) = edit.apply(nl);
+        st.cells_removed = c;
+        st.nets_removed = n;
+        st
+    }
+}
+
+/// Turn the folded function(s) of one LUT cell into a planned action,
+/// recording any output aliases and which const values they need.
+fn classify(
+    c: &Cell,
+    orig: &[Lut],
+    folded: Vec<Folded>,
+    aliases: &mut Vec<(NetId, To)>,
+    need_const: &mut [bool; 2],
+    st: &mut PassStats,
+) -> Act {
+    let mut alias_out = |out: NetId, fd: &Folded, need_const: &mut [bool; 2]| match fd {
+        Folded::Const(v) => {
+            need_const[*v as usize] = true;
+            aliases.push((out, To::Const(*v)));
+        }
+        Folded::Ident(n) => aliases.push((out, To::Net(*n))),
+        Folded::Fun(..) => unreachable!("only dead halves are aliased"),
+    };
+    let live: Vec<usize> =
+        (0..folded.len()).filter(|&i| matches!(folded[i], Folded::Fun(..))).collect();
+    match live.len() {
+        0 => {
+            for (fi, fd) in folded.iter().enumerate() {
+                alias_out(c.outs[fi], fd, need_const);
+            }
+            Act::Drop
+        }
+        1 if folded.len() == 2 => {
+            // One half of a dual LUT died: alias it, demote to single.
+            let dead = 1 - live[0];
+            alias_out(c.outs[dead], &folded[dead], need_const);
+            let Folded::Fun(ins, f) = &folded[live[0]] else { unreachable!() };
+            st.luts_retabled += 1;
+            Act::Single { ins: ins.clone(), f: *f, out: c.outs[live[0]] }
+        }
+        1 => {
+            let Folded::Fun(ins, f) = &folded[0] else { unreachable!() };
+            if ins.as_slice() == c.ins.as_slice() && *f == orig[0] {
+                Act::Keep
+            } else {
+                st.luts_retabled += 1;
+                Act::Single { ins: ins.clone(), f: *f, out: c.outs[0] }
+            }
+        }
+        _ => {
+            // Both halves alive. Identical halves collapse to one output.
+            let (Folded::Fun(i0, f0), Folded::Fun(i1, f1)) = (&folded[0], &folded[1]) else {
+                unreachable!()
+            };
+            if i0 == i1 && f0 == f1 {
+                aliases.push((c.outs[1], To::Net(c.outs[0])));
+                st.luts_retabled += 1;
+                return Act::Single { ins: i0.clone(), f: *f0, out: c.outs[0] };
+            }
+            // Re-share: a dual LUT needs both functions over one pin
+            // list, so expand each half over the union of survivors
+            // (ordered as in the original pin list).
+            let shared: Vec<NetId> = {
+                let mut s = Vec::new();
+                for &n in &c.ins {
+                    if !s.contains(&n) && (i0.contains(&n) || i1.contains(&n)) {
+                        s.push(n);
+                    }
+                }
+                s
+            };
+            let expand = |ins: &Vec<NetId>, f: &Lut| {
+                Lut::from_fn(shared.len() as u8, |a| {
+                    let mut idx = 0u64;
+                    for (j, n) in ins.iter().enumerate() {
+                        let pos = shared.iter().position(|x| x == n).unwrap();
+                        if (a >> pos) & 1 == 1 {
+                            idx |= 1 << j;
+                        }
+                    }
+                    f.eval(idx)
+                })
+            };
+            let (e0, e1) = (expand(i0, f0), expand(i1, f1));
+            if shared.as_slice() == c.ins.as_slice() && e0 == orig[0] && e1 == orig[1] {
+                Act::Keep
+            } else {
+                st.luts_retabled += 1;
+                Act::Dual { ins: shared, funcs: [e0, e1] }
+            }
+        }
+    }
+}

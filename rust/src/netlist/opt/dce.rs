@@ -1,0 +1,63 @@
+//! Dead-net / unobservable-logic elimination.
+//!
+//! Backward reachability from the declared outputs: a cell is live iff
+//! some declared output transitively reads one of its outputs (paths
+//! through sequential cells — FDRE/DSP/RAM data and control pins —
+//! count, so state feeding an observable output is kept). Everything
+//! else is dropped. `Input` cells are always kept: they are the
+//! simulator's port contract, whether or not the surviving logic reads
+//! them.
+
+use super::super::{CellKind, NetId, Netlist};
+use super::{Edit, Pass, PassStats};
+
+pub struct Dce;
+
+impl Pass for Dce {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, nl: &mut Netlist) -> PassStats {
+        let mut st = PassStats { pass: self.name(), ..PassStats::default() };
+        let n = nl.n_cells();
+        let mut live = vec![false; n];
+        let mut stack: Vec<u32> = Vec::new();
+        for (ci, c) in nl.cells.iter().enumerate() {
+            if matches!(c.kind, CellKind::Input { .. }) {
+                live[ci] = true;
+            }
+        }
+        let mut mark = |net: NetId, live: &mut Vec<bool>, stack: &mut Vec<u32>| {
+            if let Some((c, _)) = nl.driver(net) {
+                if !live[c.0 as usize] {
+                    live[c.0 as usize] = true;
+                    stack.push(c.0);
+                }
+            }
+        };
+        for (_, bus) in &nl.outputs {
+            for &net in bus {
+                mark(net, &mut live, &mut stack);
+            }
+        }
+        while let Some(ci) = stack.pop() {
+            for i in 0..nl.cells[ci as usize].ins.len() {
+                mark(nl.cells[ci as usize].ins[i], &mut live, &mut stack);
+            }
+        }
+        if live.iter().all(|&l| l) {
+            return st;
+        }
+        let mut edit = Edit::new(nl);
+        for (ci, &l) in live.iter().enumerate() {
+            if !l {
+                edit.drop_cell(ci);
+            }
+        }
+        let (c, nn) = edit.apply(nl);
+        st.cells_removed = c;
+        st.nets_removed = nn;
+        st
+    }
+}

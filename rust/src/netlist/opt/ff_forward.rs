@@ -1,0 +1,93 @@
+//! FF forwarding: bypass FDREs whose output is knowable without them.
+//!
+//! Two rewrites, both exactly cycle-preserving (FDREs power up at 0 and
+//! `next = R ? 0 : (CE ? D : state)`):
+//!
+//! * **Stuck-at-zero collapse** — a register that can never leave its
+//!   power-up state drives constant 0 from cycle 0, so reads forward to
+//!   a const net. That holds when `D ≡ 0` (captures only zero), `CE ≡ 0`
+//!   (never captures), `R ≡ 1` (always reset), or `D = Q` (captures its
+//!   own state). Note `D ≡ 1` is *not* collapsible: Q is 0 until the
+//!   first enabled edge.
+//! * **Duplicate-register forwarding** — FDREs with identical
+//!   `(D, CE, R)` pins and identical initial state follow identical
+//!   state trajectories forever, so later duplicates forward to the
+//!   first. The builder mints these freely when registering
+//!   sign-extended buses (the replicated MSB net is registered once per
+//!   bit position).
+//!
+//! Constness comes from literal `Const` drivers only — [`const_prop`]
+//! (which runs earlier in the pipeline) is responsible for rewriting
+//! constant logic cones into `Const` cells, and the pipeline's fixpoint
+//! loop feeds each pass's discoveries to the other.
+//!
+//! [`const_prop`]: super::const_prop
+
+use super::super::{CellKind, NetId, Netlist};
+use super::{const_net, const_seeds, Edit, Pass, PassStats};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+pub struct FfForward;
+
+impl Pass for FfForward {
+    fn name(&self) -> &'static str {
+        "ff_forward"
+    }
+
+    fn run(&self, nl: &mut Netlist) -> PassStats {
+        let mut st = PassStats { pass: self.name(), ..PassStats::default() };
+        let konst = const_seeds(nl);
+        let k = |n: NetId| konst[n.0 as usize];
+        enum To {
+            Net(NetId),
+            Zero,
+        }
+        let mut drops: Vec<usize> = Vec::new();
+        let mut aliases: Vec<(NetId, To)> = Vec::new();
+        let mut zero_needed = false;
+        let mut dups: HashMap<(u32, u32, u32), NetId> = HashMap::new();
+        for (ci, c) in nl.cells.iter().enumerate() {
+            if !matches!(c.kind, CellKind::Fdre) {
+                continue;
+            }
+            let (d, ce, r, q) = (c.ins[0], c.ins[1], c.ins[2], c.outs[0]);
+            let stuck_zero =
+                k(d) == Some(false) || k(ce) == Some(false) || k(r) == Some(true) || d == q;
+            if stuck_zero {
+                drops.push(ci);
+                aliases.push((q, To::Zero));
+                zero_needed = true;
+                continue;
+            }
+            match dups.entry((d.0, ce.0, r.0)) {
+                Entry::Vacant(e) => {
+                    e.insert(q);
+                }
+                Entry::Occupied(e) => {
+                    drops.push(ci);
+                    aliases.push((q, To::Net(*e.get())));
+                }
+            }
+        }
+        if drops.is_empty() {
+            return st;
+        }
+        let zero = if zero_needed { Some(const_net(nl, false)) } else { None };
+        let mut edit = Edit::new(nl);
+        for ci in drops {
+            edit.drop_cell(ci);
+        }
+        for (net, to) in aliases {
+            let target = match to {
+                To::Net(n) => n,
+                To::Zero => zero.expect("zero net materialized"),
+            };
+            edit.alias_net(net, target);
+        }
+        let (c, n) = edit.apply(nl);
+        st.cells_removed = c;
+        st.nets_removed = n;
+        st
+    }
+}

@@ -1,0 +1,172 @@
+//! LUT merging: absorb single-fanout LUT chains into one ≤6-input LUT.
+//!
+//! When a single-function LUT's only reader is another single-function
+//! LUT, and the union of their input nets fits the 6-input budget, the
+//! producer's function is composed into the consumer's truth table and
+//! the producer is dropped. Consumers are visited in topological order
+//! and absorb repeatedly, so a whole chain (mux trees, compare ladders,
+//! gating logic) collapses bottom-up in one application. Producers that
+//! drive a declared output, have fanout > 1, or are dual LUT6_2 cells
+//! are left alone.
+
+use super::super::{CellKind, Netlist};
+use super::{Edit, Pass, PassStats};
+use crate::fabric::lut::Lut;
+
+pub struct LutMerge;
+
+impl Pass for LutMerge {
+    fn name(&self) -> &'static str {
+        "lut_merge"
+    }
+
+    fn run(&self, nl: &mut Netlist) -> PassStats {
+        let mut st = PassStats { pass: self.name(), ..PassStats::default() };
+        let order = match nl.topo_comb() {
+            Ok(o) => o,
+            Err(_) => return st,
+        };
+        let n = nl.n_cells();
+        let mut is_out = vec![false; nl.n_nets()];
+        for (_, bus) in &nl.outputs {
+            for &net in bus {
+                is_out[net.0 as usize] = true;
+            }
+        }
+        // Working copies: merges rewrite consumer pins/tables in place
+        // and mark producers dropped; drivers never change.
+        let mut cells = nl.cells.clone();
+        let mut dropped = vec![false; n];
+        let mut changed = vec![false; n];
+        let mut fan = vec![0u32; nl.n_nets()];
+        for c in &cells {
+            for &i in &c.ins {
+                fan[i.0 as usize] += 1;
+            }
+        }
+        for (_, bus) in &nl.outputs {
+            for &net in bus {
+                fan[net.0 as usize] += 1;
+            }
+        }
+        for &cid in &order {
+            let bi = cid.0 as usize;
+            'absorb: loop {
+                let (bf, bins) = match &cells[bi].kind {
+                    CellKind::Lut { funcs } if funcs.len() == 1 => (funcs[0], cells[bi].ins.clone()),
+                    _ => break,
+                };
+                for (p, &an) in bins.iter().enumerate() {
+                    if is_out[an.0 as usize] || fan[an.0 as usize] != 1 {
+                        continue;
+                    }
+                    let Some((ac, _)) = nl.driver(an) else { continue };
+                    let ai = ac.0 as usize;
+                    if dropped[ai] {
+                        continue;
+                    }
+                    let af = match &cells[ai].kind {
+                        CellKind::Lut { funcs } if funcs.len() == 1 => funcs[0],
+                        _ => continue,
+                    };
+                    let ains = cells[ai].ins.clone();
+                    // Merged pin list: consumer pins with the absorbed
+                    // pin spliced out for the producer's pins, deduped.
+                    let mut merged: Vec<super::super::NetId> = Vec::new();
+                    for (q, &bn) in bins.iter().enumerate() {
+                        if q == p {
+                            for &x in &ains {
+                                if !merged.contains(&x) {
+                                    merged.push(x);
+                                }
+                            }
+                        } else if !merged.contains(&bn) {
+                            merged.push(bn);
+                        }
+                    }
+                    if merged.len() > 6 {
+                        continue;
+                    }
+                    let f = Lut::from_fn(merged.len() as u8, |a| {
+                        let bit = |net| {
+                            let pos = merged.iter().position(|&x| x == net).unwrap();
+                            (a >> pos) & 1 == 1
+                        };
+                        let mut aidx = 0u64;
+                        for (j, &x) in ains.iter().enumerate() {
+                            if bit(x) {
+                                aidx |= 1 << j;
+                            }
+                        }
+                        let av = af.eval(aidx);
+                        let mut bidx = 0u64;
+                        for (j, &x) in bins.iter().enumerate() {
+                            let v = if j == p { av } else { bit(x) };
+                            if v {
+                                bidx |= 1 << j;
+                            }
+                        }
+                        bf.eval(bidx)
+                    });
+                    // Fanout deltas: the producer's output loses its one
+                    // read; every net the pair used to read is now read
+                    // exactly once by the merged consumer.
+                    fan[an.0 as usize] -= 1;
+                    for &x in &ains {
+                        fan[x.0 as usize] -= 1;
+                    }
+                    for (q, &bn) in bins.iter().enumerate() {
+                        if q != p {
+                            fan[bn.0 as usize] -= 1;
+                        }
+                    }
+                    for &x in &merged {
+                        fan[x.0 as usize] += 1;
+                    }
+                    cells[bi].ins = merged;
+                    cells[bi].kind = CellKind::Lut { funcs: vec![f] };
+                    dropped[ai] = true;
+                    changed[bi] = true;
+                    st.luts_retabled += 1;
+                    continue 'absorb;
+                }
+                break;
+            }
+        }
+        if !dropped.iter().any(|&d| d) && !changed.iter().any(|&c| c) {
+            return st;
+        }
+        #[cfg(debug_assertions)]
+        {
+            // The incremental fanout deltas must agree with a recount
+            // over the working copies (dropped producers read nothing).
+            let mut want = vec![0u32; nl.n_nets()];
+            for (ci, c) in cells.iter().enumerate() {
+                if dropped[ci] {
+                    continue;
+                }
+                for &i in &c.ins {
+                    want[i.0 as usize] += 1;
+                }
+            }
+            for (_, bus) in &nl.outputs {
+                for &net in bus {
+                    want[net.0 as usize] += 1;
+                }
+            }
+            assert_eq!(fan, want, "lut_merge fanout bookkeeping drifted");
+        }
+        let mut edit = Edit::new(nl);
+        for ci in 0..n {
+            if dropped[ci] {
+                edit.drop_cell(ci);
+            } else if changed[ci] {
+                edit.replace_cell(ci, cells[ci].clone());
+            }
+        }
+        let (c, nn) = edit.apply(nl);
+        st.cells_removed = c;
+        st.nets_removed = nn;
+        st
+    }
+}

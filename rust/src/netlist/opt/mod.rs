@@ -1,0 +1,387 @@
+//! Netlist optimization pass pipeline: shrink the netlist before
+//! simulating it.
+//!
+//! The builder DSL emits naive structural netlists — constant-fed LUTs
+//! (zero-padding, rounding biases), buffer LUTs in front of carry
+//! chains, duplicate registers on sign-extended buses, and logic no
+//! output can observe. PR 6's event-driven settle skips *quiet* ops;
+//! this module deletes ops that never needed to exist, so every
+//! lane-parallel `settle()` touches a smaller op list and the reported
+//! LUT/FF census moves closer to what vendor synthesis would keep.
+//!
+//! Shape: each transform is a [`Pass`] producing [`PassStats`];
+//! [`PassPipeline`] runs the passes for an [`OptLevel`] to a fixpoint
+//! (a round in which no pass changes the netlist). Rewrites are
+//! expressed as an [`Edit`] — net aliases + cell drops/replacements —
+//! applied by one rebuild that renumbers nets compactly and preserves
+//! the input/output port contract (names, widths, order), so `Sim`,
+//! `verify::IpPorts`, and the synthesis census all keep working on the
+//! rewritten netlist unchanged.
+//!
+//! The correctness bar is bit-exactness: optimized and unoptimized
+//! netlists must produce identical output values on every cycle of any
+//! stimulus, at any lane count (see [`tests::check_equiv`]).
+
+pub mod const_prop;
+pub mod dce;
+pub mod ff_forward;
+pub mod lut_merge;
+
+use super::{Cell, CellKind, NetId, Netlist};
+use crate::fabric::Prim;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// How aggressively to optimize generated netlists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// No optimization — simulate exactly what the builder emitted.
+    O0 = 0,
+    /// Constant propagation + dead-logic elimination only.
+    O1 = 1,
+    /// Full pipeline: const prop, FF forwarding, LUT merging, DCE.
+    O2 = 2,
+}
+
+impl OptLevel {
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s.trim() {
+            "0" => Some(OptLevel::O0),
+            "1" => Some(OptLevel::O1),
+            "2" => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+
+    /// Level requested by the `ACF_OPT_LEVEL` env var; full opt when
+    /// unset or unparsable.
+    pub fn from_env() -> OptLevel {
+        std::env::var("ACF_OPT_LEVEL").ok().and_then(|s| OptLevel::parse(&s)).unwrap_or(OptLevel::O2)
+    }
+}
+
+impl std::fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", *self as u8)
+    }
+}
+
+const LEVEL_UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+/// Process-wide default level used by [`optimize`]. First read resolves
+/// `ACF_OPT_LEVEL` (default: full opt); [`set_level`] (the CLI's
+/// `--opt-level`) overrides it.
+pub fn level() -> OptLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => OptLevel::O0,
+        1 => OptLevel::O1,
+        2 => OptLevel::O2,
+        _ => {
+            let l = OptLevel::from_env();
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// Override the process-wide opt level (e.g. from `--opt-level`).
+pub fn set_level(l: OptLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// What one pass application did to the netlist.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    pub pass: &'static str,
+    pub cells_removed: usize,
+    pub nets_removed: usize,
+    /// LUTs whose truth table was rewritten in place (shrunk arity,
+    /// folded pins, or absorbed a producer) without removing the cell.
+    pub luts_retabled: usize,
+    /// Fixpoint rounds in which this pass changed the netlist
+    /// (aggregated view only; a single application reports 0 or 1).
+    pub rounds: usize,
+}
+
+impl PassStats {
+    fn named(pass: &'static str) -> PassStats {
+        PassStats { pass, ..PassStats::default() }
+    }
+
+    pub fn changed(&self) -> bool {
+        self.cells_removed > 0 || self.nets_removed > 0 || self.luts_retabled > 0
+    }
+}
+
+/// One netlist transform. Passes must preserve bit-exact cycle
+/// semantics on every declared output and never touch the input/output
+/// port contract.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, nl: &mut Netlist) -> PassStats;
+}
+
+/// Summary of a full [`PassPipeline::run`].
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub level: OptLevel,
+    /// Fixpoint rounds executed (last round is the one that found
+    /// nothing left to do).
+    pub iterations: usize,
+    /// Per-pass stats aggregated over all rounds, in pipeline order.
+    pub passes: Vec<PassStats>,
+    pub pre_cells: usize,
+    pub pre_nets: usize,
+    pub post_cells: usize,
+    pub post_nets: usize,
+    pub pre_census: BTreeMap<Prim, u64>,
+    pub post_census: BTreeMap<Prim, u64>,
+}
+
+impl PipelineReport {
+    pub fn cells_removed(&self) -> usize {
+        self.pre_cells - self.post_cells
+    }
+
+    pub fn nets_removed(&self) -> usize {
+        self.pre_nets - self.post_nets
+    }
+
+    pub fn pre_count(&self, p: Prim) -> u64 {
+        *self.pre_census.get(&p).unwrap_or(&0)
+    }
+
+    pub fn post_count(&self, p: Prim) -> u64 {
+        *self.post_census.get(&p).unwrap_or(&0)
+    }
+}
+
+/// Ordered pass list for an [`OptLevel`], run to a fixpoint.
+pub struct PassPipeline {
+    level: OptLevel,
+    passes: Vec<Box<dyn Pass>>,
+}
+
+/// Hard cap on fixpoint rounds — generously above what any real netlist
+/// needs (shipped IPs converge in ≤4) but bounds a pathological
+/// ping-pong between passes.
+pub const MAX_ROUNDS: usize = 16;
+
+impl PassPipeline {
+    pub fn for_level(level: OptLevel) -> PassPipeline {
+        let passes: Vec<Box<dyn Pass>> = match level {
+            OptLevel::O0 => vec![],
+            OptLevel::O1 => vec![Box::new(const_prop::ConstProp), Box::new(dce::Dce)],
+            // Order: fold constants first (exposes stuck FFs), collapse
+            // FFs (exposes more constants next round), merge LUT chains,
+            // then sweep everything unobservable.
+            OptLevel::O2 => vec![
+                Box::new(const_prop::ConstProp),
+                Box::new(ff_forward::FfForward),
+                Box::new(lut_merge::LutMerge),
+                Box::new(dce::Dce),
+            ],
+        };
+        PassPipeline { level, passes }
+    }
+
+    pub fn run(&self, nl: &mut Netlist) -> PipelineReport {
+        let pre_cells = nl.n_cells();
+        let pre_nets = nl.n_nets();
+        let pre_census = nl.census();
+        let mut agg: Vec<PassStats> = self.passes.iter().map(|p| PassStats::named(p.name())).collect();
+        let mut iterations = 0;
+        if !self.passes.is_empty() {
+            for _ in 0..MAX_ROUNDS {
+                iterations += 1;
+                let mut round_changed = false;
+                for (pi, pass) in self.passes.iter().enumerate() {
+                    let st = pass.run(nl);
+                    if st.changed() {
+                        round_changed = true;
+                        agg[pi].cells_removed += st.cells_removed;
+                        agg[pi].nets_removed += st.nets_removed;
+                        agg[pi].luts_retabled += st.luts_retabled;
+                        agg[pi].rounds += 1;
+                    }
+                }
+                if !round_changed {
+                    break;
+                }
+            }
+            debug_assert!(nl.check().is_ok(), "optimization broke netlist invariants");
+        }
+        PipelineReport {
+            level: self.level,
+            iterations,
+            passes: agg,
+            pre_cells,
+            pre_nets,
+            post_cells: nl.n_cells(),
+            post_nets: nl.n_nets(),
+            pre_census,
+            post_census: nl.census(),
+        }
+    }
+}
+
+/// Optimize in place at the process-wide [`level`].
+pub fn optimize(nl: &mut Netlist) -> PipelineReport {
+    optimize_at(nl, level())
+}
+
+/// Optimize in place at an explicit level.
+pub fn optimize_at(nl: &mut Netlist, level: OptLevel) -> PipelineReport {
+    PassPipeline::for_level(level).run(nl)
+}
+
+/// A batch of rewrites: net aliases (reads of `from` become reads of
+/// `to`), cell drops, and cell replacements. [`Edit::apply`] rebuilds
+/// the netlist in one sweep — kept cells in original order, nets
+/// renumbered compactly, port names/widths/order preserved — so passes
+/// never have to reason about renumbering.
+pub(crate) struct Edit {
+    alias: Vec<u32>,
+    drop: Vec<bool>,
+    replace: Vec<Option<Cell>>,
+    changed: bool,
+}
+
+impl Edit {
+    pub fn new(nl: &Netlist) -> Edit {
+        Edit {
+            alias: (0..nl.n_nets() as u32).collect(),
+            drop: vec![false; nl.n_cells()],
+            replace: vec![None; nl.n_cells()],
+            changed: false,
+        }
+    }
+
+    /// Canonical replacement for `n`, following alias chains.
+    pub fn resolve(&self, n: NetId) -> NetId {
+        let mut cur = n.0;
+        while self.alias[cur as usize] != cur {
+            cur = self.alias[cur as usize];
+        }
+        NetId(cur)
+    }
+
+    /// Redirect all reads of `from` to `to`. No-op if they already
+    /// resolve to the same net (which also keeps the chain acyclic).
+    pub fn alias_net(&mut self, from: NetId, to: NetId) {
+        let t = self.resolve(to);
+        if self.resolve(from) != t {
+            self.alias[from.0 as usize] = t.0;
+            self.changed = true;
+        }
+    }
+
+    pub fn drop_cell(&mut self, ci: usize) {
+        if !self.drop[ci] {
+            self.drop[ci] = true;
+            self.changed = true;
+        }
+    }
+
+    /// Swap in a replacement cell. Its outs must be a subset of the
+    /// original outs; outs it no longer drives must have been aliased.
+    pub fn replace_cell(&mut self, ci: usize, cell: Cell) {
+        self.replace[ci] = Some(cell);
+        self.changed = true;
+    }
+
+    pub fn changed(&self) -> bool {
+        self.changed
+    }
+
+    /// Rebuild `nl` with the edits applied; returns
+    /// `(cells_removed, nets_removed)`.
+    pub fn apply(self, nl: &mut Netlist) -> (usize, usize) {
+        if !self.changed {
+            return (0, 0);
+        }
+        let old = std::mem::take(nl);
+        let mut new = Netlist::new();
+        let mut map: Vec<Option<NetId>> = vec![None; old.n_nets()];
+        for (ci, c) in old.cells.iter().enumerate() {
+            if self.drop[ci] {
+                continue;
+            }
+            let cell = self.replace[ci].as_ref().unwrap_or(c);
+            for &o in &cell.outs {
+                debug_assert!(map[o.0 as usize].is_none(), "net {o:?} kept by two cells");
+                map[o.0 as usize] = Some(new.net());
+            }
+        }
+        for (ci, c) in old.cells.iter().enumerate() {
+            if self.drop[ci] {
+                continue;
+            }
+            let cell = self.replace[ci].as_ref().unwrap_or(c);
+            let ins = cell
+                .ins
+                .iter()
+                .map(|&i| {
+                    let r = self.resolve(i);
+                    map[r.0 as usize].expect("pass redirected a read to a dropped net")
+                })
+                .collect();
+            let outs = cell.outs.iter().map(|&o| map[o.0 as usize].unwrap()).collect();
+            new.add_cell(cell.kind.clone(), ins, outs);
+        }
+        for (name, bus) in &old.inputs {
+            let bus = bus
+                .iter()
+                .map(|&n| map[n.0 as usize].expect("pass dropped a declared input net"))
+                .collect();
+            new.inputs.push((name.clone(), bus));
+        }
+        for (name, bus) in &old.outputs {
+            let bus = bus
+                .iter()
+                .map(|&n| {
+                    let r = self.resolve(n);
+                    map[r.0 as usize].expect("pass dropped a declared output net")
+                })
+                .collect();
+            new.outputs.push((name.clone(), bus));
+        }
+        let cells_removed = old.n_cells() - new.n_cells();
+        let nets_removed = old.n_nets() - new.n_nets();
+        *nl = new;
+        (cells_removed, nets_removed)
+    }
+}
+
+/// Net of a `Const { value }` cell, adding one if the netlist has none.
+/// Returns the *first* such cell's net — the same canonical driver the
+/// const-dedup rewrite in [`const_prop`] aliases duplicates to.
+pub(crate) fn const_net(nl: &mut Netlist, value: bool) -> NetId {
+    for c in &nl.cells {
+        if let CellKind::Const { value: v } = c.kind {
+            if v == value {
+                return c.outs[0];
+            }
+        }
+    }
+    let q = nl.net();
+    nl.add_cell(CellKind::Const { value }, vec![], vec![q]);
+    q
+}
+
+/// Per-net constness seeded from `Const` cells only (passes that need
+/// deeper constant knowledge run after [`const_prop`] has rewritten
+/// constant logic into literal `Const` drivers).
+pub(crate) fn const_seeds(nl: &Netlist) -> Vec<Option<bool>> {
+    let mut k = vec![None; nl.n_nets()];
+    for c in &nl.cells {
+        if let CellKind::Const { value } = c.kind {
+            k[c.outs[0].0 as usize] = Some(value);
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+pub(crate) mod tests;

@@ -1,0 +1,489 @@
+//! Differential harness shared by all passes, plus per-pass unit tests.
+//!
+//! [`check_equiv`] is the correctness bar: for a raw netlist, every opt
+//! level must produce bit-exact output values on every cycle of a
+//! shared random stimulus at 1/8/64 lanes, and the optimized netlist's
+//! event-driven settle must match its own dense reference exactly
+//! (outputs *and* toggle totals on the surviving nets). Under the
+//! `dense-check` CI feature the long runs additionally cross-check
+//! every 16th settle inside the simulator itself.
+
+use super::super::builder::{Builder, Bus};
+use super::super::sim::Sim;
+use super::super::{CellKind, NetId, Netlist};
+use super::*;
+use crate::fabric::lut::Lut;
+use crate::fabric::Prim;
+use crate::util::rng::Rng;
+
+/// Assert `raw` and its optimized forms are observably identical.
+pub(crate) fn check_equiv(raw: &Netlist, seed: u64, cycles: usize) {
+    for level in [OptLevel::O1, OptLevel::O2] {
+        let mut opt = raw.clone();
+        optimize_at(&mut opt, level);
+        opt.check().unwrap_or_else(|e| panic!("{level:?} broke check(): {e}"));
+        for lanes in [1usize, 8, 64] {
+            assert_outputs_match(raw, &opt, lanes, seed ^ ((level as u64) << 8), cycles, level);
+        }
+    }
+    let mut opt = raw.clone();
+    optimize_at(&mut opt, OptLevel::O2);
+    event_matches_dense(&opt, seed ^ 0x5151, cycles);
+}
+
+/// Drive both netlists with one random stimulus; outputs must agree on
+/// every cycle, every lane.
+fn assert_outputs_match(
+    a_nl: &Netlist,
+    b_nl: &Netlist,
+    lanes: usize,
+    seed: u64,
+    cycles: usize,
+    level: OptLevel,
+) {
+    let mut sa = Sim::with_lanes(a_nl, lanes).unwrap();
+    let mut sb = Sim::with_lanes(b_nl, lanes).unwrap();
+    let in_meta: Vec<(String, usize)> =
+        a_nl.inputs.iter().map(|(n, bus)| (n.clone(), bus.len())).collect();
+    assert_eq!(
+        a_nl.outputs.iter().map(|(n, b)| (n.clone(), b.len())).collect::<Vec<_>>(),
+        b_nl.outputs.iter().map(|(n, b)| (n.clone(), b.len())).collect::<Vec<_>>(),
+        "opt must preserve the output port contract"
+    );
+    assert_eq!(
+        a_nl.inputs.iter().map(|(n, b)| (n.clone(), b.len())).collect::<Vec<_>>(),
+        b_nl.inputs.iter().map(|(n, b)| (n.clone(), b.len())).collect::<Vec<_>>(),
+        "opt must preserve the input port contract"
+    );
+    let mut rng = Rng::new(seed);
+    for cyc in 0..cycles {
+        for (name, w) in &in_meta {
+            let m = if *w >= 64 { u64::MAX } else { (1u64 << *w) - 1 };
+            for lane in 0..lanes {
+                let v = rng.next_u64() & m;
+                sa.set_input_lane(name, lane, v);
+                sb.set_input_lane(name, lane, v);
+            }
+        }
+        sa.settle();
+        sb.settle();
+        for (oi, (name, _)) in a_nl.outputs.iter().enumerate() {
+            for lane in 0..lanes {
+                assert_eq!(
+                    sa.output_unsigned_lane_at(oi, lane),
+                    sb.output_unsigned_lane_at(oi, lane),
+                    "output {name} lane {lane} cycle {cyc} at {level:?}/{lanes} lanes"
+                );
+            }
+        }
+        sa.tick();
+        sb.tick();
+    }
+}
+
+/// Event-driven settle of an (optimized) netlist against its own dense
+/// reference: identical outputs every cycle and identical toggle totals
+/// over the run — the event scheduler's wake signal is the toggle diff,
+/// so this pins the fanout-CSR/`comb_levels` invariants post-rewrite.
+fn event_matches_dense(nl: &Netlist, seed: u64, cycles: usize) {
+    let lanes = 8;
+    let mut ev = Sim::with_lanes(nl, lanes).unwrap();
+    let mut dn = Sim::with_lanes(nl, lanes).unwrap();
+    dn.set_force_dense(true);
+    let in_meta: Vec<(String, usize)> =
+        nl.inputs.iter().map(|(n, bus)| (n.clone(), bus.len())).collect();
+    let mut rng = Rng::new(seed);
+    for cyc in 0..cycles {
+        for (name, w) in &in_meta {
+            let m = if *w >= 64 { u64::MAX } else { (1u64 << *w) - 1 };
+            for lane in 0..lanes {
+                let v = rng.next_u64() & m;
+                ev.set_input_lane(name, lane, v);
+                dn.set_input_lane(name, lane, v);
+            }
+        }
+        ev.settle();
+        dn.settle();
+        for (oi, (name, _)) in nl.outputs.iter().enumerate() {
+            for lane in 0..lanes {
+                assert_eq!(
+                    ev.output_unsigned_lane_at(oi, lane),
+                    dn.output_unsigned_lane_at(oi, lane),
+                    "event vs dense: output {name} lane {lane} cycle {cyc}"
+                );
+            }
+        }
+        ev.tick();
+        dn.tick();
+    }
+    assert_eq!(ev.toggle_total(), dn.toggle_total(), "event vs dense toggle totals");
+}
+
+/// Random registered-arithmetic netlist with deliberately optimizable
+/// material: constant operands, sign-extension duplicate nets, dead
+/// logic, and pass-through/stuck registers.
+fn random_netlist(seed: u64) -> Netlist {
+    let mut rng = Rng::new(seed);
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let en = b.input("en", 1).bit(0);
+    let rst = b.input("rst", 1).bit(0);
+    let a = b.input("a", 6);
+    let c = b.input("c", 5);
+    let mut pool: Vec<Bus> = vec![a.clone(), c.clone()];
+    pool.push(b.const_bus(rng.range_i64(-8, 7), 5));
+    pool.push(b.sext(&a, 9));
+    for _ in 0..14 {
+        let x = pool[rng.index(pool.len())].clone();
+        let y = pool[rng.index(pool.len())].clone();
+        let next = match rng.below(6) {
+            0 => b.add(&x, &y),
+            1 => b.sub(&x, &y),
+            2 => {
+                let w = x.width().min(y.width());
+                let (xt, yt) = (b.trunc(&x, w), b.trunc(&y, w));
+                b.mux2(y.msb(), &xt, &yt)
+            }
+            3 => b.register(&x, en, rst),
+            4 => b.increment(&x),
+            _ => {
+                let g = b.and2(x.bit(0), y.msb());
+                let h = b.xor2(g, x.msb());
+                let mut bits = x.0.clone();
+                bits[0] = h;
+                Bus(bits)
+            }
+        };
+        // Cap widths so carry chains stay small.
+        let next = if next.width() > 12 { b.trunc(&next, 12) } else { next };
+        pool.push(next);
+    }
+    // Dead logic: built, never observed.
+    let dead = b.add(&a, &c);
+    let _ = b.register(&dead, en, rst);
+    // Stuck register: clock-enable tied low.
+    let z = b.zero();
+    let stuck = b.register(&a, z, rst);
+    let last = pool.len() - 1;
+    let obs = b.add(&pool[last], &Bus(stuck.0.clone()));
+    let y0 = pool[rng.index(pool.len())].clone();
+    b.output("y0", &y0);
+    b.output("y1", &obs);
+    nl
+}
+
+#[test]
+fn random_netlists_equivalent_at_all_levels_and_lanes() {
+    for seed in [1u64, 7, 42, 1234, 0xDEAD] {
+        let nl = random_netlist(seed);
+        nl.check().unwrap();
+        check_equiv(&nl, seed.wrapping_mul(0x9E37), 24);
+    }
+}
+
+#[test]
+fn every_shipped_ip_equivalent_post_opt() {
+    use crate::ips::{ConvKind, ConvParams};
+    let p = ConvParams::paper_8bit();
+    for kind in ConvKind::ALL {
+        let raw = match kind {
+            ConvKind::Conv1 => crate::ips::conv1::generate(&p),
+            ConvKind::Conv2 => crate::ips::conv2::generate(&p),
+            ConvKind::Conv3 => crate::ips::conv3::generate(&p),
+            ConvKind::Conv4 => crate::ips::conv4::generate(&p),
+        }
+        .unwrap();
+        check_equiv(&raw.netlist, 0xC0FFEE ^ kind as u64, 20);
+    }
+    let fc = crate::ips::fc::generate(&p, 32).unwrap();
+    check_equiv(&fc.netlist, 0xFC, 20);
+    let pool = crate::ips::pool::generate(8, 4);
+    check_equiv(&pool.netlist, 0xB001, 20);
+    let relu = crate::ips::relu::generate(8);
+    check_equiv(&relu.netlist, 0x3E1, 20);
+}
+
+#[test]
+fn conv1_shrinks_measurably() {
+    let p = crate::ips::ConvParams::paper_8bit();
+    let mut nl = crate::ips::conv1::generate(&p).unwrap().netlist;
+    let pre_luts = *nl.census().get(&Prim::Lut).unwrap_or(&0);
+    let pre_ffs = *nl.census().get(&Prim::Ff).unwrap_or(&0);
+    let report = optimize_at(&mut nl, OptLevel::O2);
+    assert!(report.cells_removed() > 0, "O2 must remove cells from Conv_1");
+    assert!(report.iterations < MAX_ROUNDS, "pipeline must converge, not hit the round cap");
+    let post_luts = report.post_count(Prim::Lut);
+    let post_ffs = report.post_count(Prim::Ff);
+    assert!(
+        post_luts + post_ffs < pre_luts + pre_ffs,
+        "LUT+FF count must shrink: {pre_luts}+{pre_ffs} -> {post_luts}+{post_ffs}"
+    );
+    let by_pass: usize = report.passes.iter().map(|p| p.cells_removed).sum();
+    assert_eq!(by_pass, report.cells_removed(), "per-pass stats must account for every removal");
+}
+
+#[test]
+fn o0_is_identity() {
+    let nl = random_netlist(3);
+    let mut opt = nl.clone();
+    let report = optimize_at(&mut opt, OptLevel::O0);
+    assert_eq!(report.cells_removed(), 0);
+    assert_eq!(report.iterations, 0);
+    assert_eq!(opt.n_cells(), nl.n_cells());
+    assert_eq!(opt.n_nets(), nl.n_nets());
+}
+
+#[test]
+fn shipped_ips_have_zero_unread_nets_post_opt() {
+    use crate::ips::{ConvKind, ConvParams};
+    let p = ConvParams::paper_8bit();
+    for kind in ConvKind::ALL {
+        let mut nl = crate::ips::generate(kind, &p).unwrap().netlist;
+        optimize_at(&mut nl, OptLevel::O2);
+        let (_, unread) = nl.check_warn().unwrap();
+        assert!(unread.is_empty(), "{}: {} unread nets post-opt", kind.name(), unread.len());
+    }
+    let mut nl = crate::ips::fc::generate(&p, 32).unwrap().netlist;
+    optimize_at(&mut nl, OptLevel::O2);
+    assert!(nl.check_warn().unwrap().1.is_empty(), "FC unread nets post-opt");
+}
+
+#[test]
+fn unread_nets_flags_unobservable_cells() {
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let a = b.input("a", 4);
+    let c = b.input("c", 4);
+    let dead = b.add(&a, &c); // driven, never read, not an output
+    let live = b.sub(&a, &c);
+    let _ = dead;
+    b.output("y", &live);
+    let (_, unread) = nl.check_warn().unwrap();
+    assert!(!unread.is_empty(), "dead adder outputs must be flagged");
+    let mut opt = nl;
+    optimize_at(&mut opt, OptLevel::O1);
+    assert!(opt.check_warn().unwrap().1.is_empty(), "DCE must clear the warnings");
+}
+
+// ---------------- per-pass unit tests ----------------
+
+#[test]
+fn const_prop_folds_constant_pins_and_outputs() {
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let a = b.input("a", 1).bit(0);
+    let one = b.one();
+    let z = b.zero();
+    let y_and = b.and2(a, one); // identity on a
+    let y_or0 = b.xor2(a, z); // identity on a
+    let y_const = b.and2(a, z); // constant 0
+    let y_dup = b.xor2(a, a); // constant 0 via duplicate pins
+    b.output("y", &Bus(vec![y_and, y_or0, y_const, y_dup]));
+    let report = optimize_at(&mut nl, OptLevel::O1);
+    let luts = report.post_count(Prim::Lut);
+    assert_eq!(luts, 0, "every LUT folds to identity or constant, got {luts}");
+    // Semantics: y = {a, a, 0, 0}.
+    let mut sim = Sim::new(&nl).unwrap();
+    for v in [0u64, 1] {
+        sim.set_input("a", v);
+        sim.settle();
+        assert_eq!(sim.output_unsigned("y"), v | (v << 1));
+        sim.tick();
+    }
+}
+
+#[test]
+fn const_prop_propagates_through_chains_in_one_pass() {
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let a = b.input("a", 1).bit(0);
+    let z = b.zero();
+    // not(not(and(a, 0))) — the whole cone is constant 0.
+    let g = b.and2(a, z);
+    let h = b.not(g);
+    let y = b.not(h);
+    b.output("y", &Bus(vec![y]));
+    let pass = const_prop::ConstProp;
+    let st = Pass::run(&pass, &mut nl);
+    assert!(st.cells_removed >= 3, "one application folds the chain, got {st:?}");
+    let mut sim = Sim::new(&nl).unwrap();
+    sim.set_input("a", 1);
+    sim.settle();
+    assert_eq!(sim.output_unsigned("y"), 0);
+}
+
+#[test]
+fn const_prop_dedupes_const_cells() {
+    let mut nl = Netlist::new();
+    let q0 = nl.net();
+    let q1 = nl.net();
+    let y = nl.net();
+    nl.add_cell(CellKind::Const { value: true }, vec![], vec![q0]);
+    nl.add_cell(CellKind::Const { value: true }, vec![], vec![q1]);
+    nl.add_cell(CellKind::Fdre, vec![q0, q1, q0], vec![y]);
+    nl.outputs.push(("y".into(), vec![y]));
+    let pass = const_prop::ConstProp;
+    let st = Pass::run(&pass, &mut nl);
+    assert_eq!(st.cells_removed, 1, "duplicate const driver removed");
+}
+
+#[test]
+fn dce_removes_unobservable_cone_keeps_inputs() {
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let a = b.input("a", 4);
+    let unused = b.input("unused", 3);
+    let dead = b.add(&a, &unused);
+    let deader = b.increment(&dead);
+    let _ = deader;
+    let live = b.increment(&a);
+    b.output("y", &live);
+    let pre = nl.n_cells();
+    let pass = dce::Dce;
+    let st = Pass::run(&pass, &mut nl);
+    assert!(st.cells_removed > 0);
+    assert!(nl.n_cells() < pre);
+    assert_eq!(nl.inputs.len(), 2, "input ports survive even when unread");
+    nl.check().unwrap();
+    let mut sim = Sim::new(&nl).unwrap();
+    sim.set_input("a", 5);
+    sim.set_input("unused", 0);
+    sim.settle();
+    assert_eq!(sim.output_unsigned("y"), 6);
+}
+
+#[test]
+fn lut_merge_collapses_single_fanout_chain() {
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let a = b.input("a", 1).bit(0);
+    let c = b.input("c", 1).bit(0);
+    let d = b.input("d", 1).bit(0);
+    // and(and(a, c), d): two LUTs with a single-fanout link -> one LUT3.
+    let g = b.and2(a, c);
+    let y = b.and2(g, d);
+    b.output("y", &Bus(vec![y]));
+    let pass = lut_merge::LutMerge;
+    let st = Pass::run(&pass, &mut nl);
+    assert_eq!(st.cells_removed, 1, "producer absorbed");
+    assert_eq!(*nl.census().get(&Prim::Lut).unwrap(), 1);
+    let mut sim = Sim::new(&nl).unwrap();
+    for bits in 0..8u64 {
+        sim.set_input("a", bits & 1);
+        sim.set_input("c", (bits >> 1) & 1);
+        sim.set_input("d", (bits >> 2) & 1);
+        sim.settle();
+        assert_eq!(sim.output_unsigned("y"), u64::from(bits == 7), "bits {bits:03b}");
+        sim.tick();
+    }
+}
+
+#[test]
+fn lut_merge_respects_fanout_and_budget() {
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let a = b.input("a", 1).bit(0);
+    let c = b.input("c", 1).bit(0);
+    let shared = b.xor2(a, c); // fanout 2: must not be absorbed
+    let y0 = b.and2(shared, a);
+    let y1 = b.xor2(shared, c);
+    b.output("y", &Bus(vec![y0, y1]));
+    let pre = nl.n_cells();
+    let pass = lut_merge::LutMerge;
+    let st = Pass::run(&pass, &mut nl);
+    assert_eq!(st.cells_removed, 0, "{st:?}");
+    assert_eq!(nl.n_cells(), pre);
+}
+
+#[test]
+fn ff_forward_merges_duplicate_registers() {
+    let mut raw = Netlist::new();
+    let mut b = Builder::new(&mut raw);
+    let en = b.input("en", 1).bit(0);
+    let rst = b.input("rst", 1).bit(0);
+    let a = b.input("a", 3);
+    // Sign-extension registers the MSB net once per padded bit — the
+    // exact duplicate-FDRE shape the builder mints.
+    let wide = b.sext(&a, 8);
+    let q = b.register(&wide, en, rst);
+    b.output("q", &q);
+    let mut nl = raw.clone();
+    let pass = ff_forward::FfForward;
+    let st = Pass::run(&pass, &mut nl);
+    assert_eq!(st.cells_removed, 5, "8 FDREs, 3 distinct D pins -> 5 merged; {st:?}");
+    check_equiv(&raw, 99, 16);
+}
+
+#[test]
+fn ff_forward_collapses_stuck_registers() {
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let a = b.input("a", 2);
+    let z = b.zero();
+    let one = b.one();
+    let never_enabled = b.register(&a, z, z);
+    let always_reset = b.register(&a, one, one);
+    let cat = b.concat(&never_enabled, &always_reset);
+    b.output("q", &cat);
+    let pass = ff_forward::FfForward;
+    let st = Pass::run(&pass, &mut nl);
+    assert_eq!(st.cells_removed, 4, "all four FDREs are stuck at zero; {st:?}");
+    let mut sim = Sim::new(&nl).unwrap();
+    sim.set_input("a", 3);
+    sim.settle();
+    sim.tick();
+    sim.settle();
+    assert_eq!(sim.output_unsigned("q"), 0);
+}
+
+#[test]
+fn ff_forward_keeps_d_const_one_register() {
+    // D≡1 is NOT collapsible: Q is 0 until the first enabled edge.
+    let mut nl = Netlist::new();
+    let mut b = Builder::new(&mut nl);
+    let en = b.input("en", 1).bit(0);
+    let one = b.one();
+    let z = b.zero();
+    let q = b.register(&Bus(vec![one]), en, z);
+    b.output("q", &q);
+    let raw = nl.clone();
+    let pass = ff_forward::FfForward;
+    let st = Pass::run(&pass, &mut nl);
+    assert_eq!(st.cells_removed, 0, "{st:?}");
+    check_equiv(&raw, 7, 12);
+}
+
+#[test]
+fn opt_level_parsing() {
+    assert_eq!(OptLevel::parse("0"), Some(OptLevel::O0));
+    assert_eq!(OptLevel::parse(" 2 "), Some(OptLevel::O2));
+    assert_eq!(OptLevel::parse("3"), None);
+    assert_eq!(OptLevel::parse(""), None);
+    assert_eq!(OptLevel::O2.to_string(), "2");
+}
+
+#[test]
+fn fold_func_classifies() {
+    use const_prop::{fold_func, Folded};
+    let n0 = NetId(0);
+    let n1 = NetId(1);
+    let konst = vec![None, Some(true)];
+    // and2(a, 1) -> identity on a.
+    match fold_func(&Lut::and2(), &[n0, n1], &konst) {
+        Folded::Ident(n) => assert_eq!(n, n0),
+        _ => panic!("expected identity"),
+    }
+    // xor2(a, a) -> constant 0.
+    match fold_func(&Lut::xor2(), &[n0, n0], &konst) {
+        Folded::Const(v) => assert!(!v),
+        _ => panic!("expected const"),
+    }
+    // xor2(a, 1) -> not(a).
+    match fold_func(&Lut::xor2(), &[n0, n1], &konst) {
+        Folded::Fun(ins, f) => {
+            assert_eq!(ins, vec![n0]);
+            assert_eq!(f, Lut::not1());
+        }
+        _ => panic!("expected function"),
+    }
+}

@@ -8,6 +8,9 @@
 //! * [`table3`] — Comparison of optimization techniques, with the
 //!   qualitative ratings *derived* from quantitative policy sweeps rather
 //!   than asserted.
+//! * [`opt_table`] — the netlist optimization pass pipeline's per-engine
+//!   report: pre/post primitive counts and per-pass work at O2
+//!   (`acf tables --table opt`).
 //! * [`sweep_adaptation`] — throughput vs device across policies (Sweep-A).
 //! * [`sweep_precision`] — operand-width sweep per IP (Sweep-B).
 //! * [`plan_table`] — the unified engine-plan report: one row per planned
@@ -108,6 +111,58 @@ pub fn table2(dev: &Device, clock_mhz: f64) -> Table {
             p.3.to_string(),
             fnum(p.4, 3),
             fnum(p.5, 3),
+        ]);
+    }
+    t
+}
+
+/// The netlist optimization pass pipeline's report: every shipped engine
+/// generated *raw*, then optimized at O2, with pre → post primitive
+/// counts and the per-pass removal breakdown. This is the pre/post face
+/// of the `netlist::opt` pipeline — `table2` always reports the
+/// *optimized* numbers, this table shows what the passes earned.
+pub fn opt_table() -> Table {
+    use crate::fabric::Prim;
+    use crate::netlist::opt::{optimize_at, OptLevel};
+    let p = ConvParams::paper_8bit();
+    let mut engines: Vec<(&'static str, crate::netlist::Netlist)> = Vec::new();
+    for kind in ConvKind::ALL {
+        let ip = match kind {
+            ConvKind::Conv1 => ips::conv1::generate(&p),
+            ConvKind::Conv2 => ips::conv2::generate(&p),
+            ConvKind::Conv3 => ips::conv3::generate(&p),
+            ConvKind::Conv4 => ips::conv4::generate(&p),
+        }
+        .expect("paper config always feasible");
+        engines.push((kind.name(), ip.netlist));
+    }
+    engines.push(("FC", ips::fc::generate(&p, 32).expect("fc fan-in 32 feasible").netlist));
+    engines.push(("MaxPool", ips::pool::generate(8, 4).netlist));
+    engines.push(("ReLU", ips::relu::generate(8).netlist));
+    let mut t = Table::new(vec![
+        "engine", "LUTs", "FFs", "CARRY8", "cells-", "nets-", "retabled", "rounds", "per-pass cells-",
+    ])
+    .numeric();
+    for (name, mut nl) in engines {
+        let rep = optimize_at(&mut nl, OptLevel::O2);
+        let arrow = |p: Prim| format!("{} -> {}", rep.pre_count(p), rep.post_count(p));
+        let per_pass = rep
+            .passes
+            .iter()
+            .filter(|s| s.cells_removed > 0)
+            .map(|s| format!("{} {}", s.pass, s.cells_removed))
+            .collect::<Vec<_>>()
+            .join(", ");
+        t.row(vec![
+            name.to_string(),
+            arrow(Prim::Lut),
+            arrow(Prim::Ff),
+            arrow(Prim::Carry8),
+            rep.cells_removed().to_string(),
+            rep.nets_removed().to_string(),
+            rep.passes.iter().map(|s| s.luts_retabled).sum::<usize>().to_string(),
+            rep.iterations.to_string(),
+            if per_pass.is_empty() { "none".into() } else { per_pass },
         ]);
     }
     t
@@ -626,6 +681,22 @@ mod tests {
         assert!(dsp.failed_devices >= 1);
         let q = a.iter().find(|x| x.policy == "quantize-first").unwrap();
         assert!(!q.multi_precision);
+    }
+
+    #[test]
+    fn opt_table_reports_per_engine_shrink() {
+        let t = opt_table();
+        // Conv_1..4, FC, MaxPool, ReLU — one row each.
+        assert_eq!(t.n_rows(), 7);
+        assert_eq!(t.cell(0, 0), "Conv_1");
+        // Conv_1's counter buffers must fold: removals > 0 with at least
+        // one pass credited for them.
+        assert!(t.cell(0, 4).parse::<usize>().unwrap() > 0, "cells-: {}", t.cell(0, 4));
+        assert_ne!(t.cell(0, 8), "none");
+        let md = t.markdown();
+        for needle in ["FC", "MaxPool", "ReLU", "->"] {
+            assert!(md.contains(needle), "missing {needle} in:\n{md}");
+        }
     }
 
     #[test]

@@ -76,14 +76,22 @@ impl Utilization {
 /// Count primitives and run the CLB packer.
 pub fn synthesize(nl: &Netlist) -> Utilization {
     let census = nl.census();
-    let luts = *census.get(&Prim::Lut).unwrap_or(&0);
     let regs = *census.get(&Prim::Ff).unwrap_or(&0);
     let carry8 = *census.get(&Prim::Carry8).unwrap_or(&0);
     let dsps = *census.get(&Prim::Dsp48e2).unwrap_or(&0);
     let bram18 = *census.get(&Prim::Ramb18).unwrap_or(&0);
 
-    // LUTs feeding carry chains co-locate with their CARRY8 (up to 8 each).
-    let carry_hosted_luts = count_carry_source_luts(nl).min(luts);
+    // On UltraScale+ a CARRY8 S pin is fed only by the O6 output of the
+    // LUT in the same slice position: when the netlist drives S with a
+    // bare signal (the optimizer folds identity LUTs away), the router
+    // still burns that LUT site as a route-thru. Count those back in so
+    // utilization reflects the fabric, not the simulated netlist.
+    let route_thrus = count_carry_route_thrus(nl);
+    let luts = *census.get(&Prim::Lut).unwrap_or(&0) + route_thrus;
+
+    // LUTs feeding carry chains co-locate with their CARRY8 (up to 8
+    // each); route-thrus are S-feeders by definition, so they pack there.
+    let carry_hosted_luts = (count_carry_source_luts(nl) + route_thrus).min(luts);
     let loose_luts = luts - carry_hosted_luts;
     let carry_clbs = carry8;
     let lut_clbs = (loose_luts as f64 / (8.0 * LUT_PACK_EFF)).ceil() as u64;
@@ -92,6 +100,30 @@ pub fn synthesize(nl: &Netlist) -> Utilization {
     let clbs = (carry_clbs + lut_clbs).max(ff_clbs).max(u64::from(luts + regs > 0));
 
     Utilization { luts, regs, carry8, clbs, dsps, bram18 }
+}
+
+/// Count CARRY8 S pins driven by neither a LUT nor a constant: each such
+/// pin occupies its slice's LUT site as a route-thru LUT (UltraScale+
+/// CARRY8 S inputs come only from the co-located LUT's O6; constants tie
+/// off inside the carry). Pre-optimization netlists always interpose a
+/// real LUT (`addsub_w` / `add_carry_in`), so this is zero for raw IPs;
+/// it recovers the sites the netlist optimizer's identity-fold frees.
+fn count_carry_route_thrus(nl: &Netlist) -> u64 {
+    let mut n = 0u64;
+    for c in &nl.cells {
+        if !matches!(c.kind, CellKind::Carry8) {
+            continue;
+        }
+        for &s in &c.ins[..8] {
+            let lut_or_const = nl.driver(s).is_some_and(|(d, _)| {
+                matches!(nl.cell(d).kind, CellKind::Lut { .. } | CellKind::Const { .. })
+            });
+            if !lut_or_const {
+                n += 1;
+            }
+        }
+    }
+    n
 }
 
 /// Count LUT cells whose outputs drive only CARRY8 S/DI pins (these pack
@@ -176,6 +208,29 @@ mod tests {
             let density = u.luts as f64 / u.clbs as f64;
             assert!((2.0..=8.0).contains(&density), "{kind:?} density {density}");
         }
+    }
+
+    #[test]
+    fn carry_route_thrus_keep_utilization_honest() {
+        // The optimizer folds `add_carry_in`'s identity LUTs out of the
+        // netlist; the fabric still burns those slice LUT sites to reach
+        // the CARRY8 S pins, so synthesize() must count them back in.
+        let mut nl = crate::netlist::Netlist::new();
+        let mut b = crate::netlist::builder::Builder::new(&mut nl);
+        let a = b.input("a", 4);
+        let one = b.one();
+        let sum = b.add_carry_in(&a, one);
+        b.output("y", &sum);
+        let pre = synthesize(&nl);
+        assert_eq!(pre.luts, 4, "raw add_carry_in interposes one LUT per bit");
+        crate::netlist::opt::optimize_at(&mut nl, crate::netlist::opt::OptLevel::O2);
+        assert!(
+            nl.census().get(&Prim::Lut).is_none(),
+            "the netlist itself sheds the identity buf1s"
+        );
+        let post = synthesize(&nl);
+        assert_eq!(post.luts, 4, "folded S-feeders return as route-thrus");
+        assert_eq!(post.clbs, pre.clbs);
     }
 
     #[test]
