@@ -18,12 +18,10 @@
 use acf::cnn::data::Dataset;
 use acf::cnn::model::{Model, Weights};
 use acf::fabric::device::by_name;
-use acf::planner::Policy;
-use acf::serve::{
-    open_loop, plan_fixed_fleet, plan_fleet, plan_fleet_spec, FleetSpec, ServeConfig, Server,
-};
+use acf::serve::{open_loop, FleetSpec, ServeConfig, Server};
 use acf::trace::{RingSink, Tracer};
 use acf::util::bench::{quick_env, report, write_json, Bench, Stats};
+use std::sync::Arc;
 
 fn main() {
     // ACF_BENCH_QUICK=1 (CI): shorter timing budgets and smaller
@@ -38,7 +36,7 @@ fn main() {
     let dev = by_name("zcu104").unwrap();
     let weights = Weights::random(&model, 1);
     // Fixed replica count so the series is comparable across machines.
-    let fp = plan_fixed_fleet(&model, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let fp = FleetSpec::single(dev.clone(), Some(2)).plan().model(&model).run().unwrap();
     let corpus: Vec<Vec<i64>> =
         Dataset::generate(32, 2, 16, 16).images.iter().map(|i| i.pix.clone()).collect();
     let mut stats = Vec::new();
@@ -134,8 +132,9 @@ fn main() {
     //    whatever its shard).
     {
         let spec = FleetSpec::parse("zcu104,zu5ev", &[]).unwrap();
-        let hetero = plan_fleet_spec(&model, &spec, 200.0, &Policy::adaptive(), None, 4).unwrap();
-        let single = plan_fleet(&model, &dev, 200.0, &Policy::adaptive(), None, 4).unwrap();
+        let hetero = spec.plan().model(&model).max_replicas(4).run().unwrap();
+        let single =
+            FleetSpec::single(dev.clone(), None).plan().model(&model).max_replicas(4).run().unwrap();
         let per_watt = |img_s: f64, watts: f64| img_s / watts.max(1e-9);
         let hetero_eff = per_watt(hetero.fleet_img_s, hetero.static_w);
         let single_eff = per_watt(single.fleet_img_s, single.static_w);
@@ -178,12 +177,8 @@ fn main() {
         // Measured: open loop on the mix, per-group dispatch visible.
         const OFFERED: f64 = 1_500.0;
         let requests = open_requests;
-        let server = Server::start_grouped(
-            hetero.deploy(model.clone(), weights.clone()),
-            hetero.replica_groups(),
-            hetero.group_labels(),
-            &ServeConfig::default(),
-        );
+        let server =
+            Server::start(hetero.deploy(model.clone(), weights.clone()), &ServeConfig::default());
         let outcomes = open_loop(&server, &corpus, requests, OFFERED, 0xBE7D);
         let served = outcomes.iter().filter(|o| o.result.is_ok()).count();
         let snap = server.shutdown();
@@ -211,6 +206,45 @@ fn main() {
             format!("serve: hetero p99 latency @ {OFFERED:.0} img/s offered (zcu104+zu5ev)"),
             snap.completed,
             snap.p99_ms * 1e6,
+        ));
+    }
+
+    // 5. Multi-model consolidation: two models sharing one four-part
+    //    fleet vs two dedicated two-part fleets, modeled ns/img. The
+    //    relation gate pins the shared fleet to >= 0.9x the dedicated
+    //    total — consolidation must not cost meaningful throughput.
+    {
+        let tiny = Arc::new(Model::lenet_tiny());
+        let wide = Arc::new(Model::lenet_wide(2));
+        let shared_spec = FleetSpec::parse("zcu104,zcu104", &[]).unwrap();
+        let shared = shared_spec
+            .plan()
+            .models(vec![Arc::clone(&tiny), Arc::clone(&wide)])
+            .max_replicas(2)
+            .run()
+            .unwrap();
+        let half = |m: &Model| {
+            FleetSpec::single(dev.clone(), None).plan().model(m).max_replicas(2).run().unwrap()
+        };
+        let dedicated_img_s = half(&tiny).fleet_img_s + half(&wide).fleet_img_s;
+        println!(
+            "two-model shared fleet: {:.0} img/s across {} groups vs {:.0} img/s on \
+             dedicated halves ({:.1}% of dedicated)",
+            shared.fleet_img_s,
+            shared.groups.len(),
+            dedicated_img_s,
+            100.0 * shared.fleet_img_s / dedicated_img_s.max(1e-9)
+        );
+        stats.push(Stats::flat(
+            "serve: modeled ns/img — two-model shared fleet (lenet-tiny + lenet-wide-2x)"
+                .to_string(),
+            shared.replicas() as u64,
+            1e9 / shared.fleet_img_s.max(1e-9),
+        ));
+        stats.push(Stats::flat(
+            "serve: modeled ns/img — two dedicated single-model fleets".to_string(),
+            shared.replicas() as u64,
+            1e9 / dedicated_img_s.max(1e-9),
         ));
     }
 

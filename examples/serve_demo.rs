@@ -13,8 +13,8 @@ use acf::cnn::model::{Model, Weights};
 use acf::fabric::device::by_name;
 use acf::planner::Policy;
 use acf::serve::{
-    open_loop, plan_fleet_spec, FleetFrontier, FleetSpec, RebalanceConfig, Rebalancer,
-    ServeConfig, ServeError, Server,
+    open_loop, open_loop_tenants, FleetFrontier, FleetSpec, RebalanceConfig, Rebalancer,
+    ServeConfig, ServeError, Server, TenantSpec,
 };
 use std::sync::Arc;
 use std::time::Duration;
@@ -27,7 +27,12 @@ fn main() {
     // The paper's board plus a smaller sibling and a DSP-starved edge
     // part: three very different resource envelopes in one fleet.
     let spec = FleetSpec::parse("zcu104,zu5ev,edge-nodsp", &[]).expect("built-in devices");
-    let fp = plan_fleet_spec(&model, &spec, 200.0, &policy, None, 4)
+    let fp = spec
+        .plan()
+        .model(&model)
+        .policy(&policy)
+        .max_replicas(4)
+        .run()
         .expect("lenet-tiny plans on every catalog part");
     for g in &fp.groups {
         let convs: Vec<String> = g
@@ -56,13 +61,7 @@ fn main() {
 
     println!("\n== 2. deploy: persistent pipelines, shared weights, per-group plans ==");
     let weights = Weights::random(&model, 42);
-    let replicas = fp.deploy(model.clone(), weights.clone());
-    let server = Server::start_grouped(
-        replicas,
-        fp.replica_groups(),
-        fp.group_labels(),
-        &ServeConfig::default(),
-    );
+    let server = Server::start(fp.deploy(model.clone(), weights.clone()), &ServeConfig::default());
     println!(
         "  {} replica pipelines up across {} device groups ({} layer workers each)",
         fp.replicas(),
@@ -121,18 +120,15 @@ fn main() {
     let fp = frontier.fleet_at(&[1]);
     let model_arc = Arc::new(model.clone());
     let weights_arc = Arc::new(weights.clone());
-    let server = Arc::new(Server::start_grouped(
+    let server = Arc::new(Server::start(
         fp.deploy_shared(Arc::clone(&model_arc), Arc::clone(&weights_arc)),
-        fp.replica_groups(),
-        fp.group_labels(),
         &ServeConfig::default(),
     ));
     let rb = Rebalancer::start(
         Arc::clone(&server),
         frontier,
         &fp,
-        model_arc,
-        weights_arc,
+        vec![weights_arc],
         RebalanceConfig {
             window: Duration::from_millis(100),
             cooldown: Duration::from_millis(200),
@@ -180,4 +176,43 @@ fn main() {
         g.spawned, g.drained, g.drain_failed
     );
     assert_eq!(snap.completed, snap.accepted, "no admitted request may be dropped");
+
+    println!("\n== 5. multi-tenant: two models share one fleet under quota ==");
+    // Two zcu104 parts carry two different models; two tenants route by
+    // name and split admission 3:1 under weighted-fair queueing.
+    let tiny = Arc::new(Model::lenet_tiny());
+    let wide = Arc::new(Model::lenet_wide(2));
+    let zoo_spec = FleetSpec::parse("zcu104,zcu104", &[]).expect("built-in devices");
+    let zoo = zoo_spec
+        .plan()
+        .models(vec![Arc::clone(&tiny), Arc::clone(&wide)])
+        .max_replicas(2)
+        .run()
+        .expect("both models plan on a zcu104 pair");
+    for g in &zoo.groups {
+        println!(
+            "  {} [{}]: {} replica(s), {:.0} img/s group",
+            g.device.name, zoo.models[g.model_id].name, g.replicas, g.group_img_s
+        );
+    }
+    let zoo_weights =
+        vec![Arc::new(Weights::random(&tiny, 42)), Arc::new(Weights::random(&wide, 42))];
+    let mut cfg = ServeConfig::sized(16, 4);
+    cfg.tenants.tenants = vec![
+        TenantSpec::new("acme", "lenet-tiny", 3.0),
+        TenantSpec::new("bitworks", "lenet-wide-2x", 1.0),
+    ];
+    let server = Server::start(zoo.deploy_zoo(&zoo_weights), &cfg);
+    let corpora = vec![corpus.clone(), corpus.clone()];
+    let outcomes = open_loop_tenants(&server, &corpora, 400, 2_500.0, 0xACF6);
+    let served = outcomes.iter().filter(|(_, o)| o.result.is_ok()).count();
+    let snap = server.shutdown();
+    println!("  {served}/{} tenant-tagged requests served", outcomes.len());
+    for t in &snap.tenants {
+        println!(
+            "  {} -> {} (quota {}): {} accepted, {:.1}% shed, p99 {:.2} ms",
+            t.name, t.model, t.quota, t.accepted, t.shed_pct, t.p99_ms
+        );
+    }
+    assert_eq!(snap.completed, snap.accepted, "tenanted admission keeps the promise too");
 }

@@ -23,4 +23,4 @@ pub mod model;
 
 pub use data::{render_digit, Dataset};
 pub use infer::{infer, infer_trace};
-pub use model::{Layer, Model, Weights};
+pub use model::{model_by_name, Layer, Model, Weights, MODEL_ZOO};

@@ -31,6 +31,24 @@ pub struct Model {
     pub layers: Vec<Layer>,
 }
 
+/// Registry names resolvable by [`model_by_name`] — the built-in model zoo
+/// that multi-model serving composes fleets over. Catalog-file models and
+/// report-only variants layer on top of this list at the CLI.
+pub const MODEL_ZOO: &[&str] = &["lenet-tiny", "lenet-wide-2x", "lenet-wide-4x"];
+
+/// Resolve a built-in zoo model by name. Accepts the canonical names in
+/// [`MODEL_ZOO`] plus the CLI shorthands `lenet-wide` (→ 2x), `lenet-wide2`,
+/// and `lenet-wide4`. Returns `None` for unknown names so callers can fall
+/// back to catalogs or model files.
+pub fn model_by_name(name: &str) -> Option<Model> {
+    match name {
+        "lenet-tiny" => Some(Model::lenet_tiny()),
+        "lenet-wide" | "lenet-wide2" | "lenet-wide-2x" => Some(Model::lenet_wide(2)),
+        "lenet-wide4" | "lenet-wide-4x" => Some(Model::lenet_wide(4)),
+        _ => None,
+    }
+}
+
 /// Shape of an activation tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Shape {
@@ -307,6 +325,19 @@ mod tests {
             *in_ch = 3;
         }
         assert!(m2.shapes().is_err());
+    }
+
+    #[test]
+    fn registry_resolves_zoo_names_and_shorthands() {
+        for name in MODEL_ZOO {
+            let m = model_by_name(name).expect("zoo name resolves");
+            assert_eq!(&m.name, name, "canonical zoo names round-trip");
+            assert!(m.shapes().is_ok());
+        }
+        assert_eq!(model_by_name("lenet-wide").unwrap().name, "lenet-wide-2x");
+        assert_eq!(model_by_name("lenet-wide2").unwrap().name, "lenet-wide-2x");
+        assert_eq!(model_by_name("lenet-wide4").unwrap().name, "lenet-wide-4x");
+        assert!(model_by_name("resnet-900").is_none());
     }
 
     #[test]

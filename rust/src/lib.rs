@@ -35,18 +35,22 @@
 //!   by bounded channels, shared by every caller — with per-layer
 //!   metrics keyed off the plan.
 //! * [`serve`] — the traffic-scale serving tier (`acf serve`): a fleet
-//!   planner that replicates the whole network across a *heterogeneous
-//!   device catalog* (one replica group per part, each under divided
-//!   budgets with per-replica coefficient BRAM charged off the top,
-//!   memoized as a count → plan frontier), a request scheduler with a
-//!   bounded admission queue, per-replica micro-batch clamps,
-//!   throughput-weighted dispatch, and a *dynamic* replica set, a live
-//!   rebalance controller that grows/shrinks device groups under load
-//!   from the memoized frontier (`acf serve --rebalance`), fleet
-//!   metrics (p50/p95/p99 latency, sustained throughput, per-replica
-//!   and per-device-group utilization, drain summaries, the rebalance
-//!   event log), and a deterministic open-loop / step-load synthetic
-//!   traffic generator.
+//!   planner that replicates *several* networks across a *heterogeneous
+//!   device catalog* (a model×device frontier assigns each part the
+//!   model it serves fastest, with coverage repair; one replica group
+//!   per part, each under divided budgets with per-replica coefficient
+//!   BRAM charged off the top, memoized as a count → plan frontier), a
+//!   request scheduler with quota-sharded bounded admission and
+//!   weighted-fair `(tenant, model)` dispatch (`acf serve --models
+//!   lenet-tiny:acme,lenet-wide-2x:bitworks`), per-replica micro-batch
+//!   clamps, throughput-weighted replica selection, and a *dynamic*
+//!   replica set, a live rebalance controller that grows/shrinks device
+//!   groups under load from the memoized frontier (`acf serve
+//!   --rebalance`), fleet metrics (per-tenant and fleet-wide
+//!   p50/p95/p99 latency, shed rates vs quota, sustained throughput,
+//!   per-replica and per-device-group utilization, drain summaries, the
+//!   rebalance event log), and a deterministic open-loop / step-load
+//!   synthetic traffic generator.
 //! * [`trace`] — end-to-end request tracing: per-request span chains
 //!   (admit → queue wait → batch form → dispatch → sim → reply), fleet
 //!   events and per-pass settle attribution on one injectable [`trace::Clock`],

@@ -9,7 +9,10 @@
 //!   plan        — resource-driven deployment plan for a model on a device
 //!   deploy      — plan + run a batch of synthetic images (behavioral fabric)
 //!   serve       — plan a replica fleet and drive it with open-loop traffic
-//!                 (--rebalance adds the live controller under a step load;
+//!                 (--models m1:t1,m2:t2 serves a model zoo to a tenant
+//!                 roster with quota-weighted admission; --serve-config FILE
+//!                 loads the admission/dispatch/tenant sections from JSON;
+//!                 --rebalance adds the live controller under a step load;
 //!                 --trace FILE exports the run's Chrome trace-event timeline;
 //!                 --scenario FILE runs a deterministic fault-injection
 //!                 scenario against the modeled fleet instead)
@@ -235,10 +238,10 @@ fn cmd_ip(argv: &[String], mode: Mode) -> i32 {
 }
 
 fn model_by_name(name: &str) -> Result<Model, String> {
+    if let Some(m) = acf::cnn::model::model_by_name(name) {
+        return Ok(m);
+    }
     match name {
-        "lenet-tiny" => Ok(Model::lenet_tiny()),
-        "lenet-wide2" => Ok(Model::lenet_wide(2)),
-        "lenet-wide4" => Ok(Model::lenet_wide(4)),
         "lenet-12bit" => Ok(acf::report::lenet_tiny_12bit()),
         path => {
             let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
@@ -246,6 +249,46 @@ fn model_by_name(name: &str) -> Result<Model, String> {
             Model::from_json(&json).map_err(|e| e.to_string())
         }
     }
+}
+
+/// Parse `--models model:tenant[:quota],...` into one tenant spec per
+/// entry (`'none'` -> `None`; quota defaults to 1). Model names stay as
+/// written — the zoo loop resolves and canonicalizes them so registry
+/// shorthands and model files both work.
+fn parse_models_flag(list: &str) -> Result<Option<Vec<acf::serve::TenantSpec>>, String> {
+    if list == "none" {
+        return Ok(None);
+    }
+    let mut tenants: Vec<acf::serve::TenantSpec> = Vec::new();
+    for entry in list.split(',') {
+        let parts: Vec<&str> = entry.split(':').collect();
+        if !(2..=3).contains(&parts.len()) || parts[0].is_empty() || parts[1].is_empty() {
+            return Err(format!("--models entry '{entry}': want model:tenant[:quota]"));
+        }
+        let quota = match parts.get(2) {
+            Some(q) => q
+                .parse::<f64>()
+                .ok()
+                .filter(|q| *q > 0.0)
+                .ok_or_else(|| {
+                    format!("--models entry '{entry}': quota must be a positive number")
+                })?,
+            None => 1.0,
+        };
+        if tenants.iter().any(|t| t.name == parts[1]) {
+            return Err(format!("--models: duplicate tenant '{}'", parts[1]));
+        }
+        tenants.push(acf::serve::TenantSpec {
+            name: parts[1].to_string(),
+            model: parts[0].to_string(),
+            quota,
+            p99_slo_ms: None,
+        });
+    }
+    if tenants.is_empty() {
+        return Err("--models: empty list".into());
+    }
+    Ok(Some(tenants))
 }
 
 fn parse_model(a: &Args) -> Result<Model, String> {
@@ -369,6 +412,18 @@ fn cmd_serve(argv: &[String]) -> i32 {
         help: "lenet-tiny|lenet-wide2|lenet-wide4|lenet-12bit|<file.json>",
         default: Some("lenet-tiny"),
     });
+    specs.push(OptSpec {
+        name: "models",
+        value: true,
+        help: "multi-tenant zoo: model:tenant[:quota],... (e.g. lenet-tiny:acme:3,lenet-wide2:beta) — each tenant routes to its model under quota-weighted admission, or 'none'",
+        default: Some("none"),
+    });
+    specs.push(OptSpec {
+        name: "serve-config",
+        value: true,
+        help: "ServeConfig JSON file (admission/dispatch/tenants sections; overrides --queue-depth/--max-batch/--drain-deadline-ms), or 'none'",
+        default: Some("none"),
+    });
     specs.push(OptSpec { name: "policy", value: true, help: "adaptive|dsp-first|quantize-first|static-single", default: Some("adaptive") });
     specs.push(OptSpec {
         name: "devices",
@@ -415,9 +470,6 @@ fn cmd_serve(argv: &[String]) -> i32 {
         Ok(m) => m,
         Err(e) => return fail(e),
     };
-    if model.in_ch != 1 {
-        return fail("the synthetic load corpus is single-channel; serve needs in_ch == 1");
-    }
     let policy = match parse_policy(&a) {
         Ok(p) => p,
         Err(e) => return fail(e),
@@ -449,13 +501,63 @@ fn cmd_serve(argv: &[String]) -> i32 {
     } else {
         acf::trace::Tracer::off()
     };
-    let cfg = acf::serve::ServeConfig {
-        queue_depth: a.get_usize("queue-depth").unwrap().unwrap(),
-        max_batch: a.get_usize("max-batch").unwrap().unwrap(),
-        drain_deadline,
-        clock: wall.clone(),
-        tracer: tracer.clone(),
+    let mut cfg = match a.get_or("serve-config", "none") {
+        "none" => {
+            let mut c = acf::serve::ServeConfig::sized(
+                a.get_usize("queue-depth").unwrap().unwrap(),
+                a.get_usize("max-batch").unwrap().unwrap(),
+            );
+            c.dispatch.drain_deadline = drain_deadline;
+            c
+        }
+        path => {
+            let parsed = std::fs::read_to_string(path)
+                .map_err(|e| format!("{path}: {e}"))
+                .and_then(|text| {
+                    acf::util::json::Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+                })
+                .and_then(|json| {
+                    acf::serve::ServeConfig::from_json(&json).map_err(|e| format!("{path}: {e}"))
+                });
+            match parsed {
+                Ok(c) => c,
+                Err(e) => return fail(e),
+            }
+        }
     };
+    cfg.clock = wall.clone();
+    cfg.tracer = tracer.clone();
+    // --models wins over the config file's tenants section.
+    match parse_models_flag(a.get_or("models", "none")) {
+        Ok(Some(tenants)) => cfg.tenants = acf::serve::TenantConfig { tenants },
+        Ok(None) => {}
+        Err(e) => return fail(e),
+    }
+    // Canonicalize tenant model names (registry shorthands, empty string
+    // = the --model default) and collect the zoo the fleet must carry.
+    let mut zoo: Vec<Model> = Vec::new();
+    if cfg.tenants.tenants.is_empty() {
+        zoo.push(model.clone());
+    } else {
+        for t in &mut cfg.tenants.tenants {
+            let m = if t.model.is_empty() {
+                model.clone()
+            } else {
+                match model_by_name(&t.model) {
+                    Ok(m) => m,
+                    Err(e) => return fail(format!("tenant '{}': {e}", t.name)),
+                }
+            };
+            t.model = m.name.clone();
+            if !zoo.iter().any(|z| z.name == m.name) {
+                zoo.push(m);
+            }
+        }
+    }
+    if zoo.iter().any(|m| m.in_ch != 1) {
+        return fail("the synthetic load corpus is single-channel; serve needs in_ch == 1");
+    }
+    let multi = !cfg.tenants.tenants.is_empty();
     let rebalance = a.flag("rebalance");
     let window = match a.get_ms("window-ms") {
         Ok(w) => w.unwrap(),
@@ -497,15 +599,35 @@ fn cmd_serve(argv: &[String]) -> i32 {
     //    catalog (throughput-argmax, or cheapest static power under the
     //    target SLO). The frontier is kept — it is what the live
     //    rebalancer indexes instead of ever re-running the planner.
-    let frontier =
-        match acf::serve::FleetFrontier::build(&model, &fleet_spec, clock, &policy, max_replicas) {
-            Ok(fr) => fr,
-            Err(e) => return fail(e),
-        };
+    let zoo_arcs: Vec<std::sync::Arc<Model>> =
+        zoo.iter().map(|m| std::sync::Arc::new(m.clone())).collect();
+    let frontier = match acf::serve::FleetFrontier::build_zoo(
+        zoo_arcs,
+        &fleet_spec,
+        clock,
+        &policy,
+        max_replicas,
+    ) {
+        Ok(fr) => fr,
+        Err(e) => return fail(e),
+    };
     let fp = acf::serve::compose_frontier(&frontier, target);
+    if multi {
+        // Composition covers every model it can; a tenant whose model
+        // still lost out needs more hardware, not a panic downstream.
+        for t in &cfg.tenants.tenants {
+            if !fp.groups.iter().any(|g| fp.models[g.model_id].name == t.model) {
+                return fail(format!(
+                    "tenant '{}' routes to model '{}' but no device group carries it — list at least one device per model (--devices)",
+                    t.name, t.model
+                ));
+            }
+        }
+    }
+    let zoo_names = zoo.iter().map(|m| m.name.clone()).collect::<Vec<_>>().join(" + ");
     println!(
         "fleet plan for '{}' @ {} MHz (policy {}): {} device group(s), {} replica(s)",
-        model.name,
+        zoo_names,
         clock,
         policy.name,
         fp.groups.len(),
@@ -514,8 +636,12 @@ fn cmd_serve(argv: &[String]) -> i32 {
     print!("{}", acf::report::fleet_table(&fp).plain());
     for g in &fp.groups {
         println!(
-            "{} engine plan (each of {} replica(s) owns a 1/{} shard; {} RAMB18 coefficient store per replica):",
-            g.device.name, g.replicas, g.replicas, g.coef_bram18
+            "{} engine plan for '{}' (each of {} replica(s) owns a 1/{} shard; {} RAMB18 coefficient store per replica):",
+            g.device.name,
+            fp.models[g.model_id].name,
+            g.replicas,
+            g.replicas,
+            g.coef_bram18
         );
         print!("{}", acf::report::plan_table(&g.per_replica).plain());
     }
@@ -530,27 +656,46 @@ fn cmd_serve(argv: &[String]) -> i32 {
     //    (once per distinct image — responses are checked against these).
     //    Model/weights stay behind shared handles so rebalance-spawned
     //    replicas reuse the same allocations.
-    let weights = acf::cnn::model::Weights::random(&model, seed);
-    let model_arc = std::sync::Arc::new(model.clone());
-    let weights_arc = std::sync::Arc::new(weights.clone());
-    let replicas =
-        fp.deploy_shared(std::sync::Arc::clone(&model_arc), std::sync::Arc::clone(&weights_arc));
+    let weights_arcs: Vec<std::sync::Arc<acf::cnn::model::Weights>> = zoo
+        .iter()
+        .map(|m| std::sync::Arc::new(acf::cnn::model::Weights::random(m, seed)))
+        .collect();
+    let fleet = fp.deploy_zoo(&weights_arcs);
     let replica_groups = fp.replica_groups();
-    let corpus = Dataset::generate(requests.clamp(8, 64), seed, model.in_h, model.in_w);
-    let corpus: Vec<Vec<i64>> = corpus.images.iter().map(|i| i.pix.clone()).collect();
-    let references: Vec<Vec<i64>> =
-        corpus.iter().map(|img| acf::cnn::infer::infer(&model, &weights, img)).collect();
+    let corpus_n = requests.clamp(8, 64);
+    let corpora: Vec<Vec<Vec<i64>>> = zoo
+        .iter()
+        .map(|m| {
+            Dataset::generate(corpus_n, seed, m.in_h, m.in_w)
+                .images
+                .iter()
+                .map(|i| i.pix.clone())
+                .collect()
+        })
+        .collect();
+    // references[model][image]: the behavioral logits every serving path
+    // must reproduce bit-exactly.
+    let references: Vec<Vec<Vec<i64>>> = zoo
+        .iter()
+        .zip(&corpora)
+        .zip(&weights_arcs)
+        .map(|((m, corpus), w)| {
+            corpus.iter().map(|img| acf::cnn::infer::infer(m, w, img)).collect()
+        })
+        .collect();
 
     // 4. Calibrate host throughput per device group (the honest basis for
     //    a measured replica-sum: the FPGA-clock model is not host time).
     //    Runs through the one-shot path, before any server exists.
-    let cal_images: Vec<Vec<i64>> = (0..64).map(|i| corpus[i % corpus.len()].clone()).collect();
     let mut group_img_s_host = vec![0.0f64; fp.groups.len()];
-    for (ri, dep) in replicas.iter().enumerate() {
+    for (ri, dep) in fleet.replicas.iter().enumerate() {
         let gi = replica_groups[ri];
         if group_img_s_host[gi] > 0.0 {
             continue; // one calibration per group — replicas within a group are identical
         }
+        let corpus = &corpora[fp.groups[gi].model_id];
+        let cal_images: Vec<Vec<i64>> =
+            (0..64).map(|i| corpus[i % corpus.len()].clone()).collect();
         let t0 = std::time::Instant::now();
         dep.infer_batch(&cal_images).expect("calibration batch");
         group_img_s_host[gi] = cal_images.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
@@ -574,15 +719,16 @@ fn cmd_serve(argv: &[String]) -> i32 {
     //    does — different per-device plans, identical logits. Uses a
     //    throwaway server over the same replicas so the load run's fleet
     //    metrics stay untouched.
-    let sample_len = corpus.len().min(8);
-    let sample = &corpus[..sample_len];
+    let sample_len = corpus_n.min(8);
     let mut mismatches = 0usize;
-    for (ri, dep) in replicas.iter().enumerate() {
+    for (ri, dep) in fleet.replicas.iter().enumerate() {
         if replica_groups[..ri].contains(&replica_groups[ri]) {
             continue; // first replica of each group carries its plan
         }
-        let batch = dep.infer_batch(sample).expect("replica serves the sample");
-        mismatches += references[..sample_len]
+        let mi = fp.groups[replica_groups[ri]].model_id;
+        let batch =
+            dep.infer_batch(&corpora[mi][..sample_len]).expect("replica serves the sample");
+        mismatches += references[mi][..sample_len]
             .iter()
             .zip(&batch)
             .filter(|(reference, b)| b != reference)
@@ -593,24 +739,23 @@ fn cmd_serve(argv: &[String]) -> i32 {
         // spans would collide with the load run's request tracks.
         let warmup_cfg =
             acf::serve::ServeConfig { tracer: acf::trace::Tracer::off(), ..cfg.clone() };
-        let warmup = acf::serve::Server::start_grouped(
-            replicas.clone(),
-            replica_groups.clone(),
-            fp.group_labels(),
-            &warmup_cfg,
-        );
-        let pendings: Vec<_> = sample
-            .iter()
-            .map(|img| warmup.submit_wait(img.clone()).expect("server accepting"))
-            .collect();
-        let served: Vec<Vec<i64>> =
-            pendings.into_iter().map(|p| p.wait().expect("request served")).collect();
+        let warmup = acf::serve::Server::start(fleet.clone(), &warmup_cfg);
+        for t in 0..warmup.n_tenants() {
+            let mname = warmup.model_of_tenant(t).name.clone();
+            let mi = zoo.iter().position(|m| m.name == mname).unwrap_or(0);
+            let pendings: Vec<_> = corpora[mi][..sample_len]
+                .iter()
+                .map(|img| warmup.submit_wait_as(t, img.clone()).expect("server accepting"))
+                .collect();
+            let served: Vec<Vec<i64>> =
+                pendings.into_iter().map(|p| p.wait().expect("request served")).collect();
+            mismatches += references[mi][..sample_len]
+                .iter()
+                .zip(&served)
+                .filter(|(reference, s)| s != reference)
+                .count();
+        }
         drop(warmup.shutdown());
-        mismatches += references[..sample_len]
-            .iter()
-            .zip(&served)
-            .filter(|(reference, s)| s != reference)
-            .count();
     }
     println!(
         "serving-path check: {} mismatches across {} device group(s) x {} sample images (scheduled + one-shot vs behavioral reference)",
@@ -622,32 +767,52 @@ fn cmd_serve(argv: &[String]) -> i32 {
     // 6. Open-loop load against a fresh server (clean metrics clock).
     //    With --rebalance the profile is a low -> spike -> low step load
     //    and the live controller resizes device groups underneath it.
-    let server = std::sync::Arc::new(acf::serve::Server::start_grouped(
-        replicas,
-        replica_groups,
-        fp.group_labels(),
-        &cfg,
-    ));
-    let outcomes = if rebalance {
+    let server = std::sync::Arc::new(acf::serve::Server::start(fleet, &cfg));
+    // Tenant -> zoo-model index (tenant 0 of an untenanted fleet is the
+    // implicit default route).
+    let tenant_mi: Vec<usize> = (0..server.n_tenants())
+        .map(|t| {
+            let name = &server.model_of_tenant(t).name;
+            zoo.iter().position(|m| &m.name == name).unwrap_or(0)
+        })
+        .collect();
+    let rb = if rebalance {
         if fleet_spec.entries.iter().all(|e| e.count.is_some()) {
             println!(
                 "warning: every device group has a forced count (--replicas / name:count) — \
                  the rebalancer never resizes pinned groups, so it will observe but not act"
             );
         }
-        let rb = acf::serve::Rebalancer::start(
+        Some(acf::serve::Rebalancer::start(
             std::sync::Arc::clone(&server),
             frontier.clone(),
             &fp,
-            std::sync::Arc::clone(&model_arc),
-            std::sync::Arc::clone(&weights_arc),
+            weights_arcs.clone(),
             acf::serve::RebalanceConfig {
                 window,
                 headroom,
                 cooldown,
                 ..acf::serve::RebalanceConfig::default()
             },
+        ))
+    } else {
+        None
+    };
+    let outcomes: Vec<(usize, acf::serve::LoadOutcome)> = if multi {
+        // Tenant mix: every tenant offers an equal share; quota skew shows
+        // up in what gets admitted. The rebalancer (if on) may shift
+        // groups between models under this load.
+        let tenant_corpora: Vec<Vec<Vec<i64>>> =
+            tenant_mi.iter().map(|&mi| corpora[mi].clone()).collect();
+        println!(
+            "open loop ({} tenant(s), equal offered shares): {} requests at {:.0} img/s offered (Poisson arrivals, seed {})",
+            server.n_tenants(),
+            requests,
+            offered,
+            seed
         );
+        acf::serve::open_loop_tenants(&server, &tenant_corpora, requests, offered, seed ^ 0x5E21)
+    } else if rebalance {
         let low = (offered * 0.3).max(1.0);
         let spike = (offered * 1.6).max(1.0);
         let phases = [
@@ -668,22 +833,29 @@ fn cmd_serve(argv: &[String]) -> i32 {
             window,
             headroom
         );
-        let outcomes = acf::serve::step_load(&server, &corpus, &phases, seed ^ 0x5E21);
-        rb.stop();
-        outcomes
+        acf::serve::step_load(&server, &corpora[0], &phases, seed ^ 0x5E21)
+            .into_iter()
+            .map(|o| (0, o))
+            .collect()
     } else {
         println!(
             "open loop: {} requests at {:.0} img/s offered (Poisson arrivals, seed {})",
             requests, offered, seed
         );
-        acf::serve::open_loop(&server, &corpus, requests, offered, seed ^ 0x5E21)
+        acf::serve::open_loop(&server, &corpora[0], requests, offered, seed ^ 0x5E21)
+            .into_iter()
+            .map(|o| (0, o))
+            .collect()
     };
+    if let Some(rb) = rb {
+        rb.stop();
+    }
     let mut load_mismatches = 0usize;
     let mut failures = 0usize;
-    for o in &outcomes {
+    for (tn, o) in &outcomes {
         match &o.result {
             Ok(logits) => {
-                if logits != &references[o.image_idx] {
+                if logits != &references[tenant_mi[*tn]][o.image_idx] {
                     load_mismatches += 1;
                 }
             }
@@ -698,6 +870,10 @@ fn cmd_serve(argv: &[String]) -> i32 {
     println!("\nmeasured fleet (host wall time; behavioral layer models):");
     print!("{}", acf::report::serve_group_table(&snap).plain());
     print!("{}", acf::report::serve_table(&snap).plain());
+    if !snap.tenants.is_empty() {
+        println!("\nper-tenant admission and latency (quota-weighted fair queueing):");
+        print!("{}", acf::report::tenant_table(&snap).plain());
+    }
     if rebalance {
         println!("\nrebalance timeline ({} action(s)):", snap.events.len());
         if !snap.events.is_empty() {
@@ -721,7 +897,22 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let modeled_mix = fp
         .groups
         .iter()
-        .map(|g| format!("{} x{} @ {:.0}", g.device.name, g.replicas, g.per_replica.images_per_sec))
+        .map(|g| {
+            if fp.models.len() > 1 {
+                format!(
+                    "{} [{}] x{} @ {:.0}",
+                    g.device.name,
+                    fp.models[g.model_id].name,
+                    g.replicas,
+                    g.per_replica.images_per_sec
+                )
+            } else {
+                format!(
+                    "{} x{} @ {:.0}",
+                    g.device.name, g.replicas, g.per_replica.images_per_sec
+                )
+            }
+        })
         .collect::<Vec<_>>()
         .join(" + ");
     println!(
@@ -747,7 +938,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
                     label: format!("{} L{}", g.device.name, ep.layer),
                 };
                 match acf::sim::netlist_layer_check_traced(
-                    &model,
+                    &zoo[g.model_id],
                     &g.per_replica,
                     ep.layer,
                     seed,
@@ -826,11 +1017,31 @@ fn plan_scenario(
     max_replicas: usize,
 ) -> Result<(acf::serve::Scenario, acf::serve::FleetPlan), String> {
     let sc = acf::serve::Scenario::from_str(text)?;
-    let model = model_by_name(&sc.model).map_err(|e| format!("model: {e}"))?;
     let spec = acf::serve::FleetSpec::parse(&sc.devices, extra)
         .map_err(|e| format!("devices: {e}"))?;
-    let frontier = acf::serve::FleetFrontier::build(&model, &spec, clock, policy, max_replicas)
-        .map_err(|e| e.to_string())?;
+    // The model zoo the scenario's fleet must carry: the top-level model
+    // for untenanted scenarios, otherwise every tenant's model in
+    // first-use order (canonical names — they must match the group
+    // model names the engine routes against).
+    let mut names: Vec<&str> = Vec::new();
+    if sc.tenants.is_empty() {
+        names.push(&sc.model);
+    } else {
+        for t in &sc.tenants {
+            if !names.contains(&t.model.as_str()) {
+                names.push(&t.model);
+            }
+        }
+    }
+    let mut models = Vec::new();
+    for n in &names {
+        models.push(std::sync::Arc::new(
+            model_by_name(n).map_err(|e| format!("model '{n}': {e}"))?,
+        ));
+    }
+    let frontier =
+        acf::serve::FleetFrontier::build_zoo(models, &spec, clock, policy, max_replicas)
+            .map_err(|e| e.to_string())?;
     Ok((sc, acf::serve::compose_frontier(&frontier, None)))
 }
 
@@ -875,6 +1086,15 @@ fn cmd_serve_scenario(a: &Args, path: &str, clock: f64) -> i32 {
         sc.phases.len(),
         seed
     );
+    if !sc.tenants.is_empty() {
+        let roster = sc
+            .tenants
+            .iter()
+            .map(|t| format!("{} -> {} (quota {})", t.name, t.model, t.quota))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("tenants: {roster}");
+    }
     println!(
         "fleet plan @ {} MHz (policy {}): {} device group(s), {} replica(s), {:.1} img/s modeled",
         clock,
@@ -889,6 +1109,10 @@ fn cmd_serve_scenario(a: &Args, path: &str, clock: f64) -> i32 {
         Err(e) => return fail(format!("{path}: {e}")),
     };
     print!("{}", acf::report::scenario_table(&report).plain());
+    if report.phases.iter().any(|p| !p.tenants.is_empty()) {
+        println!("per-tenant phase breakdown:");
+        print!("{}", acf::report::scenario_tenant_table(&report).plain());
+    }
     if !report.faults.is_empty() {
         println!("fault timeline:");
         print!("{}", acf::report::fault_timeline_table(&report.faults).plain());

@@ -20,9 +20,14 @@
 //!   [`rebalance_table`] — the serving tier's modeled-fleet and
 //!   measured-fleet reports (`acf serve`), broken out per device group
 //!   for heterogeneous fleets, plus the dynamic-rebalance timeline.
-//! * [`scenario_table`] / [`fault_timeline_table`] — the deterministic
-//!   scenario harness's verdict: per-phase SLO checks and the fault
-//!   injection timeline with recovery times (`acf serve --scenario`).
+//! * [`tenant_table`] — the multi-tenant serving report: one row per
+//!   tenant with its model, quota, admission fate (accepted/shed %),
+//!   and latency quantiles against its SLO (`acf serve --models`).
+//! * [`scenario_table`] / [`scenario_tenant_table`] /
+//!   [`fault_timeline_table`] — the deterministic scenario harness's
+//!   verdict: per-phase SLO checks, the per-tenant phase breakdown, and
+//!   the fault injection timeline with recovery times
+//!   (`acf serve --scenario`).
 
 use crate::cnn::model::{Layer, Model};
 use crate::fabric::device::{by_name, catalog, Device};
@@ -208,7 +213,8 @@ pub fn plan_table(plan: &Plan) -> Table {
 /// split into replicas, its modeled throughput, its pressure against the
 /// *undivided* part, and its coefficient-inclusive BRAM bill), plus a
 /// fleet totals row carrying the replica sum, the modeled static power of
-/// the mix, and the SLO verdict.
+/// the mix, and the SLO verdict. Multi-model (zoo) plans tag each group's
+/// device with the model it carries, e.g. `zcu104 [lenet-wide-2x]`.
 pub fn fleet_table(fp: &FleetPlan) -> Table {
     let mut t = Table::new(vec![
         "device",
@@ -222,10 +228,18 @@ pub fn fleet_table(fp: &FleetPlan) -> Table {
         "meets SLO",
     ])
     .numeric();
+    let zoo = fp.models.len() > 1;
     for g in &fp.groups {
         let (dsp, lut) = g.pressure();
+        let device = if zoo {
+            let model =
+                fp.models.get(g.model_id).map(|m| m.name.as_str()).unwrap_or("?");
+            format!("{} [{}]", g.device.name, model)
+        } else {
+            g.device.name.clone()
+        };
         t.row(vec![
-            g.device.name.clone(),
+            device,
             g.replicas.to_string(),
             format!("{:.0}", g.per_replica.images_per_sec),
             format!("{:.0}", g.group_img_s),
@@ -317,6 +331,42 @@ pub fn serve_group_table(snap: &FleetSnapshot) -> Table {
     t
 }
 
+/// The per-tenant serving report: one row per configured tenant — the
+/// model it routes to, its admission quota, how admission treated it
+/// (accepted / shed %), and its measured latency quantiles with the SLO
+/// verdict when the tenant declared a p99 bound. Printed by
+/// `acf serve --models m1:t1,m2:t2` under the group table; empty rosters
+/// (single-tenant serves) render no rows.
+pub fn tenant_table(snap: &FleetSnapshot) -> Table {
+    let mut t = Table::new(vec![
+        "tenant", "model", "quota", "accepted", "shed %", "completed", "p50 ms", "p95 ms",
+        "p99 ms", "p99 SLO",
+    ])
+    .numeric();
+    for tn in &snap.tenants {
+        let slo = match tn.p99_slo_ms {
+            Some(ms) => {
+                let ok = tn.completed == 0 || tn.p99_ms <= ms;
+                format!("{} ms {}", fnum(ms, 1), if ok { "ok" } else { "MISS" })
+            }
+            None => "n/a".into(),
+        };
+        t.row(vec![
+            tn.name.clone(),
+            tn.model.clone(),
+            fnum(tn.quota, 2),
+            tn.accepted.to_string(),
+            format!("{:.1}", tn.shed_pct),
+            tn.completed.to_string(),
+            fnum(tn.p50_ms, 2),
+            fnum(tn.p95_ms, 2),
+            fnum(tn.p99_ms, 2),
+            slo,
+        ]);
+    }
+    t
+}
+
 /// The rebalance timeline: one row per scale action, in order — when it
 /// fired, which device group it resized, how, and the signal that
 /// triggered it. Printed by `acf serve --rebalance` after the load run.
@@ -369,6 +419,33 @@ pub fn scenario_table(report: &crate::serve::ScenarioReport) -> Table {
             checks,
             if p.passed { "PASS".into() } else { "FAIL".into() },
         ]);
+    }
+    t
+}
+
+/// The per-tenant scenario breakdown: one row per (phase, tenant) — how
+/// the phase's offered load split across the roster, who admission shed
+/// and how hard, and each tenant's phase-window p99. Printed by
+/// `acf serve --scenario` under the verdict table for multi-tenant
+/// scenarios; untenanted scenarios produce no rows.
+pub fn scenario_tenant_table(report: &crate::serve::ScenarioReport) -> Table {
+    let mut t = Table::new(vec![
+        "phase", "tenant", "model", "offered", "accepted", "shed %", "completed", "p99 ms",
+    ])
+    .numeric();
+    for p in &report.phases {
+        for tn in &p.tenants {
+            t.row(vec![
+                p.name.clone(),
+                tn.name.clone(),
+                tn.model.clone(),
+                tn.offered.to_string(),
+                tn.accepted.to_string(),
+                format!("{:.1}", tn.shed_pct),
+                tn.completed.to_string(),
+                fnum(tn.p99_ms, 2),
+            ]);
+        }
     }
     t
 }
@@ -715,15 +792,12 @@ mod tests {
     #[test]
     fn fleet_and_serve_tables_render() {
         let dev = by_name("zcu104").unwrap();
-        let fp = crate::serve::plan_fixed_fleet(
-            &Model::lenet_tiny(),
-            &dev,
-            200.0,
-            &Policy::adaptive(),
-            2,
-            Some(1.0),
-        )
-        .unwrap();
+        let fp = crate::serve::FleetSpec::single(dev, Some(2))
+            .plan()
+            .model(&Model::lenet_tiny())
+            .target_img_s(Some(1.0))
+            .run()
+            .unwrap();
         let t = fleet_table(&fp);
         // One device group plus the fleet totals row.
         assert_eq!(t.n_rows(), 2);
@@ -778,6 +852,66 @@ mod tests {
     }
 
     #[test]
+    fn tenant_table_reports_quota_shed_and_slo() {
+        use std::time::Duration;
+        let m = crate::serve::FleetMetrics::new(1).with_tenants(vec![
+            crate::serve::TenantInfo {
+                name: "gold".into(),
+                model: "lenet-tiny".into(),
+                quota: 3.0,
+                p99_slo_ms: Some(50.0),
+            },
+            crate::serve::TenantInfo {
+                name: "bronze".into(),
+                model: "lenet-wide-2x".into(),
+                quota: 1.0,
+                p99_slo_ms: None,
+            },
+        ]);
+        m.note_accepted_t(0);
+        m.note_completed_t(0, 0, Duration::from_millis(4));
+        m.note_accepted_t(1);
+        m.note_rejected_t(1);
+        let snap = m.snapshot();
+        let t = tenant_table(&snap);
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.cell(0, 0), "gold");
+        assert_eq!(t.cell(0, 1), "lenet-tiny");
+        assert_eq!(t.cell(0, 4), "0.0");
+        assert!(t.cell(0, 9).contains("ok"), "SLO cell: {}", t.cell(0, 9));
+        assert_eq!(t.cell(1, 0), "bronze");
+        assert_eq!(t.cell(1, 4), "50.0");
+        assert_eq!(t.cell(1, 9), "n/a");
+    }
+
+    #[test]
+    fn scenario_tenant_table_renders_per_tenant_rows() {
+        use crate::serve::scenario::{run_modeled, Scenario, ScenarioOpts, SimGroup};
+        let sc = Scenario::from_str(
+            r#"{"name":"mt","devices":"d","queue_depth":16,"recovery_tail":8,
+                "tenants":[{"name":"gold","model":"m0","quota":3.0},
+                           {"name":"bronze","model":"m0","quota":1.0}],
+                "phases":[{"name":"rush","requests":200,
+                           "load":{"profile":"constant","rate_x":2.0}}]}"#,
+        )
+        .unwrap();
+        let groups =
+            vec![SimGroup { label: "g".into(), replicas: 2, rate: 500.0, model: "m0".into() }];
+        let r = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap();
+        let t = scenario_tenant_table(&r);
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.cell(0, 0), "rush");
+        assert_eq!(t.cell(0, 1), "gold");
+        assert_eq!(t.cell(0, 2), "m0");
+        assert_eq!(t.cell(1, 1), "bronze");
+        // Overload at 2x capacity: somebody got shed, and the small-quota
+        // tenant at least as hard as the large one.
+        let gold: f64 = t.cell(0, 5).parse().unwrap();
+        let bronze: f64 = t.cell(1, 5).parse().unwrap();
+        assert!(bronze >= gold, "gold {gold}% vs bronze {bronze}%");
+    }
+
+    #[test]
     fn heterogeneous_fleet_table_has_one_row_per_device() {
         let spec = crate::serve::FleetSpec {
             entries: vec![
@@ -785,15 +919,7 @@ mod tests {
                 crate::serve::FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
             ],
         };
-        let fp = crate::serve::plan_fleet_spec(
-            &Model::lenet_tiny(),
-            &spec,
-            200.0,
-            &Policy::adaptive(),
-            None,
-            2,
-        )
-        .unwrap();
+        let fp = spec.plan().model(&Model::lenet_tiny()).max_replicas(2).run().unwrap();
         let t = fleet_table(&fp);
         assert_eq!(t.n_rows(), 3);
         assert_eq!(t.cell(0, 0), "zcu104");
@@ -814,7 +940,8 @@ mod tests {
                  "asserts":{"max_shed_pct":10.0,"recovery_ms_max":60000.0}}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let groups =
+            vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0, model: String::new() }];
         let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
         let t = scenario_table(&r);
         assert_eq!(t.n_rows(), 1);

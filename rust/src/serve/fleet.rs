@@ -3,35 +3,39 @@
 //!
 //! This is the paper's scarcity logic lifted two levels up. PR 2 asked
 //! "how many whole copies of the planned network fit ONE device?"; real
-//! edge deployments mix parts with very different DSP/LUT/BRAM balances,
-//! so the fleet planner now takes a [`FleetSpec`] — a list of
-//! `(Device, forced count?)` entries, one per physical part — and plans a
-//! *replica group* per device:
+//! edge deployments mix parts with very different DSP/LUT/BRAM balances
+//! AND host several networks at once, so the fleet planner now walks a
+//! **model×device** frontier:
 //!
-//! 1. **Per-device frontier.** For each device, the monotone shard scan
-//!    from PR 2 builds the count → plan frontier: candidate count `r`
-//!    plans one replica against an equal `1/r` shard
-//!    ([`crate::fabric::device::Device::shard`]), with the model's
-//!    coefficient BRAM charged off the top *per replica* (weights do not
-//!    shrink with the shard — [`crate::planner::coefficient_bram18`]).
-//!    The scan stops at the first infeasible count.
-//! 2. **Cross-device composition.** Each device contributes its
-//!    throughput-argmax count. Without a target the fleet is every
-//!    listed device at that count (throughput is additive across parts).
-//!    Under `--target-img-s` the composition instead minimizes modeled
-//!    static power: forced entries are always kept, optional devices are
-//!    added greedily by throughput-per-static-watt until the target is
-//!    met, then a drop pass removes any device the target can spare.
+//! 1. **Per-(device, model) frontier.** For each spec entry and each zoo
+//!    model, the monotone shard scan from PR 2 builds the count → plan
+//!    frontier: candidate count `r` plans one replica against an equal
+//!    `1/r` shard ([`crate::fabric::device::Device::shard`]), with the
+//!    model's coefficient BRAM charged off the top *per replica*
+//!    (weights do not shrink with the shard —
+//!    [`crate::planner::coefficient_bram18`]). The scan stops at the
+//!    first infeasible count. The PR 5 memoized frontier keys extend
+//!    with the model id: a [`GroupFrontier`] is now one `(spec entry,
+//!    model)` pair, so the live rebalancer can shift a device group
+//!    *between models* by indexing a different frontier row — no planner
+//!    run ever happens while traffic is flowing.
+//! 2. **Cross-device composition.** Single-model fleets keep the PR 4
+//!    search exactly: per-device throughput argmax, or (under
+//!    `--target-img-s`) the cheapest static-power mix. Multi-model
+//!    fleets add an assignment step: each physical entry carries exactly
+//!    one model (one bitstream per board), entries greedily take the
+//!    model they model fastest, then a coverage repair donates the
+//!    cheapest entry to any model left without a group.
 //!
-//! Replicas on different parts legitimately run *different* plans — the
-//! same per-layer IP substitutions the paper's Table III sweeps show
-//! across resource envelopes, now live inside one fleet.
+//! The single planning entry point is the [`FleetSpec::plan`] builder;
+//! the free functions from PRs 2/4 survive only as deprecated shims.
 
 use crate::cnn::model::{Model, Weights};
 use crate::coordinator::Deployment;
 use crate::fabric::device::{by_name, Device};
 use crate::planner::{coefficient_bram18, plan_under_fraction, Plan, PlanError, Policy};
 use crate::synth::Utilization;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Default ceiling on the per-device replica search (CLI `--max-replicas`
@@ -96,6 +100,107 @@ impl FleetSpec {
         }
         Ok(FleetSpec { entries })
     }
+
+    /// THE fleet-planning entry point: a builder owning model assignment,
+    /// clock, policy, target throughput, and the replica-search ceiling.
+    ///
+    /// ```text
+    /// spec.plan().model(&m).target_img_s(Some(9e5)).run()?        // one model
+    /// spec.plan().models(zoo).max_replicas(6).run()?              // model zoo
+    /// spec.plan().model(&m).frontier()?                           // memoized frontier
+    /// ```
+    pub fn plan(&self) -> FleetPlanner {
+        FleetPlanner {
+            spec: self.clone(),
+            models: Vec::new(),
+            clock_mhz: 200.0,
+            policy: Policy::adaptive(),
+            target_img_s: None,
+            max_replicas: DEFAULT_MAX_REPLICAS,
+        }
+    }
+}
+
+/// Builder returned by [`FleetSpec::plan`] — the only supported way to
+/// turn a spec into a [`FleetFrontier`] / [`FleetPlan`]. Replaces the
+/// PR 2/4 free functions (`plan_fleet`, `plan_fleet_spec`,
+/// `plan_fixed_fleet`), which now shim onto it.
+#[derive(Debug, Clone)]
+pub struct FleetPlanner {
+    spec: FleetSpec,
+    models: Vec<Arc<Model>>,
+    clock_mhz: f64,
+    policy: Policy,
+    target_img_s: Option<f64>,
+    max_replicas: usize,
+}
+
+impl FleetPlanner {
+    /// Assign one model to the whole fleet (the classic surface).
+    pub fn model(mut self, model: &Model) -> Self {
+        self.models = vec![Arc::new(model.clone())];
+        self
+    }
+
+    /// Assign a model zoo: composition decides which device groups carry
+    /// which models. Model ids are indexes into this list.
+    pub fn models(mut self, models: Vec<Arc<Model>>) -> Self {
+        self.models = models;
+        self
+    }
+
+    pub fn clock_mhz(mut self, mhz: f64) -> Self {
+        self.clock_mhz = mhz;
+        self
+    }
+
+    pub fn policy(mut self, policy: &Policy) -> Self {
+        self.policy = policy.clone();
+        self
+    }
+
+    /// Modeled-throughput SLO the composition must meet (power-aware mix).
+    pub fn target_img_s(mut self, target: Option<f64>) -> Self {
+        self.target_img_s = target;
+        self
+    }
+
+    pub fn max_replicas(mut self, max: usize) -> Self {
+        self.max_replicas = max.max(1);
+        self
+    }
+
+    /// Build the memoized model×device frontier without composing it —
+    /// what the CLI hands the rebalancer.
+    pub fn frontier(&self) -> Result<FleetFrontier, PlanError> {
+        assert!(!self.models.is_empty(), "assign a model first: spec.plan().model(&m)");
+        FleetFrontier::build_zoo(
+            self.models.clone(),
+            &self.spec,
+            self.clock_mhz,
+            &self.policy,
+            self.max_replicas,
+        )
+    }
+
+    /// Build the frontier and compose the fleet. Errors if any zoo model
+    /// ends up without a device group to carry it.
+    pub fn run(&self) -> Result<FleetPlan, PlanError> {
+        let frontier = self.frontier()?;
+        let plan = compose_frontier(&frontier, self.target_img_s);
+        for (mi, m) in frontier.models.iter().enumerate() {
+            if !plan.groups.iter().any(|g| g.model_id == mi) {
+                return Err(PlanError::Infeasible {
+                    device: "fleet".into(),
+                    reason: format!(
+                        "no device group left to carry model '{}' — list at least one device per model",
+                        m.name
+                    ),
+                });
+            }
+        }
+        Ok(plan)
+    }
 }
 
 /// One device's replica group inside a planned fleet.
@@ -103,10 +208,13 @@ impl FleetSpec {
 pub struct GroupPlan {
     /// The undivided physical part this group runs on.
     pub device: Device,
-    /// Index of the [`FleetSpec`] entry (and therefore the
-    /// [`FleetFrontier`] group) this plan came from — the same part can
-    /// be listed twice (two boards), so names are not a key.
+    /// Index of the [`FleetSpec`] entry (and therefore the physical
+    /// board) this plan came from — the same part can be listed twice
+    /// (two boards), so names are not a key.
     pub spec_entry: usize,
+    /// Index into the plan's model zoo ([`FleetPlan::models`]) of the
+    /// model every replica of this group serves.
+    pub model_id: usize,
     pub replicas: usize,
     /// The plan every replica of this group deploys (made against
     /// `device.shard(replicas)` with per-replica coefficient BRAM
@@ -129,11 +237,14 @@ impl GroupPlan {
     }
 }
 
-/// A planned serving fleet: one replica group per device, each group
-/// running its own plan.
+/// A planned serving fleet: one replica group per physical board, each
+/// group running its own plan for its assigned model.
 #[derive(Debug, Clone)]
 pub struct FleetPlan {
     pub clock_mhz: f64,
+    /// The model zoo this plan spans; [`GroupPlan::model_id`] indexes it.
+    /// Single-model fleets have exactly one entry.
+    pub models: Vec<Arc<Model>>,
     pub groups: Vec<GroupPlan>,
     /// Modeled fleet throughput: the sum over groups (throughput is
     /// additive across physical parts).
@@ -154,8 +265,7 @@ impl FleetPlan {
     }
 
     /// Device-group index of each replica, group-major — the same order
-    /// [`FleetPlan::deploy`] emits replicas in (what
-    /// [`crate::serve::Server::start_grouped`] consumes).
+    /// the deploy methods emit replicas in.
     pub fn replica_groups(&self) -> Vec<usize> {
         let mut out = Vec::with_capacity(self.replicas());
         for (gi, g) in self.groups.iter().enumerate() {
@@ -166,33 +276,124 @@ impl FleetPlan {
         out
     }
 
-    /// Display label per device group (the part's name).
+    /// Display label per device group: the part's name, qualified with
+    /// the model name when the plan spans more than one model.
     pub fn group_labels(&self) -> Vec<String> {
-        self.groups.iter().map(|g| g.device.name.clone()).collect()
+        self.groups
+            .iter()
+            .map(|g| {
+                if self.models.len() > 1 {
+                    format!("{}/{}", g.device.name, self.models[g.model_id].name)
+                } else {
+                    g.device.name.clone()
+                }
+            })
+            .collect()
+    }
+
+    /// Modeled throughput of the groups carrying `model_id`.
+    pub fn model_img_s(&self, model_id: usize) -> f64 {
+        self.groups.iter().filter(|g| g.model_id == model_id).map(|g| g.group_img_s).sum()
     }
 
     /// Deploy the fleet: one persistent pipeline per replica, group-major
     /// order, all sharing one model and one weight set. Replicas of
-    /// different groups run different plans.
-    pub fn deploy(&self, model: Model, weights: Weights) -> Vec<Arc<Deployment>> {
+    /// different groups run different plans. Single-model plans only —
+    /// model-zoo plans deploy with [`FleetPlan::deploy_zoo`].
+    pub fn deploy(&self, model: Model, weights: Weights) -> FleetHandle {
         self.deploy_shared(Arc::new(model), Arc::new(weights))
     }
 
     /// [`FleetPlan::deploy`] against already-shared model/weight handles —
     /// what the rebalancer uses so replicas it spins up later share the
     /// exact same allocations as the initial fleet.
-    pub fn deploy_shared(&self, model: Arc<Model>, weights: Arc<Weights>) -> Vec<Arc<Deployment>> {
-        let mut out = Vec::with_capacity(self.replicas());
+    pub fn deploy_shared(&self, model: Arc<Model>, weights: Arc<Weights>) -> FleetHandle {
+        assert!(
+            self.models.len() <= 1,
+            "this plan spans {} models; deploy it with deploy_zoo(weights_per_model)",
+            self.models.len()
+        );
+        let zoo = ZooWeights { models: vec![Arc::clone(&model)], weights: vec![weights] };
+        self.deploy_with(&zoo, |_| 0)
+    }
+
+    /// Deploy a model-zoo fleet: `weights[model_id]` pairs with
+    /// [`FleetPlan::models`], and each group's replicas are built from
+    /// their group's assigned model.
+    pub fn deploy_zoo(&self, weights: &[Arc<Weights>]) -> FleetHandle {
+        assert_eq!(weights.len(), self.models.len(), "one weight set per zoo model");
+        let zoo = ZooWeights { models: self.models.clone(), weights: weights.to_vec() };
+        self.deploy_with(&zoo, |g| g.model_id)
+    }
+
+    fn deploy_with(&self, zoo: &ZooWeights, model_of: impl Fn(&GroupPlan) -> usize) -> FleetHandle {
+        let mut replicas = Vec::with_capacity(self.replicas());
+        let mut models = Vec::with_capacity(self.groups.len());
         for g in &self.groups {
+            let mi = model_of(g);
+            models.push(Arc::clone(&zoo.models[mi]));
             for _ in 0..g.replicas {
-                out.push(Arc::new(Deployment::with_plan(
-                    Arc::clone(&model),
-                    Arc::clone(&weights),
+                replicas.push(Arc::new(Deployment::with_plan(
+                    Arc::clone(&zoo.models[mi]),
+                    Arc::clone(&zoo.weights[mi]),
                     g.per_replica.clone(),
                 )));
             }
         }
-        out
+        FleetHandle::new(replicas, self.replica_groups(), self.group_labels(), models)
+    }
+}
+
+struct ZooWeights {
+    models: Vec<Arc<Model>>,
+    weights: Vec<Arc<Weights>>,
+}
+
+/// Everything [`crate::serve::Server::start`] needs to serve a deployed
+/// fleet: the replica pipelines, their group topology, display labels,
+/// and the model each group carries. Produced by the
+/// [`FleetPlan::deploy`] family; hand-assembled in tests via
+/// [`FleetHandle::solo`] / [`FleetHandle::new`].
+#[derive(Clone)]
+pub struct FleetHandle {
+    /// Replica deployments, group-major (all of group 0, then group 1, …).
+    pub replicas: Vec<Arc<Deployment>>,
+    /// Group index of each replica (parallel to `replicas`).
+    pub groups: Vec<usize>,
+    /// Display label per group.
+    pub labels: Vec<String>,
+    /// The model each group serves (parallel to `labels`).
+    pub models: Vec<Arc<Model>>,
+}
+
+impl FleetHandle {
+    pub fn new(
+        replicas: Vec<Arc<Deployment>>,
+        groups: Vec<usize>,
+        labels: Vec<String>,
+        models: Vec<Arc<Model>>,
+    ) -> FleetHandle {
+        assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        assert_eq!(replicas.len(), groups.len(), "one group index per replica");
+        assert_eq!(labels.len(), models.len(), "one model per group label");
+        assert!(
+            groups.iter().all(|&g| g < labels.len()),
+            "replica group index out of range"
+        );
+        FleetHandle { replicas, groups, labels, models }
+    }
+
+    /// The 1-group special case: every replica in one group called
+    /// "fleet", serving the model its deployments were built with.
+    pub fn solo(replicas: Vec<Arc<Deployment>>) -> FleetHandle {
+        assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        let model = Arc::clone(&replicas[0].model);
+        let groups = vec![0; replicas.len()];
+        FleetHandle::new(replicas, groups, vec!["fleet".into()], vec![model])
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.labels.len()
     }
 }
 
@@ -201,6 +402,7 @@ impl FleetPlan {
 /// when the part's BRAM cannot hold `count` coefficient copies).
 fn plan_group(
     model: &Model,
+    model_id: usize,
     dev: &Device,
     spec_entry: usize,
     clock_mhz: f64,
@@ -215,6 +417,7 @@ fn plan_group(
     Ok(GroupPlan {
         device: dev.clone(),
         spec_entry,
+        model_id,
         replicas: r,
         group_img_s: r as f64 * per_replica.images_per_sec,
         coef_bram18: coef,
@@ -223,16 +426,20 @@ fn plan_group(
     })
 }
 
-/// One device's memoized count → plan frontier: `counts[c - 1]` is the
-/// group plan at `c` replicas (each against a `1/c` shard with its
-/// coefficient BRAM charged). Built once at plan time; the live
-/// rebalancer resizes groups by *indexing* this — no planner run ever
-/// happens while traffic is flowing.
+/// One `(spec entry, model)` pair's memoized count → plan frontier:
+/// `counts[c - 1]` is the group plan at `c` replicas (each against a
+/// `1/c` shard with its coefficient BRAM charged). Built once at plan
+/// time; the live rebalancer resizes groups by *indexing* this — and
+/// shifts a board between models by indexing the row with the same
+/// `spec_entry` and a different `model_id`.
 #[derive(Debug, Clone)]
 pub struct GroupFrontier {
     pub device: Device,
     /// Index of the [`FleetSpec`] entry this frontier belongs to.
     pub spec_entry: usize,
+    /// Index into [`FleetFrontier::models`] — the PR 5 memo key extended
+    /// with the model id.
+    pub model_id: usize,
     /// Forced replica count, if the spec pinned one (the rebalancer
     /// leaves forced groups alone).
     pub forced: Option<usize>,
@@ -280,20 +487,24 @@ impl GroupFrontier {
 }
 
 /// The memoized fleet-wide plan frontier: one [`GroupFrontier`] per
-/// feasible spec entry. This is what PR 4's composition search walks and
-/// what the PR 5 rebalancer keeps attached at serve time.
+/// feasible `(spec entry, model)` pair. This is what composition walks
+/// and what the PR 5 rebalancer keeps attached at serve time.
 #[derive(Debug, Clone)]
 pub struct FleetFrontier {
     pub clock_mhz: f64,
+    /// The model zoo the frontier spans; `GroupFrontier::model_id`
+    /// indexes it.
+    pub models: Vec<Arc<Model>>,
     pub groups: Vec<GroupFrontier>,
 }
 
 impl FleetFrontier {
-    /// Build every device's count frontier: candidates at `1..=max`
-    /// (or exactly the forced count), stopping at the first infeasible
-    /// count. A forced count that cannot plan is the caller's mistake
-    /// (error); an unforced device that fits nothing just sits the fleet
-    /// out — unless *no* device fits, which returns the first error.
+    /// Build the single-model frontier (the PR 5 surface): candidates at
+    /// `1..=max` (or exactly the forced count), stopping at the first
+    /// infeasible count. A forced count that cannot plan is the caller's
+    /// mistake (error); an unforced device that fits nothing just sits
+    /// the fleet out — unless *no* device fits, which returns the first
+    /// error.
     pub fn build(
         model: &Model,
         spec: &FleetSpec,
@@ -301,54 +512,84 @@ impl FleetFrontier {
         policy: &Policy,
         max_replicas: usize,
     ) -> Result<FleetFrontier, PlanError> {
+        FleetFrontier::build_zoo(vec![Arc::new(model.clone())], spec, clock_mhz, policy, max_replicas)
+    }
+
+    /// [`FleetFrontier::build`] over a model zoo: one [`GroupFrontier`]
+    /// per feasible `(spec entry, model)` pair, entry-major. An entry
+    /// infeasible for *some* models simply lacks those rows; an entry
+    /// infeasible for *every* model is an error when forced, otherwise it
+    /// sits the fleet out.
+    pub fn build_zoo(
+        models: Vec<Arc<Model>>,
+        spec: &FleetSpec,
+        clock_mhz: f64,
+        policy: &Policy,
+        max_replicas: usize,
+    ) -> Result<FleetFrontier, PlanError> {
         assert!(!spec.entries.is_empty(), "a fleet spec needs at least one device");
+        assert!(!models.is_empty(), "a fleet needs at least one model");
         let mut groups = Vec::new();
         let mut first_err: Option<PlanError> = None;
         for (si, entry) in spec.entries.iter().enumerate() {
-            let built: Result<Vec<GroupPlan>, PlanError> = match entry.count {
-                Some(r) => plan_group(model, &entry.device, si, clock_mhz, policy, r)
-                    .map(|g| vec![g]),
-                None => {
-                    let mut out = Vec::new();
-                    let mut err: Option<PlanError> = None;
-                    for r in 1..=max_replicas.max(1) {
-                        match plan_group(model, &entry.device, si, clock_mhz, policy, r) {
-                            Ok(g) => out.push(g),
-                            Err(e) => {
-                                err = Some(e);
-                                break;
+            let mut entry_rows = Vec::new();
+            let mut entry_err: Option<PlanError> = None;
+            for (mi, model) in models.iter().enumerate() {
+                let built: Result<Vec<GroupPlan>, PlanError> = match entry.count {
+                    Some(r) => {
+                        plan_group(model, mi, &entry.device, si, clock_mhz, policy, r).map(|g| vec![g])
+                    }
+                    None => {
+                        let mut out = Vec::new();
+                        let mut err: Option<PlanError> = None;
+                        for r in 1..=max_replicas.max(1) {
+                            match plan_group(model, mi, &entry.device, si, clock_mhz, policy, r) {
+                                Ok(g) => out.push(g),
+                                Err(e) => {
+                                    err = Some(e);
+                                    break;
+                                }
                             }
                         }
+                        if out.is_empty() {
+                            Err(err.expect("loop ran at least once"))
+                        } else {
+                            Ok(out)
+                        }
                     }
-                    if out.is_empty() {
-                        Err(err.expect("loop ran at least once"))
-                    } else {
-                        Ok(out)
-                    }
+                };
+                match built {
+                    Ok(counts) => entry_rows.push(GroupFrontier {
+                        device: entry.device.clone(),
+                        spec_entry: si,
+                        model_id: mi,
+                        forced: entry.count,
+                        counts,
+                    }),
+                    Err(e) => entry_err = entry_err.or(Some(e)),
                 }
-            };
-            match built {
-                Ok(counts) => groups.push(GroupFrontier {
-                    device: entry.device.clone(),
-                    spec_entry: si,
-                    forced: entry.count,
-                    counts,
-                }),
-                Err(e) if entry.count.is_some() => return Err(e),
-                Err(e) => first_err = first_err.or(Some(e)),
+            }
+            if entry_rows.is_empty() {
+                match entry_err.expect("at least one model was tried") {
+                    e if entry.count.is_some() => return Err(e),
+                    e => first_err = first_err.or(Some(e)),
+                }
+            } else {
+                groups.extend(entry_rows);
             }
         }
         if groups.is_empty() {
             return Err(first_err.expect("at least one entry failed"));
         }
-        Ok(FleetFrontier { clock_mhz, groups })
+        Ok(FleetFrontier { clock_mhz, models, groups })
     }
 
     /// Assemble a [`FleetPlan`] at explicit per-group counts (`counts[i]`
     /// replicas for `groups[i]`; 0 leaves the group out). This is the
     /// rebalancer's entry point for "what would the fleet look like at
     /// these counts" and the test harness's way to start a fleet below
-    /// its argmax.
+    /// its argmax. At most one model may be live per spec entry — a
+    /// physical board carries one bitstream.
     pub fn fleet_at(&self, counts: &[usize]) -> FleetPlan {
         assert_eq!(counts.len(), self.groups.len(), "one count per frontier group");
         let chosen: Vec<GroupPlan> = self
@@ -359,16 +600,30 @@ impl FleetFrontier {
             .map(|(g, &c)| g.at(c).clone())
             .collect();
         assert!(!chosen.is_empty(), "a fleet needs at least one replica");
-        compose(self.clock_mhz, chosen, None)
+        let mut seen = std::collections::BTreeSet::new();
+        for g in &chosen {
+            assert!(
+                seen.insert(g.spec_entry),
+                "spec entry {} selected for two models at once",
+                g.spec_entry
+            );
+        }
+        compose(self.clock_mhz, self.models.clone(), chosen, None)
     }
 }
 
 /// Finalize a fleet from chosen group plans.
-fn compose(clock_mhz: f64, groups: Vec<GroupPlan>, target_img_s: Option<f64>) -> FleetPlan {
+fn compose(
+    clock_mhz: f64,
+    models: Vec<Arc<Model>>,
+    groups: Vec<GroupPlan>,
+    target_img_s: Option<f64>,
+) -> FleetPlan {
     let fleet_img_s = groups.iter().map(|g| g.group_img_s).sum::<f64>();
     let static_w = groups.iter().map(|g| g.device.static_w).sum::<f64>();
     FleetPlan {
         clock_mhz,
+        models,
         groups,
         fleet_img_s,
         static_w,
@@ -377,107 +632,188 @@ fn compose(clock_mhz: f64, groups: Vec<GroupPlan>, target_img_s: Option<f64>) ->
     }
 }
 
-/// Plan a heterogeneous fleet across `spec`'s devices.
-///
-/// Without a target: every listed device serves at its throughput-argmax
-/// replica count — throughput is additive across parts, so the per-device
-/// argmax composes to the fleet argmax. Devices that cannot carry even
-/// one replica are skipped (unless their count was forced, which is an
-/// error); if no device can, the first planning error is returned.
-///
-/// With `target_img_s`: the cheapest modeled-static-power mix meeting the
-/// target. Forced entries are always included at their forced count;
-/// optional devices are added greedily by modeled throughput per static
-/// watt until the target is met, then a drop pass removes (most power-
-/// hungry first) any optional device the target can spare. If even the
-/// full mix falls short, everything is included and `meets_target` is
-/// `false` so the caller can degrade explicitly instead of silently.
-pub fn plan_fleet_spec(
-    model: &Model,
-    spec: &FleetSpec,
-    clock_mhz: f64,
-    policy: &Policy,
-    target_img_s: Option<f64>,
-    max_replicas: usize,
-) -> Result<FleetPlan, PlanError> {
-    let frontier = FleetFrontier::build(model, spec, clock_mhz, policy, max_replicas)?;
-    Ok(compose_frontier(&frontier, target_img_s))
-}
-
-/// The PR 4 composition search over an already-built frontier: per-group
-/// argmax candidates, then (under a target) the cheapest static-power
-/// mix. Separated from [`plan_fleet_spec`] so the rebalancer can re-run
+/// The composition search over an already-built frontier. Separated from
+/// the [`FleetSpec::plan`] builder so the rebalancer can re-run
 /// composition against its memoized frontier without replanning.
+///
+/// Single-model frontiers keep the PR 4 search exactly: per-group argmax
+/// candidates, then (under a target) the cheapest static-power mix —
+/// forced entries always kept, optional devices added greedily by
+/// throughput per static watt, then a drop pass sheds what the target
+/// can spare.
+///
+/// Model-zoo frontiers first *assign* a model to every physical entry
+/// (each board runs one bitstream): entries take the model they model
+/// fastest, then a coverage repair reassigns the entry whose donation
+/// costs the least fleet throughput to any model left uncovered. Under a
+/// target the drop pass then sheds optional entries (most power-hungry
+/// first) as long as the target holds and every model keeps its last
+/// group.
 pub fn compose_frontier(frontier: &FleetFrontier, target_img_s: Option<f64>) -> FleetPlan {
-    let candidates: Vec<(GroupPlan, bool)> = frontier
-        .groups
-        .iter()
-        .map(|g| (g.argmax().clone(), g.forced.is_some()))
-        .collect();
-    assert!(!candidates.is_empty(), "frontier has at least one group");
+    assert!(!frontier.groups.is_empty(), "frontier has at least one group");
     let clock_mhz = frontier.clock_mhz;
+    let n_models = frontier.models.len();
 
-    let chosen: Vec<GroupPlan> = match target_img_s {
-        None => candidates.into_iter().map(|(g, _)| g).collect(),
-        Some(target) => {
-            let mut included: Vec<(GroupPlan, bool)> = Vec::new();
-            let mut optional: Vec<GroupPlan> = Vec::new();
-            for (g, forced) in candidates {
-                if forced {
-                    included.push((g, true));
-                } else {
-                    optional.push(g);
+    if n_models <= 1 {
+        let candidates: Vec<(GroupPlan, bool)> = frontier
+            .groups
+            .iter()
+            .map(|g| (g.argmax().clone(), g.forced.is_some()))
+            .collect();
+
+        let chosen: Vec<GroupPlan> = match target_img_s {
+            None => candidates.into_iter().map(|(g, _)| g).collect(),
+            Some(target) => {
+                let mut included: Vec<(GroupPlan, bool)> = Vec::new();
+                let mut optional: Vec<GroupPlan> = Vec::new();
+                for (g, forced) in candidates {
+                    if forced {
+                        included.push((g, true));
+                    } else {
+                        optional.push(g);
+                    }
                 }
-            }
-            // Greedy add by throughput per static watt. A fleet is never
-            // empty: with no forced entries at least one optional group
-            // joins, whatever the target.
-            optional.sort_by(|a, b| {
-                let ea = a.group_img_s / a.device.static_w.max(1e-12);
-                let eb = b.group_img_s / b.device.static_w.max(1e-12);
-                eb.partial_cmp(&ea).expect("efficiency is finite")
-            });
-            let sum = |v: &[(GroupPlan, bool)]| v.iter().map(|(g, _)| g.group_img_s).sum::<f64>();
-            let mut optional = optional.into_iter();
-            while included.is_empty() || sum(&included) < target {
-                match optional.next() {
-                    Some(g) => included.push((g, false)),
-                    None => break,
+                // Greedy add by throughput per static watt. A fleet is never
+                // empty: with no forced entries at least one optional group
+                // joins, whatever the target.
+                optional.sort_by(|a, b| {
+                    let ea = a.group_img_s / a.device.static_w.max(1e-12);
+                    let eb = b.group_img_s / b.device.static_w.max(1e-12);
+                    eb.partial_cmp(&ea).expect("efficiency is finite")
+                });
+                let sum = |v: &[(GroupPlan, bool)]| v.iter().map(|(g, _)| g.group_img_s).sum::<f64>();
+                let mut optional = optional.into_iter();
+                while included.is_empty() || sum(&included) < target {
+                    match optional.next() {
+                        Some(g) => included.push((g, false)),
+                        None => break,
+                    }
                 }
-            }
-            // Drop pass: shed the most power-hungry optional groups the
-            // target can spare (greedy add can overshoot).
-            let mut order: Vec<usize> = (0..included.len()).filter(|&i| !included[i].1).collect();
-            order.sort_by(|&i, &j| {
-                included[j]
-                    .0
-                    .device
-                    .static_w
-                    .partial_cmp(&included[i].0.device.static_w)
-                    .expect("power is finite")
-            });
-            let mut dropped = vec![false; included.len()];
-            let mut live = sum(&included);
-            let mut kept = included.len();
-            for i in order {
-                // Never shed the last group: a degenerate (e.g. zero)
-                // target still gets a serving fleet.
-                if kept > 1 && live - included[i].0.group_img_s >= target {
-                    live -= included[i].0.group_img_s;
-                    dropped[i] = true;
-                    kept -= 1;
+                // Drop pass: shed the most power-hungry optional groups the
+                // target can spare (greedy add can overshoot).
+                let mut order: Vec<usize> = (0..included.len()).filter(|&i| !included[i].1).collect();
+                order.sort_by(|&i, &j| {
+                    included[j]
+                        .0
+                        .device
+                        .static_w
+                        .partial_cmp(&included[i].0.device.static_w)
+                        .expect("power is finite")
+                });
+                let mut dropped = vec![false; included.len()];
+                let mut live = sum(&included);
+                let mut kept = included.len();
+                for i in order {
+                    // Never shed the last group: a degenerate (e.g. zero)
+                    // target still gets a serving fleet.
+                    if kept > 1 && live - included[i].0.group_img_s >= target {
+                        live -= included[i].0.group_img_s;
+                        dropped[i] = true;
+                        kept -= 1;
+                    }
                 }
+                included
+                    .into_iter()
+                    .zip(dropped)
+                    .filter(|(_, d)| !d)
+                    .map(|((g, _), _)| g)
+                    .collect()
             }
-            included
-                .into_iter()
-                .zip(dropped)
-                .filter(|(_, d)| !d)
-                .map(|((g, _), _)| g)
-                .collect()
+        };
+        assert!(!chosen.is_empty(), "composition keeps at least one group");
+        return compose(clock_mhz, frontier.models.clone(), chosen, target_img_s);
+    }
+
+    // --- Model-zoo assignment ---------------------------------------
+    // Per physical entry: the argmax candidate for each model it can run.
+    let mut entries: BTreeMap<usize, (bool, BTreeMap<usize, GroupPlan>)> = BTreeMap::new();
+    for g in &frontier.groups {
+        let slot = entries.entry(g.spec_entry).or_insert_with(|| (g.forced.is_some(), BTreeMap::new()));
+        slot.1.insert(g.model_id, g.argmax().clone());
+    }
+
+    // Each entry takes the model it models fastest (ties → lower model id).
+    let mut assign: BTreeMap<usize, usize> = BTreeMap::new();
+    for (&si, (_, cands)) in &entries {
+        let best = cands
+            .iter()
+            .max_by(|(ai, a), (bi, b)| {
+                (a.group_img_s, std::cmp::Reverse(*ai))
+                    .partial_cmp(&(b.group_img_s, std::cmp::Reverse(*bi)))
+                    .expect("throughput is finite")
+            })
+            .map(|(&mi, _)| mi)
+            .expect("entry has at least one feasible model");
+        assign.insert(si, best);
+    }
+
+    // Coverage repair: every model should hold at least one entry. Donate
+    // the entry whose reassignment loses the least fleet throughput, from
+    // a model that keeps another entry.
+    for mi in 0..n_models {
+        if assign.values().any(|&m| m == mi) {
+            continue;
         }
-    };
+        let mut best: Option<(f64, usize)> = None; // (throughput loss, entry)
+        for (&si, &cur) in &assign {
+            let (_, cands) = &entries[&si];
+            let Some(cand) = cands.get(&mi) else { continue };
+            if assign.values().filter(|&&m| m == cur).count() < 2 {
+                continue; // donor model would go uncovered
+            }
+            let loss = cands[&cur].group_img_s - cand.group_img_s;
+            if best.map(|(l, _)| loss < l).unwrap_or(true) {
+                best = Some((loss, si));
+            }
+        }
+        if let Some((_, si)) = best {
+            assign.insert(si, mi);
+        }
+        // No donor: the model stays uncovered; FleetPlanner::run surfaces it.
+    }
+
+    let mut chosen: Vec<GroupPlan> = assign
+        .iter()
+        .map(|(si, mi)| entries[si].1[mi].clone())
+        .collect();
+
+    // Target drop pass: shed optional entries (most power-hungry first)
+    // while the target holds and every model keeps its last group.
+    if let Some(target) = target_img_s {
+        let mut order: Vec<usize> = (0..chosen.len())
+            .filter(|&i| !entries[&chosen[i].spec_entry].0)
+            .collect();
+        order.sort_by(|&i, &j| {
+            chosen[j]
+                .device
+                .static_w
+                .partial_cmp(&chosen[i].device.static_w)
+                .expect("power is finite")
+        });
+        let mut dropped = vec![false; chosen.len()];
+        let mut live: f64 = chosen.iter().map(|g| g.group_img_s).sum();
+        for i in order {
+            let mi = chosen[i].model_id;
+            let peers = chosen
+                .iter()
+                .enumerate()
+                .filter(|(j, g)| !dropped[*j] && g.model_id == mi)
+                .count();
+            if peers > 1 && live - chosen[i].group_img_s >= target {
+                live -= chosen[i].group_img_s;
+                dropped[i] = true;
+            }
+        }
+        chosen = chosen
+            .into_iter()
+            .zip(dropped)
+            .filter(|(_, d)| !d)
+            .map(|(g, _)| g)
+            .collect();
+    }
+
     assert!(!chosen.is_empty(), "composition keeps at least one group");
-    compose(clock_mhz, chosen, target_img_s)
+    compose(clock_mhz, frontier.models.clone(), chosen, target_img_s)
 }
 
 /// A plan's engine signature: `(layer, kind, instances)` per engine
@@ -489,9 +825,27 @@ pub fn plan_signature(plan: &Plan) -> Vec<(usize, crate::ips::engine::EngineKind
     plan.engines.iter().map(|e| (e.layer, e.kind, e.instances)).collect()
 }
 
-/// Plan a single-device fleet of exactly `replicas` copies (the CLI's
-/// `--replicas` override). Errors if one replica cannot be planned under
-/// `1/replicas` of the device.
+/// Shim for the pre-zoo API.
+#[deprecated(note = "use the FleetSpec::plan() builder: spec.plan().model(&m).run()")]
+pub fn plan_fleet_spec(
+    model: &Model,
+    spec: &FleetSpec,
+    clock_mhz: f64,
+    policy: &Policy,
+    target_img_s: Option<f64>,
+    max_replicas: usize,
+) -> Result<FleetPlan, PlanError> {
+    spec.plan()
+        .model(model)
+        .clock_mhz(clock_mhz)
+        .policy(policy)
+        .target_img_s(target_img_s)
+        .max_replicas(max_replicas)
+        .run()
+}
+
+/// Shim for the pre-zoo API (CLI `--replicas` override).
+#[deprecated(note = "use the FleetSpec::plan() builder on FleetSpec::single(dev, Some(replicas))")]
 pub fn plan_fixed_fleet(
     model: &Model,
     dev: &Device,
@@ -500,12 +854,18 @@ pub fn plan_fixed_fleet(
     replicas: usize,
     target_img_s: Option<f64>,
 ) -> Result<FleetPlan, PlanError> {
-    let spec = FleetSpec::single(dev.clone(), Some(replicas.max(1)));
-    plan_fleet_spec(model, &spec, clock_mhz, policy, target_img_s, replicas.max(1))
+    FleetSpec::single(dev.clone(), Some(replicas.max(1)))
+        .plan()
+        .model(model)
+        .clock_mhz(clock_mhz)
+        .policy(policy)
+        .target_img_s(target_img_s)
+        .max_replicas(replicas.max(1))
+        .run()
 }
 
-/// Search replica counts `1..=max_replicas` for the best single-device
-/// fleet (the PR 2 surface; a one-entry [`plan_fleet_spec`]).
+/// Shim for the pre-zoo API (single-device replica search).
+#[deprecated(note = "use the FleetSpec::plan() builder on FleetSpec::single(dev, None)")]
 pub fn plan_fleet(
     model: &Model,
     dev: &Device,
@@ -514,8 +874,14 @@ pub fn plan_fleet(
     target_img_s: Option<f64>,
     max_replicas: usize,
 ) -> Result<FleetPlan, PlanError> {
-    let spec = FleetSpec::single(dev.clone(), None);
-    plan_fleet_spec(model, &spec, clock_mhz, policy, target_img_s, max_replicas)
+    FleetSpec::single(dev.clone(), None)
+        .plan()
+        .model(model)
+        .clock_mhz(clock_mhz)
+        .policy(policy)
+        .target_img_s(target_img_s)
+        .max_replicas(max_replicas)
+        .run()
 }
 
 #[cfg(test)]
@@ -527,11 +893,21 @@ mod tests {
         Policy::adaptive()
     }
 
+    /// Builder shorthand: single-device replica search.
+    fn search_one(m: &Model, dev: &Device, max: usize) -> Result<FleetPlan, PlanError> {
+        FleetSpec::single(dev.clone(), None).plan().model(m).max_replicas(max).run()
+    }
+
+    /// Builder shorthand: single-device fixed count.
+    fn fixed_one(m: &Model, dev: &Device, replicas: usize) -> Result<FleetPlan, PlanError> {
+        FleetSpec::single(dev.clone(), Some(replicas)).plan().model(m).max_replicas(replicas).run()
+    }
+
     #[test]
     fn lenet_tiny_on_zcu104_replicates() {
         let m = Model::lenet_tiny();
         let dev = by_name("zcu104").unwrap();
-        let fp = plan_fleet(&m, &dev, 200.0, &adaptive(), None, DEFAULT_MAX_REPLICAS).unwrap();
+        let fp = search_one(&m, &dev, DEFAULT_MAX_REPLICAS).unwrap();
         assert_eq!(fp.groups.len(), 1);
         let g = &fp.groups[0];
         // The acceptance bar: the default device carries at least two
@@ -560,11 +936,11 @@ mod tests {
         let m = Model::lenet_tiny();
         for dev_name in ["zcu104", "zu2cg", "edge-nodsp"] {
             let dev = by_name(dev_name).unwrap();
-            let Ok(best) = plan_fleet(&m, &dev, 200.0, &adaptive(), None, 6) else {
+            let Ok(best) = search_one(&m, &dev, 6) else {
                 continue;
             };
             for r in 1..=6usize {
-                if let Ok(fp) = plan_fixed_fleet(&m, &dev, 200.0, &adaptive(), r, None) {
+                if let Ok(fp) = fixed_one(&m, &dev, r) {
                     assert!(
                         best.fleet_img_s >= fp.fleet_img_s - 1e-6,
                         "{dev_name}: picked {} img/s @ r={}, but r={r} models {} img/s",
@@ -586,13 +962,13 @@ mod tests {
                 FleetEntry { device: by_name("zu5ev").unwrap(), count: None },
             ],
         };
-        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 4).unwrap();
+        let fp = spec.plan().model(&m).max_replicas(4).run().unwrap();
         assert_eq!(fp.groups.len(), 2);
         assert_eq!(fp.group_labels(), vec!["zcu104".to_string(), "zu5ev".to_string()]);
         let sum: f64 = fp.groups.iter().map(|g| g.group_img_s).sum();
         assert!((fp.fleet_img_s - sum).abs() < 1e-6);
-        let zcu = plan_fleet(&m, &by_name("zcu104").unwrap(), 200.0, &adaptive(), None, 4).unwrap();
-        let zu5 = plan_fleet(&m, &by_name("zu5ev").unwrap(), 200.0, &adaptive(), None, 4).unwrap();
+        let zcu = search_one(&m, &by_name("zcu104").unwrap(), 4).unwrap();
+        let zu5 = search_one(&m, &by_name("zu5ev").unwrap(), 4).unwrap();
         // Composition is per-device argmax, so the mix models exactly the
         // two single-device fleets added together — and beats both.
         assert!((fp.fleet_img_s - (zcu.fleet_img_s + zu5.fleet_img_s)).abs() < 1e-6);
@@ -615,12 +991,12 @@ mod tests {
                 FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
             ],
         };
-        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 8).unwrap();
+        let fp = spec.plan().model(&m).max_replicas(8).run().unwrap();
         assert_eq!(fp.groups[0].replicas, 2);
         assert_eq!(fp.groups[1].replicas, 1);
         // A forced count the device cannot hold is an error, not a skip.
         let spec = FleetSpec::single(by_name("edge-nodsp").unwrap(), Some(64));
-        assert!(plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 8).is_err());
+        assert!(spec.plan().model(&m).max_replicas(8).run().is_err());
     }
 
     #[test]
@@ -634,16 +1010,16 @@ mod tests {
                 FleetEntry { device: zu5.clone(), count: None },
             ],
         };
-        let free = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 4).unwrap();
+        let free = spec.plan().model(&m).max_replicas(4).run().unwrap();
         // A target one device alone can meet: the composition must shed
         // the other part's static power.
         let one_dev_target = free.groups.iter().map(|g| g.group_img_s).fold(f64::MAX, f64::min) * 0.5;
-        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), Some(one_dev_target), 4).unwrap();
+        let fp = spec.plan().model(&m).max_replicas(4).target_img_s(Some(one_dev_target)).run().unwrap();
         assert!(fp.meets_target);
         assert_eq!(fp.groups.len(), 1, "one part suffices for the target");
         assert!(fp.static_w < free.static_w);
         // An unmeetable target keeps the whole mix, flagged.
-        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), Some(1e15), 4).unwrap();
+        let fp = spec.plan().model(&m).max_replicas(4).target_img_s(Some(1e15)).run().unwrap();
         assert!(!fp.meets_target);
         assert_eq!(fp.groups.len(), 2);
         // A forced entry is never shed, even when the other part covers
@@ -654,8 +1030,7 @@ mod tests {
                 FleetEntry { device: zu5.clone(), count: Some(1) },
             ],
         };
-        let fp =
-            plan_fleet_spec(&m, &spec, 200.0, &adaptive(), Some(one_dev_target), 4).unwrap();
+        let fp = spec.plan().model(&m).max_replicas(4).target_img_s(Some(one_dev_target)).run().unwrap();
         assert!(fp.groups.iter().any(|g| g.device.name == "zu5ev"));
     }
 
@@ -668,12 +1043,12 @@ mod tests {
         let mut dev = by_name("zcu104").unwrap();
         dev.name = "bram-starved".into();
         dev.bram18 = coef + 1;
-        let fp = plan_fleet(&m, &dev, 200.0, &adaptive(), None, 4).unwrap();
+        let fp = search_one(&m, &dev, 4).unwrap();
         assert_eq!(fp.replicas(), 1, "BRAM reserve must cap the fleet at one replica");
-        assert!(plan_fixed_fleet(&m, &dev, 200.0, &adaptive(), 2, None).is_err());
+        assert!(fixed_one(&m, &dev, 2).is_err());
         // With BRAM for two copies the cap moves to two.
         dev.bram18 = 2 * coef;
-        let fp = plan_fleet(&m, &dev, 200.0, &adaptive(), None, 4).unwrap();
+        let fp = search_one(&m, &dev, 4).unwrap();
         assert_eq!(fp.replicas(), 2);
         assert!(fp.groups[0].total.bram18 <= dev.bram18);
     }
@@ -710,21 +1085,22 @@ mod tests {
                 FleetEntry { device: by_name("zu5ev").unwrap(), count: None },
             ],
         };
-        let fr = FleetFrontier::build(&m, &spec, 200.0, &adaptive(), 4).unwrap();
+        let fr = spec.plan().model(&m).max_replicas(4).frontier().unwrap();
         assert_eq!(fr.groups.len(), 2);
         assert_eq!(fr.groups[0].spec_entry, 0);
+        assert_eq!(fr.groups[0].model_id, 0);
         assert!(fr.groups[0].max_count() >= 2, "zcu104 carries at least two replicas");
         // at() returns exactly the plan the full search would make.
         for c in 1..=fr.groups[0].max_count() {
             let g = fr.groups[0].at(c);
             assert_eq!(g.replicas, c);
             let zcu = by_name("zcu104").unwrap();
-            let direct = plan_fixed_fleet(&m, &zcu, 200.0, &adaptive(), c, None).unwrap();
+            let direct = fixed_one(&m, &zcu, c).unwrap();
             assert!((g.group_img_s - direct.groups[0].group_img_s).abs() < 1e-6);
         }
         // Composition over the frontier == the one-shot search.
         let via_frontier = compose_frontier(&fr, None);
-        let direct = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 4).unwrap();
+        let direct = spec.plan().model(&m).max_replicas(4).run().unwrap();
         assert!((via_frontier.fleet_img_s - direct.fleet_img_s).abs() < 1e-6);
         assert_eq!(via_frontier.replicas(), direct.replicas());
         // fleet_at pins explicit counts — including starting BELOW the
@@ -742,28 +1118,24 @@ mod tests {
     #[test]
     fn plan_signature_detects_identical_and_different_shard_plans() {
         let m = Model::lenet_tiny();
-        let fr = FleetFrontier::build(
-            &m,
-            &FleetSpec::single(by_name("zcu104").unwrap(), None),
-            200.0,
-            &adaptive(),
-            3,
-        )
-        .unwrap();
+        let fr = FleetSpec::single(by_name("zcu104").unwrap(), None)
+            .plan()
+            .model(&m)
+            .max_replicas(3)
+            .frontier()
+            .unwrap();
         let g = &fr.groups[0];
         // A plan's signature equals itself and is stable across clones.
         let s1 = plan_signature(&g.at(1).per_replica);
         assert_eq!(s1, plan_signature(&g.at(1).per_replica.clone()));
         // Different devices produce different signatures (the edge part
         // substitutes IPs — the paper's adaptive story).
-        let edge = FleetFrontier::build(
-            &m,
-            &FleetSpec::single(by_name("edge-nodsp").unwrap(), None),
-            200.0,
-            &adaptive(),
-            1,
-        )
-        .unwrap();
+        let edge = FleetSpec::single(by_name("edge-nodsp").unwrap(), None)
+            .plan()
+            .model(&m)
+            .max_replicas(1)
+            .frontier()
+            .unwrap();
         assert_ne!(s1, plan_signature(&edge.groups[0].at(1).per_replica));
     }
 
@@ -776,8 +1148,9 @@ mod tests {
                 FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
             ],
         };
-        let fp = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 2).unwrap();
-        let reps = fp.deploy(m, Weights::random(&Model::lenet_tiny(), 42));
+        let fp = spec.plan().model(&m).max_replicas(2).run().unwrap();
+        let fleet = fp.deploy(m, Weights::random(&Model::lenet_tiny(), 42));
+        let reps = &fleet.replicas;
         assert_eq!(reps.len(), 2);
         assert!(Arc::ptr_eq(&reps[0].weights, &reps[1].weights));
         assert!(Arc::ptr_eq(&reps[0].model, &reps[1].model));
@@ -787,5 +1160,144 @@ mod tests {
         // ...and both pipelines are live and bit-identical.
         let img = vec![0i64; 256];
         assert_eq!(reps[0].infer_one(&img).unwrap(), reps[1].infer_one(&img).unwrap());
+        // The handle mirrors the plan's topology.
+        assert_eq!(fleet.groups, vec![0, 1]);
+        assert_eq!(fleet.labels, vec!["zcu104".to_string(), "zu5ev".to_string()]);
+        assert_eq!(fleet.n_groups(), 2);
+    }
+
+    #[test]
+    fn zoo_frontier_assigns_each_board_one_model_and_covers_all() {
+        let tiny = Arc::new(Model::lenet_tiny());
+        let wide = Arc::new(Model::lenet_wide(2));
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: by_name("zcu104").unwrap(), count: None },
+                FleetEntry { device: by_name("zu5ev").unwrap(), count: None },
+            ],
+        };
+        let planner = spec
+            .plan()
+            .models(vec![Arc::clone(&tiny), Arc::clone(&wide)])
+            .max_replicas(4);
+        let fr = planner.frontier().unwrap();
+        // Frontier keys extend with the model id: up to one row per
+        // (entry, model) pair, and both models appear.
+        assert!(fr.groups.iter().any(|g| g.model_id == 0));
+        assert!(fr.groups.iter().any(|g| g.model_id == 1));
+        for g in &fr.groups {
+            assert!(g.spec_entry < 2 && g.model_id < 2);
+        }
+        let fp = planner.run().unwrap();
+        // One bitstream per board, every model covered.
+        assert_eq!(fp.groups.len(), 2);
+        assert_ne!(fp.groups[0].model_id, fp.groups[1].model_id);
+        let entries: Vec<usize> = fp.groups.iter().map(|g| g.spec_entry).collect();
+        assert_eq!(entries, vec![0, 1]);
+        // Labels qualify with the model so two boards of one part stay
+        // distinguishable.
+        for (label, g) in fp.group_labels().iter().zip(&fp.groups) {
+            assert!(label.contains(&g.device.name));
+            assert!(label.contains(&fp.models[g.model_id].name));
+        }
+        // Per-model throughput partitions the fleet total.
+        assert!((fp.model_img_s(0) + fp.model_img_s(1) - fp.fleet_img_s).abs() < 1e-9);
+        assert!(fp.model_img_s(0) > 0.0 && fp.model_img_s(1) > 0.0);
+    }
+
+    #[test]
+    fn zoo_coverage_beats_pure_argmax_when_one_model_dominates() {
+        // lenet-tiny models faster than lenet-wide on every part, so the
+        // throughput argmax alone would give both boards to tiny; the
+        // coverage repair must still hand one board to wide.
+        let tiny = Arc::new(Model::lenet_tiny());
+        let wide = Arc::new(Model::lenet_wide(2));
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: by_name("zcu104").unwrap(), count: None },
+                FleetEntry { device: by_name("zcu104").unwrap(), count: None },
+            ],
+        };
+        let fp = spec
+            .plan()
+            .models(vec![tiny, wide])
+            .max_replicas(4)
+            .run()
+            .unwrap();
+        let tiny_groups = fp.groups.iter().filter(|g| g.model_id == 0).count();
+        let wide_groups = fp.groups.iter().filter(|g| g.model_id == 1).count();
+        assert_eq!((tiny_groups, wide_groups), (1, 1));
+        // With one board and two models, coverage is impossible: the
+        // builder surfaces it instead of silently serving one model.
+        let solo = FleetSpec::single(by_name("zcu104").unwrap(), None);
+        let err = solo
+            .plan()
+            .models(vec![Arc::new(Model::lenet_tiny()), Arc::new(Model::lenet_wide(2))])
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("lenet"), "names the uncovered model: {err}");
+    }
+
+    #[test]
+    fn zoo_deploy_builds_each_group_from_its_model() {
+        let tiny = Arc::new(Model::lenet_tiny());
+        let wide = Arc::new(Model::lenet_wide(2));
+        let spec = FleetSpec {
+            entries: vec![
+                FleetEntry { device: by_name("zcu104").unwrap(), count: Some(1) },
+                FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
+            ],
+        };
+        let fp = spec
+            .plan()
+            .models(vec![Arc::clone(&tiny), Arc::clone(&wide)])
+            .max_replicas(2)
+            .run()
+            .unwrap();
+        let weights: Vec<Arc<Weights>> = fp
+            .models
+            .iter()
+            .map(|m| Arc::new(Weights::random(m, 42)))
+            .collect();
+        let fleet = fp.deploy_zoo(&weights);
+        assert_eq!(fleet.replicas.len(), 2);
+        for (ri, &gi) in fleet.groups.iter().enumerate() {
+            let expect = &fp.models[fp.groups[gi].model_id];
+            assert!(Arc::ptr_eq(&fleet.replicas[ri].model, &fleet.models[gi]));
+            assert_eq!(fleet.replicas[ri].model.name, expect.name);
+        }
+        // A multi-model plan refuses the single-model deploy surface.
+        let result = std::panic::catch_unwind(|| {
+            fp.deploy_shared(Arc::clone(&tiny), Arc::new(Weights::random(&tiny, 1)))
+        });
+        assert!(result.is_err(), "deploy_shared must reject zoo plans");
+    }
+
+    #[test]
+    fn solo_handle_is_the_one_group_special_case() {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let fp = fixed_one(&m, &dev, 2).unwrap();
+        let reps = fp.deploy(m, Weights::random(&Model::lenet_tiny(), 7)).replicas;
+        let handle = FleetHandle::solo(reps);
+        assert_eq!(handle.n_groups(), 1);
+        assert_eq!(handle.labels, vec!["fleet".to_string()]);
+        assert_eq!(handle.groups, vec![0, 0]);
+        assert!(Arc::ptr_eq(&handle.models[0], &handle.replicas[0].model));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_plan() {
+        let m = Model::lenet_tiny();
+        let dev = by_name("zcu104").unwrap();
+        let via_shim = plan_fleet(&m, &dev, 200.0, &adaptive(), None, 4).unwrap();
+        let via_builder = search_one(&m, &dev, 4).unwrap();
+        assert!((via_shim.fleet_img_s - via_builder.fleet_img_s).abs() < 1e-9);
+        let fixed = plan_fixed_fleet(&m, &dev, 200.0, &adaptive(), 2, None).unwrap();
+        assert_eq!(fixed.replicas(), 2);
+        let spec = FleetSpec::single(dev, None);
+        let via_spec = plan_fleet_spec(&m, &spec, 200.0, &adaptive(), None, 4).unwrap();
+        assert!((via_spec.fleet_img_s - via_builder.fleet_img_s).abs() < 1e-9);
     }
 }

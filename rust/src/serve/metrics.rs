@@ -106,6 +106,43 @@ impl GroupMetrics {
     }
 }
 
+/// Identity and contract of one tenant, registered at fleet start
+/// ([`FleetMetrics::with_tenants`]).
+#[derive(Debug, Clone)]
+pub struct TenantInfo {
+    pub name: String,
+    /// Name of the model the tenant's requests route to.
+    pub model: String,
+    /// Weighted-fair quota (admission share and dispatch priority).
+    pub quota: f64,
+    /// Declared p99 SLO class in ms (reported, not enforced).
+    pub p99_slo_ms: Option<f64>,
+}
+
+/// Live counters for one tenant: admission outcomes and its own latency
+/// reservoir, so per-customer p99 and shed rate never hide inside the
+/// fleet aggregate.
+#[derive(Debug)]
+struct TenantMetrics {
+    info: TenantInfo,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    latencies_nanos: Mutex<Vec<(u64, u64)>>,
+}
+
+impl TenantMetrics {
+    fn new(info: TenantInfo) -> TenantMetrics {
+        TenantMetrics {
+            info,
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            latencies_nanos: Mutex::new(Vec::new()),
+        }
+    }
+}
+
 /// What a rebalance action did to one device group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RebalanceAction {
@@ -117,6 +154,9 @@ pub enum RebalanceAction {
     /// replicas spun up first, old ones retired after their in-flight
     /// micro-batches drained.
     Swap,
+    /// The whole group moved to a *different model's* frontier plan as
+    /// the traffic mix drifted (a rolling swap across the model axis).
+    Shift,
 }
 
 impl std::fmt::Display for RebalanceAction {
@@ -125,6 +165,7 @@ impl std::fmt::Display for RebalanceAction {
             RebalanceAction::Grow => write!(f, "grow"),
             RebalanceAction::Shrink => write!(f, "shrink"),
             RebalanceAction::Swap => write!(f, "swap"),
+            RebalanceAction::Shift => write!(f, "shift"),
         }
     }
 }
@@ -205,6 +246,10 @@ pub struct FleetMetrics {
     /// The fault timeline (injections and their outcomes) — what the
     /// scenario harness asserts on and the fault tables print.
     faults: Mutex<Vec<FaultEvent>>,
+    /// Per-tenant admission counters and latency reservoirs. Empty when
+    /// the fleet is single-tenant (the PR 2 surface); fixed at start via
+    /// [`FleetMetrics::with_tenants`].
+    tenants: Vec<TenantMetrics>,
 }
 
 impl FleetMetrics {
@@ -253,11 +298,31 @@ impl FleetMetrics {
             groups: labels.into_iter().map(GroupMetrics::new).collect(),
             events: Mutex::new(Vec::new()),
             faults: Mutex::new(Vec::new()),
+            tenants: Vec::new(),
         };
         for g in replica_group {
             m.register_replica(g);
         }
         m
+    }
+
+    /// Attach the tenant roster (consumes `self` before it is shared).
+    /// Each [`TenantInfo`] gets its own admission counters and latency
+    /// reservoir; the tenant-suffixed hooks (`note_accepted_t`, …) index
+    /// into this roster. An empty roster keeps the fleet single-tenant.
+    pub fn with_tenants(mut self, roster: Vec<TenantInfo>) -> FleetMetrics {
+        self.tenants = roster.into_iter().map(TenantMetrics::new).collect();
+        self
+    }
+
+    /// Number of registered tenants (0 for a single-tenant fleet).
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Identity/contract of tenant `t` as registered at start.
+    pub fn tenant_info(&self, t: usize) -> &TenantInfo {
+        &self.tenants[t].info
     }
 
     /// The shared time source. Span timestamps taken from this clock are
@@ -493,6 +558,64 @@ impl FleetMetrics {
         let _ = self.with_group_of(replica, |g| {
             lock_ok(&g.latencies_nanos).push((now, nanos));
         });
+    }
+
+    /// [`FleetMetrics::note_accepted`] plus the tenant-axis counter.
+    pub fn note_accepted_t(&self, tenant: usize) {
+        self.note_accepted();
+        if let Some(t) = self.tenants.get(tenant) {
+            t.accepted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// [`FleetMetrics::note_rejected`] plus the tenant-axis shed counter
+    /// — which tenant got shed is the whole point of quota admission.
+    pub fn note_rejected_t(&self, tenant: usize) {
+        self.note_rejected();
+        if let Some(t) = self.tenants.get(tenant) {
+            t.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// [`FleetMetrics::note_completed`] plus the tenant's own latency
+    /// reservoir, so per-tenant p99 is computed from that tenant's
+    /// requests only.
+    pub fn note_completed_t(&self, replica: usize, tenant: usize, latency: Duration) {
+        self.note_completed(replica, latency);
+        if let Some(t) = self.tenants.get(tenant) {
+            t.completed.fetch_add(1, Ordering::Relaxed);
+            let now = self.clock.now_nanos();
+            lock_ok(&t.latencies_nanos).push((now, latency.as_nanos() as u64));
+        }
+    }
+
+    /// Lifetime `(accepted, rejected, completed)` for tenant `t` — the
+    /// scenario harness differences these across phase boundaries.
+    pub fn tenant_counts(&self, t: usize) -> (u64, u64, u64) {
+        let tm = &self.tenants[t];
+        (
+            tm.accepted.load(Ordering::Relaxed),
+            tm.rejected.load(Ordering::Relaxed),
+            tm.completed.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Latency stats for tenant `t` over completions recorded in
+    /// `[from_nanos, to_nanos)` offsets — the per-tenant analog of
+    /// [`FleetMetrics::range_stats`] for phase verdicts.
+    pub fn tenant_range_stats(&self, t: usize, from_nanos: u64, to_nanos: u64) -> RangeStats {
+        let mut lat: Vec<u64> = lock_ok(&self.tenants[t].latencies_nanos)
+            .iter()
+            .filter(|&&(at, _)| at >= from_nanos && at < to_nanos)
+            .map(|&(_, l)| l)
+            .collect();
+        lat.sort_unstable();
+        RangeStats {
+            completed: lat.len() as u64,
+            p50_ms: percentile_ms(&lat, 0.50),
+            p95_ms: percentile_ms(&lat, 0.95),
+            p99_ms: percentile_ms(&lat, 0.99),
+        }
     }
 
     /// One request failed inside a replica.
@@ -779,6 +902,35 @@ impl FleetMetrics {
                 .collect(),
             events: self.events(),
             faults: self.faults(),
+            tenants: self
+                .tenants
+                .iter()
+                .map(|t| {
+                    let mut tlat: Vec<u64> =
+                        lock_ok(&t.latencies_nanos).iter().map(|&(_, l)| l).collect();
+                    tlat.sort_unstable();
+                    let accepted = t.accepted.load(Ordering::Relaxed);
+                    let rejected = t.rejected.load(Ordering::Relaxed);
+                    let offered = accepted + rejected;
+                    TenantSnapshot {
+                        name: t.info.name.clone(),
+                        model: t.info.model.clone(),
+                        quota: t.info.quota,
+                        p99_slo_ms: t.info.p99_slo_ms,
+                        accepted,
+                        rejected,
+                        completed: t.completed.load(Ordering::Relaxed),
+                        shed_pct: if offered > 0 {
+                            rejected as f64 / offered as f64 * 100.0
+                        } else {
+                            0.0
+                        },
+                        p50_ms: percentile_ms(&tlat, 0.50),
+                        p95_ms: percentile_ms(&tlat, 0.95),
+                        p99_ms: percentile_ms(&tlat, 0.99),
+                    }
+                })
+                .collect(),
         }
     }
 }
@@ -822,6 +974,28 @@ pub struct FleetSnapshot {
     pub events: Vec<RebalanceEvent>,
     /// The fault timeline (empty unless faults were injected).
     pub faults: Vec<FaultEvent>,
+    /// Per-tenant breakdown (empty for single-tenant fleets).
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+/// Frozen per-tenant statistics — admission outcomes, shed rate, and
+/// latency quantiles computed from that tenant's requests only.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    pub name: String,
+    /// Model the tenant routes to.
+    pub model: String,
+    pub quota: f64,
+    pub p99_slo_ms: Option<f64>,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    /// `rejected / (accepted + rejected)` × 100 — the shed rate quota
+    /// admission is supposed to apportion.
+    pub shed_pct: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
 }
 
 /// Fleet-wide sliding-window signals ([`FleetMetrics::window_fleet`]).
@@ -949,6 +1123,67 @@ mod tests {
         assert!(s.events.is_empty());
         assert_eq!(g.drained, 0);
         assert_eq!(g.drain_failed, 0);
+    }
+
+    #[test]
+    fn tenant_axis_tracks_per_tenant_shed_and_latency() {
+        let m = FleetMetrics::new(2).with_tenants(vec![
+            TenantInfo {
+                name: "tenantA".to_string(),
+                model: "lenet-tiny".to_string(),
+                quota: 3.0,
+                p99_slo_ms: Some(50.0),
+            },
+            TenantInfo {
+                name: "tenantB".to_string(),
+                model: "lenet-wide-2x".to_string(),
+                quota: 1.0,
+                p99_slo_ms: None,
+            },
+        ]);
+        assert_eq!(m.n_tenants(), 2);
+        assert_eq!(m.tenant_info(1).model, "lenet-wide-2x");
+        // 4 accepts + 1 shed for A, 2 accepts + 3 sheds for B.
+        for _ in 0..4 {
+            m.note_accepted_t(0);
+        }
+        m.note_rejected_t(0);
+        for _ in 0..2 {
+            m.note_accepted_t(1);
+        }
+        for _ in 0..3 {
+            m.note_rejected_t(1);
+        }
+        m.note_dispatched(0, 6);
+        for i in 0..4u64 {
+            m.note_completed_t(0, 0, Duration::from_millis(i + 1));
+        }
+        m.note_completed_t(1, 1, Duration::from_millis(40));
+        m.note_completed_t(1, 1, Duration::from_millis(60));
+        assert_eq!(m.tenant_counts(0), (4, 1, 4));
+        assert_eq!(m.tenant_counts(1), (2, 3, 2));
+        let s = m.snapshot();
+        // Fleet aggregates see every request; tenant rows partition them.
+        assert_eq!(s.accepted, 6);
+        assert_eq!(s.rejected, 4);
+        assert_eq!(s.tenants.len(), 2);
+        let (a, b) = (&s.tenants[0], &s.tenants[1]);
+        assert_eq!(a.name, "tenantA");
+        assert_eq!((a.accepted, a.rejected, a.completed), (4, 1, 4));
+        assert!((a.shed_pct - 20.0).abs() < 1e-9);
+        assert_eq!(a.p99_slo_ms, Some(50.0));
+        assert!((a.p99_ms - 4.0).abs() < 1e-6, "A p99 {}", a.p99_ms);
+        assert!((b.shed_pct - 60.0).abs() < 1e-9);
+        assert!((b.p99_ms - 60.0).abs() < 1e-6, "B p99 {}", b.p99_ms);
+        // Per-tenant range query slices B's reservoir like range_stats.
+        let rs = m.tenant_range_stats(1, 0, u64::MAX);
+        assert_eq!(rs.completed, 2);
+        assert!((rs.p50_ms - 40.0).abs() < 1e-6);
+        // Untenanted fleets report an empty tenant table.
+        let plain = FleetMetrics::new(1);
+        plain.note_accepted_t(0); // out-of-roster index is a no-op tenant-wise
+        assert_eq!(plain.snapshot().tenants.len(), 0);
+        assert_eq!(plain.snapshot().accepted, 1);
     }
 
     #[test]

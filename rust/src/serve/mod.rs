@@ -31,6 +31,22 @@
 //!   load (Poisson arrivals via a reproducible [`arrival_schedule`])
 //!   driving the above; the `acf serve` CLI prints its
 //!   modeled-vs-measured comparison.
+//!
+//! ## Multi-model, multi-tenant serving
+//!
+//! One deployment hosts several CNNs at once. The [`FleetSpec::plan`]
+//! builder composes a fleet over a **model×device** frontier (each
+//! physical board is assigned one model's bitstream), [`FleetPlan`]'s
+//! deploy methods return a [`FleetHandle`] describing which groups carry
+//! which models, and the one serving entry point —
+//! [`Server::start`]`(fleet, &config)` — routes requests by
+//! `(tenant, model)`: each [`TenantSpec`] binds a named tenant to a
+//! model with an admission quota, admission runs per-tenant bounded
+//! queues sized by quota share (the over-quota tenant sheds, others are
+//! unaffected), and dispatch drains tenants weighted-fair (lowest
+//! served/quota first) onto the replicas serving their model. Per-tenant
+//! p99 and shed rate land in [`FleetSnapshot::tenants`] and
+//! `report::tenant_table`.
 
 pub mod fault;
 pub mod fleet;
@@ -41,16 +57,21 @@ pub mod scheduler;
 
 pub use fault::{FaultEvent, FaultEventKind, FaultKind, FaultSpec, LatencyShim};
 pub use fleet::{
-    compose_frontier, plan_fixed_fleet, plan_fleet, plan_fleet_spec, plan_signature, FleetEntry,
-    FleetFrontier, FleetPlan, FleetSpec, GroupFrontier, GroupPlan, DEFAULT_MAX_REPLICAS,
+    compose_frontier, plan_signature, FleetEntry, FleetFrontier, FleetHandle, FleetPlan,
+    FleetPlanner, FleetSpec, GroupFrontier, GroupPlan, DEFAULT_MAX_REPLICAS,
 };
+#[allow(deprecated)]
+pub use fleet::{plan_fixed_fleet, plan_fleet, plan_fleet_spec};
 pub use metrics::{
     FleetMetrics, FleetSnapshot, FleetWindow, GroupSnapshot, GroupWindow, RangeStats,
-    RebalanceAction, RebalanceEvent, ReplicaSnapshot, Totals,
+    RebalanceAction, RebalanceEvent, ReplicaSnapshot, TenantInfo, TenantSnapshot, Totals,
 };
-pub use rebalance::{RebalanceConfig, Rebalancer, RecoveryEnvelope, RecoveryTracker};
+pub use rebalance::{
+    shift_decision, RebalanceConfig, Rebalancer, RecoveryEnvelope, RecoveryTracker,
+};
 pub use scenario::{
     run_scenario, FaultOutcome, PhaseVerdict, Scenario, ScenarioOpts, ScenarioReport,
+    ScenarioTenant, TenantPhaseVerdict,
 };
 pub use scheduler::{DrainReport, Pending, Server};
 
@@ -106,12 +127,24 @@ impl std::error::Error for ServeError {
     }
 }
 
-/// Scheduler knobs.
+/// Admission-control knobs (the ingress side of the scheduler).
 #[derive(Debug, Clone)]
-pub struct ServeConfig {
-    /// Bounded submission-queue depth; a full queue rejects with
+pub struct AdmissionConfig {
+    /// Bounded submission-queue depth, split across tenants by quota
+    /// share; a tenant whose share is full rejects with
     /// [`ServeError::Overloaded`].
     pub queue_depth: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig { queue_depth: 64 }
+    }
+}
+
+/// Dispatch-side knobs (queue → replica handoff).
+#[derive(Debug, Clone)]
+pub struct DispatchConfig {
     /// Largest micro-batch the dispatcher forms per replica handoff.
     /// Clamped to the execution tier's lane width
     /// ([`crate::netlist::sim::LANES`]) so each dispatch maps onto whole
@@ -123,6 +156,53 @@ pub struct ServeConfig {
     /// finish its in-flight micro-batches before it is detached and
     /// *reported* in the per-group drain summary.
     pub drain_deadline: Duration,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> DispatchConfig {
+        DispatchConfig { max_batch: 8, drain_deadline: Duration::from_secs(5) }
+    }
+}
+
+/// One tenant's admission contract: a name, the model its requests run
+/// on, its weighted-fair quota, and an optional p99 SLO class (reported
+/// against, never enforced by dropping completed work).
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Model name the tenant's requests route to. An empty string binds
+    /// to the fleet's first model (the single-model default).
+    pub model: String,
+    /// Weighted-fair share: admission capacity and dispatch service are
+    /// proportional to `quota / Σ quotas`. Must be positive.
+    pub quota: f64,
+    /// Declared p99 SLO in ms, reported in the tenant table.
+    pub p99_slo_ms: Option<f64>,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, model: &str, quota: f64) -> TenantSpec {
+        TenantSpec { name: name.into(), model: model.into(), quota, p99_slo_ms: None }
+    }
+}
+
+/// The tenant roster. Empty (the default) means one implicit tenant
+/// named `default` with quota 1 bound to the fleet's first model —
+/// exactly the pre-multi-tenant behavior.
+#[derive(Debug, Clone, Default)]
+pub struct TenantConfig {
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// Scheduler configuration, in nested sections so scenario files, the
+/// `--serve-config` JSON, and CLI flags share one field list:
+/// [`AdmissionConfig`] (ingress), [`DispatchConfig`] (queue → replica),
+/// [`TenantConfig`] (who may ask for what).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub admission: AdmissionConfig,
+    pub dispatch: DispatchConfig,
+    pub tenants: TenantConfig,
     /// Time source for metrics windows, latency reservoirs, and trace
     /// spans. Injected (rather than created inside the server) so spans
     /// recorded *outside* the server — e.g. the CLI's per-engine settle
@@ -137,13 +217,118 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
         ServeConfig {
-            queue_depth: 64,
-            max_batch: 8,
-            drain_deadline: Duration::from_secs(5),
+            admission: AdmissionConfig::default(),
+            dispatch: DispatchConfig::default(),
+            tenants: TenantConfig::default(),
             clock: Clock::wall(),
             tracer: Tracer::off(),
         }
     }
+}
+
+impl ServeConfig {
+    /// The common test/bench shape: a queue depth and a batch clamp,
+    /// everything else default.
+    pub fn sized(queue_depth: usize, max_batch: usize) -> ServeConfig {
+        ServeConfig {
+            admission: AdmissionConfig { queue_depth },
+            dispatch: DispatchConfig { max_batch, ..DispatchConfig::default() },
+            ..ServeConfig::default()
+        }
+    }
+
+    /// Load the serializable sections (`admission` / `dispatch` /
+    /// `tenants`) from `--serve-config` JSON. Absent keys keep their
+    /// defaults; `clock` and `tracer` are runtime handles and not
+    /// configurable from a file.
+    ///
+    /// ```json
+    /// {
+    ///   "admission": {"queue_depth": 128},
+    ///   "dispatch": {"max_batch": 8, "drain_deadline_ms": 5000},
+    ///   "tenants": [
+    ///     {"name": "tenantA", "model": "lenet-tiny", "quota": 3.0, "p99_slo_ms": 50.0},
+    ///     {"name": "tenantB", "model": "lenet-wide-2x", "quota": 1.0}
+    ///   ]
+    /// }
+    /// ```
+    pub fn from_json(v: &crate::util::json::Json) -> Result<ServeConfig, crate::util::json::JsonError> {
+        use crate::util::json::JsonError;
+        let mut cfg = ServeConfig::default();
+        if let Some(a) = v.get_opt("admission") {
+            cfg.admission.queue_depth = a.get_usize_or("queue_depth", cfg.admission.queue_depth)?;
+        }
+        if let Some(d) = v.get_opt("dispatch") {
+            cfg.dispatch.max_batch = d.get_usize_or("max_batch", cfg.dispatch.max_batch)?;
+            let ms = d.get_f64_or(
+                "drain_deadline_ms",
+                cfg.dispatch.drain_deadline.as_secs_f64() * 1e3,
+            )?;
+            cfg.dispatch.drain_deadline = Duration::from_secs_f64(ms / 1e3);
+        }
+        if let Some(t) = v.get_opt("tenants") {
+            let mut tenants = Vec::new();
+            for item in t.as_arr()? {
+                let quota = item.get_f64_or("quota", 1.0)?;
+                if !(quota > 0.0) {
+                    return Err(JsonError::Access("tenant quota must be positive".into()));
+                }
+                tenants.push(TenantSpec {
+                    name: item.get("name")?.as_str()?.to_string(),
+                    model: item.get_str_or("model", "")?.to_string(),
+                    quota,
+                    p99_slo_ms: match item.get_opt("p99_slo_ms") {
+                        Some(s) => Some(s.as_f64()?),
+                        None => None,
+                    },
+                });
+            }
+            cfg.tenants = TenantConfig { tenants };
+        }
+        Ok(cfg)
+    }
+
+    /// The serializable sections, mirror of [`ServeConfig::from_json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let tenants: Vec<Json> = self
+            .tenants
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut fields = vec![
+                    ("name", t.name.as_str().into()),
+                    ("model", t.model.as_str().into()),
+                    ("quota", t.quota.into()),
+                ];
+                if let Some(slo) = t.p99_slo_ms {
+                    fields.push(("p99_slo_ms", slo.into()));
+                }
+                obj_from(fields)
+            })
+            .collect();
+        obj([
+            ("admission", obj([("queue_depth", self.admission.queue_depth.into())])),
+            (
+                "dispatch",
+                obj([
+                    ("max_batch", self.dispatch.max_batch.into()),
+                    (
+                        "drain_deadline_ms",
+                        (self.dispatch.drain_deadline.as_secs_f64() * 1e3).into(),
+                    ),
+                ]),
+            ),
+            ("tenants", Json::Arr(tenants)),
+        ])
+    }
+}
+
+/// [`crate::util::json::obj`] for a runtime-sized field list.
+fn obj_from(fields: Vec<(&str, crate::util::json::Json)>) -> crate::util::json::Json {
+    crate::util::json::Json::Obj(
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+    )
 }
 
 /// Outcome of one open-loop request: which corpus image was sent and what
@@ -277,6 +462,53 @@ pub fn open_loop(
     step_load(server, corpus, &[LoadPhase { requests, offered_img_s }], seed)
 }
 
+/// [`open_loop`] for a tenant mix: arrival `i` is submitted as tenant
+/// `i % corpora.len()` with an image from that tenant's corpus, so every
+/// tenant offers an equal share of the load (quota skew then shows up in
+/// what gets *admitted*, which is the point). Returns `(tenant, outcome)`
+/// per arrival.
+pub fn open_loop_tenants(
+    server: &Server,
+    corpora: &[Vec<Vec<i64>>],
+    requests: usize,
+    offered_img_s: f64,
+    seed: u64,
+) -> Vec<(usize, LoadOutcome)> {
+    assert!(!corpora.is_empty() && corpora.iter().all(|c| !c.is_empty()));
+    let schedule = arrival_schedule(
+        corpora.iter().map(|c| c.len()).min().unwrap(),
+        requests,
+        offered_img_s,
+        seed,
+    );
+    let start = Instant::now();
+    let mut submitted: Vec<(usize, usize, Result<Pending, ServeError>)> = Vec::new();
+    for (i, (at, idx)) in schedule.into_iter().enumerate() {
+        let tenant = i % corpora.len();
+        let due = Duration::from_secs_f64(at);
+        let elapsed = start.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        submitted.push((tenant, idx, server.submit_as(tenant, corpora[tenant][idx].clone())));
+    }
+    submitted
+        .into_iter()
+        .map(|(tenant, image_idx, sub)| {
+            (
+                tenant,
+                LoadOutcome {
+                    image_idx,
+                    result: match sub {
+                        Ok(p) => p.wait(),
+                        Err(e) => Err(e),
+                    },
+                },
+            )
+        })
+        .collect()
+}
+
 /// Drive `server` with a multi-phase open-loop profile (e.g. the
 /// low → spike → low shape the rebalancer is tested under). Phase `k`
 /// draws its arrivals from a seed forked off `seed` by `k`, so adding
@@ -357,6 +589,47 @@ pub fn profile_load(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_config_json_roundtrip_and_defaults() {
+        use crate::util::json::Json;
+        // An empty object keeps every default.
+        let cfg = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.admission.queue_depth, 64);
+        assert_eq!(cfg.dispatch.max_batch, 8);
+        assert_eq!(cfg.dispatch.drain_deadline, Duration::from_secs(5));
+        assert!(cfg.tenants.tenants.is_empty());
+        // Nested sections load independently; absent keys default.
+        let text = r#"{
+            "admission": {"queue_depth": 128},
+            "tenants": [
+                {"name": "tenantA", "model": "lenet-tiny", "quota": 3.0, "p99_slo_ms": 50.0},
+                {"name": "tenantB", "model": "lenet-wide-2x"}
+            ]
+        }"#;
+        let cfg = ServeConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.admission.queue_depth, 128);
+        assert_eq!(cfg.dispatch.max_batch, 8, "absent dispatch section keeps defaults");
+        assert_eq!(cfg.tenants.tenants.len(), 2);
+        assert_eq!(cfg.tenants.tenants[0].name, "tenantA");
+        assert_eq!(cfg.tenants.tenants[0].quota, 3.0);
+        assert_eq!(cfg.tenants.tenants[0].p99_slo_ms, Some(50.0));
+        assert_eq!(cfg.tenants.tenants[1].quota, 1.0, "quota defaults to 1");
+        assert_eq!(cfg.tenants.tenants[1].p99_slo_ms, None);
+        // to_json → from_json is lossless for the serializable sections.
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.admission.queue_depth, cfg.admission.queue_depth);
+        assert_eq!(back.dispatch.max_batch, cfg.dispatch.max_batch);
+        assert_eq!(back.tenants.tenants.len(), cfg.tenants.tenants.len());
+        assert_eq!(back.tenants.tenants[0].model, "lenet-tiny");
+        // A non-positive quota is a config error, not a later panic.
+        let bad = r#"{"tenants": [{"name": "x", "quota": 0.0}]}"#;
+        assert!(ServeConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        // The sized() shorthand fills the two hot fields.
+        let s = ServeConfig::sized(2, 1);
+        assert_eq!(s.admission.queue_depth, 2);
+        assert_eq!(s.dispatch.max_batch, 1);
+    }
 
     #[test]
     fn arrival_schedule_is_deterministic() {

@@ -36,6 +36,17 @@
 //! replica. Either way no admitted request is dropped and the scheduler
 //! keeps dispatching throughout.
 //!
+//! **Cross-model shifts.** On a multi-model fleet the frontier holds a
+//! row per `(device, model)` pair, and the controller watches *per-model*
+//! pressure through the tenant counters: when one model's tenants shed
+//! while another model's groups idle, the coldest donor group *shifts* —
+//! a rolling swap onto the recipient model's frontier plan for the same
+//! physical part (new-model replicas spin up before old-model replicas
+//! retire, so neither model's service goes dark). The decision rule is
+//! the pure function [`shift_decision`]; the donor always keeps at least
+//! one group per model, so a shift can rebalance a drifted traffic mix
+//! but never evict a model from the fleet.
+//!
 //! **Stability.** Two mechanisms keep the loop from thrashing:
 //! hysteresis (the scale-down watermark sits far below the scale-up
 //! watermark, and shrinking additionally requires an empty queue and a
@@ -61,6 +72,7 @@ use super::metrics::{RebalanceAction, RebalanceEvent};
 use super::scheduler::Server;
 use crate::cnn::model::{Model, Weights};
 use crate::coordinator::Deployment;
+use std::cmp::Ordering as CmpOrdering;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -103,12 +115,15 @@ impl RebalanceConfig {
     }
 }
 
-/// One managed device group: its frontier and the live count the
-/// controller believes it has.
+/// One managed device group: its frontier row (keyed by
+/// `(spec_entry, model)` — the model×device memo), the model it
+/// currently serves, and the live count the controller believes it has.
 struct Managed {
     /// Server-side group index (metrics / dispatch).
     group: usize,
     frontier: GroupFrontier,
+    /// Index into the frontier's model list; changes on a shift.
+    model_id: usize,
     count: usize,
 }
 
@@ -121,21 +136,28 @@ pub struct Rebalancer {
 
 impl Rebalancer {
     /// Start rebalancing `server` (already serving `plan`) against the
-    /// memoized `frontier`. `model`/`weights` are the fleet's shared
-    /// network — new replicas deploy from them with frontier plans.
-    /// Groups whose spec entry pinned a count are left alone.
+    /// memoized `frontier`. `weights` is one weight set per frontier
+    /// model (parallel to [`FleetFrontier::models`]) — new replicas
+    /// deploy from their group's model with frontier plans, and a
+    /// cross-model shift deploys the recipient model's. Groups whose
+    /// spec entry pinned a count are left alone.
     pub fn start(
         server: Arc<Server>,
         frontier: FleetFrontier,
         plan: &FleetPlan,
-        model: Arc<Model>,
-        weights: Arc<Weights>,
+        weights: Vec<Arc<Weights>>,
         cfg: RebalanceConfig,
     ) -> Rebalancer {
-        // Map each server group back to its frontier entry. Groups the
-        // composition search shed (under a target) are simply absent —
-        // their budgets stay attached in `frontier` but they were never
-        // deployed, so there is nothing to resize.
+        assert_eq!(
+            weights.len(),
+            frontier.models.len(),
+            "one weight set per frontier model"
+        );
+        // Map each server group back to its frontier row — keyed by
+        // (spec entry, model), the memo key of the model×device
+        // frontier. Groups the composition search shed (under a target)
+        // are simply absent — their budgets stay attached in `frontier`
+        // but they were never deployed, so there is nothing to resize.
         let managed: Vec<Managed> = plan
             .groups
             .iter()
@@ -144,18 +166,18 @@ impl Rebalancer {
                 let f = frontier
                     .groups
                     .iter()
-                    .find(|f| f.spec_entry == g.spec_entry)?
+                    .find(|f| f.spec_entry == g.spec_entry && f.model_id == g.model_id)?
                     .clone();
                 if f.forced.is_some() {
                     return None; // pinned counts are operator statements
                 }
-                Some(Managed { group: gi, frontier: f, count: g.replicas })
+                Some(Managed { group: gi, frontier: f, model_id: g.model_id, count: g.replicas })
             })
             .collect();
         let stop = Arc::new(AtomicBool::new(false));
         let thread_stop = Arc::clone(&stop);
         let handle = std::thread::spawn(move || {
-            control_loop(&server, managed, &model, &weights, &cfg, &thread_stop);
+            control_loop(&server, managed, &frontier, &weights, &cfg, &thread_stop);
         });
         Rebalancer { stop, handle: Some(handle) }
     }
@@ -192,14 +214,23 @@ fn interruptible_sleep(total: Duration, stop: &AtomicBool) {
 fn control_loop(
     server: &Server,
     mut managed: Vec<Managed>,
-    model: &Arc<Model>,
-    weights: &Arc<Weights>,
+    frontier: &FleetFrontier,
+    weights: &[Arc<Weights>],
     cfg: &RebalanceConfig,
     stop: &AtomicBool,
 ) {
     if managed.is_empty() {
         return; // every group pinned — nothing to control
     }
+    let n_models = frontier.models.len();
+    // Tenant → frontier-model mapping for per-model shed attribution
+    // (tenants route by model name; frontier rows key by model id).
+    let tenant_model: Vec<Option<usize>> = (0..server.n_tenants())
+        .map(|t| {
+            let name = &server.model_of_tenant(t).name;
+            frontier.models.iter().position(|m| m.name == *name)
+        })
+        .collect();
     // Floor the tick so a degenerate `--window-ms 0` cannot turn the
     // loop into a busy-spin contending every latency mutex.
     let tick = cfg.window.max(Duration::from_millis(10));
@@ -209,6 +240,8 @@ fn control_loop(
     let mut prev_busy: Vec<f64> =
         server.metrics().window(tick).iter().map(|w| w.busy_secs).collect();
     let mut prev_rejected = server.metrics().rejected_total();
+    let mut prev_tenant_rej: Vec<u64> =
+        (0..server.n_tenants()).map(|t| server.metrics().tenant_counts(t).1).collect();
     let mut prev_at = Instant::now();
     let mut last_action: Option<Instant> = None; // free to act at once
     while !stop.load(Ordering::Relaxed) {
@@ -244,13 +277,49 @@ fn control_loop(
             })
             .collect();
 
+        // Per-model pressure: shed attributed through the tenant
+        // counters, utilization averaged over each model's groups.
+        let mut model_shed = vec![0u64; n_models];
+        for (t, &m) in tenant_model.iter().enumerate() {
+            let rej = server.metrics().tenant_counts(t).1;
+            if let Some(m) = m {
+                model_shed[m] += rej.saturating_sub(prev_tenant_rej[t]);
+            }
+            prev_tenant_rej[t] = rej;
+        }
+        let mut model_groups = vec![0usize; n_models];
+        let mut model_util_sum = vec![0.0f64; n_models];
+        for (mi, m) in managed.iter().enumerate() {
+            model_groups[m.model_id] += 1;
+            model_util_sum[m.model_id] += util[mi];
+        }
+        let model_util: Vec<f64> = (0..n_models)
+            .map(|m| {
+                if model_groups[m] > 0 { model_util_sum[m] / model_groups[m] as f64 } else { 0.0 }
+            })
+            .collect();
+
         if last_action.map_or(true, |t| now.duration_since(t) >= cfg.cooldown) {
             let hot = util.iter().any(|&u| u > cfg.high_water());
             let pressured = queue_ratio >= 0.5 || shed > 0 || hot || drift;
             let acted = if pressured {
-                grow_step(server, &mut managed, &util, model, weights, queue_ratio, shed)
+                // A drifted traffic mix (one model shedding while
+                // another idles) is fixed by moving a whole group
+                // between models, not by growing the hot model past its
+                // budget — try the shift first.
+                let shifted = shift_decision(&model_groups, &model_shed, &model_util, cfg.low_water())
+                    .map(|(donor, recipient)| {
+                        shift_step(
+                            server, &mut managed, frontier, weights, &util, donor, recipient,
+                        )
+                    })
+                    .unwrap_or(false);
+                shifted
+                    || grow_step(
+                        server, &mut managed, &util, frontier, weights, queue_ratio, shed,
+                    )
             } else if queue_depth == 0 && shed == 0 {
-                shrink_step(server, &mut managed, &util, model, weights, cfg)
+                shrink_step(server, &mut managed, &util, frontier, weights, cfg)
             } else {
                 false
             };
@@ -264,14 +333,135 @@ fn control_loop(
     }
 }
 
+/// The cross-model shift rule, pure so it is directly testable: given
+/// per-model group counts, per-model shed deltas over the window, and
+/// per-model mean utilization, pick a `(donor, recipient)` pair — the
+/// recipient is the model shedding the most, the donor the idlest
+/// *quiet* model (no shed, mean utilization under `low_water`) that
+/// would still keep at least one group after donating. `None` when the
+/// mix is balanced (nobody sheds, or no model can safely donate).
+pub fn shift_decision(
+    groups_per_model: &[usize],
+    shed_per_model: &[u64],
+    util_per_model: &[f64],
+    low_water: f64,
+) -> Option<(usize, usize)> {
+    let n = groups_per_model.len();
+    if n < 2 {
+        return None;
+    }
+    let recipient = (0..n)
+        .filter(|&m| shed_per_model[m] > 0)
+        .max_by_key(|&m| (shed_per_model[m], std::cmp::Reverse(m)))?;
+    let donor = (0..n)
+        .filter(|&m| {
+            m != recipient
+                && shed_per_model[m] == 0
+                && groups_per_model[m] >= 2
+                && util_per_model[m] < low_water
+        })
+        .min_by(|&a, &b| {
+            util_per_model[a].partial_cmp(&util_per_model[b]).unwrap_or(CmpOrdering::Equal)
+        })?;
+    Some((donor, recipient))
+}
+
+/// Apply a [`shift_decision`]: roll the donor model's coldest group onto
+/// the recipient model's frontier plan for the same physical part (the
+/// `(spec entry, recipient)` row must exist — a board that cannot carry
+/// the recipient model is never a shift target). Returns whether a
+/// shift happened.
+fn shift_step(
+    server: &Server,
+    managed: &mut [Managed],
+    frontier: &FleetFrontier,
+    weights: &[Arc<Weights>],
+    util: &[f64],
+    donor: usize,
+    recipient: usize,
+) -> bool {
+    // Coldest donor group whose device also has a recipient-model row.
+    let mut cand: Option<(usize, f64)> = None;
+    for (mi, m) in managed.iter().enumerate() {
+        if m.model_id != donor {
+            continue;
+        }
+        let has_row = frontier.groups.iter().any(|r| {
+            r.spec_entry == m.frontier.spec_entry && r.model_id == recipient && r.forced.is_none()
+        });
+        if !has_row {
+            continue;
+        }
+        if cand.map(|(_, u)| util[mi] < u).unwrap_or(true) {
+            cand = Some((mi, util[mi]));
+        }
+    }
+    let Some((mi, _)) = cand else {
+        return false;
+    };
+    let row = frontier
+        .groups
+        .iter()
+        .find(|r| r.spec_entry == managed[mi].frontier.spec_entry && r.model_id == recipient)
+        .expect("candidate filter checked the row exists")
+        .clone();
+    let to = row.argmax().replicas;
+    let (group, from) = (managed[mi].group, managed[mi].count);
+    let model = &frontier.models[recipient];
+    let wts = &weights[recipient];
+    let deploy = || {
+        Arc::new(Deployment::with_plan(
+            Arc::clone(model),
+            Arc::clone(wts),
+            row.at(to).per_replica.clone(),
+        ))
+    };
+    // Rolling swap across the model axis: recipient-model replicas spin
+    // up before donor-model replicas retire, so neither model's service
+    // goes dark and the transient overcommit is bounded to one replica.
+    let old = server.replica_ids_of_group(group);
+    let mut spawned = 0usize;
+    for id in &old {
+        if spawned < to {
+            if server.add_replica(deploy(), group).is_err() {
+                return false;
+            }
+            spawned += 1;
+        }
+        let _ = server.retire_replica(*id);
+    }
+    while spawned < to {
+        if server.add_replica(deploy(), group).is_err() {
+            return false;
+        }
+        spawned += 1;
+    }
+    server.metrics().note_rebalance(RebalanceEvent {
+        at_secs: 0.0, // stamped by the metrics clock
+        group,
+        label: row.device.name.clone(),
+        action: RebalanceAction::Shift,
+        from,
+        to,
+        reason: format!(
+            "mix drift: '{}' shedding while '{}' idle",
+            frontier.models[recipient].name, frontier.models[donor].name
+        ),
+    });
+    managed[mi].frontier = row;
+    managed[mi].model_id = recipient;
+    resync_count(server, &mut managed[mi], to);
+    true
+}
+
 /// Grow the group with the largest modeled marginal gain by one count
 /// step. Returns whether anything changed.
 fn grow_step(
     server: &Server,
     managed: &mut [Managed],
     util: &[f64],
-    model: &Arc<Model>,
-    weights: &Arc<Weights>,
+    frontier: &FleetFrontier,
+    weights: &[Arc<Weights>],
     queue_ratio: f64,
     shed: u64,
 ) -> bool {
@@ -304,12 +494,20 @@ fn grow_step(
         shed,
         util[mi] * 100.0
     );
-    let (group, from, to) = {
+    let (group, from, to, model_id) = {
         let m = &managed[mi];
-        (m.group, m.count, m.count + 1)
+        (m.group, m.count, m.count + 1, m.model_id)
     };
-    let acted =
-        apply_resize(server, &managed[mi].frontier, group, from, to, &reason, model, weights);
+    let acted = apply_resize(
+        server,
+        &managed[mi].frontier,
+        group,
+        from,
+        to,
+        &reason,
+        &frontier.models[model_id],
+        &weights[model_id],
+    );
     // Resync even on failure: an aborted swap may still have mutated the
     // fleet (adds that landed before an add raced shutdown, retires that
     // were refused).
@@ -333,8 +531,8 @@ fn shrink_step(
     server: &Server,
     managed: &mut [Managed],
     util: &[f64],
-    model: &Arc<Model>,
-    weights: &Arc<Weights>,
+    frontier: &FleetFrontier,
+    weights: &[Arc<Weights>],
     cfg: &RebalanceConfig,
 ) -> bool {
     let mut coldest: Option<(usize, f64)> = None;
@@ -357,12 +555,20 @@ fn shrink_step(
         u * 100.0,
         cfg.low_water() * 100.0
     );
-    let (group, from, to) = {
+    let (group, from, to, model_id) = {
         let m = &managed[mi];
-        (m.group, m.count, m.count - 1)
+        (m.group, m.count, m.count - 1, m.model_id)
     };
-    let acted =
-        apply_resize(server, &managed[mi].frontier, group, from, to, &reason, model, weights);
+    let acted = apply_resize(
+        server,
+        &managed[mi].frontier,
+        group,
+        from,
+        to,
+        &reason,
+        &frontier.models[model_id],
+        &weights[model_id],
+    );
     resync_count(server, &mut managed[mi], if acted { to } else { from });
     acted
 }
@@ -540,6 +746,36 @@ impl RecoveryTracker {
     /// Milliseconds from the fault instant to recovery, if recovered.
     pub fn recovery_ms(&self) -> Option<f64> {
         self.recovered_nanos.map(|n| n.saturating_sub(self.fault_nanos) as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod shift_tests {
+    use super::shift_decision;
+
+    #[test]
+    fn shed_plus_idle_donor_yields_a_shift() {
+        // Model 1 sheds; model 0 has two idle groups — donate one.
+        let pick = shift_decision(&[2, 1], &[0, 12], &[0.05, 0.9], 0.25);
+        assert_eq!(pick, Some((0, 1)));
+        // Busiest shedding model wins the recipient slot.
+        let pick = shift_decision(&[3, 1, 1], &[0, 4, 9], &[0.02, 0.8, 0.9], 0.25);
+        assert_eq!(pick, Some((0, 2)));
+    }
+
+    #[test]
+    fn no_shift_without_shed_or_without_a_safe_donor() {
+        // Nobody sheds: balanced mix, nothing to fix.
+        assert_eq!(shift_decision(&[2, 2], &[0, 0], &[0.1, 0.1], 0.25), None);
+        // The only quiet model has a single group — it never donates its
+        // last one (a shift must not evict a model from the fleet).
+        assert_eq!(shift_decision(&[1, 1], &[0, 5], &[0.05, 0.9], 0.25), None);
+        // Quiet model is itself busy (util over low water): no donor.
+        assert_eq!(shift_decision(&[2, 1], &[0, 5], &[0.5, 0.9], 0.25), None);
+        // A model that is itself shedding never donates.
+        assert_eq!(shift_decision(&[2, 2], &[3, 5], &[0.05, 0.9], 0.25), None);
+        // Single-model fleets have no shift axis at all.
+        assert_eq!(shift_decision(&[4], &[7], &[0.9], 0.25), None);
     }
 }
 

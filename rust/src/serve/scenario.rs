@@ -39,9 +39,24 @@
 //! the [`crate::trace`] tracks — so a failing scenario exports a Chrome
 //! trace whose fault instants sit on the same control tracks a live
 //! serve would use.
+//!
+//! **Multi-tenant scenarios.** An optional top-level `tenants` list
+//! turns on the same (tenant, model) routing the live scheduler uses:
+//! per-tenant admission caps carved out of `queue_depth` by quota,
+//! weighted-fair dequeue (lowest served/quota first), and model-affine
+//! dispatch — a tenant's requests only ride replicas whose group serves
+//! its model. Each arrival is assigned a tenant by deterministic
+//! weighted round-robin over the phase's `mix` weights (equal by
+//! default), so verdicts stay byte-identical for a given scenario +
+//! seed. Phase verdicts then carry a per-tenant block (offered /
+//! accepted / shed / completed / p99) and an optional
+//! `tenant_p99_ms_max` assertion bounds the *worst* tenant's p99 —
+//! the "no tenant starves" bar. Scenarios without a `tenants` key are
+//! untouched: one implicit tenant, full-depth queue, no model filter,
+//! and a verdict without the per-tenant block.
 
 use super::fault::{FaultEvent, FaultEventKind, FaultKind, FaultSpec};
-use super::metrics::FleetMetrics;
+use super::metrics::{FleetMetrics, TenantInfo};
 use super::rebalance::{RecoveryEnvelope, RecoveryTracker};
 use super::{phase_seed, profile_schedule, FleetPlan, LoadProfile};
 use crate::trace::{self, Clock, Tracer};
@@ -94,6 +109,10 @@ pub struct PhaseAsserts {
     pub max_shed_pct: Option<f64>,
     /// Max fleet p99 (ms) over completions inside the phase's window.
     pub p99_ms_max: Option<f64>,
+    /// Max per-tenant p99 (ms): the *worst* tenant's p99 over the
+    /// phase's window must sit under this bar (falls back to the fleet
+    /// p99 in untenanted scenarios). The "no tenant starves" check.
+    pub tenant_p99_ms_max: Option<f64>,
     /// Max recovery time (ms) for every fault injected in this phase.
     pub recovery_ms_max: Option<f64>,
     /// Admitted requests of this phase must all complete (default true).
@@ -109,8 +128,28 @@ pub struct ScenarioPhase {
     /// before the previous phase's arrivals end; omitted = back-to-back.
     pub start_s: Option<f64>,
     pub load: LoadSpec,
+    /// Tenant traffic mix for this phase: one positive weight per
+    /// tenant, driving the deterministic weighted round-robin that
+    /// assigns arrivals to tenants. `None` = equal shares. Only valid
+    /// when the scenario declares tenants.
+    pub mix: Option<Vec<f64>>,
     pub faults: Vec<FaultSpec>,
     pub asserts: PhaseAsserts,
+}
+
+/// One tenant of a multi-tenant scenario: a name, the model its
+/// requests target, and its weighted-fair admission/service quota —
+/// mirroring the live scheduler's `(tenant, model)` routing table.
+#[derive(Debug, Clone)]
+pub struct ScenarioTenant {
+    pub name: String,
+    /// Model name; defaults to the scenario-level `model`.
+    pub model: String,
+    /// Relative quota (> 0). Admission caps and dequeue shares are
+    /// proportional to quota, exactly as in the live scheduler.
+    pub quota: f64,
+    /// Advisory p99 SLO carried into the metrics roster (reports only).
+    pub p99_slo_ms: Option<f64>,
 }
 
 /// A parsed scenario file.
@@ -122,7 +161,11 @@ pub struct Scenario {
     /// against the device catalog.
     pub devices: String,
     /// Model name (resolved by the CLI against the model registry).
+    /// Multi-model scenarios list per-tenant models in `tenants`; this
+    /// stays the default for tenants that omit one.
     pub model: String,
+    /// Tenant roster; empty = classic single-tenant scenario.
+    pub tenants: Vec<ScenarioTenant>,
     pub queue_depth: usize,
     pub max_batch: usize,
     /// Completion-count tail the recovery envelope and the recovery
@@ -156,6 +199,47 @@ impl Scenario {
         let devices =
             v.get("devices").and_then(Json::as_str).map_err(|e| bad(format!("devices: {e}")))?;
         let model = v.get_str_or("model", "lenet-tiny").map_err(|e| bad(format!("model: {e}")))?;
+        let tenants = match v.get_opt("tenants").map_err(|e| bad(format!("tenants: {e}")))? {
+            None => Vec::new(),
+            Some(tv) => {
+                let arr = tv.as_arr().map_err(|e| bad(format!("tenants: {e}")))?;
+                if arr.is_empty() {
+                    return Err(bad("tenants, when given, needs at least one entry"));
+                }
+                let mut out: Vec<ScenarioTenant> = Vec::with_capacity(arr.len());
+                for (i, t) in arr.iter().enumerate() {
+                    let tname = t
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .map_err(|e| bad(format!("tenants[{i}] name: {e}")))?;
+                    let tmodel = t
+                        .get_str_or("model", &model)
+                        .map_err(|e| bad(format!("tenants[{i}] model: {e}")))?;
+                    let quota = t
+                        .get_f64_or("quota", 1.0)
+                        .map_err(|e| bad(format!("tenants[{i}] quota: {e}")))?;
+                    if !(quota > 0.0) {
+                        return Err(bad(format!(
+                            "tenants[{i}] '{tname}': quota must be positive"
+                        )));
+                    }
+                    let p99_slo_ms = opt_f64(t, "p99_slo_ms")
+                        .map_err(|e| bad(format!("tenants[{i}] p99_slo_ms: {e}")))?;
+                    if out.iter().any(|o| o.name == tname) {
+                        return Err(bad(format!(
+                            "tenants[{i}]: duplicate tenant name '{tname}'"
+                        )));
+                    }
+                    out.push(ScenarioTenant {
+                        name: tname.to_string(),
+                        model: tmodel,
+                        quota,
+                        p99_slo_ms,
+                    });
+                }
+                out
+            }
+        };
         let queue_depth =
             v.get_usize_or("queue_depth", 64).map_err(|e| bad(format!("queue_depth: {e}")))?;
         let max_batch =
@@ -173,7 +257,7 @@ impl Scenario {
         let mut phases = Vec::with_capacity(phases_v.len());
         let mut last_start: Option<f64> = None;
         for (i, pv) in phases_v.iter().enumerate() {
-            let phase = parse_phase(pv, i)?;
+            let phase = parse_phase(pv, i, tenants.len())?;
             if let (Some(prev), Some(cur)) = (last_start, phase.start_s) {
                 if cur <= prev {
                     return Err(bad(format!(
@@ -193,6 +277,7 @@ impl Scenario {
             description,
             devices: devices.to_string(),
             model,
+            tenants,
             queue_depth: queue_depth.max(1),
             max_batch: max_batch.max(1),
             recovery_tail,
@@ -201,7 +286,7 @@ impl Scenario {
     }
 }
 
-fn parse_phase(v: &Json, idx: usize) -> Result<ScenarioPhase, String> {
+fn parse_phase(v: &Json, idx: usize, n_tenants: usize) -> Result<ScenarioPhase, String> {
     let name = v.get_str_or("name", &format!("phase{idx}")).map_err(|e| bad(e.to_string()))?;
     let ctx = |e: &dyn std::fmt::Display, field: &str| format!("phase '{name}' {field}: {e}");
     let requests = v.get("requests").and_then(Json::as_usize).map_err(|e| ctx(&e, "requests"))?;
@@ -213,6 +298,32 @@ fn parse_phase(v: &Json, idx: usize) -> Result<ScenarioPhase, String> {
         None => None,
     };
     let load = parse_load(v.get("load").map_err(|e| ctx(&e, "load"))?, &name)?;
+    let mix = match v.get_opt("mix").map_err(|e| ctx(&e, "mix"))? {
+        None => None,
+        Some(mv) => {
+            let arr = mv.as_arr().map_err(|e| ctx(&e, "mix"))?;
+            if n_tenants == 0 {
+                return Err(bad(format!(
+                    "phase '{name}': mix requires a top-level tenants list"
+                )));
+            }
+            if arr.len() != n_tenants {
+                return Err(bad(format!(
+                    "phase '{name}': mix has {} weights for {n_tenants} tenants",
+                    arr.len()
+                )));
+            }
+            let mut ws = Vec::with_capacity(arr.len());
+            for w in arr {
+                let w = w.as_f64().map_err(|e| ctx(&e, "mix"))?;
+                if !(w > 0.0) {
+                    return Err(bad(format!("phase '{name}': mix weights must be positive")));
+                }
+                ws.push(w);
+            }
+            Some(ws)
+        }
+    };
     let mut faults = Vec::new();
     if let Some(fv) = v.get_opt("faults").map_err(|e| ctx(&e, "faults"))? {
         for f in fv.as_arr().map_err(|e| ctx(&e, "faults"))? {
@@ -223,17 +334,20 @@ fn parse_phase(v: &Json, idx: usize) -> Result<ScenarioPhase, String> {
         Some(a) => PhaseAsserts {
             max_shed_pct: opt_f64(a, "max_shed_pct").map_err(|e| ctx(&e, "asserts"))?,
             p99_ms_max: opt_f64(a, "p99_ms_max").map_err(|e| ctx(&e, "asserts"))?,
+            tenant_p99_ms_max: opt_f64(a, "tenant_p99_ms_max")
+                .map_err(|e| ctx(&e, "asserts"))?,
             recovery_ms_max: opt_f64(a, "recovery_ms_max").map_err(|e| ctx(&e, "asserts"))?,
             zero_drops: a.get_bool_or("zero_drops", true).map_err(|e| ctx(&e, "asserts"))?,
         },
         None => PhaseAsserts {
             max_shed_pct: None,
             p99_ms_max: None,
+            tenant_p99_ms_max: None,
             recovery_ms_max: None,
             zero_drops: true,
         },
     };
-    Ok(ScenarioPhase { name, requests, start_s, load, faults, asserts })
+    Ok(ScenarioPhase { name, requests, start_s, load, mix, faults, asserts })
 }
 
 fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>, crate::util::json::JsonError> {
@@ -377,8 +491,25 @@ pub struct PhaseVerdict {
     pub completed: u64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Per-tenant cut of this phase (empty for untenanted scenarios).
+    pub tenants: Vec<TenantPhaseVerdict>,
     pub checks: Vec<CheckResult>,
     pub passed: bool,
+}
+
+/// One tenant's slice of a phase verdict.
+#[derive(Debug, Clone)]
+pub struct TenantPhaseVerdict {
+    pub name: String,
+    pub model: String,
+    /// Arrivals assigned to this tenant in the phase.
+    pub offered: u64,
+    pub accepted: u64,
+    pub shed: u64,
+    pub shed_pct: f64,
+    /// This tenant's completions inside the phase's time window.
+    pub completed: u64,
+    pub p99_ms: f64,
 }
 
 /// One injected fault's outcome.
@@ -444,7 +575,7 @@ impl ScenarioReport {
                         ])
                     })
                     .collect();
-                crate::util::json::obj([
+                let mut pj = crate::util::json::obj([
                     ("name", Json::Str(p.name.clone())),
                     ("requests", Json::Num(p.requests as f64)),
                     ("accepted", Json::Num(p.accepted as f64)),
@@ -456,7 +587,32 @@ impl ScenarioReport {
                     ("p99_ms", Json::Num(r3(p.p99_ms))),
                     ("checks", Json::Arr(checks)),
                     ("passed", Json::Bool(p.passed)),
-                ])
+                ]);
+                // The per-tenant block only exists for tenanted
+                // scenarios — untenanted reports keep their exact
+                // pre-multi-tenant byte layout.
+                if !p.tenants.is_empty() {
+                    let tv: Vec<Json> = p
+                        .tenants
+                        .iter()
+                        .map(|t| {
+                            crate::util::json::obj([
+                                ("name", Json::Str(t.name.clone())),
+                                ("model", Json::Str(t.model.clone())),
+                                ("offered", Json::Num(t.offered as f64)),
+                                ("accepted", Json::Num(t.accepted as f64)),
+                                ("shed", Json::Num(t.shed as f64)),
+                                ("shed_pct", Json::Num(r3(t.shed_pct))),
+                                ("completed", Json::Num(t.completed as f64)),
+                                ("p99_ms", Json::Num(r3(t.p99_ms))),
+                            ])
+                        })
+                        .collect();
+                    if let Json::Obj(m) = &mut pj {
+                        m.insert("tenants".to_string(), Json::Arr(tv));
+                    }
+                }
+                pj
             })
             .collect();
         let faults: Vec<Json> = self
@@ -512,6 +668,11 @@ pub fn run_scenario(
             label: g.device.name.clone(),
             replicas: g.replicas,
             rate: g.per_replica.images_per_sec,
+            model: fleet
+                .models
+                .get(g.model_id)
+                .map(|m| m.name.clone())
+                .unwrap_or_default(),
         })
         .collect();
     run_modeled(scenario, &groups, fleet.fleet_img_s, opts)
@@ -525,6 +686,9 @@ pub struct SimGroup {
     pub replicas: usize,
     /// Modeled per-replica service rate (img/s).
     pub rate: f64,
+    /// Name of the model this group's replicas serve. Matched against
+    /// tenant routes in multi-tenant scenarios; ignored otherwise.
+    pub model: String,
 }
 
 /// A replica of the simulated fleet.
@@ -534,11 +698,14 @@ struct SimReplica {
     rate: f64,
     /// Per-dispatch micro-batch clamp (scheduler scaling rule).
     clamp: usize,
+    /// Index into the engine's route table of the model this replica
+    /// serves (0 for untenanted scenarios' single implicit model).
+    model: usize,
     alive: bool,
     /// When the in-flight batch completes (`None` = idle).
     busy_until: Option<u64>,
-    /// Admission timestamps of the in-flight batch's requests.
-    batch: Vec<u64>,
+    /// `(admission timestamp, tenant)` of the in-flight batch's requests.
+    batch: Vec<(u64, usize)>,
     /// When the in-flight batch was dispatched.
     batch_start: u64,
     /// Latency-degradation state: service times multiply by
@@ -572,7 +739,7 @@ fn next_event(
     reps: &[SimReplica],
     faults: &[ScheduledFault],
     next_fault: usize,
-    arrivals: &[(u64, usize)],
+    arrivals: &[(u64, usize, usize)],
     next_arrival: usize,
 ) -> Option<(u64, u8, usize)> {
     let mut next: Option<(u64, u8, usize)> = None;
@@ -600,19 +767,66 @@ fn next_event(
     next
 }
 
-/// Fill every idle live replica from the queue — fastest replica first
-/// (ties broken by lowest id), batch clamped per replica — mirroring
-/// the real scheduler's throughput-weighted pick.
+/// One (tenant, model) route of the simulated scheduler — the same
+/// shape the live routing table carves out of the serve config.
+struct SimRoute {
+    name: String,
+    model_name: String,
+    /// Index into the engine's model table.
+    model: usize,
+    quota: f64,
+    /// Admission cap: this tenant's quota-share of `queue_depth`.
+    cap: usize,
+}
+
+/// Fill every idle live replica from the per-tenant queues, mirroring
+/// the real scheduler: weighted-fair tenant pick (lowest served/quota
+/// first, ties to the lower id), fastest model-compatible replica
+/// (ties to the lowest id), batch filled fairly from same-model queues
+/// up to the replica's clamp. With one tenant and `model_affine` off
+/// this degenerates to the classic single-queue fastest-first fill.
 fn dispatch(
     now: u64,
-    queue: &mut VecDeque<(u64, usize)>,
+    queues: &mut [VecDeque<(u64, usize)>],
+    served: &mut [u64],
+    routes: &[SimRoute],
+    model_affine: bool,
     reps: &mut [SimReplica],
     metrics: &FleetMetrics,
 ) {
-    while !queue.is_empty() {
+    loop {
+        // Weighted-fair pick among tenants with queued work and a
+        // compatible idle replica. `served[a]/quota[a] < served[b]/quota[b]`
+        // compared cross-multiplied to stay exact.
+        let mut pick: Option<usize> = None;
+        for (t, q) in queues.iter().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            let has_idle = reps.iter().any(|r| {
+                r.alive && r.busy_until.is_none() && (!model_affine || r.model == routes[t].model)
+            });
+            if !has_idle {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => {
+                    (served[t] as f64) * routes[p].quota < (served[p] as f64) * routes[t].quota
+                }
+            };
+            if better {
+                pick = Some(t);
+            }
+        }
+        let Some(t) = pick else { return };
+        // Fastest compatible idle replica (ties broken by lowest id).
         let mut best: Option<usize> = None;
         for (ri, r) in reps.iter().enumerate() {
             if !r.alive || r.busy_until.is_some() {
+                continue;
+            }
+            if model_affine && r.model != routes[t].model {
                 continue;
             }
             if best.map(|b| r.rate > reps[b].rate).unwrap_or(true) {
@@ -620,8 +834,34 @@ fn dispatch(
             }
         }
         let Some(ri) = best else { return };
-        let k = queue.len().min(reps[ri].clamp);
-        let batch: Vec<u64> = queue.drain(..k).map(|(admit, _phase)| admit).collect();
+        // Fill the batch weighted-fairly across this model's queues.
+        let clamp = reps[ri].clamp;
+        let mut batch: Vec<(u64, usize)> = Vec::new();
+        while batch.len() < clamp {
+            let mut src: Option<usize> = None;
+            for (u, q) in queues.iter().enumerate() {
+                if q.is_empty() {
+                    continue;
+                }
+                if model_affine && routes[u].model != routes[t].model {
+                    continue;
+                }
+                let better = match src {
+                    None => true,
+                    Some(p) => {
+                        (served[u] as f64) * routes[p].quota
+                            < (served[p] as f64) * routes[u].quota
+                    }
+                };
+                if better {
+                    src = Some(u);
+                }
+            }
+            let Some(u) = src else { break };
+            let (admit, _phase) = queues[u].pop_front().expect("picked queue is non-empty");
+            served[u] += 1;
+            batch.push((admit, u));
+        }
         metrics.note_dispatched(ri, batch.len() as u64);
         let eff_rate = reps[ri].rate / reps[ri].degrade_factor;
         let service_s = batch.len() as f64 / eff_rate;
@@ -676,6 +916,59 @@ pub fn run_modeled(
         }
     }
 
+    // (tenant, model) routing table. Untenanted scenarios get one
+    // implicit full-depth route and skip model affinity entirely, which
+    // reproduces the classic single-queue engine exactly.
+    let multi = !scenario.tenants.is_empty();
+    let mut model_names: Vec<String> = Vec::new();
+    for g in groups {
+        if !model_names.contains(&g.model) {
+            model_names.push(g.model.clone());
+        }
+    }
+    let routes: Vec<SimRoute> = if multi {
+        let total: f64 = scenario.tenants.iter().map(|t| t.quota).sum();
+        let mut routes = Vec::with_capacity(scenario.tenants.len());
+        for t in &scenario.tenants {
+            let Some(model) = model_names.iter().position(|m| *m == t.model) else {
+                return Err(format!(
+                    "tenant '{}' routes to model '{}' but no fleet group serves it",
+                    t.name, t.model
+                ));
+            };
+            routes.push(SimRoute {
+                name: t.name.clone(),
+                model_name: t.model.clone(),
+                model,
+                quota: t.quota,
+                cap: ((scenario.queue_depth as f64 * t.quota / total).round() as usize).max(1),
+            });
+        }
+        routes
+    } else {
+        vec![SimRoute {
+            name: "default".into(),
+            model_name: scenario.model.clone(),
+            model: 0,
+            quota: 1.0,
+            cap: scenario.queue_depth,
+        }]
+    };
+    let roster: Vec<TenantInfo> = if multi {
+        scenario
+            .tenants
+            .iter()
+            .map(|t| TenantInfo {
+                name: t.name.clone(),
+                model: t.model.clone(),
+                quota: t.quota,
+                p99_slo_ms: t.p99_slo_ms,
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     let clock = Clock::manual();
     let labels: Vec<String> = groups.iter().map(|g| g.label.clone()).collect();
     let mut replica_groups = Vec::new();
@@ -687,7 +980,8 @@ pub fn run_modeled(
         labels,
         clock.clone(),
         opts.tracer.clone(),
-    );
+    )
+    .with_tenants(roster);
 
     // Replica table, scheduler batch-clamp rule included.
     let global_batch = scenario.max_batch.clamp(1, crate::netlist::sim::LANES);
@@ -703,6 +997,10 @@ pub fn run_modeled(
                 group: gi,
                 rate,
                 clamp,
+                model: model_names
+                    .iter()
+                    .position(|m| *m == groups[gi].model)
+                    .expect("every group's model is in the model table"),
                 alive: true,
                 busy_until: None,
                 batch: Vec::new(),
@@ -722,7 +1020,12 @@ pub fn run_modeled(
     let p99_slack_ms = (2.0 * global_batch as f64 + 4.0) / min_rate * 1e3;
 
     // Build the arrival timeline and the fault schedule, phase by phase.
-    let mut arrivals: Vec<(u64, usize)> = Vec::new(); // (due_nanos, phase)
+    // Each arrival is assigned a tenant by deterministic weighted
+    // round-robin over the phase's mix (equal weights by default) —
+    // a separate pass that leaves the schedule's rng stream untouched,
+    // so untenanted scenarios keep their exact arrival times.
+    let n_tenants = routes.len();
+    let mut arrivals: Vec<(u64, usize, usize)> = Vec::new(); // (due_nanos, phase, tenant)
     let mut faults: Vec<ScheduledFault> = Vec::new();
     let mut phase_start = Vec::with_capacity(scenario.phases.len());
     let mut phase_requests = Vec::with_capacity(scenario.phases.len());
@@ -744,8 +1047,22 @@ pub fn run_modeled(
         let span_s = schedule.last().map(|&(at, _)| at).unwrap_or(0.0);
         phase_start.push(secs_to_nanos(base_s));
         phase_requests.push(requests);
+        let weights: Vec<f64> =
+            ph.mix.clone().unwrap_or_else(|| vec![1.0; n_tenants]);
+        let total_w: f64 = weights.iter().sum();
+        let mut credits = vec![0.0f64; n_tenants];
         for &(at, _) in &schedule {
-            arrivals.push((secs_to_nanos(base_s + at), k));
+            let mut tn = 0usize;
+            for t in 0..n_tenants {
+                credits[t] += weights[t];
+            }
+            for t in 1..n_tenants {
+                if credits[t] > credits[tn] {
+                    tn = t;
+                }
+            }
+            credits[tn] -= total_w;
+            arrivals.push((secs_to_nanos(base_s + at), k, tn));
         }
         for f in &ph.faults {
             faults.push(ScheduledFault {
@@ -758,14 +1075,17 @@ pub fn run_modeled(
     }
     faults.sort_by_key(|f| f.at_nanos);
 
-    // Per-phase books.
+    // Per-phase, per-tenant books.
     let n_phases = scenario.phases.len();
-    let mut accepted = vec![0u64; n_phases];
-    let mut shed = vec![0u64; n_phases];
-    let mut drops = vec![0u64; n_phases];
+    let mut accepted = vec![vec![0u64; n_tenants]; n_phases];
+    let mut shed = vec![vec![0u64; n_tenants]; n_phases];
+    let mut drops = vec![vec![0u64; n_tenants]; n_phases];
 
-    // Engine state.
-    let mut queue: VecDeque<(u64, usize)> = VecDeque::new(); // (admit_nanos, phase)
+    // Engine state: one queue per tenant (untenanted = one queue), plus
+    // the weighted-fair served counters the dequeue order feeds on.
+    let mut queues: Vec<VecDeque<(u64, usize)>> = // (admit_nanos, phase)
+        (0..n_tenants).map(|_| VecDeque::new()).collect();
+    let mut served = vec![0u64; n_tenants];
     let mut next_arrival = 0usize;
     let mut next_fault = 0usize;
     let mut trackers: Vec<(usize, RecoveryTracker)> = Vec::new(); // (outcome idx, tracker)
@@ -785,8 +1105,12 @@ pub fn run_modeled(
                 let ri = key;
                 let n = reps[ri].batch.len() as u64;
                 let batch = std::mem::take(&mut reps[ri].batch);
-                for admit in batch {
-                    metrics.note_completed(ri, Duration::from_nanos(now.saturating_sub(admit)));
+                for (admit, tenant) in batch {
+                    metrics.note_completed_t(
+                        ri,
+                        tenant,
+                        Duration::from_nanos(now.saturating_sub(admit)),
+                    );
                 }
                 metrics
                     .note_replica_batch(ri, n, Duration::from_nanos(now - reps[ri].batch_start));
@@ -796,7 +1120,7 @@ pub fn run_modeled(
                     // its drain is complete.
                     metrics.note_drained(reps[ri].group);
                 } else {
-                    dispatch(now, &mut queue, &mut reps, &metrics);
+                    dispatch(now, &mut queues, &mut served, &routes, multi, &mut reps, &metrics);
                 }
             }
             EV_RESTORE => {
@@ -816,7 +1140,7 @@ pub fn run_modeled(
                 // Pre-fault envelope, captured immediately before the
                 // injection mutates the fleet.
                 let env = RecoveryEnvelope {
-                    queue_depth: queue.len() as u64,
+                    queue_depth: queues.iter().map(|q| q.len() as u64).sum(),
                     p99_ms: metrics.tail_stats(scenario.recovery_tail).p99_ms,
                     p99_slack_ms,
                 };
@@ -836,21 +1160,22 @@ pub fn run_modeled(
                 // capacity — it cannot free an idle slot.
             }
             EV_ARRIVAL => {
-                let (admit, ph) = arrivals[key];
+                let (admit, ph, tn) = arrivals[key];
                 next_arrival += 1;
-                if queue.len() >= scenario.queue_depth {
-                    metrics.note_rejected();
-                    shed[ph] += 1;
+                if queues[tn].len() >= routes[tn].cap {
+                    metrics.note_rejected_t(tn);
+                    shed[ph][tn] += 1;
                 } else {
-                    metrics.note_accepted();
-                    accepted[ph] += 1;
-                    queue.push_back((admit, ph));
-                    dispatch(now, &mut queue, &mut reps, &metrics);
+                    metrics.note_accepted_t(tn);
+                    accepted[ph][tn] += 1;
+                    queues[tn].push_back((admit, ph));
+                    dispatch(now, &mut queues, &mut served, &routes, multi, &mut reps, &metrics);
                 }
             }
             _ => unreachable!(),
         }
-        observe_trackers(now, queue.len(), &mut trackers, &metrics, scenario.recovery_tail);
+        let queued: usize = queues.iter().map(|q| q.len()).sum();
+        observe_trackers(now, queued, &mut trackers, &metrics, scenario.recovery_tail);
 
         // No live replicas and nothing in flight: the queue can never
         // drain again. Resolve the rest of the arrival schedule through
@@ -858,15 +1183,15 @@ pub fn run_modeled(
         // and stop simulating.
         if reps.iter().all(|r| !r.alive && r.busy_until.is_none()) {
             while next_arrival < arrivals.len() {
-                let (admit, ph) = arrivals[next_arrival];
+                let (admit, ph, tn) = arrivals[next_arrival];
                 next_arrival += 1;
-                if queue.len() >= scenario.queue_depth {
-                    metrics.note_rejected();
-                    shed[ph] += 1;
+                if queues[tn].len() >= routes[tn].cap {
+                    metrics.note_rejected_t(tn);
+                    shed[ph][tn] += 1;
                 } else {
-                    metrics.note_accepted();
-                    accepted[ph] += 1;
-                    queue.push_back((admit, ph));
+                    metrics.note_accepted_t(tn);
+                    accepted[ph][tn] += 1;
+                    queues[tn].push_back((admit, ph));
                 }
             }
             next_fault = faults.len();
@@ -875,11 +1200,14 @@ pub fn run_modeled(
     }
 
     // End of run: whatever is still queued was admitted and will never
-    // complete — a drop, the cardinal sin. Attribute by arrival phase.
-    let leftover = queue.len() as u64;
-    for (_, ph) in queue.drain(..) {
-        drops[ph] += 1;
-        metrics.note_failed();
+    // complete — a drop, the cardinal sin. Attribute by arrival phase
+    // and tenant.
+    let leftover: u64 = queues.iter().map(|q| q.len() as u64).sum();
+    for (tn, q) in queues.iter_mut().enumerate() {
+        for (_, ph) in q.drain(..) {
+            drops[ph][tn] += 1;
+            metrics.note_failed();
+        }
     }
     if leftover > 0 {
         metrics.note_abandoned(leftover);
@@ -914,8 +1242,38 @@ pub fn run_modeled(
         let from = phase_start[k];
         let to = phase_start.get(k + 1).copied().unwrap_or(end_nanos.saturating_add(1));
         let stats = metrics.range_stats(from, to);
+        let accepted_k: u64 = accepted[k].iter().sum();
+        let shed_k: u64 = shed[k].iter().sum();
+        let drops_k: u64 = drops[k].iter().sum();
         let offered = phase_requests[k] as u64;
-        let shed_pct = if offered > 0 { shed[k] as f64 / offered as f64 * 100.0 } else { 0.0 };
+        let shed_pct = if offered > 0 { shed_k as f64 / offered as f64 * 100.0 } else { 0.0 };
+        let tenant_cuts: Vec<TenantPhaseVerdict> = if multi {
+            routes
+                .iter()
+                .enumerate()
+                .map(|(tn, r)| {
+                    let ts = metrics.tenant_range_stats(tn, from, to);
+                    let t_offered = accepted[k][tn] + shed[k][tn];
+                    let t_shed_pct = if t_offered > 0 {
+                        shed[k][tn] as f64 / t_offered as f64 * 100.0
+                    } else {
+                        0.0
+                    };
+                    TenantPhaseVerdict {
+                        name: r.name.clone(),
+                        model: r.model_name.clone(),
+                        offered: t_offered,
+                        accepted: accepted[k][tn],
+                        shed: shed[k][tn],
+                        shed_pct: t_shed_pct,
+                        completed: ts.completed,
+                        p99_ms: ts.p99_ms,
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         let mut checks = Vec::new();
         if let Some(bar) = ph.asserts.max_shed_pct {
             checks.push(CheckResult {
@@ -931,6 +1289,20 @@ pub fn run_modeled(
                 limit: bar,
                 actual: stats.p99_ms,
                 passed: stats.p99_ms <= bar,
+            });
+        }
+        if let Some(bar) = ph.asserts.tenant_p99_ms_max {
+            // The *worst* tenant's p99 — the "no tenant starves" bar.
+            let actual = if multi {
+                tenant_cuts.iter().map(|t| t.p99_ms).fold(0.0f64, f64::max)
+            } else {
+                stats.p99_ms
+            };
+            checks.push(CheckResult {
+                name: "tenant_p99_ms_max".into(),
+                limit: bar,
+                actual,
+                passed: actual <= bar,
             });
         }
         if let Some(bar) = ph.asserts.recovery_ms_max {
@@ -951,8 +1323,8 @@ pub fn run_modeled(
             checks.push(CheckResult {
                 name: "zero_drops".into(),
                 limit: 0.0,
-                actual: drops[k] as f64,
-                passed: drops[k] == 0,
+                actual: drops_k as f64,
+                passed: drops_k == 0,
             });
         }
         let passed = checks.iter().all(|c| c.passed);
@@ -960,13 +1332,14 @@ pub fn run_modeled(
         verdicts.push(PhaseVerdict {
             name: ph.name.clone(),
             requests: phase_requests[k],
-            accepted: accepted[k],
-            shed: shed[k],
+            accepted: accepted_k,
+            shed: shed_k,
             shed_pct,
-            drops: drops[k],
+            drops: drops_k,
             completed: stats.completed,
             p50_ms: stats.p50_ms,
             p99_ms: stats.p99_ms,
+            tenants: tenant_cuts,
             checks,
             passed,
         });
@@ -983,7 +1356,7 @@ pub fn run_modeled(
         fleet_img_s,
         phases: verdicts,
         faults: outcomes,
-        drops: drops.iter().sum(),
+        drops: drops.iter().flatten().sum(),
         fleet_lost,
         passed,
     })
@@ -1201,8 +1574,8 @@ mod tests {
 
     fn two_group_fleet() -> Vec<SimGroup> {
         vec![
-            SimGroup { label: "fast".into(), replicas: 2, rate: 2000.0 },
-            SimGroup { label: "slow".into(), replicas: 1, rate: 800.0 },
+            SimGroup { label: "fast".into(), replicas: 2, rate: 2000.0, model: String::new() },
+            SimGroup { label: "slow".into(), replicas: 1, rate: 800.0, model: String::new() },
         ]
     }
 
@@ -1235,7 +1608,7 @@ mod tests {
                  "asserts":{"max_shed_pct":0.0,"p99_ms_max":100.0}}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0, model: String::new() }];
         let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
         assert!(r.passed, "{:?}", r.phases[0].checks);
         assert_eq!(r.phases[0].accepted, 200);
@@ -1257,7 +1630,7 @@ mod tests {
                  "asserts":{"max_shed_pct":90.0}}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0 }];
+        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0, model: String::new() }];
         let r = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap();
         assert!(r.phases[0].shed > 0, "3x load must shed");
         assert_eq!(r.drops, 0);
@@ -1274,7 +1647,7 @@ mod tests {
                  "faults":[{"at_frac":0.5,"kind":"group_loss","group":0}]}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0, model: String::new() }];
         let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
         assert!(!r.passed, "fleet loss must fail the scenario");
         assert!(r.fleet_lost);
@@ -1303,7 +1676,7 @@ mod tests {
                  "asserts":{"recovery_ms_max":60000.0}}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0, model: String::new() }];
         let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
         assert!(r.passed, "{:?} {:?}", r.phases[0].checks, r.faults);
         assert_eq!(r.drops, 0);
@@ -1322,7 +1695,7 @@ mod tests {
                             "factor":6.0,"duration_ms":50.0}]}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0 }];
+        let groups = vec![SimGroup { label: "g".into(), replicas: 2, rate: 1000.0, model: String::new() }];
         let r = run_modeled(&sc, &groups, 2000.0, &ScenarioOpts::default()).unwrap();
         assert_eq!(r.faults.len(), 1);
         assert_eq!(r.faults[0].kind, "latency_degrade");
@@ -1357,9 +1730,163 @@ mod tests {
                  "faults":[{"at_frac":0.5,"kind":"replica_death","group":9}]}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0 }];
+        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0, model: String::new() }];
         let e = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap_err();
         assert!(e.contains("targets group 9"), "{e}");
+    }
+
+    #[test]
+    fn parses_tenants_mix_and_tenant_p99_assert() {
+        let sc = Scenario::from_str(
+            r#"{"name":"mt","devices":"zcu104:2","model":"lenet-tiny",
+                "tenants":[
+                    {"name":"gold","model":"lenet-tiny","quota":3.0,"p99_slo_ms":50.0},
+                    {"name":"bronze","quota":1.0}],
+                "phases":[{"name":"p","requests":32,"mix":[3.0,1.0],
+                           "load":{"profile":"constant","rate_x":0.5},
+                           "asserts":{"tenant_p99_ms_max":80.0}}]}"#,
+        )
+        .unwrap();
+        assert_eq!(sc.tenants.len(), 2);
+        assert_eq!(sc.tenants[0].name, "gold");
+        assert_eq!(sc.tenants[0].quota, 3.0);
+        assert_eq!(sc.tenants[0].p99_slo_ms, Some(50.0));
+        assert_eq!(sc.tenants[1].model, "lenet-tiny", "tenant model defaults to scenario model");
+        assert_eq!(sc.tenants[1].p99_slo_ms, None);
+        assert_eq!(sc.phases[0].mix, Some(vec![3.0, 1.0]));
+        assert_eq!(sc.phases[0].asserts.tenant_p99_ms_max, Some(80.0));
+    }
+
+    #[test]
+    fn tenant_parse_rejects_bad_documents() {
+        // Non-positive quota.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"d","tenants":[{"name":"a","quota":0.0}],"phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("quota must be positive"), "{e}");
+        // Duplicate tenant names.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"d",
+                "tenants":[{"name":"a"},{"name":"a"}],"phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("duplicate tenant name 'a'"), "{e}");
+        // Empty tenants list.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"d","tenants":[],"phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("at least one entry"), "{e}");
+        // Mix without tenants.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"d","phases":[
+                {"name":"p","requests":8,"mix":[1.0],
+                 "load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("mix requires a top-level tenants list"), "{e}");
+        // Mix length mismatch.
+        let e = Scenario::from_str(
+            r#"{"name":"x","devices":"d","tenants":[{"name":"a"},{"name":"b"}],"phases":[
+                {"name":"p","requests":8,"mix":[1.0],
+                 "load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("mix has 1 weights for 2 tenants"), "{e}");
+    }
+
+    #[test]
+    fn quota_weighted_admission_sheds_the_small_tenant_harder() {
+        // Two tenants at 3:1 quota on one model, equal offered traffic,
+        // 3x fleet capacity: weighted-fair service admits ~3:1 and the
+        // small tenant sheds a much larger share of its offers.
+        let sc = Scenario::from_str(
+            r#"{"name":"mt","devices":"d","queue_depth":16,"model":"m0",
+                "tenants":[{"name":"gold","quota":3.0},{"name":"bronze","quota":1.0}],
+                "phases":[{"name":"crunch","requests":600,
+                           "load":{"profile":"constant","rate_x":3.0}}]}"#,
+        )
+        .unwrap();
+        let groups =
+            vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0, model: "m0".into() }];
+        let r = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap();
+        assert!(r.passed, "{:?}", r.phases[0].checks);
+        let t = &r.phases[0].tenants;
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].name, "gold");
+        let ratio = t[0].accepted as f64 / t[1].accepted.max(1) as f64;
+        assert!(
+            (2.2..=3.8).contains(&ratio),
+            "accepted ratio {ratio} should track the 3:1 quota ({} vs {})",
+            t[0].accepted,
+            t[1].accepted
+        );
+        assert!(
+            t[1].shed_pct > t[0].shed_pct,
+            "the small tenant sheds harder: {} vs {}",
+            t[1].shed_pct,
+            t[0].shed_pct
+        );
+        assert_eq!(r.drops, 0, "quota shed is admission-time, never a drop");
+        // Byte-determinism holds with tenants on.
+        let r2 = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap();
+        assert_eq!(r.to_json().dump(), r2.to_json().dump());
+        assert!(r.to_json().dump().contains("\"tenants\""));
+    }
+
+    #[test]
+    fn tenants_only_ride_their_models_groups() {
+        // Two models on disjoint groups: the fast group must not absorb
+        // the slow model's overload — tenant b sheds while tenant a
+        // rides clean, and nothing admitted is dropped.
+        let sc = Scenario::from_str(
+            r#"{"name":"mm","devices":"d","queue_depth":32,
+                "tenants":[{"name":"a","model":"m0","quota":1.0},
+                           {"name":"b","model":"m1","quota":1.0}],
+                "phases":[{"name":"p","requests":400,
+                           "load":{"profile":"constant","rate_x":0.8}}]}"#,
+        )
+        .unwrap();
+        let groups = vec![
+            SimGroup { label: "g0".into(), replicas: 1, rate: 1000.0, model: "m0".into() },
+            SimGroup { label: "g1".into(), replicas: 1, rate: 100.0, model: "m1".into() },
+        ];
+        let r = run_modeled(&sc, &groups, 1100.0, &ScenarioOpts::default()).unwrap();
+        assert!(r.passed, "{:?}", r.phases[0].checks);
+        let t = &r.phases[0].tenants;
+        assert_eq!(t[0].shed, 0, "the fast model has 2x headroom for its tenant");
+        assert!(t[1].shed > 0, "the slow model drowns under its tenant's half");
+        assert_eq!(r.drops, 0);
+        assert_eq!(t[0].completed + t[1].completed, t[0].accepted + t[1].accepted);
+    }
+
+    #[test]
+    fn unserved_tenant_model_is_a_runtime_error() {
+        let sc = Scenario::from_str(
+            r#"{"name":"x","devices":"d",
+                "tenants":[{"name":"a","model":"ghost"}],"phases":[
+                {"name":"p","requests":8,"load":{"profile":"constant","rate_x":0.5}}]}"#,
+        )
+        .unwrap();
+        let groups =
+            vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0, model: "m0".into() }];
+        let e = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap_err();
+        assert!(e.contains("no fleet group serves it"), "{e}");
+    }
+
+    #[test]
+    fn untenanted_reports_have_no_tenants_key() {
+        // The pre-multi-tenant report layout is load-bearing: shipped
+        // scenario verdicts must stay byte-identical.
+        let sc = Scenario::from_str(SC).unwrap();
+        let groups = two_group_fleet();
+        let r = run_modeled(&sc, &groups, 4800.0, &ScenarioOpts::default()).unwrap();
+        assert!(r.phases.iter().all(|p| p.tenants.is_empty()));
+        assert!(!r.to_json().dump().contains("\"tenants\""));
     }
 
     #[test]
@@ -1374,7 +1901,7 @@ mod tests {
                  "load":{"profile":"constant","rate_x":0.1}}]}"#,
         )
         .unwrap();
-        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0 }];
+        let groups = vec![SimGroup { label: "g".into(), replicas: 1, rate: 1000.0, model: String::new() }];
         let e = run_modeled(&sc, &groups, 1000.0, &ScenarioOpts::default()).unwrap_err();
         assert!(e.contains("overlapping phases"), "{e}");
     }

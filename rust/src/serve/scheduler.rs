@@ -1,24 +1,42 @@
-//! The request scheduler: a bounded submission queue, a micro-batching
-//! dispatcher, throughput-weighted replica selection, explicit admission
-//! control, and — since PR 5 — a *dynamic* replica set that grows and
-//! shrinks while traffic flows.
+//! The request scheduler: per-tenant bounded admission queues drained in
+//! weighted-fair order, a micro-batching dispatcher, throughput-weighted
+//! replica selection, explicit admission control, and — since PR 5 — a
+//! *dynamic* replica set that grows and shrinks while traffic flows.
+//!
+//! **Multi-tenant, multi-model routing.** One deployment hosts several
+//! models, and several tenants share it under quota. Each tenant binds
+//! to one model ([`super::TenantSpec`]); admission validates against
+//! *that* model and lands the request in the tenant's own bounded queue,
+//! whose capacity is the tenant's quota share of the configured
+//! `queue_depth` (floored at one slot). Overload therefore sheds the
+//! right tenant: a customer that exceeds its share bounces off its own
+//! full queue while its neighbors' queues still admit. The dispatcher
+//! drains the queues *weighted-fair*: it always serves the non-empty
+//! tenant with the lowest normalized service count `served / quota`, so
+//! over any busy interval tenant throughput tracks quota ratios without
+//! any tenant being starved outright. A single-tenant fleet degenerates
+//! to exactly the old one-queue behavior (one implicit route, full
+//! queue depth, FIFO order).
 //!
 //! Heterogeneous fleets put replicas with very different modeled rates
 //! behind one queue, so the PR 2 least-loaded rule (pick the fewest
 //! in-flight images) is wrong: three images queued on a DSP-starved
 //! edge part take far longer to drain than five on the paper's board.
 //! Dispatch is therefore *throughput-weighted*: every replica advertises
-//! its plan's modeled `images_per_sec`, and the dispatcher picks the
-//! replica with the smallest expected drain time
-//! `(in_flight + 1) / images_per_sec`. With equal weights this degrades
-//! to exactly the least-loaded rule.
+//! its plan's modeled `images_per_sec`, and the dispatcher picks — among
+//! the live replicas serving the request's model — the one with the
+//! smallest expected drain time `(in_flight + 1) / images_per_sec`.
+//! With equal weights this degrades to exactly the least-loaded rule.
 //!
 //! Micro-batches clamp *per replica*, not globally: each replica's
 //! ceiling is the configured `max_batch` scaled by its rate relative to
-//! the fastest live replica (floored at 1, capped at the execution
-//! tier's lane width [`crate::netlist::sim::LANES`]), so one dispatch
-//! costs roughly equal wall time on every part and a slow group never
-//! hoards a lane-wide batch while fast silicon idles.
+//! the fastest live replica of its model (floored at 1, capped at the
+//! execution tier's lane width [`crate::netlist::sim::LANES`]), so one
+//! dispatch costs roughly equal wall time on every part and a slow group
+//! never hoards a lane-wide batch while fast silicon idles. A batch is
+//! always single-model (it runs on one pipeline) but may mix tenants —
+//! the fill path pulls from same-model tenant queues in weighted-fair
+//! order.
 //!
 //! **Replica lifecycle.** PR 2–4 assumed plan-once/run-forever: the
 //! dispatcher captured a fixed replica list at startup. The dispatcher
@@ -36,33 +54,39 @@
 //! Topology (all threads long-lived until retired or shutdown):
 //!
 //! ```text
-//! submit() --try_send--> [bounded queue] --> dispatcher --+--> runner 0 -> replica 0 pipeline
-//!    |  full => ServeError::Overloaded    (weighted pick  |--> runner 1 -> replica 1 pipeline
-//!    +--> Pending (per-request reply)      over the LIVE  +--> ... (slots added/retired live)
-//!                                          slot table)
+//! submit_as(t,·) --push--> [tenant t queue] --\
+//! submit_as(u,·) --push--> [tenant u queue] ---+--> dispatcher --+--> runner 0 -> replica 0
+//!    |  tenant's share full =>                 |  (WFQ tenant    |--> runner 1 -> replica 1
+//!    |  ServeError::Overloaded                 |   pick, then    +--> ... (slots added and
+//!    +--> Pending (per-request reply)          |   weighted pick      retired live; dispatch
+//!                                              |   over that          filtered to the
+//!                                              |   model's slots)     request's model)
 //! ```
 //!
 //! Backpressure story: the *only* unbounded buffers are per-request reply
-//! channels (capacity one message each). The submission queue is bounded
-//! and non-blocking at admission — a full queue is an `Overloaded` error
+//! channels (capacity one message each). The tenant queues are bounded
+//! and non-blocking at admission — a full share is an `Overloaded` error
 //! the caller sees immediately, never invisible queueing. Replica work
 //! queues are bounded too; when every replica is busy the dispatcher
-//! blocks, the submission queue fills, and overload surfaces at the edge
-//! — the admission-control design the real-time serving literature asks
-//! for.
+//! blocks, the tenant queues fill, and overload surfaces at the edge —
+//! per tenant — which is the admission-control design the real-time
+//! serving literature asks for.
 
 use super::fault::{FaultEvent, FaultEventKind, LatencyShim};
-use super::metrics::{FleetMetrics, FleetSnapshot};
+use super::fleet::FleetHandle;
+use super::metrics::{FleetMetrics, FleetSnapshot, TenantInfo};
 use super::{ServeConfig, ServeError};
 use crate::cnn::model::Model;
 use crate::coordinator::{validate_image, Deployment};
 use crate::trace::{self, ArgValue};
 use crate::util::sync::lock_ok;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One admitted request traveling from the queue to a replica runner.
+/// One admitted request traveling from its tenant queue to a replica
+/// runner.
 ///
 /// The `*_nanos` fields are lifecycle timestamps on the fleet's shared
 /// [`crate::trace::Clock`], stamped where the request crosses each stage
@@ -75,6 +99,8 @@ struct Request {
     /// Trace thread id within [`trace::PID_REQUESTS`] (ids start at 1;
     /// tid 0 is the shed/control track).
     id: u64,
+    /// Index into the tenant routing table (0 for untenanted fleets).
+    tenant: usize,
     image: Vec<i64>,
     admitted_nanos: u64,
     enqueued_nanos: u64,
@@ -98,11 +124,104 @@ impl Pending {
     }
 }
 
+/// One tenant's routing entry, fixed at startup.
+#[derive(Debug, Clone)]
+struct TenantRoute {
+    /// Index into the fleet's deployed-model list.
+    model_id: usize,
+    /// Weighted-fair share (positive).
+    quota: f64,
+    /// This tenant's bounded queue capacity: its quota share of the
+    /// configured queue depth, floored at one slot so no tenant is
+    /// locked out entirely.
+    cap: usize,
+}
+
+/// The multi-tenant ingress: one bounded FIFO per tenant plus the
+/// weighted-fair service counters, under one lock with one condvar
+/// (submitters wait for space, the dispatcher waits for work).
+struct Ingress {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    /// False once shutdown begins — the single source of truth for
+    /// "still admitting" (same convention as the coordinator pipeline).
+    open: bool,
+    /// One bounded FIFO per tenant (parallel to the routing table).
+    queues: Vec<VecDeque<Request>>,
+    /// Requests handed to the dispatcher per tenant; the WFQ pick
+    /// minimizes `served / quota`.
+    served: Vec<u64>,
+}
+
+impl Ingress {
+    /// Block until a request is available, returning the weighted-fair
+    /// next `(tenant, request)`; `None` once the ingress is closed AND
+    /// every queue is empty (the dispatcher's exit condition — queued
+    /// work always drains before shutdown completes).
+    fn pop_next(&self, routes: &[TenantRoute]) -> Option<(usize, Request)> {
+        let mut st = lock_ok(&self.state);
+        loop {
+            if let Some(t) = wfq_pick(&st, routes, None) {
+                let req = st.queues[t].pop_front().expect("picked tenant queue is non-empty");
+                st.served[t] += 1;
+                // Space freed: wake any submit_wait blocked on this share.
+                self.ready.notify_all();
+                return Some((t, req));
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking weighted-fair pop restricted to tenants routing to
+    /// `model_id` — the dispatcher's batch-fill path (a micro-batch runs
+    /// on one pipeline, so it is single-model by construction).
+    fn try_pop_model(&self, routes: &[TenantRoute], model_id: usize) -> Option<Request> {
+        let mut st = lock_ok(&self.state);
+        let t = wfq_pick(&st, routes, Some(model_id))?;
+        let req = st.queues[t].pop_front()?;
+        st.served[t] += 1;
+        self.ready.notify_all();
+        Some(req)
+    }
+}
+
+/// Weighted-fair pick: among non-empty tenant queues (optionally
+/// restricted to one model), the tenant with the lowest normalized
+/// service count `served / quota`. Ties break to the lower tenant id,
+/// so the order is deterministic.
+fn wfq_pick(st: &QueueState, routes: &[TenantRoute], model: Option<usize>) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (t, route) in routes.iter().enumerate() {
+        if st.queues[t].is_empty() {
+            continue;
+        }
+        if let Some(m) = model {
+            if m != route.model_id {
+                continue;
+            }
+        }
+        let v = st.served[t] as f64 / route.quota;
+        if best.map_or(true, |(_, bv)| v < bv) {
+            best = Some((t, v));
+        }
+    }
+    best.map(|(t, _)| t)
+}
+
 /// One live, dispatchable replica.
 struct Slot {
     /// Stable replica id (index into the metrics registry; never reused).
     id: usize,
     group: usize,
+    /// Index into the fleet's deployed-model list — dispatch only routes
+    /// a request to a slot serving its model.
+    model_id: usize,
     /// Modeled `images_per_sec` — the dispatch weight.
     weight: f64,
     tx: mpsc::SyncSender<Vec<Request>>,
@@ -131,14 +250,15 @@ pub struct DrainReport {
 /// dispatcher, and per-replica runner threads. The replica set is
 /// dynamic — see the module docs for the lifecycle.
 pub struct Server {
-    /// `None` once shutdown begins — the single source of truth for
-    /// "still admitting" (same convention as the coordinator pipeline).
-    ingress: Mutex<Option<mpsc::SyncSender<Request>>>,
+    ingress: Arc<Ingress>,
+    /// Tenant routing table (never empty: untenanted fleets get one
+    /// implicit route with the full queue depth).
+    routes: Arc<Vec<TenantRoute>>,
     metrics: Arc<FleetMetrics>,
-    /// The fleet's shared model — admission validates against this, not
-    /// any particular replica, so rebalancing can swap every replica out
-    /// without ever closing the front door.
-    model: Arc<Model>,
+    /// The fleet's deployed models, deduplicated by name — admission
+    /// validates against the *tenant's* model, so rebalancing can swap
+    /// every replica out without ever closing the front door.
+    models: Vec<Arc<Model>>,
     /// Live dispatch targets (shared with the dispatcher thread).
     slots: Arc<Mutex<Vec<Slot>>>,
     /// Runners for live and draining replicas.
@@ -157,50 +277,92 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start serving a single-device fleet (every replica in one metrics
-    /// group). Dispatch is still throughput-weighted — identical plans
-    /// just make the weights equal.
-    pub fn start(replicas: Vec<Arc<Deployment>>, cfg: &ServeConfig) -> Server {
-        let groups = vec![0; replicas.len()];
-        Server::start_grouped(replicas, groups, vec!["fleet".to_string()], cfg)
-    }
-
-    /// Start serving a heterogeneous fleet: `groups[i]` is the device-
-    /// group index of `replicas[i]` and `labels[g]` names group `g`
-    /// (what [`super::fleet::FleetPlan::replica_groups`] /
-    /// [`super::fleet::FleetPlan::group_labels`] produce).
-    pub fn start_grouped(
-        replicas: Vec<Arc<Deployment>>,
-        groups: Vec<usize>,
-        labels: Vec<String>,
-        cfg: &ServeConfig,
-    ) -> Server {
+    /// Start serving a fleet. THE one serving entry point: the
+    /// [`FleetHandle`] says what runs where (replicas, their device
+    /// groups, and each group's model — what
+    /// [`super::fleet::FleetPlan::deploy`] and friends produce, or
+    /// [`FleetHandle::solo`] for a hand-built single-group fleet), and
+    /// the [`ServeConfig`] says how to admit and dispatch (queue depth,
+    /// batching, tenants).
+    pub fn start(fleet: FleetHandle, cfg: &ServeConfig) -> Server {
+        let FleetHandle { replicas, groups, labels, models: group_models } = fleet;
         assert!(!replicas.is_empty(), "a fleet needs at least one replica");
         assert_eq!(groups.len(), replicas.len(), "one group index per replica");
-        let queue_depth = cfg.queue_depth.max(1);
+        let queue_depth = cfg.admission.queue_depth.max(1);
         // Per-replica micro-batch ceiling: at most one simulator lane
         // word (a wider batch would split into multiple lane groups and
         // only add queueing delay); per-slot scaling happens at dispatch
-        // time against the *current* fastest live replica.
-        let global_batch = cfg.max_batch.clamp(1, crate::netlist::sim::LANES);
-        let metrics = Arc::new(FleetMetrics::grouped_with(
-            Vec::new(),
-            labels,
-            cfg.clock.clone(),
-            cfg.tracer.clone(),
-        ));
-        let model = Arc::clone(&replicas[0].model);
-        let (tx, rx) = mpsc::sync_channel::<Request>(queue_depth);
+        // time against the *current* fastest live replica of the model.
+        let global_batch = cfg.dispatch.max_batch.clamp(1, crate::netlist::sim::LANES);
+
+        // The deployed-model list: per-group models deduplicated by name
+        // (two boards serving the same model are one routing target).
+        let mut models: Vec<Arc<Model>> = Vec::new();
+        for m in &group_models {
+            if !models.iter().any(|z| z.name == m.name) {
+                models.push(Arc::clone(m));
+            }
+        }
+        if models.is_empty() {
+            models.push(Arc::clone(&replicas[0].model));
+        }
+
+        // Tenant routing table + metrics roster. No tenants configured =
+        // one implicit route owning the whole queue (and no tenant axis
+        // in the metrics, keeping single-tenant snapshots unchanged).
+        let specs = &cfg.tenants.tenants;
+        let total_quota: f64 = specs.iter().map(|t| t.quota).sum();
+        let mut routes = Vec::with_capacity(specs.len().max(1));
+        let mut roster = Vec::with_capacity(specs.len());
+        for t in specs {
+            assert!(t.quota > 0.0, "tenant '{}': quota must be positive", t.name);
+            let model_id = if t.model.is_empty() {
+                0
+            } else {
+                models.iter().position(|m| m.name == t.model).unwrap_or_else(|| {
+                    panic!(
+                        "tenant '{}' routes to model '{}', which is not deployed on this fleet",
+                        t.name, t.model
+                    )
+                })
+            };
+            let cap = ((queue_depth as f64 * t.quota / total_quota).round() as usize).max(1);
+            routes.push(TenantRoute { model_id, quota: t.quota, cap });
+            roster.push(TenantInfo {
+                name: t.name.clone(),
+                model: models[model_id].name.clone(),
+                quota: t.quota,
+                p99_slo_ms: t.p99_slo_ms,
+            });
+        }
+        if routes.is_empty() {
+            routes.push(TenantRoute { model_id: 0, quota: 1.0, cap: queue_depth });
+        }
+        let routes = Arc::new(routes);
+
+        let metrics = Arc::new(
+            FleetMetrics::grouped_with(Vec::new(), labels, cfg.clock.clone(), cfg.tracer.clone())
+                .with_tenants(roster),
+        );
+        let ingress = Arc::new(Ingress {
+            state: Mutex::new(QueueState {
+                open: true,
+                queues: routes.iter().map(|_| VecDeque::new()).collect(),
+                served: vec![0; routes.len()],
+            }),
+            ready: Condvar::new(),
+        });
         let server = Server {
-            ingress: Mutex::new(Some(tx)),
+            ingress,
+            routes: Arc::clone(&routes),
             metrics,
-            model,
+            models,
             slots: Arc::new(Mutex::new(Vec::new())),
             runners: Mutex::new(Vec::new()),
             dispatcher: Mutex::new(None),
             finished: Mutex::new(None),
             queue_depth,
-            drain_deadline: cfg.drain_deadline,
+            drain_deadline: cfg.dispatch.drain_deadline,
             next_req: AtomicU64::new(1),
             degrade: Arc::new(LatencyShim::new()),
         };
@@ -208,37 +370,42 @@ impl Server {
             server.add_slot(dep, group);
         }
 
-        // Dispatcher: drain the queue, pick the live replica with the
-        // least expected drain time, micro-batch up to ITS clamp. A
-        // handoff that bounces (slot retired between pick and send) is
-        // re-dispatched, so no admitted request is ever dropped.
+        // Dispatcher: pull the weighted-fair next request, pick the live
+        // replica of ITS model with the least expected drain time,
+        // micro-batch up to that slot's clamp from same-model tenant
+        // queues. A handoff that bounces (slot retired between pick and
+        // send) is re-dispatched, so no admitted request is ever dropped.
         let slots = Arc::clone(&server.slots);
         let metrics = Arc::clone(&server.metrics);
+        let ingress = Arc::clone(&server.ingress);
         let handle = std::thread::spawn(move || {
             let clock = metrics.clock().clone();
             // The tracer is fixed at construction, so stage-boundary
             // stamping (a clock read per pull/handoff) can be skipped for
             // the life of the server when tracing is off.
             let tracing = metrics.tracer().on();
-            while let Ok(mut first) = rx.recv() {
+            while let Some((tenant, mut first)) = ingress.pop_next(&routes) {
                 if tracing && first.dequeued_nanos == 0 {
                     first.dequeued_nanos = clock.now_nanos();
                 }
+                let model_id = routes[tenant].model_id;
                 let mut batch = vec![first];
                 // Work in hand must land somewhere within this grace
                 // period. Normally a pick succeeds instantly; the
-                // deadline only matters if every runner died (the batch
-                // is then failed loudly instead of spinning forever and
-                // wedging shutdown's dispatcher join).
+                // deadline only matters if every runner serving this
+                // model died (the batch is then failed loudly instead of
+                // spinning forever and wedging shutdown's dispatcher
+                // join).
                 let give_up = Instant::now() + Duration::from_millis(50);
                 while !batch.is_empty() {
-                    let Some((id, tx, cap)) = pick_slot(&slots, &metrics, global_batch) else {
+                    let Some((id, tx, cap)) = pick_slot(&slots, &metrics, global_batch, model_id)
+                    else {
                         if Instant::now() >= give_up {
                             metrics.note_abandoned(batch.len() as u64);
                             for req in batch.drain(..) {
                                 metrics.note_failed();
                                 let _ = req.reply.send(Err(ServeError::ReplicaFailed(
-                                    "no live replicas in dispatch rotation".into(),
+                                    "no live replicas serve this model".into(),
                                 )));
                             }
                             break;
@@ -249,14 +416,14 @@ impl Server {
                         continue;
                     };
                     while batch.len() < cap {
-                        match rx.try_recv() {
-                            Ok(mut r) => {
+                        match ingress.try_pop_model(&routes, model_id) {
+                            Some(mut r) => {
                                 if tracing && r.dequeued_nanos == 0 {
                                     r.dequeued_nanos = clock.now_nanos();
                                 }
                                 batch.push(r);
                             }
-                            Err(_) => break,
+                            None => break,
                         }
                     }
                     // Work carried over from a bounce may exceed THIS
@@ -298,11 +465,36 @@ impl Server {
                     }
                 }
             }
-            // Queue disconnected and drained; slot feeds stay open for
-            // the shutdown path to close after this thread is joined.
+            // Ingress closed and drained; slot feeds stay open for the
+            // shutdown path to close after this thread is joined.
         });
         *lock_ok(&server.dispatcher) = Some(handle);
         server
+    }
+
+    /// Start serving a heterogeneous fleet from parallel arrays.
+    #[deprecated(note = "use Server::start(FleetHandle, &ServeConfig) — \
+                         FleetPlan::deploy* returns the handle directly")]
+    pub fn start_grouped(
+        replicas: Vec<Arc<Deployment>>,
+        groups: Vec<usize>,
+        labels: Vec<String>,
+        cfg: &ServeConfig,
+    ) -> Server {
+        assert!(!replicas.is_empty(), "a fleet needs at least one replica");
+        // Reconstruct each group's model from its first replica (the old
+        // entry points were single-model, but this keeps mixed handles
+        // honest too).
+        let models: Vec<Arc<Model>> = (0..labels.len())
+            .map(|g| {
+                groups
+                    .iter()
+                    .position(|&gi| gi == g)
+                    .map(|i| Arc::clone(&replicas[i].model))
+                    .unwrap_or_else(|| Arc::clone(&replicas[0].model))
+            })
+            .collect();
+        Server::start(FleetHandle::new(replicas, groups, labels, models), cfg)
     }
 
     /// Register a replica and bring it into dispatch rotation
@@ -310,6 +502,11 @@ impl Server {
     fn add_slot(&self, dep: Arc<Deployment>, group: usize) -> usize {
         let id = self.metrics.register_replica(group);
         let weight = dep.plan.images_per_sec.max(1e-9);
+        let model_id = self
+            .models
+            .iter()
+            .position(|m| m.name == dep.model.name)
+            .expect("replica's model is not among the fleet's deployed models");
         // Route the replica's pipeline-worker layer spans onto its trace
         // track (the id only exists now, post-registration). Re-attaching
         // is fine: a deployment reused by a later server just moves to
@@ -333,14 +530,16 @@ impl Server {
         let handle =
             std::thread::spawn(move || run_replica(id, group, &runner_dep, &brx, &metrics, &shim));
         lock_ok(&self.runners).push(Runner { id, dep, handle });
-        lock_ok(&self.slots).push(Slot { id, group, weight, tx: btx });
+        lock_ok(&self.slots).push(Slot { id, group, model_id, weight, tx: btx });
         id
     }
 
     /// Bring a freshly deployed replica into dispatch rotation while the
-    /// server keeps admitting. Returns its stable replica id.
+    /// server keeps admitting (its model must be one of the fleet's
+    /// deployed models — a cross-model shift deploys the *other* model's
+    /// plan into the group). Returns its stable replica id.
     pub fn add_replica(&self, dep: Arc<Deployment>, group: usize) -> Result<usize, ServeError> {
-        if lock_ok(&self.ingress).is_none() {
+        if !lock_ok(&self.ingress.state).open {
             return Err(ServeError::ShuttingDown);
         }
         Ok(self.add_slot(dep, group))
@@ -536,61 +735,99 @@ impl Server {
         ids
     }
 
-    /// Admission-controlled submission: validates the image, then tries
-    /// to enqueue without blocking. A full queue rejects with
-    /// [`ServeError::Overloaded`] — the caller decides whether to retry,
-    /// shed, or propagate.
+    /// The fleet's deployed models (deduplicated; what tenant routes
+    /// resolve against).
+    pub fn models(&self) -> &[Arc<Model>] {
+        &self.models
+    }
+
+    /// The model tenant `t`'s requests are validated against and routed
+    /// to (tenant 0 of an untenanted fleet is the implicit default).
+    pub fn model_of_tenant(&self, tenant: usize) -> &Arc<Model> {
+        &self.models[self.routes[tenant].model_id]
+    }
+
+    /// Number of tenant routes (1 for untenanted fleets — the implicit
+    /// default route).
+    pub fn n_tenants(&self) -> usize {
+        self.routes.len()
+    }
+
+    /// Admission-controlled submission as the default tenant: validates
+    /// the image, then tries to enqueue without blocking. A full queue
+    /// rejects with [`ServeError::Overloaded`] — the caller decides
+    /// whether to retry, shed, or propagate.
     pub fn submit(&self, image: Vec<i64>) -> Result<Pending, ServeError> {
-        self.admit(image, |tx, req| match tx.try_send(req) {
-            Ok(()) => Ok(()),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.metrics.note_rejected();
-                Err(ServeError::Overloaded { queue_depth: self.queue_depth })
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => Err(ServeError::ShuttingDown),
-        })
+        self.submit_as(0, image)
+    }
+
+    /// Admission-controlled submission on behalf of `tenant` (an index
+    /// into the configured tenant list). Validates against the tenant's
+    /// model; a full *tenant share* rejects with
+    /// [`ServeError::Overloaded`] while other tenants' shares still
+    /// admit — overload sheds the tenant that exceeded its quota.
+    pub fn submit_as(&self, tenant: usize, image: Vec<i64>) -> Result<Pending, ServeError> {
+        self.admit(tenant, image, false)
     }
 
     /// Blocking submission for closed-loop callers (benches, tests):
     /// waits for queue space instead of rejecting.
     pub fn submit_wait(&self, image: Vec<i64>) -> Result<Pending, ServeError> {
-        self.admit(image, |tx, req| tx.send(req).map_err(|_| ServeError::ShuttingDown))
+        self.admit(0, image, true)
     }
 
-    /// Shared admission path: validate, build the request, enqueue via
-    /// `send` (the try_send/send strategy), account on acceptance.
-    fn admit(
-        &self,
-        image: Vec<i64>,
-        send: impl FnOnce(&mpsc::SyncSender<Request>, Request) -> Result<(), ServeError>,
-    ) -> Result<Pending, ServeError> {
-        let tx = self.sender()?;
+    /// [`Server::submit_wait`] on behalf of `tenant`.
+    pub fn submit_wait_as(&self, tenant: usize, image: Vec<i64>) -> Result<Pending, ServeError> {
+        self.admit(tenant, image, true)
+    }
+
+    /// Shared admission path: validate against the tenant's model, build
+    /// the request, enqueue in the tenant's bounded share (rejecting or
+    /// waiting when full per `wait`), account on acceptance.
+    fn admit(&self, tenant: usize, image: Vec<i64>, wait: bool) -> Result<Pending, ServeError> {
+        let route = self
+            .routes
+            .get(tenant)
+            .unwrap_or_else(|| panic!("tenant {tenant} is not in the routing table"));
         let clock = self.metrics.clock();
         let admitted_nanos = clock.now_nanos();
-        validate_image(&self.model, &image).map_err(ServeError::BadRequest)?;
+        validate_image(&self.models[route.model_id], &image).map_err(ServeError::BadRequest)?;
         // The admit span covers validation; with tracing off, skip the
         // second clock read (the boundary is never rendered).
         let enqueued_nanos =
             if self.metrics.tracer().on() { clock.now_nanos() } else { admitted_nanos };
         let (rtx, rrx) = mpsc::channel();
-        send(
-            &tx,
-            Request {
-                id: self.next_req.fetch_add(1, Ordering::Relaxed),
-                image,
-                admitted_nanos,
-                enqueued_nanos,
-                dequeued_nanos: 0,
-                handoff_nanos: 0,
-                reply: rtx,
-            },
-        )?;
-        self.metrics.note_accepted();
+        let req = Request {
+            id: self.next_req.fetch_add(1, Ordering::Relaxed),
+            tenant,
+            image,
+            admitted_nanos,
+            enqueued_nanos,
+            dequeued_nanos: 0,
+            handoff_nanos: 0,
+            reply: rtx,
+        };
+        {
+            let mut st = lock_ok(&self.ingress.state);
+            loop {
+                if !st.open {
+                    return Err(ServeError::ShuttingDown);
+                }
+                if st.queues[tenant].len() < route.cap {
+                    break;
+                }
+                if !wait {
+                    drop(st);
+                    self.metrics.note_rejected_t(tenant);
+                    return Err(ServeError::Overloaded { queue_depth: route.cap });
+                }
+                st = self.ingress.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.queues[tenant].push_back(req);
+        }
+        self.metrics.note_accepted_t(tenant);
+        self.ingress.ready.notify_all();
         Ok(Pending { rx: rrx })
-    }
-
-    fn sender(&self) -> Result<mpsc::SyncSender<Request>, ServeError> {
-        lock_ok(&self.ingress).clone().ok_or(ServeError::ShuttingDown)
     }
 
     /// The shared live metrics (snapshot any time).
@@ -598,8 +835,8 @@ impl Server {
         &self.metrics
     }
 
-    /// The bounded submission queue's capacity (the denominator of the
-    /// rebalancer's queue-pressure signal).
+    /// The total admission capacity across tenant shares (the
+    /// denominator of the rebalancer's queue-pressure signal).
     pub fn queue_capacity(&self) -> usize {
         self.queue_depth
     }
@@ -614,9 +851,10 @@ impl Server {
             return snap.clone();
         }
         self.degrade.clear_all();
-        // Dropping the ingress sender lets the dispatcher drain the queue
-        // and exit.
-        *lock_ok(&self.ingress) = None;
+        // Closing the ingress lets the dispatcher drain every tenant
+        // queue and exit.
+        lock_ok(&self.ingress.state).open = false;
+        self.ingress.ready.notify_all();
         if let Some(h) = lock_ok(&self.dispatcher).take() {
             let _ = h.join();
         }
@@ -661,17 +899,18 @@ impl Drop for Server {
     }
 }
 
-/// Pick the live replica with the least expected drain time
-/// `(in_flight + 1) / weight`, returning its id, a feed handle, and its
-/// per-dispatch micro-batch clamp (scaled by its weight relative to the
-/// fastest live replica).
+/// Pick — among live replicas serving `model_id` — the one with the
+/// least expected drain time `(in_flight + 1) / weight`, returning its
+/// id, a feed handle, and its per-dispatch micro-batch clamp (scaled by
+/// its weight relative to the fastest live replica of that model).
 fn pick_slot(
     slots: &Mutex<Vec<Slot>>,
     metrics: &FleetMetrics,
     global_batch: usize,
+    model_id: usize,
 ) -> Option<(usize, mpsc::SyncSender<Vec<Request>>, usize)> {
     let slots = lock_ok(slots);
-    let best = slots.iter().min_by(|a, b| {
+    let best = slots.iter().filter(|s| s.model_id == model_id).min_by(|a, b| {
         let da = (metrics.load_of(a.id) + 1) as f64 / a.weight;
         let db = (metrics.load_of(b.id) + 1) as f64 / b.weight;
         // Weights are clamped positive at registration, so drain times
@@ -679,7 +918,11 @@ fn pick_slot(
         // aborting the dispatcher mid-run.
         da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
     })?;
-    let top = slots.iter().map(|s| s.weight).fold(f64::MIN, f64::max);
+    let top = slots
+        .iter()
+        .filter(|s| s.model_id == model_id)
+        .map(|s| s.weight)
+        .fold(f64::MIN, f64::max);
     let cap = ((global_batch as f64 * best.weight / top).ceil() as usize).clamp(1, global_batch);
     Some((best.id, best.tx.clone(), cap))
 }
@@ -743,9 +986,11 @@ fn reap_runner(
 }
 
 /// What the runner keeps of a request while its image is inferring: the
-/// stage-boundary timestamps that become its span chain, and the reply.
+/// stage-boundary timestamps that become its span chain, the tenant for
+/// per-tenant latency accounting, and the reply.
 struct ReqMeta {
     id: u64,
+    tenant: usize,
     admitted_nanos: u64,
     enqueued_nanos: u64,
     dequeued_nanos: u64,
@@ -755,10 +1000,10 @@ struct ReqMeta {
 
 /// One replica runner: pull a micro-batch, run it through the replica's
 /// persistent pipeline, reply per request, account per replica (and
-/// therefore per device group). When tracing, each completed request's
-/// full span chain is recorded here — the only point that has every
-/// boundary timestamp in hand — and the batch itself gets a span on the
-/// replica's own track.
+/// therefore per device group) and per tenant. When tracing, each
+/// completed request's full span chain is recorded here — the only point
+/// that has every boundary timestamp in hand — and the batch itself gets
+/// a span on the replica's own track.
 fn run_replica(
     ri: usize,
     group: usize,
@@ -787,6 +1032,7 @@ fn run_replica(
             images.push(req.image);
             meta.push(ReqMeta {
                 id: req.id,
+                tenant: req.tenant,
                 admitted_nanos: req.admitted_nanos,
                 enqueued_nanos: req.enqueued_nanos,
                 dequeued_nanos: req.dequeued_nanos,
@@ -800,8 +1046,9 @@ fn run_replica(
                 let t_infer_done = clock.now_nanos();
                 for (slot, (m, logits)) in meta.into_iter().zip(outs).enumerate() {
                     let t_done = clock.now_nanos();
-                    metrics.note_completed(
+                    metrics.note_completed_t(
                         ri,
+                        m.tenant,
                         Duration::from_nanos(t_done.saturating_sub(m.admitted_nanos)),
                     );
                     let _ = m.reply.send(Ok(logits));

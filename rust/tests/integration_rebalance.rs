@@ -10,8 +10,8 @@ use acf::coordinator::Deployment;
 use acf::fabric::device::by_name;
 use acf::planner::Policy;
 use acf::serve::{
-    plan_fixed_fleet, FleetFrontier, FleetSpec, RebalanceAction, RebalanceConfig, Rebalancer,
-    ServeConfig, ServeError, Server,
+    FleetFrontier, FleetSpec, RebalanceAction, RebalanceConfig, Rebalancer, ServeConfig,
+    ServeError, Server,
 };
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -49,19 +49,16 @@ fn step_load_grows_under_spike_and_shrinks_back() {
 
     let model = Arc::new(m.clone());
     let weights = Arc::new(w.clone());
-    let cfg = ServeConfig { queue_depth: 8, max_batch: 4, ..ServeConfig::default() };
-    let server = Arc::new(Server::start_grouped(
+    let cfg = ServeConfig::sized(8, 4);
+    let server = Arc::new(Server::start(
         fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
-        fp.replica_groups(),
-        fp.group_labels(),
         &cfg,
     ));
     let rb = Rebalancer::start(
         Arc::clone(&server),
         frontier,
         &fp,
-        Arc::clone(&model),
-        Arc::clone(&weights),
+        vec![Arc::clone(&weights)],
         RebalanceConfig {
             window: Duration::from_millis(100),
             headroom: 0.25,
@@ -154,13 +151,11 @@ fn replicas_add_and_retire_under_live_traffic() {
     let m = Model::lenet_tiny();
     let w = Weights::random(&m, 42);
     let dev = by_name("zcu104").unwrap();
-    let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let fp = FleetSpec::single(dev, Some(2)).plan().model(&m).run().unwrap();
     let model = Arc::new(m.clone());
     let weights = Arc::new(w.clone());
-    let server = Server::start_grouped(
+    let server = Server::start(
         fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
-        fp.replica_groups(),
-        fp.group_labels(),
         &ServeConfig::default(),
     );
     assert_eq!(server.live_counts(), vec![2]);

@@ -4,7 +4,7 @@
 //! drain, whole-group loss, latency degradation) under live load.
 
 use acf::cnn::data::Dataset;
-use acf::cnn::model::{Model, Weights};
+use acf::cnn::model::{model_by_name, Model, Weights};
 use acf::fabric::device::by_name;
 use acf::planner::Policy;
 use acf::serve::{
@@ -12,18 +12,34 @@ use acf::serve::{
     FleetSpec, Scenario, ScenarioOpts, ServeConfig, Server,
 };
 use acf::trace::Tracer;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn corpus(n: usize, seed: u64) -> Vec<Vec<i64>> {
     Dataset::generate(n, seed, 16, 16).images.iter().map(|i| i.pix.clone()).collect()
 }
 
-/// Plan the fleet a scenario names, the same way the CLI does.
+/// Plan the fleet a scenario names, the same way the CLI does: the
+/// top-level model for untenanted scenarios, otherwise the zoo of every
+/// tenant's model in first-use order.
 fn plan_for(sc: &Scenario) -> FleetPlan {
-    let model = Model::lenet_tiny();
-    assert_eq!(sc.model, "lenet-tiny", "test fleets pin the tiny model");
+    let mut names: Vec<&str> = Vec::new();
+    if sc.tenants.is_empty() {
+        names.push(&sc.model);
+    } else {
+        for t in &sc.tenants {
+            if !names.contains(&t.model.as_str()) {
+                names.push(&t.model);
+            }
+        }
+    }
+    let models: Vec<Arc<Model>> = names
+        .iter()
+        .map(|n| Arc::new(model_by_name(n).unwrap_or_else(|| panic!("unknown model '{n}'"))))
+        .collect();
     let spec = FleetSpec::parse(&sc.devices, &[]).unwrap();
-    let frontier = FleetFrontier::build(&model, &spec, 200.0, &Policy::adaptive(), 8).unwrap();
+    let frontier =
+        FleetFrontier::build_zoo(models, &spec, 200.0, &Policy::adaptive(), 8).unwrap();
     compose_frontier(&frontier, None)
 }
 
@@ -63,7 +79,7 @@ fn replica_death_verdict_is_byte_identical_across_runs() {
 
 #[test]
 fn every_shipped_scenario_parses_and_plans() {
-    // scenario-check's precondition: the five shipped files must parse
+    // scenario-check's precondition: the six shipped files must parse
     // and their fleets must plan. Quick mode must keep verdicts green.
     for name in [
         "diurnal.json",
@@ -71,17 +87,39 @@ fn every_shipped_scenario_parses_and_plans() {
         "replica_death.json",
         "group_loss.json",
         "latency_degrade.json",
+        "multi_tenant.json",
     ] {
         let sc = shipped_scenario(name);
-        let model = Model::lenet_tiny();
-        let spec = FleetSpec::parse(&sc.devices, &[]).unwrap_or_else(|e| panic!("{name}: {e}"));
-        let frontier = FleetFrontier::build(&model, &spec, 200.0, &Policy::adaptive(), 8)
-            .unwrap_or_else(|e| panic!("{name}: {e}"));
-        let fp = compose_frontier(&frontier, None);
+        let fp = plan_for(&sc);
         let opts = ScenarioOpts { seed: 7, quick: true, tracer: Tracer::off() };
         let report = run_scenario(&sc, &fp, &opts).unwrap_or_else(|e| panic!("{name}: {e}"));
         assert!(report.passed, "{name} must pass in quick mode: {}", report.to_json().dump());
     }
+}
+
+#[test]
+fn multi_tenant_verdict_is_byte_identical_and_sheds_under_overload() {
+    // The two-model, two-tenant shipped scenario: reproducible verdict
+    // bytes, a per-tenant breakdown in every phase, and admission-side
+    // shedding in the 2x overload phase.
+    let sc = shipped_scenario("multi_tenant.json");
+    assert_eq!(sc.tenants.len(), 2);
+    let fp = plan_for(&sc);
+    assert_eq!(fp.models.len(), 2, "two-model zoo plan");
+    let opts = ScenarioOpts { seed: 7, quick: false, tracer: Tracer::off() };
+    let a = run_scenario(&sc, &fp, &opts).unwrap();
+    let b = run_scenario(&sc, &fp, &opts).unwrap();
+    assert_eq!(a.to_json().dump(), b.to_json().dump(), "verdict bytes must be reproducible");
+    assert!(a.passed, "shipped multi_tenant scenario must pass: {}", a.to_json().dump());
+    for p in &a.phases {
+        assert_eq!(p.tenants.len(), 2, "phase '{}' carries the tenant breakdown", p.name);
+        assert_eq!(p.tenants[0].name, "acme");
+        assert_eq!(p.tenants[1].name, "bitworks");
+    }
+    let rush = a.phases.iter().find(|p| p.name == "rush").unwrap();
+    let shed: u64 = rush.tenants.iter().map(|t| t.shed).sum();
+    assert!(shed > 0, "2x overload must shed at admission: {}", a.to_json().dump());
+    assert!(a.to_json().dump().contains("\"tenants\""));
 }
 
 #[test]
@@ -124,8 +162,7 @@ fn two_replica_server(cfg: &ServeConfig) -> (Server, Model, Weights) {
     let m = Model::lenet_tiny();
     let w = Weights::random(&m, 42);
     let dev = by_name("zcu104").unwrap();
-    let fp =
-        acf::serve::plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let fp = FleetSpec::single(dev, Some(2)).plan().model(&m).run().unwrap();
     let server = Server::start(fp.deploy(m.clone(), w.clone()), cfg);
     (server, m, w)
 }
@@ -175,14 +212,8 @@ fn group_loss_reroutes_to_the_surviving_group() {
             FleetEntry { device: by_name("zu5ev").unwrap(), count: Some(1) },
         ],
     };
-    let fp =
-        acf::serve::plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 2).unwrap();
-    let server = Server::start_grouped(
-        fp.deploy(m.clone(), w.clone()),
-        fp.replica_groups(),
-        fp.group_labels(),
-        &ServeConfig::default(),
-    );
+    let fp = spec.plan().model(&m).max_replicas(2).run().unwrap();
+    let server = Server::start(fp.deploy(m.clone(), w.clone()), &ServeConfig::default());
     let images = corpus(6, 17);
     let mut pendings: Vec<_> =
         images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
@@ -214,8 +245,7 @@ fn latency_injection_slows_batches_then_lifts() {
     let m = Model::lenet_tiny();
     let w = Weights::random(&m, 42);
     let dev = by_name("zcu104").unwrap();
-    let fp =
-        acf::serve::plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 1, None).unwrap();
+    let fp = FleetSpec::single(dev, Some(1)).plan().model(&m).run().unwrap();
     let server = Server::start(fp.deploy(m.clone(), w.clone()), &ServeConfig::default());
     let images = corpus(4, 23);
     let replica = server.replica_ids_of_group(0)[0];

@@ -1,8 +1,9 @@
 //! Serving-tier integration tests: concurrent callers on one persistent
 //! pipeline, fleet planning invariants (single-device and heterogeneous),
 //! end-to-end bit-exactness of the scheduled path across device groups,
-//! admission control under saturation, coefficient-BRAM honesty under
-//! sharding, and drain-on-shutdown semantics.
+//! admission control under saturation, weighted-fair queueing across
+//! tenants, coefficient-BRAM honesty under sharding, and
+//! drain-on-shutdown semantics.
 
 use acf::cnn::data::Dataset;
 use acf::cnn::model::{Model, Weights};
@@ -10,10 +11,11 @@ use acf::coordinator::Deployment;
 use acf::fabric::device::{by_name, load_catalog};
 use acf::planner::Policy;
 use acf::serve::{
-    open_loop, plan_fixed_fleet, plan_fleet, plan_fleet_spec, FleetEntry, FleetSpec, ServeConfig,
-    ServeError, Server, DEFAULT_MAX_REPLICAS,
+    open_loop, FleetEntry, FleetSpec, ServeConfig, ServeError, Server, TenantSpec,
+    DEFAULT_MAX_REPLICAS,
 };
 use std::sync::Arc;
+use std::time::Duration;
 
 fn corpus(n: usize, seed: u64) -> Vec<Vec<i64>> {
     Dataset::generate(n, seed, 16, 16).images.iter().map(|i| i.pix.clone()).collect()
@@ -30,8 +32,23 @@ fn fleet(replicas: usize, cfg: &ServeConfig) -> (Server, Model, Weights) {
     let m = Model::lenet_tiny();
     let w = Weights::random(&m, 42);
     let dev = by_name("zcu104").unwrap();
-    let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), replicas, None).unwrap();
+    let fp = FleetSpec::single(dev, Some(replicas)).plan().model(&m).run().unwrap();
     let server = Server::start(fp.deploy(m.clone(), w.clone()), cfg);
+    (server, m, w)
+}
+
+/// A single-replica fleet shared by two tenants on the same model with a
+/// 3:1 quota split over an 8-deep queue — per-tenant admission caps of 6
+/// and 2 slots respectively.
+fn two_tenant_fleet() -> (Server, Model, Weights) {
+    let mut cfg = ServeConfig::sized(8, 1);
+    cfg.tenants.tenants =
+        vec![TenantSpec::new("gold", "", 3.0), TenantSpec::new("bronze", "", 1.0)];
+    let m = Model::lenet_tiny();
+    let w = Weights::random(&m, 42);
+    let dev = by_name("zcu104").unwrap();
+    let fp = FleetSpec::single(dev, Some(1)).plan().model(&m).run().unwrap();
+    let server = Server::start(fp.deploy(m.clone(), w.clone()), &cfg);
     (server, m, w)
 }
 
@@ -77,8 +94,12 @@ fn concurrent_infer_batch_is_ordered_and_exact() {
 fn fleet_planner_replicates_the_default_device() {
     let m = Model::lenet_tiny();
     let dev = by_name("zcu104").unwrap();
-    let fp =
-        plan_fleet(&m, &dev, 200.0, &Policy::adaptive(), None, DEFAULT_MAX_REPLICAS).unwrap();
+    let fp = FleetSpec::single(dev.clone(), None)
+        .plan()
+        .model(&m)
+        .max_replicas(DEFAULT_MAX_REPLICAS)
+        .run()
+        .unwrap();
     assert!(fp.replicas() >= 2, "zcu104 must carry at least two lenet-tiny replicas");
     assert_eq!(fp.groups.len(), 1);
     assert!(fp.groups[0].total.fits(&dev));
@@ -106,10 +127,12 @@ fn heterogeneous_mix_beats_best_single_device_fleet() {
             FleetEntry { device: zu5.clone(), count: None },
         ],
     };
-    let mix = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, max).unwrap();
+    let mix = spec.plan().model(&m).max_replicas(max).run().unwrap();
     let best_single = [zcu, zu5]
         .iter()
-        .filter_map(|d| plan_fleet(&m, d, 200.0, &Policy::adaptive(), None, max).ok())
+        .filter_map(|d| {
+            FleetSpec::single(d.clone(), None).plan().model(&m).max_replicas(max).run().ok()
+        })
         .map(|fp| fp.fleet_img_s)
         .fold(0.0f64, f64::max);
     assert!(best_single > 0.0);
@@ -138,7 +161,7 @@ fn mixed_fleet_groups_run_different_ip_selections() {
             FleetEntry { device: by_name("edge-nodsp").unwrap(), count: None },
         ],
     };
-    let fp = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 2).unwrap();
+    let fp = spec.plan().model(&m).max_replicas(2).run().unwrap();
     assert_eq!(fp.groups.len(), 2);
     let convs_of = |gi: usize| -> Vec<(String, u64)> {
         fp.groups[gi]
@@ -173,20 +196,15 @@ fn served_logits_bit_identical_across_device_groups() {
             FleetEntry { device: by_name("edge-nodsp").unwrap(), count: Some(1) },
         ],
     };
-    let fp = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 2).unwrap();
-    let replicas = fp.deploy(m.clone(), w.clone());
-    assert_eq!(replicas.len(), 2);
+    let fp = spec.plan().model(&m).max_replicas(2).run().unwrap();
+    let fleet = fp.deploy(m.clone(), w.clone());
+    assert_eq!(fleet.replicas.len(), 2);
     let images = corpus(24, 9);
     // One-shot through each group's own pipeline.
     let per_group: Vec<Vec<Vec<i64>>> =
-        replicas.iter().map(|dep| dep.infer_batch(&images).unwrap()).collect();
+        fleet.replicas.iter().map(|dep| dep.infer_batch(&images).unwrap()).collect();
     // Scheduled path over the grouped server.
-    let server = Server::start_grouped(
-        replicas,
-        fp.replica_groups(),
-        fp.group_labels(),
-        &ServeConfig::default(),
-    );
+    let server = Server::start(fleet, &ServeConfig::default());
     let pendings: Vec<_> =
         images.iter().map(|img| server.submit_wait(img.clone()).unwrap()).collect();
     let served: Vec<Vec<i64>> = pendings.into_iter().map(|p| p.wait().unwrap()).collect();
@@ -226,12 +244,12 @@ fn coefficient_bram_overpack_is_rejected_or_downsized() {
     );
     let extra = load_catalog(&text).unwrap();
     let spec = FleetSpec::parse("bramtight", &extra).unwrap();
-    let fp = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 8).unwrap();
+    let fp = spec.plan().model(&m).max_replicas(8).run().unwrap();
     assert_eq!(fp.replicas(), 2, "BRAM holds exactly two coefficient copies");
     assert!(fp.groups[0].total.bram18 <= fp.groups[0].device.bram18);
     // Forcing a third replica is an explicit error, not silent overpack.
     let spec = FleetSpec::parse("bramtight:3", &extra).unwrap();
-    let err = plan_fleet_spec(&m, &spec, 200.0, &Policy::adaptive(), None, 8).unwrap_err();
+    let err = spec.plan().model(&m).max_replicas(8).run().unwrap_err();
     assert!(err.to_string().contains("coefficient"), "{err}");
 }
 
@@ -240,7 +258,7 @@ fn saturated_queue_sheds_with_overloaded() {
     // A deliberately tiny queue and single replica: a tight submission
     // loop must hit admission control, and every *accepted* request must
     // still complete correctly.
-    let cfg = ServeConfig { queue_depth: 2, max_batch: 1, ..ServeConfig::default() };
+    let cfg = ServeConfig::sized(2, 1);
     let (server, model, weights) = fleet(1, &cfg);
     let images = corpus(4, 5);
     let mut accepted = Vec::new();
@@ -265,6 +283,95 @@ fn saturated_queue_sheds_with_overloaded() {
     let snap = server.shutdown();
     assert_eq!(snap.rejected as usize, overloaded);
     assert_eq!(snap.completed, snap.accepted);
+}
+
+#[test]
+fn two_tenant_overload_sheds_in_quota_ratio() {
+    // Freeze the only replica so the per-tenant queue shares fill
+    // deterministically, then offer both tenants identical demand far
+    // beyond the queue. Admission capacity is the quota split (6 vs 2
+    // slots), so the accepted counts must track the 3:1 quota ratio and
+    // the low-quota tenant must shed a larger fraction of its offers.
+    let (server, model, weights) = two_tenant_fleet();
+    let replica = server.replica_ids_of_group(0)[0];
+    server.inject_latency(replica, Duration::from_millis(200)).unwrap();
+    let images = corpus(4, 11);
+    let mut accepted = [0u64; 2];
+    let mut shed = [0u64; 2];
+    let mut pendings = Vec::new();
+    for i in 0..100 {
+        for t in 0..2 {
+            match server.submit_as(t, images[i % images.len()].clone()) {
+                Ok(p) => {
+                    accepted[t] += 1;
+                    pendings.push((i % images.len(), p));
+                }
+                Err(ServeError::Overloaded { .. }) => shed[t] += 1,
+                Err(e) => panic!("unexpected serve error: {e}"),
+            }
+        }
+    }
+    server.clear_latency(replica);
+    assert!(shed[0] > 0 && shed[1] > 0, "both tenants must overflow: {shed:?}");
+    assert!(
+        accepted[0] >= 2 * accepted[1],
+        "gold's 3x quota must admit proportionally more: {accepted:?}"
+    );
+    assert!(accepted[1] >= 2, "bronze keeps its quota share of the queue: {accepted:?}");
+    assert!(shed[1] > shed[0], "the low-quota tenant sheds more of equal demand: {shed:?}");
+    // Everything admitted still completes bit-exactly.
+    for (idx, p) in pendings {
+        assert_eq!(p.wait().unwrap(), acf::cnn::infer::infer(&model, &weights, &images[idx]));
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.tenants.len(), 2);
+    let gold = &snap.tenants[0];
+    let bronze = &snap.tenants[1];
+    assert_eq!(gold.name, "gold");
+    assert_eq!(bronze.name, "bronze");
+    assert_eq!(gold.accepted, accepted[0]);
+    assert_eq!(bronze.accepted, accepted[1]);
+    assert_eq!(gold.completed, gold.accepted, "admission is a completion promise");
+    assert_eq!(bronze.completed, bronze.accepted);
+    assert!(
+        bronze.shed_pct > gold.shed_pct,
+        "shed rate must follow quota: bronze {} vs gold {}",
+        bronze.shed_pct,
+        gold.shed_pct
+    );
+}
+
+#[test]
+fn low_quota_tenant_is_not_starved_by_a_flood() {
+    // gold floods the shared fleet; bronze's sequential requests must
+    // still be admitted (its quota share is its own) and complete with a
+    // sane recorded latency — weighted-fair dispatch, not strict priority.
+    let (server, model, weights) = two_tenant_fleet();
+    let images = corpus(4, 19);
+    for i in 0..300 {
+        match server.submit_as(0, images[i % images.len()].clone()) {
+            Ok(_) | Err(ServeError::Overloaded { .. }) => {}
+            Err(e) => panic!("unexpected serve error: {e}"),
+        }
+    }
+    for i in 0..8 {
+        let img = images[i % images.len()].clone();
+        let p = server.submit_wait_as(1, img.clone()).unwrap();
+        assert_eq!(p.wait().unwrap(), acf::cnn::infer::infer(&model, &weights, &img));
+    }
+    let snap = server.shutdown();
+    let bronze = &snap.tenants[1];
+    assert_eq!(bronze.name, "bronze");
+    assert_eq!(bronze.accepted, 8, "sequential bronze traffic is never shed");
+    assert_eq!(bronze.completed, 8);
+    assert_eq!(bronze.rejected, 0);
+    assert!(bronze.p99_ms > 0.0, "latency must be recorded per tenant");
+    assert!(
+        bronze.p99_ms < 10_000.0,
+        "bronze must be served promptly, not starved: p99 {} ms",
+        bronze.p99_ms
+    );
+    assert_eq!(snap.completed, snap.accepted, "fleet-wide completion promise holds");
 }
 
 #[test]

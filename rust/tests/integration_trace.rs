@@ -9,7 +9,7 @@ use acf::cnn::model::{Model, Weights};
 use acf::fabric::device::by_name;
 use acf::planner::Policy;
 use acf::serve::{
-    plan_fixed_fleet, FleetFrontier, FleetSpec, RebalanceConfig, Rebalancer, ServeConfig, Server,
+    FleetFrontier, FleetSpec, RebalanceConfig, Rebalancer, ServeConfig, Server,
 };
 use acf::trace::{
     chrome_trace, pid_of_group, tid_of_replica, validate_chrome_trace, EventKind, TraceEvent,
@@ -95,24 +95,17 @@ fn traced_step_load_yields_complete_chains_and_fleet_events() {
     let model = Arc::new(m.clone());
     let weights = Arc::new(w.clone());
     let tracer = Tracer::ring(1 << 18);
-    let cfg = ServeConfig {
-        queue_depth: 8,
-        max_batch: 4,
-        tracer: tracer.clone(),
-        ..ServeConfig::default()
-    };
-    let server = Arc::new(Server::start_grouped(
+    let mut cfg = ServeConfig::sized(8, 4);
+    cfg.tracer = tracer.clone();
+    let server = Arc::new(Server::start(
         fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
-        fp.replica_groups(),
-        fp.group_labels(),
         &cfg,
     ));
     let rb = Rebalancer::start(
         Arc::clone(&server),
         frontier,
         &fp,
-        Arc::clone(&model),
-        Arc::clone(&weights),
+        vec![Arc::clone(&weights)],
         RebalanceConfig {
             window: Duration::from_millis(100),
             headroom: 0.25,
@@ -232,15 +225,15 @@ fn retired_replica_history_keeps_its_track_in_the_export() {
     let m = Model::lenet_tiny();
     let w = Weights::random(&m, 5);
     let dev = by_name("zcu104").unwrap();
-    let fp = plan_fixed_fleet(&m, &dev, 200.0, &Policy::adaptive(), 2, None).unwrap();
+    let fp = FleetSpec::single(dev, Some(2)).plan().model(&m).run().unwrap();
     let model = Arc::new(m.clone());
     let weights = Arc::new(w.clone());
     let tracer = Tracer::ring(1 << 16);
-    let cfg = ServeConfig { max_batch: 4, tracer: tracer.clone(), ..ServeConfig::default() };
-    let server = Server::start_grouped(
+    let mut cfg = ServeConfig::default();
+    cfg.dispatch.max_batch = 4;
+    cfg.tracer = tracer.clone();
+    let server = Server::start(
         fp.deploy_shared(Arc::clone(&model), Arc::clone(&weights)),
-        fp.replica_groups(),
-        fp.group_labels(),
         &cfg,
     );
 
